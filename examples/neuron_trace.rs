@@ -1,0 +1,71 @@
+//! Fig.-4-style single-neuron trace on the cycle-accurate RTL core:
+//! integrate → threshold crossing → hard reset, with the pruning mask
+//! visible once the neuron has fired its calibrated quota.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example neuron_trace [-- <class>]
+//! ```
+
+use anyhow::{Context, Result};
+use snn_rtl::data::{codec, DigitGen};
+use snn_rtl::rtl::RtlCore;
+use snn_rtl::runtime::Manifest;
+
+fn main() -> Result<()> {
+    let class: u8 = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let manifest = Manifest::load("artifacts").context("run `make artifacts` first")?;
+    let weights = codec::load_weights(manifest.path("weights.bin"))?;
+    let cfg = manifest.snn_config()?;
+    let v_th = cfg.v_th;
+
+    let img = DigitGen::new(manifest.u32("test_seed")?).sample(class, 0);
+    println!("{}", img.to_ascii());
+
+    let mut core = RtlCore::new(cfg, weights.weights)?;
+    let r = core.run(&img, 0xC0FFEE)?;
+    println!(
+        "RTL run: class {} in {} cycles ({:.1} µs @ 40 MHz), {:.1} nJ dynamic",
+        r.class,
+        r.cycles,
+        r.energy.time_us,
+        r.energy.dynamic_nj
+    );
+
+    let neuron = class as usize;
+    let max_v = r
+        .membrane_by_step
+        .iter()
+        .map(|m| m[neuron])
+        .max()
+        .unwrap_or(1)
+        .max(v_th);
+    println!("\nneuron {neuron} membrane (| marks V_th = {v_th}):");
+    for (t, (mem, spikes)) in r.membrane_by_step.iter().zip(&r.spikes_by_step).enumerate() {
+        let v = mem[neuron];
+        let width = 56usize;
+        let bar = if v <= 0 { 0 } else { v as usize * width / max_v as usize };
+        let th = v_th as usize * width / max_v as usize;
+        let mut line: Vec<char> = vec![' '; width + 1];
+        for c in line.iter_mut().take(bar) {
+            *c = '#';
+        }
+        if th < line.len() {
+            line[th] = '|';
+        }
+        println!(
+            "t={t:>2} {v:>7} {}{}",
+            line.iter().collect::<String>(),
+            if spikes[neuron] { "  << FIRE (hard reset)" } else { "" }
+        );
+    }
+    println!("\nspike counts: {:?}", r.spike_counts);
+    println!(
+        "activity: {} adds, {} shifts, {} BRAM reads, {} PRNG steps, {} reg-bit toggles",
+        r.activity.adds,
+        r.activity.shifts,
+        r.activity.bram_reads,
+        r.activity.prng_steps,
+        r.activity.reg_toggles
+    );
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quickstart: load the trained artifacts, classify a handful of digits on
+//! the pure-Rust behavioral backend, and print what happened.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::{Context, Result};
+use snn_rtl::data::{codec, DigitGen};
+use snn_rtl::runtime::Manifest;
+use snn_rtl::snn::BehavioralNet;
+
+fn main() -> Result<()> {
+    // 1. Load the calibrated artifacts (built by `make artifacts`).
+    let manifest = Manifest::load("artifacts")
+        .context("artifacts/ missing — run `make artifacts` first")?;
+    let weights = codec::load_weights(manifest.path("weights.bin"))?;
+    let cfg = manifest.snn_config()?;
+    println!(
+        "loaded 784x10 SNN: V_th={} decay=2^-{} prune={:?} window={} steps",
+        cfg.v_th, cfg.decay_shift, cfg.prune, cfg.timesteps
+    );
+
+    // 2. Build the behavioral network (bit-equivalent to the RTL core and
+    //    the compiled JAX/Pallas stack — see rust/tests/golden.rs).
+    let net = BehavioralNet::new(cfg, weights.weights)?;
+
+    // 3. Classify one sample of every digit class.
+    let gen = DigitGen::new(manifest.u32("test_seed")?);
+    let mut hits = 0;
+    for class in 0u8..10 {
+        let img = gen.sample(class, 42);
+        let out = net.classify(&img, 0x5EED + u32::from(class));
+        let ok = out.class == class;
+        hits += u32::from(ok);
+        println!(
+            "digit {class}: predicted {} {} spike counts {:?}",
+            out.class,
+            if ok { "ok " } else { "MISS" },
+            out.spike_counts
+        );
+    }
+    println!("{hits}/10 correct");
+
+    // 4. Show one digit + its winning neuron's evidence.
+    let img = gen.sample(7, 42);
+    println!("{}", img.to_ascii());
+    let (out, traces) = net.classify_traced(&img, 0x5EED + 7, 10);
+    println!("class {}; neuron 7 membrane over time:", out.class);
+    for (t, tr) in traces.iter().enumerate() {
+        println!(
+            "  t={t:>2} membrane {:>6} current {:>6} fired {}",
+            tr.membrane[7], tr.input_current[7], tr.fired[7]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Fig.-8-style robustness demo: one digit under the paper's perturbation
+//! suite, rendered side by side with the classifier's verdict, then a
+//! small accuracy sweep.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example robustness_demo
+//! ```
+
+use anyhow::{Context, Result};
+use snn_rtl::data::perturb::Perturbation;
+use snn_rtl::data::{codec, DigitGen};
+use snn_rtl::runtime::Manifest;
+use snn_rtl::snn::BehavioralNet;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load("artifacts").context("run `make artifacts` first")?;
+    let weights = codec::load_weights(manifest.path("weights.bin"))?;
+    let cfg = manifest.snn_config()?.with_timesteps(10);
+    let net = BehavioralNet::new(cfg, weights.weights)?;
+    let gen = DigitGen::new(manifest.u32("test_seed")?);
+
+    // Show the suite on one digit.
+    let img = gen.sample(5, 1);
+    for p in Perturbation::paper_suite() {
+        let perturbed = p.apply(&img, 99, 0);
+        let out = net.classify(&perturbed, 0xC0FFEE);
+        println!(
+            "--- {} -> predicted {} {}",
+            p.label(),
+            out.class,
+            if out.class == 5 { "ok" } else { "MISS" }
+        );
+        println!("{}", perturbed.to_ascii());
+    }
+
+    // Mini accuracy sweep (the full Fig. 8 harness is
+    // `snn-rtl experiment fig8`).
+    println!("accuracy over 300 samples:");
+    for p in Perturbation::paper_suite() {
+        let mut hits = 0;
+        let n = 300;
+        for i in 0..n {
+            let class = (i % 10) as u8;
+            let sample = gen.sample(class, i / 10);
+            let perturbed = p.apply(&sample, 99, i);
+            if net.classify(&perturbed, 0xACE + i).class == class {
+                hits += 1;
+            }
+        }
+        println!("  {:<24} {:>5.1}%", p.label(), f64::from(hits) / f64::from(n) * 100.0);
+    }
+    Ok(())
+}

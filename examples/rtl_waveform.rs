@@ -1,0 +1,65 @@
+//! Dump a GTKWave-compatible VCD of the RTL core running one inference,
+//! plus a textual FSM timeline of the first timestep.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example rtl_waveform
+//! gtkwave results/core.vcd   # on a machine with gtkwave
+//! ```
+
+use anyhow::{Context, Result};
+use snn_rtl::data::{codec, DigitGen};
+use snn_rtl::rtl::{CtrlState, RtlCore, VcdWriter};
+use snn_rtl::runtime::Manifest;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load("artifacts").context("run `make artifacts` first")?;
+    let weights = codec::load_weights(manifest.path("weights.bin"))?;
+    let cfg = manifest.snn_config()?.with_timesteps(3);
+    let n_outputs = cfg.n_outputs;
+
+    let img = DigitGen::new(manifest.u32("test_seed")?).sample(2, 0);
+    let mut core = RtlCore::new(cfg, weights.weights)?;
+    core.attach_vcd(VcdWriter::new(n_outputs, 25)); // 25 ns = 40 MHz
+
+    // Drive the core cycle by cycle, narrating the first timestep's FSM.
+    core.load_image(&img, 0xC0FFEE)?;
+    println!("FSM timeline (first 12 + phase-boundary cycles):");
+    let mut cycle = 0u64;
+    let mut last_phase = String::new();
+    loop {
+        let state = core.state();
+        let phase = match state {
+            CtrlState::Integrate { pixel } => {
+                if cycle < 12 {
+                    println!("  cycle {cycle:>5}: INTEGRATE pixel {pixel}");
+                }
+                "INTEGRATE".to_string()
+            }
+            CtrlState::Leak { .. } => "LEAK".to_string(),
+            CtrlState::Fire => "FIRE".to_string(),
+            CtrlState::Idle => "IDLE".to_string(),
+            CtrlState::Done => "DONE".to_string(),
+        };
+        if phase != last_phase && cycle >= 12 {
+            println!("  cycle {cycle:>5}: -> {phase}  membranes {:?}", core.membranes());
+            last_phase = phase;
+        } else if cycle < 12 {
+            last_phase = phase;
+        }
+        if !core.tick_cycle() {
+            break;
+        }
+        cycle += 1;
+    }
+    println!("total cycles: {cycle}");
+
+    let vcd = core.detach_vcd().expect("vcd attached").finish();
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/core.vcd", &vcd)?;
+    println!(
+        "wrote results/core.vcd ({} bytes, {} change records)",
+        vcd.len(),
+        vcd.matches('#').count()
+    );
+    Ok(())
+}

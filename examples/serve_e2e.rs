@@ -1,0 +1,128 @@
+//! End-to-end serving driver (the repository's headline validation run,
+//! recorded in EXPERIMENTS.md): start the coordinator over the AOT-
+//! compiled JAX/Pallas stack (PJRT), replay a batched classification
+//! workload with a synthetic-arrival load generator, and report accuracy,
+//! latency percentiles and throughput — plus the early-exit scheduler's
+//! timestep savings.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_e2e [-- <requests>]
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use snn_rtl::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, Request, XlaBackend,
+};
+use snn_rtl::data::DigitGen;
+use snn_rtl::prng::Xorshift32;
+use snn_rtl::runtime::XlaSnn;
+use snn_rtl::snn::EarlyExit;
+
+fn percentile_line(tag: &str, snap: &snn_rtl::coordinator::MetricsSnapshot) {
+    println!(
+        "{tag}: p50 {} µs  p95 {} µs  p99 {} µs  mean {:.0} µs  max {} µs",
+        snap.latency_p50_us,
+        snap.latency_p95_us,
+        snap.latency_p99_us,
+        snap.latency_mean_us,
+        snap.latency_max_us
+    );
+}
+
+fn run_phase(
+    name: &str,
+    snn_dir: &str,
+    requests: usize,
+    early: EarlyExit,
+) -> Result<(f64, f64, f64)> {
+    let snn = XlaSnn::load(snn_dir).context("loading compiled artifacts")?;
+    let window = snn.config().timesteps;
+    let backend = Arc::new(XlaBackend::new(snn));
+    let coord = Coordinator::start(
+        backend,
+        CoordinatorConfig {
+            workers: 2,
+            queue_depth: 1024,
+            batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(2) },
+            early,
+        },
+    );
+    let handle = coord.handle();
+    let gen = DigitGen::new(2);
+    let mut workload_rng = Xorshift32::new(0xBEEF);
+
+    println!("\n--- phase: {name} ({requests} requests) ---");
+    let t0 = Instant::now();
+    let mut receivers = Vec::with_capacity(requests);
+    for i in 0..requests {
+        // Synthetic open-loop arrivals: random class, random style index.
+        let class = workload_rng.below(10) as u8;
+        let index = workload_rng.below(280);
+        let img = gen.sample(class, index);
+        // Retry on backpressure (bounded queue) with a tiny backoff.
+        loop {
+            match handle.submit(Request { image: img.clone(), seed: Some(i as u32 + 1) }) {
+                Ok(rx) => {
+                    receivers.push((class, rx));
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_micros(200)),
+            }
+        }
+    }
+    let mut hits = 0usize;
+    for (class, rx) in &receivers {
+        let resp = rx.recv()??;
+        if resp.class == *class {
+            hits += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics().snapshot();
+    let qps = requests as f64 / wall.as_secs_f64();
+    let acc = hits as f64 / requests as f64;
+    let mean_steps = snap.steps_executed as f64 / requests as f64;
+    println!(
+        "throughput {qps:.0} req/s   accuracy {:.2}%   mean batch {:.2}",
+        acc * 100.0,
+        snap.mean_batch_size
+    );
+    percentile_line("latency", &snap);
+    println!(
+        "timesteps/request {mean_steps:.2} (window {window}) -> {:.0}% of full-window compute",
+        mean_steps / f64::from(window) * 100.0
+    );
+    coord.shutdown();
+    Ok((qps, acc, mean_steps))
+}
+
+fn main() -> Result<()> {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()
+        .context("argument must be a request count")?
+        .unwrap_or(2000);
+
+    let (qps_full, acc_full, steps_full) =
+        run_phase("full window", "artifacts", requests, EarlyExit::Off)?;
+    let (qps_early, acc_early, steps_early) = run_phase(
+        "early exit (margin 2)",
+        "artifacts",
+        requests,
+        EarlyExit::Margin { margin: 2, min_steps: 5 },
+    )?;
+
+    println!("\n=== serve_e2e summary ===");
+    println!("full window : {qps_full:.0} req/s  acc {:.2}%  {steps_full:.1} steps/req", acc_full * 100.0);
+    println!("early exit  : {qps_early:.0} req/s  acc {:.2}%  {steps_early:.1} steps/req", acc_early * 100.0);
+    println!(
+        "early exit saves {:.0}% of timesteps and changes accuracy by {:+.2} pts",
+        (1.0 - steps_early / steps_full) * 100.0,
+        (acc_early - acc_full) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,281 @@
+"""AOT build entry point: `python -m compile.aot --out-dir ../artifacts`.
+
+Produces everything the Rust binary needs at runtime (Python never runs on
+the request path):
+
+  digits_train.bin / digits_test.bin   synthetic dataset (SNND)
+  weights.bin                          trained 9-bit SNN weights (SNNW)
+  ann_weights.bin                      baseline 784-32-10 MLP (SNNA)
+  golden_encoder.bin                   encoder spike train golden (SNNE)
+  golden_trace.bin                     LIF per-step trace golden (SNNT)
+  snn_forward_b{1,8,32}.hlo.txt        full-window forward, HLO text
+  snn_init_b8.hlo.txt                  chunked-serving carry init
+  snn_chunk_b8.hlo.txt                 5-timestep chunk with carry
+  ann_mlp_b{1,32}.hlo.txt              baseline ANN forward
+  manifest.txt                         key=value description of all above
+
+HLO *text* is the interchange format (not serialized protos): jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import artifact_io as aio
+from . import dataset as ds
+from . import model as M
+from . import train as T
+from .kernels import ref
+
+# Canonical build constants (recorded in the manifest).
+TRAIN_SEED = 1
+TEST_SEED = 2
+TRAIN_PER_CLASS = 500
+TEST_PER_CLASS = 300
+EVAL_SEED_BASE = 0xC0FFEE
+EVAL_SEED_MULT = 0x9E3779B1
+GOLDEN_SEED = 0xC0FFEE
+CHUNK_STEPS = 5
+FORWARD_BATCHES = (1, 8, 32)
+ANN_BATCHES = (1, 32)
+
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docs).
+
+    `return_tuple=False` leaves multiple results as separate PJRT output
+    buffers — the chunked serving executables use this so the Rust side can
+    keep the carry device-resident between chunks (EXPERIMENTS.md §Perf
+    pass 6) instead of round-tripping a tuple literal.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple)
+    return comp.as_hlo_text()
+
+
+def eval_seeds(n: int) -> np.ndarray:
+    """The shared eval-seed convention: seed_i = base + i·mult (mod 2^32).
+    rust/src/experiments/mod.rs mirrors this."""
+    return ((np.arange(n, dtype=np.uint64) * EVAL_SEED_MULT + EVAL_SEED_BASE)
+            % (1 << 32)).astype(np.uint32)
+
+
+def build_datasets(out_dir: str, log):
+    train_path = os.path.join(out_dir, "digits_train.bin")
+    test_path = os.path.join(out_dir, "digits_test.bin")
+    if os.path.exists(train_path) and os.path.exists(test_path):
+        log("datasets: cached")
+        return aio.load_dataset(train_path), aio.load_dataset(test_path)
+    t0 = time.time()
+    log(f"datasets: rendering {TRAIN_PER_CLASS * 10} train + {TEST_PER_CLASS * 10} test ...")
+    train = ds.build_dataset(TRAIN_SEED, TRAIN_PER_CLASS)
+    test = ds.build_dataset(TEST_SEED, TEST_PER_CLASS)
+    aio.save_dataset(train_path, *train)
+    aio.save_dataset(test_path, *test)
+    log(f"datasets: done in {time.time() - t0:.1f}s")
+    return train, test
+
+
+def build_weights(out_dir: str, train, test, cfg: M.ModelConfig, log):
+    wpath = os.path.join(out_dir, "weights.bin")
+    apath = os.path.join(out_dir, "ann_weights.bin")
+    stats = {}
+    if os.path.exists(wpath) and os.path.exists(apath):
+        log("weights: cached")
+        w, meta = aio.load_weights(wpath)
+        cfg = M.ModelConfig(v_th=meta["v_th"], decay_shift=meta["decay_shift"],
+                            timesteps=meta["timesteps"],
+                            prune_after=meta["prune_after"])
+        return w, aio.load_ann(apath), cfg, stats
+
+    (xtr, ytr), (xte, yte) = train, test
+    log("weights: training rate-proxy SNN ...")
+    w_f = T.train_rate_proxy(xtr, ytr, log=log)
+    w_q = T.centre_and_quantize(w_f, bits=cfg.weight_bits, images=xtr, labels=ytr)
+    log("weights: calibrating (V_th, prune_after) on validation slice ...")
+    v_th, prune_after, scores = T.calibrate(w_q, xte[:1000], yte[:1000], cfg, log=log)
+    cfg = M.ModelConfig(v_th=v_th, decay_shift=cfg.decay_shift,
+                        timesteps=cfg.timesteps, prune_after=prune_after)
+    stats["snn_train_acc"] = T.evaluate_snn(w_q, xtr[:2000], ytr[:2000], cfg, timesteps=10)
+    stats["snn_test_acc_t10"] = T.evaluate_snn(w_q, xte, yte, cfg, timesteps=10)
+    log(f"weights: SNN test acc @T=10: {stats['snn_test_acc_t10']:.4f}")
+    aio.save_weights(wpath, w_q, bits=cfg.weight_bits, v_th=cfg.v_th,
+                     decay_shift=cfg.decay_shift, timesteps=cfg.timesteps,
+                     prune_after=cfg.prune_after)
+
+    log("weights: training baseline ANN (784-32-10) ...")
+    ann = T.train_ann(xtr, ytr, log=log)
+    stats["ann_test_acc"] = T.evaluate_ann(ann, xte, yte)
+    log(f"weights: ANN test acc: {stats['ann_test_acc']:.4f}")
+    aio.save_ann(apath, *ann)
+    return w_q, ann, cfg, stats
+
+
+def build_goldens(out_dir: str, test, w_q, cfg: M.ModelConfig, log):
+    log("goldens: encoder spike train + LIF trace ...")
+    (xte, yte) = test
+    # Canonical golden sample: test-set class 3, sample index 0 => position
+    # 0*10+3 in the interleaved layout.
+    img = xte[3]
+    assert yte[3] == 3
+    t = cfg.timesteps
+    states = ref.initial_states(jnp.asarray([GOLDEN_SEED], jnp.uint32), 784)
+    spikes_all = []
+    for _ in range(t):
+        states, spikes = ref.encoder_step(states, jnp.asarray(img[None, :], jnp.int32))
+        spikes_all.append(np.asarray(spikes[0]))
+    aio.save_golden_encoder(os.path.join(out_dir, "golden_encoder.bin"),
+                            img, GOLDEN_SEED, np.stack(spikes_all))
+
+    counts, membranes, fired, currents = ref.snn_forward_traced(
+        jnp.asarray(img[None, :], jnp.int32),
+        jnp.asarray([GOLDEN_SEED], jnp.uint32),
+        jnp.asarray(w_q, jnp.int32),
+        timesteps=t, v_th=cfg.v_th, v_rest=cfg.v_rest,
+        decay_shift=cfg.decay_shift, acc_bits=cfg.acc_bits,
+        prune_after=cfg.prune_after)
+    aio.save_golden_trace(
+        os.path.join(out_dir, "golden_trace.bin"), img, GOLDEN_SEED,
+        v_th=cfg.v_th, decay_shift=cfg.decay_shift, acc_bits=cfg.acc_bits,
+        prune_after=cfg.prune_after,
+        membranes=np.asarray(membranes[:, 0]), fired=np.asarray(fired[:, 0]),
+        currents=np.asarray(currents[:, 0]), counts=np.asarray(counts[0]))
+
+
+def lower_hlo(out_dir: str, cfg: M.ModelConfig, log):
+    files = []
+
+    def dump(name, fn, *specs, return_tuple=True):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered, return_tuple=return_tuple)
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        files.append(name)
+        log(f"hlo: {name} ({len(text)} chars)")
+
+    p, n = cfg.n_inputs, cfg.n_outputs
+    w_spec = jax.ShapeDtypeStruct((p, n), jnp.int32)
+
+    for b in FORWARD_BATCHES:
+        dump(f"snn_forward_b{b}.hlo.txt",
+             functools.partial(snn_forward_fn, cfg=cfg),
+             jax.ShapeDtypeStruct((b, p), jnp.int32),
+             jax.ShapeDtypeStruct((b,), jnp.uint32),
+             w_spec)
+
+    # Chunked serving executables use the PACKED carry (a single int32
+    # array; model.pack_carry layout) and are lowered with
+    # return_tuple=False so the root is a plain array — the returned PJRT
+    # buffer is fed straight back into the next chunk without any host
+    # round-trip (perf pass 6).
+    b = 8
+    dump(f"snn_init_b{b}.hlo.txt",
+         functools.partial(snn_init_packed_fn, cfg=cfg, n_pixels=p),
+         jax.ShapeDtypeStruct((b,), jnp.uint32),
+         return_tuple=False)
+    dump(f"snn_chunk_b{b}.hlo.txt",
+         functools.partial(snn_chunk_packed_fn, cfg=cfg),
+         jax.ShapeDtypeStruct((b, p), jnp.int32),
+         jax.ShapeDtypeStruct((b, p + 3 * n), jnp.int32),
+         w_spec,
+         return_tuple=False)
+
+    for b in ANN_BATCHES:
+        dump(f"ann_mlp_b{b}.hlo.txt", ann_fn,
+             jax.ShapeDtypeStruct((b, p), jnp.float32),
+             jax.ShapeDtypeStruct((p, 32), jnp.float32),
+             jax.ShapeDtypeStruct((32,), jnp.float32),
+             jax.ShapeDtypeStruct((32, n), jnp.float32),
+             jax.ShapeDtypeStruct((n,), jnp.float32))
+    return files
+
+
+# Top-level lowered functions (named so the HLO modules are identifiable).
+
+def snn_forward_fn(images, seeds, weights, *, cfg):
+    return (M.snn_forward(images, seeds, weights, cfg),)
+
+
+def snn_init_packed_fn(seeds, *, cfg, n_pixels):
+    return M.snn_init_packed(seeds, cfg, n_pixels)
+
+
+def snn_chunk_packed_fn(images, carry, weights, *, cfg):
+    return M.snn_chunk_packed(images, carry, weights, cfg,
+                              chunk_steps=CHUNK_STEPS)
+
+
+def ann_fn(images_f32, w1, b1, w2, b2):
+    return (M.ann_forward(images_f32, w1, b1, w2, b2),)
+
+
+def write_manifest(out_dir: str, cfg: M.ModelConfig, stats: dict, files, log):
+    path = os.path.join(out_dir, "manifest.txt")
+    lines = [
+        "schema=1",
+        f"n_inputs={cfg.n_inputs}",
+        f"n_outputs={cfg.n_outputs}",
+        f"v_th={cfg.v_th}",
+        f"v_rest={cfg.v_rest}",
+        f"decay_shift={cfg.decay_shift}",
+        f"acc_bits={cfg.acc_bits}",
+        f"weight_bits={cfg.weight_bits}",
+        f"timesteps={cfg.timesteps}",
+        f"prune_after={cfg.prune_after}",
+        f"chunk_steps={CHUNK_STEPS}",
+        f"forward_batches={','.join(str(b) for b in FORWARD_BATCHES)}",
+        f"ann_batches={','.join(str(b) for b in ANN_BATCHES)}",
+        f"train_seed={TRAIN_SEED}",
+        f"test_seed={TEST_SEED}",
+        f"train_per_class={TRAIN_PER_CLASS}",
+        f"test_per_class={TEST_PER_CLASS}",
+        f"eval_seed_base={EVAL_SEED_BASE}",
+        f"eval_seed_mult={EVAL_SEED_MULT}",
+        f"golden_seed={GOLDEN_SEED}",
+    ]
+    for k, v in sorted(stats.items()):
+        lines.append(f"{k}={v:.4f}" if isinstance(v, float) else f"{k}={v}")
+    lines.append(f"hlo_files={','.join(files)}")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    log(f"manifest: {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true",
+                    help="rebuild even if artifacts exist")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    log = print
+
+    manifest = os.path.join(out_dir, "manifest.txt")
+    if os.path.exists(manifest) and not args.force:
+        log("artifacts: manifest present; nothing to do "
+            "(make handles staleness; use --force to rebuild)")
+        return
+
+    t0 = time.time()
+    cfg = M.ModelConfig()
+    train, test = build_datasets(out_dir, log)
+    w_q, ann, cfg, stats = build_weights(out_dir, train, test, cfg, log)
+    build_goldens(out_dir, test, w_q, cfg, log)
+    files = lower_hlo(out_dir, cfg, log)
+    write_manifest(out_dir, cfg, stats, files, log)
+    log(f"artifacts: complete in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Binary artifact writers/readers — byte-identical to rust/src/data/codec.rs.
+
+Formats (little-endian, 4-byte ASCII magic):
+
+SNND  labelled image dataset           (rust: codec::{save,load}_dataset)
+SNNW  packed 9-bit weights + LIF cal.  (rust: codec::{save,load}_weights)
+SNNA  baseline ANN f32 weights         (rust: ann::load_ann_weights)
+SNNE  golden encoder spike train       (rust: tests/golden.rs)
+SNNT  golden LIF trace                 (rust: tests/golden.rs)
+"""
+
+import os
+import struct
+
+import numpy as np
+
+VERSION = 1
+
+
+def _write_atomic(path: str, payload: bytes):
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+# -- SNND -------------------------------------------------------------------
+
+def save_dataset(path: str, images: np.ndarray, labels: np.ndarray):
+    """images uint8[N, 784], labels uint8[N]."""
+    n, p = images.shape
+    assert p == 784 and images.dtype == np.uint8
+    out = bytearray()
+    out += b"SNND"
+    out += struct.pack("<II", VERSION, n)
+    out += struct.pack("<HH", 28, 28)
+    for i in range(n):
+        out.append(int(labels[i]))
+        out += images[i].tobytes()
+    _write_atomic(path, bytes(out))
+
+
+def load_dataset(path: str):
+    with open(path, "rb") as f:
+        buf = f.read()
+    assert buf[:4] == b"SNND", "bad magic"
+    version, n = struct.unpack_from("<II", buf, 4)
+    assert version == VERSION
+    h, w = struct.unpack_from("<HH", buf, 12)
+    assert (h, w) == (28, 28)
+    images = np.zeros((n, 784), dtype=np.uint8)
+    labels = np.zeros(n, dtype=np.uint8)
+    pos = 16
+    for i in range(n):
+        labels[i] = buf[pos]
+        images[i] = np.frombuffer(buf, np.uint8, 784, pos + 1)
+        pos += 785
+    assert pos == len(buf), "trailing bytes"
+    return images, labels
+
+
+# -- SNNW -------------------------------------------------------------------
+
+def pack_weights(weights: np.ndarray, bits: int) -> bytes:
+    """Dense LSB-first two's-complement bitstream (mirror of rust
+    fixed::pack_weights)."""
+    flat = weights.reshape(-1).astype(np.int64)
+    mask = (1 << bits) - 1
+    total_bits = flat.size * bits
+    out = bytearray((total_bits + 7) // 8)
+    bitpos = 0
+    for w in flat:
+        raw = int(w) & mask
+        remaining = bits
+        val = raw
+        pos = bitpos
+        while remaining > 0:
+            byte = pos // 8
+            off = pos % 8
+            take = min(8 - off, remaining)
+            out[byte] |= (val & ((1 << take) - 1)) << off
+            val >>= take
+            pos += take
+            remaining -= take
+        bitpos += bits
+    return bytes(out)
+
+
+def unpack_weights(data: bytes, n_inputs: int, n_outputs: int, bits: int) -> np.ndarray:
+    n = n_inputs * n_outputs
+    out = np.zeros(n, dtype=np.int64)
+    bitpos = 0
+    for k in range(n):
+        raw = 0
+        got = 0
+        pos = bitpos
+        while got < bits:
+            byte = pos // 8
+            off = pos % 8
+            take = min(8 - off, bits - got)
+            raw |= ((data[byte] >> off) & ((1 << take) - 1)) << got
+            got += take
+            pos += take
+        bitpos += bits
+        if raw >= (1 << (bits - 1)):  # sign-extend
+            raw -= 1 << bits
+        out[k] = raw
+    return out.reshape(n_inputs, n_outputs).astype(np.int32)
+
+
+def save_weights(path: str, weights: np.ndarray, *, bits: int, v_th: int,
+                 decay_shift: int, timesteps: int, prune_after: int):
+    """weights int32[784, 10] row-major by input."""
+    n_in, n_out = weights.shape
+    packed = pack_weights(weights, bits)
+    out = bytearray()
+    out += b"SNNW"
+    out += struct.pack("<IIIIiIIII", VERSION, n_in, n_out, bits, v_th,
+                       decay_shift, timesteps, prune_after, len(packed))
+    out += packed
+    _write_atomic(path, bytes(out))
+
+
+def load_weights(path: str):
+    with open(path, "rb") as f:
+        buf = f.read()
+    assert buf[:4] == b"SNNW"
+    version, n_in, n_out, bits, v_th, decay, steps, prune, plen = \
+        struct.unpack_from("<IIIIiIIII", buf, 4)
+    assert version == VERSION
+    packed = buf[40:40 + plen]
+    w = unpack_weights(packed, n_in, n_out, bits)
+    return w, dict(v_th=v_th, decay_shift=decay, timesteps=steps, bits=bits,
+                   prune_after=prune)
+
+
+# -- SNNA (ANN f32 weights) --------------------------------------------------
+
+def save_ann(path: str, w1, b1, w2, b2):
+    w1 = np.asarray(w1, np.float32)
+    b1 = np.asarray(b1, np.float32)
+    w2 = np.asarray(w2, np.float32)
+    b2 = np.asarray(b2, np.float32)
+    n_in, n_h = w1.shape
+    n_out = w2.shape[1]
+    out = bytearray()
+    out += b"SNNA"
+    out += struct.pack("<IIII", VERSION, n_in, n_h, n_out)
+    out += w1.tobytes() + b1.tobytes() + w2.tobytes() + b2.tobytes()
+    _write_atomic(path, bytes(out))
+
+
+def load_ann(path: str):
+    with open(path, "rb") as f:
+        buf = f.read()
+    assert buf[:4] == b"SNNA"
+    version, n_in, n_h, n_out = struct.unpack_from("<IIII", buf, 4)
+    assert version == VERSION
+    pos = 20
+    def take(shape):
+        nonlocal pos
+        count = int(np.prod(shape))
+        arr = np.frombuffer(buf, np.float32, count, pos).reshape(shape)
+        pos += count * 4
+        return arr
+    w1 = take((n_in, n_h))
+    b1 = take((n_h,))
+    w2 = take((n_h, n_out))
+    b2 = take((n_out,))
+    return w1, b1, w2, b2
+
+
+# -- Golden traces ------------------------------------------------------------
+
+def save_golden_encoder(path: str, image: np.ndarray, seed: int,
+                        spikes: np.ndarray):
+    """image uint8[784]; spikes int{0,1}[T, 784] packed LSB-first."""
+    t, p = spikes.shape
+    out = bytearray()
+    out += b"SNNE"
+    out += struct.pack("<IIII", VERSION, seed, p, t)
+    out += image.astype(np.uint8).tobytes()
+    for step in range(t):
+        out += np.packbits(spikes[step].astype(np.uint8), bitorder="little").tobytes()
+    _write_atomic(path, bytes(out))
+
+
+def save_golden_trace(path: str, image: np.ndarray, seed: int, *, v_th: int,
+                      decay_shift: int, acc_bits: int, prune_after: int,
+                      membranes: np.ndarray, fired: np.ndarray,
+                      currents: np.ndarray, counts: np.ndarray):
+    """Per-step LIF observability for one image (T, N arrays)."""
+    t, n = membranes.shape
+    out = bytearray()
+    out += b"SNNT"
+    out += struct.pack("<IiIIIIII", VERSION, v_th, decay_shift, acc_bits,
+                       prune_after, t, n, seed)
+    out += image.astype(np.uint8).tobytes()
+    for step in range(t):
+        out += membranes[step].astype("<i4").tobytes()
+        out += fired[step].astype(np.uint8).tobytes()
+        out += currents[step].astype("<i4").tobytes()
+    out += counts.astype("<i4").tobytes()
+    _write_atomic(path, bytes(out))

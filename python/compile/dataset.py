@@ -1,0 +1,232 @@
+"""Bit-exact Python mirror of rust/src/data/digitgen.rs and perturb.rs.
+
+Every arithmetic step is integer-only with floor semantics shared by both
+languages (Python ``>>`` on negative ints and Rust arithmetic shift both
+round toward -inf). The PRNG draw order is the contract documented in the
+Rust module; the cross-language golden tests regenerate images in both
+languages and compare bytes.
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .prng import Xorshift32, derive_state
+from .templates import TEMPLATES
+
+IMG_SIDE = 28
+IMG_PIXELS = IMG_SIDE * IMG_SIDE
+HI = 112  # 4x oversampled raster
+
+SIN_Q10 = [0, 18, 36, 54, 71, 89, 107, 125, 143, 160, 178, 195, 213, 230, 248, 265]
+COS_Q10 = [1024, 1024, 1023, 1023, 1022, 1020, 1018, 1016, 1014, 1011, 1008, 1005,
+           1002, 998, 994, 989]
+
+# Precomputed disc offsets per radius (stamping acceleration).
+_DISC_CACHE = {}
+
+
+def _disc_offsets(r: int):
+    if r not in _DISC_CACHE:
+        ys, xs = np.mgrid[-r:r + 1, -r:r + 1]
+        keep = (xs * xs + ys * ys) <= r * r
+        _DISC_CACHE[r] = (ys[keep].astype(np.int64), xs[keep].astype(np.int64))
+    return _DISC_CACHE[r]
+
+
+@dataclass(frozen=True)
+class GenParams:
+    dx: int
+    dy: int
+    angle_deg: int
+    scale_q8: int
+    thickness: int
+    peak: int
+
+
+def _sin_q10(deg: int) -> int:
+    v = SIN_Q10[abs(deg)]
+    return -v if deg < 0 else v
+
+
+def _cos_q10(deg: int) -> int:
+    return COS_Q10[abs(deg)]
+
+
+def _virt_to_hi(v: int) -> int:
+    return (v * 7 + 8) >> 4
+
+
+def _stamp_segment(bitmap: np.ndarray, x0: int, y0: int, x1: int, y1: int, r: int):
+    """Bresenham walk stamping a disc at every cell (mirrors Rust)."""
+    oy, ox = _disc_offsets(r)
+    dx = abs(x1 - x0)
+    dy = -abs(y1 - y0)
+    sx = 1 if x0 < x1 else -1
+    sy = 1 if y0 < y1 else -1
+    err = dx + dy
+    x, y = x0, y0
+    while True:
+        ys = oy + y
+        xs = ox + x
+        keep = (ys >= 0) & (ys < HI) & (xs >= 0) & (xs < HI)
+        bitmap[ys[keep], xs[keep]] = 1
+        if x == x1 and y == y1:
+            break
+        e2 = 2 * err
+        if e2 >= dy:
+            err += dy
+            x += sx
+        if e2 <= dx:
+            err += dx
+            y += sy
+
+
+def render_digit(seed: int, cls: int, index: int):
+    """Render sample `index` of digit `cls` under `seed`.
+
+    Returns (pixels: np.uint8[28,28], GenParams). Bit-identical to
+    rust ``render_digit``.
+    """
+    assert 0 <= cls <= 9
+    rng = Xorshift32.from_raw_state(derive_state(seed, cls, index))
+
+    params = GenParams(
+        dx=rng.range_i32(-14, 14),
+        dy=rng.range_i32(-14, 14),
+        angle_deg=rng.range_i32(-12, 12),
+        scale_q8=rng.range_i32(210, 290),
+        thickness=rng.range_i32(8, 12),
+        peak=rng.range_i32(170, 255),
+    )
+    sinv = _sin_q10(params.angle_deg)
+    cosv = _cos_q10(params.angle_deg)
+
+    bitmap = np.zeros((HI, HI), dtype=np.uint8)
+    for stroke in TEMPLATES[cls]:
+        pts = []
+        for (tx, ty) in stroke:
+            jx = rng.range_i32(-5, 5)
+            jy = rng.range_i32(-5, 5)
+            px = tx + jx - 128
+            py = ty + jy - 128
+            rx = (px * cosv - py * sinv) >> 10
+            ry = (px * sinv + py * cosv) >> 10
+            sx = (rx * params.scale_q8) >> 8
+            sy = (ry * params.scale_q8) >> 8
+            pts.append((_virt_to_hi(sx + 128 + params.dx), _virt_to_hi(sy + 128 + params.dy)))
+        for (x0, y0), (x1, y1) in zip(pts, pts[1:]):
+            _stamp_segment(bitmap, x0, y0, x1, y1, params.thickness)
+
+    # 4x4 box downsample -> coverage 0..16, scaled by peak.
+    blocks = bitmap.reshape(IMG_SIDE, 4, IMG_SIDE, 4).sum(axis=(1, 3)).astype(np.int64)
+    pixels = ((blocks * params.peak) // 16).astype(np.uint8)
+    return pixels, params
+
+
+def build_dataset(seed: int, per_class: int):
+    """Balanced interleaved dataset: (images uint8[N,784], labels uint8[N])
+    with sample i of class c at position i*10+c — mirrors rust
+    ``DigitGen::dataset``."""
+    n = per_class * 10
+    images = np.zeros((n, IMG_PIXELS), dtype=np.uint8)
+    labels = np.zeros(n, dtype=np.uint8)
+    for index in range(per_class):
+        for cls in range(10):
+            px, _ = render_digit(seed, cls, index)
+            pos = index * 10 + cls
+            images[pos] = px.reshape(-1)
+            labels[pos] = cls
+    return images, labels
+
+
+# ---------------------------------------------------------------------------
+# Perturbations (Fig. 8) — mirrors rust/src/data/perturb.rs
+# ---------------------------------------------------------------------------
+
+PERTURB_CLEAN = 0
+PERTURB_ROTATE = 1
+PERTURB_SHIFT = 2
+PERTURB_NOISE = 3
+PERTURB_OCCLUDE = 4
+
+
+def rotate(img: np.ndarray, deg: int) -> np.ndarray:
+    """Integer inverse-mapped nearest-neighbour rotation (|deg| <= 15)."""
+    assert -15 <= deg <= 15
+    a = abs(deg)
+    sinv = -SIN_Q10[a] if deg < 0 else SIN_Q10[a]
+    cosv = COS_Q10[a]
+    src = img.reshape(IMG_SIDE, IMG_SIDE)
+    out = np.zeros_like(src)
+    for r in range(IMG_SIDE):
+        for c in range(IMG_SIDE):
+            xr = c * 2 - 27
+            yr = r * 2 - 27
+            sx = xr * cosv + yr * sinv
+            sy = -xr * sinv + yr * cosv
+            sc = (sx + 27 * 1024 + 1024) >> 11
+            sr = (sy + 27 * 1024 + 1024) >> 11
+            if 0 <= sc < IMG_SIDE and 0 <= sr < IMG_SIDE:
+                out[r, c] = src[sr, sc]
+    return out.reshape(img.shape)
+
+
+def shift(img: np.ndarray, dx: int, dy: int) -> np.ndarray:
+    src = img.reshape(IMG_SIDE, IMG_SIDE)
+    out = np.zeros_like(src)
+    for r in range(IMG_SIDE):
+        for c in range(IMG_SIDE):
+            sr, sc = r - dy, c - dx
+            if 0 <= sr < IMG_SIDE and 0 <= sc < IMG_SIDE:
+                out[r, c] = src[sr, sc]
+    return out.reshape(img.shape)
+
+
+def noise(img: np.ndarray, scale_q8: int, rng: Xorshift32) -> np.ndarray:
+    flat = img.reshape(-1).astype(np.int64)
+    out = np.zeros_like(flat)
+    for i in range(flat.size):
+        s = sum((rng.next_u32() & 0xFF) for _ in range(4))
+        delta = ((s - 510) * scale_q8) >> 9
+        out[i] = min(255, max(0, int(flat[i]) + delta))
+    return out.astype(np.uint8).reshape(img.shape)
+
+
+def occlude(img: np.ndarray, r0: int, c0: int, side: int) -> np.ndarray:
+    out = img.reshape(IMG_SIDE, IMG_SIDE).copy()
+    out[r0:r0 + side, c0:c0 + side] = 0
+    return out.reshape(img.shape)
+
+
+def apply_perturbation(kind: int, img: np.ndarray, seed: int, index: int,
+                       deg: int = 15, percent: int = 20, scale_q8: int = 138,
+                       side: int = 10) -> np.ndarray:
+    """Apply perturbation `kind` to `img` as sample `index` under `seed`
+    (mirrors rust ``Perturbation::apply`` including draw order)."""
+    rng = Xorshift32.from_raw_state(derive_state(seed, kind, index))
+    if kind == PERTURB_CLEAN:
+        return img.copy()
+    if kind == PERTURB_ROTATE:
+        sign = 1 if rng.next_u32() & 1 == 0 else -1
+        return rotate(img, sign * deg)
+    if kind == PERTURB_SHIFT:
+        mag = (percent * IMG_SIDE + 50) // 100
+        dirs = [(1, 0), (1, 1), (0, 1), (-1, 1), (-1, 0), (-1, -1), (0, -1), (1, -1)]
+        sx, sy = dirs[rng.below(8)]
+        return shift(img, sx * mag, sy * mag)
+    if kind == PERTURB_NOISE:
+        return noise(img, scale_q8, rng)
+    if kind == PERTURB_OCCLUDE:
+        r0 = rng.below(IMG_SIDE - side + 1)
+        c0 = rng.below(IMG_SIDE - side + 1)
+        return occlude(img, r0, c0, side)
+    raise ValueError(f"unknown perturbation kind {kind}")
+
+
+def fnv1a32(data: bytes) -> int:
+    """FNV-1a hash used for compact cross-language image goldens."""
+    h = 0x811C9DC5
+    for b in data:
+        h = ((h ^ b) * 0x01000193) & 0xFFFFFFFF
+    return h

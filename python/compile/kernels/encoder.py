@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: the on-chip Poisson encoder (paper Fig. 2).
+
+One timestep for a whole batch tile: advance every pixel's xorshift32
+register and compare the low byte against the pixel intensity. On real TPU
+hardware this is a pure-VPU elementwise kernel over uint32 lanes (no MXU
+involvement); the BlockSpec tiles the batch dimension so a tile's states +
+intensities + spikes fit comfortably in VMEM (see DESIGN.md §10).
+
+Lowered with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom calls (see /opt/xla-example/README.md), and interpret mode folds the
+kernel into plain HLO, which is what the Rust runtime loads.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encoder_kernel(states_ref, intensities_ref, new_states_ref, spikes_ref):
+    """Pallas body: one xorshift32 step + 8-bit comparator per lane."""
+    x = states_ref[...]
+    x = x ^ (x << jnp.uint32(13))
+    x = x ^ (x >> jnp.uint32(17))
+    x = x ^ (x << jnp.uint32(5))
+    new_states_ref[...] = x
+    low = (x & jnp.uint32(0xFF)).astype(jnp.int32)
+    spikes_ref[...] = (intensities_ref[...] > low).astype(jnp.int32)
+
+
+def encoder_step(states, intensities, *, block_batch: int = 8,
+                 interpret: bool = True):
+    """One encoder timestep via pallas_call.
+
+    states: uint32[B, P]; intensities: int32[B, P] (0..255).
+    Returns (new_states uint32[B, P], spikes int32[B, P]).
+
+    The grid walks the batch in `block_batch` tiles; P stays whole (784
+    uint32 = ~3 KB per row — trivially VMEM-resident).
+    """
+    b, p = states.shape
+    bt = min(block_batch, b)
+    if b % bt != 0:
+        bt = b  # fall back to one tile rather than padding
+    grid = (b // bt,)
+    return pl.pallas_call(
+        _encoder_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, p), lambda i: (i, 0)),
+            pl.BlockSpec((bt, p), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, p), lambda i: (i, 0)),
+            pl.BlockSpec((bt, p), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, p), jnp.uint32),
+            jax.ShapeDtypeStruct((b, p), jnp.int32),
+        ],
+        interpret=interpret,
+    )(states, intensities)

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: one LIF layer timestep (paper Eq. 1-2 + pruning).
+
+TPU mapping of the paper's design (DESIGN.md §3 Hardware-Adaptation): the
+784-input adder tree of the RTL becomes a {0,1}-masked int matmul on the
+MXU — `current = spikes @ W` — followed by elementwise VPU ops for the
+shift-leak, threshold compare, hard reset and pruning-mask update. The
+BlockSpec tiles the batch dimension; the full 784×10 weight block rides
+along in VMEM (784·10·4 B ≈ 31 KB).
+
+Lowered with interpret=True for the CPU PJRT runtime (Mosaic custom calls
+cannot execute there); numerics are identical either way and are pinned to
+kernels/ref.py by the pytest/hypothesis suite.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lif_kernel(spikes_ref, w_ref, acc_ref, counts_ref, enabled_ref,
+                acc_out_ref, counts_out_ref, enabled_out_ref, fired_out_ref,
+                *, v_th: int, v_rest: int, decay_shift: int, acc_max: int,
+                prune_after: int):
+    """Pallas body: integrate → leak → fire/reset → prune for one tile."""
+    spikes = spikes_ref[...]
+    w = w_ref[...]
+    acc = acc_ref[...]
+    counts = counts_ref[...]
+    en = enabled_ref[...].astype(jnp.bool_)
+
+    current = jnp.dot(spikes, w, preferred_element_type=jnp.int32)
+    integrated = jnp.clip(acc + current, -acc_max, acc_max)
+    leaked = integrated - (integrated >> jnp.int32(decay_shift))
+    fired = jnp.logical_and(leaked >= v_th, en)
+    acc_next = jnp.where(en, jnp.where(fired, jnp.int32(v_rest), leaked), acc)
+    counts_next = counts + fired.astype(jnp.int32)
+    if prune_after > 0:
+        en_next = jnp.logical_and(en, counts_next < prune_after)
+    else:
+        en_next = en
+
+    acc_out_ref[...] = acc_next
+    counts_out_ref[...] = counts_next
+    enabled_out_ref[...] = en_next.astype(jnp.int32)
+    fired_out_ref[...] = fired.astype(jnp.int32)
+
+
+def lif_step(spikes, weights, acc, counts, enabled, *, v_th: int,
+             v_rest: int, decay_shift: int, acc_bits: int, prune_after: int,
+             block_batch: int = 8, interpret: bool = True):
+    """One LIF timestep via pallas_call. Same contract as ref.lif_step."""
+    b, p = spikes.shape
+    n = weights.shape[1]
+    acc_max = (1 << (acc_bits - 1)) - 1
+    bt = min(block_batch, b)
+    if b % bt != 0:
+        bt = b
+    grid = (b // bt,)
+    kernel = functools.partial(
+        _lif_kernel, v_th=v_th, v_rest=v_rest, decay_shift=decay_shift,
+        acc_max=acc_max, prune_after=prune_after)
+    tile_bn = lambda i: (i, 0)  # noqa: E731
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, p), tile_bn),
+            pl.BlockSpec((p, n), lambda i: (0, 0)),
+            pl.BlockSpec((bt, n), tile_bn),
+            pl.BlockSpec((bt, n), tile_bn),
+            pl.BlockSpec((bt, n), tile_bn),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, n), tile_bn),
+            pl.BlockSpec((bt, n), tile_bn),
+            pl.BlockSpec((bt, n), tile_bn),
+            pl.BlockSpec((bt, n), tile_bn),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.int32),
+            jax.ShapeDtypeStruct((b, n), jnp.int32),
+            jax.ShapeDtypeStruct((b, n), jnp.int32),
+            jax.ShapeDtypeStruct((b, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(spikes, weights, acc, counts, enabled)

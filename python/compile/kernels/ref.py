@@ -1,0 +1,142 @@
+"""Pure-jnp oracle for the L1 kernels — the correctness reference.
+
+Implements the architectural contract of DESIGN.md §4 with plain jax.numpy
+integer ops (no pallas). The Pallas kernels in encoder.py / lif.py must
+match these functions bit-for-bit (pytest + hypothesis enforce it), and the
+golden traces consumed by the Rust integration tests are generated from
+here.
+
+All arithmetic is int32/uint32; `>>` on int32 is arithmetic (matches Rust),
+on uint32 logical (matches the hardware PRNG).
+"""
+
+import jax.numpy as jnp
+
+M32 = 0xFFFFFFFF
+GOLDEN_GAMMA = 0x9E3779B9
+ZERO_STATE_FALLBACK = 0xDEADBEEF
+
+
+def splitmix32(x):
+    """Vectorized splitmix32 over uint32 arrays (seeding network)."""
+    x = x.astype(jnp.uint32)
+    z = x + jnp.uint32(GOLDEN_GAMMA)
+    z = (z ^ (z >> jnp.uint32(16))) * jnp.uint32(0x85EBCA6B)
+    z = (z ^ (z >> jnp.uint32(13))) * jnp.uint32(0xC2B2AE35)
+    return z ^ (z >> jnp.uint32(16))
+
+
+def initial_states(seeds, n_pixels: int):
+    """Per-pixel xorshift32 initial states for a batch of image seeds.
+
+    seeds: uint32[B] -> uint32[B, n_pixels], following the pixel_seed
+    contract shared with rust/src/prng and python/compile/prng.py.
+    """
+    seeds = seeds.astype(jnp.uint32)
+    idx = jnp.arange(n_pixels, dtype=jnp.uint32)
+    mixed = seeds[:, None] ^ (idx[None, :] * jnp.uint32(GOLDEN_GAMMA))
+    s = splitmix32(mixed)
+    return jnp.where(s == 0, jnp.uint32(ZERO_STATE_FALLBACK), s)
+
+
+def xorshift32_step(x):
+    """One xorshift32 (13/17/5) transition over uint32 arrays."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x << jnp.uint32(13))
+    x = x ^ (x >> jnp.uint32(17))
+    x = x ^ (x << jnp.uint32(5))
+    return x
+
+
+def encoder_step(states, intensities):
+    """One Poisson-encoder timestep.
+
+    states: uint32[B, P] PRNG registers; intensities: int32[B, P] in 0..255.
+    Returns (new_states uint32[B, P], spikes int32[B, P] in {0, 1}).
+    """
+    new_states = xorshift32_step(states)
+    low = (new_states & jnp.uint32(0xFF)).astype(jnp.int32)
+    spikes = (intensities.astype(jnp.int32) > low).astype(jnp.int32)
+    return new_states, spikes
+
+
+def lif_step(spikes, weights, acc, counts, enabled, *, v_th: int, v_rest: int,
+             decay_shift: int, acc_bits: int, prune_after: int):
+    """One architectural LIF timestep for the whole layer.
+
+    spikes   int32[B, P] in {0, 1}
+    weights  int32[P, N]
+    acc      int32[B, N] membrane accumulators
+    counts   int32[B, N] output spike counts
+    enabled  int32[B, N] in {0, 1} (pruning mask; 1 = enabled)
+    v_th / v_rest / decay_shift / acc_bits: the SnnConfig constants
+    prune_after: 0 = pruning off, else gate off after that many fires.
+
+    Returns (acc', counts', enabled', fired int32[B, N]).
+    """
+    acc_max = (1 << (acc_bits - 1)) - 1
+    current = jnp.dot(spikes.astype(jnp.int32), weights.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+    en = enabled.astype(jnp.bool_)
+    integrated = jnp.clip(acc + current, -acc_max, acc_max)
+    leaked = integrated - (integrated >> jnp.int32(decay_shift))
+    fired_b = jnp.logical_and(leaked >= v_th, en)
+    acc_next = jnp.where(en, jnp.where(fired_b, jnp.int32(v_rest), leaked), acc)
+    counts_next = counts + fired_b.astype(jnp.int32)
+    if prune_after > 0:
+        enabled_next = jnp.logical_and(en, counts_next < prune_after)
+    else:
+        enabled_next = en
+    return acc_next, counts_next, enabled_next.astype(jnp.int32), fired_b.astype(jnp.int32)
+
+
+def snn_forward(images, seeds, weights, *, timesteps: int, v_th: int,
+                v_rest: int, decay_shift: int, acc_bits: int, prune_after: int):
+    """Full-window reference forward pass (python loop over timesteps).
+
+    images: int32[B, P] 0..255; seeds: uint32[B]; weights: int32[P, N].
+    Returns spike counts int32[B, N].
+    """
+    b, p = images.shape
+    n = weights.shape[1]
+    states = initial_states(seeds, p)
+    acc = jnp.full((b, n), v_rest, dtype=jnp.int32)
+    counts = jnp.zeros((b, n), dtype=jnp.int32)
+    enabled = jnp.ones((b, n), dtype=jnp.int32)
+    for _ in range(timesteps):
+        states, spikes = encoder_step(states, images)
+        acc, counts, enabled, _ = lif_step(
+            spikes, weights, acc, counts, enabled, v_th=v_th, v_rest=v_rest,
+            decay_shift=decay_shift, acc_bits=acc_bits, prune_after=prune_after)
+    return counts
+
+
+def snn_forward_traced(images, seeds, weights, *, timesteps: int, v_th: int,
+                       v_rest: int, decay_shift: int, acc_bits: int,
+                       prune_after: int):
+    """Reference forward that also returns per-step observability
+    (membranes after fire/reset, fired flags, input currents) — the source
+    of the golden traces checked by the Rust integration tests.
+
+    The reported per-step input current is masked by the (pre-update)
+    enabled mask, matching the RTL where pruned neurons integrate nothing.
+    """
+    b, p = images.shape
+    n = weights.shape[1]
+    states = initial_states(seeds, p)
+    acc = jnp.full((b, n), v_rest, dtype=jnp.int32)
+    counts = jnp.zeros((b, n), dtype=jnp.int32)
+    enabled = jnp.ones((b, n), dtype=jnp.int32)
+    membranes, fireds, currents = [], [], []
+    for _ in range(timesteps):
+        states, spikes = encoder_step(states, images)
+        current = jnp.dot(spikes, weights.astype(jnp.int32),
+                          preferred_element_type=jnp.int32)
+        current = current * enabled  # pruned neurons integrate nothing
+        acc, counts, enabled, fired = lif_step(
+            spikes, weights, acc, counts, enabled, v_th=v_th, v_rest=v_rest,
+            decay_shift=decay_shift, acc_bits=acc_bits, prune_after=prune_after)
+        membranes.append(acc)
+        fireds.append(fired)
+        currents.append(current)
+    return counts, jnp.stack(membranes), jnp.stack(fireds), jnp.stack(currents)

@@ -1,0 +1,272 @@
+"""L2: the JAX compute graphs — SNN forward (scan of L1 kernels), the
+chunked serving variant, and the baseline ANN — plus their training
+objectives.
+
+Everything here is build-time only: `aot.py` lowers the jitted forwards to
+HLO text and the Rust runtime executes them; Python never runs on the
+request path.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import encoder as k_encoder
+from .kernels import lif as k_lif
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Mirror of rust SnnConfig (the architectural constants baked into the
+    lowered HLO; the weights artifact records the same values and the Rust
+    runtime cross-checks them at load time)."""
+    n_inputs: int = 784
+    n_outputs: int = 10
+    v_th: int = 128
+    v_rest: int = 0
+    decay_shift: int = 3
+    acc_bits: int = 24
+    weight_bits: int = 9
+    timesteps: int = 20
+    prune_after: int = 1  # 0 = pruning off
+
+    def lif_kwargs(self):
+        return dict(v_th=self.v_th, v_rest=self.v_rest,
+                    decay_shift=self.decay_shift, acc_bits=self.acc_bits,
+                    prune_after=self.prune_after)
+
+
+# ---------------------------------------------------------------------------
+# SNN forward (scan over timesteps, calling the L1 pallas kernels)
+# ---------------------------------------------------------------------------
+
+def snn_forward(images, seeds, weights, cfg: ModelConfig, *,
+                use_pallas: bool = True, block_batch: int = 8):
+    """Full-window forward: spike counts int32[B, N].
+
+    images int32[B, P] (0..255), seeds uint32[B], weights int32[P, N].
+    A single `lax.scan` carries (prng states, membranes, counts, enabled);
+    the encoder is folded into the scan so no [T, B, P] spike tensor is
+    ever materialized (DESIGN.md §10 L2).
+    """
+    b, p = images.shape
+    n = weights.shape[1]
+    states0 = ref.initial_states(seeds, p)
+    acc0 = jnp.full((b, n), cfg.v_rest, dtype=jnp.int32)
+    counts0 = jnp.zeros((b, n), dtype=jnp.int32)
+    enabled0 = jnp.ones((b, n), dtype=jnp.int32)
+
+    def step(carry, _):
+        states, acc, counts, enabled = carry
+        if use_pallas:
+            states, spikes = k_encoder.encoder_step(
+                states, images, block_batch=block_batch)
+            acc, counts, enabled, _ = k_lif.lif_step(
+                spikes, weights, acc, counts, enabled,
+                block_batch=block_batch, **cfg.lif_kwargs())
+        else:
+            states, spikes = ref.encoder_step(states, images)
+            acc, counts, enabled, _ = ref.lif_step(
+                spikes, weights, acc, counts, enabled, **cfg.lif_kwargs())
+        return (states, acc, counts, enabled), None
+
+    (_, _, counts, _), _ = lax.scan(
+        step, (states0, acc0, counts0, enabled0), None, length=cfg.timesteps)
+    return counts
+
+
+def snn_chunk(images, states, acc, counts, enabled, weights,
+              cfg: ModelConfig, *, chunk_steps: int, use_pallas: bool = True,
+              block_batch: int = 8):
+    """Run `chunk_steps` timesteps from an explicit carry and return the
+    updated carry — the building block of the coordinator's early-exit
+    scheduler (run a chunk, check the margin, decide whether to continue).
+
+    Returns (states', acc', counts', enabled').
+    """
+    def step(carry, _):
+        st, a, c, e = carry
+        if use_pallas:
+            st, spikes = k_encoder.encoder_step(st, images, block_batch=block_batch)
+            a, c, e, _ = k_lif.lif_step(
+                spikes, weights, a, c, e, block_batch=block_batch,
+                **cfg.lif_kwargs())
+        else:
+            st, spikes = ref.encoder_step(st, images)
+            a, c, e, _ = ref.lif_step(spikes, weights, a, c, e, **cfg.lif_kwargs())
+        return (st, a, c, e), None
+
+    (states, acc, counts, enabled), _ = lax.scan(
+        step, (states, acc, counts, enabled), None, length=chunk_steps)
+    return states, acc, counts, enabled
+
+
+def snn_init_carry(images, seeds, cfg: ModelConfig):
+    """Fresh carry for `snn_chunk` (also lowered as an artifact so the Rust
+    side never re-implements the seeding network for the XLA backend)."""
+    b, p = images.shape
+    n = cfg.n_outputs
+    return (ref.initial_states(seeds, p),
+            jnp.full((b, n), cfg.v_rest, dtype=jnp.int32),
+            jnp.zeros((b, n), dtype=jnp.int32),
+            jnp.ones((b, n), dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Packed-carry chunk variant (the serving executables).
+#
+# The Rust runtime's PJRT wrapper returns a computation's root as a single
+# buffer, so a tuple carry would force a host round-trip per chunk. Packing
+# the carry into ONE int32 array — [states (bitcast), acc, counts, enabled]
+# along axis 1 — makes the chunk executable array-in/array-out, and the
+# carry buffer stays device-resident across chunks (EXPERIMENTS.md §Perf
+# pass 6). Column layout (n_inputs = P, n_outputs = N):
+#   [0, P)            xorshift32 states, bitcast uint32<->int32
+#   [P, P+N)          membrane accumulators
+#   [P+N, P+2N)       spike counts   <- the slice Rust reads per chunk
+#   [P+2N, P+3N)      enabled mask
+# ---------------------------------------------------------------------------
+
+def pack_carry(states, acc, counts, enabled):
+    """Pack the scan carry into a single int32 array (see layout above)."""
+    states_i32 = jax.lax.bitcast_convert_type(states, jnp.int32)
+    return jnp.concatenate([states_i32, acc, counts, enabled], axis=1)
+
+
+def unpack_carry(packed, n_outputs: int):
+    """Inverse of `pack_carry`."""
+    n = n_outputs
+    p = packed.shape[1] - 3 * n
+    states = jax.lax.bitcast_convert_type(packed[:, :p], jnp.uint32)
+    acc = packed[:, p:p + n]
+    counts = packed[:, p + n:p + 2 * n]
+    enabled = packed[:, p + 2 * n:]
+    return states, acc, counts, enabled
+
+
+def snn_init_packed(seeds, cfg: ModelConfig, n_pixels: int):
+    """Packed-carry init: seeds -> carry0 (single int32 array)."""
+    b = seeds.shape[0]
+    n = cfg.n_outputs
+    return pack_carry(
+        ref.initial_states(seeds, n_pixels),
+        jnp.full((b, n), cfg.v_rest, dtype=jnp.int32),
+        jnp.zeros((b, n), dtype=jnp.int32),
+        jnp.ones((b, n), dtype=jnp.int32))
+
+
+def snn_chunk_packed(images, carry, weights, cfg: ModelConfig, *,
+                     chunk_steps: int, use_pallas: bool = True,
+                     block_batch: int = 8):
+    """Packed-carry chunk: `chunk_steps` timesteps, array-in/array-out."""
+    states, acc, counts, enabled = unpack_carry(carry, cfg.n_outputs)
+    states, acc, counts, enabled = snn_chunk(
+        images, states, acc, counts, enabled, weights, cfg,
+        chunk_steps=chunk_steps, use_pallas=use_pallas,
+        block_batch=block_batch)
+    return pack_carry(states, acc, counts, enabled)
+
+
+# ---------------------------------------------------------------------------
+# Baseline ANN (the paper's §V comparator: 784-32-10 f32 MLP)
+# ---------------------------------------------------------------------------
+
+def ann_forward(images_f32, w1, b1, w2, b2):
+    """Baseline MLP logits: relu(images @ w1 + b1) @ w2 + b2.
+
+    images_f32: f32[B, 784] already scaled to [0, 1].
+    """
+    h = jax.nn.relu(images_f32 @ w1 + b1)
+    return h @ w2 + b2
+
+
+def ann_init(key, n_in=784, n_hidden=32, n_out=10):
+    k1, k2 = jax.random.split(key)
+    w1 = jax.random.normal(k1, (n_in, n_hidden), jnp.float32) * (1.0 / jnp.sqrt(n_in))
+    w2 = jax.random.normal(k2, (n_hidden, n_out), jnp.float32) * (1.0 / jnp.sqrt(n_hidden))
+    return w1, jnp.zeros((n_hidden,), jnp.float32), w2, jnp.zeros((n_out,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Training objectives
+# ---------------------------------------------------------------------------
+
+def rate_proxy_logits(images_f32, w_f32):
+    """The rate-coded proxy: E[input current per step] ∝ (I/256) @ W, so a
+    linear classifier on normalized intensity transfers directly to the
+    spiking readout (DESIGN.md §5 train path)."""
+    return images_f32 @ w_f32
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def rate_proxy_loss(w_f32, images_f32, labels, l2: float = 1e-4):
+    return cross_entropy(rate_proxy_logits(images_f32, w_f32), labels) \
+        + l2 * jnp.sum(w_f32 * w_f32)
+
+
+def ann_loss(params, images_f32, labels, l2: float = 1e-4):
+    w1, b1, w2, b2 = params
+    logits = ann_forward(images_f32, w1, b1, w2, b2)
+    reg = l2 * (jnp.sum(w1 * w1) + jnp.sum(w2 * w2))
+    return cross_entropy(logits, labels) + reg
+
+
+# ---------------------------------------------------------------------------
+# Surrogate-gradient training (optional second path): float relaxation of
+# the fixed-point dynamics with a straight-through spike estimator.
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def spike_st(v):
+    """Heaviside spike with a triangular surrogate gradient."""
+    return (v >= 0.0).astype(jnp.float32)
+
+
+def _spike_fwd(v):
+    return spike_st(v), v
+
+
+def _spike_bwd(v, g):
+    # Triangular surrogate: max(0, 1 - |v| / width), width = 2·V_th scale.
+    grad = jnp.maximum(0.0, 1.0 - jnp.abs(v)) * g
+    return (grad,)
+
+
+spike_st.defvjp(_spike_fwd, _spike_bwd)
+
+
+def surrogate_forward(images_f32, w_f32, key, cfg: ModelConfig, *,
+                      timesteps: int):
+    """Differentiable SNN: Bernoulli(intensity) encoding with a float LIF,
+    returning spike counts. Used by `train.py --method surrogate`."""
+    beta = 1.0 - 2.0 ** (-cfg.decay_shift)
+    v_th = float(cfg.v_th)
+
+    def step(carry, k):
+        acc = carry
+        spikes = jax.random.bernoulli(k, images_f32).astype(jnp.float32)
+        current = spikes @ w_f32
+        leaked = (acc + current) * beta
+        fired = spike_st((leaked - v_th) / v_th)
+        acc = leaked * (1.0 - fired)
+        return acc, fired
+
+    b = images_f32.shape[0]
+    acc0 = jnp.zeros((b, cfg.n_outputs), jnp.float32)
+    keys = jax.random.split(key, timesteps)
+    _, fires = lax.scan(step, acc0, keys)
+    return fires.sum(axis=0)
+
+
+def surrogate_loss(w_f32, images_f32, labels, key, cfg: ModelConfig,
+                   timesteps: int = 10, l2: float = 1e-5):
+    counts = surrogate_forward(images_f32, w_f32, key, cfg, timesteps=timesteps)
+    return cross_entropy(counts, labels) + l2 * jnp.sum(w_f32 * w_f32)

@@ -1,0 +1,96 @@
+"""Bit-exact Python mirror of rust/src/prng/ (xorshift32 + splitmix32).
+
+This module is the cross-language PRNG contract. Scalar helpers use plain
+Python ints (masked to 32 bits); vectorized helpers use numpy uint32 and
+produce the identical streams. Golden values are pinned in
+python/tests/test_prng.py and rust/src/prng/mod.rs.
+"""
+
+import numpy as np
+
+M32 = 0xFFFFFFFF
+GOLDEN_GAMMA = 0x9E3779B9
+ZERO_STATE_FALLBACK = 0xDEADBEEF
+
+
+def xorshift32_step(x: int) -> int:
+    """One Marsaglia xorshift32 (13/17/5) state transition."""
+    x ^= (x << 13) & M32
+    x ^= x >> 17
+    x ^= (x << 5) & M32
+    return x
+
+
+def splitmix32(x: int) -> int:
+    """32-bit splitmix finalizer (full avalanche), for seeding."""
+    z = (x + GOLDEN_GAMMA) & M32
+    z = ((z ^ (z >> 16)) * 0x85EBCA6B) & M32
+    z = ((z ^ (z >> 13)) * 0xC2B2AE35) & M32
+    return z ^ (z >> 16)
+
+
+def pixel_seed(seed: int, index: int) -> int:
+    """Initial xorshift state for pixel `index` of an image under `seed`."""
+    s = splitmix32((seed ^ (index * GOLDEN_GAMMA)) & M32)
+    return s if s != 0 else ZERO_STATE_FALLBACK
+
+
+def derive_state(seed: int, a: int, b: int) -> int:
+    """Initial state for the (a, b)-indexed derived stream (dataset etc.)."""
+    s = splitmix32((splitmix32((seed ^ (a * 0x85EBCA6B)) & M32) ^ (b * GOLDEN_GAMMA)) & M32)
+    return s if s != 0 else ZERO_STATE_FALLBACK
+
+
+class Xorshift32:
+    """Scalar stateful generator mirroring rust's ``Xorshift32``."""
+
+    def __init__(self, seed: int):
+        s = splitmix32(seed & M32)
+        self.state = s if s != 0 else ZERO_STATE_FALLBACK
+
+    @classmethod
+    def from_raw_state(cls, state: int) -> "Xorshift32":
+        assert state != 0, "xorshift32 cannot leave the zero state"
+        r = cls.__new__(cls)
+        r.state = state & M32
+        return r
+
+    def next_u32(self) -> int:
+        self.state = xorshift32_step(self.state)
+        return self.state
+
+    def below(self, bound: int) -> int:
+        """Uniform in [0, bound) by multiply-shift (matches rust)."""
+        return (self.next_u32() * bound) >> 32
+
+    def range_i32(self, lo: int, hi: int) -> int:
+        """Uniform in [lo, hi] inclusive (matches rust)."""
+        assert lo <= hi
+        return lo + self.below(hi - lo + 1)
+
+
+def pixel_seeds_np(seed: int, n: int) -> np.ndarray:
+    """Vectorized [`pixel_seed`] for indices 0..n (uint32)."""
+    idx = np.arange(n, dtype=np.uint64)
+    x = (np.uint64(seed) ^ (idx * np.uint64(GOLDEN_GAMMA))) & np.uint64(M32)
+    s = splitmix32_np(x.astype(np.uint32))
+    return np.where(s == 0, np.uint32(ZERO_STATE_FALLBACK), s)
+
+
+def splitmix32_np(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix32 over uint32 arrays."""
+    assert x.dtype == np.uint32
+    with np.errstate(over="ignore"):
+        z = x + np.uint32(GOLDEN_GAMMA)
+        z = (z ^ (z >> np.uint32(16))) * np.uint32(0x85EBCA6B)
+        z = (z ^ (z >> np.uint32(13))) * np.uint32(0xC2B2AE35)
+        return z ^ (z >> np.uint32(16))
+
+
+def xorshift32_step_np(x: np.ndarray) -> np.ndarray:
+    """Vectorized xorshift32 step over uint32 arrays."""
+    assert x.dtype == np.uint32
+    x = x ^ ((x << np.uint32(13)) & np.uint32(M32))
+    x = x ^ (x >> np.uint32(17))
+    x = x ^ ((x << np.uint32(5)) & np.uint32(M32))
+    return x

@@ -1,0 +1,82 @@
+"""Artifact codec roundtrips + agreement with the built artifacts."""
+
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import artifact_io as aio
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_dataset_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    images = rng.integers(0, 256, (12, 784)).astype(np.uint8)
+    labels = (np.arange(12) % 10).astype(np.uint8)
+    p = str(tmp_path / "ds.bin")
+    aio.save_dataset(p, images, labels)
+    i2, l2 = aio.load_dataset(p)
+    assert (i2 == images).all() and (l2 == labels).all()
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 12))
+@settings(max_examples=20, deadline=None)
+def test_weights_pack_roundtrip(seed, bits):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    w = rng.integers(lo, hi + 1, (17, 5)).astype(np.int32)
+    packed = aio.pack_weights(w, bits)
+    assert len(packed) == (17 * 5 * bits + 7) // 8
+    back = aio.unpack_weights(packed, 17, 5, bits)
+    assert (back == w).all()
+
+
+def test_weights_file_roundtrip(tmp_path):
+    rng = np.random.default_rng(1)
+    w = rng.integers(-256, 256, (784, 10)).astype(np.int32)
+    p = str(tmp_path / "w.bin")
+    aio.save_weights(p, w, bits=9, v_th=384, decay_shift=3, timesteps=20,
+                     prune_after=5)
+    w2, meta = aio.load_weights(p)
+    assert (w2 == w).all()
+    assert meta == dict(v_th=384, decay_shift=3, timesteps=20, bits=9,
+                        prune_after=5)
+
+
+def test_ann_roundtrip(tmp_path):
+    rng = np.random.default_rng(2)
+    w1 = rng.normal(size=(784, 32)).astype(np.float32)
+    b1 = rng.normal(size=32).astype(np.float32)
+    w2 = rng.normal(size=(32, 10)).astype(np.float32)
+    b2 = rng.normal(size=10).astype(np.float32)
+    p = str(tmp_path / "ann.bin")
+    aio.save_ann(p, w1, b1, w2, b2)
+    r1, rb1, r2, rb2 = aio.load_ann(p)
+    for a, b in [(r1, w1), (rb1, b1), (r2, w2), (rb2, b2)]:
+        assert (a == b).all()
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.txt")),
+                    reason="artifacts not built")
+def test_built_artifacts_consistent():
+    """The canonical artifacts load and agree with the manifest."""
+    manifest = {}
+    with open(os.path.join(ART, "manifest.txt")) as f:
+        for line in f:
+            k, _, v = line.strip().partition("=")
+            manifest[k] = v
+    w, meta = aio.load_weights(os.path.join(ART, "weights.bin"))
+    assert w.shape == (int(manifest["n_inputs"]), int(manifest["n_outputs"]))
+    assert meta["v_th"] == int(manifest["v_th"])
+    assert meta["prune_after"] == int(manifest["prune_after"])
+    images, labels = aio.load_dataset(os.path.join(ART, "digits_test.bin"))
+    assert len(labels) == 10 * int(manifest["test_per_class"])
+    for name in manifest["hlo_files"].split(","):
+        path = os.path.join(ART, name)
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, f"{name} is not HLO text"

@@ -1,0 +1,85 @@
+"""Dataset generator tests, including the cross-language goldens."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.dataset import (IMG_PIXELS, IMG_SIDE, apply_perturbation,
+                             build_dataset, fnv1a32, noise, occlude,
+                             render_digit, rotate, shift,
+                             PERTURB_CLEAN, PERTURB_NOISE, PERTURB_OCCLUDE,
+                             PERTURB_ROTATE, PERTURB_SHIFT)
+from compile.prng import Xorshift32
+
+
+def test_cross_language_golden_hashes():
+    """Mirrors rust data::digitgen::tests::cross_language_golden_hashes."""
+    a, _ = render_digit(1, 3, 7)
+    assert fnv1a32(a.tobytes()) == 0x03D495A4
+    b, _ = render_digit(2, 8, 0)
+    assert fnv1a32(b.tobytes()) == 0x74ACA3A0
+
+
+def test_deterministic():
+    a, pa = render_digit(1, 3, 7)
+    b, pb = render_digit(1, 3, 7)
+    assert (a == b).all()
+    assert pa == pb
+
+
+def test_distinct_across_keys():
+    a, _ = render_digit(1, 3, 7)
+    for other in [render_digit(2, 3, 7), render_digit(1, 4, 7), render_digit(1, 3, 8)]:
+        assert not (a == other[0]).all()
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 9), st.integers(0, 999))
+@settings(max_examples=40, deadline=None)
+def test_images_have_ink(seed, cls, index):
+    px, params = render_digit(seed, cls, index)
+    ink = int((px > 0).sum())
+    assert 40 <= ink <= 600
+    assert int(px.max()) == params.peak
+
+
+def test_dataset_balanced_interleaved():
+    imgs, lbls = build_dataset(1, 4)
+    assert imgs.shape == (40, IMG_PIXELS)
+    for pos in range(40):
+        assert lbls[pos] == pos % 10
+
+
+def test_rotate_zero_identity():
+    px, _ = render_digit(1, 5, 0)
+    assert (rotate(px, 0) == px).all()
+
+
+def test_shift_exact():
+    px, _ = render_digit(1, 5, 0)
+    s = shift(px, 3, -2).reshape(IMG_SIDE, IMG_SIDE)
+    src = px.reshape(IMG_SIDE, IMG_SIDE)
+    assert (s[0:26, 3:] == src[2:28, 0:25]).all()
+
+
+def test_noise_statistics():
+    img = np.full(IMG_PIXELS, 128, np.uint8)
+    rng = Xorshift32(1)
+    n = noise(img, 138, rng).astype(np.float64)
+    assert abs(n.mean() - 128) < 6
+    assert abs(n.std() - 39.9) < 6
+
+
+def test_occlude_block():
+    px, _ = render_digit(1, 5, 0)
+    o = occlude(px, 5, 7, 10).reshape(IMG_SIDE, IMG_SIDE)
+    assert (o[5:15, 7:17] == 0).all()
+
+
+def test_perturbations_deterministic_per_index():
+    px, _ = render_digit(1, 5, 0)
+    for kind in [PERTURB_CLEAN, PERTURB_ROTATE, PERTURB_SHIFT, PERTURB_NOISE,
+                 PERTURB_OCCLUDE]:
+        a = apply_perturbation(kind, px, 42, 3)
+        b = apply_perturbation(kind, px, 42, 3)
+        assert (a == b).all()

@@ -1,0 +1,130 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core correctness signal of the compile path: hypothesis sweeps
+shapes, seeds, weights and config constants, asserting bit-exact agreement
+between the pallas_call implementations and the reference.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.encoder import encoder_step as pallas_encoder_step
+from compile.kernels.lif import lif_step as pallas_lif_step
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def np_rng(seed):
+    return np.random.default_rng(seed)
+
+
+# -- encoder ------------------------------------------------------------------
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 16), st.integers(1, 900))
+def test_encoder_matches_ref(seed, b, p):
+    rng = np_rng(seed)
+    states = rng.integers(1, 2**32, (b, p), dtype=np.uint64).astype(np.uint32)
+    intensities = rng.integers(0, 256, (b, p)).astype(np.int32)
+    ns_r, sp_r = ref.encoder_step(jnp.asarray(states), jnp.asarray(intensities))
+    ns_k, sp_k = pallas_encoder_step(jnp.asarray(states), jnp.asarray(intensities))
+    assert (np.asarray(ns_r) == np.asarray(ns_k)).all()
+    assert (np.asarray(sp_r) == np.asarray(sp_k)).all()
+
+
+def test_encoder_rate_tracks_intensity():
+    # Statistical check of the Poisson property (paper §III-C).
+    b, p, t = 1, 784, 200
+    for intensity in [32, 128, 224]:
+        states = ref.initial_states(jnp.asarray([7], jnp.uint32), p)
+        imgs = jnp.full((b, p), intensity, jnp.int32)
+        total = 0
+        for _ in range(t):
+            states, spikes = pallas_encoder_step(states, imgs)
+            total += int(spikes.sum())
+        rate = total / (t * p)
+        assert abs(rate - intensity / 256) < 0.01
+
+
+def test_encoder_zero_never_spikes():
+    states = ref.initial_states(jnp.asarray([3], jnp.uint32), 784)
+    imgs = jnp.zeros((1, 784), jnp.int32)
+    for _ in range(20):
+        states, spikes = pallas_encoder_step(states, imgs)
+        assert int(spikes.sum()) == 0
+
+
+# -- LIF ----------------------------------------------------------------------
+
+@given(
+    st.integers(0, 2**32 - 1),
+    st.integers(1, 12),     # batch
+    st.integers(1, 64),     # inputs
+    st.integers(1, 12),     # outputs
+    st.integers(1, 6),      # decay shift
+    st.integers(1, 3),      # steps to chain
+    st.sampled_from([0, 1, 3]),  # prune_after
+)
+def test_lif_matches_ref_chained(seed, b, p, n, decay, steps, prune):
+    rng = np_rng(seed)
+    w = jnp.asarray(rng.integers(-256, 256, (p, n)).astype(np.int32))
+    kw = dict(v_th=int(rng.integers(8, 200)), v_rest=0, decay_shift=decay,
+              acc_bits=24, prune_after=prune)
+    acc_r = acc_k = jnp.zeros((b, n), jnp.int32)
+    cnt_r = cnt_k = jnp.zeros((b, n), jnp.int32)
+    en_r = en_k = jnp.ones((b, n), jnp.int32)
+    for _ in range(steps):
+        spikes = jnp.asarray(rng.integers(0, 2, (b, p)).astype(np.int32))
+        acc_r, cnt_r, en_r, f_r = ref.lif_step(spikes, w, acc_r, cnt_r, en_r, **kw)
+        acc_k, cnt_k, en_k, f_k = pallas_lif_step(spikes, w, acc_k, cnt_k, en_k, **kw)
+        for a, b2, name in [(acc_r, acc_k, "acc"), (cnt_r, cnt_k, "counts"),
+                            (en_r, en_k, "enabled"), (f_r, f_k, "fired")]:
+            assert (np.asarray(a) == np.asarray(b2)).all(), name
+
+
+def test_lif_saturation_clamps():
+    # acc_bits=8 -> rails ±127; an absurd drive must clamp, not wrap.
+    w = jnp.full((4, 2), 255, jnp.int32)
+    spikes = jnp.ones((1, 4), jnp.int32)
+    acc = jnp.zeros((1, 2), jnp.int32)
+    cnt = jnp.zeros((1, 2), jnp.int32)
+    en = jnp.ones((1, 2), jnp.int32)
+    acc2, _, _, _ = pallas_lif_step(spikes, w, acc, cnt, en, v_th=1000, v_rest=0,
+                                    decay_shift=3, acc_bits=8, prune_after=0)
+    # clip(1020, -127, 127) = 127; leak: 127 - 15 = 112.
+    assert int(acc2[0, 0]) == 112
+
+
+def test_lif_pruned_neuron_frozen():
+    w = jnp.full((4, 1), 100, jnp.int32)
+    spikes = jnp.ones((1, 4), jnp.int32)
+    acc = jnp.zeros((1, 1), jnp.int32)
+    cnt = jnp.zeros((1, 1), jnp.int32)
+    en = jnp.ones((1, 1), jnp.int32)
+    kw = dict(v_th=50, v_rest=0, decay_shift=3, acc_bits=24, prune_after=1)
+    acc, cnt, en, fired = pallas_lif_step(spikes, w, acc, cnt, en, **kw)
+    assert int(fired[0, 0]) == 1 and int(en[0, 0]) == 0
+    # Second step: no integration, no new fire, membrane untouched.
+    acc2, cnt2, en2, fired2 = pallas_lif_step(spikes, w, acc, cnt, en, **kw)
+    assert int(fired2[0, 0]) == 0
+    assert int(cnt2[0, 0]) == 1
+    assert int(acc2[0, 0]) == int(acc[0, 0])
+
+
+def test_lif_negative_membrane_decays_toward_zero():
+    w = jnp.full((1, 1), -64, jnp.int32)
+    spikes = jnp.ones((1, 1), jnp.int32)
+    acc = jnp.zeros((1, 1), jnp.int32)
+    cnt = jnp.zeros((1, 1), jnp.int32)
+    en = jnp.ones((1, 1), jnp.int32)
+    kw = dict(v_th=100, v_rest=0, decay_shift=2, acc_bits=24, prune_after=0)
+    acc, cnt, en, _ = pallas_lif_step(spikes, w, acc, cnt, en, **kw)
+    # -64 - (-64>>2) = -64 + 16 = -48
+    assert int(acc[0, 0]) == -48
+    zero = jnp.zeros((1, 1), jnp.int32)
+    acc2, _, _, _ = pallas_lif_step(zero, w, acc, cnt, en, **kw)
+    assert int(acc2[0, 0]) == -36

@@ -1,0 +1,124 @@
+"""L2 tests: scan forward vs the reference loop, the chunked serving
+variant, config semantics, and the ANN baseline shape contract."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def setup_case(b=8, seed=0):
+    rng = np.random.default_rng(seed)
+    images = jnp.asarray(rng.integers(0, 256, (b, 784)).astype(np.int32))
+    seeds = jnp.asarray(rng.integers(0, 2**32, b, dtype=np.uint64).astype(np.uint32))
+    w = jnp.asarray(rng.integers(-64, 64, (784, 10)).astype(np.int32))
+    return images, seeds, w
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+@pytest.mark.parametrize("prune", [0, 5])
+def test_forward_matches_ref(use_pallas, prune):
+    images, seeds, w = setup_case()
+    cfg = M.ModelConfig(timesteps=6, v_th=200, prune_after=prune)
+    counts = M.snn_forward(images, seeds, w, cfg, use_pallas=use_pallas)
+    expect = ref.snn_forward(images, seeds, w, timesteps=6, v_th=200, v_rest=0,
+                             decay_shift=3, acc_bits=24, prune_after=prune)
+    assert (np.asarray(counts) == np.asarray(expect)).all()
+
+
+def test_forward_jits_and_is_deterministic():
+    images, seeds, w = setup_case()
+    cfg = M.ModelConfig(timesteps=5)
+    f = jax.jit(lambda i, s, wt: M.snn_forward(i, s, wt, cfg))
+    a = f(images, seeds, w)
+    b = f(images, seeds, w)
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_chunks_compose_to_full_window():
+    """Running 4 chunks of 5 steps == one 20-step window (the early-exit
+    scheduler's correctness precondition)."""
+    images, seeds, w = setup_case()
+    cfg = M.ModelConfig(timesteps=20, v_th=300)
+    full = M.snn_forward(images, seeds, w, cfg)
+    carry = M.snn_init_carry(images, seeds, cfg)
+    for _ in range(4):
+        carry = M.snn_chunk(images, *carry, w, cfg, chunk_steps=5)
+    _, _, counts, _ = carry
+    assert (np.asarray(counts) == np.asarray(full)).all()
+
+
+def test_packed_chunks_compose_to_full_window():
+    """The packed-carry serving executables (array-in/array-out) must
+    compose to the same counts as the monolithic forward."""
+    images, seeds, w = setup_case()
+    cfg = M.ModelConfig(timesteps=20, v_th=300)
+    full = M.snn_forward(images, seeds, w, cfg)
+    carry = M.snn_init_packed(seeds, cfg, images.shape[1])
+    assert carry.shape == (8, 784 + 3 * 10)
+    assert carry.dtype == jnp.int32
+    for _ in range(4):
+        carry = M.snn_chunk_packed(images, carry, w, cfg, chunk_steps=5)
+    _, _, counts, _ = M.unpack_carry(carry, cfg.n_outputs)
+    assert (np.asarray(counts) == np.asarray(full)).all()
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(3)
+    states = jnp.asarray(rng.integers(1, 2**32, (4, 20), dtype=np.uint64).astype(np.uint32))
+    acc = jnp.asarray(rng.integers(-1000, 1000, (4, 10)).astype(np.int32))
+    counts = jnp.asarray(rng.integers(0, 20, (4, 10)).astype(np.int32))
+    enabled = jnp.asarray(rng.integers(0, 2, (4, 10)).astype(np.int32))
+    s2, a2, c2, e2 = M.unpack_carry(M.pack_carry(states, acc, counts, enabled), 10)
+    for x, y in [(s2, states), (a2, acc), (c2, counts), (e2, enabled)]:
+        assert (np.asarray(x) == np.asarray(y)).all()
+
+
+def test_batch_rows_independent():
+    """Each batch row's result must not depend on its neighbours."""
+    images, seeds, w = setup_case(b=8)
+    cfg = M.ModelConfig(timesteps=4, v_th=250)
+    full = np.asarray(M.snn_forward(images, seeds, w, cfg))
+    for i in [0, 3, 7]:
+        solo = np.asarray(M.snn_forward(images[i:i + 1], seeds[i:i + 1], w, cfg))
+        assert (solo[0] == full[i]).all()
+
+
+def test_counts_bounded_by_prune_and_window():
+    images, seeds, w = setup_case()
+    for prune, bound in [(1, 1), (3, 3), (0, 6)]:
+        cfg = M.ModelConfig(timesteps=6, v_th=64, prune_after=prune)
+        counts = np.asarray(M.snn_forward(images, seeds, w, cfg))
+        assert counts.max() <= bound
+
+
+def test_ann_forward_shapes_and_range():
+    images, _, _ = setup_case(b=4)
+    params = M.ann_init(jax.random.PRNGKey(0))
+    logits = M.ann_forward(images.astype(jnp.float32) / 256.0, *params)
+    assert logits.shape == (4, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_surrogate_forward_counts():
+    images, _, _ = setup_case(b=4)
+    cfg = M.ModelConfig()
+    w = jnp.zeros((784, 10), jnp.float32)
+    counts = M.surrogate_forward(images.astype(jnp.float32) / 256.0, w,
+                                 jax.random.PRNGKey(1), cfg, timesteps=5)
+    assert counts.shape == (4, 10)
+    assert (np.asarray(counts) == 0).all()  # zero weights never cross v_th
+
+
+def test_surrogate_gradient_nonzero():
+    images, _, _ = setup_case(b=4)
+    cfg = M.ModelConfig(v_th=16)
+    labels = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    w = jnp.ones((784, 10), jnp.float32) * 0.05
+    g = jax.grad(M.surrogate_loss)(w, images.astype(jnp.float32) / 256.0,
+                                   labels, jax.random.PRNGKey(0), cfg,
+                                   timesteps=6)
+    assert float(jnp.abs(g).sum()) > 0.0

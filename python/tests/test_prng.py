@@ -1,0 +1,87 @@
+"""Cross-language PRNG contract tests.
+
+The golden values here are identical to those asserted in
+rust/src/prng/mod.rs — together they pin the bit-exact contract.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.prng import (GOLDEN_GAMMA, M32, Xorshift32, derive_state,
+                          pixel_seed, pixel_seeds_np, splitmix32,
+                          splitmix32_np, xorshift32_step, xorshift32_step_np)
+
+
+def test_xorshift32_golden():
+    r = Xorshift32.from_raw_state(1)
+    got = [r.next_u32() for _ in range(6)]
+    assert got == [270369, 67634689, 2647435461, 307599695, 2398689233, 745495504]
+
+
+def test_xorshift32_golden_large_seed():
+    r = Xorshift32.from_raw_state(0xDEADBEEF)
+    got = [r.next_u32() for _ in range(4)]
+    assert got == [1199382711, 2384302402, 3129746520, 4276113467]
+
+
+def test_splitmix32_golden():
+    assert splitmix32(0) == 2462723854
+    assert splitmix32(1) == 2527132011
+    assert splitmix32(0xDEADBEEF) == 3553530007
+    assert splitmix32(0xFFFFFFFF) == 920564995
+
+
+def test_pixel_seed_never_zero():
+    for seed in [0, 1, 42, 0xFFFFFFFF]:
+        for i in range(2048):
+            assert pixel_seed(seed, i) != 0
+
+
+@given(st.integers(0, M32), st.integers(0, 10_000))
+@settings(max_examples=200, deadline=None)
+def test_vectorized_pixel_seeds_match_scalar(seed, n_probe):
+    n = (n_probe % 64) + 1
+    vec = pixel_seeds_np(seed, n)
+    for i in range(n):
+        assert int(vec[i]) == pixel_seed(seed, i)
+
+
+@given(st.integers(1, M32))
+@settings(max_examples=300, deadline=None)
+def test_vectorized_xorshift_matches_scalar(state):
+    vec = xorshift32_step_np(np.array([state], np.uint32))
+    assert int(vec[0]) == xorshift32_step(state)
+
+
+@given(st.integers(0, M32))
+@settings(max_examples=300, deadline=None)
+def test_vectorized_splitmix_matches_scalar(x):
+    vec = splitmix32_np(np.array([x], np.uint32))
+    assert int(vec[0]) == splitmix32(x)
+
+
+@given(st.integers(0, M32), st.integers(1, 1000))
+@settings(max_examples=100, deadline=None)
+def test_below_in_range(seed, bound):
+    r = Xorshift32(seed)
+    for _ in range(20):
+        assert 0 <= r.below(bound) < bound
+
+
+def test_derive_state_domain_separation():
+    # Different (a, b) pairs must give different streams.
+    states = {derive_state(7, a, b) for a in range(10) for b in range(50)}
+    assert len(states) == 500
+
+
+def test_low_byte_uniformity():
+    r = Xorshift32(2024)
+    counts = np.zeros(256, np.int64)
+    n = 1 << 16
+    for _ in range(n):
+        counts[r.next_u32() & 0xFF] += 1
+    expect = n / 256
+    chi2 = float(((counts - expect) ** 2 / expect).sum())
+    assert chi2 < 400.0, f"chi2 {chi2}"

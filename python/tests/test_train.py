@@ -1,0 +1,63 @@
+"""Training smoke tests (small budgets; the real run happens in aot.py)."""
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+from compile.dataset import build_dataset
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    return build_dataset(11, 12)  # 120 samples
+
+
+def test_rate_proxy_learns(tiny_data):
+    images, labels = tiny_data
+    logs = []
+    w = T.train_rate_proxy(images, labels, steps=120, log=logs.append)
+    import jax.numpy as jnp
+    x = jnp.asarray(images, jnp.float32) / 256.0
+    acc = float((jnp.argmax(M.rate_proxy_logits(x, jnp.asarray(w)), 1)
+                 == jnp.asarray(labels)).mean())
+    assert acc > 0.9, f"rate proxy failed to fit tiny set: {acc}"
+
+
+def test_centre_and_quantize_properties(tiny_data):
+    images, labels = tiny_data
+    w = T.train_rate_proxy(images, labels, steps=60, log=lambda *_: None)
+    q = T.centre_and_quantize(w, bits=9, images=images, labels=labels)
+    assert q.dtype == np.int32
+    assert q.min() >= -256 and q.max() <= 255
+    # Centring: rows sum ~0 before scaling; quantized rows stay near 0.
+    assert abs(q.sum(axis=1)).mean() <= 5
+
+
+def test_calibrate_returns_candidate(tiny_data):
+    images, labels = tiny_data
+    w = T.train_rate_proxy(images, labels, steps=60, log=lambda *_: None)
+    q = T.centre_and_quantize(w, bits=9, images=images, labels=labels)
+    cfg = M.ModelConfig()
+    vth, prune, scores = T.calibrate(
+        q, images[:50], labels[:50], cfg, vth_candidates=(128, 320),
+        prune_candidates=(1, 5), log=lambda *_: None)
+    assert vth in (128, 320)
+    assert prune in (1, 5)
+    assert len(scores) == 4
+
+
+def test_ann_learns(tiny_data):
+    images, labels = tiny_data
+    params = T.train_ann(images, labels, steps=150, log=lambda *_: None)
+    acc = T.evaluate_ann(params, images, labels)
+    assert acc > 0.9
+
+
+def test_surrogate_runs(tiny_data):
+    images, labels = tiny_data
+    cfg = M.ModelConfig(v_th=64)
+    w = T.train_surrogate(images[:64], labels[:64], cfg, epochs=2, batch=32,
+                          timesteps=4, log=lambda *_: None)
+    assert w.shape == (784, 10)
+    assert np.isfinite(w).all()

@@ -1,0 +1,96 @@
+//! Backend latency/throughput comparison: behavioral golden model vs the
+//! AOT-compiled JAX/Pallas stack (PJRT) across batch sizes, plus the
+//! encoder and the baseline ANN. Skips the XLA rows when artifacts are
+//! absent.
+
+use snn_rtl::bench::{black_box, csv_header, Bench, BenchResult};
+use snn_rtl::data::{codec, DigitGen, Image};
+use snn_rtl::runtime::{Manifest, XlaSnn};
+use snn_rtl::snn::{BehavioralNet, PoissonEncoder};
+
+fn main() {
+    let bench = Bench::default();
+    let mut results: Vec<BenchResult> = Vec::new();
+    let gen = DigitGen::new(2);
+    let images: Vec<Image> = (0..32).map(|i| gen.sample((i % 10) as u8, i / 10)).collect();
+
+    // Encoder alone (the per-timestep hot loop's front half).
+    {
+        let mut enc = PoissonEncoder::new(&images[0], 7);
+        let mut out = vec![false; 784];
+        let r = bench.run("encoder_step_784px", || {
+            enc.step_into(black_box(&mut out));
+        });
+        println!("{}  |  {:.1}M pixel-steps/s", r.report(), r.throughput(784.0) / 1e6);
+        results.push(r);
+    }
+
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("artifacts not built; skipping model benches");
+        write_csv("backends", &results);
+        return;
+    };
+    let weights = codec::load_weights(manifest.path("weights.bin")).unwrap();
+    let cfg = manifest.snn_config().unwrap();
+
+    // Behavioral model, single image, T=10 and T=20.
+    for t in [10u32, 20] {
+        let net = BehavioralNet::new(cfg.clone().with_timesteps(t), weights.weights.clone())
+            .unwrap();
+        let mut seed = 0u32;
+        let r = bench.run(&format!("behavioral_classify_t{t}"), || {
+            seed = seed.wrapping_add(1);
+            black_box(net.classify(&images[(seed % 32) as usize], seed));
+        });
+        println!("{}  |  {:.0} images/s", r.report(), r.throughput(1.0));
+        results.push(r);
+    }
+
+    // XLA stack at each compiled batch size.
+    match XlaSnn::load("artifacts") {
+        Ok(snn) => {
+            for &b in &snn.batch_sizes() {
+                let refs: Vec<&Image> = images.iter().take(b).collect();
+                let seeds: Vec<u32> = (0..b as u32).map(|i| i + 1).collect();
+                let r = bench.run(&format!("xla_forward_b{b}_t{}", cfg.timesteps), || {
+                    black_box(snn.spike_counts(&refs, &seeds).unwrap());
+                });
+                println!("{}  |  {:.0} images/s", r.report(), r.throughput(b as f64));
+                results.push(r);
+            }
+            // Chunked path (one chunk).
+            let b = snn.chunk_batch();
+            let refs: Vec<&Image> = images.iter().take(b).collect();
+            let seeds: Vec<u32> = (0..b as u32).map(|i| i + 1).collect();
+            let r = bench.run(&format!("xla_chunk_b{b}_k{}", snn.chunk_steps()), || {
+                let mut st = snn.chunk_start(&refs, &seeds).unwrap();
+                black_box(snn.chunk_advance(&mut st).unwrap());
+            });
+            println!("{}", r.report());
+            results.push(r);
+            // Baseline ANN.
+            let refs: Vec<&Image> = images.iter().take(32).collect();
+            let r = bench.run("xla_ann_b32", || {
+                black_box(snn.ann_logits(&refs).unwrap());
+            });
+            println!("{}  |  {:.0} images/s", r.report(), r.throughput(32.0));
+            results.push(r);
+        }
+        Err(e) => eprintln!("XLA backend unavailable: {e}"),
+    }
+
+    write_csv("backends", &results);
+}
+
+fn write_csv(name: &str, results: &[BenchResult]) {
+    std::fs::create_dir_all("results").ok();
+    let mut body = String::from(csv_header());
+    body.push('\n');
+    for r in results {
+        body.push_str(&r.csv_row());
+        body.push('\n');
+    }
+    let path = format!("results/bench_{name}.csv");
+    std::fs::write(&path, body).ok();
+    println!("-> {path}");
+}

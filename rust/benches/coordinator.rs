@@ -1,0 +1,124 @@
+//! End-to-end coordinator benchmark: request throughput and latency under
+//! closed-loop load across worker counts, batch policies and early-exit
+//! settings — the L3 perf target of DESIGN.md §10.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use snn_rtl::coordinator::{
+    BatchPolicy, BehavioralBackend, Coordinator, CoordinatorConfig, Request,
+};
+use snn_rtl::data::{codec, DigitGen, Image};
+use snn_rtl::runtime::Manifest;
+use snn_rtl::snn::EarlyExit;
+
+struct Row {
+    name: String,
+    qps: f64,
+    p50_us: u64,
+    p95_us: u64,
+    mean_batch: f64,
+    steps_per_req: f64,
+}
+
+fn drive(name: &str, coord: &Coordinator, images: &[Image], requests: usize) -> Row {
+    let handle = coord.handle();
+    let t0 = Instant::now();
+    let mut receivers = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let img = images[i % images.len()].clone();
+        loop {
+            match handle.submit(Request { image: img.clone(), seed: Some(i as u32 + 1) }) {
+                Ok(rx) => {
+                    receivers.push(rx);
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_micros(100)),
+            }
+        }
+    }
+    for rx in receivers {
+        rx.recv().unwrap().unwrap();
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics().snapshot();
+    Row {
+        name: name.to_string(),
+        qps: requests as f64 / wall.as_secs_f64(),
+        p50_us: snap.latency_p50_us,
+        p95_us: snap.latency_p95_us,
+        mean_batch: snap.mean_batch_size,
+        steps_per_req: snap.steps_executed as f64 / requests as f64,
+    }
+}
+
+fn main() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("artifacts not built; skipping coordinator bench");
+        return;
+    };
+    let weights = codec::load_weights(manifest.path("weights.bin")).unwrap();
+    let cfg = manifest.snn_config().unwrap().with_timesteps(10);
+    let gen = DigitGen::new(2);
+    let images: Vec<Image> = (0..64).map(|i| gen.sample((i % 10) as u8, i / 10)).collect();
+    let requests = 4000usize;
+    let mut rows = Vec::new();
+
+    for workers in [1usize, 2, 4] {
+        for max_batch in [1usize, 8] {
+            let backend = Arc::new(
+                BehavioralBackend::new(cfg.clone(), weights.weights.clone()).unwrap(),
+            );
+            let coord = Coordinator::start(
+                backend,
+                CoordinatorConfig {
+                    workers,
+                    queue_depth: 2048,
+                    batch: BatchPolicy { max_batch, max_delay: Duration::from_micros(500) },
+                    early: EarlyExit::Off,
+                },
+            );
+            let name = format!("behavioral_w{workers}_b{max_batch}");
+            let row = drive(&name, &coord, &images, requests);
+            coord.shutdown();
+            println!(
+                "{:<28} {:>9.0} req/s  p50 {:>6} µs  p95 {:>6} µs  batch {:>5.2}  steps/req {:>5.1}",
+                row.name, row.qps, row.p50_us, row.p95_us, row.mean_batch, row.steps_per_req
+            );
+            rows.push(row);
+        }
+    }
+
+    // Early exit on the behavioral backend.
+    {
+        let backend =
+            Arc::new(BehavioralBackend::new(cfg.clone(), weights.weights.clone()).unwrap());
+        let coord = Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                workers: 2,
+                queue_depth: 2048,
+                batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_micros(500) },
+                early: EarlyExit::Margin { margin: 2, min_steps: 3 },
+            },
+        );
+        let row = drive("behavioral_early_exit", &coord, &images, requests);
+        coord.shutdown();
+        println!(
+            "{:<28} {:>9.0} req/s  p50 {:>6} µs  p95 {:>6} µs  batch {:>5.2}  steps/req {:>5.1}",
+            row.name, row.qps, row.p50_us, row.p95_us, row.mean_batch, row.steps_per_req
+        );
+        rows.push(row);
+    }
+
+    std::fs::create_dir_all("results").ok();
+    let mut body = String::from("name,qps,p50_us,p95_us,mean_batch,steps_per_req\n");
+    for r in &rows {
+        body.push_str(&format!(
+            "{},{:.0},{},{},{:.2},{:.2}\n",
+            r.name, r.qps, r.p50_us, r.p95_us, r.mean_batch, r.steps_per_req
+        ));
+    }
+    std::fs::write("results/bench_coordinator.csv", body).ok();
+    println!("-> results/bench_coordinator.csv");
+}

@@ -1,0 +1,50 @@
+//! "One bench per paper table/figure": regenerates every table and figure
+//! of the paper's evaluation through the experiment harnesses and times
+//! each regeneration. `cargo bench` therefore reproduces the entire
+//! evaluation section in one command (rows go to stdout + results/*.csv).
+
+use std::time::Instant;
+
+use snn_rtl::experiments::{self, Ctx};
+
+fn main() {
+    let ctx = match Ctx::load("artifacts", "results") {
+        Ok(mut ctx) => {
+            // Bench profile: a balanced 1000-sample slice keeps the full
+            // suite under a couple of minutes; `snn-rtl experiment all`
+            // runs the full test set.
+            ctx.samples = Some(1000);
+            ctx
+        }
+        Err(e) => {
+            eprintln!("artifacts not built ({e}); skipping paper-table bench");
+            return;
+        }
+    };
+
+    let suite = [
+        "table1",
+        "fig4",
+        "fig5",
+        "fig6",
+        "fig7",
+        "table2",
+        "fig8",
+        "ablation-pruning",
+        "ablation-decay",
+        "ablation-modes",
+        "ablation-width",
+    ];
+    let mut timings = Vec::new();
+    for id in suite {
+        println!("\n================ {id} ================");
+        let t0 = Instant::now();
+        experiments::run(id, &ctx).unwrap_or_else(|e| panic!("experiment {id} failed: {e}"));
+        let dt = t0.elapsed();
+        timings.push((id, dt));
+    }
+    println!("\n=== regeneration timings ===");
+    for (id, dt) in &timings {
+        println!("{id:<20} {dt:?}");
+    }
+}

@@ -1,0 +1,85 @@
+//! Benchmarks of the cycle-accurate RTL simulator: simulated cycles per
+//! wall-second (the simulator's own throughput), per-window latency, and
+//! the cost split across FSM phases.
+
+use snn_rtl::bench::{black_box, csv_header, Bench, BenchResult};
+use snn_rtl::data::DigitGen;
+use snn_rtl::fixed::WeightMatrix;
+use snn_rtl::prng::Xorshift32;
+use snn_rtl::rtl::RtlCore;
+use snn_rtl::SnnConfig;
+
+fn weights(seed: u32) -> WeightMatrix {
+    let mut rng = Xorshift32::new(seed);
+    WeightMatrix::from_rows(784, 10, 9, (0..7840).map(|_| rng.range_i32(-30, 60)).collect())
+        .unwrap()
+}
+
+fn main() {
+    let bench = Bench::default();
+    let gen = DigitGen::new(1);
+    let img = gen.sample(3, 0);
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // Full-window inference at the paper's configuration.
+    for t in [1u32, 10, 20] {
+        let cfg = SnnConfig::paper().with_timesteps(t);
+        let mut core = RtlCore::new(cfg, weights(7)).unwrap();
+        let mut seed = 1u32;
+        let r = bench.run(&format!("rtl_window_t{t}"), || {
+            seed = seed.wrapping_add(1);
+            black_box(core.run(&img, seed).unwrap());
+        });
+        let cycles_per_window = 786.0 * f64::from(t);
+        println!(
+            "{}  |  {:.1}M simulated cycles/s",
+            r.report(),
+            r.throughput(cycles_per_window) / 1e6
+        );
+        results.push(r);
+    }
+
+    // Sparse vs dense input (event-driven gating at work).
+    for (name, intensity) in [("black", 0u8), ("mid", 128), ("bright", 255)] {
+        let cfg = SnnConfig::paper().with_timesteps(10);
+        let mut core = RtlCore::new(cfg, weights(7)).unwrap();
+        let flat = snn_rtl::data::Image { label: 0, pixels: vec![intensity; 784] };
+        let mut seed = 1u32;
+        let r = bench.run(&format!("rtl_input_{name}"), || {
+            seed = seed.wrapping_add(1);
+            black_box(core.run(&flat, seed).unwrap());
+        });
+        println!("{}", r.report());
+        results.push(r);
+    }
+
+    // Immediate fire mode (extra comparator work per integrate cycle).
+    {
+        let cfg = SnnConfig::paper()
+            .with_timesteps(10)
+            .with_fire_mode(snn_rtl::config::FireMode::Immediate);
+        let mut core = RtlCore::new(cfg, weights(7)).unwrap();
+        let mut seed = 1u32;
+        let r = bench.run("rtl_immediate_mode_t10", || {
+            seed = seed.wrapping_add(1);
+            black_box(core.run(&img, seed).unwrap());
+        });
+        println!("{}", r.report());
+        results.push(r);
+    }
+
+    write_csv("rtl_core", &results);
+}
+
+fn write_csv(name: &str, results: &[BenchResult]) {
+    std::fs::create_dir_all("results").ok();
+    let mut body = String::from(csv_header());
+    body.push('\n');
+    for r in results {
+        body.push_str(&r.csv_row());
+        body.push('\n');
+    }
+    let path = format!("results/bench_{name}.csv");
+    std::fs::write(&path, body).ok();
+    println!("-> {path}");
+}

@@ -1,0 +1,110 @@
+//! ESP32 deployment cost model (the paper's §V-C latency substitution).
+//!
+//! The paper measured its baseline ANN on an ESP32 and reports ~3 s
+//! without DSP optimization and 5130 µs with it. We reproduce those rows
+//! with a documented cycles-per-operation model of the 240 MHz Xtensa LX6:
+//!
+//! * **Software floats** (no FPU use, `-mno-fp`, double-promotion traps —
+//!   the pathological path the paper's 3 s implies): an f32 MAC through
+//!   the soft-float library costs on the order of ~10⁴ cycles once the
+//!   surrounding interpreter/framework overhead (TFLM reference kernels,
+//!   im2col copies, quant/dequant) is charged per op, which is how a
+//!   ~25 k-MAC network lands at seconds.
+//! * **DSP/FPU path** (ESP-NN / esp-dsp optimized kernels): ~48 cycles per
+//!   MAC effective, including loads — giving 25,408 MACs ≈ 5.1 ms at
+//!   240 MHz, the paper's 5130 µs row.
+//!
+//! Both constants are *calibrated to the paper's own measurements* (the
+//! paper reports latencies, not mechanisms); the model's value is that the
+//! same op-count input reproduces both rows and scales to other
+//! topologies, making the Table II comparison auditable.
+
+use super::AnnOpCounts;
+
+/// Cost model for ANN inference on an ESP32-class MCU.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Esp32Model {
+    /// Core clock in Hz (ESP32: 240 MHz).
+    pub f_clk_hz: f64,
+    /// Effective cycles per f32 MAC on the unoptimized path.
+    pub cycles_per_mac_soft: f64,
+    /// Effective cycles per f32 MAC on the DSP-optimized path.
+    pub cycles_per_mac_dsp: f64,
+    /// Fixed per-inference overhead cycles (buffer setup, activation
+    /// copies), charged on both paths.
+    pub overhead_cycles: f64,
+    /// Active power draw in milliwatts (datasheet: ~160 mA @ 3.3 V under
+    /// full CPU load ≈ 530 mW; we charge the CPU-core share).
+    pub active_power_mw: f64,
+}
+
+impl Default for Esp32Model {
+    fn default() -> Self {
+        Esp32Model {
+            f_clk_hz: 240.0e6,
+            cycles_per_mac_soft: 28_000.0, // calibrated: 25,408 MACs -> ~3.0 s
+            cycles_per_mac_dsp: 48.0,      // calibrated: 25,408 MACs -> ~5.1 ms
+            overhead_cycles: 10_000.0,
+            active_power_mw: 300.0,
+        }
+    }
+}
+
+/// Evaluated deployment estimate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Esp32Report {
+    /// Latency without DSP optimization, in microseconds.
+    pub latency_soft_us: f64,
+    /// Latency with DSP optimization, in microseconds.
+    pub latency_dsp_us: f64,
+    /// Energy per inference on the DSP path, in microjoules.
+    pub energy_dsp_uj: f64,
+    /// Energy per inference on the soft path, in microjoules.
+    pub energy_soft_uj: f64,
+}
+
+impl Esp32Model {
+    /// Evaluate the model for a network's op counts.
+    pub fn evaluate(&self, ops: &AnnOpCounts) -> Esp32Report {
+        let macs = ops.multiplications as f64;
+        let soft_s = (macs * self.cycles_per_mac_soft + self.overhead_cycles) / self.f_clk_hz;
+        let dsp_s = (macs * self.cycles_per_mac_dsp + self.overhead_cycles) / self.f_clk_hz;
+        Esp32Report {
+            latency_soft_us: soft_s * 1e6,
+            latency_dsp_us: dsp_s * 1e6,
+            energy_soft_uj: soft_s * self.active_power_mw * 1e3,
+            energy_dsp_uj: dsp_s * self.active_power_mw * 1e3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_paper_latency_rows() {
+        let ops = AnnOpCounts::for_topology(784, 32, 10);
+        let r = Esp32Model::default().evaluate(&ops);
+        // Paper: "nearly 3 seconds" without DSP.
+        assert!((r.latency_soft_us / 1e6 - 3.0).abs() < 0.05, "{}", r.latency_soft_us);
+        // Paper: "5130 µs" with DSP.
+        assert!((r.latency_dsp_us - 5130.0).abs() / 5130.0 < 0.05, "{}", r.latency_dsp_us);
+    }
+
+    #[test]
+    fn latency_scales_with_topology() {
+        let m = Esp32Model::default();
+        let small = m.evaluate(&AnnOpCounts::for_topology(784, 16, 10));
+        let big = m.evaluate(&AnnOpCounts::for_topology(784, 64, 10));
+        assert!(big.latency_dsp_us > small.latency_dsp_us * 3.0);
+    }
+
+    #[test]
+    fn energy_consistent_with_latency() {
+        let ops = AnnOpCounts::for_topology(784, 32, 10);
+        let r = Esp32Model::default().evaluate(&ops);
+        // E = P·t: 300 mW × 5.13 ms ≈ 1.54 mJ.
+        assert!((r.energy_dsp_uj - r.latency_dsp_us * 0.3).abs() < 1.0);
+    }
+}

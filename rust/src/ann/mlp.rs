@@ -1,0 +1,205 @@
+//! Pure-Rust f32 MLP forward (the comparator the paper deployed on the
+//! ESP32) + exact op accounting.
+
+use std::path::Path;
+
+use crate::data::Image;
+use crate::error::{Error, Result};
+
+/// Exact operation counts for one dense-MLP inference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AnnOpCounts {
+    /// f32 multiplications (the MAC multiplies).
+    pub multiplications: u64,
+    /// f32 additions (MAC accumulates + bias adds).
+    pub additions: u64,
+    /// Weight + bias storage in bytes at f32.
+    pub model_bytes: u64,
+}
+
+impl AnnOpCounts {
+    /// Counts for a `n_in → n_hidden → n_out` dense MLP.
+    pub fn for_topology(n_in: u64, n_hidden: u64, n_out: u64) -> Self {
+        let macs = n_in * n_hidden + n_hidden * n_out;
+        AnnOpCounts {
+            multiplications: macs,
+            additions: macs + n_hidden + n_out, // + bias adds
+            model_bytes: 4 * (n_in * n_hidden + n_hidden + n_hidden * n_out + n_out),
+        }
+    }
+}
+
+/// The baseline MLP with trained weights (loaded from `ann_weights.bin`,
+/// SNNA format written by the python build path).
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub n_in: usize,
+    pub n_hidden: usize,
+    pub n_out: usize,
+    /// Row-major `[n_in][n_hidden]`.
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    /// Row-major `[n_hidden][n_out]`.
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+impl Mlp {
+    /// Load from an SNNA artifact.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let buf = std::fs::read(path).map_err(|e| Error::io(path, e))?;
+        if buf.len() < 20 || &buf[..4] != b"SNNA" {
+            return Err(Error::malformed(path, "bad magic (want SNNA)"));
+        }
+        let rd = |at: usize| u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()) as usize;
+        if rd(4) != 1 {
+            return Err(Error::malformed(path, "unsupported version"));
+        }
+        let (n_in, n_hidden, n_out) = (rd(8), rd(12), rd(16));
+        let need = 20 + 4 * (n_in * n_hidden + n_hidden + n_hidden * n_out + n_out);
+        if buf.len() != need {
+            return Err(Error::malformed(path, format!("size {} != {need}", buf.len())));
+        }
+        let mut pos = 20usize;
+        let mut take = |count: usize| -> Vec<f32> {
+            let v = buf[pos..pos + count * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            pos += count * 4;
+            v
+        };
+        Ok(Mlp {
+            w1: take(n_in * n_hidden),
+            b1: take(n_hidden),
+            w2: take(n_hidden * n_out),
+            b2: take(n_out),
+            n_in,
+            n_hidden,
+            n_out,
+        })
+    }
+
+    /// Synthetic weights for tests.
+    pub fn zeros(n_in: usize, n_hidden: usize, n_out: usize) -> Self {
+        Mlp {
+            w1: vec![0.0; n_in * n_hidden],
+            b1: vec![0.0; n_hidden],
+            w2: vec![0.0; n_hidden * n_out],
+            b2: vec![0.0; n_out],
+            n_in,
+            n_hidden,
+            n_out,
+        }
+    }
+
+    /// Forward one image (intensities scaled by 1/256 as in training).
+    pub fn logits(&self, img: &Image) -> Vec<f32> {
+        assert_eq!(img.pixels.len(), self.n_in);
+        let mut hidden = self.b1.clone();
+        for (i, &px) in img.pixels.iter().enumerate() {
+            if px == 0 {
+                continue; // exact zero contributes nothing
+            }
+            let x = f32::from(px) / 256.0;
+            let row = &self.w1[i * self.n_hidden..(i + 1) * self.n_hidden];
+            for (h, &w) in hidden.iter_mut().zip(row) {
+                *h += x * w;
+            }
+        }
+        for h in &mut hidden {
+            *h = h.max(0.0); // relu
+        }
+        let mut out = self.b2.clone();
+        for (j, &h) in hidden.iter().enumerate() {
+            if h == 0.0 {
+                continue;
+            }
+            let row = &self.w2[j * self.n_out..(j + 1) * self.n_out];
+            for (o, &w) in out.iter_mut().zip(row) {
+                *o += h * w;
+            }
+        }
+        out
+    }
+
+    /// Classify one image.
+    pub fn classify(&self, img: &Image) -> u8 {
+        let logits = self.logits(img);
+        let mut best = 0usize;
+        for (i, &l) in logits.iter().enumerate() {
+            if l > logits[best] {
+                best = i;
+            }
+        }
+        best as u8
+    }
+
+    /// Op counts for this topology.
+    pub fn op_counts(&self) -> AnnOpCounts {
+        AnnOpCounts::for_topology(self.n_in as u64, self.n_hidden as u64, self.n_out as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::IMG_PIXELS;
+
+    #[test]
+    fn zero_mlp_outputs_bias() {
+        let mut m = Mlp::zeros(IMG_PIXELS, 32, 10);
+        m.b2 = (0..10).map(|i| i as f32).collect();
+        let img = Image { label: 0, pixels: vec![100; IMG_PIXELS] };
+        assert_eq!(m.logits(&img), m.b2);
+        assert_eq!(m.classify(&img), 9);
+    }
+
+    #[test]
+    fn hand_computed_forward() {
+        // 784-1-2 with only two active pixels: h = relu(x0·w + x1·w' + b1),
+        // logits = [3h, -3h + 1].
+        let mut m = Mlp::zeros(IMG_PIXELS, 1, 2);
+        m.w1[0] = 1.0; // pixel 0 -> hidden 0
+        m.w1[1] = 2.0; // pixel 1 -> hidden 0
+        m.b1 = vec![0.5];
+        m.w2 = vec![3.0, -3.0];
+        m.b2 = vec![0.0, 1.0];
+        let mut pixels = vec![0u8; IMG_PIXELS];
+        pixels[0] = 128;
+        pixels[1] = 64;
+        let img = Image { label: 0, pixels };
+        let logits = m.logits(&img);
+        let h = 128.0f32 / 256.0 * 1.0 + 64.0 / 256.0 * 2.0 + 0.5; // = 1.5
+        assert!((logits[0] - h * 3.0).abs() < 1e-6, "{logits:?}");
+        assert!((logits[1] - (h * -3.0 + 1.0)).abs() < 1e-6, "{logits:?}");
+        assert_eq!(m.classify(&img), 0);
+    }
+
+    #[test]
+    fn relu_gates_hidden() {
+        let mut m = Mlp::zeros(IMG_PIXELS, 2, 2);
+        // hidden0 gets a negative preactivation, hidden1 positive.
+        for i in 0..IMG_PIXELS {
+            m.w1[i * 2] = -1.0;
+            m.w1[i * 2 + 1] = 1.0;
+        }
+        m.w2 = vec![10.0, 0.0, 0.0, 10.0];
+        let img = Image { label: 0, pixels: vec![128; IMG_PIXELS] };
+        let logits = m.logits(&img);
+        assert_eq!(logits[0], 0.0, "relu must zero the negative hidden unit");
+        assert!(logits[1] > 0.0);
+    }
+
+    #[test]
+    fn loader_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("snn_ann_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(Mlp::load(&p).is_err());
+        std::fs::write(&p, b"SNNA\x01\x00\x00\x00").unwrap();
+        assert!(Mlp::load(&p).is_err());
+    }
+}

@@ -1,0 +1,30 @@
+//! Baseline ANN (paper §V): the 784-32-10 f32 MLP whose op counts and
+//! memory footprint the paper's Table II is built from, plus the ESP32
+//! deployment cost model that reproduces the latency rows.
+//!
+//! The identification of the baseline comes from the paper's own numbers:
+//! 25,408 multiplies = 784·32 + 32·10 and 99.4 KB = (784·32+32 +
+//! 32·10+10)·4 B — exactly a 784-32-10 f32 MLP (DESIGN.md §1).
+
+mod esp32;
+mod mlp;
+
+pub use esp32::{Esp32Model, Esp32Report};
+pub use mlp::{AnnOpCounts, Mlp};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Table II arithmetic, reproduced exactly.
+    #[test]
+    fn table2_op_counts() {
+        let counts = AnnOpCounts::for_topology(784, 32, 10);
+        assert_eq!(counts.multiplications, 25_408);
+        // Paper: "approximately ... 25,450 additions" = MACs + biases.
+        assert_eq!(counts.additions, 25_408 + 42);
+        // Paper: "approximately 99.4 KB".
+        let kb = counts.model_bytes as f64 / 1024.0;
+        assert!((kb - 99.4).abs() < 0.1, "model size {kb} KB");
+    }
+}

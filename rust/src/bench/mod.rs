@@ -1,0 +1,162 @@
+//! Minimal benchmarking harness (criterion is not in the offline crate
+//! set). Provides warmup + timed iterations with p50/p95/mean reporting
+//! and a derived-throughput helper; used by `benches/*.rs`
+//! (`harness = false`) and the perf pass.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's results.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+}
+
+impl BenchResult {
+    /// Events/second given `events` per iteration.
+    pub fn throughput(&self, events_per_iter: f64) -> f64 {
+        events_per_iter / (self.mean_ns / 1e9)
+    }
+
+    /// One-line human report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<34} {:>10.1} ns/iter  p50 {:>9} ns  p95 {:>9} ns  ({} iters)",
+            self.name, self.mean_ns, self.p50_ns, self.p95_ns, self.iters
+        )
+    }
+
+    /// CSV row (matches [`csv_header`]).
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{:.1},{},{},{},{}",
+            self.name, self.iters, self.mean_ns, self.p50_ns, self.p95_ns, self.min_ns,
+            self.max_ns
+        )
+    }
+}
+
+/// Header for [`BenchResult::csv_row`].
+pub fn csv_header() -> &'static str {
+    "name,iters,mean_ns,p50_ns,p95_ns,min_ns,max_ns"
+}
+
+/// Benchmark runner with a time budget per benchmark.
+pub struct Bench {
+    warmup: Duration,
+    budget: Duration,
+    max_iters: u32,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: Duration, budget: Duration, max_iters: u32) -> Self {
+        Bench { warmup, budget, max_iters }
+    }
+
+    /// Quick profile for CI-ish runs.
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(400),
+            max_iters: 2_000,
+        }
+    }
+
+    /// Run `f` repeatedly, timing each call.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Timed.
+        let mut samples_ns: Vec<u64> = Vec::new();
+        let b0 = Instant::now();
+        while b0.elapsed() < self.budget && samples_ns.len() < self.max_iters as usize {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos().min(u128::from(u64::MAX)) as u64);
+        }
+        samples_ns.sort_unstable();
+        let n = samples_ns.len().max(1);
+        let sum: u128 = samples_ns.iter().map(|&s| u128::from(s)).sum();
+        BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len() as u32,
+            mean_ns: sum as f64 / n as f64,
+            p50_ns: samples_ns.get(n / 2).copied().unwrap_or(0),
+            p95_ns: samples_ns.get(n * 95 / 100).copied().unwrap_or(0),
+            min_ns: samples_ns.first().copied().unwrap_or(0),
+            max_ns: samples_ns.last().copied().unwrap_or(0),
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_plausible() {
+        let b = Bench::new(Duration::from_millis(5), Duration::from_millis(50), 1000);
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..1000u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        assert!(r.iters > 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns);
+        assert!(r.min_ns <= r.p50_ns && r.p95_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn throughput_derivation() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 10,
+            mean_ns: 1e6, // 1 ms per iter
+            p50_ns: 0,
+            p95_ns: 0,
+            min_ns: 0,
+            max_ns: 0,
+        };
+        assert!((r.throughput(100.0) - 100_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn csv_row_matches_header_arity() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1.0,
+            p50_ns: 1,
+            p95_ns: 1,
+            min_ns: 1,
+            max_ns: 1,
+        };
+        assert_eq!(r.csv_row().split(',').count(), csv_header().split(',').count());
+    }
+}

@@ -1,0 +1,145 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed accessors and an unknown-flag check — the slice of clap this
+//! binary needs.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed arguments: positionals in order + flag map.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    /// Flags that were consumed by typed accessors (unknown-flag check).
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` ends flag parsing.
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    /// String flag with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string flag.
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    /// Boolean flag (present or `--key true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1"))
+    }
+
+    /// Typed numeric flag with default.
+    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::InvalidConfig(format!("--{key}: cannot parse {v:?}"))
+            }),
+        }
+    }
+
+    /// Error on any flag that no accessor consumed (catch typos).
+    pub fn check_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|s| s == k) {
+                return Err(Error::InvalidConfig(format!("unknown flag --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["experiment", "fig5", "--timesteps", "10", "--quick", "--k=v"]);
+        assert_eq!(a.positional, vec!["experiment", "fig5"]);
+        assert_eq!(a.num_or("timesteps", 0u32).unwrap(), 10);
+        assert!(a.flag("quick"));
+        assert_eq!(a.str_or("k", ""), "v");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["cmd"]);
+        assert_eq!(a.num_or("n", 7i32).unwrap(), 7);
+        assert_eq!(a.str_or("s", "d"), "d");
+        assert!(!a.flag("quick"));
+        assert!(a.str_opt("missing").is_none());
+    }
+
+    #[test]
+    fn bad_number_reports_flag() {
+        let a = parse(&["--n", "abc"]);
+        let err = a.num_or("n", 0u32).unwrap_err().to_string();
+        assert!(err.contains("--n"), "{err}");
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse(&["--typo", "1"]);
+        let _ = a.num_or("ok", 0u32);
+        assert!(a.check_unknown().is_err());
+        let b = parse(&["--known", "1"]);
+        let _ = b.num_or("known", 0u32);
+        assert!(b.check_unknown().is_ok());
+    }
+
+    #[test]
+    fn double_dash_ends_flags() {
+        let a = parse(&["--a", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.num_or("a", 0u32).unwrap(), 1);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+}

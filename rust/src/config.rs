@@ -1,0 +1,302 @@
+//! Network and core configuration shared by every backend.
+//!
+//! A single [`SnnConfig`] value describes the architectural parameters of
+//! the paper's core (topology, fixed-point geometry, LIF constants, firing
+//! and pruning policy). The behavioral model, the RTL simulator and the
+//! AOT-compiled JAX graph all consume the same struct so that equivalence
+//! tests compare like with like.
+
+use crate::error::{Error, Result};
+
+/// When a neuron's threshold comparison takes effect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FireMode {
+    /// Threshold is checked once per timestep, after leak (the
+    /// architectural contract; what L1/L2 implement).
+    EndOfStep,
+    /// The comparator acts combinationally: the accumulator resets on the
+    /// very cycle it crosses threshold, mid-integration (paper §III-B3
+    /// "continuously monitors"). Only the RTL simulator implements this
+    /// refinement.
+    Immediate,
+}
+
+/// When the leak (right-shift decay) is applied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeakMode {
+    /// Once per timestep after all inputs are integrated (architectural
+    /// contract).
+    PerTimestep,
+    /// After every `row_len` inputs (paper §III-B2 "after processing one
+    /// image row"); RTL-only refinement.
+    PerRow { row_len: usize },
+}
+
+/// Active-pruning policy (paper §III-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PruneMode {
+    /// No pruning: every neuron stays enabled the whole window.
+    Off,
+    /// Gate a neuron's enable off after it has fired `after_spikes` times.
+    /// The paper gates after the first fire (`after_spikes = 1`).
+    AfterFires { after_spikes: u32 },
+}
+
+/// How the output layer turns spike activity into a class decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionPolicy {
+    /// Argmax of output spike counts over the full window (ties broken by
+    /// lowest class index — also the hardware behaviour of a priority
+    /// encoder).
+    SpikeCount,
+    /// The first neuron to fire wins; falls back to spike count when no
+    /// neuron fires within the window.
+    FirstSpike,
+}
+
+/// Complete architectural configuration of the SNN core.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnnConfig {
+    /// Number of input channels (pixels). Paper: 28×28 = 784.
+    pub n_inputs: usize,
+    /// Number of output neurons (classes). Paper: 10.
+    pub n_outputs: usize,
+    /// Firing threshold `V_th` in accumulator units. Paper: 128 (scaled by
+    /// training; see artifacts manifest).
+    pub v_th: i32,
+    /// Resting/reset potential. Paper: 0 ("to minimize logic gates").
+    pub v_rest: i32,
+    /// Decay exponent: leak is `acc -= acc >> decay_shift`. Paper: β = 2^-n.
+    pub decay_shift: u32,
+    /// Accumulator width in bits (signed). The accumulator saturates at
+    /// ±(2^(acc_bits-1) - 1) like a hardware register with saturation logic.
+    pub acc_bits: u32,
+    /// Signed weight width in bits. Paper: 9 (memory math: 784×10×9 bits).
+    pub weight_bits: u32,
+    /// Simulation window in timesteps. Paper evaluates T ∈ [1, 20].
+    pub timesteps: u32,
+    /// Threshold-check policy.
+    pub fire_mode: FireMode,
+    /// Leak scheduling policy.
+    pub leak_mode: LeakMode,
+    /// Active-pruning policy.
+    pub prune: PruneMode,
+    /// Classification readout policy.
+    pub decision: DecisionPolicy,
+}
+
+impl Default for SnnConfig {
+    /// The paper's configuration: 784→10, V_th = 128, V_rest = 0,
+    /// β = 2^-3, 9-bit weights, 24-bit accumulator, T = 20 window,
+    /// end-of-step firing, per-timestep leak, prune-after-first-fire,
+    /// spike-count readout.
+    fn default() -> Self {
+        SnnConfig {
+            n_inputs: 784,
+            n_outputs: 10,
+            v_th: 128,
+            v_rest: 0,
+            decay_shift: 3,
+            acc_bits: 24,
+            weight_bits: 9,
+            timesteps: 20,
+            fire_mode: FireMode::EndOfStep,
+            leak_mode: LeakMode::PerTimestep,
+            prune: PruneMode::AfterFires { after_spikes: 1 },
+            decision: DecisionPolicy::SpikeCount,
+        }
+    }
+}
+
+impl SnnConfig {
+    /// The paper's published configuration (alias of [`Default`]).
+    pub fn paper() -> Self {
+        Self::default()
+    }
+
+    /// Saturation bound of the accumulator: `2^(acc_bits-1) - 1`.
+    pub fn acc_max(&self) -> i32 {
+        (1i32 << (self.acc_bits - 1)) - 1
+    }
+
+    /// Negative saturation bound (symmetric saturation, as hardware
+    /// saturation logic is usually built: `-(2^(acc_bits-1) - 1)`).
+    pub fn acc_min(&self) -> i32 {
+        -self.acc_max()
+    }
+
+    /// Maximum representable weight: `2^(weight_bits-1) - 1`.
+    pub fn weight_max(&self) -> i32 {
+        (1i32 << (self.weight_bits - 1)) - 1
+    }
+
+    /// Minimum representable weight (two's complement).
+    pub fn weight_min(&self) -> i32 {
+        -(1i32 << (self.weight_bits - 1))
+    }
+
+    /// Weight storage footprint in bits (the paper's 8.6 KB figure is
+    /// `784 × 10 × 9` bits).
+    pub fn weight_storage_bits(&self) -> u64 {
+        self.n_inputs as u64 * self.n_outputs as u64 * u64::from(self.weight_bits)
+    }
+
+    /// Validate internal consistency; returns `self` for builder-style use.
+    pub fn validated(self) -> Result<Self> {
+        if self.n_inputs == 0 || self.n_outputs == 0 {
+            return Err(Error::InvalidConfig("topology dimensions must be nonzero".into()));
+        }
+        if !(2..=31).contains(&self.acc_bits) {
+            return Err(Error::InvalidConfig(format!(
+                "acc_bits {} outside supported range 2..=31",
+                self.acc_bits
+            )));
+        }
+        if !(2..=16).contains(&self.weight_bits) {
+            return Err(Error::InvalidConfig(format!(
+                "weight_bits {} outside supported range 2..=16",
+                self.weight_bits
+            )));
+        }
+        if self.decay_shift == 0 || self.decay_shift > 30 {
+            return Err(Error::InvalidConfig(format!(
+                "decay_shift {} outside supported range 1..=30 (0 would zero the \
+                 membrane every step)",
+                self.decay_shift
+            )));
+        }
+        if self.v_th <= self.v_rest {
+            return Err(Error::InvalidConfig(format!(
+                "v_th ({}) must exceed v_rest ({})",
+                self.v_th, self.v_rest
+            )));
+        }
+        if self.v_th > self.acc_max() {
+            return Err(Error::InvalidConfig(format!(
+                "v_th ({}) exceeds accumulator saturation ({})",
+                self.v_th,
+                self.acc_max()
+            )));
+        }
+        if self.timesteps == 0 {
+            return Err(Error::InvalidConfig("timesteps must be nonzero".into()));
+        }
+        if let LeakMode::PerRow { row_len } = self.leak_mode {
+            if row_len == 0 || row_len > self.n_inputs {
+                return Err(Error::InvalidConfig(format!(
+                    "leak row_len {} outside 1..={}",
+                    row_len, self.n_inputs
+                )));
+            }
+        }
+        if let PruneMode::AfterFires { after_spikes } = self.prune {
+            if after_spikes == 0 {
+                return Err(Error::InvalidConfig(
+                    "prune after_spikes must be >= 1 (0 would disable neurons \
+                     before they ever fire)"
+                        .into(),
+                ));
+            }
+        }
+        Ok(self)
+    }
+
+    /// Builder-style setters (used pervasively by experiments/ablations).
+    pub fn with_timesteps(mut self, t: u32) -> Self {
+        self.timesteps = t;
+        self
+    }
+    pub fn with_v_th(mut self, v: i32) -> Self {
+        self.v_th = v;
+        self
+    }
+    pub fn with_decay_shift(mut self, n: u32) -> Self {
+        self.decay_shift = n;
+        self
+    }
+    pub fn with_prune(mut self, p: PruneMode) -> Self {
+        self.prune = p;
+        self
+    }
+    pub fn with_fire_mode(mut self, m: FireMode) -> Self {
+        self.fire_mode = m;
+        self
+    }
+    pub fn with_leak_mode(mut self, m: LeakMode) -> Self {
+        self.leak_mode = m;
+        self
+    }
+    pub fn with_decision(mut self, d: DecisionPolicy) -> Self {
+        self.decision = d;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_is_valid() {
+        let c = SnnConfig::paper().validated().unwrap();
+        assert_eq!(c.n_inputs, 784);
+        assert_eq!(c.n_outputs, 10);
+        assert_eq!(c.v_th, 128);
+        assert_eq!(c.weight_storage_bits(), 784 * 10 * 9);
+        // Paper: "~8.6 KB"
+        let kb = c.weight_storage_bits() as f64 / 8.0 / 1024.0;
+        assert!((kb - 8.61).abs() < 0.02, "weight storage {kb} KB");
+    }
+
+    #[test]
+    fn saturation_bounds() {
+        let c = SnnConfig::paper();
+        assert_eq!(c.acc_max(), (1 << 23) - 1);
+        assert_eq!(c.acc_min(), -((1 << 23) - 1));
+        assert_eq!(c.weight_max(), 255);
+        assert_eq!(c.weight_min(), -256);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(SnnConfig { n_inputs: 0, ..SnnConfig::paper() }.validated().is_err());
+        assert!(SnnConfig { decay_shift: 0, ..SnnConfig::paper() }.validated().is_err());
+        assert!(SnnConfig { v_th: 0, ..SnnConfig::paper() }.validated().is_err());
+        assert!(SnnConfig { v_th: 1 << 30, acc_bits: 24, ..SnnConfig::paper() }
+            .validated()
+            .is_err());
+        assert!(SnnConfig { timesteps: 0, ..SnnConfig::paper() }.validated().is_err());
+        assert!(SnnConfig {
+            leak_mode: LeakMode::PerRow { row_len: 0 },
+            ..SnnConfig::paper()
+        }
+        .validated()
+        .is_err());
+        assert!(SnnConfig {
+            prune: PruneMode::AfterFires { after_spikes: 0 },
+            ..SnnConfig::paper()
+        }
+        .validated()
+        .is_err());
+        assert!(SnnConfig { acc_bits: 32, ..SnnConfig::paper() }.validated().is_err());
+    }
+
+    #[test]
+    fn builders_compose() {
+        let c = SnnConfig::paper()
+            .with_timesteps(5)
+            .with_v_th(200)
+            .with_decay_shift(4)
+            .with_prune(PruneMode::Off)
+            .with_fire_mode(FireMode::Immediate)
+            .with_decision(DecisionPolicy::FirstSpike)
+            .validated()
+            .unwrap();
+        assert_eq!(c.timesteps, 5);
+        assert_eq!(c.v_th, 200);
+        assert_eq!(c.decay_shift, 4);
+        assert_eq!(c.prune, PruneMode::Off);
+        assert_eq!(c.fire_mode, FireMode::Immediate);
+        assert_eq!(c.decision, DecisionPolicy::FirstSpike);
+    }
+}

@@ -1,0 +1,296 @@
+//! Inference backends the coordinator can schedule onto.
+//!
+//! | backend | substrate | early exit | use |
+//! |---|---|---|---|
+//! | [`BehavioralBackend`] | pure-Rust golden model | per-timestep | exactness + speed |
+//! | [`RtlBackend`] | cycle-accurate core sim | full window | cycle/energy accounting |
+//! | [`XlaBackend`] | AOT JAX/Pallas via PJRT | per-chunk | the compiled L2/L1 stack |
+//!
+//! All three implement the same architectural contract, so the coordinator
+//! (and the equivalence tests) can swap them freely.
+
+use std::sync::Mutex;
+
+use crate::config::SnnConfig;
+use crate::data::Image;
+use crate::error::Result;
+use crate::fixed::WeightMatrix;
+use crate::rtl::RtlCore;
+use crate::runtime::XlaSnn;
+use crate::snn::{BehavioralNet, EarlyExit};
+
+/// Per-image inference output, backend-agnostic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BackendOutput {
+    /// Predicted class (priority-encoded argmax of spike counts).
+    pub class: u8,
+    /// Output spike counts.
+    pub spike_counts: Vec<u32>,
+    /// Timesteps actually executed.
+    pub steps_run: u32,
+}
+
+fn decide(counts: &[u32]) -> u8 {
+    let mut best = 0usize;
+    for (j, &c) in counts.iter().enumerate() {
+        if c > counts[best] {
+            best = j;
+        }
+    }
+    best as u8
+}
+
+/// A batched classification backend. Implementations must be `Send + Sync`
+/// (shared by the worker pool).
+pub trait Backend: Send + Sync {
+    /// Human-readable backend name (metrics, logs).
+    fn name(&self) -> &'static str;
+
+    /// Classify a batch. `seeds[i]` drives image `i`'s encoder stream.
+    /// `early` is a hint: backends that cannot early-exit run the full
+    /// window (still correct — early exit only trades compute).
+    fn classify_batch(
+        &self,
+        images: &[&Image],
+        seeds: &[u32],
+        early: EarlyExit,
+    ) -> Result<Vec<BackendOutput>>;
+
+    /// The architectural config this backend runs.
+    fn config(&self) -> &SnnConfig;
+}
+
+// ---------------------------------------------------------------------------
+
+/// The behavioral golden model as a backend (per-image, early-exit capable).
+pub struct BehavioralBackend {
+    net: BehavioralNet,
+}
+
+impl BehavioralBackend {
+    pub fn new(cfg: SnnConfig, weights: WeightMatrix) -> Result<Self> {
+        Ok(BehavioralBackend { net: BehavioralNet::new(cfg, weights)? })
+    }
+}
+
+impl Backend for BehavioralBackend {
+    fn name(&self) -> &'static str {
+        "behavioral"
+    }
+
+    fn classify_batch(
+        &self,
+        images: &[&Image],
+        seeds: &[u32],
+        early: EarlyExit,
+    ) -> Result<Vec<BackendOutput>> {
+        let t = self.net.config().timesteps;
+        Ok(images
+            .iter()
+            .zip(seeds)
+            .map(|(img, &seed)| {
+                let c = self.net.classify_opts(img, seed, t, early);
+                BackendOutput {
+                    class: c.class,
+                    spike_counts: c.spike_counts,
+                    steps_run: c.steps_run,
+                }
+            })
+            .collect())
+    }
+
+    fn config(&self) -> &SnnConfig {
+        self.net.config()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// The cycle-accurate RTL core as a backend. The core is stateful, so it
+/// sits behind a mutex; throughput comes from running multiple worker
+/// threads each owning a coordinator worker (the experiments that need
+/// cycle counts care about fidelity, not peak QPS).
+pub struct RtlBackend {
+    core: Mutex<RtlCore>,
+    cfg: SnnConfig,
+}
+
+impl RtlBackend {
+    pub fn new(cfg: SnnConfig, weights: WeightMatrix) -> Result<Self> {
+        Ok(RtlBackend { core: Mutex::new(RtlCore::new(cfg.clone(), weights)?), cfg })
+    }
+
+    /// Total cycles burned so far (experiment observability).
+    pub fn total_cycles(&self) -> u64 {
+        self.core.lock().unwrap().total_activity().cycles
+    }
+}
+
+impl Backend for RtlBackend {
+    fn name(&self) -> &'static str {
+        "rtl"
+    }
+
+    fn classify_batch(
+        &self,
+        images: &[&Image],
+        seeds: &[u32],
+        _early: EarlyExit,
+    ) -> Result<Vec<BackendOutput>> {
+        let mut core = self.core.lock().unwrap();
+        images
+            .iter()
+            .zip(seeds)
+            .map(|(img, &seed)| {
+                let r = core.run(img, seed)?;
+                Ok(BackendOutput {
+                    class: r.class,
+                    spike_counts: r.spike_counts,
+                    steps_run: self.cfg.timesteps,
+                })
+            })
+            .collect()
+    }
+
+    fn config(&self) -> &SnnConfig {
+        &self.cfg
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// The compiled JAX/Pallas stack as a backend. Uses the full-window
+/// executables when `early` is off and the chunked executable + margin
+/// check when it is on.
+///
+/// `XlaSnn` is `Send` but not `Sync` (PJRT handles), so it sits behind a
+/// mutex; run more coordinator workers for parallelism across cores.
+pub struct XlaBackend {
+    snn: Mutex<XlaSnn>,
+    cfg: SnnConfig,
+}
+
+impl XlaBackend {
+    pub fn new(snn: XlaSnn) -> Self {
+        let cfg = snn.config().clone();
+        XlaBackend { snn: Mutex::new(snn), cfg }
+    }
+
+    fn classify_chunked(
+        &self,
+        snn: &XlaSnn,
+        images: &[&Image],
+        seeds: &[u32],
+        margin: u32,
+        min_steps: u32,
+    ) -> Result<Vec<BackendOutput>> {
+        let cap = snn.chunk_batch();
+        let window = snn.config().timesteps;
+        let mut out = Vec::with_capacity(images.len());
+        for (imgs, sds) in images.chunks(cap).zip(seeds.chunks(cap)) {
+            let mut st = snn.chunk_start(imgs, sds)?;
+            let mut counts = snn.chunk_advance(&mut st)?;
+            while st.steps_run < window {
+                if st.steps_run >= min_steps && all_confident(&counts, margin) {
+                    break;
+                }
+                counts = snn.chunk_advance(&mut st)?;
+            }
+            for c in counts {
+                out.push(BackendOutput {
+                    class: decide(&c),
+                    spike_counts: c,
+                    steps_run: st.steps_run,
+                });
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// True when every row's leader beats its runner-up by `margin`.
+fn all_confident(counts: &[Vec<u32>], margin: u32) -> bool {
+    counts.iter().all(|row| {
+        let mut sorted = row.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        sorted[0] >= sorted[1] + margin
+    })
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn classify_batch(
+        &self,
+        images: &[&Image],
+        seeds: &[u32],
+        early: EarlyExit,
+    ) -> Result<Vec<BackendOutput>> {
+        let snn = self.snn.lock().unwrap();
+        match early {
+            EarlyExit::Margin { margin, min_steps } => {
+                self.classify_chunked(&snn, images, seeds, margin, min_steps)
+            }
+            EarlyExit::Off => {
+                let window = snn.config().timesteps;
+                Ok(snn
+                    .spike_counts(images, seeds)?
+                    .into_iter()
+                    .map(|c| BackendOutput {
+                        class: decide(&c),
+                        spike_counts: c,
+                        steps_run: window,
+                    })
+                    .collect())
+            }
+        }
+    }
+
+    fn config(&self) -> &SnnConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DigitGen;
+
+    fn test_weights() -> WeightMatrix {
+        let mut w = vec![0i32; 784 * 10];
+        for i in 0..784 {
+            let block = i / 79;
+            if block < 10 {
+                w[i * 10 + block] = 40;
+            }
+        }
+        WeightMatrix::from_rows(784, 10, 9, w).unwrap()
+    }
+
+    #[test]
+    fn behavioral_and_rtl_backends_agree() {
+        let cfg = SnnConfig::paper().with_timesteps(4);
+        let beh = BehavioralBackend::new(cfg.clone(), test_weights()).unwrap();
+        let rtl = RtlBackend::new(cfg, test_weights()).unwrap();
+        let gen = DigitGen::new(5);
+        let images: Vec<Image> = (0..6).map(|i| gen.sample(i as u8, i)).collect();
+        let refs: Vec<&Image> = images.iter().collect();
+        let seeds: Vec<u32> = (0..6).map(|i| 100 + i).collect();
+        let a = beh.classify_batch(&refs, &seeds, EarlyExit::Off).unwrap();
+        let b = rtl.classify_batch(&refs, &seeds, EarlyExit::Off).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.spike_counts, y.spike_counts);
+        }
+        assert!(rtl.total_cycles() > 0);
+    }
+
+    #[test]
+    fn confidence_check() {
+        assert!(all_confident(&[vec![5, 1, 0], vec![4, 0, 0]], 3));
+        assert!(!all_confident(&[vec![5, 4, 0]], 3));
+        assert!(all_confident(&[], 3));
+    }
+}

@@ -1,0 +1,175 @@
+//! Dynamic batching policy: group requests up to `max_batch`, waiting at
+//! most `max_delay` from the *first* request of the forming batch — the
+//! standard size-or-timeout policy of serving systems (vLLM-router-like),
+//! factored out as a pure, testable state machine.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Hard cap on batch size (match a compiled batch size for the XLA
+    /// backend to avoid padding waste).
+    pub max_batch: usize,
+    /// Max time the first request of a batch may wait for company.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// Decision returned by [`Batcher::poll`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchDecision {
+    /// Keep accumulating; re-poll within the given duration.
+    Wait(Duration),
+    /// Dispatch the current batch now.
+    Dispatch,
+}
+
+/// Pure batch-forming state machine over opaque item tokens.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    items: Vec<T>,
+    first_arrival: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        Batcher { policy, items: Vec::with_capacity(policy.max_batch), first_arrival: None }
+    }
+
+    /// Number of queued items.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True when no items are pending.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Remaining capacity before the batch is full.
+    pub fn remaining(&self) -> usize {
+        self.policy.max_batch - self.items.len()
+    }
+
+    /// Add an item that arrived at `now`.
+    pub fn push(&mut self, item: T, now: Instant) {
+        assert!(self.items.len() < self.policy.max_batch, "push into full batch");
+        if self.items.is_empty() {
+            self.first_arrival = Some(now);
+        }
+        self.items.push(item);
+    }
+
+    /// Decide whether to dispatch at time `now`.
+    pub fn poll(&self, now: Instant) -> BatchDecision {
+        if self.items.is_empty() {
+            return BatchDecision::Wait(self.policy.max_delay);
+        }
+        if self.items.len() >= self.policy.max_batch {
+            return BatchDecision::Dispatch;
+        }
+        let deadline = self.first_arrival.expect("non-empty batch has arrival")
+            + self.policy.max_delay;
+        if now >= deadline {
+            BatchDecision::Dispatch
+        } else {
+            BatchDecision::Wait(deadline - now)
+        }
+    }
+
+    /// Take the formed batch, resetting the state machine.
+    pub fn take(&mut self) -> Vec<T> {
+        self.first_arrival = None;
+        std::mem::take(&mut self.items)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::PropRunner;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn dispatches_when_full() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_delay: Duration::from_secs(10) });
+        let now = t0();
+        b.push(1, now);
+        b.push(2, now);
+        assert!(matches!(b.poll(now), BatchDecision::Wait(_)));
+        b.push(3, now);
+        assert_eq!(b.poll(now), BatchDecision::Dispatch);
+        assert_eq!(b.take(), vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn dispatches_on_deadline() {
+        let policy = BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(5) };
+        let mut b = Batcher::new(policy);
+        let now = t0();
+        b.push("a", now);
+        assert!(matches!(b.poll(now), BatchDecision::Wait(_)));
+        let later = now + Duration::from_millis(5);
+        assert_eq!(b.poll(later), BatchDecision::Dispatch);
+    }
+
+    #[test]
+    fn deadline_tracks_first_arrival_not_last() {
+        let policy = BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(10) };
+        let mut b = Batcher::new(policy);
+        let now = t0();
+        b.push(1, now);
+        // A second item arriving later must NOT extend the deadline.
+        b.push(2, now + Duration::from_millis(8));
+        assert_eq!(b.poll(now + Duration::from_millis(10)), BatchDecision::Dispatch);
+    }
+
+    #[test]
+    fn empty_batcher_waits_full_delay() {
+        let policy = BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(7) };
+        let b: Batcher<u8> = Batcher::new(policy);
+        match b.poll(t0()) {
+            BatchDecision::Wait(d) => assert_eq!(d, Duration::from_millis(7)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn prop_no_loss_no_duplication_fifo() {
+        PropRunner::new("batcher_conservation", 200).run(|g| {
+            let max_batch = g.rng.range_i32(1, 16) as usize;
+            let policy =
+                BatchPolicy { max_batch, max_delay: Duration::from_millis(1) };
+            let mut b = Batcher::new(policy);
+            let now = t0();
+            let n = g.rng.range_i32(1, 100) as u32;
+            let mut dispatched: Vec<u32> = Vec::new();
+            for i in 0..n {
+                if b.remaining() == 0 {
+                    dispatched.extend(b.take());
+                }
+                b.push(i, now);
+                // Random mid-stream deadline dispatches.
+                if g.rng.chance_u8(32) {
+                    dispatched.extend(b.take());
+                }
+            }
+            dispatched.extend(b.take());
+            // Conservation + FIFO: exactly 0..n in order.
+            assert_eq!(dispatched, (0..n).collect::<Vec<_>>());
+            assert!(b.is_empty());
+        });
+    }
+}

@@ -1,0 +1,165 @@
+//! Serving metrics: lock-free counters + a log-bucketed latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log₂-bucketed histogram over microseconds: bucket k covers
+/// [2^k, 2^(k+1)) µs, bucket 0 covers [0, 2) µs. 40 buckets ≈ 12 days.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; 40],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(39);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (upper bound of the bucket holding it).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (k, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (k + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// Shared server counters.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    /// End-to-end request latency (submit → response).
+    pub latency: Histogram,
+    /// Backend batch execution latency.
+    pub batch_latency: Histogram,
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    /// Timesteps actually executed (early-exit savings show up here).
+    pub steps_executed: AtomicU64,
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub latency_p50_us: u64,
+    pub latency_p95_us: u64,
+    pub latency_p99_us: u64,
+    pub latency_mean_us: f64,
+    pub latency_max_us: u64,
+    pub steps_executed: u64,
+}
+
+impl ServerMetrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let items = self.batched_items.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches,
+            mean_batch_size: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
+            latency_p50_us: self.latency.quantile_us(0.50),
+            latency_p95_us: self.latency.quantile_us(0.95),
+            latency_p99_us: self.latency.quantile_us(0.99),
+            latency_mean_us: self.latency.mean_us(),
+            latency_max_us: self.latency.max_us(),
+            steps_executed: self.steps_executed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::default();
+        for us in [1u64, 3, 3, 3, 100, 100, 1000, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.max_us(), 10_000);
+        assert!((h.mean_us() - 1401.25).abs() < 0.01);
+        // p50 falls in the [2,4) bucket -> upper bound 4.
+        assert_eq!(h.quantile_us(0.5), 4);
+        assert!(h.quantile_us(0.99) >= 8192);
+        // Quantiles are monotone in q.
+        assert!(h.quantile_us(0.25) <= h.quantile_us(0.75));
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_math() {
+        let m = ServerMetrics::default();
+        m.submitted.store(10, Ordering::Relaxed);
+        m.batches.store(4, Ordering::Relaxed);
+        m.batched_items.store(10, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 10);
+        assert!((s.mean_batch_size - 2.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,23 @@
+//! The serving coordinator (L3): bounded-queue router, dynamic batcher,
+//! worker pool over pluggable inference backends, and the early-exit
+//! scheduler that generalizes the paper's active-pruning idea to the
+//! request path (stop paying for timesteps once the decision is
+//! confident).
+//!
+//! Threading model: callers submit through a bounded ingress channel
+//! (backpressure = `Error::Rejected` when full); worker threads assemble
+//! batches under a max-size / max-delay policy and run them on a
+//! [`Backend`]; responses travel back through per-request oneshot
+//! channels. tokio is not part of the offline crate set — the event loop
+//! is small enough that blocking threads are the honest design
+//! (DESIGN.md §7).
+
+mod backend;
+mod batcher;
+mod metrics;
+mod server;
+
+pub use backend::{Backend, BackendOutput, BehavioralBackend, RtlBackend, XlaBackend};
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::{Histogram, MetricsSnapshot, ServerMetrics};
+pub use server::{Coordinator, CoordinatorConfig, Request, Response, SubmitHandle};

@@ -1,0 +1,421 @@
+//! The coordinator proper: ingress router + worker pool + response plumbing.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::data::Image;
+use crate::error::{Error, Result};
+use crate::snn::EarlyExit;
+
+use super::backend::{Backend, BackendOutput};
+use super::batcher::{BatchDecision, BatchPolicy, Batcher};
+use super::metrics::ServerMetrics;
+
+/// A classification request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub image: Image,
+    /// Encoder seed; `None` lets the coordinator assign one from its
+    /// request counter (deterministic given submission order).
+    pub seed: Option<u32>,
+}
+
+/// A classification response.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Response {
+    pub class: u8,
+    pub spike_counts: Vec<u32>,
+    pub steps_run: u32,
+    /// Seed the encoder actually used (echo for reproducibility).
+    pub seed: u32,
+}
+
+struct InFlight {
+    request: Request,
+    seed: u32,
+    submitted: Instant,
+    reply: SyncSender<Result<Response>>,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Worker threads pulling batches.
+    pub workers: usize,
+    /// Ingress queue capacity (backpressure bound).
+    pub queue_depth: usize,
+    /// Batch forming policy.
+    pub batch: BatchPolicy,
+    /// Early-exit policy handed to the backend.
+    pub early: EarlyExit,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 2,
+            queue_depth: 256,
+            batch: BatchPolicy::default(),
+            early: EarlyExit::Off,
+        }
+    }
+}
+
+/// Client handle: cheap to clone, submits requests.
+#[derive(Clone)]
+pub struct SubmitHandle {
+    tx: SyncSender<InFlight>,
+    seed_counter: Arc<AtomicU32>,
+    metrics: Arc<ServerMetrics>,
+}
+
+impl SubmitHandle {
+    /// Submit a request; returns the receiver for its response. Fails fast
+    /// with [`Error::Rejected`] when the ingress queue is full
+    /// (backpressure) or the server is shutting down.
+    pub fn submit(&self, request: Request) -> Result<Receiver<Result<Response>>> {
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        let seed = request
+            .seed
+            .unwrap_or_else(|| self.seed_counter.fetch_add(1, Ordering::Relaxed));
+        let inflight =
+            InFlight { request, seed, submitted: Instant::now(), reply: reply_tx };
+        match self.tx.try_send(inflight) {
+            Ok(()) => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(reply_rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(Error::Rejected("ingress queue full".into()))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                Err(Error::Rejected("coordinator is shut down".into()))
+            }
+        }
+    }
+
+    /// Submit and block for the response (convenience).
+    pub fn classify(&self, image: Image) -> Result<Response> {
+        let rx = self.submit(Request { image, seed: None })?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("worker dropped the reply channel".into()))?
+    }
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    handle: SubmitHandle,
+    workers: Vec<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    metrics: Arc<ServerMetrics>,
+}
+
+impl Coordinator {
+    /// Start the worker pool over `backend`.
+    pub fn start(backend: Arc<dyn Backend>, cfg: CoordinatorConfig) -> Self {
+        assert!(cfg.workers >= 1);
+        let (tx, rx) = mpsc::sync_channel::<InFlight>(cfg.queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(ServerMetrics::default());
+
+        let workers = (0..cfg.workers)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let backend = Arc::clone(&backend);
+                let shutdown = Arc::clone(&shutdown);
+                let metrics = Arc::clone(&metrics);
+                let cfg = cfg.clone();
+                std::thread::spawn(move || worker_loop(rx, backend, shutdown, metrics, cfg))
+            })
+            .collect();
+
+        Coordinator {
+            handle: SubmitHandle {
+                tx,
+                seed_counter: Arc::new(AtomicU32::new(1)),
+                metrics: Arc::clone(&metrics),
+            },
+            workers,
+            shutdown,
+            metrics,
+        }
+    }
+
+    /// Client handle for submitting requests.
+    pub fn handle(&self) -> SubmitHandle {
+        self.handle.clone()
+    }
+
+    /// Shared metrics.
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.metrics
+    }
+
+    /// Drain and stop: in-flight requests complete, new submissions fail.
+    pub fn shutdown(self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        drop(self.handle); // close the channel so workers see disconnect
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<InFlight>>>,
+    backend: Arc<dyn Backend>,
+    shutdown: Arc<AtomicBool>,
+    metrics: Arc<ServerMetrics>,
+    cfg: CoordinatorConfig,
+) {
+    let mut batcher: Batcher<InFlight> = Batcher::new(cfg.batch);
+    loop {
+        // Form a batch: block for the first item, then fill until the
+        // policy says dispatch.
+        let decision = batcher.poll(Instant::now());
+        match decision {
+            BatchDecision::Dispatch => {
+                run_batch(&backend, &metrics, &cfg, batcher.take());
+            }
+            BatchDecision::Wait(timeout) => {
+                let item = {
+                    let guard = rx.lock().unwrap();
+                    if batcher.is_empty() {
+                        // Nothing pending: block indefinitely-ish, but wake
+                        // periodically to observe shutdown.
+                        guard.recv_timeout(std::time::Duration::from_millis(50))
+                    } else {
+                        guard.recv_timeout(timeout)
+                    }
+                };
+                match item {
+                    Ok(inflight) => batcher.push(inflight, Instant::now()),
+                    Err(RecvTimeoutError::Timeout) => {
+                        if !batcher.is_empty() {
+                            run_batch(&backend, &metrics, &cfg, batcher.take());
+                        } else if shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        if !batcher.is_empty() {
+                            run_batch(&backend, &metrics, &cfg, batcher.take());
+                        }
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn run_batch(
+    backend: &Arc<dyn Backend>,
+    metrics: &ServerMetrics,
+    cfg: &CoordinatorConfig,
+    batch: Vec<InFlight>,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.batched_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
+
+    let images: Vec<&Image> = batch.iter().map(|f| &f.request.image).collect();
+    let seeds: Vec<u32> = batch.iter().map(|f| f.seed).collect();
+    let start = Instant::now();
+    let result = backend.classify_batch(&images, &seeds, cfg.early);
+    metrics.batch_latency.record(start.elapsed());
+
+    match result {
+        Ok(outputs) => {
+            debug_assert_eq!(outputs.len(), batch.len());
+            for (inflight, out) in batch.into_iter().zip(outputs) {
+                respond_ok(metrics, inflight, out);
+            }
+        }
+        Err(e) => {
+            // Batch-level failure: every request in it gets the error.
+            let msg = e.to_string();
+            for inflight in batch {
+                metrics.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = inflight.reply.try_send(Err(Error::Coordinator(msg.clone())));
+            }
+        }
+    }
+}
+
+fn respond_ok(metrics: &ServerMetrics, inflight: InFlight, out: BackendOutput) {
+    metrics.completed.fetch_add(1, Ordering::Relaxed);
+    metrics.steps_executed.fetch_add(u64::from(out.steps_run), Ordering::Relaxed);
+    metrics.latency.record(inflight.submitted.elapsed());
+    let _ = inflight.reply.try_send(Ok(Response {
+        class: out.class,
+        spike_counts: out.spike_counts,
+        steps_run: out.steps_run,
+        seed: inflight.seed,
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SnnConfig;
+    use crate::coordinator::backend::BehavioralBackend;
+    use crate::data::{DigitGen, IMG_PIXELS};
+    use crate::fixed::WeightMatrix;
+    use std::time::Duration;
+
+    fn block_weights() -> WeightMatrix {
+        let mut w = vec![0i32; 784 * 10];
+        for i in 0..784 {
+            let block = i / 79;
+            if block < 10 {
+                w[i * 10 + block] = 40;
+            }
+        }
+        WeightMatrix::from_rows(784, 10, 9, w).unwrap()
+    }
+
+    fn block_image(class: usize) -> Image {
+        let mut px = vec![0u8; IMG_PIXELS];
+        for i in 0..784 {
+            if i / 79 == class {
+                px[i] = 250;
+            }
+        }
+        Image { label: class as u8, pixels: px }
+    }
+
+    fn start_coordinator(workers: usize, queue: usize) -> Coordinator {
+        let cfg = SnnConfig::paper().with_timesteps(6);
+        let backend = Arc::new(BehavioralBackend::new(cfg, block_weights()).unwrap());
+        Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                workers,
+                queue_depth: queue,
+                batch: BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(1) },
+                early: EarlyExit::Off,
+            },
+        )
+    }
+
+    #[test]
+    fn end_to_end_classification() {
+        let coord = start_coordinator(2, 64);
+        let handle = coord.handle();
+        for class in 0..10usize {
+            let resp = handle.classify(block_image(class)).unwrap();
+            assert_eq!(resp.class as usize, class);
+            assert_eq!(resp.steps_run, 6);
+        }
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.completed, 10);
+        assert_eq!(snap.failed, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_all_answered() {
+        let coord = start_coordinator(3, 256);
+        let handle = coord.handle();
+        let receivers: Vec<_> = (0..64)
+            .map(|i| {
+                let img = block_image(i % 10);
+                (i % 10, handle.submit(Request { image: img, seed: Some(42 + i as u32) }).unwrap())
+            })
+            .collect();
+        for (class, rx) in receivers {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.class as usize, class);
+        }
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.completed, 64);
+        assert!(snap.batches >= 16, "batches {}", snap.batches);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn deterministic_with_explicit_seed() {
+        let coord = start_coordinator(2, 64);
+        let handle = coord.handle();
+        let img = DigitGen::new(1).sample(4, 0);
+        let a = handle
+            .submit(Request { image: img.clone(), seed: Some(7) })
+            .unwrap()
+            .recv()
+            .unwrap()
+            .unwrap();
+        let b = handle
+            .submit(Request { image: img, seed: Some(7) })
+            .unwrap()
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert_eq!(a, b);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // One worker, tiny queue, and a flood of submissions from this
+        // thread: some must be rejected, none lost.
+        let coord = start_coordinator(1, 2);
+        let handle = coord.handle();
+        let mut accepted = Vec::new();
+        let mut rejected = 0usize;
+        for i in 0..200 {
+            match handle.submit(Request { image: block_image(i % 10), seed: Some(i as u32) }) {
+                Ok(rx) => accepted.push(rx),
+                Err(Error::Rejected(_)) => rejected += 1,
+                Err(e) => panic!("unexpected error {e}"),
+            }
+        }
+        for rx in accepted {
+            rx.recv().unwrap().unwrap();
+        }
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.completed + snap.rejected as u64, 200);
+        assert_eq!(snap.rejected as usize, rejected);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_stops_new_work() {
+        let coord = start_coordinator(1, 8);
+        let handle = coord.handle();
+        handle.classify(block_image(1)).unwrap();
+        coord.shutdown();
+        assert!(matches!(
+            handle.submit(Request { image: block_image(1), seed: None }),
+            Err(Error::Rejected(_))
+        ));
+    }
+
+    #[test]
+    fn early_exit_reduces_steps() {
+        let cfg = SnnConfig::paper()
+            .with_timesteps(20)
+            .with_prune(crate::config::PruneMode::Off);
+        let backend = Arc::new(BehavioralBackend::new(cfg, block_weights()).unwrap());
+        let coord = Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 16,
+                batch: BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(100) },
+                early: EarlyExit::Margin { margin: 3, min_steps: 2 },
+            },
+        );
+        let resp = coord.handle().classify(block_image(5)).unwrap();
+        assert_eq!(resp.class, 5);
+        assert!(resp.steps_run < 20, "early exit did not trigger: {}", resp.steps_run);
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,300 @@
+//! Binary artifact codecs shared with the Python build path.
+//!
+//! Two formats, both little-endian with 4-byte ASCII magic:
+//!
+//! * **SNND** — labelled image datasets (`artifacts/digits_{train,test}.bin`).
+//! * **SNNW** — trained weights + LIF constants (`artifacts/weights.bin`):
+//!   the dense 9-bit packed BRAM image of [`crate::fixed::pack_weights`]
+//!   plus the threshold/decay the weights were calibrated for.
+//!
+//! The writers in `python/compile/artifact_io.py` emit byte-identical
+//! files; integration tests round-trip both directions.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use super::{Dataset, Image, IMG_PIXELS, IMG_SIDE};
+use crate::error::{Error, Result};
+use crate::fixed::{pack_weights, unpack_weights, WeightMatrix};
+
+const DATASET_MAGIC: &[u8; 4] = b"SNND";
+const WEIGHTS_MAGIC: &[u8; 4] = b"SNNW";
+const VERSION: u32 = 1;
+
+/// Weights plus the LIF calibration they were trained against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightArtifact {
+    pub weights: WeightMatrix,
+    /// Firing threshold the training run calibrated for.
+    pub v_th: i32,
+    /// Decay shift the training run calibrated for.
+    pub decay_shift: u32,
+    /// Recommended inference window.
+    pub timesteps: u32,
+    /// Calibrated pruning point (fires before a neuron is gated off);
+    /// 0 = pruning off.
+    pub prune_after: u32,
+}
+
+impl WeightArtifact {
+    /// The [`crate::SnnConfig`] these weights were calibrated for.
+    pub fn config(&self) -> crate::SnnConfig {
+        use crate::config::PruneMode;
+        crate::SnnConfig {
+            n_inputs: self.weights.n_inputs(),
+            n_outputs: self.weights.n_outputs(),
+            v_th: self.v_th,
+            decay_shift: self.decay_shift,
+            weight_bits: self.weights.bits(),
+            timesteps: self.timesteps,
+            prune: if self.prune_after == 0 {
+                PruneMode::Off
+            } else {
+                PruneMode::AfterFires { after_spikes: self.prune_after }
+            },
+            ..crate::SnnConfig::paper()
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    path: &'a Path,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::malformed(self.path, format!("truncated at offset {}", self.pos)));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+}
+
+/// Write a dataset to `path` in SNND format.
+pub fn save_dataset(path: impl AsRef<Path>, ds: &Dataset) -> Result<()> {
+    let path = path.as_ref();
+    let mut out = Vec::with_capacity(16 + ds.len() * (IMG_PIXELS + 1));
+    out.extend_from_slice(DATASET_MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(ds.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(IMG_SIDE as u16).to_le_bytes());
+    out.extend_from_slice(&(IMG_SIDE as u16).to_le_bytes());
+    for img in &ds.images {
+        out.push(img.label);
+        out.extend_from_slice(&img.pixels);
+    }
+    write_atomic(path, &out)
+}
+
+/// Read a dataset from an SNND file.
+pub fn load_dataset(path: impl AsRef<Path>) -> Result<Dataset> {
+    let path = path.as_ref();
+    let buf = fs::read(path).map_err(|e| Error::io(path, e))?;
+    let mut r = Reader { buf: &buf, pos: 0, path };
+    if r.take(4)? != DATASET_MAGIC {
+        return Err(Error::malformed(path, "bad magic (want SNND)"));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(Error::malformed(path, format!("unsupported version {version}")));
+    }
+    let count = r.u32()? as usize;
+    let h = r.u16()? as usize;
+    let w = r.u16()? as usize;
+    if h != IMG_SIDE || w != IMG_SIDE {
+        return Err(Error::malformed(path, format!("unsupported geometry {h}x{w}")));
+    }
+    let mut images = Vec::with_capacity(count);
+    for _ in 0..count {
+        let label = r.take(1)?[0];
+        if label > 9 {
+            return Err(Error::malformed(path, format!("label {label} > 9")));
+        }
+        let pixels = r.take(IMG_PIXELS)?.to_vec();
+        images.push(Image { label, pixels });
+    }
+    if r.pos != buf.len() {
+        return Err(Error::malformed(path, format!("{} trailing bytes", buf.len() - r.pos)));
+    }
+    Ok(Dataset { images })
+}
+
+/// Write weights + calibration to `path` in SNNW format.
+pub fn save_weights(path: impl AsRef<Path>, art: &WeightArtifact) -> Result<()> {
+    let path = path.as_ref();
+    let packed = pack_weights(&art.weights);
+    let mut out = Vec::with_capacity(36 + packed.len());
+    out.extend_from_slice(WEIGHTS_MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(art.weights.n_inputs() as u32).to_le_bytes());
+    out.extend_from_slice(&(art.weights.n_outputs() as u32).to_le_bytes());
+    out.extend_from_slice(&art.weights.bits().to_le_bytes());
+    out.extend_from_slice(&art.v_th.to_le_bytes());
+    out.extend_from_slice(&art.decay_shift.to_le_bytes());
+    out.extend_from_slice(&art.timesteps.to_le_bytes());
+    out.extend_from_slice(&art.prune_after.to_le_bytes());
+    out.extend_from_slice(&(packed.len() as u32).to_le_bytes());
+    out.extend_from_slice(&packed);
+    write_atomic(path, &out)
+}
+
+/// Read weights + calibration from an SNNW file.
+pub fn load_weights(path: impl AsRef<Path>) -> Result<WeightArtifact> {
+    let path = path.as_ref();
+    let buf = fs::read(path).map_err(|e| Error::io(path, e))?;
+    let mut r = Reader { buf: &buf, pos: 0, path };
+    if r.take(4)? != WEIGHTS_MAGIC {
+        return Err(Error::malformed(path, "bad magic (want SNNW)"));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(Error::malformed(path, format!("unsupported version {version}")));
+    }
+    let n_inputs = r.u32()? as usize;
+    let n_outputs = r.u32()? as usize;
+    let bits = r.u32()?;
+    if !(2..=16).contains(&bits) {
+        return Err(Error::malformed(path, format!("weight bits {bits} out of range")));
+    }
+    let v_th = r.i32()?;
+    let decay_shift = r.u32()?;
+    let timesteps = r.u32()?;
+    let prune_after = r.u32()?;
+    let packed_len = r.u32()? as usize;
+    let packed = r.take(packed_len)?;
+    let expected = (n_inputs * n_outputs * bits as usize + 7) / 8;
+    if packed_len != expected {
+        return Err(Error::malformed(
+            path,
+            format!("packed length {packed_len} != expected {expected}"),
+        ));
+    }
+    let weights = unpack_weights(packed, n_inputs, n_outputs, bits)?;
+    if r.pos != buf.len() {
+        return Err(Error::malformed(path, format!("{} trailing bytes", buf.len() - r.pos)));
+    }
+    Ok(WeightArtifact { weights, v_th, decay_shift, timesteps, prune_after })
+}
+
+/// Write via a temp file + rename so concurrent readers never observe a
+/// half-written artifact.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    let mut f = fs::File::create(&tmp).map_err(|e| Error::io(&tmp, e))?;
+    f.write_all(bytes).map_err(|e| Error::io(&tmp, e))?;
+    f.sync_all().map_err(|e| Error::io(&tmp, e))?;
+    fs::rename(&tmp, path).map_err(|e| Error::io(path, e))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DigitGen;
+    use crate::testutil::PropRunner;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("snn_codec_{}", std::process::id()));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn dataset_roundtrip() {
+        let ds = DigitGen::new(1).dataset(3);
+        let p = tmpdir().join("ds_roundtrip.bin");
+        save_dataset(&p, &ds).unwrap();
+        let back = load_dataset(&p).unwrap();
+        assert_eq!(back.len(), ds.len());
+        for (a, b) in ds.images.iter().zip(&back.images) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.pixels, b.pixels);
+        }
+    }
+
+    #[test]
+    fn weights_roundtrip() {
+        let m = WeightMatrix::from_rows(4, 3, 9, (0..12).map(|v| v * 17 - 100).collect()).unwrap();
+        let art = WeightArtifact { weights: m, v_th: 128, decay_shift: 3, timesteps: 20, prune_after: 3 };
+        let p = tmpdir().join("w_roundtrip.bin");
+        save_weights(&p, &art).unwrap();
+        let back = load_weights(&p).unwrap();
+        assert_eq!(back, art);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let ds = DigitGen::new(1).dataset(1);
+        let dir = tmpdir();
+        let p = dir.join("ds_corrupt.bin");
+        save_dataset(&p, &ds).unwrap();
+        let mut bytes = fs::read(&p).unwrap();
+
+        // Bad magic.
+        let p2 = dir.join("bad_magic.bin");
+        let mut b2 = bytes.clone();
+        b2[0] = b'X';
+        fs::write(&p2, &b2).unwrap();
+        assert!(matches!(load_dataset(&p2), Err(Error::MalformedArtifact { .. })));
+
+        // Truncation.
+        let p3 = dir.join("trunc.bin");
+        fs::write(&p3, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(load_dataset(&p3).is_err());
+
+        // Trailing garbage.
+        let p4 = dir.join("trailing.bin");
+        bytes.push(0);
+        fs::write(&p4, &bytes).unwrap();
+        assert!(load_dataset(&p4).is_err());
+
+        // Invalid label.
+        let p5 = dir.join("badlabel.bin");
+        let mut b5 = fs::read(&p).unwrap();
+        b5[16] = 99; // first label byte (4 magic + 4 ver + 4 count + 2 h + 2 w)
+        fs::write(&p5, &b5).unwrap();
+        assert!(load_dataset(&p5).is_err());
+    }
+
+    #[test]
+    fn missing_file_reports_path() {
+        let err = load_dataset("/nonexistent/snn.bin").unwrap_err();
+        assert!(err.to_string().contains("/nonexistent/snn.bin"));
+    }
+
+    #[test]
+    fn prop_weights_roundtrip_random_geometry() {
+        let dir = tmpdir();
+        PropRunner::new("codec_weights_roundtrip", 50).run(|g| {
+            let bits = g.rng.range_i32(2, 12) as u32;
+            let ni = g.rng.range_i32(1, 30) as usize;
+            let no = g.rng.range_i32(1, 10) as usize;
+            let max = (1i32 << (bits - 1)) - 1;
+            let data = g.vec_i32(ni * no, -max - 1, max);
+            let art = WeightArtifact {
+                weights: WeightMatrix::from_rows(ni, no, bits, data).unwrap(),
+                v_th: g.rng.range_i32(1, 1000),
+                decay_shift: g.rng.range_i32(1, 8) as u32,
+                timesteps: g.rng.range_i32(1, 40) as u32,
+                prune_after: g.rng.range_i32(0, 5) as u32,
+            };
+            let p = dir.join(format!("w_prop_{}.bin", g.case));
+            save_weights(&p, &art).unwrap();
+            assert_eq!(load_weights(&p).unwrap(), art);
+        });
+    }
+}

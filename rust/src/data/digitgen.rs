@@ -1,0 +1,345 @@
+//! Synthetic stroke-rendered digit generator (the MNIST substitute).
+//!
+//! Rendering is **integer-only** and consumes a fixed number of PRNG draws
+//! per sample in a documented order, which makes it bit-identical to the
+//! mirror implementation in `python/compile/dataset.py`. Pipeline:
+//!
+//! 1. Draw jitter parameters (translation, rotation, scale, stroke
+//!    thickness, peak intensity, per-point jitter) from a
+//!    [`crate::prng::derive_stream`] keyed by `(seed, class, index)`.
+//! 2. Transform the class's template polylines (256×256 virtual grid):
+//!    per-point jitter → rotate about centre (Q10 integer trig tables) →
+//!    scale (Q8) → translate.
+//! 3. Rasterize at 4× oversampling (112×112 bitmap): Bresenham line walk,
+//!    stamping a disc of the drawn thickness at every step.
+//! 4. Box-downsample 4×4 → 28×28 coverage in 0..=16, scaled by the drawn
+//!    peak intensity.
+//!
+//! The draw *order* in step 1 is part of the cross-language contract —
+//! changing it breaks the golden tests.
+
+use super::templates::TEMPLATES;
+use super::{Dataset, Image, IMG_PIXELS, IMG_SIDE};
+use crate::prng::derive_stream;
+
+/// Oversampled raster side (4 × 28).
+const HI: usize = 112;
+/// sin(d°) in Q10 for d = 0..=15 (shared table; see tools/gen_templates.py).
+const SIN_Q10: [i32; 16] =
+    [0, 18, 36, 54, 71, 89, 107, 125, 143, 160, 178, 195, 213, 230, 248, 265];
+/// cos(d°) in Q10 for d = 0..=15.
+const COS_Q10: [i32; 16] =
+    [1024, 1024, 1023, 1023, 1022, 1020, 1018, 1016, 1014, 1011, 1008, 1005, 1002, 998, 994, 989];
+
+/// The per-sample generation parameters, drawn from the PRNG in this exact
+/// field order (one `range_i32` draw each, then two per template point).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GenParams {
+    /// Translation in virtual units, `[-14, 14]`.
+    pub dx: i32,
+    pub dy: i32,
+    /// Rotation in degrees, `[-12, 12]`.
+    pub angle_deg: i32,
+    /// Isotropic scale in Q8 (256 = 1.0), `[210, 290]`.
+    pub scale_q8: i32,
+    /// Stroke (disc) radius in hi-res pixels, `[8, 12]`.
+    pub thickness: i32,
+    /// Peak output intensity, `[170, 255]`.
+    pub peak: i32,
+}
+
+/// Q10 sine for degrees in `[-15, 15]`.
+#[inline]
+fn sin_q10(deg: i32) -> i32 {
+    let a = deg.unsigned_abs() as usize;
+    let v = SIN_Q10[a];
+    if deg < 0 {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Q10 cosine for degrees in `[-15, 15]`.
+#[inline]
+fn cos_q10(deg: i32) -> i32 {
+    COS_Q10[deg.unsigned_abs() as usize]
+}
+
+/// Map a virtual coordinate (0..256) to the hi-res raster (0..112) with
+/// rounding: `x · 112/256 = x · 7/16`.
+#[inline]
+fn virt_to_hi(v: i32) -> i32 {
+    (v * 7 + 8) >> 4
+}
+
+/// Stamp a filled disc of radius `r` at `(cx, cy)` into the hi-res bitmap.
+fn stamp_disc(bitmap: &mut [u8], cx: i32, cy: i32, r: i32) {
+    let r2 = r * r;
+    for dy in -r..=r {
+        let y = cy + dy;
+        if !(0..HI as i32).contains(&y) {
+            continue;
+        }
+        for dx in -r..=r {
+            let x = cx + dx;
+            if !(0..HI as i32).contains(&x) {
+                continue;
+            }
+            if dx * dx + dy * dy <= r2 {
+                bitmap[y as usize * HI + x as usize] = 1;
+            }
+        }
+    }
+}
+
+/// Walk a segment with the classic integer Bresenham algorithm, stamping a
+/// disc at every visited cell. Endpoints may lie outside the raster; only
+/// in-bounds disc pixels are written.
+fn stamp_segment(bitmap: &mut [u8], x0: i32, y0: i32, x1: i32, y1: i32, r: i32) {
+    let dx = (x1 - x0).abs();
+    let dy = -(y1 - y0).abs();
+    let sx = if x0 < x1 { 1 } else { -1 };
+    let sy = if y0 < y1 { 1 } else { -1 };
+    let mut err = dx + dy;
+    let (mut x, mut y) = (x0, y0);
+    loop {
+        stamp_disc(bitmap, x, y, r);
+        if x == x1 && y == y1 {
+            break;
+        }
+        let e2 = 2 * err;
+        if e2 >= dy {
+            err += dy;
+            x += sx;
+        }
+        if e2 <= dx {
+            err += dx;
+            y += sy;
+        }
+    }
+}
+
+/// Deterministically render sample `index` of digit `class` under `seed`.
+///
+/// Returns the finished [`Image`] plus the [`GenParams`] that were drawn
+/// (useful for diagnostics and tests).
+pub fn render_digit(seed: u32, class: u8, index: u32) -> (Image, GenParams) {
+    assert!(class <= 9, "digit class out of range");
+    let mut rng = derive_stream(seed, u32::from(class), index);
+
+    // -- step 1: parameter draws (ORDER IS CONTRACT) ------------------------
+    let params = GenParams {
+        dx: rng.range_i32(-14, 14),
+        dy: rng.range_i32(-14, 14),
+        angle_deg: rng.range_i32(-12, 12),
+        scale_q8: rng.range_i32(210, 290),
+        thickness: rng.range_i32(8, 12),
+        peak: rng.range_i32(170, 255),
+    };
+    let (sinv, cosv) = (sin_q10(params.angle_deg), cos_q10(params.angle_deg));
+
+    // -- steps 2+3: transform and rasterize each stroke ---------------------
+    let mut bitmap = vec![0u8; HI * HI];
+    for stroke in TEMPLATES[class as usize] {
+        // Transform every point (drawing jitter per point, in order).
+        let mut pts_hi: Vec<(i32, i32)> = Vec::with_capacity(stroke.len());
+        for &(tx, ty) in stroke.iter() {
+            let jx = rng.range_i32(-5, 5);
+            let jy = rng.range_i32(-5, 5);
+            let px = tx + jx - 128;
+            let py = ty + jy - 128;
+            let rx = (px * cosv - py * sinv) >> 10;
+            let ry = (px * sinv + py * cosv) >> 10;
+            let sx = (rx * params.scale_q8) >> 8;
+            let sy = (ry * params.scale_q8) >> 8;
+            let vx = sx + 128 + params.dx;
+            let vy = sy + 128 + params.dy;
+            pts_hi.push((virt_to_hi(vx), virt_to_hi(vy)));
+        }
+        for w in pts_hi.windows(2) {
+            let ((x0, y0), (x1, y1)) = (w[0], w[1]);
+            stamp_segment(&mut bitmap, x0, y0, x1, y1, params.thickness);
+        }
+    }
+
+    // -- step 4: 4×4 box downsample, scale by peak --------------------------
+    let mut pixels = vec![0u8; IMG_PIXELS];
+    for r in 0..IMG_SIDE {
+        for c in 0..IMG_SIDE {
+            let mut count = 0i32;
+            for sr in 0..4 {
+                for sc in 0..4 {
+                    count += i32::from(bitmap[(r * 4 + sr) * HI + (c * 4 + sc)]);
+                }
+            }
+            pixels[r * IMG_SIDE + c] = ((count * params.peak) / 16) as u8;
+        }
+    }
+
+    (Image { label: class, pixels }, params)
+}
+
+/// Convenience builder for full datasets.
+#[derive(Debug, Clone, Copy)]
+pub struct DigitGen {
+    /// Base seed; the canonical artifacts use 1 (train) and 2 (test).
+    pub seed: u32,
+}
+
+impl DigitGen {
+    pub fn new(seed: u32) -> Self {
+        DigitGen { seed }
+    }
+
+    /// Render one sample.
+    pub fn sample(&self, class: u8, index: u32) -> Image {
+        render_digit(self.seed, class, index).0
+    }
+
+    /// Build a balanced dataset with `per_class` samples of every digit,
+    /// interleaved by class (sample i of class c sits at `i * 10 + c`) so
+    /// any prefix of the dataset is still balanced.
+    pub fn dataset(&self, per_class: u32) -> Dataset {
+        let mut images = Vec::with_capacity(per_class as usize * 10);
+        for index in 0..per_class {
+            for class in 0u8..10 {
+                images.push(self.sample(class, index));
+            }
+        }
+        Dataset { images }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::PropRunner;
+
+    /// Cross-language golden: these FNV-1a hashes are independently
+    /// asserted by `python/tests/test_dataset.py` against the Python
+    /// mirror — together they pin the bit-exact dataset contract.
+    #[test]
+    fn cross_language_golden_hashes() {
+        let fnv = |data: &[u8]| {
+            data.iter()
+                .fold(0x811C_9DC5u32, |h, &b| (h ^ u32::from(b)).wrapping_mul(0x0100_0193))
+        };
+        let (a, _) = render_digit(1, 3, 7);
+        assert_eq!(fnv(&a.pixels), 0x03d4_95a4);
+        let (b, _) = render_digit(2, 8, 0);
+        assert_eq!(fnv(&b.pixels), 0x74ac_a3a0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, pa) = render_digit(1, 3, 7);
+        let (b, pb) = render_digit(1, 3, 7);
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn distinct_across_seed_class_index() {
+        let (a, _) = render_digit(1, 3, 7);
+        let (b, _) = render_digit(2, 3, 7);
+        let (c, _) = render_digit(1, 4, 7);
+        let (d, _) = render_digit(1, 3, 8);
+        assert_ne!(a.pixels, b.pixels);
+        assert_ne!(a.pixels, c.pixels);
+        assert_ne!(a.pixels, d.pixels);
+    }
+
+    #[test]
+    fn images_have_ink_and_background() {
+        // Every rendered digit must have a plausible amount of ink: not
+        // blank, not solid.
+        PropRunner::new("digit_ink", 100).run(|g| {
+            let seed = g.rng.next_u32();
+            let class = (g.rng.below(10)) as u8;
+            let index = g.rng.below(1000);
+            let (img, params) = render_digit(seed, class, index);
+            let ink: usize = img.pixels.iter().filter(|&&p| p > 0).count();
+            assert!(
+                (40..600).contains(&ink),
+                "digit {class} (seed {seed} idx {index}, {params:?}) has {ink} inked pixels"
+            );
+            let max = img.pixels.iter().copied().max().unwrap();
+            assert_eq!(
+                i32::from(max),
+                params.peak,
+                "peak intensity must be reached by fully-covered pixels"
+            );
+        });
+    }
+
+    #[test]
+    fn params_within_documented_ranges() {
+        PropRunner::new("digit_params", 200).run(|g| {
+            let (_, p) = render_digit(g.rng.next_u32(), (g.rng.below(10)) as u8, g.rng.below(100));
+            assert!((-14..=14).contains(&p.dx));
+            assert!((-14..=14).contains(&p.dy));
+            assert!((-12..=12).contains(&p.angle_deg));
+            assert!((210..=290).contains(&p.scale_q8));
+            assert!((8..=12).contains(&p.thickness));
+            assert!((170..=255).contains(&p.peak));
+        });
+    }
+
+    #[test]
+    fn dataset_balanced_and_interleaved() {
+        let ds = DigitGen::new(1).dataset(12);
+        assert_eq!(ds.len(), 120);
+        assert_eq!(ds.class_histogram(), [12; 10]);
+        // Interleaving: position i*10+c holds class c.
+        for (pos, img) in ds.images.iter().enumerate() {
+            assert_eq!(img.label as usize, pos % 10);
+        }
+        // Any prefix that is a multiple of 10 is balanced.
+        let h: [usize; 10] = {
+            let mut h = [0; 10];
+            for img in &ds.images[..50] {
+                h[img.label as usize] += 1;
+            }
+            h
+        };
+        assert_eq!(h, [5; 10]);
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Mean inter-class L1 distance should comfortably exceed mean
+        // intra-class distance — a cheap proxy for separability.
+        let gen = DigitGen::new(3);
+        let l1 = |a: &Image, b: &Image| -> f64 {
+            a.pixels
+                .iter()
+                .zip(&b.pixels)
+                .map(|(&x, &y)| (f64::from(x) - f64::from(y)).abs())
+                .sum::<f64>()
+        };
+        let mut intra = 0.0;
+        let mut inter = 0.0;
+        let mut n_intra = 0.0;
+        let mut n_inter = 0.0;
+        let samples: Vec<Vec<Image>> =
+            (0u8..10).map(|c| (0..4).map(|i| gen.sample(c, i)).collect()).collect();
+        for c in 0..10 {
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    intra += l1(&samples[c][i], &samples[c][j]);
+                    n_intra += 1.0;
+                }
+                for c2 in (c + 1)..10 {
+                    inter += l1(&samples[c][i], &samples[c2][i]);
+                    n_inter += 1.0;
+                }
+            }
+        }
+        let (intra, inter) = (intra / n_intra, inter / n_inter);
+        assert!(
+            inter > intra * 1.2,
+            "classes not separable: intra {intra:.0} vs inter {inter:.0}"
+        );
+    }
+}

@@ -1,0 +1,147 @@
+//! Loader for the standard MNIST IDX file format.
+//!
+//! The canonical artifacts in this repository use the synthetic digit set
+//! (no network access at build time — see DESIGN.md §2), but users who have
+//! the real `train-images-idx3-ubyte` / `train-labels-idx1-ubyte` files can
+//! point any experiment at them with `--mnist-dir`; everything downstream
+//! is dataset-agnostic.
+
+use std::fs;
+use std::path::Path;
+
+use super::{Dataset, Image, IMG_PIXELS, IMG_SIDE};
+use crate::error::{Error, Result};
+
+/// Load a `(images, labels)` IDX pair into a [`Dataset`].
+pub fn load_idx_pair(images_path: impl AsRef<Path>, labels_path: impl AsRef<Path>) -> Result<Dataset> {
+    let images_path = images_path.as_ref();
+    let labels_path = labels_path.as_ref();
+    let raw_imgs = fs::read(images_path).map_err(|e| Error::io(images_path, e))?;
+    let raw_lbls = fs::read(labels_path).map_err(|e| Error::io(labels_path, e))?;
+
+    let (n_imgs, pixels) = parse_idx3(&raw_imgs, images_path)?;
+    let labels = parse_idx1(&raw_lbls, labels_path)?;
+    if n_imgs != labels.len() {
+        return Err(Error::ShapeMismatch(format!(
+            "{n_imgs} images but {} labels",
+            labels.len()
+        )));
+    }
+    let mut images = Vec::with_capacity(n_imgs);
+    for (i, &label) in labels.iter().enumerate() {
+        if label > 9 {
+            return Err(Error::malformed(labels_path, format!("label {label} > 9 at {i}")));
+        }
+        images.push(Image {
+            label,
+            pixels: pixels[i * IMG_PIXELS..(i + 1) * IMG_PIXELS].to_vec(),
+        });
+    }
+    Ok(Dataset { images })
+}
+
+/// Load the conventional test pair from a directory
+/// (`t10k-images-idx3-ubyte`, `t10k-labels-idx1-ubyte`).
+pub fn load_test_set(dir: impl AsRef<Path>) -> Result<Dataset> {
+    let dir = dir.as_ref();
+    load_idx_pair(dir.join("t10k-images-idx3-ubyte"), dir.join("t10k-labels-idx1-ubyte"))
+}
+
+fn be_u32(buf: &[u8], at: usize, path: &Path) -> Result<u32> {
+    buf.get(at..at + 4)
+        .map(|s| u32::from_be_bytes(s.try_into().unwrap()))
+        .ok_or_else(|| Error::malformed(path, format!("truncated header at {at}")))
+}
+
+/// Parse an idx3-ubyte image file; returns (count, flattened pixels).
+fn parse_idx3<'a>(buf: &'a [u8], path: &Path) -> Result<(usize, &'a [u8])> {
+    let magic = be_u32(buf, 0, path)?;
+    if magic != 0x0000_0803 {
+        return Err(Error::malformed(path, format!("bad idx3 magic {magic:#010x}")));
+    }
+    let n = be_u32(buf, 4, path)? as usize;
+    let h = be_u32(buf, 8, path)? as usize;
+    let w = be_u32(buf, 12, path)? as usize;
+    if h != IMG_SIDE || w != IMG_SIDE {
+        return Err(Error::malformed(path, format!("unsupported geometry {h}x{w}")));
+    }
+    let body = &buf[16..];
+    if body.len() != n * IMG_PIXELS {
+        return Err(Error::malformed(
+            path,
+            format!("payload {} != {} x {IMG_PIXELS}", body.len(), n),
+        ));
+    }
+    Ok((n, body))
+}
+
+/// Parse an idx1-ubyte label file.
+fn parse_idx1<'a>(buf: &'a [u8], path: &Path) -> Result<&'a [u8]> {
+    let magic = be_u32(buf, 0, path)?;
+    if magic != 0x0000_0801 {
+        return Err(Error::malformed(path, format!("bad idx1 magic {magic:#010x}")));
+    }
+    let n = be_u32(buf, 4, path)? as usize;
+    let body = &buf[8..];
+    if body.len() != n {
+        return Err(Error::malformed(path, format!("payload {} != {n}", body.len())));
+    }
+    Ok(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_idx_pair(dir: &Path, n: usize) -> (std::path::PathBuf, std::path::PathBuf) {
+        let mut imgs = Vec::new();
+        imgs.extend_from_slice(&0x0803u32.to_be_bytes());
+        imgs.extend_from_slice(&(n as u32).to_be_bytes());
+        imgs.extend_from_slice(&(IMG_SIDE as u32).to_be_bytes());
+        imgs.extend_from_slice(&(IMG_SIDE as u32).to_be_bytes());
+        for i in 0..n {
+            imgs.extend(std::iter::repeat(i as u8).take(IMG_PIXELS));
+        }
+        let mut lbls = Vec::new();
+        lbls.extend_from_slice(&0x0801u32.to_be_bytes());
+        lbls.extend_from_slice(&(n as u32).to_be_bytes());
+        lbls.extend((0..n).map(|i| (i % 10) as u8));
+        let pi = dir.join("imgs.idx3");
+        let pl = dir.join("lbls.idx1");
+        fs::write(&pi, &imgs).unwrap();
+        fs::write(&pl, &lbls).unwrap();
+        (pi, pl)
+    }
+
+    #[test]
+    fn loads_valid_pair() {
+        let dir = std::env::temp_dir().join(format!("snn_idx_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let (pi, pl) = write_idx_pair(&dir, 12);
+        let ds = load_idx_pair(&pi, &pl).unwrap();
+        assert_eq!(ds.len(), 12);
+        assert_eq!(ds.images[3].label, 3);
+        assert!(ds.images[3].pixels.iter().all(|&p| p == 3));
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_mismatch() {
+        let dir = std::env::temp_dir().join(format!("snn_idx_bad_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let (pi, pl) = write_idx_pair(&dir, 4);
+
+        let mut bad = fs::read(&pi).unwrap();
+        bad[3] = 0x99;
+        let pbad = dir.join("bad.idx3");
+        fs::write(&pbad, &bad).unwrap();
+        assert!(load_idx_pair(&pbad, &pl).is_err());
+
+        // Count mismatch between images and labels.
+        let (pi8, _) = {
+            let d2 = dir.join("d2");
+            fs::create_dir_all(&d2).unwrap();
+            write_idx_pair(&d2, 8)
+        };
+        assert!(load_idx_pair(&pi8, &pl).is_err());
+    }
+}

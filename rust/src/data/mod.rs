@@ -1,0 +1,142 @@
+//! Datasets and image substrates.
+//!
+//! The paper evaluates on MNIST; this environment has no network access, so
+//! the primary dataset is a **synthetic stroke-rendered digit set** that is
+//! *bit-identical* between this module and `python/compile/dataset.py`
+//! (integer-only rendering driven by the shared xorshift32 contract — see
+//! DESIGN.md §2 for why this substitution preserves the paper's code path).
+//! A standard MNIST IDX loader is also provided for users who have the real
+//! files on disk.
+
+pub mod codec;
+pub mod digitgen;
+pub mod mnist_idx;
+pub mod perturb;
+mod templates;
+
+pub use codec::{load_dataset, load_weights, save_dataset, save_weights, WeightArtifact};
+pub use digitgen::{render_digit, DigitGen, GenParams};
+pub use templates::TEMPLATES;
+
+/// Image side length (28 × 28, as in MNIST).
+pub const IMG_SIDE: usize = 28;
+/// Pixels per image.
+pub const IMG_PIXELS: usize = IMG_SIDE * IMG_SIDE;
+
+/// A labelled 28×28 8-bit grayscale image.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Image {
+    /// Ground-truth class, `0..=9`.
+    pub label: u8,
+    /// Row-major intensities, `0..=255`.
+    pub pixels: Vec<u8>,
+}
+
+impl Image {
+    /// Construct, checking geometry.
+    pub fn new(label: u8, pixels: Vec<u8>) -> crate::Result<Self> {
+        if pixels.len() != IMG_PIXELS {
+            return Err(crate::Error::ShapeMismatch(format!(
+                "image has {} pixels, expected {IMG_PIXELS}",
+                pixels.len()
+            )));
+        }
+        if label > 9 {
+            return Err(crate::Error::InvalidConfig(format!("label {label} > 9")));
+        }
+        Ok(Image { label, pixels })
+    }
+
+    /// Pixel at (row, col).
+    #[inline]
+    pub fn at(&self, row: usize, col: usize) -> u8 {
+        self.pixels[row * IMG_SIDE + col]
+    }
+
+    /// Mean intensity (diagnostics).
+    pub fn mean_intensity(&self) -> f64 {
+        self.pixels.iter().map(|&p| f64::from(p)).sum::<f64>() / IMG_PIXELS as f64
+    }
+
+    /// Render as ASCII art (examples / debugging).
+    pub fn to_ascii(&self) -> String {
+        let ramp = b" .:-=+*#%@";
+        let mut s = String::with_capacity((IMG_SIDE + 1) * IMG_SIDE);
+        for r in 0..IMG_SIDE {
+            for c in 0..IMG_SIDE {
+                let v = self.at(r, c) as usize * (ramp.len() - 1) / 255;
+                s.push(ramp[v] as char);
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+impl std::fmt::Debug for Image {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Image(label={}, mean={:.1})", self.label, self.mean_intensity())
+    }
+}
+
+/// An in-memory labelled dataset.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub images: Vec<Image>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// Count of samples per class.
+    pub fn class_histogram(&self) -> [usize; 10] {
+        let mut h = [0usize; 10];
+        for img in &self.images {
+            h[img.label as usize] += 1;
+        }
+        h
+    }
+
+    /// Borrow all samples of one class.
+    pub fn of_class(&self, class: u8) -> impl Iterator<Item = &Image> {
+        self.images.iter().filter(move |i| i.label == class)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_validation() {
+        assert!(Image::new(0, vec![0; IMG_PIXELS]).is_ok());
+        assert!(Image::new(0, vec![0; 100]).is_err());
+        assert!(Image::new(10, vec![0; IMG_PIXELS]).is_err());
+    }
+
+    #[test]
+    fn ascii_render_shape() {
+        let img = Image::new(3, vec![128; IMG_PIXELS]).unwrap();
+        let art = img.to_ascii();
+        assert_eq!(art.lines().count(), IMG_SIDE);
+        assert!(art.lines().all(|l| l.chars().count() == IMG_SIDE));
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut d = Dataset::default();
+        for label in [1u8, 1, 3, 9] {
+            d.images.push(Image::new(label, vec![0; IMG_PIXELS]).unwrap());
+        }
+        let h = d.class_histogram();
+        assert_eq!(h[1], 2);
+        assert_eq!(h[3], 1);
+        assert_eq!(h[9], 1);
+        assert_eq!(d.of_class(1).count(), 2);
+    }
+}

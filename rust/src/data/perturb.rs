@@ -1,0 +1,291 @@
+//! Image perturbations for the robustness study (paper Fig. 8).
+//!
+//! Four perturbations — rotation, pixel shift, Gaussian noise, occlusion —
+//! all implemented in integer arithmetic over the shared xorshift32 streams
+//! so that the Rust and Python harnesses evaluate the *same* perturbed
+//! pixels (contract mirrored in `python/compile/dataset.py`).
+//!
+//! Per-sample randomness is drawn from `derive_stream(seed, kind as u32,
+//! sample_index)`; the draw order within each perturbation is documented on
+//! the function and is part of the contract.
+
+use super::{Image, IMG_PIXELS, IMG_SIDE};
+use crate::prng::{derive_stream, Xorshift32};
+
+/// The perturbation kinds of Fig. 8, with their paper parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Perturbation {
+    /// No perturbation (baseline bar of Fig. 8).
+    Clean,
+    /// Rotation by ±deg (paper: 15°). Sign drawn per sample.
+    Rotate { deg: i32 },
+    /// Translation by `round(fraction·28)` pixels in a random direction
+    /// (paper: 20 % → 6 px).
+    Shift { percent: u32 },
+    /// Additive integer-Gaussian noise; `scale_q8` is the Q8 noise gain
+    /// (effective σ ≈ 0.289 · scale_q8 intensity levels).
+    Noise { scale_q8: i32 },
+    /// A `side × side` black square at a random position (paper: partial
+    /// occlusion; we use 10 px ≈ 36 % of the width).
+    Occlude { side: usize },
+}
+
+impl Perturbation {
+    /// Stable numeric id used for PRNG domain separation and CSV output.
+    pub fn kind_id(&self) -> u32 {
+        match self {
+            Perturbation::Clean => 0,
+            Perturbation::Rotate { .. } => 1,
+            Perturbation::Shift { .. } => 2,
+            Perturbation::Noise { .. } => 3,
+            Perturbation::Occlude { .. } => 4,
+        }
+    }
+
+    /// Human-readable label matching the Fig. 8 x-axis.
+    pub fn label(&self) -> String {
+        match self {
+            Perturbation::Clean => "clean".into(),
+            Perturbation::Rotate { deg } => format!("rotation {deg}deg"),
+            Perturbation::Shift { percent } => format!("pixel shift {percent}%"),
+            Perturbation::Noise { scale_q8 } => format!("gaussian noise s{scale_q8}"),
+            Perturbation::Occlude { side } => format!("occlusion {side}px"),
+        }
+    }
+
+    /// The paper's Fig. 8 suite.
+    pub fn paper_suite() -> Vec<Perturbation> {
+        vec![
+            Perturbation::Clean,
+            Perturbation::Rotate { deg: 15 },
+            Perturbation::Shift { percent: 20 },
+            Perturbation::Noise { scale_q8: 138 }, // σ ≈ 40 intensity levels
+            Perturbation::Occlude { side: 10 },
+        ]
+    }
+
+    /// Apply to `img` as sample `index` under `seed`.
+    pub fn apply(&self, img: &Image, seed: u32, index: u32) -> Image {
+        let mut rng = derive_stream(seed, self.kind_id(), index);
+        match *self {
+            Perturbation::Clean => img.clone(),
+            Perturbation::Rotate { deg } => {
+                // Draw order: sign.
+                let sign = if rng.next_u32() & 1 == 0 { 1 } else { -1 };
+                rotate(img, sign * deg)
+            }
+            Perturbation::Shift { percent } => {
+                // Draw order: direction index (8 compass directions).
+                let mag = ((percent as i32) * (IMG_SIDE as i32) + 50) / 100;
+                let dir = rng.below(8) as usize;
+                const DIRS: [(i32, i32); 8] =
+                    [(1, 0), (1, 1), (0, 1), (-1, 1), (-1, 0), (-1, -1), (0, -1), (1, -1)];
+                let (sx, sy) = DIRS[dir];
+                shift(img, sx * mag, sy * mag)
+            }
+            Perturbation::Noise { scale_q8 } => noise(img, scale_q8, &mut rng),
+            Perturbation::Occlude { side } => {
+                // Draw order: row origin, then column origin.
+                let r0 = rng.below((IMG_SIDE - side + 1) as u32) as usize;
+                let c0 = rng.below((IMG_SIDE - side + 1) as u32) as usize;
+                occlude(img, r0, c0, side)
+            }
+        }
+    }
+}
+
+/// sin(d°) in Q10 for d = 0..=15 (shared with digitgen).
+const SIN_Q10: [i32; 16] =
+    [0, 18, 36, 54, 71, 89, 107, 125, 143, 160, 178, 195, 213, 230, 248, 265];
+const COS_Q10: [i32; 16] =
+    [1024, 1024, 1023, 1023, 1022, 1020, 1018, 1016, 1014, 1011, 1008, 1005, 1002, 998, 994, 989];
+
+/// Rotate by `deg ∈ [-15, 15]` about the image centre with inverse-mapped
+/// nearest-neighbour sampling, all in integer arithmetic.
+///
+/// Coordinates are handled in doubled units so the centre (13.5, 13.5)
+/// is the integer 27; the final `>> 11` divides by 1024 (Q10 trig) and by
+/// the doubling in one arithmetic shift.
+pub fn rotate(img: &Image, deg: i32) -> Image {
+    assert!((-15..=15).contains(&deg));
+    let a = deg.unsigned_abs() as usize;
+    let (sinv, cosv) = (if deg < 0 { -SIN_Q10[a] } else { SIN_Q10[a] }, COS_Q10[a]);
+    let mut out = vec![0u8; IMG_PIXELS];
+    for r in 0..IMG_SIDE as i32 {
+        for c in 0..IMG_SIDE as i32 {
+            let xr = c * 2 - 27; // doubled units, centred
+            let yr = r * 2 - 27;
+            // Inverse rotation (rotate sample grid by -deg).
+            let sx = xr * cosv + yr * sinv;
+            let sy = -xr * sinv + yr * cosv;
+            let sc = (sx + 27 * 1024 + 1024) >> 11;
+            let sr = (sy + 27 * 1024 + 1024) >> 11;
+            if (0..IMG_SIDE as i32).contains(&sc) && (0..IMG_SIDE as i32).contains(&sr) {
+                out[(r as usize) * IMG_SIDE + c as usize] =
+                    img.pixels[(sr as usize) * IMG_SIDE + sc as usize];
+            }
+        }
+    }
+    Image { label: img.label, pixels: out }
+}
+
+/// Translate by `(dx, dy)` pixels (x = columns, y = rows), zero-filling.
+pub fn shift(img: &Image, dx: i32, dy: i32) -> Image {
+    let mut out = vec![0u8; IMG_PIXELS];
+    for r in 0..IMG_SIDE as i32 {
+        for c in 0..IMG_SIDE as i32 {
+            let (sr, sc) = (r - dy, c - dx);
+            if (0..IMG_SIDE as i32).contains(&sr) && (0..IMG_SIDE as i32).contains(&sc) {
+                out[(r as usize) * IMG_SIDE + c as usize] =
+                    img.pixels[(sr as usize) * IMG_SIDE + sc as usize];
+            }
+        }
+    }
+    Image { label: img.label, pixels: out }
+}
+
+/// Additive central-limit "Gaussian" noise: per pixel (row-major order),
+/// draw four PRNG words, sum their low bytes, centre at 510 and scale by
+/// `scale_q8 / 512`. Clamps to `0..=255`.
+pub fn noise(img: &Image, scale_q8: i32, rng: &mut Xorshift32) -> Image {
+    let mut out = vec![0u8; IMG_PIXELS];
+    for (i, &p) in img.pixels.iter().enumerate() {
+        let mut sum = 0i32;
+        for _ in 0..4 {
+            sum += (rng.next_u32() & 0xFF) as i32;
+        }
+        let delta = ((sum - 510) * scale_q8) >> 9;
+        out[i] = (i32::from(p) + delta).clamp(0, 255) as u8;
+    }
+    Image { label: img.label, pixels: out }
+}
+
+/// Zero a `side × side` square whose top-left corner is `(r0, c0)`.
+pub fn occlude(img: &Image, r0: usize, c0: usize, side: usize) -> Image {
+    assert!(r0 + side <= IMG_SIDE && c0 + side <= IMG_SIDE);
+    let mut out = img.pixels.clone();
+    for r in r0..r0 + side {
+        out[r * IMG_SIDE + c0..r * IMG_SIDE + c0 + side].fill(0);
+    }
+    Image { label: img.label, pixels: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::digitgen::render_digit;
+    use crate::testutil::PropRunner;
+
+    fn probe() -> Image {
+        render_digit(1, 5, 0).0
+    }
+
+    #[test]
+    fn rotate_zero_is_identity() {
+        let img = probe();
+        assert_eq!(rotate(&img, 0).pixels, img.pixels);
+    }
+
+    #[test]
+    fn rotate_preserves_mass_roughly() {
+        let img = probe();
+        let rot = rotate(&img, 15);
+        let m0 = img.mean_intensity();
+        let m1 = rot.mean_intensity();
+        assert!((m0 - m1).abs() / m0 < 0.15, "rotation lost too much ink: {m0} -> {m1}");
+    }
+
+    #[test]
+    fn rotate_pm_are_different() {
+        let img = probe();
+        assert_ne!(rotate(&img, 15).pixels, rotate(&img, -15).pixels);
+    }
+
+    #[test]
+    fn shift_moves_pixels_exactly() {
+        let img = probe();
+        let s = shift(&img, 3, -2);
+        for r in 0..IMG_SIDE {
+            for c in 0..IMG_SIDE {
+                let sr = r as i32 + 2; // inverse of dy=-2
+                let sc = c as i32 - 3;
+                let expect = if (0..IMG_SIDE as i32).contains(&sr)
+                    && (0..IMG_SIDE as i32).contains(&sc)
+                {
+                    img.pixels[sr as usize * IMG_SIDE + sc as usize]
+                } else {
+                    0
+                };
+                assert_eq!(s.pixels[r * IMG_SIDE + c], expect);
+            }
+        }
+    }
+
+    #[test]
+    fn noise_statistics() {
+        let img = Image { label: 0, pixels: vec![128; IMG_PIXELS] };
+        let mut rng = Xorshift32::new(1);
+        let n = noise(&img, 138, &mut rng);
+        let mean = n.mean_intensity();
+        assert!((mean - 128.0).abs() < 6.0, "noise is biased: mean {mean}");
+        let var = n
+            .pixels
+            .iter()
+            .map(|&p| {
+                let d = f64::from(p) - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / IMG_PIXELS as f64;
+        let sd = var.sqrt();
+        // Effective σ ≈ 0.289 * 138 ≈ 39.9 levels.
+        assert!((sd - 39.9).abs() < 6.0, "noise σ {sd} far from 39.9");
+    }
+
+    #[test]
+    fn occlude_zeroes_exact_block() {
+        let img = probe();
+        let o = occlude(&img, 5, 7, 10);
+        for r in 0..IMG_SIDE {
+            for c in 0..IMG_SIDE {
+                let inside = (5..15).contains(&r) && (7..17).contains(&c);
+                if inside {
+                    assert_eq!(o.pixels[r * IMG_SIDE + c], 0);
+                } else {
+                    assert_eq!(o.pixels[r * IMG_SIDE + c], img.pixels[r * IMG_SIDE + c]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apply_is_deterministic_per_index() {
+        let img = probe();
+        for p in Perturbation::paper_suite() {
+            let a = p.apply(&img, 42, 3);
+            let b = p.apply(&img, 42, 3);
+            assert_eq!(a.pixels, b.pixels, "{} not deterministic", p.label());
+            if p != Perturbation::Clean {
+                let c = p.apply(&img, 42, 4);
+                // Different sample index must draw different randomness
+                // (rotation only has two outcomes, so allow equality there).
+                if !matches!(p, Perturbation::Rotate { .. }) {
+                    assert_ne!(c.pixels, a.pixels, "{} ignored index", p.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_all_perturbations_keep_label_and_range() {
+        PropRunner::new("perturb_label_range", 100).run(|g| {
+            let class = g.rng.below(10) as u8;
+            let img = render_digit(7, class, g.rng.below(50)).0;
+            let suite = Perturbation::paper_suite();
+            let p = g.choice(&suite);
+            let out = p.apply(&img, g.rng.next_u32(), g.rng.below(1000));
+            assert_eq!(out.label, class);
+            assert_eq!(out.pixels.len(), IMG_PIXELS);
+        });
+    }
+}

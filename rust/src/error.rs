@@ -1,0 +1,63 @@
+//! Crate-wide error type.
+//!
+//! The library uses a structured [`Error`] (via `thiserror`); binaries and
+//! examples wrap it in `anyhow` for context-rich reporting.
+
+use std::path::PathBuf;
+
+/// Convenience alias used across the crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Errors produced by the snn-rtl library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// An I/O failure, annotated with the path that was being accessed.
+    #[error("i/o error on {path}: {source}")]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// A binary artifact had the wrong magic number / version / geometry.
+    #[error("malformed artifact {path}: {reason}")]
+    MalformedArtifact { path: PathBuf, reason: String },
+
+    /// A configuration value was out of range or inconsistent.
+    #[error("invalid configuration: {0}")]
+    InvalidConfig(String),
+
+    /// A runtime (PJRT / XLA) failure.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// The coordinator rejected a request (queue full, shut down, ...).
+    #[error("request rejected: {0}")]
+    Rejected(String),
+
+    /// A worker or channel disappeared mid-flight.
+    #[error("coordinator internal failure: {0}")]
+    Coordinator(String),
+
+    /// Dimension mismatch between tensors / images / weight matrices.
+    #[error("shape mismatch: {0}")]
+    ShapeMismatch(String),
+}
+
+impl Error {
+    /// Wrap an `std::io::Error` with the offending path.
+    pub fn io(path: impl Into<PathBuf>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+
+    /// Construct a malformed-artifact error.
+    pub fn malformed(path: impl Into<PathBuf>, reason: impl Into<String>) -> Self {
+        Error::MalformedArtifact { path: path.into(), reason: reason.into() }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

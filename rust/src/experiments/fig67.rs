@@ -1,0 +1,101 @@
+//! Fig. 6 (accuracy vs wall-clock inference time) and Fig. 7 (the
+//! efficiency metric accuracy/time): the Fig. 5 series re-based onto the
+//! hardware time axis using *measured* RTL cycle counts at the paper's
+//! 40 MHz clock.
+
+use crate::rtl::{EnergyModel, RtlCore};
+
+use super::fig5::compute_accuracy_curve;
+use super::{Ctx, Result};
+
+/// Measured cycles for a `t`-timestep window on the RTL core.
+pub fn cycles_for_window(ctx: &Ctx, t: u32) -> Result<u64> {
+    let cfg = ctx.cfg.clone().with_timesteps(t);
+    let mut core = RtlCore::new(cfg, ctx.weights.weights.clone())?;
+    let img = &ctx.test.images[0];
+    Ok(core.run(img, ctx.eval_seed(0))?.cycles)
+}
+
+/// The Fig. 6 series: (timesteps, time_us, accuracy).
+pub fn compute_fig6(ctx: &Ctx) -> Result<Vec<(u32, f64, f64)>> {
+    let f_clk = EnergyModel::default().f_clk_hz;
+    let curve = compute_accuracy_curve(ctx, ctx.cfg.timesteps)?;
+    curve
+        .into_iter()
+        .map(|(t, acc)| {
+            let cycles = cycles_for_window(ctx, t)?;
+            Ok((t, cycles as f64 / f_clk * 1e6, acc))
+        })
+        .collect()
+}
+
+pub fn run_fig6(ctx: &Ctx) -> Result<()> {
+    println!(
+        "FIG 6 — accuracy vs inference time (measured RTL cycles @ {} MHz)",
+        EnergyModel::default().f_clk_hz / 1e6
+    );
+    let series = compute_fig6(ctx)?;
+    let mut rows = Vec::new();
+    for &(t, us, acc) in &series {
+        println!("t={t:>2}  {us:>9.1} µs  {:>6.2}%", acc * 100.0);
+        rows.push(format!("{t},{us:.2},{acc:.4}"));
+    }
+    let path = ctx.write_csv("fig6.csv", "timesteps,time_us,accuracy", &rows)?;
+    println!("-> {}", path.display());
+    Ok(())
+}
+
+pub fn run_fig7(ctx: &Ctx) -> Result<()> {
+    println!("FIG 7 — efficiency (accuracy% / inference seconds) vs inference time");
+    let series = compute_fig6(ctx)?;
+    let mut rows = Vec::new();
+    let mut peak_t = 0u32;
+    let mut peak_eff = 0.0f64;
+    for &(t, us, acc) in &series {
+        let eff = (acc * 100.0) / (us / 1e6);
+        if eff > peak_eff {
+            peak_eff = eff;
+            peak_t = t;
+        }
+        println!("t={t:>2}  {us:>9.1} µs  efficiency {eff:>12.0}");
+        rows.push(format!("{t},{us:.2},{eff:.1}"));
+    }
+    let path = ctx.write_csv("fig7.csv", "timesteps,time_us,efficiency", &rows)?;
+    println!("-> {}", path.display());
+    println!(
+        "efficiency peaks at t={peak_t} — earliest usable window, supporting the \
+         paper's early-termination argument"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::test_support::synthetic_ctx;
+
+    #[test]
+    fn cycles_scale_linearly_with_window() {
+        let ctx = synthetic_ctx(10);
+        let c1 = cycles_for_window(&ctx, 1).unwrap();
+        let c4 = cycles_for_window(&ctx, 4).unwrap();
+        assert_eq!(c4, c1 * 4, "per-timestep schedule must be constant");
+        assert_eq!(c1, 786, "784 integrate + 1 leak + 1 fire");
+    }
+
+    #[test]
+    fn fig7_efficiency_decreasing_after_convergence() {
+        let mut ctx = synthetic_ctx(50);
+        ctx.samples = Some(50);
+        ctx.cfg.timesteps = 6;
+        let series = compute_fig6(&ctx).unwrap();
+        // Once accuracy saturates, efficiency ∝ 1/t must strictly fall.
+        let effs: Vec<f64> =
+            series.iter().map(|&(_, us, acc)| acc * 100.0 / (us / 1e6)).collect();
+        let last = effs.len() - 1;
+        assert!(
+            effs[last] < effs[last - 1] || series[last].2 > series[last - 1].2,
+            "efficiency must decay once accuracy stops improving: {effs:?}"
+        );
+    }
+}

@@ -1,0 +1,81 @@
+//! Fig. 8: robustness under rotation, pixel shift, Gaussian noise and
+//! occlusion (the paper's edge-deployment stress test).
+
+use crate::data::perturb::Perturbation;
+use crate::snn::BehavioralNet;
+
+use super::{accuracy, Ctx, Result};
+
+/// Accuracy at T = 10 under each perturbation of the paper suite.
+pub fn compute_fig8(ctx: &Ctx, perturb_seed: u32) -> Result<Vec<(String, f64)>> {
+    let imgs = ctx.eval_slice();
+    let labels: Vec<u8> = imgs.iter().map(|i| i.label).collect();
+    let t = 10u32.min(ctx.cfg.timesteps);
+    let net = BehavioralNet::new(
+        ctx.cfg.clone().with_timesteps(t),
+        ctx.weights.weights.clone(),
+    )?;
+    let mut out = Vec::new();
+    for p in Perturbation::paper_suite() {
+        let preds: Vec<u8> = imgs
+            .iter()
+            .enumerate()
+            .map(|(i, img)| {
+                let perturbed = p.apply(img, perturb_seed, i as u32);
+                net.classify(&perturbed, ctx.eval_seed(i)).class
+            })
+            .collect();
+        out.push((p.label(), accuracy(&preds, &labels)));
+    }
+    Ok(out)
+}
+
+pub fn run_fig8(ctx: &Ctx) -> Result<()> {
+    let n = ctx.eval_slice().len();
+    println!("FIG 8 — robustness test ({n} samples, T=10)");
+    let results = compute_fig8(ctx, 0xF168)?;
+    let mut rows = Vec::new();
+    for (label, acc) in &results {
+        let bar = "#".repeat((acc * 50.0) as usize);
+        println!("{label:<24} {:>6.2}%  {bar}", acc * 100.0);
+        rows.push(format!("{label},{acc:.4}"));
+    }
+    let path = ctx.write_csv("fig8.csv", "perturbation,accuracy", &rows)?;
+    println!("-> {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::test_support::synthetic_ctx;
+
+    #[test]
+    fn suite_shape() {
+        let mut ctx = synthetic_ctx(50);
+        ctx.samples = Some(50);
+        let results = compute_fig8(&ctx, 7).unwrap();
+        assert_eq!(results.len(), 5);
+        assert_eq!(results[0].0, "clean");
+        assert!(results.iter().all(|(_, a)| (0.0..=1.0).contains(a)));
+    }
+
+    /// With the real trained weights, clean accuracy dominates and the
+    /// perturbations degrade it (Fig. 8's qualitative claim).
+    #[test]
+    fn clean_beats_or_matches_perturbed_on_artifacts() {
+        let Some(ctx) = crate::experiments::test_support::artifact_ctx(200) else {
+            eprintln!("skipped: artifacts not built");
+            return;
+        };
+        let results = compute_fig8(&ctx, 7).unwrap();
+        let clean = results[0].1;
+        assert!(clean > 0.85, "clean accuracy too low: {clean}");
+        for (label, acc) in &results[1..] {
+            assert!(
+                *acc <= clean + 0.02,
+                "{label} should not beat clean accuracy: {acc} vs {clean}"
+            );
+        }
+    }
+}

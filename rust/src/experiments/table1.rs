@@ -1,0 +1,105 @@
+//! Table I: stochastic input current statistics (first timestep, 300
+//! samples per digit).
+//!
+//! For each digit class `d`, over the test samples of that class, we
+//! measure the input current `Σ_i W[i][d]·S_i[0]` delivered to the class's
+//! own neuron on the very first encoder timestep — the quantity whose
+//! avg/min/max the paper tabulates, with an OK/flag status column checking
+//! the current is usable (positive mean, below saturation).
+
+use crate::snn::encode_step;
+
+use super::{Ctx, Result};
+
+/// Per-digit first-step current statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CurrentStats {
+    pub digit: u8,
+    pub samples: usize,
+    pub avg: f64,
+    pub min: i64,
+    pub max: i64,
+    pub ok: bool,
+}
+
+/// Compute the Table I statistics over up to `per_class` samples per digit.
+pub fn compute_table1(ctx: &Ctx, per_class: usize) -> Result<Vec<CurrentStats>> {
+    let w = &ctx.weights.weights;
+    let mut out = Vec::with_capacity(10);
+    for digit in 0u8..10 {
+        let mut sum = 0f64;
+        let mut min = i64::MAX;
+        let mut max = i64::MIN;
+        let mut n = 0usize;
+        for (idx, img) in ctx.test.of_class(digit).take(per_class).enumerate() {
+            let seed = ctx.eval_seed(idx * 10 + digit as usize);
+            let spikes = encode_step(img, seed, 0);
+            let mut current = 0i64;
+            for (i, &s) in spikes.iter().enumerate() {
+                if s {
+                    current += i64::from(w.get(i, digit as usize));
+                }
+            }
+            sum += current as f64;
+            min = min.min(current);
+            max = max.max(current);
+            n += 1;
+        }
+        let avg = if n > 0 { sum / n as f64 } else { 0.0 };
+        // Status: the current must drive the neuron (positive mean) and
+        // stay far from the accumulator rails.
+        let ok = n > 0 && avg > 0.0 && max < i64::from(ctx.cfg.acc_max()) / 4;
+        out.push(CurrentStats { digit, samples: n, avg, min, max, ok });
+    }
+    Ok(out)
+}
+
+/// Print the paper-formatted table and write the CSV.
+pub fn run_table1(ctx: &Ctx) -> Result<()> {
+    let per_class = ctx.samples.map(|s| s / 10).unwrap_or(300).max(1);
+    let stats = compute_table1(ctx, per_class)?;
+    println!("TABLE I — stochastic input current statistics (first timestep, {per_class} samples)");
+    println!("{:<6} {:>12} {:>8} {:>8}   {}", "Digit", "Avg Current", "Min", "Max", "Status");
+    let mut rows = Vec::new();
+    for s in &stats {
+        println!(
+            "{:<6} {:>12.1} {:>8} {:>8}   {}",
+            s.digit,
+            s.avg,
+            s.min,
+            s.max,
+            if s.ok { "OK" } else { "FLAG" }
+        );
+        rows.push(format!("{},{},{:.2},{},{},{}", s.digit, s.samples, s.avg, s.min, s.max, s.ok));
+    }
+    let path = ctx.write_csv("table1.csv", "digit,samples,avg,min,max,ok", &rows)?;
+    println!("-> {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::test_support::synthetic_ctx;
+
+    #[test]
+    fn own_class_current_is_positive_and_ok() {
+        let ctx = synthetic_ctx(100);
+        let stats = compute_table1(&ctx, 10).unwrap();
+        assert_eq!(stats.len(), 10);
+        for s in &stats {
+            assert_eq!(s.samples, 10);
+            assert!(s.avg > 0.0, "digit {} has non-positive mean current", s.digit);
+            assert!(s.ok, "digit {} flagged: {s:?}", s.digit);
+            assert!(i64::from(s.min as i32) <= s.max);
+        }
+    }
+
+    #[test]
+    fn csv_written() {
+        let ctx = synthetic_ctx(50);
+        run_table1(&ctx).unwrap();
+        let csv = std::fs::read_to_string(ctx.results_dir.join("table1.csv")).unwrap();
+        assert_eq!(csv.lines().count(), 11); // header + 10 digits
+    }
+}

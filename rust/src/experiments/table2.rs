@@ -1,0 +1,208 @@
+//! Table II: the TinyML-ANN vs proposed-SNN comparison — arithmetic class,
+//! multiplication count, model size, latency and power/energy — built from
+//! *measured* quantities on both sides (exact op counts + the documented
+//! ESP32 and 45 nm energy models; DESIGN.md §2).
+
+use crate::ann::{AnnOpCounts, Esp32Model, Mlp};
+use crate::rtl::{EnergyModel, RtlCore};
+use crate::snn::BehavioralNet;
+
+use super::{accuracy, Ctx, Result};
+
+/// Everything Table II reports, measured.
+#[derive(Debug, Clone)]
+pub struct Table2 {
+    pub ann_ops: AnnOpCounts,
+    pub ann_latency_soft_us: f64,
+    pub ann_latency_dsp_us: f64,
+    pub ann_energy_dsp_uj: f64,
+    pub ann_accuracy: Option<f64>,
+    pub snn_model_bytes: u64,
+    pub snn_adds_per_inference: f64,
+    pub snn_cycles: u64,
+    pub snn_latency_us: f64,
+    pub snn_energy_uj: f64,
+    pub snn_avg_power_mw: f64,
+    pub snn_accuracy: f64,
+    /// Model size reduction factor (the paper's 11.3×).
+    pub memory_reduction: f64,
+}
+
+/// Compute the comparison over the evaluation slice at T = 10 (the paper's
+/// convergence window).
+pub fn compute_table2(ctx: &Ctx) -> Result<Table2> {
+    let imgs = ctx.eval_slice();
+    let labels: Vec<u8> = imgs.iter().map(|i| i.label).collect();
+    let t = 10u32.min(ctx.cfg.timesteps);
+    let cfg = ctx.cfg.clone().with_timesteps(t);
+
+    // --- SNN side: measured on the RTL core -------------------------------
+    let mut core = RtlCore::new(cfg.clone(), ctx.weights.weights.clone())?;
+    let probe = imgs.len().min(50).max(1);
+    let mut adds = 0u64;
+    let mut cycles = 0u64;
+    let mut energy_nj = 0f64;
+    let mut power_mw = 0f64;
+    for (i, img) in imgs.iter().take(probe).enumerate() {
+        let r = core.run(img, ctx.eval_seed(i))?;
+        adds += r.activity.adds;
+        cycles += r.cycles;
+        energy_nj += r.energy.dynamic_nj + r.energy.static_nj;
+        power_mw += r.energy.avg_power_mw;
+    }
+    let snn_cycles = cycles / probe as u64;
+    let f_clk = EnergyModel::default().f_clk_hz;
+
+    // Accuracy over the full slice with the fast behavioral model (bit-
+    // equivalent to the RTL by test).
+    let net = BehavioralNet::new(cfg, ctx.weights.weights.clone())?;
+    let preds: Vec<u8> = imgs
+        .iter()
+        .enumerate()
+        .map(|(i, img)| net.classify(img, ctx.eval_seed(i)).class)
+        .collect();
+    let snn_accuracy = accuracy(&preds, &labels);
+
+    // --- ANN side ----------------------------------------------------------
+    let ann_ops = AnnOpCounts::for_topology(784, 32, 10);
+    let esp = Esp32Model::default().evaluate(&ann_ops);
+    let ann_accuracy = Mlp::load(ctx.manifest.path("ann_weights.bin"))
+        .ok()
+        .map(|mlp| {
+            let preds: Vec<u8> = imgs.iter().map(|img| mlp.classify(img)).collect();
+            accuracy(&preds, &labels)
+        });
+
+    let snn_model_bytes = (ctx.cfg.weight_storage_bits() + 7) / 8;
+    Ok(Table2 {
+        ann_ops,
+        ann_latency_soft_us: esp.latency_soft_us,
+        ann_latency_dsp_us: esp.latency_dsp_us,
+        ann_energy_dsp_uj: esp.energy_dsp_uj,
+        ann_accuracy,
+        snn_model_bytes,
+        snn_adds_per_inference: adds as f64 / probe as f64,
+        snn_cycles,
+        snn_latency_us: snn_cycles as f64 / f_clk * 1e6,
+        snn_energy_uj: energy_nj / probe as f64 / 1e3,
+        snn_avg_power_mw: power_mw / probe as f64,
+        snn_accuracy,
+        memory_reduction: ann_ops.model_bytes as f64 / snn_model_bytes as f64,
+    })
+}
+
+pub fn run_table2(ctx: &Ctx) -> Result<()> {
+    let t2 = compute_table2(ctx)?;
+    println!("TABLE II — TinyML ANN (ESP32 cost model) vs proposed SNN (RTL, measured)");
+    println!("{:<22} {:>26} {:>26}", "Metric", "Baseline ANN (ESP32)", "Proposed SNN (RTL)");
+    println!("{:<22} {:>26} {:>26}", "Arithmetic", "f32 MAC", "fixed-point add/shift");
+    println!(
+        "{:<22} {:>26} {:>26}",
+        "Multiplications",
+        format!("{}", t2.ann_ops.multiplications),
+        "0"
+    );
+    println!(
+        "{:<22} {:>26} {:>26}",
+        "Additions",
+        format!("{}", t2.ann_ops.additions),
+        format!("{:.0} (event-driven)", t2.snn_adds_per_inference)
+    );
+    println!(
+        "{:<22} {:>26} {:>26}",
+        "Model size",
+        format!("{:.1} KB", t2.ann_ops.model_bytes as f64 / 1024.0),
+        format!("{:.2} KB ({:.1}x smaller)", t2.snn_model_bytes as f64 / 1024.0,
+                t2.memory_reduction)
+    );
+    println!(
+        "{:<22} {:>26} {:>26}",
+        "Latency",
+        format!("{:.2} s / {:.0} µs (DSP)", t2.ann_latency_soft_us / 1e6, t2.ann_latency_dsp_us),
+        format!("{:.1} µs ({} cycles)", t2.snn_latency_us, t2.snn_cycles)
+    );
+    println!(
+        "{:<22} {:>26} {:>26}",
+        "Energy/inference",
+        format!("{:.0} µJ (DSP)", t2.ann_energy_dsp_uj),
+        format!("{:.3} µJ", t2.snn_energy_uj)
+    );
+    println!(
+        "{:<22} {:>26} {:>26}",
+        "Avg power",
+        "continuous active",
+        format!("{:.2} mW", t2.snn_avg_power_mw)
+    );
+    println!(
+        "{:<22} {:>26} {:>26}",
+        "Accuracy (T=10)",
+        t2.ann_accuracy.map_or("n/a".to_string(), |a| format!("{:.2}%", a * 100.0)),
+        format!("{:.2}%", t2.snn_accuracy * 100.0)
+    );
+
+    let rows = vec![format!(
+        "{},{},{},{:.1},{:.1},{:.0},{:.3},{},{:.1},{:.4},{}",
+        t2.ann_ops.multiplications,
+        t2.ann_ops.additions,
+        t2.ann_ops.model_bytes,
+        t2.ann_latency_soft_us,
+        t2.ann_latency_dsp_us,
+        t2.snn_adds_per_inference,
+        t2.snn_energy_uj,
+        t2.snn_model_bytes,
+        t2.snn_latency_us,
+        t2.snn_accuracy,
+        t2.ann_accuracy.map_or(String::from(""), |a| format!("{a:.4}")),
+    )];
+    let path = ctx.write_csv(
+        "table2.csv",
+        "ann_mults,ann_adds,ann_bytes,ann_soft_us,ann_dsp_us,snn_adds,snn_energy_uj,\
+         snn_bytes,snn_latency_us,snn_acc,ann_acc",
+        &rows,
+    )?;
+    println!("-> {}", path.display());
+    println!(
+        "note: paper's Table II latency row (<1 µs) contradicts its own §V-C text \
+         (10 steps @ 40 MHz ≈ 100 µs); we report measured cycles — see EXPERIMENTS.md"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::test_support::synthetic_ctx;
+
+    #[test]
+    fn headline_ratios_reproduce() {
+        let mut ctx = synthetic_ctx(100);
+        ctx.samples = Some(100);
+        let t2 = compute_table2(&ctx).unwrap();
+        // Paper's identity rows. (The exact byte ratio is 101,800 B /
+        // 8,820 B = 11.54×; the paper's "11.3×" rounds both sides first.)
+        assert_eq!(t2.ann_ops.multiplications, 25_408);
+        assert!((t2.memory_reduction - 11.54).abs() < 0.05, "{}", t2.memory_reduction);
+        // SNN does fewer adds than the ANN's MAC count (event-driven
+        // sparsity) — the paper's §V-A claim.
+        assert!(t2.snn_adds_per_inference < t2.ann_ops.additions as f64);
+        // Orders of magnitude: SNN latency must sit far below the ESP32
+        // soft-float path and below the DSP path too.
+        assert!(t2.snn_latency_us * 10.0 < t2.ann_latency_dsp_us);
+        // Energy: the event-driven core must be far cheaper per inference.
+        assert!(t2.snn_energy_uj * 100.0 < t2.ann_energy_dsp_uj);
+    }
+
+    /// With the trained artifacts both classifiers must be accurate and
+    /// the SNN side reports a calibrated accuracy near its plateau.
+    #[test]
+    fn accuracy_rows_on_artifacts() {
+        let Some(ctx) = crate::experiments::test_support::artifact_ctx(200) else {
+            eprintln!("skipped: artifacts not built");
+            return;
+        };
+        let t2 = compute_table2(&ctx).unwrap();
+        assert!(t2.snn_accuracy > 0.9, "SNN accuracy {}", t2.snn_accuracy);
+        let ann = t2.ann_accuracy.expect("ann artifact present");
+        assert!(ann > 0.9, "ANN accuracy {ann}");
+    }
+}

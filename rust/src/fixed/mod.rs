@@ -1,0 +1,158 @@
+//! Fixed-point arithmetic primitives mirroring the paper's datapath.
+//!
+//! The paper's core avoids floating point entirely: the membrane potential
+//! lives in a saturating signed accumulator, the leak `β·V` with `β = 2^-n`
+//! is an arithmetic right shift, and weights are 9-bit signed integers.
+//! This module provides those primitives plus the pack/unpack codec for the
+//! dense 9-bit weight memory (the source of the paper's 8.6 KB figure).
+
+mod weights;
+
+pub use weights::{pack_weights, unpack_weights, WeightMatrix};
+
+/// Saturating add clamped to a symmetric `bits`-wide signed range, i.e.
+/// `[-(2^(bits-1)-1), 2^(bits-1)-1]` — the behaviour of an adder with
+/// saturation logic on a `bits`-wide register.
+#[inline(always)]
+pub fn sat_add(a: i32, b: i32, bits: u32) -> i32 {
+    debug_assert!((2..=31).contains(&bits));
+    let max = (1i32 << (bits - 1)) - 1;
+    (a as i64 + b as i64).clamp(-(max as i64), max as i64) as i32
+}
+
+/// Saturate `v` into the `bits`-wide symmetric signed range.
+#[inline(always)]
+pub fn sat_clamp(v: i64, bits: u32) -> i32 {
+    let max = (1i64 << (bits - 1)) - 1;
+    v.clamp(-max, max) as i32
+}
+
+/// The paper's leak operation: `v - (v >> n)` with arithmetic shift.
+///
+/// For `v ≥ 0` this decays toward 0 from above; for `v < 0` the arithmetic
+/// shift rounds toward −∞ so the result decays toward 0 from below (and
+/// reaches exactly 0 from −1 in one step: `-1 - (-1 >> n) = -1 - (-1) = 0`).
+#[inline(always)]
+pub fn leak(v: i32, n: u32) -> i32 {
+    debug_assert!((1..=30).contains(&n));
+    v - (v >> n)
+}
+
+/// Quantize an `f32` to a `bits`-wide signed integer with
+/// round-half-away-from-zero, saturating at the representable range.
+/// Used when importing trained weights.
+#[inline]
+pub fn quantize(v: f32, scale: f32, bits: u32) -> i32 {
+    let max = (1i32 << (bits - 1)) - 1;
+    let min = -(1i32 << (bits - 1));
+    let scaled = v * scale;
+    let rounded = if scaled >= 0.0 { (scaled + 0.5).floor() } else { (scaled - 0.5).ceil() };
+    (rounded as i64).clamp(min as i64, max as i64) as i32
+}
+
+/// True iff `v` fits a `bits`-wide two's-complement signed integer.
+#[inline]
+pub fn fits_signed(v: i32, bits: u32) -> bool {
+    let max = (1i32 << (bits - 1)) - 1;
+    let min = -(1i32 << (bits - 1));
+    (min..=max).contains(&v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::PropRunner;
+
+    #[test]
+    fn sat_add_clamps_both_ends() {
+        let max24 = (1 << 23) - 1;
+        assert_eq!(sat_add(max24, 1, 24), max24);
+        assert_eq!(sat_add(max24, max24, 24), max24);
+        assert_eq!(sat_add(-max24, -1, 24), -max24);
+        assert_eq!(sat_add(-max24, -max24, 24), -max24);
+        assert_eq!(sat_add(5, 7, 24), 12);
+        assert_eq!(sat_add(-5, 7, 24), 2);
+    }
+
+    #[test]
+    fn leak_decays_toward_zero() {
+        // Positive values strictly decrease (until the shift underflows).
+        let mut v = 100_000;
+        for _ in 0..200 {
+            let next = leak(v, 3);
+            assert!(next <= v);
+            assert!(next >= 0);
+            v = next;
+        }
+        // Negative values strictly increase toward zero and reach it.
+        let mut v = -100_000;
+        for _ in 0..200 {
+            let next = leak(v, 3);
+            assert!(next >= v);
+            assert!(next <= 0);
+            v = next;
+        }
+        assert_eq!(v, 0, "negative membrane must fully decay to rest");
+    }
+
+    #[test]
+    fn leak_fixed_points() {
+        // Values in [0, 2^n) are fixed points of v - (v>>n) for v>=0: the
+        // shift truncates to zero. This mirrors real LIF hardware, where
+        // sub-LSB leak is lost to quantization.
+        for v in 0..8 {
+            assert_eq!(leak(v, 3), v);
+        }
+        assert_eq!(leak(8, 3), 7);
+        // -1 decays to exactly 0 (arithmetic shift of -1 is -1).
+        assert_eq!(leak(-1, 3), 0);
+    }
+
+    #[test]
+    fn quantize_rounds_half_away() {
+        assert_eq!(quantize(0.5, 1.0, 9), 1);
+        assert_eq!(quantize(-0.5, 1.0, 9), -1);
+        assert_eq!(quantize(0.49, 1.0, 9), 0);
+        assert_eq!(quantize(1.0, 100.0, 9), 100);
+        // Saturation at the 9-bit range [-256, 255].
+        assert_eq!(quantize(10.0, 100.0, 9), 255);
+        assert_eq!(quantize(-10.0, 100.0, 9), -256);
+    }
+
+    #[test]
+    fn prop_sat_add_never_escapes_range() {
+        PropRunner::new("sat_add_range", 2000).run(|g| {
+            let bits = g.rng.range_i32(2, 31) as u32;
+            let a = g.rng.range_i32(i32::MIN / 2, i32::MAX / 2);
+            let b = g.rng.range_i32(i32::MIN / 2, i32::MAX / 2);
+            let r = sat_add(a, b, bits);
+            let max = (1i32 << (bits - 1)) - 1;
+            assert!(r >= -max && r <= max, "sat_add({a},{b},{bits}) = {r} escapes ±{max}");
+        });
+    }
+
+    #[test]
+    fn prop_leak_is_contraction() {
+        PropRunner::new("leak_contraction", 2000).run(|g| {
+            let n = g.rng.range_i32(1, 8) as u32;
+            let v = g.rng.range_i32(-(1 << 23), 1 << 23);
+            let r = leak(v, n);
+            assert!(r.abs() <= v.abs(), "leak({v},{n}) = {r} grew in magnitude");
+            assert_eq!(r.signum() * v.signum() >= 0, true, "leak changed sign");
+        });
+    }
+
+    #[test]
+    fn prop_quantize_fits() {
+        PropRunner::new("quantize_fits", 2000).run(|g| {
+            let bits = g.rng.range_i32(2, 16) as u32;
+            let v = (g.rng.next_f64() as f32 - 0.5) * 1000.0;
+            let scale = (g.rng.next_f64() as f32) * 100.0;
+            let q = quantize(v, scale, bits);
+            assert!(
+                q >= -(1i32 << (bits - 1)) && q <= (1i32 << (bits - 1)) - 1,
+                "quantize produced out-of-range {q} for bits={bits}"
+            );
+        });
+    }
+}

@@ -1,0 +1,229 @@
+//! The 9-bit weight memory: matrix type and dense bit-packing codec.
+//!
+//! The paper stores `784 × 10` weights at 9 bits each (§V-B: "optimized
+//! 9-bit fixed-point weights (784 × 10 × 9 bits) ... ~8.6 KB"), i.e. the
+//! BRAM image is a dense bitstream with no byte padding. [`pack_weights`] /
+//! [`unpack_weights`] implement that layout so the simulator's memory
+//! footprint accounting matches the silicon figure exactly.
+
+use crate::error::{Error, Result};
+
+/// A row-major `n_inputs × n_outputs` weight matrix in sign-extended i32.
+///
+/// Row-major by *input* (`w[input][output]`) matches both the BRAM layout
+/// (the controller streams pixels, fetching one row of 10 weights per
+/// spike) and the JAX weight array layout `W[784, 10]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WeightMatrix {
+    n_inputs: usize,
+    n_outputs: usize,
+    bits: u32,
+    data: Vec<i32>,
+}
+
+impl WeightMatrix {
+    /// Build from a row-major slice; every value must fit `bits`.
+    pub fn from_rows(n_inputs: usize, n_outputs: usize, bits: u32, data: Vec<i32>) -> Result<Self> {
+        if data.len() != n_inputs * n_outputs {
+            return Err(Error::ShapeMismatch(format!(
+                "weight data {} != {}x{}",
+                data.len(),
+                n_inputs,
+                n_outputs
+            )));
+        }
+        let max = (1i32 << (bits - 1)) - 1;
+        let min = -(1i32 << (bits - 1));
+        if let Some(&bad) = data.iter().find(|&&w| w < min || w > max) {
+            return Err(Error::InvalidConfig(format!(
+                "weight {bad} does not fit signed {bits}-bit range [{min}, {max}]"
+            )));
+        }
+        Ok(WeightMatrix { n_inputs, n_outputs, bits, data })
+    }
+
+    /// All-zero matrix (for tests and initialization).
+    pub fn zeros(n_inputs: usize, n_outputs: usize, bits: u32) -> Self {
+        WeightMatrix { n_inputs, n_outputs, bits, data: vec![0; n_inputs * n_outputs] }
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.n_inputs
+    }
+    pub fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Weight for (input `i`, output `j`).
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> i32 {
+        self.data[i * self.n_outputs + j]
+    }
+
+    /// The full row of output weights for input `i` — what the hardware
+    /// fetches from BRAM when pixel `i` spikes.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.data[i * self.n_outputs..(i + 1) * self.n_outputs]
+    }
+
+    /// Raw row-major storage.
+    pub fn as_slice(&self) -> &[i32] {
+        &self.data
+    }
+
+    /// Column-major copy (`w[output][input]`), used by backends that
+    /// iterate neuron-first.
+    pub fn transposed(&self) -> Vec<i32> {
+        let mut out = vec![0i32; self.data.len()];
+        for i in 0..self.n_inputs {
+            for j in 0..self.n_outputs {
+                out[j * self.n_inputs + i] = self.get(i, j);
+            }
+        }
+        out
+    }
+
+    /// Storage footprint of the dense packed image in bytes (rounded up).
+    pub fn packed_bytes(&self) -> usize {
+        (self.data.len() * self.bits as usize + 7) / 8
+    }
+}
+
+/// Pack weights into a dense little-endian bitstream, `bits` per weight,
+/// two's complement, no padding between entries — the BRAM image.
+pub fn pack_weights(m: &WeightMatrix) -> Vec<u8> {
+    let bits = m.bits() as usize;
+    let mut out = vec![0u8; m.packed_bytes()];
+    let mask = (1u32 << bits) - 1;
+    let mut bitpos = 0usize;
+    for &w in m.as_slice() {
+        let raw = (w as u32) & mask; // two's complement truncation
+        // Scatter `bits` bits starting at `bitpos` (LSB-first within bytes).
+        let mut remaining = bits;
+        let mut val = raw;
+        let mut pos = bitpos;
+        while remaining > 0 {
+            let byte = pos / 8;
+            let off = pos % 8;
+            let take = (8 - off).min(remaining);
+            out[byte] |= ((val & ((1 << take) - 1)) as u8) << off;
+            val >>= take;
+            pos += take;
+            remaining -= take;
+        }
+        bitpos += bits;
+    }
+    out
+}
+
+/// Inverse of [`pack_weights`].
+pub fn unpack_weights(
+    bytes: &[u8],
+    n_inputs: usize,
+    n_outputs: usize,
+    bits: u32,
+) -> Result<WeightMatrix> {
+    let n = n_inputs * n_outputs;
+    let need = (n * bits as usize + 7) / 8;
+    if bytes.len() < need {
+        return Err(Error::ShapeMismatch(format!(
+            "packed weights too short: {} bytes, need {need}",
+            bytes.len()
+        )));
+    }
+    let mut data = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let mut raw = 0u32;
+        let mut got = 0usize;
+        let mut pos = bitpos;
+        while got < bits as usize {
+            let byte = pos / 8;
+            let off = pos % 8;
+            let take = (8 - off).min(bits as usize - got);
+            let chunk = (u32::from(bytes[byte]) >> off) & ((1 << take) - 1);
+            raw |= chunk << got;
+            got += take;
+            pos += take;
+        }
+        bitpos += bits as usize;
+        // Sign-extend from `bits` to 32.
+        let shift = 32 - bits;
+        data.push(((raw << shift) as i32) >> shift);
+    }
+    WeightMatrix::from_rows(n_inputs, n_outputs, bits, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::PropRunner;
+
+    #[test]
+    fn paper_footprint() {
+        let m = WeightMatrix::zeros(784, 10, 9);
+        // 784*10*9 bits = 70,560 bits = 8,820 bytes ≈ 8.61 KB — the paper's
+        // "~8.6 KB".
+        assert_eq!(m.packed_bytes(), 8820);
+    }
+
+    #[test]
+    fn get_row_transposed_agree() {
+        let data: Vec<i32> = (0..12).map(|v| v - 6).collect();
+        let m = WeightMatrix::from_rows(4, 3, 9, data).unwrap();
+        assert_eq!(m.get(0, 0), -6);
+        assert_eq!(m.get(3, 2), 5);
+        assert_eq!(m.row(1), &[-3, -2, -1]);
+        let t = m.transposed();
+        for i in 0..4 {
+            for j in 0..3 {
+                assert_eq!(t[j * 4 + i], m.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(WeightMatrix::from_rows(1, 1, 9, vec![256]).is_err());
+        assert!(WeightMatrix::from_rows(1, 1, 9, vec![-257]).is_err());
+        assert!(WeightMatrix::from_rows(1, 1, 9, vec![255]).is_ok());
+        assert!(WeightMatrix::from_rows(1, 1, 9, vec![-256]).is_ok());
+        assert!(WeightMatrix::from_rows(2, 2, 9, vec![0; 3]).is_err());
+    }
+
+    #[test]
+    fn pack_roundtrip_simple() {
+        let data = vec![0, 1, -1, 255, -256, 100, -100, 42, 7];
+        let m = WeightMatrix::from_rows(3, 3, 9, data).unwrap();
+        let packed = pack_weights(&m);
+        assert_eq!(packed.len(), (9 * 9 + 7) / 8); // 81 bits -> 11 bytes
+        let back = unpack_weights(&packed, 3, 3, 9).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn unpack_rejects_truncated() {
+        let m = WeightMatrix::zeros(4, 4, 9);
+        let packed = pack_weights(&m);
+        assert!(unpack_weights(&packed[..packed.len() - 1], 4, 4, 9).is_err());
+    }
+
+    #[test]
+    fn prop_pack_roundtrip_random() {
+        PropRunner::new("weights_pack_roundtrip", 300).run(|g| {
+            let bits = g.rng.range_i32(2, 16) as u32;
+            let ni = g.rng.range_i32(1, 40) as usize;
+            let no = g.rng.range_i32(1, 12) as usize;
+            let max = (1i32 << (bits - 1)) - 1;
+            let min = -(1i32 << (bits - 1));
+            let data = g.vec_i32(ni * no, min, max);
+            let m = WeightMatrix::from_rows(ni, no, bits, data).unwrap();
+            let back = unpack_weights(&pack_weights(&m), ni, no, bits).unwrap();
+            assert_eq!(back, m, "roundtrip mismatch at bits={bits} {ni}x{no}");
+        });
+    }
+}

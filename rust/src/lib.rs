@@ -1,0 +1,54 @@
+//! # snn-rtl — Poisson-encoded spiking neural network accelerator
+//!
+//! Reproduction of *"Biological Intuition on Digital Hardware: An RTL
+//! Implementation of Poisson-Encoded SNNs for Static Image Classification"*
+//! (Das, Yogeeth G.K., Gupta — CS.AR 2026) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator (router, dynamic batcher,
+//!   worker pool, early-exit scheduler), the cycle-accurate RTL-equivalent
+//!   simulator of the paper's SystemVerilog core, the behavioral golden
+//!   model, the baseline ANN + ESP32 cost model, and every experiment
+//!   harness that regenerates the paper's tables and figures.
+//! * **L2 (python/compile/model.py)** — the JAX forward pass (a `lax.scan`
+//!   of LIF timesteps) AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the LIF layer
+//!   step and the on-chip Poisson encoder, lowered inside the L2 graph.
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` plus trained weights and golden traces, and the
+//! Rust binary is self-contained afterwards.
+//!
+//! ## Architectural contract
+//!
+//! All layers implement the same timestep-level specification (see
+//! `DESIGN.md` §4): per timestep, for each neuron *j*
+//!
+//! 1. integrate `acc_j += Σ_i W[i][j]·S_i[t]` with Poisson spikes
+//!    `S_i[t] = pixel_i > (xorshift32_i(t) & 0xFF)`,
+//! 2. leak `acc_j -= acc_j >> n` (arithmetic shift),
+//! 3. fire & hard-reset when `acc_j ≥ V_th`,
+//! 4. optionally gate the neuron off after it has fired (*active pruning*).
+//!
+//! The RTL simulator ([`rtl`]) refines this to clock-cycle granularity and
+//! is proven equivalent to the behavioral model ([`snn`]) by test; the JAX /
+//! Pallas path is proven equivalent through golden traces generated at
+//! artifact-build time and through live PJRT execution ([`runtime`]).
+
+pub mod ann;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod fixed;
+pub mod prng;
+pub mod rtl;
+pub mod runtime;
+pub mod snn;
+pub mod testutil;
+
+pub use config::SnnConfig;
+pub use error::{Error, Result};

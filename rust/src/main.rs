@@ -1,0 +1,210 @@
+//! `snn-rtl` — leader binary: experiments, classification, serving demo.
+//!
+//! ```text
+//! snn-rtl experiment <id|all> [--artifacts DIR] [--results DIR] [--samples N]
+//! snn-rtl classify  [--class C] [--index I] [--seed S] [--backend b]
+//! snn-rtl serve     [--requests N] [--workers W] [--batch B] [--backend b]
+//!                   [--early-margin M]
+//! snn-rtl info      [--artifacts DIR]
+//! ```
+//!
+//! Backends: `behavioral` (pure-Rust golden model), `rtl` (cycle-accurate
+//! core), `xla` (AOT JAX/Pallas via PJRT).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use snn_rtl::cli::Args;
+use snn_rtl::coordinator::{
+    Backend, BatchPolicy, BehavioralBackend, Coordinator, CoordinatorConfig, Request,
+    RtlBackend, XlaBackend,
+};
+use snn_rtl::data::{codec, DigitGen};
+use snn_rtl::experiments::{self, Ctx};
+use snn_rtl::runtime::{Manifest, XlaSnn};
+use snn_rtl::snn::EarlyExit;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        print_usage();
+        return Ok(());
+    };
+    match cmd {
+        "experiment" => cmd_experiment(&args),
+        "classify" => cmd_classify(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; run `snn-rtl help`"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "snn-rtl — Poisson-encoded SNN accelerator (paper reproduction)\n\n\
+         commands:\n  \
+         experiment <id|all>   regenerate a paper table/figure \n                        \
+         (table1 fig4 fig5 fig6 fig7 table2 fig8\n                        \
+         ablation-pruning ablation-decay ablation-modes)\n  \
+         classify              classify one synthetic digit\n  \
+         serve                 run the serving coordinator demo\n  \
+         info                  show artifact calibration\n\n\
+         common flags: --artifacts DIR (default artifacts/)\n               \
+         --results DIR (default results/)   --samples N"
+    );
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args.positional.get(1).cloned().unwrap_or_else(|| "all".to_string());
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let results = args.str_or("results", "results");
+    let samples = args.num_or("samples", 0usize)?;
+    args.check_unknown()?;
+    let mut ctx = Ctx::load(&artifacts, &results)
+        .with_context(|| format!("loading artifacts from {artifacts}/ (run `make artifacts`)"))?;
+    if samples > 0 {
+        ctx.samples = Some(samples);
+    }
+    experiments::run(&id, &ctx)?;
+    Ok(())
+}
+
+fn cmd_classify(args: &Args) -> Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let class = args.num_or("class", 3u8)?;
+    let index = args.num_or("index", 0u32)?;
+    let seed = args.num_or("seed", 0xC0FFEEu32)?;
+    let backend_name = args.str_or("backend", "behavioral");
+    args.check_unknown()?;
+
+    let manifest = Manifest::load(&artifacts)?;
+    let img = DigitGen::new(manifest.u32("test_seed").unwrap_or(2)).sample(class, index);
+    println!("{}", img.to_ascii());
+    let backend = make_backend(&backend_name, &artifacts)?;
+    let t0 = Instant::now();
+    let out = backend.classify_batch(&[&img], &[seed], EarlyExit::Off)?;
+    let dt = t0.elapsed();
+    let o = &out[0];
+    println!(
+        "backend={} predicted={} (true {}) counts={:?} steps={} wall={:?}",
+        backend.name(),
+        o.class,
+        class,
+        o.spike_counts,
+        o.steps_run,
+        dt
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let requests = args.num_or("requests", 512usize)?;
+    let workers = args.num_or("workers", 2usize)?;
+    let batch = args.num_or("batch", 8usize)?;
+    let backend_name = args.str_or("backend", "behavioral");
+    let early_margin = args.num_or("early-margin", 0u32)?;
+    args.check_unknown()?;
+
+    let backend = make_backend(&backend_name, &artifacts)?;
+    let early = if early_margin > 0 {
+        EarlyExit::Margin { margin: early_margin, min_steps: 2 }
+    } else {
+        EarlyExit::Off
+    };
+    let coord = Coordinator::start(
+        backend,
+        CoordinatorConfig {
+            workers,
+            queue_depth: 1024,
+            batch: BatchPolicy { max_batch: batch, ..Default::default() },
+            early,
+        },
+    );
+    let handle = coord.handle();
+
+    println!("serving {requests} requests (backend={backend_name}, workers={workers}, batch={batch}) ...");
+    let gen = DigitGen::new(2);
+    let t0 = Instant::now();
+    let mut receivers = Vec::with_capacity(requests);
+    let mut correct_labels = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let class = (i % 10) as u8;
+        let img = gen.sample(class, (i / 10) as u32);
+        correct_labels.push(class);
+        receivers.push(handle.submit(Request { image: img, seed: Some(i as u32 + 1) })?);
+    }
+    let mut hits = 0usize;
+    for (rx, label) in receivers.into_iter().zip(correct_labels) {
+        let resp = rx.recv().context("worker dropped reply")??;
+        if resp.class == label {
+            hits += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics().snapshot();
+    println!(
+        "done in {wall:?}: {:.0} req/s, accuracy {:.2}%",
+        requests as f64 / wall.as_secs_f64(),
+        hits as f64 / requests as f64 * 100.0
+    );
+    println!(
+        "latency µs: p50 {} p95 {} p99 {} mean {:.0} max {}",
+        snap.latency_p50_us,
+        snap.latency_p95_us,
+        snap.latency_p99_us,
+        snap.latency_mean_us,
+        snap.latency_max_us
+    );
+    println!(
+        "batches {} (mean size {:.2}), steps executed {} ({:.2}/req)",
+        snap.batches,
+        snap.mean_batch_size,
+        snap.steps_executed,
+        snap.steps_executed as f64 / requests as f64
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    args.check_unknown()?;
+    let manifest = Manifest::load(&artifacts)?;
+    let cfg = manifest.snn_config()?;
+    let w = codec::load_weights(manifest.path("weights.bin"))?;
+    println!("artifacts: {}", manifest.dir.display());
+    println!("config: {cfg:#?}");
+    println!(
+        "weights: {}x{} at {} bits = {:.2} KB packed",
+        w.weights.n_inputs(),
+        w.weights.n_outputs(),
+        w.weights.bits(),
+        w.weights.packed_bytes() as f64 / 1024.0
+    );
+    for key in ["snn_test_acc_t10", "ann_test_acc"] {
+        if let Ok(v) = manifest.f64(key) {
+            println!("{key} = {v:.4}");
+        }
+    }
+    Ok(())
+}
+
+fn make_backend(name: &str, artifacts: &str) -> Result<Arc<dyn Backend>> {
+    let manifest = Manifest::load(artifacts)
+        .with_context(|| format!("loading {artifacts}/manifest.txt (run `make artifacts`)"))?;
+    let cfg = manifest.snn_config()?;
+    let weights = codec::load_weights(manifest.path("weights.bin"))?;
+    Ok(match name {
+        "behavioral" => Arc::new(BehavioralBackend::new(cfg, weights.weights)?),
+        "rtl" => Arc::new(RtlBackend::new(cfg, weights.weights)?),
+        "xla" => Arc::new(XlaBackend::new(XlaSnn::load(artifacts)?)),
+        other => bail!("unknown backend {other:?} (behavioral|rtl|xla)"),
+    })
+}

@@ -1,0 +1,190 @@
+//! Pseudo-random number generation matching the paper's on-chip hardware.
+//!
+//! The paper's Poisson encoder uses a **32-bit XOR-shift PRNG** (Marsaglia
+//! xorshift32, the canonical `13/17/5` variant — the standard choice for a
+//! 32-bit LFSR-free hardware RNG and the one used in the authors' released
+//! RTL). Seeding uses a splitmix32 finalizer so that per-pixel streams are
+//! decorrelated while remaining trivially reproducible.
+//!
+//! **This module is the cross-layer contract**: `python/compile/kernels/
+//! encoder.py` (Pallas), `python/compile/kernels/ref.py` (jnp oracle) and
+//! [`crate::rtl::encoder`] implement bit-identical state updates, verified
+//! by golden vectors generated at artifact-build time and by the embedded
+//! golden tests below.
+
+mod xorshift;
+
+pub use xorshift::{splitmix32, xorshift32_step, Xorshift32};
+
+/// Multiplicative constant used to decorrelate per-pixel seeds
+/// (2^32 / golden ratio, the Weyl increment of splitmix).
+pub const GOLDEN_GAMMA: u32 = 0x9E37_79B9;
+
+/// Fallback state used when seeding would produce the xorshift fixed point
+/// zero. Any nonzero constant works; this one is shared with the Python
+/// implementations.
+pub const ZERO_STATE_FALLBACK: u32 = 0xDEAD_BEEF;
+
+/// Derive the initial xorshift32 state for pixel `index` of an image
+/// encoded with `seed`.
+///
+/// Contract (identical in `dataset.py` / `encoder.py` / the RTL encoder):
+///
+/// ```text
+/// s = splitmix32(seed XOR (index * GOLDEN_GAMMA))
+/// state0 = s == 0 ? ZERO_STATE_FALLBACK : s
+/// ```
+#[inline]
+pub fn pixel_seed(seed: u32, index: u32) -> u32 {
+    let s = splitmix32(seed ^ index.wrapping_mul(GOLDEN_GAMMA));
+    if s == 0 {
+        ZERO_STATE_FALLBACK
+    } else {
+        s
+    }
+}
+
+/// Derive an independent xorshift32 stream from a base seed plus two
+/// domain-separation indices (e.g. `(class, sample)` for the dataset
+/// generator, `(perturbation kind, sample)` for the robustness harness).
+///
+/// Contract (identical in `python/compile/dataset.py`):
+///
+/// ```text
+/// s = splitmix32(splitmix32(seed XOR a·0x85EBCA6B) XOR b·GOLDEN_GAMMA)
+/// state0 = s == 0 ? ZERO_STATE_FALLBACK : s
+/// ```
+pub fn derive_stream(seed: u32, a: u32, b: u32) -> Xorshift32 {
+    let s = splitmix32(splitmix32(seed ^ a.wrapping_mul(0x85EB_CA6B)) ^ b.wrapping_mul(GOLDEN_GAMMA));
+    Xorshift32::from_raw_state(if s == 0 { ZERO_STATE_FALLBACK } else { s })
+}
+
+/// A bank of independent xorshift32 streams, one per pixel, as instantiated
+/// by the hardware Poisson encoder (one PRNG register per input channel).
+#[derive(Debug, Clone)]
+pub struct StreamBank {
+    states: Vec<u32>,
+}
+
+impl StreamBank {
+    /// Create `n` streams for image seed `seed` following the
+    /// [`pixel_seed`] contract.
+    pub fn new(seed: u32, n: usize) -> Self {
+        let states = (0..n as u32).map(|i| pixel_seed(seed, i)).collect();
+        StreamBank { states }
+    }
+
+    /// Number of streams in the bank.
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    /// True if the bank has no streams.
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    /// Advance every stream one step and return a view of the new states.
+    pub fn step(&mut self) -> &[u32] {
+        for s in &mut self.states {
+            *s = xorshift::xorshift32_step(*s);
+        }
+        &self.states
+    }
+
+    /// Current (already-stepped) states.
+    pub fn states(&self) -> &[u32] {
+        &self.states
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden vectors for xorshift32 (13/17/5). These exact values are also
+    /// asserted in `python/tests/test_prng.py`; together they pin the
+    /// cross-language contract.
+    #[test]
+    fn xorshift32_golden() {
+        let mut r = Xorshift32::from_raw_state(1);
+        let got: Vec<u32> = (0..6).map(|_| r.next_u32()).collect();
+        assert_eq!(got, vec![270369, 67634689, 2647435461, 307599695, 2398689233, 745495504]);
+    }
+
+    #[test]
+    fn xorshift32_golden_large_seed() {
+        let mut r = Xorshift32::from_raw_state(0xDEAD_BEEF);
+        let got: Vec<u32> = (0..4).map(|_| r.next_u32()).collect();
+        assert_eq!(got, vec![1199382711, 2384302402, 3129746520, 4276113467]);
+    }
+
+    /// splitmix32 golden values, mirrored in the Python tests.
+    #[test]
+    fn splitmix32_golden() {
+        assert_eq!(splitmix32(0), 2462723854);
+        assert_eq!(splitmix32(1), 2527132011);
+        assert_eq!(splitmix32(0xDEAD_BEEF), 3553530007);
+        assert_eq!(splitmix32(u32::MAX), 920564995);
+    }
+
+    #[test]
+    fn pixel_seed_never_zero() {
+        // Exhaustively check a large swath of (seed, index) pairs; the
+        // fallback guarantees nonzero states so xorshift never sticks.
+        for seed in [0u32, 1, 42, 0xFFFF_FFFF, 0x1234_5678] {
+            for index in 0..4096u32 {
+                assert_ne!(pixel_seed(seed, index), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn pixel_seed_decorrelates_neighbours() {
+        // Neighbouring pixels must get very different streams: check the
+        // hamming distance of the first output across adjacent indices.
+        let mut total = 0u32;
+        let n = 1024u32;
+        for i in 0..n {
+            let a = Xorshift32::from_raw_state(pixel_seed(7, i)).next_u32_once();
+            let b = Xorshift32::from_raw_state(pixel_seed(7, i + 1)).next_u32_once();
+            total += (a ^ b).count_ones();
+        }
+        let mean = f64::from(total) / f64::from(n);
+        assert!((mean - 16.0).abs() < 1.5, "mean hamming distance {mean} too far from 16");
+    }
+
+    #[test]
+    fn stream_bank_matches_manual_streams() {
+        let mut bank = StreamBank::new(99, 8);
+        let mut manual: Vec<Xorshift32> =
+            (0..8).map(|i| Xorshift32::from_raw_state(pixel_seed(99, i))).collect();
+        for _ in 0..32 {
+            let bank_states = bank.step().to_vec();
+            let manual_states: Vec<u32> = manual.iter_mut().map(|r| r.next_u32()).collect();
+            assert_eq!(bank_states, manual_states);
+        }
+    }
+
+    #[test]
+    fn uniformity_of_low_byte() {
+        // The encoder compares pixel intensity against the low byte; check
+        // the low byte is close to uniform over a long run.
+        let mut counts = [0u32; 256];
+        let mut r = Xorshift32::new(2024);
+        let n = 1 << 18;
+        for _ in 0..n {
+            counts[(r.next_u32() & 0xFF) as usize] += 1;
+        }
+        let expect = n as f64 / 256.0;
+        let chi2: f64 = counts
+            .iter()
+            .map(|&c| {
+                let d = f64::from(c) - expect;
+                d * d / expect
+            })
+            .sum();
+        // 255 dof: mean 255, sd ~22.6; allow a generous band.
+        assert!(chi2 < 400.0, "low byte chi2 {chi2} too high");
+    }
+}

@@ -1,0 +1,158 @@
+//! Marsaglia xorshift32 (shifts 13/17/5) and the splitmix32 finalizer.
+//!
+//! These are the exact functions the paper's hardware implements: a 32-bit
+//! register plus three XOR/shift stages — no multipliers, one state update
+//! per clock.
+
+/// One xorshift32 state transition (`x ^= x<<13; x ^= x>>17; x ^= x<<5`).
+///
+/// `state` must be nonzero (zero is the fixed point of the map); callers
+/// seed through [`super::pixel_seed`] which guarantees this.
+#[inline(always)]
+pub fn xorshift32_step(state: u32) -> u32 {
+    let mut x = state;
+    x ^= x << 13;
+    x ^= x >> 17;
+    x ^= x << 5;
+    x
+}
+
+/// splitmix32: a full-avalanche finalizer used for seeding.
+///
+/// This is the 32-bit analogue of splitmix64 (murmur3-style finalizer with
+/// the Weyl increment applied first), shared bit-for-bit with
+/// `python/compile/dataset.py`.
+#[inline(always)]
+pub fn splitmix32(x: u32) -> u32 {
+    let mut z = x.wrapping_add(0x9E37_79B9);
+    z = (z ^ (z >> 16)).wrapping_mul(0x85EB_CA6B);
+    z = (z ^ (z >> 13)).wrapping_mul(0xC2B2_AE35);
+    z ^ (z >> 16)
+}
+
+/// A stateful xorshift32 generator.
+///
+/// The default constructor passes the seed through [`splitmix32`] so that
+/// small consecutive seeds (0, 1, 2, ...) still produce unrelated streams —
+/// the same convention as the Python dataset generator. Use
+/// [`Xorshift32::from_raw_state`] when the exact hardware register value is
+/// required (the RTL encoder does).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Xorshift32 {
+    state: u32,
+}
+
+impl Xorshift32 {
+    /// Seed through splitmix32 (never yields the zero state).
+    pub fn new(seed: u32) -> Self {
+        let s = splitmix32(seed);
+        Xorshift32 { state: if s == 0 { super::ZERO_STATE_FALLBACK } else { s } }
+    }
+
+    /// Use `state` directly as the register value. `state` must be nonzero.
+    pub fn from_raw_state(state: u32) -> Self {
+        debug_assert_ne!(state, 0, "xorshift32 cannot leave the zero state");
+        Xorshift32 { state }
+    }
+
+    /// Current register value.
+    pub fn state(&self) -> u32 {
+        self.state
+    }
+
+    /// Advance and return the new state (hardware semantics: the register
+    /// value *is* the output).
+    #[inline(always)]
+    pub fn next_u32(&mut self) -> u32 {
+        self.state = xorshift32_step(self.state);
+        self.state
+    }
+
+    /// Advance once and return, consuming the generator (test helper).
+    pub fn next_u32_once(mut self) -> u32 {
+        self.next_u32()
+    }
+
+    /// Uniform value in `[0, bound)` by rejection-free multiply-shift.
+    ///
+    /// Slightly biased for bounds that do not divide 2^32; fine for test
+    /// case generation and workload synthesis (never used in the hardware
+    /// model, which only takes the low byte).
+    #[inline]
+    pub fn below(&mut self, bound: u32) -> u32 {
+        ((u64::from(self.next_u32()) * u64::from(bound)) >> 32) as u32
+    }
+
+    /// Uniform value in the inclusive range `[lo, hi]`.
+    #[inline]
+    pub fn range_i32(&mut self, lo: i32, hi: i32) -> i32 {
+        debug_assert!(lo <= hi);
+        let span = (i64::from(hi) - i64::from(lo) + 1) as u32;
+        lo.wrapping_add(self.below(span) as i32)
+    }
+
+    /// Bernoulli draw with probability `num / 256`.
+    #[inline]
+    pub fn chance_u8(&mut self, num: u8) -> bool {
+        (self.next_u32() & 0xFF) < u32::from(num)
+    }
+
+    /// An `f64` in `[0, 1)` (metrics / workload generation only).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        f64::from(self.next_u32()) / 4294967296.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn period_does_not_collapse() {
+        // xorshift32 has period 2^32-1; sanity-check no short cycle over a
+        // modest window.
+        let mut r = Xorshift32::from_raw_state(1);
+        let first = r.next_u32();
+        for _ in 0..100_000 {
+            assert_ne!(r.next_u32(), 0, "entered zero fixed point");
+        }
+        // Coming back to the first value this early would mean a tiny cycle.
+        let mut r2 = Xorshift32::from_raw_state(first);
+        for _ in 0..10_000 {
+            assert_ne!(r2.next_u32(), first);
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Xorshift32::new(3);
+        for bound in [1u32, 2, 3, 10, 255, 256, 1000] {
+            for _ in 0..200 {
+                assert!(r.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn range_inclusive() {
+        let mut r = Xorshift32::new(4);
+        let (mut saw_lo, mut saw_hi) = (false, false);
+        for _ in 0..10_000 {
+            let v = r.range_i32(-3, 3);
+            assert!((-3..=3).contains(&v));
+            saw_lo |= v == -3;
+            saw_hi |= v == 3;
+        }
+        assert!(saw_lo && saw_hi, "range endpoints never drawn");
+    }
+
+    #[test]
+    fn chance_u8_rate() {
+        let mut r = Xorshift32::new(5);
+        let n = 100_000;
+        let hits = (0..n).filter(|_| r.chance_u8(64)).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.01, "rate {rate} too far from 0.25");
+    }
+}

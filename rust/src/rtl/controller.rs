@@ -1,0 +1,282 @@
+//! Layer controller (paper Fig. 3): the global FSM that sequences
+//! integration, leak and fire phases, owns the spike register and drives
+//! the per-neuron enable lines (`en_0 .. en_9`) implementing active
+//! pruning.
+
+use crate::config::{LeakMode, PruneMode, SnnConfig};
+
+/// FSM states. One clock per state transition; `Integrate` self-loops over
+/// the pixel counter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CtrlState {
+    /// Waiting for an image load.
+    Idle,
+    /// Walking pixels; the payload is the pixel counter value.
+    Integrate { pixel: usize },
+    /// Applying the shift-subtract decay (one clock, all neurons parallel).
+    /// `resume_pixel` is where integration continues in `PerRow` mode
+    /// (`None` = the end-of-timestep leak).
+    Leak { resume_pixel: Option<usize> },
+    /// Evaluating threshold comparators, latching the spike register,
+    /// updating the pruning mask.
+    Fire,
+    /// Window complete; outputs valid.
+    Done,
+}
+
+/// The controller's architectural registers.
+#[derive(Debug, Clone)]
+pub struct LayerController {
+    state: CtrlState,
+    /// Timestep counter register.
+    timestep: u32,
+    /// Spike register: the fire pattern latched on the last `Fire` clock.
+    spike_reg: Vec<bool>,
+    /// Enable lines (true = enabled); pruning clears bits.
+    enables: Vec<bool>,
+    /// Datapath width: pixels served per `Integrate` clock. 1 = the
+    /// paper's Fig. 1 pixel-serial datapath; wider values model a
+    /// multi-lane encoder + adder tree (the only way the paper's §V-C
+    /// 100 µs / Table II <1 µs latency claims can hold — see
+    /// `experiments::ablations::run_ablation_width`).
+    pixels_per_cycle: usize,
+    cfg: SnnConfig,
+}
+
+impl LayerController {
+    pub fn new(cfg: &SnnConfig) -> Self {
+        LayerController {
+            state: CtrlState::Idle,
+            timestep: 0,
+            spike_reg: vec![false; cfg.n_outputs],
+            enables: vec![true; cfg.n_outputs],
+            pixels_per_cycle: 1,
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Set the datapath width (≥1). `PerRow` leak scheduling requires the
+    /// width to divide the row length so leak clocks stay row-aligned.
+    pub fn set_pixels_per_cycle(&mut self, k: usize) {
+        assert!(k >= 1, "datapath width must be >= 1");
+        if let crate::config::LeakMode::PerRow { row_len } = self.cfg.leak_mode {
+            assert!(
+                row_len % k == 0,
+                "pixels_per_cycle {k} must divide row_len {row_len} in PerRow mode"
+            );
+        }
+        self.pixels_per_cycle = k;
+    }
+
+    /// Configured datapath width.
+    pub fn pixels_per_cycle(&self) -> usize {
+        self.pixels_per_cycle
+    }
+
+    pub fn state(&self) -> CtrlState {
+        self.state
+    }
+
+    /// Current timestep counter value.
+    pub fn timestep(&self) -> u32 {
+        self.timestep
+    }
+
+    /// Spike register contents (`spike_reg[j]`).
+    pub fn spike_reg(&self) -> &[bool] {
+        &self.spike_reg
+    }
+
+    /// Enable line for neuron `j` (`en_j` in Fig. 3).
+    pub fn enable(&self, j: usize) -> bool {
+        self.enables[j]
+    }
+
+    /// All enable lines.
+    pub fn enables(&self) -> &[bool] {
+        &self.enables
+    }
+
+    /// `start` pulse: begin a new inference window.
+    pub fn start(&mut self) {
+        self.state = CtrlState::Integrate { pixel: 0 };
+        self.timestep = 0;
+        self.spike_reg.fill(false);
+        self.enables.fill(true);
+    }
+
+    /// Latch the fire pattern (driven by the `Fire`-state clock) and apply
+    /// the pruning mask update. `spike_counts[j]` must already include this
+    /// cycle's spikes.
+    pub fn latch_fire(&mut self, fired: &[bool], spike_counts: &[u32]) {
+        debug_assert_eq!(fired.len(), self.spike_reg.len());
+        self.spike_reg.copy_from_slice(fired);
+        if let PruneMode::AfterFires { after_spikes } = self.cfg.prune {
+            for (j, &count) in spike_counts.iter().enumerate() {
+                if count >= after_spikes {
+                    self.enables[j] = false;
+                }
+            }
+        }
+    }
+
+    /// Advance the FSM one clock from the current state. The core calls
+    /// this *after* performing the state's datapath work for this cycle.
+    pub fn advance(&mut self) {
+        self.state = match self.state {
+            CtrlState::Idle => CtrlState::Idle,
+            CtrlState::Integrate { pixel } => {
+                let next_pixel = (pixel + self.pixels_per_cycle).min(self.cfg.n_inputs);
+                let row_boundary = match self.cfg.leak_mode {
+                    LeakMode::PerRow { row_len } => next_pixel % row_len == 0,
+                    LeakMode::PerTimestep => false,
+                };
+                if next_pixel == self.cfg.n_inputs {
+                    // End of the integration window: the end-of-step leak.
+                    // (In PerRow mode the final row's leak is this same
+                    // clock — `resume_pixel: None` routes to Fire.)
+                    CtrlState::Leak { resume_pixel: None }
+                } else if row_boundary {
+                    CtrlState::Leak { resume_pixel: Some(next_pixel) }
+                } else {
+                    CtrlState::Integrate { pixel: next_pixel }
+                }
+            }
+            CtrlState::Leak { resume_pixel: Some(p) } => CtrlState::Integrate { pixel: p },
+            CtrlState::Leak { resume_pixel: None } => CtrlState::Fire,
+            CtrlState::Fire => {
+                self.timestep += 1;
+                if self.timestep >= self.cfg.timesteps {
+                    CtrlState::Done
+                } else {
+                    CtrlState::Integrate { pixel: 0 }
+                }
+            }
+            CtrlState::Done => CtrlState::Done,
+        };
+    }
+
+    /// Priority-encoder readout: lowest class index among the max spike
+    /// counts (hardware argmax over the count registers).
+    pub fn decide(spike_counts: &[u32]) -> u8 {
+        let mut best = 0usize;
+        for (j, &c) in spike_counts.iter().enumerate() {
+            if c > spike_counts[best] {
+                best = j;
+            }
+        }
+        best as u8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LeakMode, SnnConfig};
+
+    fn tiny() -> SnnConfig {
+        SnnConfig { n_inputs: 4, n_outputs: 2, timesteps: 2, ..SnnConfig::paper() }
+    }
+
+    /// Walk the FSM and collect the state sequence for one window.
+    fn trace_states(cfg: &SnnConfig, max: usize) -> Vec<CtrlState> {
+        let mut c = LayerController::new(cfg);
+        c.start();
+        let mut states = vec![c.state()];
+        for _ in 0..max {
+            if c.state() == CtrlState::Done {
+                break;
+            }
+            c.advance();
+            states.push(c.state());
+        }
+        states
+    }
+
+    #[test]
+    fn per_timestep_schedule() {
+        // 4 pixels: I0 I1 I2 I3 L F | I0 I1 I2 I3 L F | Done
+        let states = trace_states(&tiny(), 32);
+        use CtrlState::*;
+        assert_eq!(
+            states,
+            vec![
+                Integrate { pixel: 0 },
+                Integrate { pixel: 1 },
+                Integrate { pixel: 2 },
+                Integrate { pixel: 3 },
+                Leak { resume_pixel: None },
+                Fire,
+                Integrate { pixel: 0 },
+                Integrate { pixel: 1 },
+                Integrate { pixel: 2 },
+                Integrate { pixel: 3 },
+                Leak { resume_pixel: None },
+                Fire,
+                Done,
+            ]
+        );
+    }
+
+    #[test]
+    fn per_row_schedule_inserts_leaks() {
+        let cfg = SnnConfig {
+            leak_mode: LeakMode::PerRow { row_len: 2 },
+            timesteps: 1,
+            ..tiny()
+        };
+        let states = trace_states(&cfg, 32);
+        use CtrlState::*;
+        assert_eq!(
+            states,
+            vec![
+                Integrate { pixel: 0 },
+                Integrate { pixel: 1 },
+                Leak { resume_pixel: Some(2) },
+                Integrate { pixel: 2 },
+                Integrate { pixel: 3 },
+                Leak { resume_pixel: None },
+                Fire,
+                Done,
+            ]
+        );
+    }
+
+    #[test]
+    fn cycles_per_timestep_paper_config() {
+        // 784 integrate + 1 leak + 1 fire = 786 cycles per timestep.
+        let cfg = SnnConfig { timesteps: 1, ..SnnConfig::paper() };
+        let states = trace_states(&cfg, 2000);
+        assert_eq!(states.len(), 784 + 1 + 1 + 1); // + Done observation
+    }
+
+    #[test]
+    fn pruning_mask_clears_enables() {
+        let mut c = LayerController::new(&tiny());
+        c.start();
+        assert!(c.enable(0) && c.enable(1));
+        c.latch_fire(&[true, false], &[1, 0]);
+        assert!(!c.enable(0), "fired neuron must be pruned");
+        assert!(c.enable(1));
+        assert_eq!(c.spike_reg(), &[true, false]);
+        // start() restores enables.
+        c.start();
+        assert!(c.enable(0));
+    }
+
+    #[test]
+    fn prune_off_keeps_enables() {
+        let cfg = SnnConfig { prune: crate::config::PruneMode::Off, ..tiny() };
+        let mut c = LayerController::new(&cfg);
+        c.start();
+        c.latch_fire(&[true, true], &[5, 5]);
+        assert!(c.enable(0) && c.enable(1));
+    }
+
+    #[test]
+    fn decide_is_priority_encoder() {
+        assert_eq!(LayerController::decide(&[0, 0, 0]), 0);
+        assert_eq!(LayerController::decide(&[1, 3, 3]), 1);
+        assert_eq!(LayerController::decide(&[0, 2, 5, 5]), 2);
+    }
+}

@@ -1,0 +1,468 @@
+//! Top-level SNN core: controller + encoder + neuron array + weight BRAM,
+//! advanced one clock per `tick_cycle` call.
+
+use crate::config::{FireMode, SnnConfig};
+use crate::data::Image;
+use crate::error::{Error, Result};
+use crate::fixed::WeightMatrix;
+
+use super::controller::{CtrlState, LayerController};
+use super::encoder::RtlPoissonEncoder;
+use super::lif_neuron::{LifNeuronCore, NeuronCtrl};
+use super::power::{ActivityCounters, EnergyModel, EnergyReport};
+use super::vcd::VcdWriter;
+
+/// Result of one inference window on the RTL core.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RtlResult {
+    /// Priority-encoded argmax of the spike-count registers.
+    pub class: u8,
+    /// Spike counts per output neuron.
+    pub spike_counts: Vec<u32>,
+    /// Clock cycles consumed by the window (excludes load).
+    pub cycles: u64,
+    /// Switching-activity totals for the window.
+    pub activity: ActivityCounters,
+    /// Energy estimate under the core's [`EnergyModel`].
+    pub energy: EnergyReport,
+    /// Membrane potential of every neuron after each timestep's Fire clock
+    /// (pre-reset value NOT included; equivalence tests use this).
+    pub membrane_by_step: Vec<Vec<i32>>,
+    /// Spike register pattern after each timestep.
+    pub spikes_by_step: Vec<Vec<bool>>,
+}
+
+/// The synthesizable top (paper Fig. 3) as a cycle-stepped simulator.
+pub struct RtlCore {
+    cfg: SnnConfig,
+    weights: WeightMatrix,
+    controller: LayerController,
+    encoder: RtlPoissonEncoder,
+    neurons: Vec<LifNeuronCore>,
+    act: ActivityCounters,
+    energy_model: EnergyModel,
+    /// Membrane snapshot log (per timestep) while running.
+    membrane_log: Vec<Vec<i32>>,
+    spike_log: Vec<Vec<bool>>,
+    /// Optional waveform sink.
+    vcd: Option<VcdWriter>,
+}
+
+impl RtlCore {
+    pub fn new(cfg: SnnConfig, weights: WeightMatrix) -> Result<Self> {
+        let cfg = cfg.validated()?;
+        if weights.n_inputs() != cfg.n_inputs || weights.n_outputs() != cfg.n_outputs {
+            return Err(Error::ShapeMismatch(format!(
+                "weights {}x{} vs config {}x{}",
+                weights.n_inputs(),
+                weights.n_outputs(),
+                cfg.n_inputs,
+                cfg.n_outputs
+            )));
+        }
+        let neurons = (0..cfg.n_outputs).map(|_| LifNeuronCore::new(&cfg)).collect();
+        Ok(RtlCore {
+            controller: LayerController::new(&cfg),
+            encoder: RtlPoissonEncoder::new(cfg.n_inputs),
+            neurons,
+            act: ActivityCounters::default(),
+            energy_model: EnergyModel::default(),
+            membrane_log: Vec::new(),
+            spike_log: Vec::new(),
+            weights,
+            cfg,
+            vcd: None,
+        })
+    }
+
+    /// Override the energy model (ablations).
+    pub fn with_energy_model(mut self, m: EnergyModel) -> Self {
+        self.energy_model = m;
+        self
+    }
+
+    /// Set the datapath width (pixels integrated per clock); see
+    /// [`LayerController::set_pixels_per_cycle`]. Results are identical
+    /// for any width (same architectural work per timestep — verified by
+    /// test); only the cycle count changes.
+    pub fn with_pixels_per_cycle(mut self, k: usize) -> Self {
+        self.controller.set_pixels_per_cycle(k);
+        self
+    }
+
+    /// Attach a VCD waveform writer; signals are dumped every cycle.
+    pub fn attach_vcd(&mut self, vcd: VcdWriter) {
+        self.vcd = Some(vcd);
+    }
+
+    /// Take back the VCD writer (to finish/flush it).
+    pub fn detach_vcd(&mut self) -> Option<VcdWriter> {
+        self.vcd.take()
+    }
+
+    pub fn config(&self) -> &SnnConfig {
+        &self.cfg
+    }
+
+    /// Controller FSM state (observability).
+    pub fn state(&self) -> CtrlState {
+        self.controller.state()
+    }
+
+    /// Current membrane potentials.
+    pub fn membranes(&self) -> Vec<i32> {
+        self.neurons.iter().map(LifNeuronCore::acc).collect()
+    }
+
+    /// `load` pulse: latch an image + seed, reset all neuron state, leave
+    /// the FSM in `Integrate{0}`.
+    pub fn load_image(&mut self, img: &Image, seed: u32) -> Result<()> {
+        if img.pixels.len() != self.cfg.n_inputs {
+            return Err(Error::ShapeMismatch(format!(
+                "image {} pixels vs core {}",
+                img.pixels.len(),
+                self.cfg.n_inputs
+            )));
+        }
+        self.encoder.load(&img.pixels, seed, &mut self.act);
+        for n in &mut self.neurons {
+            n.tick(NeuronCtrl::Reset, &mut self.act);
+        }
+        self.controller.start();
+        self.membrane_log.clear();
+        self.spike_log.clear();
+        Ok(())
+    }
+
+    /// Advance exactly one clock. Returns `true` while the window is still
+    /// running (`false` once `Done`).
+    pub fn tick_cycle(&mut self) -> bool {
+        let state = self.controller.state();
+        match state {
+            CtrlState::Idle | CtrlState::Done => return false,
+            CtrlState::Integrate { pixel } => {
+                // One clock serves `pixels_per_cycle` lanes (1 = the
+                // paper's Fig. 1 pixel-serial datapath). Each lane has its
+                // own encoder comparator; spiking lanes fetch their weight
+                // row and pulse the adder tree. BRAM fetches happen only
+                // on a spike AND only while at least one neuron is still
+                // enabled — once pruning has gated the whole array, the
+                // weight memory goes idle too. (Measured consequence:
+                // without that gate, BRAM reads dominate dynamic energy
+                // and pruning saves almost nothing — EXPERIMENTS.md
+                // ablation A.)
+                let end = (pixel + self.controller.pixels_per_cycle()).min(self.cfg.n_inputs);
+                let any_enabled = self.controller.enables().iter().any(|&e| e);
+                for lane_pixel in pixel..end {
+                    let spike = self.encoder.tick_pixel(lane_pixel, &mut self.act);
+                    if spike && any_enabled {
+                        self.act.bram_reads += 1;
+                        let row = self.weights.row(lane_pixel);
+                        for (j, n) in self.neurons.iter_mut().enumerate() {
+                            if self.controller.enable(j) {
+                                n.tick(NeuronCtrl::Add { weight: row[j] }, &mut self.act);
+                            }
+                        }
+                    }
+                }
+                // Immediate fire mode: comparator is combinational on the
+                // accumulator; fire mid-integration.
+                if self.cfg.fire_mode == FireMode::Immediate {
+                    let mut fired = vec![false; self.cfg.n_outputs];
+                    let mut any = false;
+                    for (j, n) in self.neurons.iter_mut().enumerate() {
+                        if self.controller.enable(j) && n.above_threshold() {
+                            n.tick(NeuronCtrl::FireCheck, &mut self.act);
+                            fired[j] = true;
+                            any = true;
+                        }
+                    }
+                    if any {
+                        let counts: Vec<u32> =
+                            self.neurons.iter().map(LifNeuronCore::spike_count).collect();
+                        self.controller.latch_fire(&fired, &counts);
+                        self.apply_prune_mask();
+                    }
+                }
+            }
+            CtrlState::Leak { .. } => {
+                for (j, n) in self.neurons.iter_mut().enumerate() {
+                    if self.controller.enable(j) {
+                        n.tick(NeuronCtrl::Leak, &mut self.act);
+                    }
+                }
+            }
+            CtrlState::Fire => {
+                let mut fired = vec![false; self.cfg.n_outputs];
+                if self.cfg.fire_mode == FireMode::EndOfStep {
+                    for (j, n) in self.neurons.iter_mut().enumerate() {
+                        if self.controller.enable(j) {
+                            fired[j] = n.tick(NeuronCtrl::FireCheck, &mut self.act);
+                        }
+                    }
+                }
+                let counts: Vec<u32> =
+                    self.neurons.iter().map(LifNeuronCore::spike_count).collect();
+                self.controller.latch_fire(&fired, &counts);
+                self.apply_prune_mask();
+                self.membrane_log.push(self.membranes());
+                self.spike_log.push(fired);
+            }
+        }
+        self.act.cycles += 1;
+        if let Some(v) = self.vcd.as_mut() {
+            let membranes: Vec<i32> = self.neurons.iter().map(LifNeuronCore::acc).collect();
+            v.sample(
+                self.act.cycles,
+                &state,
+                &membranes,
+                self.controller.spike_reg(),
+                self.controller.enables(),
+            );
+        }
+        self.controller.advance();
+        self.controller.state() != CtrlState::Done
+    }
+
+    /// Drive the enable latches from the controller's pruning mask.
+    fn apply_prune_mask(&mut self) {
+        for (j, n) in self.neurons.iter_mut().enumerate() {
+            n.set_enabled(self.controller.enable(j));
+        }
+    }
+
+    /// Run one full inference window and collect the result.
+    pub fn run(&mut self, img: &Image, seed: u32) -> Result<RtlResult> {
+        self.load_image(img, seed)?;
+        let start_cycles = self.act.cycles;
+        let start_act = self.act;
+        while self.tick_cycle() {}
+        let spike_counts: Vec<u32> =
+            self.neurons.iter().map(LifNeuronCore::spike_count).collect();
+        let mut window_act = self.act;
+        // Per-window deltas.
+        window_act.adds -= start_act.adds;
+        window_act.shifts -= start_act.shifts;
+        window_act.compares -= start_act.compares;
+        window_act.bram_reads -= start_act.bram_reads;
+        window_act.prng_steps -= start_act.prng_steps;
+        window_act.reg_toggles -= start_act.reg_toggles;
+        window_act.cycles -= start_act.cycles;
+        window_act.saturations -= start_act.saturations;
+        let energy = self.energy_model.evaluate(&window_act);
+        Ok(RtlResult {
+            class: LayerController::decide(&spike_counts),
+            spike_counts,
+            cycles: self.act.cycles - start_cycles,
+            activity: window_act,
+            energy,
+            membrane_by_step: std::mem::take(&mut self.membrane_log),
+            spikes_by_step: std::mem::take(&mut self.spike_log),
+        })
+    }
+
+    /// Cumulative activity across all windows run so far.
+    pub fn total_activity(&self) -> ActivityCounters {
+        self.act
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DecisionPolicy, FireMode, LeakMode, PruneMode};
+    use crate::data::DigitGen;
+    use crate::snn::BehavioralNet;
+    use crate::testutil::PropRunner;
+
+    fn test_weights(seed: u32) -> WeightMatrix {
+        let mut rng = crate::prng::Xorshift32::new(seed);
+        let data: Vec<i32> = (0..7840).map(|_| rng.range_i32(-30, 60)).collect();
+        WeightMatrix::from_rows(784, 10, 9, data).unwrap()
+    }
+
+    #[test]
+    fn cycle_count_matches_schedule() {
+        let cfg = SnnConfig::paper().with_timesteps(3);
+        let mut core = RtlCore::new(cfg, test_weights(1)).unwrap();
+        let img = DigitGen::new(1).sample(0, 0);
+        let r = core.run(&img, 42).unwrap();
+        // (784 integrate + 1 leak + 1 fire) × 3 timesteps.
+        assert_eq!(r.cycles, 786 * 3);
+        assert_eq!(r.membrane_by_step.len(), 3);
+        assert_eq!(r.spikes_by_step.len(), 3);
+    }
+
+    #[test]
+    fn per_row_leak_adds_cycles() {
+        let cfg = SnnConfig::paper()
+            .with_timesteps(1)
+            .with_leak_mode(LeakMode::PerRow { row_len: 28 });
+        let mut core = RtlCore::new(cfg, test_weights(1)).unwrap();
+        let img = DigitGen::new(1).sample(0, 0);
+        let r = core.run(&img, 42).unwrap();
+        // 784 integrate + 28 leaks (27 mid-row + 1 final) + 1 fire.
+        assert_eq!(r.cycles, 784 + 28 + 1);
+    }
+
+    /// The core equivalence theorem: RTL (EndOfStep, PerTimestep) ==
+    /// behavioral model, step by step, over random weights/images/seeds.
+    #[test]
+    fn rtl_equals_behavioral_model() {
+        PropRunner::new("rtl_equiv", 12).run(|g| {
+            let cfg = SnnConfig::paper()
+                .with_timesteps(g.rng.range_i32(2, 8) as u32)
+                .with_v_th(g.rng.range_i32(60, 400))
+                .with_decay_shift(g.rng.range_i32(1, 5) as u32);
+            let w = test_weights(g.rng.next_u32());
+            let img = DigitGen::new(g.rng.next_u32()).sample(g.rng.below(10) as u8, g.rng.below(20));
+            let seed = g.rng.next_u32();
+
+            let mut core = RtlCore::new(cfg.clone(), w.clone()).unwrap();
+            let rtl = core.run(&img, seed).unwrap();
+            assert_eq!(rtl.activity.saturations, 0, "saturation voids equivalence");
+
+            let net = BehavioralNet::new(cfg.clone(), w).unwrap();
+            let (beh, traces) = net.classify_traced(&img, seed, cfg.timesteps);
+
+            assert_eq!(rtl.spike_counts, beh.spike_counts, "spike counts diverge");
+            assert_eq!(rtl.class, beh.class, "decision diverges");
+            for (t, (rtl_mem, trace)) in
+                rtl.membrane_by_step.iter().zip(traces.iter()).enumerate()
+            {
+                assert_eq!(rtl_mem, &trace.membrane, "membrane diverges at step {t}");
+                assert_eq!(
+                    &rtl.spikes_by_step[t], &trace.fired,
+                    "fire pattern diverges at step {t}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn pruning_reduces_activity() {
+        let img = DigitGen::new(1).sample(3, 0);
+        let w = test_weights(7);
+        let on = SnnConfig::paper()
+            .with_timesteps(20)
+            .with_prune(PruneMode::AfterFires { after_spikes: 1 });
+        let off = on.clone().with_prune(PruneMode::Off);
+        let r_on = RtlCore::new(on, w.clone()).unwrap().run(&img, 9).unwrap();
+        let r_off = RtlCore::new(off, w).unwrap().run(&img, 9).unwrap();
+        // Same cycle count (the schedule is fixed) but strictly less
+        // switching activity when neurons get gated off.
+        assert_eq!(r_on.cycles, r_off.cycles);
+        assert!(
+            r_on.spike_counts.iter().sum::<u32>() > 0,
+            "test needs at least one spike to exercise pruning"
+        );
+        assert!(
+            r_on.activity.adds < r_off.activity.adds,
+            "pruning must cut integrate adds: {} vs {}",
+            r_on.activity.adds,
+            r_off.activity.adds
+        );
+        assert!(r_on.energy.dynamic_nj < r_off.energy.dynamic_nj);
+    }
+
+    #[test]
+    fn immediate_mode_fires_mid_step() {
+        // With a huge drive, Immediate mode fires during integration and
+        // (with pruning) freezes counts at 1 per neuron.
+        let cfg = SnnConfig::paper()
+            .with_timesteps(2)
+            .with_v_th(64)
+            .with_fire_mode(FireMode::Immediate)
+            .with_decision(DecisionPolicy::SpikeCount);
+        let w = WeightMatrix::from_rows(784, 10, 9, vec![100; 7840]).unwrap();
+        let img = crate::data::Image { label: 0, pixels: vec![255; 784] };
+        let mut core = RtlCore::new(cfg, w).unwrap();
+        let r = core.run(&img, 3).unwrap();
+        assert!(r.spike_counts.iter().all(|&c| c == 1), "{:?}", r.spike_counts);
+    }
+
+    #[test]
+    fn event_driven_gating_zero_input() {
+        // A black image produces no spikes: no adds, no BRAM reads.
+        let cfg = SnnConfig::paper().with_timesteps(5);
+        let img = crate::data::Image { label: 0, pixels: vec![0; 784] };
+        let mut core = RtlCore::new(cfg, test_weights(3)).unwrap();
+        let r = core.run(&img, 11).unwrap();
+        assert_eq!(r.activity.bram_reads, 0);
+        // Only leak-cycle adds (the subtract half of shift-subtract).
+        assert_eq!(r.activity.adds, 5 * 10); // 5 steps × 10 neurons × 1 leak
+    }
+
+    #[test]
+    fn datapath_width_changes_cycles_not_results() {
+        let img = DigitGen::new(1).sample(6, 2);
+        let w = test_weights(11);
+        let cfg = SnnConfig::paper().with_timesteps(4);
+        let mut reference = None;
+        for k in [1usize, 2, 4, 7, 784] {
+            let mut core =
+                RtlCore::new(cfg.clone(), w.clone()).unwrap().with_pixels_per_cycle(k);
+            let r = core.run(&img, 99).unwrap();
+            // Cycle count: ceil(784/k) integrate clocks + leak + fire.
+            let integrate = (784 + k - 1) / k;
+            assert_eq!(r.cycles, (integrate as u64 + 2) * 4, "width {k}");
+            match &reference {
+                None => reference = Some(r),
+                Some(base) => {
+                    assert_eq!(r.spike_counts, base.spike_counts, "width {k}");
+                    assert_eq!(r.membrane_by_step, base.membrane_by_step, "width {k}");
+                    // Same architectural work regardless of width.
+                    assert_eq!(r.activity.adds, base.activity.adds, "width {k}");
+                    assert_eq!(r.activity.prng_steps, base.activity.prng_steps);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_row_width_alignment_enforced() {
+        let cfg = SnnConfig::paper().with_leak_mode(LeakMode::PerRow { row_len: 28 });
+        let core = RtlCore::new(cfg, test_weights(1)).unwrap();
+        // 28 % 4 == 0: fine; 28 % 3 != 0: must panic.
+        let _ok = core.with_pixels_per_cycle(4);
+        let cfg = SnnConfig::paper().with_leak_mode(LeakMode::PerRow { row_len: 28 });
+        let core = RtlCore::new(cfg, test_weights(1)).unwrap();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            core.with_pixels_per_cycle(3)
+        }));
+        assert!(res.is_err(), "misaligned width must be rejected");
+    }
+
+    #[test]
+    fn bram_goes_idle_once_all_neurons_pruned() {
+        // Huge uniform drive + prune-after-1: all ten neurons fire on the
+        // first step; from step 2 on the weight BRAM must not be read.
+        let cfg = SnnConfig::paper()
+            .with_timesteps(5)
+            .with_v_th(64)
+            .with_prune(PruneMode::AfterFires { after_spikes: 1 });
+        let w = WeightMatrix::from_rows(784, 10, 9, vec![100; 7840]).unwrap();
+        let img = crate::data::Image { label: 0, pixels: vec![255; 784] };
+        let mut core = RtlCore::new(cfg, w).unwrap();
+        let r = core.run(&img, 3).unwrap();
+        assert!(r.spike_counts.iter().all(|&c| c == 1));
+        // Roughly one timestep's worth of spikes (~99% rate), not five.
+        assert!(
+            r.activity.bram_reads < 790,
+            "BRAM still active after full pruning: {} reads",
+            r.activity.bram_reads
+        );
+    }
+
+    #[test]
+    fn rejects_geometry_mismatch() {
+        let cfg = SnnConfig::paper();
+        let w = WeightMatrix::zeros(100, 10, 9);
+        assert!(RtlCore::new(cfg, w).is_err());
+        let cfg = SnnConfig::paper();
+        let w = WeightMatrix::zeros(784, 10, 9);
+        let mut core = RtlCore::new(cfg, w).unwrap();
+        let bad = crate::data::Image { label: 0, pixels: vec![0; 10] };
+        assert!(core.load_image(&bad, 1).is_err());
+    }
+}

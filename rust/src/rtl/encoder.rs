@@ -1,0 +1,124 @@
+//! RTL Poisson encoder (paper Fig. 2): a file of per-pixel xorshift32
+//! state registers plus an 8-bit magnitude comparator.
+//!
+//! One pixel is served per `Integrate` clock: its register advances through
+//! the three XOR/shift stages and the comparator asserts `spike` when the
+//! stored intensity exceeds the low byte of the new state. Over a full
+//! timestep (784 cycles) this produces exactly the same spike vector as the
+//! behavioral [`crate::snn::PoissonEncoder`], which advances all streams
+//! "at once" — the per-pixel streams are independent, so serialization
+//! order cannot change the values. That equality is pinned by tests here.
+
+use crate::prng::{pixel_seed, xorshift32_step};
+
+use super::power::ActivityCounters;
+
+/// The encoder's architectural state: one 32-bit PRNG register per pixel
+/// plus the latched input intensities.
+#[derive(Debug, Clone)]
+pub struct RtlPoissonEncoder {
+    states: Vec<u32>,
+    intensities: Vec<u8>,
+}
+
+impl RtlPoissonEncoder {
+    /// Instantiate for `n_pixels` channels (registers undefined until
+    /// [`RtlPoissonEncoder::load`], as in hardware after power-up).
+    pub fn new(n_pixels: usize) -> Self {
+        RtlPoissonEncoder { states: vec![1; n_pixels], intensities: vec![0; n_pixels] }
+    }
+
+    /// `load` pulse: latch the image and re-seed every PRNG register
+    /// (the seed bus carries the per-image seed; the seeding network is
+    /// the [`pixel_seed`] contract).
+    pub fn load(&mut self, intensities: &[u8], seed: u32, act: &mut ActivityCounters) {
+        assert_eq!(intensities.len(), self.states.len(), "encoder width");
+        self.intensities.copy_from_slice(intensities);
+        for (i, s) in self.states.iter_mut().enumerate() {
+            let next = pixel_seed(seed, i as u32);
+            act.reg_toggles += u64::from((*s ^ next).count_ones());
+            *s = next;
+        }
+        act.prng_steps += self.states.len() as u64; // seeding network pass
+    }
+
+    /// One `Integrate` clock serving pixel `p`: advance its PRNG register
+    /// and return the comparator output.
+    #[inline]
+    pub fn tick_pixel(&mut self, p: usize, act: &mut ActivityCounters) -> bool {
+        let prev = self.states[p];
+        let next = xorshift32_step(prev);
+        act.reg_toggles += u64::from((prev ^ next).count_ones());
+        act.prng_steps += 1;
+        act.compares += 1; // the 8-bit magnitude comparator
+        self.states[p] = next;
+        u32::from(self.intensities[p]) > (next & 0xFF)
+    }
+
+    /// Current PRNG register values (observability for tests/waveforms).
+    pub fn states(&self) -> &[u32] {
+        &self.states
+    }
+
+    /// Latched intensity for pixel `p`.
+    pub fn intensity(&self, p: usize) -> u8 {
+        self.intensities[p]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DigitGen, Image, IMG_PIXELS};
+    use crate::snn::encode_image;
+
+    #[test]
+    fn matches_behavioral_encoder_exactly() {
+        let img = DigitGen::new(1).sample(7, 3);
+        let seed = 0xABCD_1234;
+        let timesteps = 12u32;
+        let golden = encode_image(&img, seed, timesteps);
+
+        let mut act = ActivityCounters::default();
+        let mut enc = RtlPoissonEncoder::new(IMG_PIXELS);
+        enc.load(&img.pixels, seed, &mut act);
+        for t in 0..timesteps as usize {
+            for p in 0..IMG_PIXELS {
+                let spike = enc.tick_pixel(p, &mut act);
+                assert_eq!(
+                    spike, golden[t][p],
+                    "RTL/behavioral encoder divergence at t={t} pixel={p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reload_restarts_stream() {
+        let img = Image { label: 0, pixels: vec![200; IMG_PIXELS] }; // bright
+        let mut act = ActivityCounters::default();
+        let mut enc = RtlPoissonEncoder::new(IMG_PIXELS);
+        enc.load(&img.pixels, 5, &mut act);
+        let first: Vec<bool> = (0..IMG_PIXELS).map(|p| enc.tick_pixel(p, &mut act)).collect();
+        // Re-load with the same seed: identical spikes again.
+        enc.load(&img.pixels, 5, &mut act);
+        let second: Vec<bool> = (0..IMG_PIXELS).map(|p| enc.tick_pixel(p, &mut act)).collect();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn counts_activity() {
+        let img = Image { label: 0, pixels: vec![128; IMG_PIXELS] };
+        let mut act = ActivityCounters::default();
+        let mut enc = RtlPoissonEncoder::new(IMG_PIXELS);
+        enc.load(&img.pixels, 5, &mut act);
+        let after_load = act.prng_steps;
+        assert_eq!(after_load, IMG_PIXELS as u64);
+        for p in 0..IMG_PIXELS {
+            enc.tick_pixel(p, &mut act);
+        }
+        assert_eq!(act.prng_steps, after_load + IMG_PIXELS as u64);
+        assert_eq!(act.compares, IMG_PIXELS as u64);
+        assert!(act.reg_toggles > 0);
+    }
+}

@@ -1,0 +1,226 @@
+//! One LIF neuron core (paper Fig. 1): accumulator register, saturating
+//! adder, shift-based decay unit, threshold comparator, spike-count
+//! register and enable gating.
+//!
+//! The core is modelled two-phase: the controller presents a [`NeuronCtrl`]
+//! command word (the decoded control signals for this clock) and `tick`
+//! commits the posedge. All datapath activity is recorded into
+//! [`ActivityCounters`].
+
+use crate::config::SnnConfig;
+use crate::fixed::leak;
+
+use super::power::ActivityCounters;
+
+/// Decoded per-clock control signals driven by the layer controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NeuronCtrl {
+    /// Hold: no enable asserted this clock.
+    Idle,
+    /// `add_en`: integrate `weight` into the accumulator.
+    Add { weight: i32 },
+    /// `leak_en`: apply the shift-subtract decay.
+    Leak,
+    /// `fire_en`: evaluate the threshold comparator; fire & hard-reset when
+    /// `acc ≥ V_th`.
+    FireCheck,
+    /// Synchronous reset (new inference window).
+    Reset,
+}
+
+/// Architectural state of a single neuron core.
+#[derive(Debug, Clone)]
+pub struct LifNeuronCore {
+    /// Membrane accumulator register (sign-extended to i32; physically
+    /// `acc_bits` wide).
+    acc: i32,
+    /// Output spike count register (used by readout and pruning).
+    spike_count: u32,
+    /// Enable latch: cleared by the controller's pruning mask.
+    enabled: bool,
+    /// Fired-this-cycle flag (the `Fire` output wire).
+    fired: bool,
+    cfg_acc_bits: u32,
+    cfg_decay_shift: u32,
+    cfg_v_th: i32,
+    cfg_v_rest: i32,
+}
+
+impl LifNeuronCore {
+    pub fn new(cfg: &SnnConfig) -> Self {
+        LifNeuronCore {
+            acc: cfg.v_rest,
+            spike_count: 0,
+            enabled: true,
+            fired: false,
+            cfg_acc_bits: cfg.acc_bits,
+            cfg_decay_shift: cfg.decay_shift,
+            cfg_v_th: cfg.v_th,
+            cfg_v_rest: cfg.v_rest,
+        }
+    }
+
+    /// Membrane potential (the accumulator register).
+    pub fn acc(&self) -> i32 {
+        self.acc
+    }
+
+    /// Spike-count register.
+    pub fn spike_count(&self) -> u32 {
+        self.spike_count
+    }
+
+    /// Enable latch value.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The `Fire` wire: did the neuron fire on the last `tick`?
+    pub fn fired(&self) -> bool {
+        self.fired
+    }
+
+    /// Controller drives the enable latch (pruning mask).
+    pub fn set_enabled(&mut self, en: bool) {
+        self.enabled = en;
+    }
+
+    /// Commit one clock edge under `ctrl`. Returns the `Fire` wire value.
+    pub fn tick(&mut self, ctrl: NeuronCtrl, act: &mut ActivityCounters) -> bool {
+        self.fired = false;
+        if !self.enabled && !matches!(ctrl, NeuronCtrl::Reset) {
+            // Gated clock: a disabled neuron burns no dynamic power.
+            return false;
+        }
+        match ctrl {
+            NeuronCtrl::Idle => {}
+            NeuronCtrl::Add { weight } => {
+                let max = (1i32 << (self.cfg_acc_bits - 1)) - 1;
+                let sum = i64::from(self.acc) + i64::from(weight);
+                let clamped = sum.clamp(-(max as i64), max as i64) as i32;
+                if clamped as i64 != sum {
+                    act.saturations += 1;
+                }
+                act.adds += 1;
+                self.write_acc(clamped, act);
+            }
+            NeuronCtrl::Leak => {
+                let next = leak(self.acc, self.cfg_decay_shift);
+                act.shifts += 1;
+                act.adds += 1; // the subtract half of shift-subtract
+                self.write_acc(next, act);
+            }
+            NeuronCtrl::FireCheck => {
+                act.compares += 1;
+                if self.acc >= self.cfg_v_th {
+                    self.fired = true;
+                    self.spike_count += 1;
+                    act.reg_toggles += 1; // spike-count increment (approx.)
+                    self.write_acc(self.cfg_v_rest, act);
+                }
+            }
+            NeuronCtrl::Reset => {
+                self.write_acc(self.cfg_v_rest, act);
+                self.spike_count = 0;
+                self.enabled = true;
+                self.fired = false;
+            }
+        }
+        self.fired
+    }
+
+    /// Combinational threshold check used in `FireMode::Immediate` during
+    /// integration (comparator output without a clock commit).
+    pub fn above_threshold(&self) -> bool {
+        self.acc >= self.cfg_v_th
+    }
+
+    #[inline]
+    fn write_acc(&mut self, next: i32, act: &mut ActivityCounters) {
+        act.reg_toggles += u64::from(((self.acc as u32) ^ (next as u32)).count_ones());
+        self.acc = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SnnConfig {
+        SnnConfig { v_th: 10, decay_shift: 1, acc_bits: 16, ..SnnConfig::paper() }
+    }
+
+    #[test]
+    fn add_leak_fire_sequence() {
+        let mut act = ActivityCounters::default();
+        let mut n = LifNeuronCore::new(&cfg());
+        n.tick(NeuronCtrl::Add { weight: 7 }, &mut act);
+        assert_eq!(n.acc(), 7);
+        n.tick(NeuronCtrl::Leak, &mut act);
+        assert_eq!(n.acc(), 4); // 7 - (7>>1)=3
+        n.tick(NeuronCtrl::Add { weight: 7 }, &mut act);
+        assert_eq!(n.acc(), 11);
+        let fired = n.tick(NeuronCtrl::FireCheck, &mut act);
+        assert!(fired);
+        assert_eq!(n.acc(), 0);
+        assert_eq!(n.spike_count(), 1);
+    }
+
+    #[test]
+    fn disabled_neuron_is_inert_and_free() {
+        let mut act = ActivityCounters::default();
+        let mut n = LifNeuronCore::new(&cfg());
+        n.set_enabled(false);
+        let before = act;
+        n.tick(NeuronCtrl::Add { weight: 100 }, &mut act);
+        n.tick(NeuronCtrl::Leak, &mut act);
+        n.tick(NeuronCtrl::FireCheck, &mut act);
+        assert_eq!(n.acc(), 0);
+        assert_eq!(n.spike_count(), 0);
+        assert_eq!(act, before, "disabled neuron must record zero activity");
+    }
+
+    #[test]
+    fn reset_reenables() {
+        let mut act = ActivityCounters::default();
+        let mut n = LifNeuronCore::new(&cfg());
+        n.tick(NeuronCtrl::Add { weight: 25 }, &mut act);
+        n.tick(NeuronCtrl::FireCheck, &mut act);
+        n.set_enabled(false);
+        n.tick(NeuronCtrl::Reset, &mut act);
+        assert!(n.enabled());
+        assert_eq!(n.acc(), 0);
+        assert_eq!(n.spike_count(), 0);
+    }
+
+    #[test]
+    fn saturation_is_counted() {
+        let mut act = ActivityCounters::default();
+        let mut n = LifNeuronCore::new(&SnnConfig { acc_bits: 8, v_th: 100, ..cfg() });
+        for _ in 0..3 {
+            n.tick(NeuronCtrl::Add { weight: 120 }, &mut act);
+        }
+        // 120, then 240 -> clamp 127, then 127+120 -> clamp.
+        assert_eq!(n.acc(), 127);
+        assert_eq!(act.saturations, 2);
+    }
+
+    #[test]
+    fn negative_membrane_decays_up() {
+        let mut act = ActivityCounters::default();
+        let mut n = LifNeuronCore::new(&cfg());
+        n.tick(NeuronCtrl::Add { weight: -9 }, &mut act);
+        assert_eq!(n.acc(), -9);
+        n.tick(NeuronCtrl::Leak, &mut act);
+        // -9 - (-9>>1) = -9 - (-5) = -4
+        assert_eq!(n.acc(), -4);
+    }
+
+    #[test]
+    fn toggle_counting_tracks_hamming_distance() {
+        let mut act = ActivityCounters::default();
+        let mut n = LifNeuronCore::new(&cfg());
+        n.tick(NeuronCtrl::Add { weight: 0b1111 }, &mut act);
+        assert_eq!(act.reg_toggles, 4); // 0 -> 0b1111 toggles 4 bits
+    }
+}

@@ -1,0 +1,178 @@
+//! Parser for `artifacts/manifest.txt` (key=value lines written by
+//! `python/compile/aot.py`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::{PruneMode, SnnConfig};
+use crate::error::{Error, Result};
+
+/// Parsed artifact manifest: the build-time configuration every runtime
+/// component cross-checks against.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    kv: HashMap<String, String>,
+    /// Directory the manifest was loaded from (artifact paths resolve
+    /// relative to it).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| Error::io(&path, e))?;
+        let mut kv = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(Error::malformed(
+                    &path,
+                    format!("line {}: expected key=value, got {line:?}", lineno + 1),
+                ));
+            };
+            kv.insert(k.to_string(), v.to_string());
+        }
+        let m = Manifest { kv, dir };
+        // Schema check + required keys early, so failures are immediate.
+        if m.u32("schema")? != 1 {
+            return Err(Error::malformed(path, "unsupported manifest schema"));
+        }
+        Ok(m)
+    }
+
+    /// Raw string value.
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.kv
+            .get(key)
+            .map(String::as_str)
+            .ok_or_else(|| Error::malformed(self.dir.join("manifest.txt"), format!("missing key {key}")))
+    }
+
+    /// Parse a u32 value.
+    pub fn u32(&self, key: &str) -> Result<u32> {
+        self.get(key)?.parse().map_err(|e| {
+            Error::malformed(self.dir.join("manifest.txt"), format!("key {key}: {e}"))
+        })
+    }
+
+    /// Parse an i32 value.
+    pub fn i32(&self, key: &str) -> Result<i32> {
+        self.get(key)?.parse().map_err(|e| {
+            Error::malformed(self.dir.join("manifest.txt"), format!("key {key}: {e}"))
+        })
+    }
+
+    /// Parse an f64 value (accuracy stats).
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        self.get(key)?.parse().map_err(|e| {
+            Error::malformed(self.dir.join("manifest.txt"), format!("key {key}: {e}"))
+        })
+    }
+
+    /// Comma-separated u32 list (batch size sets).
+    pub fn u32_list(&self, key: &str) -> Result<Vec<u32>> {
+        self.get(key)?
+            .split(',')
+            .map(|s| {
+                s.trim().parse().map_err(|e| {
+                    Error::malformed(self.dir.join("manifest.txt"), format!("key {key}: {e}"))
+                })
+            })
+            .collect()
+    }
+
+    /// The SnnConfig the artifacts were built for.
+    pub fn snn_config(&self) -> Result<SnnConfig> {
+        let prune_after = self.u32("prune_after")?;
+        SnnConfig {
+            n_inputs: self.u32("n_inputs")? as usize,
+            n_outputs: self.u32("n_outputs")? as usize,
+            v_th: self.i32("v_th")?,
+            v_rest: self.i32("v_rest")?,
+            decay_shift: self.u32("decay_shift")?,
+            acc_bits: self.u32("acc_bits")?,
+            weight_bits: self.u32("weight_bits")?,
+            timesteps: self.u32("timesteps")?,
+            prune: if prune_after == 0 {
+                PruneMode::Off
+            } else {
+                PruneMode::AfterFires { after_spikes: prune_after }
+            },
+            ..SnnConfig::paper()
+        }
+        .validated()
+    }
+
+    /// Resolve an artifact file path.
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// The shared eval-seed convention (`seed_i = base + i·mult`), mirrored
+    /// from `python/compile/aot.py`.
+    pub fn eval_seed(&self, index: u32) -> Result<u32> {
+        let base = self.u32("eval_seed_base")?;
+        let mult = self.u32("eval_seed_mult")?;
+        Ok(base.wrapping_add(index.wrapping_mul(mult)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        fs::create_dir_all(dir).unwrap();
+        fs::write(dir.join("manifest.txt"), body).unwrap();
+    }
+
+    fn full_body() -> &'static str {
+        "schema=1\nn_inputs=784\nn_outputs=10\nv_th=384\nv_rest=0\n\
+         decay_shift=3\nacc_bits=24\nweight_bits=9\ntimesteps=20\n\
+         prune_after=5\neval_seed_base=12648430\neval_seed_mult=2654435761\n\
+         forward_batches=1,8,32\n"
+    }
+
+    #[test]
+    fn parses_full_manifest() {
+        let dir = std::env::temp_dir().join(format!("snn_manifest_{}", std::process::id()));
+        write_manifest(&dir, full_body());
+        let m = Manifest::load(&dir).unwrap();
+        let cfg = m.snn_config().unwrap();
+        assert_eq!(cfg.v_th, 384);
+        assert_eq!(cfg.prune, PruneMode::AfterFires { after_spikes: 5 });
+        assert_eq!(m.u32_list("forward_batches").unwrap(), vec![1, 8, 32]);
+        assert_eq!(m.eval_seed(0).unwrap(), 12648430);
+        assert_eq!(m.eval_seed(1).unwrap(), 12648430u32.wrapping_add(2654435761));
+    }
+
+    #[test]
+    fn rejects_bad_schema_and_lines() {
+        let dir = std::env::temp_dir().join(format!("snn_manifest_bad_{}", std::process::id()));
+        write_manifest(&dir, "schema=2\n");
+        assert!(Manifest::load(&dir).is_err());
+        write_manifest(&dir, "schema=1\nnot a kv line\n");
+        assert!(Manifest::load(&dir).is_err());
+        write_manifest(&dir, "schema=1\n");
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.get("v_th").is_err());
+        assert!(m.snn_config().is_err());
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            let cfg = m.snn_config().unwrap();
+            assert_eq!(cfg.n_inputs, 784);
+            assert_eq!(cfg.n_outputs, 10);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them from
+//! the Rust request path.
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6, PJRT C API): HLO *text* from
+//! `artifacts/*.hlo.txt` is parsed into an `HloModuleProto`, compiled once
+//! per model variant by the CPU PJRT client, and executed with concrete
+//! `Literal` inputs. Text is the interchange format because jax ≥ 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects (see /opt/xla-example/README.md).
+
+mod manifest;
+mod xla_backend;
+
+pub use manifest::Manifest;
+pub use xla_backend::XlaSnn;

@@ -1,0 +1,420 @@
+//! The compiled-HLO inference backend (the L2/L1 stack running under rust).
+//!
+//! `XlaSnn` owns a PJRT CPU client plus one compiled executable per
+//! artifact: full-window forwards at several batch sizes, the chunked
+//! forward used by the early-exit scheduler, and the baseline ANN. Weights
+//! are marshalled to a `Literal` once at load time and cloned per call
+//! (cheap host copy; the compile stays cached).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::data::{codec, Image, WeightArtifact};
+use crate::error::{Error, Result};
+use crate::prng::{pixel_seed, xorshift32_step};
+use crate::SnnConfig;
+
+use super::manifest::Manifest;
+
+/// Convert raw little-endian data into a Literal of the given shape.
+fn literal(ty: xla::ElementType, dims: &[usize], bytes: &[u8]) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes).map_err(Error::from)
+}
+
+fn literal_i32(dims: &[usize], vals: &[i32]) -> Result<xla::Literal> {
+    let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+    literal(xla::ElementType::S32, dims, &bytes)
+}
+
+fn literal_u32(dims: &[usize], vals: &[u32]) -> Result<xla::Literal> {
+    let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+    literal(xla::ElementType::U32, dims, &bytes)
+}
+
+fn literal_f32(dims: &[usize], vals: &[f32]) -> Result<xla::Literal> {
+    let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+    literal(xla::ElementType::F32, dims, &bytes)
+}
+
+/// In-flight state of a chunked (early-exit) batch on the XLA backend.
+///
+/// The carry is the PACKED single int32 array produced by the untupled
+/// chunk executable (`python/compile/model.py::pack_carry` layout:
+/// `[xorshift states (P) | acc (N) | counts (N) | enabled (N)]` along
+/// axis 1). It lives as a device-resident `PjRtBuffer` between chunks —
+/// the executable's output buffer is fed straight back in as the next
+/// input (perf pass 6); one host copy per chunk extracts the counts for
+/// the margin check.
+pub struct SnnChunkState {
+    images: xla::PjRtBuffer,
+    carry: xla::PjRtBuffer,
+    /// Timesteps executed so far.
+    pub steps_run: u32,
+    /// Logical batch occupancy (rows beyond this are padding).
+    pub occupancy: usize,
+}
+
+/// The PJRT-backed SNN + baseline ANN.
+pub struct XlaSnn {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    /// Full-window forward executables keyed by batch size.
+    forwards: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    chunk: xla::PjRtLoadedExecutable,
+    chunk_init: xla::PjRtLoadedExecutable,
+    chunk_batch: usize,
+    chunk_steps: u32,
+    ann: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    weights_lit: xla::Literal,
+    /// Device-resident copy of the weights for the chunked (execute_b)
+    /// path — uploaded once at load.
+    weights_buf: xla::PjRtBuffer,
+    ann_params: Option<[xla::Literal; 4]>,
+    cfg: SnnConfig,
+    pub manifest: Manifest,
+}
+
+// SAFETY: `XlaSnn` owns its PJRT client, executables and literals
+// exclusively — the internal `Rc` clones (client handles held by each
+// executable) and raw C pointers never escape the struct, so moving the
+// whole value to another thread moves every aliased handle together.
+// Shared *concurrent* use is NOT claimed (no `Sync`); the coordinator's
+// `XlaBackend` serializes access behind a `Mutex`.
+unsafe impl Send for XlaSnn {}
+
+impl XlaSnn {
+    /// Load every executable described by `<artifacts>/manifest.txt`.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let cfg = manifest.snn_config()?;
+        let weights = codec::load_weights(manifest.path("weights.bin"))?;
+        Self::check_calibration(&cfg, &weights)?;
+
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = manifest.path(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Xla("non-utf8 path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+
+        let mut forwards = BTreeMap::new();
+        for b in manifest.u32_list("forward_batches")? {
+            forwards.insert(b as usize, compile(&format!("snn_forward_b{b}.hlo.txt"))?);
+        }
+        let chunk_batch = 8usize;
+        let chunk = compile(&format!("snn_chunk_b{chunk_batch}.hlo.txt"))?;
+        let chunk_init = compile(&format!("snn_init_b{chunk_batch}.hlo.txt"))?;
+        let chunk_steps = manifest.u32("chunk_steps")?;
+
+        let mut ann = BTreeMap::new();
+        for b in manifest.u32_list("ann_batches")? {
+            ann.insert(b as usize, compile(&format!("ann_mlp_b{b}.hlo.txt"))?);
+        }
+        let ann_params = match codec_load_ann(&manifest.path("ann_weights.bin")) {
+            Ok(p) => Some(p),
+            Err(_) => None, // ANN artifact optional for SNN-only deployments
+        };
+
+        let weights_lit = literal_i32(
+            &[cfg.n_inputs, cfg.n_outputs],
+            weights.weights.as_slice(),
+        )?;
+        // Synchronous-copy upload (see the note in `chunk_start` about the
+        // async hazard of buffer_from_host_literal).
+        let weights_buf = client.buffer_from_host_buffer(
+            weights.weights.as_slice(),
+            &[cfg.n_inputs, cfg.n_outputs],
+            None,
+        )?;
+
+        Ok(XlaSnn {
+            client,
+            forwards,
+            chunk,
+            chunk_init,
+            chunk_batch,
+            chunk_steps,
+            ann,
+            weights_lit,
+            weights_buf,
+            ann_params,
+            cfg,
+            manifest,
+        })
+    }
+
+    fn check_calibration(cfg: &SnnConfig, w: &WeightArtifact) -> Result<()> {
+        let wc = w.config();
+        if wc.v_th != cfg.v_th
+            || wc.decay_shift != cfg.decay_shift
+            || wc.prune != cfg.prune
+            || wc.n_inputs != cfg.n_inputs
+            || wc.n_outputs != cfg.n_outputs
+        {
+            return Err(Error::InvalidConfig(format!(
+                "weights calibration {wc:?} disagrees with manifest config {cfg:?} — \
+                 rebuild artifacts (`make clean-artifacts && make artifacts`)"
+            )));
+        }
+        Ok(())
+    }
+
+    /// The architectural config baked into the executables.
+    pub fn config(&self) -> &SnnConfig {
+        &self.cfg
+    }
+
+    /// Compiled forward batch sizes, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.forwards.keys().copied().collect()
+    }
+
+    /// Chunk granularity of the early-exit path (timesteps per chunk).
+    pub fn chunk_steps(&self) -> u32 {
+        self.chunk_steps
+    }
+
+    /// Batch capacity of the chunked executable.
+    pub fn chunk_batch(&self) -> usize {
+        self.chunk_batch
+    }
+
+    /// Classify a batch over the full compiled window; returns per-image
+    /// spike counts. Picks the smallest compiled batch ≥ `images.len()`
+    /// (padding with zeros) or splits across the largest.
+    pub fn spike_counts(&self, images: &[&Image], seeds: &[u32]) -> Result<Vec<Vec<u32>>> {
+        if images.len() != seeds.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "{} images vs {} seeds",
+                images.len(),
+                seeds.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(images.len());
+        let max_b = *self.forwards.keys().last().expect("at least one forward");
+        let mut i = 0usize;
+        while i < images.len() {
+            let remaining = images.len() - i;
+            let b = self
+                .forwards
+                .keys()
+                .copied()
+                .find(|&b| b >= remaining)
+                .unwrap_or(max_b);
+            let take = remaining.min(b);
+            out.extend(self.forward_padded(&images[i..i + take], &seeds[i..i + take], b)?);
+            i += take;
+        }
+        Ok(out)
+    }
+
+    fn forward_padded(
+        &self,
+        images: &[&Image],
+        seeds: &[u32],
+        b: usize,
+    ) -> Result<Vec<Vec<u32>>> {
+        let exe = &self.forwards[&b];
+        let p = self.cfg.n_inputs;
+        let n = self.cfg.n_outputs;
+        let mut img_flat = vec![0i32; b * p];
+        for (row, img) in images.iter().enumerate() {
+            for (k, &px) in img.pixels.iter().enumerate() {
+                img_flat[row * p + k] = i32::from(px);
+            }
+        }
+        let mut seed_flat = vec![1u32; b];
+        seed_flat[..seeds.len()].copy_from_slice(seeds);
+
+        let args = [
+            literal_i32(&[b, p], &img_flat)?,
+            literal_u32(&[b], &seed_flat)?,
+            self.weights_lit.clone(),
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let counts_lit = result.to_tuple1()?;
+        let flat = counts_lit.to_vec::<i32>()?;
+        Ok((0..images.len())
+            .map(|row| flat[row * n..(row + 1) * n].iter().map(|&c| c as u32).collect())
+            .collect())
+    }
+
+    /// Start a chunked inference for up to [`Self::chunk_batch`] images.
+    pub fn chunk_start(&self, images: &[&Image], seeds: &[u32]) -> Result<SnnChunkState> {
+        let b = self.chunk_batch;
+        if images.len() > b || images.len() != seeds.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "chunk batch holds {b}, got {} images / {} seeds",
+                images.len(),
+                seeds.len()
+            )));
+        }
+        let p = self.cfg.n_inputs;
+        let mut img_flat = vec![0i32; b * p];
+        for (row, img) in images.iter().enumerate() {
+            for (k, &px) in img.pixels.iter().enumerate() {
+                img_flat[row * p + k] = i32::from(px);
+            }
+        }
+        let mut seed_flat = vec![1u32; b];
+        seed_flat[..seeds.len()].copy_from_slice(seeds);
+
+        // The init executable is array-root (untupled): its single result
+        // buffer IS the packed carry and stays device-resident.
+        let mut init_out = self
+            .chunk_init
+            .execute::<xla::Literal>(&[literal_u32(&[b], &seed_flat)?])?;
+        let mut replica = init_out.swap_remove(0);
+        if replica.len() != 1 {
+            return Err(Error::Xla(format!(
+                "init executable returned {} buffers, expected 1 packed carry",
+                replica.len()
+            )));
+        }
+        let carry = replica.swap_remove(0);
+        // NOTE: upload via buffer_from_host_buffer, whose
+        // kImmutableOnlyDuringCall semantics copy the data synchronously.
+        // buffer_from_host_literal schedules an ASYNC copy that the shim
+        // never awaits — dropping the source literal then races the
+        // transfer (observed as a `literal.size_bytes() == b->size()`
+        // CHECK crash under repeated chunk_start load).
+        Ok(SnnChunkState {
+            images: self.client.buffer_from_host_buffer(&img_flat, &[b, p], None)?,
+            carry,
+            steps_run: 0,
+            occupancy: images.len(),
+        })
+    }
+
+    /// Advance one chunk (`chunk_steps` timesteps); returns the per-image
+    /// spike counts after the chunk. The packed carry never leaves the
+    /// device; one host copy extracts the counts slice for the margin
+    /// check (perf pass 6).
+    pub fn chunk_advance(&self, st: &mut SnnChunkState) -> Result<Vec<Vec<u32>>> {
+        let args = [&st.images, &st.carry, &self.weights_buf];
+        let mut out = self.chunk.execute_b::<&xla::PjRtBuffer>(&args)?;
+        let mut replica = out.swap_remove(0);
+        if replica.len() != 1 {
+            return Err(Error::Xla(format!(
+                "chunk executable returned {} buffers, expected 1 packed carry",
+                replica.len()
+            )));
+        }
+        st.carry = replica.swap_remove(0);
+        st.steps_run += self.chunk_steps;
+
+        // Packed layout: [states(P) | acc(N) | counts(N) | enabled(N)].
+        let p = self.cfg.n_inputs;
+        let n = self.cfg.n_outputs;
+        let stride = p + 3 * n;
+        let flat = st.carry.to_literal_sync()?.to_vec::<i32>()?;
+        Ok((0..st.occupancy)
+            .map(|row| {
+                let base = row * stride + p + n;
+                flat[base..base + n].iter().map(|&c| c as u32).collect()
+            })
+            .collect())
+    }
+
+    /// Baseline ANN logits for a batch (paper §V comparator).
+    pub fn ann_logits(&self, images: &[&Image]) -> Result<Vec<Vec<f32>>> {
+        let params = self
+            .ann_params
+            .as_ref()
+            .ok_or_else(|| Error::InvalidConfig("ann_weights.bin not built".into()))?;
+        let max_b = *self.ann.keys().last().expect("ann exe");
+        let p = self.cfg.n_inputs;
+        let n = self.cfg.n_outputs;
+        let mut out = Vec::with_capacity(images.len());
+        let mut i = 0;
+        while i < images.len() {
+            let remaining = images.len() - i;
+            let b = self.ann.keys().copied().find(|&b| b >= remaining).unwrap_or(max_b);
+            let take = remaining.min(b);
+            let mut flat = vec![0f32; b * p];
+            for (row, img) in images[i..i + take].iter().enumerate() {
+                for (k, &px) in img.pixels.iter().enumerate() {
+                    flat[row * p + k] = f32::from(px) / 256.0;
+                }
+            }
+            let args = [
+                literal_f32(&[b, p], &flat)?,
+                params[0].clone(),
+                params[1].clone(),
+                params[2].clone(),
+                params[3].clone(),
+            ];
+            let result = self.ann[&b].execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let logits = result.to_tuple1()?.to_vec::<f32>()?;
+            for row in 0..take {
+                out.push(logits[row * n..(row + 1) * n].to_vec());
+            }
+            i += take;
+        }
+        Ok(out)
+    }
+
+    /// Reference seeding helper exposed for tests (matches the pixel_seed
+    /// contract the executables bake in).
+    pub fn debug_first_state(&self, seed: u32) -> u32 {
+        xorshift32_step(pixel_seed(seed, 0))
+    }
+}
+
+/// Load the SNNA baseline-ANN weights as literals.
+fn codec_load_ann(path: &Path) -> Result<[xla::Literal; 4]> {
+    let buf = std::fs::read(path).map_err(|e| Error::io(path, e))?;
+    if buf.len() < 20 || &buf[..4] != b"SNNA" {
+        return Err(Error::malformed(path, "bad magic (want SNNA)"));
+    }
+    let rd_u32 =
+        |at: usize| u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()) as usize;
+    let version = rd_u32(4);
+    if version != 1 {
+        return Err(Error::malformed(path, format!("unsupported version {version}")));
+    }
+    let (n_in, n_h, n_out) = (rd_u32(8), rd_u32(12), rd_u32(16));
+    let need = 20 + 4 * (n_in * n_h + n_h + n_h * n_out + n_out);
+    if buf.len() != need {
+        return Err(Error::malformed(path, format!("size {} != expected {need}", buf.len())));
+    }
+    let mut pos = 20usize;
+    let mut take = |dims: &[usize]| -> Result<xla::Literal> {
+        let count: usize = dims.iter().product();
+        let lit = literal(xla::ElementType::F32, dims, &buf[pos..pos + count * 4])?;
+        pos += count * 4;
+        Ok(lit)
+    };
+    Ok([
+        take(&[n_in, n_h])?,
+        take(&[n_h])?,
+        take(&[n_h, n_out])?,
+        take(&[n_out])?,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests that don't need built artifacts live here; the live
+    //! PJRT round-trip tests are in `rust/tests/xla_runtime.rs` (they
+    //! require `make artifacts` to have run).
+    use super::*;
+
+    #[test]
+    fn literal_helpers_roundtrip() {
+        let l = literal_i32(&[2, 3], &[1, -2, 3, -4, 5, -6]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, -2, 3, -4, 5, -6]);
+        let l = literal_u32(&[4], &[1, 2, 3, 0xFFFF_FFFF]).unwrap();
+        assert_eq!(l.to_vec::<u32>().unwrap(), vec![1, 2, 3, 0xFFFF_FFFF]);
+        let l = literal_f32(&[2], &[1.5, -2.5]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.5, -2.5]);
+    }
+
+    #[test]
+    fn literal_rejects_wrong_byte_count() {
+        assert!(literal(xla::ElementType::S32, &[4], &[0u8; 7]).is_err());
+    }
+}

@@ -1,0 +1,45 @@
+//! Behavioral (timestep-level) golden model of the paper's SNN core.
+//!
+//! This is the *architectural contract*: the cycle-accurate RTL simulator
+//! ([`crate::rtl`]) refines it to clock granularity and is checked against
+//! it by equivalence tests; the JAX/Pallas path
+//! (`python/compile/model.py`) implements the same dynamics and is checked
+//! via golden traces and live PJRT execution. It is also the fastest pure-
+//! Rust inference backend, used for large accuracy sweeps.
+
+mod encoder;
+mod lif;
+mod network;
+
+pub use encoder::{encode_image, encode_step, PoissonEncoder};
+pub use lif::{LifLayer, StepTrace};
+pub use network::{classify, classify_with_trace, BehavioralNet, Classification, EarlyExit};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SnnConfig;
+    use crate::data::DigitGen;
+    use crate::fixed::WeightMatrix;
+
+    /// End-to-end smoke: random-ish weights still produce a decision and
+    /// spike counts bounded by the timestep budget.
+    #[test]
+    fn classify_produces_bounded_counts() {
+        let cfg = SnnConfig::paper().with_timesteps(8).validated().unwrap();
+        let w = WeightMatrix::from_rows(
+            784,
+            10,
+            9,
+            (0..7840).map(|i| ((i * 37) % 11) as i32 - 5).collect(),
+        )
+        .unwrap();
+        let net = BehavioralNet::new(cfg.clone(), w).unwrap();
+        let img = DigitGen::new(1).sample(3, 0);
+        let out = net.classify(&img, 99);
+        assert!(out.class <= 9);
+        assert_eq!(out.spike_counts.len(), 10);
+        assert!(out.spike_counts.iter().all(|&c| c <= cfg.timesteps));
+        assert!(out.steps_run <= cfg.timesteps);
+    }
+}

@@ -1,0 +1,306 @@
+//! Full behavioral inference: encoder + LIF layer + readout policies.
+
+use crate::config::{DecisionPolicy, SnnConfig};
+use crate::data::Image;
+use crate::error::Result;
+use crate::fixed::WeightMatrix;
+use crate::snn::{LifLayer, PoissonEncoder, StepTrace};
+
+/// Early-termination policy applied between timesteps (the serving-level
+/// generalization of the paper's active-pruning idea: stop paying for
+/// timesteps once the decision is confident).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EarlyExit {
+    /// Run the full window.
+    Off,
+    /// Stop once the leading class's spike count exceeds the runner-up by
+    /// `margin` *and* at least `min_steps` have run.
+    ///
+    /// Note the interaction with neuron-level pruning: with the paper's
+    /// `PruneMode::AfterFires { after_spikes: 1 }` every spike count is
+    /// capped at 1, so the reachable margin is 1. Use `margin: 1` with
+    /// pruning on, or disable pruning for larger margins.
+    Margin { margin: u32, min_steps: u32 },
+}
+
+/// Inference result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Classification {
+    /// Predicted class.
+    pub class: u8,
+    /// Output spike counts per class over the executed window.
+    pub spike_counts: Vec<u32>,
+    /// Timestep at which each neuron first fired (`None` = never).
+    pub first_spike: Vec<Option<u32>>,
+    /// Timesteps actually executed (< window when early exit triggers).
+    pub steps_run: u32,
+    /// Integrate-adds actually performed (sparsity accounting).
+    pub adds_performed: u64,
+}
+
+impl Classification {
+    /// Decide a class from spike evidence under `policy`. Ties break toward
+    /// the lowest class index — the behaviour of a hardware priority
+    /// encoder scanning `spike_reg[0..9]`.
+    fn decide(
+        policy: DecisionPolicy,
+        spike_counts: &[u32],
+        first_spike: &[Option<u32>],
+    ) -> u8 {
+        match policy {
+            DecisionPolicy::SpikeCount => argmax(spike_counts) as u8,
+            DecisionPolicy::FirstSpike => {
+                let mut best: Option<(u32, usize)> = None;
+                for (j, fs) in first_spike.iter().enumerate() {
+                    if let Some(t) = fs {
+                        if best.map_or(true, |(bt, _)| *t < bt) {
+                            best = Some((*t, j));
+                        }
+                    }
+                }
+                match best {
+                    Some((_, j)) => j as u8,
+                    None => argmax(spike_counts) as u8,
+                }
+            }
+        }
+    }
+}
+
+fn argmax(xs: &[u32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// The behavioral inference backend: weights + config, reusable across
+/// images (stateless between calls; the per-call layer state is pooled).
+#[derive(Debug, Clone)]
+pub struct BehavioralNet {
+    cfg: SnnConfig,
+    layer: LifLayer,
+}
+
+impl BehavioralNet {
+    pub fn new(cfg: SnnConfig, weights: WeightMatrix) -> Result<Self> {
+        let cfg = cfg.validated()?;
+        let layer = LifLayer::new(cfg.clone(), &weights)?;
+        Ok(BehavioralNet { cfg, layer })
+    }
+
+    pub fn config(&self) -> &SnnConfig {
+        &self.cfg
+    }
+
+    /// Classify one image with the configured full window.
+    pub fn classify(&self, img: &Image, seed: u32) -> Classification {
+        self.classify_opts(img, seed, self.cfg.timesteps, EarlyExit::Off)
+    }
+
+    /// Classify with an explicit window and early-exit policy.
+    pub fn classify_opts(
+        &self,
+        img: &Image,
+        seed: u32,
+        timesteps: u32,
+        early: EarlyExit,
+    ) -> Classification {
+        let (c, _) = run_inference(&self.cfg, self.layer.clone(), img, seed, timesteps, early, false);
+        c
+    }
+
+    /// Classify and capture the full per-step trace (Fig. 4 / goldens).
+    pub fn classify_traced(
+        &self,
+        img: &Image,
+        seed: u32,
+        timesteps: u32,
+    ) -> (Classification, Vec<StepTrace>) {
+        run_inference(&self.cfg, self.layer.clone(), img, seed, timesteps, EarlyExit::Off, true)
+    }
+}
+
+/// Shared inference loop.
+fn run_inference(
+    cfg: &SnnConfig,
+    mut layer: LifLayer,
+    img: &Image,
+    seed: u32,
+    timesteps: u32,
+    early: EarlyExit,
+    want_trace: bool,
+) -> (Classification, Vec<StepTrace>) {
+    layer.reset();
+    let mut enc = PoissonEncoder::new(img, seed);
+    let mut spikes_in = vec![false; cfg.n_inputs];
+    let mut active = Vec::with_capacity(cfg.n_inputs);
+    let mut fired = vec![false; cfg.n_outputs];
+    let mut first_spike: Vec<Option<u32>> = vec![None; cfg.n_outputs];
+    let mut traces = Vec::new();
+    let mut steps_run = 0u32;
+
+    for t in 0..timesteps {
+        if want_trace {
+            enc.step_into(&mut spikes_in);
+            let trace = layer.step_traced(&spikes_in);
+            fired.copy_from_slice(&trace.fired);
+            traces.push(trace);
+        } else {
+            // Fused event-list hot path (perf passes 3+4): the encoder
+            // emits spiking indices directly into the integration step.
+            enc.step_active_into(&mut active);
+            layer.step_events_into(&active, &mut fired);
+        }
+        for (j, &f) in fired.iter().enumerate() {
+            if f && first_spike[j].is_none() {
+                first_spike[j] = Some(t);
+            }
+        }
+        steps_run = t + 1;
+
+        if let EarlyExit::Margin { margin, min_steps } = early {
+            if steps_run >= min_steps {
+                let counts = layer.spike_counts();
+                let mut sorted: Vec<u32> = counts.to_vec();
+                sorted.sort_unstable_by(|a, b| b.cmp(a));
+                if sorted[0] >= sorted[1] + margin {
+                    break;
+                }
+            }
+        }
+    }
+
+    let spike_counts = layer.spike_counts().to_vec();
+    let class = Classification::decide(cfg.decision, &spike_counts, &first_spike);
+    (
+        Classification {
+            class,
+            spike_counts,
+            first_spike,
+            steps_run,
+            adds_performed: layer.adds_performed(),
+        },
+        traces,
+    )
+}
+
+/// Convenience free function: classify with a fresh net (tests, examples).
+pub fn classify(cfg: &SnnConfig, weights: &WeightMatrix, img: &Image, seed: u32) -> Result<Classification> {
+    Ok(BehavioralNet::new(cfg.clone(), weights.clone())?.classify(img, seed))
+}
+
+/// Convenience free function with trace capture.
+pub fn classify_with_trace(
+    cfg: &SnnConfig,
+    weights: &WeightMatrix,
+    img: &Image,
+    seed: u32,
+) -> Result<(Classification, Vec<StepTrace>)> {
+    Ok(BehavioralNet::new(cfg.clone(), weights.clone())?.classify_traced(img, seed, cfg.timesteps))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DecisionPolicy, PruneMode};
+    use crate::data::{Image, IMG_PIXELS};
+
+    /// Weights that make neuron k respond to intensity in "its" block of
+    /// pixels: a crisp, controllable classifier for testing readout.
+    fn block_weights() -> WeightMatrix {
+        let mut w = vec![0i32; 784 * 10];
+        for i in 0..784 {
+            let block = i / 79; // ~79 pixels per class block
+            if block < 10 {
+                w[i * 10 + block] = 40;
+            }
+        }
+        WeightMatrix::from_rows(784, 10, 9, w).unwrap()
+    }
+
+    fn block_image(class: usize) -> Image {
+        let mut px = vec![0u8; IMG_PIXELS];
+        for i in 0..784 {
+            if i / 79 == class {
+                px[i] = 250;
+            }
+        }
+        Image { label: class as u8, pixels: px }
+    }
+
+    #[test]
+    fn block_classifier_is_correct() {
+        let cfg = SnnConfig::paper().with_timesteps(10);
+        let net = BehavioralNet::new(cfg, block_weights()).unwrap();
+        for class in 0..10usize {
+            let out = net.classify(&block_image(class), 42 + class as u32);
+            assert_eq!(out.class as usize, class, "counts {:?}", out.spike_counts);
+        }
+    }
+
+    #[test]
+    fn early_exit_stops_sooner_and_agrees() {
+        // Pruning caps every spike count at 1, which caps the reachable
+        // margin at 1 — disable it so the margin policy can trigger.
+        let cfg = SnnConfig::paper().with_timesteps(20).with_prune(PruneMode::Off);
+        let net = BehavioralNet::new(cfg, block_weights()).unwrap();
+        let img = block_image(4);
+        let full = net.classify_opts(&img, 7, 20, EarlyExit::Off);
+        let early = net.classify_opts(&img, 7, 20, EarlyExit::Margin { margin: 3, min_steps: 2 });
+        assert_eq!(full.class, early.class);
+        assert!(early.steps_run < full.steps_run, "early exit never triggered");
+        assert!(early.adds_performed < full.adds_performed);
+    }
+
+    #[test]
+    fn first_spike_policy_falls_back_to_counts() {
+        // Zero weights → nobody ever fires → FirstSpike must fall back.
+        let cfg = SnnConfig::paper().with_decision(DecisionPolicy::FirstSpike).with_timesteps(3);
+        let w = WeightMatrix::zeros(784, 10, 9);
+        let net = BehavioralNet::new(cfg, w).unwrap();
+        let out = net.classify(&block_image(2), 1);
+        assert_eq!(out.class, 0, "all-zero counts must tie-break to class 0");
+        assert!(out.first_spike.iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn first_spike_policy_picks_earliest() {
+        let cfg = SnnConfig::paper()
+            .with_decision(DecisionPolicy::FirstSpike)
+            .with_timesteps(20)
+            .with_prune(PruneMode::Off);
+        let net = BehavioralNet::new(cfg, block_weights()).unwrap();
+        let img = block_image(6);
+        let out = net.classify(&img, 9);
+        assert_eq!(out.class, 6);
+        let t6 = out.first_spike[6].expect("neuron 6 must fire");
+        for (j, fs) in out.first_spike.iter().enumerate() {
+            if let Some(t) = fs {
+                assert!(*t >= t6, "neuron {j} fired before the target class");
+            }
+        }
+    }
+
+    #[test]
+    fn trace_length_matches_window() {
+        let cfg = SnnConfig::paper();
+        let net = BehavioralNet::new(cfg, block_weights()).unwrap();
+        let (out, traces) = net.classify_traced(&block_image(1), 3, 12);
+        assert_eq!(traces.len(), 12);
+        assert_eq!(out.steps_run, 12);
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let cfg = SnnConfig::paper().with_timesteps(6);
+        let net = BehavioralNet::new(cfg, block_weights()).unwrap();
+        let img = block_image(8);
+        let a = net.classify(&img, 5);
+        let b = net.classify(&img, 5);
+        assert_eq!(a, b);
+    }
+}

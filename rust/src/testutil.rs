@@ -1,0 +1,154 @@
+//! Minimal in-repo property-testing support.
+//!
+//! `proptest` is not part of the offline crate set this repository builds
+//! against, so this module provides the slice of it the test-suite needs:
+//! seeded random case generation with a failure report that prints the
+//! case index and the generator seed needed to replay a failure
+//! deterministically.
+//!
+//! Usage (`no_run`: doctest binaries miss the xla rpath in this image):
+//!
+//! ```no_run
+//! use snn_rtl::testutil::PropRunner;
+//! PropRunner::new("my_invariant", 500).run(|g| {
+//!     let x = g.rng.range_i32(-10, 10);
+//!     assert!(x >= -10 && x <= 10);
+//! });
+//! ```
+
+use crate::prng::Xorshift32;
+
+/// Per-case generation context handed to the property closure.
+pub struct Gen {
+    /// Seeded PRNG for drawing case data.
+    pub rng: Xorshift32,
+    /// Index of the case within the run (0-based).
+    pub case: u32,
+}
+
+impl Gen {
+    /// Draw a vector of `len` bytes.
+    pub fn bytes(&mut self, len: usize) -> Vec<u8> {
+        (0..len).map(|_| (self.rng.next_u32() & 0xFF) as u8).collect()
+    }
+
+    /// Draw a vector of `len` i32 values in `[lo, hi]`.
+    pub fn vec_i32(&mut self, len: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..len).map(|_| self.rng.range_i32(lo, hi)).collect()
+    }
+
+    /// Draw one of the provided choices by reference.
+    pub fn choice<'a, T>(&mut self, options: &'a [T]) -> &'a T {
+        assert!(!options.is_empty());
+        &options[self.rng.below(options.len() as u32) as usize]
+    }
+}
+
+/// A seeded property-test runner.
+pub struct PropRunner {
+    name: &'static str,
+    cases: u32,
+    seed: u32,
+}
+
+impl PropRunner {
+    /// Create a runner executing `cases` random cases. The seed is derived
+    /// from the property name so independent properties draw independent
+    /// case streams, while every CI run is reproducible. Override with
+    /// `SNN_PROP_SEED` to replay a failure.
+    pub fn new(name: &'static str, cases: u32) -> Self {
+        let seed = match std::env::var("SNN_PROP_SEED") {
+            Ok(s) => s.parse().expect("SNN_PROP_SEED must be a u32"),
+            Err(_) => name.bytes().fold(0x811C_9DC5u32, |h, b| {
+                (h ^ u32::from(b)).wrapping_mul(0x0100_0193) // FNV-1a
+            }),
+        };
+        PropRunner { name, cases, seed }
+    }
+
+    /// Run the property across all cases. Panics (with replay info) on the
+    /// first failing case.
+    pub fn run<F: FnMut(&mut Gen)>(self, mut property: F) {
+        let cases = match std::env::var("SNN_PROP_CASES") {
+            Ok(s) => s.parse().expect("SNN_PROP_CASES must be a u32"),
+            Err(_) => self.cases,
+        };
+        for case in 0..cases {
+            let case_seed = self.seed.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+            let mut g = Gen { rng: Xorshift32::new(case_seed), case };
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                property(&mut g);
+            }));
+            if let Err(payload) = outcome {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .map(String::as_str)
+                    .or_else(|| payload.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                panic!(
+                    "property '{}' failed at case {case}/{cases} \
+                     (replay with SNN_PROP_SEED={} SNN_PROP_CASES={}): {msg}",
+                    self.name,
+                    self.seed,
+                    case + 1,
+                );
+            }
+        }
+    }
+}
+
+/// Assert two slices are equal, reporting the first differing index —
+/// far more readable than `assert_eq!` on large golden traces.
+pub fn assert_slices_eq<T: PartialEq + std::fmt::Debug>(a: &[T], b: &[T], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x, y, "{what}: first mismatch at index {i}: {x:?} vs {y:?}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_is_deterministic() {
+        let mut first: Vec<i32> = Vec::new();
+        PropRunner::new("determinism_probe", 10).run(|g| {
+            first.push(g.rng.range_i32(0, 1000));
+        });
+        let mut second: Vec<i32> = Vec::new();
+        PropRunner::new("determinism_probe", 10).run(|g| {
+            second.push(g.rng.range_i32(0, 1000));
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn different_properties_draw_different_streams() {
+        let mut a = Vec::new();
+        PropRunner::new("stream_a", 5).run(|g| a.push(g.rng.next_u32()));
+        let mut b = Vec::new();
+        PropRunner::new("stream_b", 5).run(|g| b.push(g.rng.next_u32()));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with SNN_PROP_SEED=")]
+    fn failure_reports_replay_seed() {
+        PropRunner::new("always_fails", 3).run(|g| {
+            assert!(g.case < 1, "boom");
+        });
+    }
+
+    #[test]
+    fn gen_helpers_in_range() {
+        PropRunner::new("gen_helpers", 50).run(|g| {
+            let bs = g.bytes(16);
+            assert_eq!(bs.len(), 16);
+            let vs = g.vec_i32(8, -5, 5);
+            assert!(vs.iter().all(|v| (-5..=5).contains(v)));
+            let c = *g.choice(&[1, 2, 3]);
+            assert!([1, 2, 3].contains(&c));
+        });
+    }
+}

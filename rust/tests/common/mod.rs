@@ -1,0 +1,39 @@
+//! Shared helpers for the integration suites.
+
+use std::path::PathBuf;
+
+/// The canonical artifacts directory, or `None` when `make artifacts` has
+/// not run (tests then skip — the Makefile orders artifacts before tests,
+/// so CI always exercises the full suites).
+pub fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipped: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// Little-endian binary reader over a byte buffer.
+pub struct Cursor<'a> {
+    pub buf: &'a [u8],
+    pub pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+    pub fn bytes(&mut self, n: usize) -> &'a [u8] {
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        s
+    }
+    pub fn u32(&mut self) -> u32 {
+        u32::from_le_bytes(self.bytes(4).try_into().unwrap())
+    }
+    pub fn i32(&mut self) -> i32 {
+        i32::from_le_bytes(self.bytes(4).try_into().unwrap())
+    }
+}

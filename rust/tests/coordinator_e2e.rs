@@ -1,0 +1,203 @@
+//! End-to-end coordinator tests over the real compiled artifacts: the
+//! full request path (submit → batch → PJRT execute → respond), early-exit
+//! scheduling, and failure injection.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::artifacts_dir;
+use snn_rtl::coordinator::{
+    Backend, BackendOutput, BatchPolicy, BehavioralBackend, Coordinator, CoordinatorConfig,
+    Request, XlaBackend,
+};
+use snn_rtl::data::{codec, DigitGen, Image};
+use snn_rtl::error::Error;
+use snn_rtl::runtime::XlaSnn;
+use snn_rtl::snn::EarlyExit;
+use snn_rtl::SnnConfig;
+
+#[test]
+fn xla_backed_coordinator_serves_accurately() {
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = Arc::new(XlaBackend::new(XlaSnn::load(&dir).unwrap()));
+    let coord = Coordinator::start(
+        backend,
+        CoordinatorConfig {
+            workers: 2,
+            queue_depth: 512,
+            batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(2) },
+            early: EarlyExit::Off,
+        },
+    );
+    let handle = coord.handle();
+    let gen = DigitGen::new(2);
+    let n = 80usize;
+    let receivers: Vec<_> = (0..n)
+        .map(|i| {
+            let class = (i % 10) as u8;
+            let img = gen.sample(class, (i / 10) as u32);
+            (class, handle.submit(Request { image: img, seed: Some(500 + i as u32) }).unwrap())
+        })
+        .collect();
+    let mut hits = 0usize;
+    for (class, rx) in receivers {
+        let resp = rx.recv().unwrap().unwrap();
+        if resp.class == class {
+            hits += 1;
+        }
+    }
+    let acc = hits as f64 / n as f64;
+    assert!(acc > 0.9, "serving accuracy {acc}");
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.completed as usize, n);
+    assert_eq!(snap.failed, 0);
+    assert!(snap.mean_batch_size > 1.0, "batcher never batched");
+    coord.shutdown();
+}
+
+#[test]
+fn early_exit_saves_timesteps_on_xla() {
+    let Some(dir) = artifacts_dir() else { return };
+    let snn = XlaSnn::load(&dir).unwrap();
+    let window = snn.config().timesteps;
+    let chunk = snn.chunk_steps();
+    let backend = Arc::new(XlaBackend::new(snn));
+    let coord = Coordinator::start(
+        backend,
+        CoordinatorConfig {
+            workers: 1,
+            queue_depth: 64,
+            batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1) },
+            early: EarlyExit::Margin { margin: 2, min_steps: chunk },
+        },
+    );
+    let handle = coord.handle();
+    let gen = DigitGen::new(2);
+    let mut total_steps = 0u64;
+    let n = 24usize;
+    let mut hits = 0usize;
+    for i in 0..n {
+        let class = (i % 10) as u8;
+        let resp = handle.classify(gen.sample(class, 50 + (i / 10) as u32)).unwrap();
+        total_steps += u64::from(resp.steps_run);
+        if resp.class == class {
+            hits += 1;
+        }
+    }
+    let mean_steps = total_steps as f64 / n as f64;
+    assert!(
+        mean_steps < f64::from(window),
+        "early exit never saved a chunk: mean {mean_steps} vs window {window}"
+    );
+    assert!(hits as f64 / n as f64 > 0.85, "early-exit accuracy dropped: {hits}/{n}");
+    coord.shutdown();
+}
+
+#[test]
+fn xla_and_behavioral_coordinators_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let w = codec::load_weights(dir.join("weights.bin")).unwrap();
+    let cfg = w.config();
+    let xla = Arc::new(XlaBackend::new(XlaSnn::load(&dir).unwrap()));
+    let beh = Arc::new(BehavioralBackend::new(cfg, w.weights).unwrap());
+
+    let mk = |backend: Arc<dyn Backend>| {
+        Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 64,
+                batch: BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(1) },
+                early: EarlyExit::Off,
+            },
+        )
+    };
+    let cx = mk(xla);
+    let cb = mk(beh);
+    let gen = DigitGen::new(2);
+    for i in 0..20u32 {
+        let img = gen.sample((i % 10) as u8, i / 10);
+        let rx = cx
+            .handle()
+            .submit(Request { image: img.clone(), seed: Some(900 + i) })
+            .unwrap();
+        let rb = cb.handle().submit(Request { image: img, seed: Some(900 + i) }).unwrap();
+        let a = rx.recv().unwrap().unwrap();
+        let b = rb.recv().unwrap().unwrap();
+        assert_eq!(a.class, b.class, "request {i}");
+        assert_eq!(a.spike_counts, b.spike_counts, "request {i}");
+    }
+    cx.shutdown();
+    cb.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection
+// ---------------------------------------------------------------------------
+
+/// A backend that fails every batch containing a poisoned seed.
+struct FaultyBackend {
+    cfg: SnnConfig,
+}
+
+impl Backend for FaultyBackend {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+    fn classify_batch(
+        &self,
+        images: &[&Image],
+        seeds: &[u32],
+        _early: EarlyExit,
+    ) -> snn_rtl::Result<Vec<BackendOutput>> {
+        if seeds.contains(&0xBAD) {
+            return Err(Error::Xla("injected backend fault".into()));
+        }
+        Ok(images
+            .iter()
+            .map(|_| BackendOutput { class: 0, spike_counts: vec![0; 10], steps_run: 1 })
+            .collect())
+    }
+    fn config(&self) -> &SnnConfig {
+        &self.cfg
+    }
+}
+
+#[test]
+fn backend_fault_fails_batch_not_server() {
+    let backend = Arc::new(FaultyBackend { cfg: SnnConfig::paper() });
+    let coord = Coordinator::start(
+        backend,
+        CoordinatorConfig {
+            workers: 1,
+            queue_depth: 16,
+            // Batch of 1 so the poisoned request fails alone.
+            batch: BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(10) },
+            early: EarlyExit::Off,
+        },
+    );
+    let handle = coord.handle();
+    let img = Image { label: 0, pixels: vec![0; 784] };
+
+    // Poisoned request errors...
+    let bad = handle
+        .submit(Request { image: img.clone(), seed: Some(0xBAD) })
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert!(bad.is_err(), "poisoned request must surface the backend error");
+
+    // ...and the server keeps serving afterwards.
+    let good = handle
+        .submit(Request { image: img, seed: Some(1) })
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert!(good.is_ok(), "server must survive a failed batch");
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.failed, 1);
+    assert_eq!(snap.completed, 1);
+    coord.shutdown();
+}

@@ -1,0 +1,63 @@
+//! Cross-language dataset contract: the SNND files written by the Python
+//! build path must be *byte-identical* to what the Rust generator produces
+//! for the same seeds — the strongest possible check of the integer
+//! renderer mirror.
+
+mod common;
+
+use common::artifacts_dir;
+use snn_rtl::data::{codec, DigitGen};
+use snn_rtl::runtime::Manifest;
+
+#[test]
+fn test_set_prefix_regenerates_byte_identically() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let seed = manifest.u32("test_seed").unwrap();
+    let ds = codec::load_dataset(dir.join("digits_test.bin")).unwrap();
+    let gen = DigitGen::new(seed);
+    // Full-prefix check over the first 200 samples (interleaved layout:
+    // position i*10+c holds class c sample i).
+    for pos in 0..200.min(ds.len()) {
+        let class = (pos % 10) as u8;
+        let index = (pos / 10) as u32;
+        let expected = gen.sample(class, index);
+        assert_eq!(ds.images[pos].label, class, "label at {pos}");
+        assert_eq!(
+            ds.images[pos].pixels, expected.pixels,
+            "pixel divergence at position {pos} (class {class}, index {index})"
+        );
+    }
+}
+
+#[test]
+fn train_set_spot_checks() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let seed = manifest.u32("train_seed").unwrap();
+    let ds = codec::load_dataset(dir.join("digits_train.bin")).unwrap();
+    let gen = DigitGen::new(seed);
+    for pos in [0usize, 77, 1234, ds.len() - 1] {
+        let class = (pos % 10) as u8;
+        let index = (pos / 10) as u32;
+        assert_eq!(
+            ds.images[pos].pixels,
+            gen.sample(class, index).pixels,
+            "train set diverges at {pos}"
+        );
+    }
+}
+
+#[test]
+fn dataset_statistics_sane() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ds = codec::load_dataset(dir.join("digits_test.bin")).unwrap();
+    let hist = ds.class_histogram();
+    let per_class = hist[0];
+    assert!(hist.iter().all(|&c| c == per_class), "unbalanced: {hist:?}");
+    // Ink statistics: every image has a plausible stroke mass.
+    for (i, img) in ds.images.iter().enumerate().step_by(97) {
+        let ink = img.pixels.iter().filter(|&&p| p > 0).count();
+        assert!((40..600).contains(&ink), "image {i} has {ink} inked pixels");
+    }
+}

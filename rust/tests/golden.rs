@@ -1,0 +1,153 @@
+//! Cross-language golden replay: the Python build path (jnp reference,
+//! kernels) wrote encoder spike trains and LIF traces into the artifacts;
+//! these tests replay the same seeds through the Rust behavioral model and
+//! the cycle-accurate RTL core and demand bit-exact agreement. This is the
+//! strongest evidence that L1 (Pallas), L2 (JAX) and L3 (Rust) implement
+//! one architecture.
+
+mod common;
+
+use common::{artifacts_dir, Cursor};
+use snn_rtl::config::PruneMode;
+use snn_rtl::data::{codec, Image, IMG_PIXELS};
+use snn_rtl::rtl::RtlCore;
+use snn_rtl::snn::{BehavioralNet, PoissonEncoder};
+use snn_rtl::SnnConfig;
+
+/// Parsed SNNE file.
+struct GoldenEncoder {
+    seed: u32,
+    timesteps: usize,
+    image: Image,
+    /// spikes[t][pixel]
+    spikes: Vec<Vec<bool>>,
+}
+
+fn load_golden_encoder(dir: &std::path::Path) -> GoldenEncoder {
+    let buf = std::fs::read(dir.join("golden_encoder.bin")).expect("golden_encoder.bin");
+    let mut c = Cursor::new(&buf);
+    assert_eq!(c.bytes(4), b"SNNE");
+    assert_eq!(c.u32(), 1, "version");
+    let seed = c.u32();
+    let n_pixels = c.u32() as usize;
+    let timesteps = c.u32() as usize;
+    assert_eq!(n_pixels, IMG_PIXELS);
+    let image =
+        Image { label: 3, pixels: c.bytes(n_pixels).to_vec() };
+    let stride = (n_pixels + 7) / 8;
+    let mut spikes = Vec::with_capacity(timesteps);
+    for _ in 0..timesteps {
+        let packed = c.bytes(stride);
+        spikes.push((0..n_pixels).map(|i| packed[i / 8] >> (i % 8) & 1 == 1).collect());
+    }
+    assert_eq!(c.pos, buf.len(), "trailing bytes");
+    GoldenEncoder { seed, timesteps, image, spikes }
+}
+
+#[test]
+fn encoder_matches_python_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = load_golden_encoder(&dir);
+    let mut enc = PoissonEncoder::new(&g.image, g.seed);
+    for (t, expect) in g.spikes.iter().enumerate() {
+        let got = enc.step();
+        assert_eq!(
+            &got, expect,
+            "encoder spike divergence at timestep {t} (seed {:#x})",
+            g.seed
+        );
+    }
+    assert_eq!(g.timesteps, g.spikes.len());
+}
+
+/// Parsed SNNT file.
+struct GoldenTrace {
+    cfg: SnnConfig,
+    seed: u32,
+    image: Image,
+    membranes: Vec<Vec<i32>>,
+    fired: Vec<Vec<bool>>,
+    currents: Vec<Vec<i32>>,
+    counts: Vec<u32>,
+}
+
+fn load_golden_trace(dir: &std::path::Path) -> GoldenTrace {
+    let buf = std::fs::read(dir.join("golden_trace.bin")).expect("golden_trace.bin");
+    let mut c = Cursor::new(&buf);
+    assert_eq!(c.bytes(4), b"SNNT");
+    assert_eq!(c.u32(), 1, "version");
+    let v_th = c.i32();
+    let decay_shift = c.u32();
+    let acc_bits = c.u32();
+    let prune_after = c.u32();
+    let timesteps = c.u32() as usize;
+    let n = c.u32() as usize;
+    let seed = c.u32();
+    let image = Image { label: 3, pixels: c.bytes(IMG_PIXELS).to_vec() };
+    let mut membranes = Vec::new();
+    let mut fired = Vec::new();
+    let mut currents = Vec::new();
+    for _ in 0..timesteps {
+        membranes.push((0..n).map(|_| c.i32()).collect());
+        fired.push(c.bytes(n).iter().map(|&b| b == 1).collect());
+        currents.push((0..n).map(|_| c.i32()).collect());
+    }
+    let counts = (0..n).map(|_| c.i32() as u32).collect();
+    assert_eq!(c.pos, buf.len(), "trailing bytes");
+    let cfg = SnnConfig {
+        v_th,
+        decay_shift,
+        acc_bits,
+        timesteps: timesteps as u32,
+        prune: if prune_after == 0 {
+            PruneMode::Off
+        } else {
+            PruneMode::AfterFires { after_spikes: prune_after }
+        },
+        ..SnnConfig::paper()
+    };
+    GoldenTrace { cfg, seed, image, membranes, fired, currents, counts }
+}
+
+#[test]
+fn behavioral_model_matches_python_trace() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = load_golden_trace(&dir);
+    let w = codec::load_weights(dir.join("weights.bin")).unwrap();
+    let net = BehavioralNet::new(g.cfg.clone(), w.weights).unwrap();
+    let (out, traces) = net.classify_traced(&g.image, g.seed, g.cfg.timesteps);
+    for (t, trace) in traces.iter().enumerate() {
+        assert_eq!(trace.membrane, g.membranes[t], "membrane diverges at step {t}");
+        assert_eq!(trace.fired, g.fired[t], "fire pattern diverges at step {t}");
+        assert_eq!(trace.input_current, g.currents[t], "current diverges at step {t}");
+    }
+    assert_eq!(out.spike_counts, g.counts, "final spike counts diverge");
+}
+
+#[test]
+fn rtl_core_matches_python_trace() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = load_golden_trace(&dir);
+    let w = codec::load_weights(dir.join("weights.bin")).unwrap();
+    let mut core = RtlCore::new(g.cfg.clone(), w.weights).unwrap();
+    let r = core.run(&g.image, g.seed).unwrap();
+    assert_eq!(r.activity.saturations, 0);
+    for t in 0..g.membranes.len() {
+        assert_eq!(r.membrane_by_step[t], g.membranes[t], "membrane step {t}");
+        assert_eq!(r.spikes_by_step[t], g.fired[t], "fires step {t}");
+    }
+    assert_eq!(r.spike_counts, g.counts);
+}
+
+#[test]
+fn golden_image_is_the_canonical_test_sample() {
+    // The golden image must be test-set position 3 (class 3, index 0) —
+    // pins the dataset cross-language contract through a second route.
+    let Some(dir) = artifacts_dir() else { return };
+    let g = load_golden_encoder(&dir);
+    let ds = codec::load_dataset(dir.join("digits_test.bin")).unwrap();
+    assert_eq!(ds.images[3].label, 3);
+    assert_eq!(g.image.pixels, ds.images[3].pixels);
+    let rust_rendered = snn_rtl::data::render_digit(2, 3, 0).0;
+    assert_eq!(g.image.pixels, rust_rendered.pixels);
+}

@@ -1,0 +1,110 @@
+//! Live PJRT round-trip: the AOT-compiled JAX/Pallas executables must
+//! agree bit-for-bit with the Rust behavioral model — the runtime half of
+//! the three-layer equivalence story.
+
+mod common;
+
+use common::artifacts_dir;
+use snn_rtl::ann::Mlp;
+use snn_rtl::data::{codec, DigitGen, Image};
+use snn_rtl::runtime::XlaSnn;
+use snn_rtl::snn::BehavioralNet;
+
+fn load_stack() -> Option<(XlaSnn, BehavioralNet, Vec<Image>)> {
+    let dir = artifacts_dir()?;
+    let snn = XlaSnn::load(&dir).expect("XlaSnn::load");
+    let w = codec::load_weights(dir.join("weights.bin")).unwrap();
+    let net = BehavioralNet::new(snn.config().clone(), w.weights).unwrap();
+    let ds = codec::load_dataset(dir.join("digits_test.bin")).unwrap();
+    Some((snn, net, ds.images.into_iter().take(40).collect()))
+}
+
+#[test]
+fn full_window_forward_matches_behavioral() {
+    let Some((snn, net, images)) = load_stack() else { return };
+    let refs: Vec<&Image> = images.iter().collect();
+    let seeds: Vec<u32> = (0..refs.len() as u32).map(|i| 0xAB0 + i * 7).collect();
+    let xla_counts = snn.spike_counts(&refs, &seeds).expect("xla forward");
+    for ((img, &seed), counts) in refs.iter().zip(&seeds).zip(&xla_counts) {
+        let beh = net.classify(img, seed);
+        assert_eq!(
+            counts, &beh.spike_counts,
+            "XLA/behavioral divergence (seed {seed:#x}, label {})",
+            img.label
+        );
+    }
+}
+
+#[test]
+fn batch_splitting_consistent_across_sizes() {
+    // 1, 8, 32 executables must all produce the same counts for the same
+    // (image, seed) — padding and splitting must be invisible.
+    let Some((snn, _, images)) = load_stack() else { return };
+    let refs: Vec<&Image> = images.iter().take(3).collect();
+    let seeds = vec![11u32, 22, 33];
+    let one_by_one: Vec<Vec<u32>> = refs
+        .iter()
+        .zip(&seeds)
+        .map(|(img, &s)| snn.spike_counts(&[img], &[s]).unwrap().remove(0))
+        .collect();
+    let batched = snn.spike_counts(&refs, &seeds).unwrap();
+    assert_eq!(one_by_one, batched);
+}
+
+#[test]
+fn chunked_path_composes_to_full_window() {
+    let Some((snn, net, images)) = load_stack() else { return };
+    let refs: Vec<&Image> = images.iter().take(snn.chunk_batch()).collect();
+    let seeds: Vec<u32> = (0..refs.len() as u32).map(|i| 0xCAFE + i).collect();
+    let mut st = snn.chunk_start(&refs, &seeds).unwrap();
+    let window = snn.config().timesteps;
+    let mut counts = Vec::new();
+    while st.steps_run < window {
+        counts = snn.chunk_advance(&mut st).unwrap();
+    }
+    assert_eq!(st.steps_run, window);
+    for ((img, &seed), c) in refs.iter().zip(&seeds).zip(&counts) {
+        let beh = net.classify(img, seed);
+        assert_eq!(c, &beh.spike_counts, "chunked path diverges (seed {seed:#x})");
+    }
+}
+
+#[test]
+fn ann_executable_matches_rust_mlp() {
+    let Some((snn, _, images)) = load_stack() else { return };
+    let dir = artifacts_dir().unwrap();
+    let mlp = Mlp::load(dir.join("ann_weights.bin")).unwrap();
+    let refs: Vec<&Image> = images.iter().take(10).collect();
+    let xla_logits = snn.ann_logits(&refs).unwrap();
+    for (img, xl) in refs.iter().zip(&xla_logits) {
+        let rl = mlp.logits(img);
+        for (a, b) in xl.iter().zip(&rl) {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "ANN logits diverge: xla {a} vs rust {b} (label {})",
+                img.label
+            );
+        }
+    }
+}
+
+#[test]
+fn trained_stack_is_accurate_over_xla() {
+    let Some((snn, _, _)) = load_stack() else { return };
+    let gen = DigitGen::new(2);
+    let mut hits = 0;
+    let n = 250u32;
+    let images: Vec<Image> =
+        (0..n).map(|i| gen.sample((i % 10) as u8, 100 + i / 10)).collect();
+    let refs: Vec<&Image> = images.iter().collect();
+    let seeds: Vec<u32> = (0..n).map(|i| 0xE0 + i * 13).collect();
+    let counts = snn.spike_counts(&refs, &seeds).unwrap();
+    for (img, c) in images.iter().zip(&counts) {
+        let pred = c.iter().enumerate().max_by_key(|&(i, &v)| (v, usize::MAX - i)).unwrap().0;
+        if pred as u8 == img.label {
+            hits += 1;
+        }
+    }
+    let acc = f64::from(hits) / f64::from(n);
+    assert!(acc > 0.85, "XLA stack accuracy {acc} too low (calibrated plateau ≈ 0.99)");
+}
