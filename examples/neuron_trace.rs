@@ -6,14 +6,16 @@
 //! make artifacts && cargo run --release --example neuron_trace [-- <class>]
 //! ```
 
-use anyhow::{Context, Result};
 use snn_rtl::data::{codec, DigitGen};
 use snn_rtl::rtl::RtlCore;
 use snn_rtl::runtime::Manifest;
 
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
 fn main() -> Result<()> {
     let class: u8 = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(3);
-    let manifest = Manifest::load("artifacts").context("run `make artifacts` first")?;
+    let manifest = Manifest::load("artifacts")
+        .map_err(|e| format!("run `make artifacts` first: {e}"))?;
     let weights = codec::load_weights(manifest.path("weights.bin"))?;
     let cfg = manifest.snn_config()?;
     let v_th = cfg.v_th;

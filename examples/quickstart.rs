@@ -5,15 +5,16 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use anyhow::{Context, Result};
 use snn_rtl::data::{codec, DigitGen};
 use snn_rtl::runtime::Manifest;
 use snn_rtl::snn::BehavioralNet;
 
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
 fn main() -> Result<()> {
     // 1. Load the calibrated artifacts (built by `make artifacts`).
     let manifest = Manifest::load("artifacts")
-        .context("artifacts/ missing — run `make artifacts` first")?;
+        .map_err(|e| format!("artifacts/ missing — run `make artifacts` first: {e}"))?;
     let weights = codec::load_weights(manifest.path("weights.bin"))?;
     let cfg = manifest.snn_config()?;
     println!(

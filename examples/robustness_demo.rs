@@ -6,14 +6,16 @@
 //! make artifacts && cargo run --release --example robustness_demo
 //! ```
 
-use anyhow::{Context, Result};
 use snn_rtl::data::perturb::Perturbation;
 use snn_rtl::data::{codec, DigitGen};
 use snn_rtl::runtime::Manifest;
 use snn_rtl::snn::BehavioralNet;
 
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
 fn main() -> Result<()> {
-    let manifest = Manifest::load("artifacts").context("run `make artifacts` first")?;
+    let manifest = Manifest::load("artifacts")
+        .map_err(|e| format!("run `make artifacts` first: {e}"))?;
     let weights = codec::load_weights(manifest.path("weights.bin"))?;
     let cfg = manifest.snn_config()?.with_timesteps(10);
     let net = BehavioralNet::new(cfg, weights.weights)?;

@@ -6,13 +6,15 @@
 //! gtkwave results/core.vcd   # on a machine with gtkwave
 //! ```
 
-use anyhow::{Context, Result};
 use snn_rtl::data::{codec, DigitGen};
 use snn_rtl::rtl::{CtrlState, RtlCore, VcdWriter};
 use snn_rtl::runtime::Manifest;
 
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
 fn main() -> Result<()> {
-    let manifest = Manifest::load("artifacts").context("run `make artifacts` first")?;
+    let manifest = Manifest::load("artifacts")
+        .map_err(|e| format!("run `make artifacts` first: {e}"))?;
     let weights = codec::load_weights(manifest.path("weights.bin"))?;
     let cfg = manifest.snn_config()?.with_timesteps(3);
     let n_outputs = cfg.n_outputs;

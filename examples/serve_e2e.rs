@@ -12,7 +12,6 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
 use snn_rtl::coordinator::{
     BatchPolicy, Coordinator, CoordinatorConfig, Request, XlaBackend,
 };
@@ -20,6 +19,8 @@ use snn_rtl::data::DigitGen;
 use snn_rtl::prng::Xorshift32;
 use snn_rtl::runtime::XlaSnn;
 use snn_rtl::snn::EarlyExit;
+
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
 
 fn percentile_line(tag: &str, snap: &snn_rtl::coordinator::MetricsSnapshot) {
     println!(
@@ -38,7 +39,8 @@ fn run_phase(
     requests: usize,
     early: EarlyExit,
 ) -> Result<(f64, f64, f64)> {
-    let snn = XlaSnn::load(snn_dir).context("loading compiled artifacts")?;
+    let snn = XlaSnn::load(snn_dir)
+        .map_err(|e| format!("loading compiled artifacts: {e}"))?;
     let window = snn.config().timesteps;
     let backend = Arc::new(XlaBackend::new(snn));
     let coord = Coordinator::start(
@@ -104,7 +106,7 @@ fn main() -> Result<()> {
         .nth(1)
         .map(|s| s.parse())
         .transpose()
-        .context("argument must be a request count")?
+        .map_err(|e| format!("argument must be a request count: {e}"))?
         .unwrap_or(2000);
 
     let (qps_full, acc_full, steps_full) =

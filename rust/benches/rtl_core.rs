@@ -21,7 +21,9 @@ fn main() {
     let img = gen.sample(3, 0);
     let mut results: Vec<BenchResult> = Vec::new();
 
-    // Full-window inference at the paper's configuration.
+    // Full-window inference at the paper's configuration: the cycle-stepped
+    // engine vs the batched-timestep fast path (bit-exact by property test;
+    // the headline perf target of EXPERIMENTS.md §Perf).
     for t in [1u32, 10, 20] {
         let cfg = SnnConfig::paper().with_timesteps(t);
         let mut core = RtlCore::new(cfg, weights(7)).unwrap();
@@ -35,6 +37,20 @@ fn main() {
             "{}  |  {:.1}M simulated cycles/s",
             r.report(),
             r.throughput(cycles_per_window) / 1e6
+        );
+        let cycle_mean_ns = r.mean_ns;
+        results.push(r);
+
+        let mut seed = 1u32;
+        let r = bench.run(&format!("rtl_fast_window_t{t}"), || {
+            seed = seed.wrapping_add(1);
+            black_box(core.run_fast(&img, seed).unwrap());
+        });
+        println!(
+            "{}  |  {:.1}M simulated cycles/s  ({:.1}x vs cycle path)",
+            r.report(),
+            r.throughput(cycles_per_window) / 1e6,
+            cycle_mean_ns / r.mean_ns
         );
         results.push(r);
     }
@@ -63,6 +79,29 @@ fn main() {
         let r = bench.run("rtl_immediate_mode_t10", || {
             seed = seed.wrapping_add(1);
             black_box(core.run(&img, seed).unwrap());
+        });
+        println!("{}", r.report());
+        results.push(r);
+
+        let mut seed = 1u32;
+        let r = bench.run("rtl_fast_immediate_mode_t10", || {
+            seed = seed.wrapping_add(1);
+            black_box(core.run_fast(&img, seed).unwrap());
+        });
+        println!("{}", r.report());
+        results.push(r);
+    }
+
+    // Fast path under sparse vs dense input (the active-pixel list pays
+    // off most when few comparators fire).
+    for (name, intensity) in [("black", 0u8), ("mid", 128), ("bright", 255)] {
+        let cfg = SnnConfig::paper().with_timesteps(10);
+        let mut core = RtlCore::new(cfg, weights(7)).unwrap();
+        let flat = snn_rtl::data::Image { label: 0, pixels: vec![intensity; 784] };
+        let mut seed = 1u32;
+        let r = bench.run(&format!("rtl_fast_input_{name}"), || {
+            seed = seed.wrapping_add(1);
+            black_box(core.run_fast(&flat, seed).unwrap());
         });
         println!("{}", r.report());
         results.push(r);

@@ -1,0 +1,119 @@
+//! `bench-report` — the perf-trajectory probe behind `tools/run_bench.sh`.
+//!
+//! Measures, on synthetic weights/digits (no artifacts needed):
+//!
+//! * images/sec of the RTL **cycle path** (`RtlCore::run`),
+//! * images/sec of the RTL **fast path** (`RtlCore::run_fast`),
+//! * end-to-end coordinator throughput over the pooled fast-path
+//!   `RtlBackend` at 1 / 2 / 4 workers,
+//!
+//! and writes the results to `BENCH_1.json` (plus stdout). The JSON seeds
+//! the repository's performance trajectory: the fast-path speedup and the
+//! multi-worker scaling curve are the acceptance numbers of the fast-path
+//! engine PR (EXPERIMENTS.md §Perf).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use snn_rtl::bench::{black_box, Bench};
+use snn_rtl::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, Request, RtlBackend,
+};
+use snn_rtl::data::{DigitGen, Image};
+use snn_rtl::fixed::WeightMatrix;
+use snn_rtl::prng::Xorshift32;
+use snn_rtl::rtl::RtlCore;
+use snn_rtl::snn::EarlyExit;
+use snn_rtl::SnnConfig;
+
+fn weights(seed: u32) -> WeightMatrix {
+    let mut rng = Xorshift32::new(seed);
+    WeightMatrix::from_rows(784, 10, 9, (0..7840).map(|_| rng.range_i32(-30, 60)).collect())
+        .unwrap()
+}
+
+fn coordinator_qps(cfg: &SnnConfig, workers: usize, requests: usize, images: &[Image]) -> f64 {
+    let backend = Arc::new(RtlBackend::new(cfg.clone(), weights(7)).unwrap());
+    let coord = Coordinator::start(
+        backend,
+        CoordinatorConfig {
+            workers,
+            queue_depth: 2048,
+            batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_micros(500) },
+            early: EarlyExit::Off,
+        },
+    );
+    let handle = coord.handle();
+    let t0 = Instant::now();
+    let mut receivers = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let img = images[i % images.len()].clone();
+        loop {
+            match handle.submit(Request { image: img.clone(), seed: Some(i as u32 + 1) }) {
+                Ok(rx) => {
+                    receivers.push(rx);
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_micros(100)),
+            }
+        }
+    }
+    for rx in receivers {
+        rx.recv().unwrap().unwrap();
+    }
+    let qps = requests as f64 / t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    qps
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let cfg = SnnConfig::paper().with_timesteps(10);
+    let gen = DigitGen::new(2);
+    let img = gen.sample(3, 0);
+
+    // Engine-level throughput.
+    let mut core = RtlCore::new(cfg.clone(), weights(7)).unwrap();
+    let mut seed = 1u32;
+    let cycle = bench.run("rtl_cycle_path_t10", || {
+        seed = seed.wrapping_add(1);
+        black_box(core.run(&img, seed).unwrap());
+    });
+    let mut seed = 1u32;
+    let fast = bench.run("rtl_fast_path_t10", || {
+        seed = seed.wrapping_add(1);
+        black_box(core.run_fast(&img, seed).unwrap());
+    });
+    let cycle_ips = cycle.throughput(1.0);
+    let fast_ips = fast.throughput(1.0);
+    let speedup = cycle.mean_ns / fast.mean_ns;
+    println!("{}  |  {cycle_ips:.1} images/s", cycle.report());
+    println!("{}  |  {fast_ips:.1} images/s  ({speedup:.1}x)", fast.report());
+
+    // Coordinator scaling over the pooled fast-path backend.
+    let images: Vec<Image> = (0..32).map(|i| gen.sample((i % 10) as u8, i / 10)).collect();
+    let requests = if quick { 128 } else { 512 };
+    let mut qps = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let q = coordinator_qps(&cfg, workers, requests, &images);
+        println!("coordinator_rtl_w{workers}: {q:.0} req/s");
+        qps.push((workers, q));
+    }
+
+    // Hand-rolled JSON (no serde in the offline crate set).
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"BENCH_1\",\n");
+    json.push_str("  \"config\": \"paper_t10\",\n");
+    json.push_str(&format!("  \"rtl_cycle_images_per_s\": {cycle_ips:.2},\n"));
+    json.push_str(&format!("  \"rtl_fast_images_per_s\": {fast_ips:.2},\n"));
+    json.push_str(&format!("  \"fast_path_speedup\": {speedup:.2},\n"));
+    json.push_str("  \"coordinator_rtl_qps\": {\n");
+    for (i, (workers, q)) in qps.iter().enumerate() {
+        let comma = if i + 1 == qps.len() { "" } else { "," };
+        json.push_str(&format!("    \"workers_{workers}\": {q:.2}{comma}\n"));
+    }
+    json.push_str("  }\n}\n");
+    std::fs::write("BENCH_1.json", &json).expect("write BENCH_1.json");
+    println!("-> BENCH_1.json");
+}

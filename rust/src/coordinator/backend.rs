@@ -3,11 +3,17 @@
 //! | backend | substrate | early exit | use |
 //! |---|---|---|---|
 //! | [`BehavioralBackend`] | pure-Rust golden model | per-timestep | exactness + speed |
-//! | [`RtlBackend`] | cycle-accurate core sim | full window | cycle/energy accounting |
+//! | [`RtlBackend`] | RTL core (fast-path engine) | full window | cycle/energy accounting |
 //! | [`XlaBackend`] | AOT JAX/Pallas via PJRT | per-chunk | the compiled L2/L1 stack |
 //!
 //! All three implement the same architectural contract, so the coordinator
 //! (and the equivalence tests) can swap them freely.
+//!
+//! Concurrency: the behavioral and RTL backends keep their stateful
+//! engines in an [`InstancePool`] — each `classify_batch` checks a private
+//! instance out for the duration of the batch, so worker threads fan out
+//! instead of serializing on one shared `Mutex` (see `pool.rs`). The XLA
+//! backend still serializes (PJRT handles are `Send` but not `Sync`).
 
 use std::sync::Mutex;
 
@@ -17,7 +23,10 @@ use crate::error::Result;
 use crate::fixed::WeightMatrix;
 use crate::rtl::RtlCore;
 use crate::runtime::XlaSnn;
-use crate::snn::{BehavioralNet, EarlyExit};
+use crate::snn::{BehavioralNet, EarlyExit, LifLayer};
+use crate::util::priority_argmax;
+
+use super::pool::{default_pool_slots, InstancePool};
 
 /// Per-image inference output, backend-agnostic.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -28,16 +37,6 @@ pub struct BackendOutput {
     pub spike_counts: Vec<u32>,
     /// Timesteps actually executed.
     pub steps_run: u32,
-}
-
-fn decide(counts: &[u32]) -> u8 {
-    let mut best = 0usize;
-    for (j, &c) in counts.iter().enumerate() {
-        if c > counts[best] {
-            best = j;
-        }
-    }
-    best as u8
 }
 
 /// A batched classification backend. Implementations must be `Send + Sync`
@@ -62,14 +61,21 @@ pub trait Backend: Send + Sync {
 
 // ---------------------------------------------------------------------------
 
-/// The behavioral golden model as a backend (per-image, early-exit capable).
+/// The behavioral golden model as a backend (per-image, early-exit
+/// capable). Worker threads check reusable [`LifLayer`] instances out of a
+/// pool, so concurrent batches neither serialize nor clone layer state per
+/// request.
 pub struct BehavioralBackend {
     net: BehavioralNet,
+    layers: InstancePool<LifLayer>,
 }
 
 impl BehavioralBackend {
     pub fn new(cfg: SnnConfig, weights: WeightMatrix) -> Result<Self> {
-        Ok(BehavioralBackend { net: BehavioralNet::new(cfg, weights)? })
+        let net = BehavioralNet::new(cfg, weights)?;
+        let proto = net.layer_prototype();
+        let layers = InstancePool::new(default_pool_slots(), move || proto.clone());
+        Ok(BehavioralBackend { net, layers })
     }
 }
 
@@ -85,11 +91,12 @@ impl Backend for BehavioralBackend {
         early: EarlyExit,
     ) -> Result<Vec<BackendOutput>> {
         let t = self.net.config().timesteps;
+        let mut layer = self.layers.checkout();
         Ok(images
             .iter()
             .zip(seeds)
             .map(|(img, &seed)| {
-                let c = self.net.classify_opts(img, seed, t, early);
+                let c = self.net.classify_with(&mut layer, img, seed, t, early);
                 BackendOutput {
                     class: c.class,
                     spike_counts: c.spike_counts,
@@ -106,23 +113,36 @@ impl Backend for BehavioralBackend {
 
 // ---------------------------------------------------------------------------
 
-/// The cycle-accurate RTL core as a backend. The core is stateful, so it
-/// sits behind a mutex; throughput comes from running multiple worker
-/// threads each owning a coordinator worker (the experiments that need
-/// cycle counts care about fidelity, not peak QPS).
+/// The RTL core as a backend, running the batched-timestep fast path
+/// ([`RtlCore::run_fast`] — bit-exact with the cycle engine by property
+/// test). Each worker's batch checks a private core out of the pool, so
+/// cycle-accounted serving scales with the coordinator's worker count
+/// instead of serializing on a single simulator instance.
 pub struct RtlBackend {
-    core: Mutex<RtlCore>,
+    cores: InstancePool<RtlCore>,
     cfg: SnnConfig,
 }
 
 impl RtlBackend {
     pub fn new(cfg: SnnConfig, weights: WeightMatrix) -> Result<Self> {
-        Ok(RtlBackend { core: Mutex::new(RtlCore::new(cfg.clone(), weights)?), cfg })
+        // Validate geometry/config once, up front, so the pool factory
+        // cannot fail later.
+        RtlCore::new(cfg.clone(), weights.clone())?;
+        let factory_cfg = cfg.clone();
+        let cores = InstancePool::new(default_pool_slots(), move || {
+            RtlCore::new(factory_cfg.clone(), weights.clone())
+                .expect("validated at RtlBackend::new")
+        });
+        Ok(RtlBackend { cores, cfg })
     }
 
-    /// Total cycles burned so far (experiment observability).
+    /// Total cycles burned so far across the pooled cores (experiment
+    /// observability). Overflow instances built under extreme concurrency
+    /// are not tracked.
     pub fn total_cycles(&self) -> u64 {
-        self.core.lock().unwrap().total_activity().cycles
+        let mut total = 0u64;
+        self.cores.for_each(|core| total += core.total_activity().cycles);
+        total
     }
 }
 
@@ -137,12 +157,12 @@ impl Backend for RtlBackend {
         seeds: &[u32],
         _early: EarlyExit,
     ) -> Result<Vec<BackendOutput>> {
-        let mut core = self.core.lock().unwrap();
+        let mut core = self.cores.checkout();
         images
             .iter()
             .zip(seeds)
             .map(|(img, &seed)| {
-                let r = core.run(img, seed)?;
+                let r = core.run_fast(img, seed)?;
                 Ok(BackendOutput {
                     class: r.class,
                     spike_counts: r.spike_counts,
@@ -198,7 +218,7 @@ impl XlaBackend {
             }
             for c in counts {
                 out.push(BackendOutput {
-                    class: decide(&c),
+                    class: priority_argmax(&c) as u8,
                     spike_counts: c,
                     steps_run: st.steps_run,
                 });
@@ -239,7 +259,7 @@ impl Backend for XlaBackend {
                     .spike_counts(images, seeds)?
                     .into_iter()
                     .map(|c| BackendOutput {
-                        class: decide(&c),
+                        class: priority_argmax(&c) as u8,
                         spike_counts: c,
                         steps_run: window,
                     })
@@ -257,6 +277,7 @@ impl Backend for XlaBackend {
 mod tests {
     use super::*;
     use crate::data::DigitGen;
+    use std::sync::Arc;
 
     fn test_weights() -> WeightMatrix {
         let mut w = vec![0i32; 784 * 10];
@@ -285,6 +306,49 @@ mod tests {
             assert_eq!(x.spike_counts, y.spike_counts);
         }
         assert!(rtl.total_cycles() > 0);
+    }
+
+    #[test]
+    fn concurrent_batches_do_not_serialize_or_corrupt() {
+        // Hammer both pooled backends from many threads; every response
+        // must match the single-threaded answer for its (image, seed).
+        let cfg = SnnConfig::paper().with_timesteps(4);
+        let beh = Arc::new(BehavioralBackend::new(cfg.clone(), test_weights()).unwrap());
+        let rtl = Arc::new(RtlBackend::new(cfg, test_weights()).unwrap());
+        let gen = DigitGen::new(9);
+        let images: Arc<Vec<Image>> =
+            Arc::new((0..10).map(|i| gen.sample(i as u8, i)).collect());
+        let expected: Vec<BackendOutput> = {
+            let refs: Vec<&Image> = images.iter().collect();
+            let seeds: Vec<u32> = (0..10).map(|i| 700 + i).collect();
+            beh.classify_batch(&refs, &seeds, EarlyExit::Off).unwrap()
+        };
+
+        let mut handles = Vec::new();
+        for _ in 0..6 {
+            let beh = Arc::clone(&beh);
+            let rtl = Arc::clone(&rtl);
+            let images = Arc::clone(&images);
+            let expected = expected.clone();
+            handles.push(std::thread::spawn(move || {
+                for round in 0..8 {
+                    let i = round % images.len();
+                    let seed = 700 + i as u32;
+                    let a = beh
+                        .classify_batch(&[&images[i]], &[seed], EarlyExit::Off)
+                        .unwrap();
+                    let b = rtl
+                        .classify_batch(&[&images[i]], &[seed], EarlyExit::Off)
+                        .unwrap();
+                    assert_eq!(a[0], expected[i], "behavioral diverged under load");
+                    assert_eq!(b[0].class, expected[i].class);
+                    assert_eq!(b[0].spike_counts, expected[i].spike_counts);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

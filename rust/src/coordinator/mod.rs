@@ -11,13 +11,19 @@
 //! channels. tokio is not part of the offline crate set — the event loop
 //! is small enough that blocking threads are the honest design
 //! (DESIGN.md §7).
+//!
+//! Stateful backends (behavioral, RTL) draw private engine instances from
+//! a non-blocking [`InstancePool`] per batch, so adding workers adds real
+//! parallelism instead of queueing on one engine mutex.
 
 mod backend;
 mod batcher;
 mod metrics;
+mod pool;
 mod server;
 
 pub use backend::{Backend, BackendOutput, BehavioralBackend, RtlBackend, XlaBackend};
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::{Histogram, MetricsSnapshot, ServerMetrics};
+pub use pool::{InstancePool, PoolGuard};
 pub use server::{Coordinator, CoordinatorConfig, Request, Response, SubmitHandle};

@@ -1,47 +1,65 @@
 //! Crate-wide error type.
 //!
-//! The library uses a structured [`Error`] (via `thiserror`); binaries and
-//! examples wrap it in `anyhow` for context-rich reporting.
+//! The library uses a structured [`Error`] with hand-written `Display` /
+//! `std::error::Error` impls (`thiserror` is not in the offline crate set);
+//! binaries and examples bubble it up through `Box<dyn std::error::Error>`.
 
+use std::fmt;
 use std::path::PathBuf;
 
 /// Convenience alias used across the crate.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// Errors produced by the snn-rtl library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// An I/O failure, annotated with the path that was being accessed.
-    #[error("i/o error on {path}: {source}")]
-    Io {
-        path: PathBuf,
-        #[source]
-        source: std::io::Error,
-    },
+    Io { path: PathBuf, source: std::io::Error },
 
     /// A binary artifact had the wrong magic number / version / geometry.
-    #[error("malformed artifact {path}: {reason}")]
     MalformedArtifact { path: PathBuf, reason: String },
 
     /// A configuration value was out of range or inconsistent.
-    #[error("invalid configuration: {0}")]
     InvalidConfig(String),
 
     /// A runtime (PJRT / XLA) failure.
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// The coordinator rejected a request (queue full, shut down, ...).
-    #[error("request rejected: {0}")]
     Rejected(String),
 
     /// A worker or channel disappeared mid-flight.
-    #[error("coordinator internal failure: {0}")]
     Coordinator(String),
 
     /// Dimension mismatch between tensors / images / weight matrices.
-    #[error("shape mismatch: {0}")]
     ShapeMismatch(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io { path, source } => {
+                write!(f, "i/o error on {}: {source}", path.display())
+            }
+            Error::MalformedArtifact { path, reason } => {
+                write!(f, "malformed artifact {}: {reason}", path.display())
+            }
+            Error::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
+            Error::Xla(msg) => write!(f, "xla runtime error: {msg}"),
+            Error::Rejected(msg) => write!(f, "request rejected: {msg}"),
+            Error::Coordinator(msg) => write!(f, "coordinator internal failure: {msg}"),
+            Error::ShapeMismatch(msg) => write!(f, "shape mismatch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Error {
@@ -56,8 +74,19 @@ impl Error {
     }
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::io("weights.bin", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let msg = e.to_string();
+        assert!(msg.contains("weights.bin"), "{msg}");
+        assert!(std::error::Error::source(&e).is_some());
+
+        let e = Error::malformed("m.txt", "bad magic");
+        assert!(e.to_string().contains("bad magic"));
+        assert!(std::error::Error::source(&e).is_none());
     }
 }

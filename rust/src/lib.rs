@@ -49,6 +49,7 @@ pub mod rtl;
 pub mod runtime;
 pub mod snn;
 pub mod testutil;
+pub mod util;
 
 pub use config::SnnConfig;
 pub use error::{Error, Result};

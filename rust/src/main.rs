@@ -14,8 +14,6 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
-
 use snn_rtl::cli::Args;
 use snn_rtl::coordinator::{
     Backend, BatchPolicy, BehavioralBackend, Coordinator, CoordinatorConfig, Request,
@@ -25,6 +23,10 @@ use snn_rtl::data::{codec, DigitGen};
 use snn_rtl::experiments::{self, Ctx};
 use snn_rtl::runtime::{Manifest, XlaSnn};
 use snn_rtl::snn::EarlyExit;
+
+/// Binary-level result: any error bubbles up as a readable message
+/// (`anyhow` is not in the offline crate set).
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -41,7 +43,7 @@ fn main() -> Result<()> {
             print_usage();
             Ok(())
         }
-        other => bail!("unknown command {other:?}; run `snn-rtl help`"),
+        other => Err(format!("unknown command {other:?}; run `snn-rtl help`").into()),
     }
 }
 
@@ -66,8 +68,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let results = args.str_or("results", "results");
     let samples = args.num_or("samples", 0usize)?;
     args.check_unknown()?;
-    let mut ctx = Ctx::load(&artifacts, &results)
-        .with_context(|| format!("loading artifacts from {artifacts}/ (run `make artifacts`)"))?;
+    let mut ctx = Ctx::load(&artifacts, &results).map_err(|e| {
+        format!("loading artifacts from {artifacts}/ (run `make artifacts`): {e}")
+    })?;
     if samples > 0 {
         ctx.samples = Some(samples);
     }
@@ -142,7 +145,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let mut hits = 0usize;
     for (rx, label) in receivers.into_iter().zip(correct_labels) {
-        let resp = rx.recv().context("worker dropped reply")??;
+        let resp = rx.recv().map_err(|_| "worker dropped reply")??;
         if resp.class == label {
             hits += 1;
         }
@@ -197,14 +200,15 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn make_backend(name: &str, artifacts: &str) -> Result<Arc<dyn Backend>> {
-    let manifest = Manifest::load(artifacts)
-        .with_context(|| format!("loading {artifacts}/manifest.txt (run `make artifacts`)"))?;
+    let manifest = Manifest::load(artifacts).map_err(|e| {
+        format!("loading {artifacts}/manifest.txt (run `make artifacts`): {e}")
+    })?;
     let cfg = manifest.snn_config()?;
     let weights = codec::load_weights(manifest.path("weights.bin"))?;
     Ok(match name {
         "behavioral" => Arc::new(BehavioralBackend::new(cfg, weights.weights)?),
         "rtl" => Arc::new(RtlBackend::new(cfg, weights.weights)?),
         "xla" => Arc::new(XlaBackend::new(XlaSnn::load(artifacts)?)),
-        other => bail!("unknown backend {other:?} (behavioral|rtl|xla)"),
+        other => return Err(format!("unknown backend {other:?} (behavioral|rtl|xla)").into()),
     })
 }

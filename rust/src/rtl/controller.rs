@@ -34,6 +34,11 @@ pub struct LayerController {
     spike_reg: Vec<bool>,
     /// Enable lines (true = enabled); pruning clears bits.
     enables: Vec<bool>,
+    /// Count of set enable lines — the O(1) "any neuron still enabled"
+    /// signal the core's integrate path gates BRAM reads on (hoisted out
+    /// of the per-cycle loop; previously recomputed by scanning `enables`
+    /// every clock).
+    enabled_count: usize,
     /// Datapath width: pixels served per `Integrate` clock. 1 = the
     /// paper's Fig. 1 pixel-serial datapath; wider values model a
     /// multi-lane encoder + adder tree (the only way the paper's §V-C
@@ -50,6 +55,7 @@ impl LayerController {
             timestep: 0,
             spike_reg: vec![false; cfg.n_outputs],
             enables: vec![true; cfg.n_outputs],
+            enabled_count: cfg.n_outputs,
             pixels_per_cycle: 1,
             cfg: cfg.clone(),
         }
@@ -97,12 +103,26 @@ impl LayerController {
         &self.enables
     }
 
+    /// O(1): is any neuron still enabled? (OR-reduction of the enable
+    /// lines; gates the weight BRAM once pruning has shut the array off.)
+    pub fn any_enabled(&self) -> bool {
+        self.enabled_count > 0
+    }
+
     /// `start` pulse: begin a new inference window.
     pub fn start(&mut self) {
         self.state = CtrlState::Integrate { pixel: 0 };
         self.timestep = 0;
         self.spike_reg.fill(false);
         self.enables.fill(true);
+        self.enabled_count = self.enables.len();
+    }
+
+    /// Jump straight to `Done` (used by the fast path, which executes the
+    /// window without walking the FSM cycle by cycle).
+    pub fn finish(&mut self) {
+        self.state = CtrlState::Done;
+        self.timestep = self.cfg.timesteps;
     }
 
     /// Latch the fire pattern (driven by the `Fire`-state clock) and apply
@@ -113,8 +133,9 @@ impl LayerController {
         self.spike_reg.copy_from_slice(fired);
         if let PruneMode::AfterFires { after_spikes } = self.cfg.prune {
             for (j, &count) in spike_counts.iter().enumerate() {
-                if count >= after_spikes {
+                if count >= after_spikes && self.enables[j] {
                     self.enables[j] = false;
+                    self.enabled_count -= 1;
                 }
             }
         }
@@ -157,15 +178,10 @@ impl LayerController {
     }
 
     /// Priority-encoder readout: lowest class index among the max spike
-    /// counts (hardware argmax over the count registers).
+    /// counts (hardware argmax over the count registers). Thin wrapper over
+    /// the one shared [`crate::util::priority_argmax`] implementation.
     pub fn decide(spike_counts: &[u32]) -> u8 {
-        let mut best = 0usize;
-        for (j, &c) in spike_counts.iter().enumerate() {
-            if c > spike_counts[best] {
-                best = j;
-            }
-        }
-        best as u8
+        crate::util::priority_argmax(spike_counts) as u8
     }
 }
 
@@ -262,6 +278,31 @@ mod tests {
         // start() restores enables.
         c.start();
         assert!(c.enable(0));
+    }
+
+    #[test]
+    fn any_enabled_tracks_pruning() {
+        let mut c = LayerController::new(&tiny());
+        c.start();
+        assert!(c.any_enabled());
+        c.latch_fire(&[true, false], &[1, 0]);
+        assert!(c.any_enabled(), "one neuron still live");
+        // Re-latching the same counts must not double-decrement.
+        c.latch_fire(&[false, false], &[1, 0]);
+        assert!(c.any_enabled());
+        c.latch_fire(&[false, true], &[1, 1]);
+        assert!(!c.any_enabled(), "all pruned");
+        c.start();
+        assert!(c.any_enabled(), "start() restores the array");
+    }
+
+    #[test]
+    fn finish_jumps_to_done() {
+        let mut c = LayerController::new(&tiny());
+        c.start();
+        c.finish();
+        assert_eq!(c.state(), CtrlState::Done);
+        assert_eq!(c.timestep(), tiny().timesteps);
     }
 
     #[test]

@@ -1,14 +1,28 @@
-//! Top-level SNN core: controller + encoder + neuron array + weight BRAM,
-//! advanced one clock per `tick_cycle` call.
+//! Top-level SNN core: controller + encoder + neuron array + weight BRAM.
+//!
+//! Two execution engines share the same architectural state:
+//!
+//! * the **cycle path** ([`RtlCore::tick_cycle`] / [`RtlCore::run`]) —
+//!   advances one clock per call through the controller FSM; required for
+//!   waveform capture and cycle-by-cycle observability;
+//! * the **fast path** ([`RtlCore::run_fast`]) — executes a whole timestep
+//!   per loop iteration: the Poisson comparator draws for a pixel range are
+//!   bulk-generated into an active-pixel index list, only spiking rows are
+//!   integrated, and the cycle count is computed arithmetically from the
+//!   FSM schedule instead of being walked. It is **bit-exact and
+//!   activity-exact** with the cycle path across every
+//!   `FireMode`/`LeakMode`/`PruneMode`/datapath-width combination
+//!   (property-tested by `fast_path_equals_cycle_path`; equivalence
+//!   argument in EXPERIMENTS.md §Perf).
 
-use crate::config::{FireMode, SnnConfig};
+use crate::config::{FireMode, LeakMode, SnnConfig};
 use crate::data::Image;
 use crate::error::{Error, Result};
 use crate::fixed::WeightMatrix;
 
 use super::controller::{CtrlState, LayerController};
 use super::encoder::RtlPoissonEncoder;
-use super::lif_neuron::{LifNeuronCore, NeuronCtrl};
+use super::lif_neuron::LifNeuronArray;
 use super::power::{ActivityCounters, EnergyModel, EnergyReport};
 use super::vcd::VcdWriter;
 
@@ -32,18 +46,23 @@ pub struct RtlResult {
     pub spikes_by_step: Vec<Vec<bool>>,
 }
 
-/// The synthesizable top (paper Fig. 3) as a cycle-stepped simulator.
+/// The synthesizable top (paper Fig. 3) as a cycle-stepped simulator with a
+/// batched-timestep fast path.
 pub struct RtlCore {
     cfg: SnnConfig,
     weights: WeightMatrix,
     controller: LayerController,
     encoder: RtlPoissonEncoder,
-    neurons: Vec<LifNeuronCore>,
+    neurons: LifNeuronArray,
     act: ActivityCounters,
     energy_model: EnergyModel,
     /// Membrane snapshot log (per timestep) while running.
     membrane_log: Vec<Vec<i32>>,
     spike_log: Vec<Vec<bool>>,
+    /// Reusable fire-pattern buffer (hoisted out of the per-cycle loop).
+    fired_scratch: Vec<bool>,
+    /// Reusable active-pixel index list for the fast path.
+    active_scratch: Vec<u32>,
     /// Optional waveform sink.
     vcd: Option<VcdWriter>,
 }
@@ -60,15 +79,22 @@ impl RtlCore {
                 cfg.n_outputs
             )));
         }
-        let neurons = (0..cfg.n_outputs).map(|_| LifNeuronCore::new(&cfg)).collect();
+        if cfg.n_outputs > 64 {
+            return Err(Error::InvalidConfig(format!(
+                "RtlCore models at most 64 output neurons (u64 enable mask), got {}",
+                cfg.n_outputs
+            )));
+        }
         Ok(RtlCore {
             controller: LayerController::new(&cfg),
             encoder: RtlPoissonEncoder::new(cfg.n_inputs),
-            neurons,
+            neurons: LifNeuronArray::new(&cfg),
             act: ActivityCounters::default(),
             energy_model: EnergyModel::default(),
             membrane_log: Vec::new(),
             spike_log: Vec::new(),
+            fired_scratch: vec![false; cfg.n_outputs],
+            active_scratch: Vec::with_capacity(cfg.n_inputs),
             weights,
             cfg,
             vcd: None,
@@ -111,7 +137,7 @@ impl RtlCore {
 
     /// Current membrane potentials.
     pub fn membranes(&self) -> Vec<i32> {
-        self.neurons.iter().map(LifNeuronCore::acc).collect()
+        self.neurons.membranes()
     }
 
     /// `load` pulse: latch an image + seed, reset all neuron state, leave
@@ -125,9 +151,7 @@ impl RtlCore {
             )));
         }
         self.encoder.load(&img.pixels, seed, &mut self.act);
-        for n in &mut self.neurons {
-            n.tick(NeuronCtrl::Reset, &mut self.act);
-        }
+        self.neurons.reset(&mut self.act);
         self.controller.start();
         self.membrane_log.clear();
         self.spike_log.clear();
@@ -152,66 +176,44 @@ impl RtlCore {
                 // and pruning saves almost nothing — EXPERIMENTS.md
                 // ablation A.)
                 let end = (pixel + self.controller.pixels_per_cycle()).min(self.cfg.n_inputs);
-                let any_enabled = self.controller.enables().iter().any(|&e| e);
+                let any_enabled = self.controller.any_enabled();
                 for lane_pixel in pixel..end {
                     let spike = self.encoder.tick_pixel(lane_pixel, &mut self.act);
                     if spike && any_enabled {
                         self.act.bram_reads += 1;
-                        let row = self.weights.row(lane_pixel);
-                        for (j, n) in self.neurons.iter_mut().enumerate() {
-                            if self.controller.enable(j) {
-                                n.tick(NeuronCtrl::Add { weight: row[j] }, &mut self.act);
-                            }
-                        }
+                        self.neurons.add_row(self.weights.row(lane_pixel), &mut self.act);
                     }
                 }
                 // Immediate fire mode: comparator is combinational on the
                 // accumulator; fire mid-integration.
                 if self.cfg.fire_mode == FireMode::Immediate {
-                    let mut fired = vec![false; self.cfg.n_outputs];
-                    let mut any = false;
-                    for (j, n) in self.neurons.iter_mut().enumerate() {
-                        if self.controller.enable(j) && n.above_threshold() {
-                            n.tick(NeuronCtrl::FireCheck, &mut self.act);
-                            fired[j] = true;
-                            any = true;
-                        }
-                    }
+                    self.fired_scratch.fill(false);
+                    let any =
+                        self.neurons.immediate_fire(&mut self.fired_scratch, &mut self.act);
                     if any {
-                        let counts: Vec<u32> =
-                            self.neurons.iter().map(LifNeuronCore::spike_count).collect();
-                        self.controller.latch_fire(&fired, &counts);
+                        self.controller
+                            .latch_fire(&self.fired_scratch, self.neurons.spike_counts());
                         self.apply_prune_mask();
                     }
                 }
             }
             CtrlState::Leak { .. } => {
-                for (j, n) in self.neurons.iter_mut().enumerate() {
-                    if self.controller.enable(j) {
-                        n.tick(NeuronCtrl::Leak, &mut self.act);
-                    }
-                }
+                self.neurons.leak_enabled(&mut self.act);
             }
             CtrlState::Fire => {
-                let mut fired = vec![false; self.cfg.n_outputs];
+                self.fired_scratch.fill(false);
                 if self.cfg.fire_mode == FireMode::EndOfStep {
-                    for (j, n) in self.neurons.iter_mut().enumerate() {
-                        if self.controller.enable(j) {
-                            fired[j] = n.tick(NeuronCtrl::FireCheck, &mut self.act);
-                        }
-                    }
+                    self.neurons.fire_check(&mut self.fired_scratch, &mut self.act);
                 }
-                let counts: Vec<u32> =
-                    self.neurons.iter().map(LifNeuronCore::spike_count).collect();
-                self.controller.latch_fire(&fired, &counts);
+                self.controller.latch_fire(&self.fired_scratch, self.neurons.spike_counts());
                 self.apply_prune_mask();
-                self.membrane_log.push(self.membranes());
-                self.spike_log.push(fired);
+                self.membrane_log.push(self.neurons.membranes());
+                self.spike_log.push(self.fired_scratch.clone());
             }
         }
         self.act.cycles += 1;
         if let Some(v) = self.vcd.as_mut() {
-            let membranes: Vec<i32> = self.neurons.iter().map(LifNeuronCore::acc).collect();
+            let membranes = self.neurons.membranes();
             v.sample(
                 self.act.cycles,
                 &state,
@@ -226,31 +228,144 @@ impl RtlCore {
 
     /// Drive the enable latches from the controller's pruning mask.
     fn apply_prune_mask(&mut self) {
-        for (j, n) in self.neurons.iter_mut().enumerate() {
-            n.set_enabled(self.controller.enable(j));
-        }
+        self.neurons.set_enables(self.controller.enables());
     }
 
-    /// Run one full inference window and collect the result.
+    /// Run one full inference window through the cycle-stepped FSM.
     pub fn run(&mut self, img: &Image, seed: u32) -> Result<RtlResult> {
         self.load_image(img, seed)?;
         let start_cycles = self.act.cycles;
         let start_act = self.act;
         while self.tick_cycle() {}
-        let spike_counts: Vec<u32> =
-            self.neurons.iter().map(LifNeuronCore::spike_count).collect();
-        let mut window_act = self.act;
-        // Per-window deltas.
-        window_act.adds -= start_act.adds;
-        window_act.shifts -= start_act.shifts;
-        window_act.compares -= start_act.compares;
-        window_act.bram_reads -= start_act.bram_reads;
-        window_act.prng_steps -= start_act.prng_steps;
-        window_act.reg_toggles -= start_act.reg_toggles;
-        window_act.cycles -= start_act.cycles;
-        window_act.saturations -= start_act.saturations;
+        Ok(self.collect_result(start_cycles, &start_act))
+    }
+
+    /// Run one full inference window on the batched-timestep fast path.
+    ///
+    /// Produces an [`RtlResult`] byte-identical to [`RtlCore::run`]
+    /// (including [`ActivityCounters`] and the per-step logs) without
+    /// walking the FSM clock by clock: per timestep the encoder bulk-draws
+    /// its comparators into an active-pixel list, only spiking rows reach
+    /// the adder tree, and cycle counts come from the closed-form schedule
+    /// (`⌈n_inputs/k⌉` integrate + leak + fire clocks). Falls back to the
+    /// cycle path when a VCD sink is attached, which needs every clock.
+    pub fn run_fast(&mut self, img: &Image, seed: u32) -> Result<RtlResult> {
+        if self.vcd.is_some() {
+            return self.run(img, seed);
+        }
+        self.load_image(img, seed)?;
+        let start_cycles = self.act.cycles;
+        let start_act = self.act;
+
+        let n_in = self.cfg.n_inputs;
+        let k = self.controller.pixels_per_cycle();
+        let row_len = match self.cfg.leak_mode {
+            LeakMode::PerRow { row_len } => Some(row_len),
+            LeakMode::PerTimestep => None,
+        };
+        // Closed-form clock counts per timestep (EndOfStep only; the
+        // Immediate path counts incrementally because enables — and with
+        // them the schedule-relevant datapath state — can change per
+        // integrate clock).
+        let integrate_clocks = ((n_in + k - 1) / k) as u64;
+        let leak_clocks = match row_len {
+            Some(r) => ((n_in - 1) / r + 1) as u64,
+            None => 1,
+        };
+
+        for _ in 0..self.cfg.timesteps {
+            match self.cfg.fire_mode {
+                FireMode::EndOfStep => {
+                    self.fast_integrate_end_of_step(row_len);
+                    self.act.cycles += integrate_clocks + leak_clocks;
+                }
+                FireMode::Immediate => self.fast_integrate_immediate(k, row_len),
+            }
+            // The Fire clock.
+            self.fired_scratch.fill(false);
+            if self.cfg.fire_mode == FireMode::EndOfStep {
+                self.neurons.fire_check(&mut self.fired_scratch, &mut self.act);
+            }
+            self.controller.latch_fire(&self.fired_scratch, self.neurons.spike_counts());
+            self.apply_prune_mask();
+            self.membrane_log.push(self.neurons.membranes());
+            self.spike_log.push(self.fired_scratch.clone());
+            self.act.cycles += 1;
+        }
+        self.controller.finish();
+        Ok(self.collect_result(start_cycles, &start_act))
+    }
+
+    /// One timestep's integrate + leak phases, `FireMode::EndOfStep`.
+    ///
+    /// Enables cannot change mid-timestep in this mode (pruning only acts
+    /// on the Fire clock), so the BRAM gate is hoisted out of the pixel
+    /// loop and the whole leak segment structure reduces to: one segment
+    /// per row (`PerRow`) or one segment for the full frame, each followed
+    /// by its Leak clock — the last segment's leak being the end-of-step
+    /// leak, exactly as the FSM schedules it.
+    fn fast_integrate_end_of_step(&mut self, row_len: Option<usize>) {
+        let n_in = self.cfg.n_inputs;
+        let seg = row_len.unwrap_or(n_in);
+        let any_enabled = self.controller.any_enabled();
+        let mut start = 0usize;
+        while start < n_in {
+            let end = (start + seg).min(n_in);
+            self.active_scratch.clear();
+            self.encoder.tick_range_into(start, end, &mut self.active_scratch, &mut self.act);
+            if any_enabled {
+                for &p in &self.active_scratch {
+                    self.act.bram_reads += 1;
+                    self.neurons.add_row(self.weights.row(p as usize), &mut self.act);
+                }
+            }
+            self.neurons.leak_enabled(&mut self.act);
+            start = end;
+        }
+    }
+
+    /// One timestep's integrate + leak phases, `FireMode::Immediate`.
+    ///
+    /// Replays the FSM's exact grouping: each integrate clock serves `k`
+    /// encoder lanes, then the combinational threshold check fires (and
+    /// possibly prunes) mid-phase; leak clocks land on row boundaries and
+    /// at the end of the frame. Cycle counting is incremental because the
+    /// schedule is walked group by group.
+    fn fast_integrate_immediate(&mut self, k: usize, row_len: Option<usize>) {
+        let n_in = self.cfg.n_inputs;
+        let mut pixel = 0usize;
+        while pixel < n_in {
+            let end = (pixel + k).min(n_in);
+            let any_enabled = self.controller.any_enabled();
+            self.active_scratch.clear();
+            self.encoder.tick_range_into(pixel, end, &mut self.active_scratch, &mut self.act);
+            if any_enabled {
+                for &p in &self.active_scratch {
+                    self.act.bram_reads += 1;
+                    self.neurons.add_row(self.weights.row(p as usize), &mut self.act);
+                }
+            }
+            self.act.cycles += 1; // the Integrate clock
+            self.fired_scratch.fill(false);
+            let any = self.neurons.immediate_fire(&mut self.fired_scratch, &mut self.act);
+            if any {
+                self.controller.latch_fire(&self.fired_scratch, self.neurons.spike_counts());
+                self.apply_prune_mask();
+            }
+            pixel = end;
+            if pixel == n_in || row_len.map_or(false, |r| pixel % r == 0) {
+                self.neurons.leak_enabled(&mut self.act);
+                self.act.cycles += 1; // the Leak clock
+            }
+        }
+    }
+
+    /// Package the window's outputs + activity delta into an [`RtlResult`].
+    fn collect_result(&mut self, start_cycles: u64, start_act: &ActivityCounters) -> RtlResult {
+        let spike_counts = self.neurons.spike_counts().to_vec();
+        let window_act = self.act.since(start_act);
         let energy = self.energy_model.evaluate(&window_act);
-        Ok(RtlResult {
+        RtlResult {
             class: LayerController::decide(&spike_counts),
             spike_counts,
             cycles: self.act.cycles - start_cycles,
@@ -258,7 +373,7 @@ impl RtlCore {
             energy,
             membrane_by_step: std::mem::take(&mut self.membrane_log),
             spikes_by_step: std::mem::take(&mut self.spike_log),
-        })
+        }
     }
 
     /// Cumulative activity across all windows run so far.
@@ -337,6 +452,105 @@ mod tests {
                 );
             }
         });
+    }
+
+    /// The fast-path theorem: `run_fast` produces a bit-identical
+    /// `RtlResult` — spike counts, decision, cycle count, per-step
+    /// membrane/fire logs AND every activity counter — across the full
+    /// fire/leak/prune mode cross-product, datapath widths, and weights
+    /// hot enough to exercise per-add saturation.
+    #[test]
+    fn fast_path_equals_cycle_path() {
+        PropRunner::new("fast_path_equiv", 40).run(|g| {
+            let fire = *g.choice(&[FireMode::EndOfStep, FireMode::Immediate]);
+            let leak = *g.choice(&[
+                LeakMode::PerTimestep,
+                LeakMode::PerRow { row_len: 28 },
+                LeakMode::PerRow { row_len: 112 },
+            ]);
+            let prune = *g.choice(&[
+                PruneMode::Off,
+                PruneMode::AfterFires { after_spikes: 1 },
+                PruneMode::AfterFires { after_spikes: 3 },
+            ]);
+            // Widths that divide 28 keep PerRow's alignment contract.
+            let k = *g.choice(&[1usize, 2, 4, 7, 14, 28]);
+            // Occasionally squeeze the accumulator so the saturating adder
+            // actually clamps — the fast path must count those events and
+            // clamp per-add exactly like the cycle path.
+            let squeeze = g.rng.below(3) == 0;
+            let cfg = SnnConfig::paper()
+                .with_timesteps(g.rng.range_i32(1, 6) as u32)
+                .with_fire_mode(fire)
+                .with_leak_mode(leak)
+                .with_prune(prune)
+                .with_v_th(if squeeze { 120 } else { g.rng.range_i32(80, 300) })
+                .with_decay_shift(g.rng.range_i32(1, 5) as u32);
+            let cfg = if squeeze { SnnConfig { acc_bits: 9, ..cfg } } else { cfg };
+            let w = if squeeze {
+                // Hot uniform drive against a 9-bit accumulator saturates.
+                WeightMatrix::from_rows(784, 10, 9, vec![120; 7840]).unwrap()
+            } else {
+                test_weights(g.rng.next_u32())
+            };
+            let img = DigitGen::new(g.rng.next_u32()).sample(g.rng.below(10) as u8, g.rng.below(20));
+            let seed = g.rng.next_u32();
+
+            let slow = RtlCore::new(cfg.clone(), w.clone())
+                .unwrap()
+                .with_pixels_per_cycle(k)
+                .run(&img, seed)
+                .unwrap();
+            let fast = RtlCore::new(cfg.clone(), w)
+                .unwrap()
+                .with_pixels_per_cycle(k)
+                .run_fast(&img, seed)
+                .unwrap();
+            // With EndOfStep firing the hot drive provably saturates the
+            // 9-bit accumulator during the first step; under Immediate the
+            // mid-phase resets can keep it below the rail, so only the
+            // equality check applies there.
+            if squeeze && fire == FireMode::EndOfStep {
+                assert!(
+                    fast.activity.saturations > 0,
+                    "squeeze case must exercise the saturating adder"
+                );
+            }
+            assert_eq!(
+                slow, fast,
+                "fast path diverges (fire={fire:?} leak={leak:?} prune={prune:?} k={k})"
+            );
+        });
+    }
+
+    #[test]
+    fn fast_path_leaves_core_reusable_and_done() {
+        // Back-to-back windows on one core must be independent on both
+        // paths, and the fast path must leave the FSM observable as Done.
+        let cfg = SnnConfig::paper().with_timesteps(3);
+        let img = DigitGen::new(1).sample(5, 1);
+        let mut core = RtlCore::new(cfg.clone(), test_weights(3)).unwrap();
+        let a = core.run_fast(&img, 7).unwrap();
+        assert_eq!(core.state(), CtrlState::Done);
+        let b = core.run_fast(&img, 7).unwrap();
+        assert_eq!(a, b, "fast path must be stateless across windows");
+        let c = core.run(&img, 7).unwrap();
+        assert_eq!(a, c, "interleaved cycle path must agree");
+        assert_eq!(core.total_activity().cycles, 3 * 786 * 3);
+    }
+
+    #[test]
+    fn fast_path_falls_back_under_vcd() {
+        let cfg = SnnConfig::paper().with_timesteps(2);
+        let img = DigitGen::new(1).sample(4, 0);
+        let mut plain = RtlCore::new(cfg.clone(), test_weights(5)).unwrap();
+        let want = plain.run_fast(&img, 9).unwrap();
+        let mut core = RtlCore::new(cfg, test_weights(5)).unwrap();
+        core.attach_vcd(VcdWriter::new(10, 25));
+        let got = core.run_fast(&img, 9).unwrap();
+        assert_eq!(want, got);
+        let vcd = core.detach_vcd().unwrap().finish();
+        assert!(vcd.matches('#').count() > 10, "VCD must still capture every cycle");
     }
 
     #[test]

@@ -55,6 +55,36 @@ impl RtlPoissonEncoder {
         u32::from(self.intensities[p]) > (next & 0xFF)
     }
 
+    /// Bulk variant of [`RtlPoissonEncoder::tick_pixel`] for the fast path:
+    /// advance every PRNG register in `start..end` and append the indices
+    /// of spiking pixels to `active` (not cleared). Records exactly the
+    /// same [`ActivityCounters`] events as `end - start` `tick_pixel` calls
+    /// (the counter sums are order-independent), but keeps the running
+    /// toggle total in a register instead of read-modify-writing the
+    /// counter struct per pixel.
+    pub fn tick_range_into(
+        &mut self,
+        start: usize,
+        end: usize,
+        active: &mut Vec<u32>,
+        act: &mut ActivityCounters,
+    ) {
+        debug_assert!(start <= end && end <= self.states.len());
+        let mut toggles = 0u64;
+        for p in start..end {
+            let prev = self.states[p];
+            let next = xorshift32_step(prev);
+            toggles += u64::from((prev ^ next).count_ones());
+            self.states[p] = next;
+            if u32::from(self.intensities[p]) > (next & 0xFF) {
+                active.push(p as u32);
+            }
+        }
+        act.reg_toggles += toggles;
+        act.prng_steps += (end - start) as u64;
+        act.compares += (end - start) as u64;
+    }
+
     /// Current PRNG register values (observability for tests/waveforms).
     pub fn states(&self) -> &[u32] {
         &self.states
@@ -104,6 +134,33 @@ mod tests {
         enc.load(&img.pixels, 5, &mut act);
         let second: Vec<bool> = (0..IMG_PIXELS).map(|p| enc.tick_pixel(p, &mut act)).collect();
         assert_eq!(first, second);
+    }
+
+    #[test]
+    fn tick_range_matches_tick_pixel() {
+        let img = DigitGen::new(3).sample(4, 1);
+        let mut a = RtlPoissonEncoder::new(IMG_PIXELS);
+        let mut b = RtlPoissonEncoder::new(IMG_PIXELS);
+        let mut act_a = ActivityCounters::default();
+        let mut act_b = ActivityCounters::default();
+        a.load(&img.pixels, 77, &mut act_a);
+        b.load(&img.pixels, 77, &mut act_b);
+        let mut active = Vec::new();
+        for t in 0..8 {
+            // Uneven split exercises the range boundaries.
+            active.clear();
+            b.tick_range_into(0, 300, &mut active, &mut act_b);
+            b.tick_range_into(300, IMG_PIXELS, &mut active, &mut act_b);
+            let mut expect = Vec::new();
+            for p in 0..IMG_PIXELS {
+                if a.tick_pixel(p, &mut act_a) {
+                    expect.push(p as u32);
+                }
+            }
+            assert_eq!(active, expect, "active set diverges at step {t}");
+            assert_eq!(act_a, act_b, "activity diverges at step {t}");
+            assert_eq!(a.states(), b.states(), "PRNG state diverges at step {t}");
+        }
     }
 
     #[test]

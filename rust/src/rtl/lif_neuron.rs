@@ -6,6 +6,17 @@
 //! command word (the decoded control signals for this clock) and `tick`
 //! commits the posedge. All datapath activity is recorded into
 //! [`ActivityCounters`].
+//!
+//! Two representations share the same semantics:
+//!
+//! * [`LifNeuronCore`] — one neuron as an object; the readable reference
+//!   model, kept for unit tests and documentation.
+//! * [`LifNeuronArray`] — the whole output layer as a structure-of-arrays
+//!   (flat `acc` / `spike_count` buffers plus a `u64` enable bitmask).
+//!   This is what [`crate::rtl::RtlCore`] actually runs: the per-cycle
+//!   inner loops walk contiguous memory and skip disabled neurons by bit
+//!   iteration instead of dispatching through an object array. The two are
+//!   proven activity- and state-equivalent by the property test below.
 
 use crate::config::SnnConfig;
 use crate::fixed::leak;
@@ -142,6 +153,191 @@ impl LifNeuronCore {
     }
 }
 
+// ---------------------------------------------------------------------------
+
+/// The whole output layer as a structure-of-arrays.
+///
+/// State layout: flat `acc` / `spike_count` vectors plus a `u64` enable
+/// bitmask (bit `j` = neuron `j` enabled). Supports at most 64 neurons —
+/// enforced by [`crate::rtl::RtlCore::new`] (the paper's layer has 10).
+///
+/// Every mutator records exactly the [`ActivityCounters`] events the
+/// per-neuron [`LifNeuronCore::tick`] would: adds, per-add saturations,
+/// shift-subtract leaks, comparator evaluations and the Hamming distance of
+/// every register write. Bit-exactness against a `Vec<LifNeuronCore>` is
+/// pinned by `array_matches_core_reference` below.
+#[derive(Debug, Clone)]
+pub struct LifNeuronArray {
+    acc: Vec<i32>,
+    spike_count: Vec<u32>,
+    /// Enable latches (bit `j` = `en_j`); cleared by the pruning mask.
+    enabled: u64,
+    acc_max: i32,
+    decay_shift: u32,
+    v_th: i32,
+    v_rest: i32,
+}
+
+impl LifNeuronArray {
+    pub fn new(cfg: &SnnConfig) -> Self {
+        assert!(cfg.n_outputs <= 64, "LifNeuronArray supports at most 64 neurons");
+        LifNeuronArray {
+            acc: vec![cfg.v_rest; cfg.n_outputs],
+            spike_count: vec![0; cfg.n_outputs],
+            enabled: Self::full_mask(cfg.n_outputs),
+            acc_max: cfg.acc_max(),
+            decay_shift: cfg.decay_shift,
+            v_th: cfg.v_th,
+            v_rest: cfg.v_rest,
+        }
+    }
+
+    fn full_mask(n: usize) -> u64 {
+        if n >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << n) - 1
+        }
+    }
+
+    /// Number of neurons.
+    pub fn len(&self) -> usize {
+        self.acc.len()
+    }
+
+    /// True when the layer has no neurons (never for valid configs).
+    pub fn is_empty(&self) -> bool {
+        self.acc.is_empty()
+    }
+
+    /// Membrane potential of neuron `j`.
+    pub fn acc(&self, j: usize) -> i32 {
+        self.acc[j]
+    }
+
+    /// All membrane potentials.
+    pub fn membranes(&self) -> Vec<i32> {
+        self.acc.clone()
+    }
+
+    /// All spike-count registers.
+    pub fn spike_counts(&self) -> &[u32] {
+        &self.spike_count
+    }
+
+    /// Enable latch of neuron `j`.
+    pub fn enabled(&self, j: usize) -> bool {
+        (self.enabled >> j) & 1 == 1
+    }
+
+    /// True while at least one neuron is still enabled.
+    pub fn any_enabled(&self) -> bool {
+        self.enabled != 0
+    }
+
+    /// Drive the enable latches from the controller's pruning mask.
+    pub fn set_enables(&mut self, enables: &[bool]) {
+        debug_assert_eq!(enables.len(), self.acc.len());
+        let mut mask = 0u64;
+        for (j, &e) in enables.iter().enumerate() {
+            mask |= u64::from(e) << j;
+        }
+        self.enabled = mask;
+    }
+
+    #[inline(always)]
+    fn write_acc(&mut self, j: usize, next: i32, act: &mut ActivityCounters) {
+        act.reg_toggles += u64::from(((self.acc[j] as u32) ^ (next as u32)).count_ones());
+        self.acc[j] = next;
+    }
+
+    /// Synchronous reset of every neuron (new inference window); re-enables
+    /// the whole array, like `NeuronCtrl::Reset` on each core.
+    pub fn reset(&mut self, act: &mut ActivityCounters) {
+        for j in 0..self.acc.len() {
+            self.write_acc(j, self.v_rest, act);
+        }
+        self.spike_count.fill(0);
+        self.enabled = Self::full_mask(self.acc.len());
+    }
+
+    /// One BRAM row pulse: integrate `row[j]` into every *enabled* neuron
+    /// with per-add saturation (ascending `j`, like the adder-tree fanout).
+    #[inline]
+    pub fn add_row(&mut self, row: &[i32], act: &mut ActivityCounters) {
+        debug_assert_eq!(row.len(), self.acc.len());
+        let mut m = self.enabled;
+        while m != 0 {
+            let j = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let sum = i64::from(self.acc[j]) + i64::from(row[j]);
+            let clamped = sum.clamp(-i64::from(self.acc_max), i64::from(self.acc_max)) as i32;
+            if i64::from(clamped) != sum {
+                act.saturations += 1;
+            }
+            act.adds += 1;
+            self.write_acc(j, clamped, act);
+        }
+    }
+
+    /// One `Leak` clock: shift-subtract decay on every enabled neuron.
+    #[inline]
+    pub fn leak_enabled(&mut self, act: &mut ActivityCounters) {
+        let mut m = self.enabled;
+        while m != 0 {
+            let j = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let next = leak(self.acc[j], self.decay_shift);
+            act.shifts += 1;
+            act.adds += 1; // the subtract half of shift-subtract
+            self.write_acc(j, next, act);
+        }
+    }
+
+    /// One `Fire` clock (`FireMode::EndOfStep`): evaluate the threshold
+    /// comparator of every enabled neuron, setting `fired[j]` and
+    /// hard-resetting on a crossing. `fired` must be pre-cleared.
+    pub fn fire_check(&mut self, fired: &mut [bool], act: &mut ActivityCounters) {
+        debug_assert_eq!(fired.len(), self.acc.len());
+        let mut m = self.enabled;
+        while m != 0 {
+            let j = m.trailing_zeros() as usize;
+            m &= m - 1;
+            act.compares += 1;
+            if self.acc[j] >= self.v_th {
+                fired[j] = true;
+                self.spike_count[j] += 1;
+                act.reg_toggles += 1; // spike-count increment (approx.)
+                self.write_acc(j, self.v_rest, act);
+            }
+        }
+    }
+
+    /// Mid-integration combinational fire (`FireMode::Immediate`): only
+    /// neurons whose accumulator is at/above threshold commit a `FireCheck`
+    /// (and its comparator activity), exactly like the cycle path's
+    /// `above_threshold()` pre-gate. Returns true when any neuron fired.
+    /// `fired` must be pre-cleared.
+    pub fn immediate_fire(&mut self, fired: &mut [bool], act: &mut ActivityCounters) -> bool {
+        debug_assert_eq!(fired.len(), self.acc.len());
+        let mut any = false;
+        let mut m = self.enabled;
+        while m != 0 {
+            let j = m.trailing_zeros() as usize;
+            m &= m - 1;
+            if self.acc[j] >= self.v_th {
+                act.compares += 1;
+                fired[j] = true;
+                any = true;
+                self.spike_count[j] += 1;
+                act.reg_toggles += 1;
+                self.write_acc(j, self.v_rest, act);
+            }
+        }
+        any
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -222,5 +418,88 @@ mod tests {
         let mut n = LifNeuronCore::new(&cfg());
         n.tick(NeuronCtrl::Add { weight: 0b1111 }, &mut act);
         assert_eq!(act.reg_toggles, 4); // 0 -> 0b1111 toggles 4 bits
+    }
+
+    /// The SoA array and a `Vec<LifNeuronCore>` must stay state- and
+    /// activity-identical under random command streams — the foundation of
+    /// the RTL core's fast path.
+    #[test]
+    fn array_matches_core_reference() {
+        use crate::testutil::PropRunner;
+
+        PropRunner::new("lif_array_equiv", 60).run(|g| {
+            let n = g.rng.range_i32(1, 12) as usize;
+            let cfg = SnnConfig {
+                n_outputs: n,
+                v_th: g.rng.range_i32(5, 60),
+                decay_shift: g.rng.range_i32(1, 4) as u32,
+                // Narrow accumulator so per-add saturation gets exercised.
+                acc_bits: g.rng.range_i32(8, 16) as u32,
+                ..SnnConfig::paper()
+            };
+            let mut array = LifNeuronArray::new(&cfg);
+            let mut cores: Vec<LifNeuronCore> =
+                (0..n).map(|_| LifNeuronCore::new(&cfg)).collect();
+            let mut act_a = ActivityCounters::default();
+            let mut act_c = ActivityCounters::default();
+            let mut fired_a = vec![false; n];
+
+            for _ in 0..120 {
+                match g.rng.below(6) {
+                    0 => {
+                        let row = g.vec_i32(n, -120, 120);
+                        array.add_row(&row, &mut act_a);
+                        for (j, c) in cores.iter_mut().enumerate() {
+                            c.tick(NeuronCtrl::Add { weight: row[j] }, &mut act_c);
+                        }
+                    }
+                    1 => {
+                        array.leak_enabled(&mut act_a);
+                        for c in cores.iter_mut() {
+                            c.tick(NeuronCtrl::Leak, &mut act_c);
+                        }
+                    }
+                    2 => {
+                        fired_a.fill(false);
+                        array.fire_check(&mut fired_a, &mut act_a);
+                        for (j, c) in cores.iter_mut().enumerate() {
+                            let f = c.tick(NeuronCtrl::FireCheck, &mut act_c);
+                            assert_eq!(fired_a[j], f, "fire wire diverges at {j}");
+                        }
+                    }
+                    3 => {
+                        fired_a.fill(false);
+                        array.immediate_fire(&mut fired_a, &mut act_a);
+                        for (j, c) in cores.iter_mut().enumerate() {
+                            let mut f = false;
+                            if c.enabled() && c.above_threshold() {
+                                f = c.tick(NeuronCtrl::FireCheck, &mut act_c);
+                            }
+                            assert_eq!(fired_a[j], f, "immediate fire diverges at {j}");
+                        }
+                    }
+                    4 => {
+                        let enables: Vec<bool> =
+                            (0..n).map(|_| g.rng.next_u32() & 1 == 1).collect();
+                        array.set_enables(&enables);
+                        for (c, &e) in cores.iter_mut().zip(&enables) {
+                            c.set_enabled(e);
+                        }
+                    }
+                    _ => {
+                        array.reset(&mut act_a);
+                        for c in cores.iter_mut() {
+                            c.tick(NeuronCtrl::Reset, &mut act_c);
+                        }
+                    }
+                }
+                for (j, c) in cores.iter().enumerate() {
+                    assert_eq!(array.acc(j), c.acc(), "membrane diverges at {j}");
+                    assert_eq!(array.spike_counts()[j], c.spike_count(), "count at {j}");
+                    assert_eq!(array.enabled(j), c.enabled(), "enable at {j}");
+                }
+                assert_eq!(act_a, act_c, "activity counters diverge");
+            }
+        });
     }
 }

@@ -43,6 +43,15 @@
 //! energy with documented 45 nm per-op constants, which is how the pruning
 //! mechanism's power claim is quantified.
 //!
+//! ## Execution engines
+//!
+//! The core offers two engines over one architectural state: the
+//! cycle-stepped FSM walk ([`RtlCore::tick_cycle`] / [`RtlCore::run`]) and
+//! the batched-timestep fast path ([`RtlCore::run_fast`]) that the serving
+//! backend uses. The fast path is bit- and activity-exact with the cycle
+//! path (property-tested across all mode combinations) — see
+//! EXPERIMENTS.md §Perf for the equivalence argument and measured speedup.
+//!
 //! ## Equivalence to the behavioral model
 //!
 //! In `FireMode::EndOfStep` + `LeakMode::PerTimestep` the core is
@@ -64,6 +73,6 @@ mod vcd;
 pub use controller::{CtrlState, LayerController};
 pub use core::{RtlCore, RtlResult};
 pub use encoder::RtlPoissonEncoder;
-pub use lif_neuron::{LifNeuronCore, NeuronCtrl};
+pub use lif_neuron::{LifNeuronArray, LifNeuronCore, NeuronCtrl};
 pub use power::{ActivityCounters, EnergyModel, EnergyReport};
 pub use vcd::VcdWriter;

@@ -57,6 +57,21 @@ impl ActivityCounters {
         self.cycles += o.cycles;
         self.saturations += o.saturations;
     }
+
+    /// Element-wise difference against an earlier snapshot (per-window
+    /// deltas from cumulative counters).
+    pub fn since(&self, start: &ActivityCounters) -> ActivityCounters {
+        ActivityCounters {
+            adds: self.adds - start.adds,
+            shifts: self.shifts - start.shifts,
+            compares: self.compares - start.compares,
+            bram_reads: self.bram_reads - start.bram_reads,
+            prng_steps: self.prng_steps - start.prng_steps,
+            reg_toggles: self.reg_toggles - start.reg_toggles,
+            cycles: self.cycles - start.cycles,
+            saturations: self.saturations - start.saturations,
+        }
+    }
 }
 
 /// Per-op energy constants in picojoules (see module docs for provenance).
@@ -144,6 +159,24 @@ mod tests {
         let r2 = m.evaluate(&a2);
         assert!((r2.dynamic_nj - 2.0 * r1.dynamic_nj).abs() < 1e-12);
         assert!((r2.static_nj - 2.0 * r1.static_nj).abs() < 1e-12);
+    }
+
+    #[test]
+    fn since_inverts_add() {
+        let start = ActivityCounters { adds: 3, cycles: 9, reg_toggles: 2, ..Default::default() };
+        let mut total = start;
+        let window = ActivityCounters {
+            adds: 10,
+            shifts: 20,
+            compares: 30,
+            bram_reads: 5,
+            prng_steps: 6,
+            reg_toggles: 7,
+            cycles: 8,
+            saturations: 9,
+        };
+        total.add(&window);
+        assert_eq!(total.since(&start), window);
     }
 
     #[test]

@@ -7,9 +7,19 @@
 //! `Literal` inputs. Text is the interchange format because jax ≥ 0.5
 //! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
 //! rejects (see /opt/xla-example/README.md).
+//!
+//! The `xla` crate is not part of the offline crate set, so the real
+//! backend only compiles under the off-by-default `xla` cargo feature; the
+//! default build substitutes an API-compatible stub whose `load` fails
+//! cleanly (every caller already handles artifacts being unavailable).
 
 mod manifest;
+
+#[cfg(feature = "xla")]
+mod xla_backend;
+#[cfg(not(feature = "xla"))]
+#[path = "xla_stub.rs"]
 mod xla_backend;
 
 pub use manifest::Manifest;
-pub use xla_backend::XlaSnn;
+pub use xla_backend::{SnnChunkState, XlaSnn};

@@ -16,6 +16,12 @@ use crate::SnnConfig;
 
 use super::manifest::Manifest;
 
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
 /// Convert raw little-endian data into a Literal of the given shape.
 fn literal(ty: xla::ElementType, dims: &[usize], bytes: &[u8]) -> Result<xla::Literal> {
     xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes).map_err(Error::from)

@@ -1,0 +1,110 @@
+//! API-compatible stand-in for [`super::xla_backend`] when the crate is
+//! built without the `xla` feature (the offline default).
+//!
+//! [`XlaSnn::load`] always fails with [`Error::Xla`], and the struct is
+//! uninhabited (it carries a [`Never`] field), so every other method is
+//! statically unreachable — the stub costs nothing and cannot lie about
+//! results. Callers already treat "XLA unavailable" as a skippable
+//! condition (benches print a notice, tests gate on the artifacts dir,
+//! `snn-rtl --backend xla` reports the error).
+
+use std::path::Path;
+
+use crate::data::Image;
+use crate::error::{Error, Result};
+use crate::SnnConfig;
+
+use super::manifest::Manifest;
+
+/// Uninhabited type: makes the stub structs impossible to construct.
+#[derive(Debug, Clone, Copy)]
+enum Never {}
+
+/// In-flight state of a chunked (early-exit) batch. Stub: never exists.
+pub struct SnnChunkState {
+    /// Timesteps executed so far.
+    pub steps_run: u32,
+    /// Logical batch occupancy (rows beyond this are padding).
+    pub occupancy: usize,
+    #[allow(dead_code)]
+    never: Never,
+}
+
+/// The PJRT-backed SNN + baseline ANN. Stub: construction always fails.
+pub struct XlaSnn {
+    pub manifest: Manifest,
+    never: Never,
+}
+
+impl XlaSnn {
+    /// Always fails: the crate was built without the `xla` feature.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = artifacts_dir;
+        Err(Error::Xla(
+            "this build has no PJRT runtime (compiled without the `xla` cargo feature); \
+             use the `behavioral` or `rtl` backend"
+                .into(),
+        ))
+    }
+
+    /// The architectural config baked into the executables.
+    pub fn config(&self) -> &SnnConfig {
+        match self.never {}
+    }
+
+    /// Compiled forward batch sizes, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        match self.never {}
+    }
+
+    /// Chunk granularity of the early-exit path (timesteps per chunk).
+    pub fn chunk_steps(&self) -> u32 {
+        match self.never {}
+    }
+
+    /// Batch capacity of the chunked executable.
+    pub fn chunk_batch(&self) -> usize {
+        match self.never {}
+    }
+
+    /// Classify a batch over the full compiled window.
+    pub fn spike_counts(&self, images: &[&Image], seeds: &[u32]) -> Result<Vec<Vec<u32>>> {
+        let _ = (images, seeds);
+        match self.never {}
+    }
+
+    /// Start a chunked inference.
+    pub fn chunk_start(&self, images: &[&Image], seeds: &[u32]) -> Result<SnnChunkState> {
+        let _ = (images, seeds);
+        match self.never {}
+    }
+
+    /// Advance one chunk.
+    pub fn chunk_advance(&self, st: &mut SnnChunkState) -> Result<Vec<Vec<u32>>> {
+        let _ = st;
+        match self.never {}
+    }
+
+    /// Baseline ANN logits for a batch.
+    pub fn ann_logits(&self, images: &[&Image]) -> Result<Vec<Vec<f32>>> {
+        let _ = images;
+        match self.never {}
+    }
+
+    /// Reference seeding helper exposed for tests.
+    pub fn debug_first_state(&self, seed: u32) -> u32 {
+        let _ = seed;
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = XlaSnn::load("artifacts").err().expect("stub load must fail");
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+}

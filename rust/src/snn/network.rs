@@ -5,6 +5,7 @@ use crate::data::Image;
 use crate::error::Result;
 use crate::fixed::WeightMatrix;
 use crate::snn::{LifLayer, PoissonEncoder, StepTrace};
+use crate::util::priority_argmax;
 
 /// Early-termination policy applied between timesteps (the serving-level
 /// generalization of the paper's active-pruning idea: stop paying for
@@ -48,7 +49,7 @@ impl Classification {
         first_spike: &[Option<u32>],
     ) -> u8 {
         match policy {
-            DecisionPolicy::SpikeCount => argmax(spike_counts) as u8,
+            DecisionPolicy::SpikeCount => priority_argmax(spike_counts) as u8,
             DecisionPolicy::FirstSpike => {
                 let mut best: Option<(u32, usize)> = None;
                 for (j, fs) in first_spike.iter().enumerate() {
@@ -60,21 +61,11 @@ impl Classification {
                 }
                 match best {
                     Some((_, j)) => j as u8,
-                    None => argmax(spike_counts) as u8,
+                    None => priority_argmax(spike_counts) as u8,
                 }
             }
         }
     }
-}
-
-fn argmax(xs: &[u32]) -> usize {
-    let mut best = 0usize;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > xs[best] {
-            best = i;
-        }
-    }
-    best
 }
 
 /// The behavioral inference backend: weights + config, reusable across
@@ -109,8 +100,31 @@ impl BehavioralNet {
         timesteps: u32,
         early: EarlyExit,
     ) -> Classification {
-        let (c, _) = run_inference(&self.cfg, self.layer.clone(), img, seed, timesteps, early, false);
+        let mut layer = self.layer.clone();
+        let (c, _) = run_inference(&self.cfg, &mut layer, img, seed, timesteps, early, false);
         c
+    }
+
+    /// Classify using a caller-owned layer instance (the pooled serving hot
+    /// path: the backend checks a [`LifLayer`] out of its worker pool and
+    /// reuses its state buffers across requests instead of cloning per
+    /// call). Identical dynamics to [`BehavioralNet::classify_opts`] —
+    /// `run_inference` resets the layer first.
+    pub fn classify_with(
+        &self,
+        layer: &mut LifLayer,
+        img: &Image,
+        seed: u32,
+        timesteps: u32,
+        early: EarlyExit,
+    ) -> Classification {
+        run_inference(&self.cfg, layer, img, seed, timesteps, early, false).0
+    }
+
+    /// A fresh layer instance wired to this net's weights (seed for
+    /// instance pools; cheap — weights are shared behind `Arc`).
+    pub fn layer_prototype(&self) -> LifLayer {
+        self.layer.clone()
     }
 
     /// Classify and capture the full per-step trace (Fig. 4 / goldens).
@@ -120,14 +134,15 @@ impl BehavioralNet {
         seed: u32,
         timesteps: u32,
     ) -> (Classification, Vec<StepTrace>) {
-        run_inference(&self.cfg, self.layer.clone(), img, seed, timesteps, EarlyExit::Off, true)
+        let mut layer = self.layer.clone();
+        run_inference(&self.cfg, &mut layer, img, seed, timesteps, EarlyExit::Off, true)
     }
 }
 
 /// Shared inference loop.
 fn run_inference(
     cfg: &SnnConfig,
-    mut layer: LifLayer,
+    layer: &mut LifLayer,
     img: &Image,
     seed: u32,
     timesteps: u32,
@@ -292,6 +307,27 @@ mod tests {
         let (out, traces) = net.classify_traced(&block_image(1), 3, 12);
         assert_eq!(traces.len(), 12);
         assert_eq!(out.steps_run, 12);
+    }
+
+    #[test]
+    fn pooled_layer_reuse_matches_fresh_clone() {
+        // A single reused layer instance must produce identical results to
+        // per-call clones, including straight after early-exit runs that
+        // leave partial state behind.
+        let cfg = SnnConfig::paper().with_timesteps(12).with_prune(PruneMode::Off);
+        let net = BehavioralNet::new(cfg, block_weights()).unwrap();
+        let mut pooled = net.layer_prototype();
+        for i in 0..12u32 {
+            let img = block_image((i % 10) as usize);
+            let early = if i % 2 == 0 {
+                EarlyExit::Off
+            } else {
+                EarlyExit::Margin { margin: 2, min_steps: 2 }
+            };
+            let fresh = net.classify_opts(&img, 40 + i, 12, early);
+            let reused = net.classify_with(&mut pooled, &img, 40 + i, 12, early);
+            assert_eq!(fresh, reused, "request {i}");
+        }
     }
 
     #[test]

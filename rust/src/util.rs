@@ -1,0 +1,45 @@
+//! Small helpers shared across layers.
+
+/// Priority-encoded argmax: the index of the maximum value, ties broken
+/// toward the **lowest** index — the behaviour of a hardware priority
+/// encoder scanning the spike-count registers from 0 upward.
+///
+/// This is the one argmax every readout path uses (the RTL controller, the
+/// behavioral network and the coordinator backends), so the tie-breaking
+/// contract is defined — and tested — exactly once.
+///
+/// Returns 0 for an empty slice (the encoder's all-zero default).
+#[inline]
+pub fn priority_argmax(xs: &[u32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_the_maximum() {
+        assert_eq!(priority_argmax(&[0, 2, 5, 1]), 2);
+        assert_eq!(priority_argmax(&[9]), 0);
+    }
+
+    #[test]
+    fn ties_break_to_lowest_index() {
+        assert_eq!(priority_argmax(&[0, 0, 0]), 0);
+        assert_eq!(priority_argmax(&[1, 3, 3]), 1);
+        assert_eq!(priority_argmax(&[0, 2, 5, 5]), 2);
+        assert_eq!(priority_argmax(&[7, 0, 7]), 0);
+    }
+
+    #[test]
+    fn empty_defaults_to_zero() {
+        assert_eq!(priority_argmax(&[]), 0);
+    }
+}

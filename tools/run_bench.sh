@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Perf-trajectory bench runner: builds the release binary and emits
+# BENCH_1.json (images/sec for the RTL cycle path vs fast path, plus
+# coordinator throughput at 1/2/4 workers). Pass --quick for a short run.
+#
+#   tools/run_bench.sh [--quick]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+cargo run --release --bin bench-report -- "$@"
+echo "wrote $(pwd)/BENCH_1.json"
