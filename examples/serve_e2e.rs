@@ -13,7 +13,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use snn_rtl::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, Request, XlaBackend,
+    BatchPolicy, Coordinator, CoordinatorConfig, FanoutPolicy, Request, XlaBackend,
 };
 use snn_rtl::data::DigitGen;
 use snn_rtl::prng::Xorshift32;
@@ -50,6 +50,7 @@ fn run_phase(
             queue_depth: 1024,
             batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(2) },
             early,
+            fanout: FanoutPolicy::default(),
         },
     );
     let handle = coord.handle();

@@ -1,12 +1,14 @@
 //! End-to-end coordinator benchmark: request throughput and latency under
-//! closed-loop load across worker counts, batch policies and early-exit
-//! settings — the L3 perf target of DESIGN.md §10.
+//! closed-loop load across worker counts, batch policies, intra-batch
+//! fan-out and early-exit settings — the L3 perf target of DESIGN.md §10,
+//! now with the p99 column the sharded work-stealing ingress is
+//! accountable to.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use snn_rtl::coordinator::{
-    BatchPolicy, BehavioralBackend, Coordinator, CoordinatorConfig, Request,
+    BatchPolicy, BehavioralBackend, Coordinator, CoordinatorConfig, FanoutPolicy, Request,
 };
 use snn_rtl::data::{codec, DigitGen, Image};
 use snn_rtl::runtime::Manifest;
@@ -17,8 +19,10 @@ struct Row {
     qps: f64,
     p50_us: u64,
     p95_us: u64,
+    p99_us: u64,
     mean_batch: f64,
     steps_per_req: f64,
+    steals: u64,
 }
 
 fn drive(name: &str, coord: &Coordinator, images: &[Image], requests: usize) -> Row {
@@ -47,9 +51,19 @@ fn drive(name: &str, coord: &Coordinator, images: &[Image], requests: usize) -> 
         qps: requests as f64 / wall.as_secs_f64(),
         p50_us: snap.latency_p50_us,
         p95_us: snap.latency_p95_us,
+        p99_us: snap.latency_p99_us,
         mean_batch: snap.mean_batch_size,
         steps_per_req: snap.steps_executed as f64 / requests as f64,
+        steals: snap.steals,
     }
+}
+
+fn print_row(r: &Row) {
+    println!(
+        "{:<30} {:>9.0} req/s  p50 {:>6} µs  p95 {:>6} µs  p99 {:>6} µs  batch {:>5.2}  \
+         steps/req {:>5.1}  steals {:>4}",
+        r.name, r.qps, r.p50_us, r.p95_us, r.p99_us, r.mean_batch, r.steps_per_req, r.steals
+    );
 }
 
 fn main() {
@@ -64,7 +78,8 @@ fn main() {
     let requests = 4000usize;
     let mut rows = Vec::new();
 
-    for workers in [1usize, 2, 4] {
+    // Worker scaling over the sharded work-stealing ingress.
+    for workers in [1usize, 2, 4, 8] {
         for max_batch in [1usize, 8] {
             let backend = Arc::new(
                 BehavioralBackend::new(cfg.clone(), weights.weights.clone()).unwrap(),
@@ -76,17 +91,39 @@ fn main() {
                     queue_depth: 2048,
                     batch: BatchPolicy { max_batch, max_delay: Duration::from_micros(500) },
                     early: EarlyExit::Off,
+                    fanout: FanoutPolicy::default(),
                 },
             );
             let name = format!("behavioral_w{workers}_b{max_batch}");
             let row = drive(&name, &coord, &images, requests);
             coord.shutdown();
-            println!(
-                "{:<28} {:>9.0} req/s  p50 {:>6} µs  p95 {:>6} µs  batch {:>5.2}  steps/req {:>5.1}",
-                row.name, row.qps, row.p50_us, row.p95_us, row.mean_batch, row.steps_per_req
-            );
+            print_row(&row);
             rows.push(row);
         }
+    }
+
+    // Intra-batch fan-out on large batches: same load, fan-out off vs on.
+    for (tag, fanout) in [
+        ("fanout_off", FanoutPolicy::off()),
+        ("fanout_on", FanoutPolicy { min_batch: 32, max_parts: 4 }),
+    ] {
+        let backend =
+            Arc::new(BehavioralBackend::new(cfg.clone(), weights.weights.clone()).unwrap());
+        let coord = Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                workers: 4,
+                queue_depth: 2048,
+                batch: BatchPolicy { max_batch: 64, max_delay: Duration::from_micros(500) },
+                early: EarlyExit::Off,
+                fanout,
+            },
+        );
+        let name = format!("behavioral_w4_b64_{tag}");
+        let row = drive(&name, &coord, &images, requests);
+        coord.shutdown();
+        print_row(&row);
+        rows.push(row);
     }
 
     // Early exit on the behavioral backend.
@@ -100,23 +137,22 @@ fn main() {
                 queue_depth: 2048,
                 batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_micros(500) },
                 early: EarlyExit::Margin { margin: 2, min_steps: 3 },
+                fanout: FanoutPolicy::default(),
             },
         );
         let row = drive("behavioral_early_exit", &coord, &images, requests);
         coord.shutdown();
-        println!(
-            "{:<28} {:>9.0} req/s  p50 {:>6} µs  p95 {:>6} µs  batch {:>5.2}  steps/req {:>5.1}",
-            row.name, row.qps, row.p50_us, row.p95_us, row.mean_batch, row.steps_per_req
-        );
+        print_row(&row);
         rows.push(row);
     }
 
     std::fs::create_dir_all("results").ok();
-    let mut body = String::from("name,qps,p50_us,p95_us,mean_batch,steps_per_req\n");
+    let mut body =
+        String::from("name,qps,p50_us,p95_us,p99_us,mean_batch,steps_per_req,steals\n");
     for r in &rows {
         body.push_str(&format!(
-            "{},{:.0},{},{},{:.2},{:.2}\n",
-            r.name, r.qps, r.p50_us, r.p95_us, r.mean_batch, r.steps_per_req
+            "{},{:.0},{},{},{},{:.2},{:.2},{}\n",
+            r.name, r.qps, r.p50_us, r.p95_us, r.p99_us, r.mean_batch, r.steps_per_req, r.steals
         ));
     }
     std::fs::write("results/bench_coordinator.csv", body).ok();

@@ -2,22 +2,26 @@
 //!
 //! Measures, on synthetic weights/digits (no artifacts needed):
 //!
-//! * images/sec of the RTL **cycle path** (`RtlCore::run`),
-//! * images/sec of the RTL **fast path** (`RtlCore::run_fast`),
-//! * end-to-end coordinator throughput over the pooled fast-path
-//!   `RtlBackend` at 1 / 2 / 4 workers,
+//! * images/sec of the RTL **cycle path** (`RtlCore::run`) and **fast
+//!   path** (`RtlCore::run_fast`),
+//! * end-to-end coordinator qps **and latency percentiles** over the
+//!   pooled fast-path `RtlBackend` at 1 / 2 / 4 / 8 workers on the
+//!   sharded work-stealing ingress,
+//! * p50/p99 for large (≥ 32) batches with intra-batch fan-out off vs on
+//!   — the latency (not just throughput) acceptance number of the
+//!   sharded-ingress PR,
 //!
-//! and writes the results to `BENCH_1.json` (plus stdout). The JSON seeds
-//! the repository's performance trajectory: the fast-path speedup and the
-//! multi-worker scaling curve are the acceptance numbers of the fast-path
-//! engine PR (EXPERIMENTS.md §Perf).
+//! and writes the results to `BENCH_2.json` (plus stdout). `BENCH_1.json`
+//! (from the fast-path PR) recorded qps only; BENCH_2 supersedes it with
+//! the percentile columns the sharded ingress is accountable to
+//! (EXPERIMENTS.md §Perf, "Sharded ingress").
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use snn_rtl::bench::{black_box, Bench};
 use snn_rtl::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, Request, RtlBackend,
+    BatchPolicy, Coordinator, CoordinatorConfig, FanoutPolicy, Request, RtlBackend,
 };
 use snn_rtl::data::{DigitGen, Image};
 use snn_rtl::fixed::WeightMatrix;
@@ -32,16 +36,25 @@ fn weights(seed: u32) -> WeightMatrix {
         .unwrap()
 }
 
-fn coordinator_qps(cfg: &SnnConfig, workers: usize, requests: usize, images: &[Image]) -> f64 {
+struct CoordRow {
+    qps: f64,
+    p50_us: u64,
+    p99_us: u64,
+    steals: u64,
+}
+
+fn drive_coordinator(
+    cfg: &SnnConfig,
+    workers: usize,
+    batch: BatchPolicy,
+    fanout: FanoutPolicy,
+    requests: usize,
+    images: &[Image],
+) -> CoordRow {
     let backend = Arc::new(RtlBackend::new(cfg.clone(), weights(7)).unwrap());
     let coord = Coordinator::start(
         backend,
-        CoordinatorConfig {
-            workers,
-            queue_depth: 2048,
-            batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_micros(500) },
-            early: EarlyExit::Off,
-        },
+        CoordinatorConfig { workers, queue_depth: 2048, batch, early: EarlyExit::Off, fanout },
     );
     let handle = coord.handle();
     let t0 = Instant::now();
@@ -62,8 +75,9 @@ fn coordinator_qps(cfg: &SnnConfig, workers: usize, requests: usize, images: &[I
         rx.recv().unwrap().unwrap();
     }
     let qps = requests as f64 / t0.elapsed().as_secs_f64();
+    let snap = coord.metrics().snapshot();
     coord.shutdown();
-    qps
+    CoordRow { qps, p50_us: snap.latency_p50_us, p99_us: snap.latency_p99_us, steals: snap.steals }
 }
 
 fn main() {
@@ -91,29 +105,84 @@ fn main() {
     println!("{}  |  {cycle_ips:.1} images/s", cycle.report());
     println!("{}  |  {fast_ips:.1} images/s  ({speedup:.1}x)", fast.report());
 
-    // Coordinator scaling over the pooled fast-path backend.
+    // Worker scaling over the sharded ingress (small batches: throughput
+    // and tail latency of the steady-state serving path).
     let images: Vec<Image> = (0..32).map(|i| gen.sample((i % 10) as u8, i / 10)).collect();
     let requests = if quick { 128 } else { 512 };
-    let mut qps = Vec::new();
-    for workers in [1usize, 2, 4] {
-        let q = coordinator_qps(&cfg, workers, requests, &images);
-        println!("coordinator_rtl_w{workers}: {q:.0} req/s");
-        qps.push((workers, q));
+    let small_batch = BatchPolicy { max_batch: 8, max_delay: Duration::from_micros(500) };
+    let mut scaling = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let row = drive_coordinator(
+            &cfg,
+            workers,
+            small_batch,
+            FanoutPolicy::default(),
+            requests,
+            &images,
+        );
+        println!(
+            "coordinator_rtl_w{workers}: {:.0} req/s  p50 {} µs  p99 {} µs  steals {}",
+            row.qps, row.p50_us, row.p99_us, row.steals
+        );
+        scaling.push((workers, row));
     }
+
+    // Intra-batch fan-out: one worker stream of large (>= 32) batches; the
+    // fan-out path must cut p99 against the single-engine baseline.
+    let big_batch = BatchPolicy { max_batch: 64, max_delay: Duration::from_micros(500) };
+    let fan_requests = if quick { 256 } else { 1024 };
+    let fan_off = drive_coordinator(
+        &cfg,
+        4,
+        big_batch,
+        FanoutPolicy::off(),
+        fan_requests,
+        &images,
+    );
+    let fan_on = drive_coordinator(
+        &cfg,
+        4,
+        big_batch,
+        FanoutPolicy { min_batch: 32, max_parts: 4 },
+        fan_requests,
+        &images,
+    );
+    println!(
+        "large_batch_fanout_off: {:.0} req/s  p50 {} µs  p99 {} µs",
+        fan_off.qps, fan_off.p50_us, fan_off.p99_us
+    );
+    println!(
+        "large_batch_fanout_on:  {:.0} req/s  p50 {} µs  p99 {} µs",
+        fan_on.qps, fan_on.p50_us, fan_on.p99_us
+    );
 
     // Hand-rolled JSON (no serde in the offline crate set).
     let mut json = String::from("{\n");
-    json.push_str("  \"bench\": \"BENCH_1\",\n");
+    json.push_str("  \"bench\": \"BENCH_2\",\n");
     json.push_str("  \"config\": \"paper_t10\",\n");
     json.push_str(&format!("  \"rtl_cycle_images_per_s\": {cycle_ips:.2},\n"));
     json.push_str(&format!("  \"rtl_fast_images_per_s\": {fast_ips:.2},\n"));
     json.push_str(&format!("  \"fast_path_speedup\": {speedup:.2},\n"));
-    json.push_str("  \"coordinator_rtl_qps\": {\n");
-    for (i, (workers, q)) in qps.iter().enumerate() {
-        let comma = if i + 1 == qps.len() { "" } else { "," };
-        json.push_str(&format!("    \"workers_{workers}\": {q:.2}{comma}\n"));
+    json.push_str("  \"coordinator_rtl\": {\n");
+    for (i, (workers, row)) in scaling.iter().enumerate() {
+        let comma = if i + 1 == scaling.len() { "" } else { "," };
+        json.push_str(&format!(
+            "    \"workers_{workers}\": {{ \"qps\": {:.2}, \"p50_us\": {}, \"p99_us\": {}, \
+             \"steals\": {} }}{comma}\n",
+            row.qps, row.p50_us, row.p99_us, row.steals
+        ));
     }
+    json.push_str("  },\n");
+    json.push_str("  \"large_batch_b64_w4\": {\n");
+    json.push_str(&format!(
+        "    \"fanout_off\": {{ \"qps\": {:.2}, \"p50_us\": {}, \"p99_us\": {} }},\n",
+        fan_off.qps, fan_off.p50_us, fan_off.p99_us
+    ));
+    json.push_str(&format!(
+        "    \"fanout_on\": {{ \"qps\": {:.2}, \"p50_us\": {}, \"p99_us\": {} }}\n",
+        fan_on.qps, fan_on.p50_us, fan_on.p99_us
+    ));
     json.push_str("  }\n}\n");
-    std::fs::write("BENCH_1.json", &json).expect("write BENCH_1.json");
-    println!("-> BENCH_1.json");
+    std::fs::write("BENCH_2.json", &json).expect("write BENCH_2.json");
+    println!("-> BENCH_2.json");
 }

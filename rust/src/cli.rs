@@ -31,7 +31,7 @@ impl Args {
                 }
                 if let Some((k, v)) = body.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
                     out.flags.insert(body.to_string(), it.next().unwrap());
                 } else {
                     out.flags.insert(body.to_string(), "true".to_string());

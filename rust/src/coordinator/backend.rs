@@ -12,8 +12,12 @@
 //! Concurrency: the behavioral and RTL backends keep their stateful
 //! engines in an [`InstancePool`] — each `classify_batch` checks a private
 //! instance out for the duration of the batch, so worker threads fan out
-//! instead of serializing on one shared `Mutex` (see `pool.rs`). The XLA
-//! backend still serializes (PJRT handles are `Send` but not `Sync`).
+//! instead of serializing on one shared `Mutex` (see `pool.rs`). The
+//! coordinator's intra-batch fan-out relies on exactly this: each
+//! sub-batch of a split batch calls `classify_batch` concurrently and
+//! draws its own engine, so one large request burst spreads across the
+//! pool. The XLA backend still serializes (PJRT handles are `Send` but
+//! not `Sync`).
 
 use std::sync::Mutex;
 
@@ -54,6 +58,15 @@ pub trait Backend: Send + Sync {
         seeds: &[u32],
         early: EarlyExit,
     ) -> Result<Vec<BackendOutput>>;
+
+    /// Whether concurrent `classify_batch` calls actually run in parallel
+    /// (pooled engines). The coordinator only fans a large batch out when
+    /// this is true — splitting work across a backend that serializes
+    /// internally (the XLA mutex) would add thread dispatch and padding
+    /// waste for zero overlap.
+    fn parallel_capable(&self) -> bool {
+        true
+    }
 
     /// The architectural config this backend runs.
     fn config(&self) -> &SnnConfig;
@@ -137,8 +150,9 @@ impl RtlBackend {
     }
 
     /// Total cycles burned so far across the pooled cores (experiment
-    /// observability). Overflow instances built under extreme concurrency
-    /// are not tracked.
+    /// observability). Overflow instances are recycled through the pool's
+    /// stash and counted once released; only cores currently mid-batch or
+    /// dropped past the stash cap are missed.
     pub fn total_cycles(&self) -> u64 {
         let mut total = 0u64;
         self.cores.for_each(|core| total += core.total_activity().cycles);
@@ -240,6 +254,12 @@ fn all_confident(counts: &[Vec<u32>], margin: u32) -> bool {
 impl Backend for XlaBackend {
     fn name(&self) -> &'static str {
         "xla"
+    }
+
+    /// Sub-batches would serialize on the PJRT mutex *and* pad each chunk
+    /// up to a compiled batch size — strictly worse than one big call.
+    fn parallel_capable(&self) -> bool {
+        false
     }
 
     fn classify_batch(

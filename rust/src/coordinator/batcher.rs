@@ -68,6 +68,15 @@ impl<T> Batcher<T> {
         self.items.push(item);
     }
 
+    /// Add a run of items that all arrived at `now` — one ingress drain's
+    /// worth (the sharded queue hands batches out under a single lock
+    /// acquisition). The run must fit within [`Batcher::remaining`].
+    pub fn push_many(&mut self, items: impl IntoIterator<Item = T>, now: Instant) {
+        for item in items {
+            self.push(item, now);
+        }
+    }
+
     /// Decide whether to dispatch at time `now`.
     pub fn poll(&self, now: Instant) -> BatchDecision {
         if self.items.is_empty() {
@@ -134,6 +143,19 @@ mod tests {
         // A second item arriving later must NOT extend the deadline.
         b.push(2, now + Duration::from_millis(8));
         assert_eq!(b.poll(now + Duration::from_millis(10)), BatchDecision::Dispatch);
+    }
+
+    #[test]
+    fn push_many_preserves_order_and_deadline() {
+        let policy = BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(10) };
+        let mut b = Batcher::new(policy);
+        let now = t0();
+        b.push_many([1, 2, 3], now);
+        assert_eq!(b.len(), 3);
+        // A later run must not extend the deadline set by the first push.
+        b.push_many([4, 5], now + Duration::from_millis(8));
+        assert_eq!(b.poll(now + Duration::from_millis(10)), BatchDecision::Dispatch);
+        assert_eq!(b.take(), vec![1, 2, 3, 4, 5]);
     }
 
     #[test]

@@ -83,6 +83,13 @@ pub struct ServerMetrics {
     pub failed: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
+    /// Requests a worker stole from a sibling's ingress shard (nonzero
+    /// means the steal path is actually rebalancing load).
+    pub steals: AtomicU64,
+    /// Batches split across engines by intra-batch fan-out.
+    pub fanout_batches: AtomicU64,
+    /// Sub-batches dispatched by fan-out (>= 2 per fanned batch).
+    pub subbatches: AtomicU64,
     /// Timesteps actually executed (early-exit savings show up here).
     pub steps_executed: AtomicU64,
 }
@@ -95,6 +102,9 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     pub failed: u64,
     pub batches: u64,
+    pub steals: u64,
+    pub fanout_batches: u64,
+    pub subbatches: u64,
     pub mean_batch_size: f64,
     pub latency_p50_us: u64,
     pub latency_p95_us: u64,
@@ -114,6 +124,9 @@ impl ServerMetrics {
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             batches,
+            steals: self.steals.load(Ordering::Relaxed),
+            fanout_batches: self.fanout_batches.load(Ordering::Relaxed),
+            subbatches: self.subbatches.load(Ordering::Relaxed),
             mean_batch_size: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
             latency_p50_us: self.latency.quantile_us(0.50),
             latency_p95_us: self.latency.quantile_us(0.95),
@@ -161,5 +174,17 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.submitted, 10);
         assert!((s.mean_batch_size - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_carries_steal_and_fanout_counters() {
+        let m = ServerMetrics::default();
+        m.steals.store(3, Ordering::Relaxed);
+        m.fanout_batches.store(2, Ordering::Relaxed);
+        m.subbatches.store(7, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.steals, 3);
+        assert_eq!(s.fanout_batches, 2);
+        assert_eq!(s.subbatches, 7);
     }
 }

@@ -1,29 +1,40 @@
-//! The serving coordinator (L3): bounded-queue router, dynamic batcher,
-//! worker pool over pluggable inference backends, and the early-exit
-//! scheduler that generalizes the paper's active-pruning idea to the
-//! request path (stop paying for timesteps once the decision is
+//! The serving coordinator (L3): sharded bounded-queue router with work
+//! stealing, dynamic batcher, worker pool over pluggable inference
+//! backends, intra-batch fan-out across pooled engines, and the
+//! early-exit scheduler that generalizes the paper's active-pruning idea
+//! to the request path (stop paying for timesteps once the decision is
 //! confident).
 //!
-//! Threading model: callers submit through a bounded ingress channel
-//! (backpressure = `Error::Rejected` when full); worker threads assemble
-//! batches under a max-size / max-delay policy and run them on a
-//! [`Backend`]; responses travel back through per-request oneshot
+//! Threading model: callers submit through a [`ShardedQueue`] — one
+//! bounded deque per worker, shortest-queue placement, backpressure =
+//! `Error::Rejected` when every shard is full. Each worker drains its own
+//! shard first and steals the oldest entries from the deepest sibling when
+//! dry, so a slow batch cannot head-of-line-block the pool. Workers
+//! assemble batches under a max-size / max-delay policy and run them on a
+//! [`Backend`]; batches above the [`FanoutPolicy`] crossover split into
+//! sub-batches executed concurrently on pooled engines and reassembled in
+//! submission order. Responses travel back through per-request oneshot
 //! channels. tokio is not part of the offline crate set — the event loop
 //! is small enough that blocking threads are the honest design
 //! (DESIGN.md §7).
 //!
 //! Stateful backends (behavioral, RTL) draw private engine instances from
-//! a non-blocking [`InstancePool`] per batch, so adding workers adds real
-//! parallelism instead of queueing on one engine mutex.
+//! a non-blocking [`InstancePool`] per batch (or per sub-batch under
+//! fan-out), so adding workers adds real parallelism instead of queueing
+//! on one engine mutex.
 
 mod backend;
 mod batcher;
 mod metrics;
 mod pool;
 mod server;
+mod shard;
 
 pub use backend::{Backend, BackendOutput, BehavioralBackend, RtlBackend, XlaBackend};
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::{Histogram, MetricsSnapshot, ServerMetrics};
 pub use pool::{InstancePool, PoolGuard};
-pub use server::{Coordinator, CoordinatorConfig, Request, Response, SubmitHandle};
+pub use server::{
+    Coordinator, CoordinatorConfig, FanoutPolicy, Request, Response, SubmitHandle,
+};
+pub use shard::{Popped, PushError, ShardedQueue};

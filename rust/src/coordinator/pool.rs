@@ -13,10 +13,14 @@
 //!   the factory on first use;
 //! * [`InstancePool::checkout`] probes slots round-robin with `try_lock` —
 //!   it **never blocks**: if every slot is busy (more concurrent batches
-//!   than slots) it builds a fresh overflow instance that is simply
-//!   dropped on release;
+//!   than slots) it takes a recycled overflow instance from the stash, or
+//!   builds a fresh one when the stash is empty too;
+//! * overflow instances are **recycled**: on release they return to a
+//!   bounded stash (capacity = the slot count) instead of being dropped,
+//!   so a burst of concurrency does not pay repeated construction and the
+//!   pool never shrinks below its configured size;
 //! * the returned [`PoolGuard`] derefs to `T`; dropping it releases the
-//!   slot.
+//!   slot (or restashes the overflow instance).
 //!
 //! The slot mutex is only ever acquired uncontended (`try_lock`), so the
 //! hot path is one atomic per checkout — worker scaling is limited by the
@@ -30,16 +34,22 @@ use std::sync::{Mutex, MutexGuard, TryLockError};
 /// A pool of reusable engine instances. See the module docs.
 pub struct InstancePool<T> {
     slots: Box<[Mutex<Option<T>>]>,
+    /// Recycled overflow instances (bounded by `overflow_cap`).
+    extra: Mutex<Vec<T>>,
+    overflow_cap: usize,
     next: AtomicUsize,
     factory: Box<dyn Fn() -> T + Send + Sync>,
 }
 
 impl<T> InstancePool<T> {
-    /// Create a pool of `slots` lazily-built instances.
+    /// Create a pool of `slots` lazily-built instances. Up to `slots`
+    /// additional overflow instances are kept for reuse.
     pub fn new(slots: usize, factory: impl Fn() -> T + Send + Sync + 'static) -> Self {
         assert!(slots >= 1, "pool needs at least one slot");
         InstancePool {
             slots: (0..slots).map(|_| Mutex::new(None)).collect(),
+            extra: Mutex::new(Vec::new()),
+            overflow_cap: slots,
             next: AtomicUsize::new(0),
             factory: Box::new(factory),
         }
@@ -50,9 +60,14 @@ impl<T> InstancePool<T> {
         self.slots.len()
     }
 
+    /// Recycled overflow instances currently stashed (observability).
+    pub fn stashed(&self) -> usize {
+        self.extra.lock().map_or(0, |e| e.len())
+    }
+
     /// Check out an instance without ever blocking: the first free slot in
-    /// round-robin order, or a fresh overflow instance when all slots are
-    /// mid-batch.
+    /// round-robin order, a recycled overflow instance, or a freshly built
+    /// one when all slots are mid-batch and the stash is dry.
     pub fn checkout(&self) -> PoolGuard<'_, T> {
         let n = self.slots.len();
         let start = self.next.fetch_add(1, Ordering::Relaxed);
@@ -74,14 +89,28 @@ impl<T> InstancePool<T> {
             if guard.is_none() {
                 *guard = Some((self.factory)());
             }
-            return PoolGuard { inner: GuardInner::Slot(guard) };
+            return PoolGuard { pool: self, inner: GuardInner::Slot(guard) };
         }
-        PoolGuard { inner: GuardInner::Overflow((self.factory)()) }
+        let recycled = self.extra.lock().ok().and_then(|mut e| e.pop());
+        let instance = recycled.unwrap_or_else(|| (self.factory)());
+        PoolGuard { pool: self, inner: GuardInner::Overflow(Some(instance)) }
     }
 
-    /// Visit every pooled instance (blocking on busy slots). Used for
-    /// cross-instance aggregation like cumulative cycle counts; overflow
-    /// instances are not tracked.
+    /// Return a released overflow instance to the stash, up to the cap.
+    fn restash(&self, instance: T) {
+        if let Ok(mut e) = self.extra.lock() {
+            if e.len() < self.overflow_cap {
+                e.push(instance);
+            }
+        }
+        // A poisoned stash lock or a full stash simply drops the instance —
+        // the slot ring alone already guarantees the configured capacity.
+    }
+
+    /// Visit every pooled instance (blocking on busy slots), including
+    /// recycled overflow instances in the stash. Used for cross-instance
+    /// aggregation like cumulative cycle counts; only overflow instances
+    /// currently checked out (or dropped past the stash cap) are missed.
     pub fn for_each(&self, mut f: impl FnMut(&T)) {
         for slot in self.slots.iter() {
             let guard = match slot.lock() {
@@ -92,16 +121,27 @@ impl<T> InstancePool<T> {
                 f(v);
             }
         }
+        let extra = match self.extra.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        for v in extra.iter() {
+            f(v);
+        }
     }
 }
 
 enum GuardInner<'a, T> {
     Slot(MutexGuard<'a, Option<T>>),
-    Overflow(T),
+    /// Always `Some` until the guard drops (the option exists so `Drop`
+    /// can move the instance back into the stash).
+    Overflow(Option<T>),
 }
 
-/// RAII handle to a checked-out instance; releases its slot on drop.
+/// RAII handle to a checked-out instance; releases its slot (or restashes
+/// the overflow instance) on drop.
 pub struct PoolGuard<'a, T> {
+    pool: &'a InstancePool<T>,
     inner: GuardInner<'a, T>,
 }
 
@@ -110,7 +150,7 @@ impl<T> Deref for PoolGuard<'_, T> {
     fn deref(&self) -> &T {
         match &self.inner {
             GuardInner::Slot(g) => g.as_ref().expect("slot populated at checkout"),
-            GuardInner::Overflow(v) => v,
+            GuardInner::Overflow(v) => v.as_ref().expect("overflow held until drop"),
         }
     }
 }
@@ -119,7 +159,17 @@ impl<T> DerefMut for PoolGuard<'_, T> {
     fn deref_mut(&mut self) -> &mut T {
         match &mut self.inner {
             GuardInner::Slot(g) => g.as_mut().expect("slot populated at checkout"),
-            GuardInner::Overflow(v) => v,
+            GuardInner::Overflow(v) => v.as_mut().expect("overflow held until drop"),
+        }
+    }
+}
+
+impl<T> Drop for PoolGuard<'_, T> {
+    fn drop(&mut self) {
+        if let GuardInner::Overflow(v) = &mut self.inner {
+            if let Some(instance) = v.take() {
+                self.pool.restash(instance);
+            }
         }
     }
 }
@@ -181,6 +231,53 @@ mod tests {
     }
 
     #[test]
+    fn overflow_instances_are_recycled_not_dropped() {
+        let built = Arc::new(AtomicU32::new(0));
+        let b = Arc::clone(&built);
+        let pool = InstancePool::new(2, move || {
+            b.fetch_add(1, Ordering::Relaxed);
+            0u64
+        });
+        {
+            // Four concurrent checkouts: 2 slots + 2 overflow builds.
+            let _g1 = pool.checkout();
+            let _g2 = pool.checkout();
+            let _g3 = pool.checkout();
+            let _g4 = pool.checkout();
+            assert_eq!(built.load(Ordering::Relaxed), 4);
+        }
+        // The overflow pair is stashed, not dropped...
+        assert_eq!(pool.stashed(), 2);
+        {
+            // ...so the same burst again builds nothing new.
+            let _g1 = pool.checkout();
+            let _g2 = pool.checkout();
+            let _g3 = pool.checkout();
+            let _g4 = pool.checkout();
+            assert_eq!(built.load(Ordering::Relaxed), 4, "burst must reuse the stash");
+        }
+        // The pool never shrinks below its configured size (and here keeps
+        // the whole burst's worth of instances alive).
+        let mut live = 0;
+        pool.for_each(|_| live += 1);
+        assert!(
+            live >= pool.capacity(),
+            "pool shrank below its configured size: {live} < {}",
+            pool.capacity()
+        );
+    }
+
+    #[test]
+    fn overflow_stash_is_bounded() {
+        let pool = InstancePool::new(2, || 0u64);
+        {
+            // 6 concurrent checkouts: 2 slots + 4 overflow, stash cap 2.
+            let _gs: Vec<_> = (0..6).map(|_| pool.checkout()).collect();
+        }
+        assert_eq!(pool.stashed(), 2, "stash must stay bounded at the slot count");
+    }
+
+    #[test]
     fn for_each_sees_pooled_state() {
         let pool = InstancePool::new(3, || 0u64);
         {
@@ -195,6 +292,20 @@ mod tests {
         pool.for_each(|v| total += v);
         // Either the same slot was reused (41+1) or two slots hold 41 and 1.
         assert_eq!(total, 42);
+    }
+
+    #[test]
+    fn for_each_includes_recycled_overflow_state() {
+        let pool = InstancePool::new(1, || 0u64);
+        {
+            let mut a = pool.checkout(); // the slot
+            let mut b = pool.checkout(); // overflow
+            *a += 1;
+            *b += 10;
+        }
+        let mut total = 0u64;
+        pool.for_each(|v| total += v);
+        assert_eq!(total, 11, "recycled overflow state must be visible");
     }
 
     #[test]
@@ -216,8 +327,8 @@ mod tests {
         }
         let mut total = 0u64;
         pool.for_each(|v| total += v);
-        // Overflow instances lose their counts, so pooled totals are a
-        // lower bound capped by the true total.
+        // Overflow instances dropped past the stash cap lose their counts,
+        // so pooled totals are a lower bound capped by the true total.
         assert!(total > 0 && total <= 8 * 500, "total {total}");
     }
 }

@@ -1,10 +1,11 @@
-//! The coordinator proper: ingress router + worker pool + response plumbing.
+//! The coordinator proper: sharded ingress router + work-stealing worker
+//! pool + intra-batch fan-out + response plumbing.
 
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::data::Image;
 use crate::error::{Error, Result};
@@ -13,6 +14,10 @@ use crate::snn::EarlyExit;
 use super::backend::{Backend, BackendOutput};
 use super::batcher::{BatchDecision, BatchPolicy, Batcher};
 use super::metrics::ServerMetrics;
+use super::shard::{Popped, PushError, ShardedQueue};
+
+/// How long an idle worker parks between shutdown checks.
+const IDLE_POLL: Duration = Duration::from_millis(50);
 
 /// A classification request.
 #[derive(Debug, Clone)]
@@ -40,17 +45,59 @@ struct InFlight {
     reply: SyncSender<Result<Response>>,
 }
 
+/// Intra-batch fan-out policy: when a formed batch is large enough, split
+/// it into sub-batches dispatched concurrently across pooled engines and
+/// reassembled in submission order — latency parallelism for one big
+/// request burst, not just throughput across bursts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FanoutPolicy {
+    /// Crossover threshold: batches smaller than this keep the
+    /// single-engine path (splitting tiny batches costs more in thread
+    /// dispatch than it saves in compute).
+    pub min_batch: usize,
+    /// Maximum sub-batches one batch splits into. Keep at or below the
+    /// backend's pool capacity, or the extra parts just queue.
+    pub max_parts: usize,
+}
+
+impl Default for FanoutPolicy {
+    fn default() -> Self {
+        FanoutPolicy { min_batch: 32, max_parts: 4 }
+    }
+}
+
+impl FanoutPolicy {
+    /// Disable fan-out entirely (every batch runs on one engine).
+    pub fn off() -> Self {
+        FanoutPolicy { min_batch: usize::MAX, max_parts: 1 }
+    }
+
+    /// Number of sub-batches a batch of `n` splits into (1 = no fan-out).
+    pub fn parts_for(&self, n: usize) -> usize {
+        if self.max_parts <= 1 || n < self.min_batch.max(2) {
+            1
+        } else {
+            self.max_parts.min(n)
+        }
+    }
+}
+
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Worker threads pulling batches.
+    /// Worker threads pulling batches (also the ingress shard count).
     pub workers: usize,
-    /// Ingress queue capacity (backpressure bound).
+    /// Total ingress queue capacity across all shards (backpressure
+    /// bound). Split evenly across shards, rounded up — so the effective
+    /// bound is the next multiple of `workers` when it does not divide
+    /// evenly.
     pub queue_depth: usize,
     /// Batch forming policy.
     pub batch: BatchPolicy,
     /// Early-exit policy handed to the backend.
     pub early: EarlyExit,
+    /// Intra-batch fan-out policy.
+    pub fanout: FanoutPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -60,6 +107,7 @@ impl Default for CoordinatorConfig {
             queue_depth: 256,
             batch: BatchPolicy::default(),
             early: EarlyExit::Off,
+            fanout: FanoutPolicy::default(),
         }
     }
 }
@@ -67,14 +115,14 @@ impl Default for CoordinatorConfig {
 /// Client handle: cheap to clone, submits requests.
 #[derive(Clone)]
 pub struct SubmitHandle {
-    tx: SyncSender<InFlight>,
+    queue: Arc<ShardedQueue<InFlight>>,
     seed_counter: Arc<AtomicU32>,
     metrics: Arc<ServerMetrics>,
 }
 
 impl SubmitHandle {
     /// Submit a request; returns the receiver for its response. Fails fast
-    /// with [`Error::Rejected`] when the ingress queue is full
+    /// with [`Error::Rejected`] when every ingress shard is full
     /// (backpressure) or the server is shutting down.
     pub fn submit(&self, request: Request) -> Result<Receiver<Result<Response>>> {
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
@@ -83,16 +131,17 @@ impl SubmitHandle {
             .unwrap_or_else(|| self.seed_counter.fetch_add(1, Ordering::Relaxed));
         let inflight =
             InFlight { request, seed, submitted: Instant::now(), reply: reply_tx };
-        match self.tx.try_send(inflight) {
-            Ok(()) => {
+        match self.queue.push(inflight) {
+            Ok(_shard) => {
                 self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
                 Ok(reply_rx)
             }
-            Err(TrySendError::Full(_)) => {
+            Err(PushError::Full(_)) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(Error::Rejected("ingress queue full".into()))
             }
-            Err(TrySendError::Disconnected(_)) => {
+            Err(PushError::Closed(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(Error::Rejected("coordinator is shut down".into()))
             }
         }
@@ -110,38 +159,37 @@ impl SubmitHandle {
 pub struct Coordinator {
     handle: SubmitHandle,
     workers: Vec<JoinHandle<()>>,
-    shutdown: Arc<AtomicBool>,
+    queue: Arc<ShardedQueue<InFlight>>,
     metrics: Arc<ServerMetrics>,
 }
 
 impl Coordinator {
-    /// Start the worker pool over `backend`.
+    /// Start the worker pool over `backend`. Each worker owns one ingress
+    /// shard; the submit path load-balances across them and workers steal
+    /// from siblings when their own shard runs dry.
     pub fn start(backend: Arc<dyn Backend>, cfg: CoordinatorConfig) -> Self {
         assert!(cfg.workers >= 1);
-        let (tx, rx) = mpsc::sync_channel::<InFlight>(cfg.queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
-        let shutdown = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(ShardedQueue::new(cfg.workers, cfg.queue_depth));
         let metrics = Arc::new(ServerMetrics::default());
 
         let workers = (0..cfg.workers)
-            .map(|_| {
-                let rx = Arc::clone(&rx);
+            .map(|id| {
+                let queue = Arc::clone(&queue);
                 let backend = Arc::clone(&backend);
-                let shutdown = Arc::clone(&shutdown);
                 let metrics = Arc::clone(&metrics);
                 let cfg = cfg.clone();
-                std::thread::spawn(move || worker_loop(rx, backend, shutdown, metrics, cfg))
+                std::thread::spawn(move || worker_loop(id, queue, backend, metrics, cfg))
             })
             .collect();
 
         Coordinator {
             handle: SubmitHandle {
-                tx,
+                queue: Arc::clone(&queue),
                 seed_counter: Arc::new(AtomicU32::new(1)),
                 metrics: Arc::clone(&metrics),
             },
             workers,
-            shutdown,
+            queue,
             metrics,
         }
     }
@@ -156,57 +204,70 @@ impl Coordinator {
         &self.metrics
     }
 
-    /// Drain and stop: in-flight requests complete, new submissions fail.
-    pub fn shutdown(self) {
-        self.shutdown.store(true, Ordering::SeqCst);
-        drop(self.handle); // close the channel so workers see disconnect
-        for w in self.workers {
+    /// Instantaneous per-shard ingress depths (observability gauge).
+    pub fn shard_depths(&self) -> Vec<usize> {
+        self.queue.depths()
+    }
+
+    /// Drain and stop: queued and in-flight requests complete, new
+    /// submissions fail with [`Error::Rejected`].
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        for w in std::mem::take(&mut self.workers) {
             let _ = w.join();
         }
+    }
+
+    /// Alias of [`Coordinator::shutdown`].
+    pub fn stop(self) {
+        self.shutdown()
+    }
+}
+
+impl Drop for Coordinator {
+    /// Parity with the old channel-based design, where dropping the
+    /// coordinator disconnected the ingress channel: close the queue so
+    /// the workers drain what is left and exit, instead of parking on
+    /// the condvar forever. `shutdown()` additionally joins them; a bare
+    /// drop only guarantees they terminate.
+    fn drop(&mut self) {
+        self.queue.close();
     }
 }
 
 fn worker_loop(
-    rx: Arc<Mutex<Receiver<InFlight>>>,
+    id: usize,
+    queue: Arc<ShardedQueue<InFlight>>,
     backend: Arc<dyn Backend>,
-    shutdown: Arc<AtomicBool>,
     metrics: Arc<ServerMetrics>,
     cfg: CoordinatorConfig,
 ) {
     let mut batcher: Batcher<InFlight> = Batcher::new(cfg.batch);
     loop {
-        // Form a batch: block for the first item, then fill until the
-        // policy says dispatch.
-        let decision = batcher.poll(Instant::now());
-        match decision {
+        match batcher.poll(Instant::now()) {
             BatchDecision::Dispatch => {
                 run_batch(&backend, &metrics, &cfg, batcher.take());
             }
             BatchDecision::Wait(timeout) => {
-                let item = {
-                    let guard = rx.lock().unwrap();
-                    if batcher.is_empty() {
-                        // Nothing pending: block indefinitely-ish, but wake
-                        // periodically to observe shutdown.
-                        guard.recv_timeout(std::time::Duration::from_millis(50))
-                    } else {
-                        guard.recv_timeout(timeout)
+                // Fill the forming batch: own shard first, then steal.
+                match queue.pop_some(id, batcher.remaining()) {
+                    Popped::Items { items, stolen } => {
+                        if stolen > 0 {
+                            metrics.steals.fetch_add(stolen as u64, Ordering::Relaxed);
+                        }
+                        batcher.push_many(items, Instant::now());
                     }
-                };
-                match item {
-                    Ok(inflight) => batcher.push(inflight, Instant::now()),
-                    Err(RecvTimeoutError::Timeout) => {
-                        if !batcher.is_empty() {
-                            run_batch(&backend, &metrics, &cfg, batcher.take());
-                        } else if shutdown.load(Ordering::SeqCst) {
+                    Popped::Drained => {
+                        // Every shard empty + closed: flush and exit.
+                        if batcher.is_empty() {
                             return;
                         }
+                        run_batch(&backend, &metrics, &cfg, batcher.take());
                     }
-                    Err(RecvTimeoutError::Disconnected) => {
-                        if !batcher.is_empty() {
-                            run_batch(&backend, &metrics, &cfg, batcher.take());
-                        }
-                        return;
+                    Popped::Empty => {
+                        // Nothing to pop: park until new work, the batch
+                        // deadline, or shutdown.
+                        queue.wait(if batcher.is_empty() { IDLE_POLL } else { timeout });
                     }
                 }
             }
@@ -228,8 +289,19 @@ fn run_batch(
 
     let images: Vec<&Image> = batch.iter().map(|f| &f.request.image).collect();
     let seeds: Vec<u32> = batch.iter().map(|f| f.seed).collect();
+    let parts = if backend.parallel_capable() {
+        cfg.fanout.parts_for(batch.len())
+    } else {
+        // Splitting across a backend that serializes internally (the XLA
+        // mutex) costs thread dispatch for zero overlap.
+        1
+    };
     let start = Instant::now();
-    let result = backend.classify_batch(&images, &seeds, cfg.early);
+    let result = if parts <= 1 {
+        backend.classify_batch(&images, &seeds, cfg.early)
+    } else {
+        fan_out_batch(&**backend, metrics, cfg.early, &images, &seeds, parts)
+    };
     metrics.batch_latency.record(start.elapsed());
 
     match result {
@@ -248,6 +320,48 @@ fn run_batch(
             }
         }
     }
+}
+
+/// Split one large batch into `parts` contiguous sub-batches, run them
+/// concurrently on the backend (whose engine pool hands each call a
+/// private instance), and reassemble the outputs in submission order.
+///
+/// Ordering argument: `chunks` yields contiguous, non-overlapping slices
+/// in ascending index order; sub-batch `k` is joined and appended before
+/// sub-batch `k+1`, and every backend returns outputs positionally, so
+/// `out[i]` is the result of `images[i]` regardless of which thread ran
+/// it or when it finished. The stress suite pins this end to end.
+fn fan_out_batch(
+    backend: &dyn Backend,
+    metrics: &ServerMetrics,
+    early: EarlyExit,
+    images: &[&Image],
+    seeds: &[u32],
+    parts: usize,
+) -> Result<Vec<BackendOutput>> {
+    let chunk = images.len().div_ceil(parts);
+    metrics.fanout_batches.fetch_add(1, Ordering::Relaxed);
+    std::thread::scope(|scope| {
+        let mut tails = Vec::new();
+        for (imgs, sds) in images[chunk..].chunks(chunk).zip(seeds[chunk..].chunks(chunk)) {
+            tails.push(scope.spawn(move || backend.classify_batch(imgs, sds, early)));
+        }
+        metrics.subbatches.fetch_add(tails.len() as u64 + 1, Ordering::Relaxed);
+        // Run the first sub-batch on this worker thread; the spawned tails
+        // overlap with it.
+        let mut out = backend.classify_batch(&images[..chunk], &seeds[..chunk], early)?;
+        let mut first_err = None;
+        for handle in tails {
+            match handle.join().expect("sub-batch thread panicked") {
+                Ok(mut part) => out.append(&mut part),
+                Err(e) => first_err = first_err.or(Some(e)),
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    })
 }
 
 fn respond_ok(metrics: &ServerMetrics, inflight: InFlight, out: BackendOutput) {
@@ -269,7 +383,6 @@ mod tests {
     use crate::coordinator::backend::BehavioralBackend;
     use crate::data::{DigitGen, IMG_PIXELS};
     use crate::fixed::WeightMatrix;
-    use std::time::Duration;
 
     fn block_weights() -> WeightMatrix {
         let mut w = vec![0i32; 784 * 10];
@@ -302,6 +415,7 @@ mod tests {
                 queue_depth: queue,
                 batch: BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(1) },
                 early: EarlyExit::Off,
+                fanout: FanoutPolicy::default(),
             },
         )
     }
@@ -411,11 +525,76 @@ mod tests {
                 queue_depth: 16,
                 batch: BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(100) },
                 early: EarlyExit::Margin { margin: 3, min_steps: 2 },
+                fanout: FanoutPolicy::default(),
             },
         );
         let resp = coord.handle().classify(block_image(5)).unwrap();
         assert_eq!(resp.class, 5);
         assert!(resp.steps_run < 20, "early exit did not trigger: {}", resp.steps_run);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn fanout_policy_crossover() {
+        let p = FanoutPolicy { min_batch: 32, max_parts: 4 };
+        assert_eq!(p.parts_for(1), 1);
+        assert_eq!(p.parts_for(31), 1, "below the crossover stays single-engine");
+        assert_eq!(p.parts_for(32), 4);
+        assert_eq!(p.parts_for(400), 4, "parts capped at max_parts");
+        assert_eq!(FanoutPolicy::off().parts_for(1_000_000), 1);
+        // Degenerate policies never split a batch of one.
+        let eager = FanoutPolicy { min_batch: 0, max_parts: 8 };
+        assert_eq!(eager.parts_for(1), 1);
+        assert_eq!(eager.parts_for(3), 3, "parts never exceed the batch size");
+    }
+
+    #[test]
+    fn fanned_out_batch_reassembles_in_submission_order() {
+        // One worker, a batch policy that forms one large batch, and a
+        // fan-out policy that splits it: every reply must still carry the
+        // answer for its own (image, seed).
+        let cfg = SnnConfig::paper().with_timesteps(6);
+        let backend = Arc::new(BehavioralBackend::new(cfg, block_weights()).unwrap());
+        let coord = Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 256,
+                batch: BatchPolicy { max_batch: 40, max_delay: Duration::from_millis(20) },
+                early: EarlyExit::Off,
+                fanout: FanoutPolicy { min_batch: 8, max_parts: 4 },
+            },
+        );
+        let handle = coord.handle();
+        let receivers: Vec<_> = (0..40)
+            .map(|i| {
+                let class = i % 10;
+                let rx = handle
+                    .submit(Request { image: block_image(class), seed: Some(1000 + i as u32) })
+                    .unwrap();
+                (class, rx)
+            })
+            .collect();
+        for (class, rx) in receivers {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.class as usize, class, "reply wired to the wrong request");
+        }
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.completed, 40);
+        assert!(snap.fanout_batches >= 1, "large batch must fan out");
+        assert!(
+            snap.subbatches >= 2 * snap.fanout_batches,
+            "fanned batches must split into >= 2 parts: {} batches, {} parts",
+            snap.fanout_batches,
+            snap.subbatches
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shard_depth_gauges_exposed() {
+        let coord = start_coordinator(3, 96);
+        assert_eq!(coord.shard_depths().len(), 3);
         coord.shutdown();
     }
 }

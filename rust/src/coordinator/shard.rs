@@ -1,0 +1,488 @@
+//! Sharded ingress: per-worker bounded deques with work stealing.
+//!
+//! The coordinator used to funnel every request through one
+//! `mpsc::sync_channel` guarded by a `Mutex<Receiver>`. At high worker
+//! counts that single channel is the scaling ceiling, and one slow batch
+//! head-of-line-blocks everything behind it in the shared FIFO.
+//! [`ShardedQueue`] replaces it:
+//!
+//! * **one bounded deque per worker** — the submit path places each item
+//!   on the shallowest shard (round-robin tie-break), so ingress pressure
+//!   spreads without a global lock;
+//! * **work stealing** — a worker drains its own deque first and, when
+//!   empty, steals the *oldest* entries from the deepest sibling, so a
+//!   worker pinned on a slow batch cannot strand the requests queued
+//!   behind it;
+//! * **exact close semantics** — `close()` latches a per-shard flag under
+//!   each shard's lock, and [`ShardedQueue::pop_some`] only reports
+//!   [`Popped::Drained`] after observing every shard empty *and* closed
+//!   under its lock. Because a push checks the same flag under the same
+//!   lock, no submission can slip into a queue no worker will ever visit:
+//!   every accepted item is drained, every post-close submit is rejected.
+//!
+//! Blocking: idle workers sleep on one shared condvar with a bounded
+//! timeout. Pushers only touch the condvar when a sleeper is registered,
+//! so the ingress hot path stays two uncontended lock acquisitions (the
+//! shard, and nothing else).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Why a push was refused.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Every shard is at capacity (backpressure); the item is handed back.
+    Full(T),
+    /// The queue is closed (coordinator shutting down).
+    Closed(T),
+}
+
+/// Result of a [`ShardedQueue::pop_some`] sweep.
+#[derive(Debug)]
+pub enum Popped<T> {
+    /// Items obtained; `stolen` is how many came from a sibling shard
+    /// (0 = all from the caller's own deque).
+    Items { items: Vec<T>, stolen: usize },
+    /// Nothing available right now; the queue is still open.
+    Empty,
+    /// Every shard was observed empty *and* closed under its lock: no item
+    /// exists and none can ever arrive. The caller can exit.
+    Drained,
+}
+
+struct ShardState<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+struct Shard<T> {
+    state: Mutex<ShardState<T>>,
+    /// Depth mirror maintained under the lock, readable without it —
+    /// drives shortest-queue placement, deepest-victim stealing and the
+    /// metrics gauges. A stale read only costs a suboptimal choice.
+    depth: AtomicUsize,
+}
+
+/// The sharded ingress queue. See the module docs.
+pub struct ShardedQueue<T> {
+    shards: Box<[Shard<T>]>,
+    capacity_per_shard: usize,
+    /// Round-robin cursor breaking shortest-queue ties.
+    cursor: AtomicUsize,
+    /// Fast "no push can ever succeed again" flag (the per-shard flags
+    /// under their locks are the authoritative close protocol).
+    closed: AtomicBool,
+    /// Workers currently parked in [`ShardedQueue::wait`].
+    sleepers: AtomicUsize,
+    sleep_lock: Mutex<()>,
+    wakeup: Condvar,
+}
+
+/// Mutex lock that shrugs off poisoning: queue integrity is maintained by
+/// the operations themselves, not by the absence of panics elsewhere.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl<T> ShardedQueue<T> {
+    /// Create `shards` deques sharing `total_capacity` (split evenly,
+    /// rounded up so every shard holds at least one item).
+    pub fn new(shards: usize, total_capacity: usize) -> Self {
+        assert!(shards >= 1, "need at least one shard");
+        assert!(total_capacity >= 1, "need capacity for at least one item");
+        let capacity_per_shard = total_capacity.div_ceil(shards);
+        ShardedQueue {
+            shards: (0..shards)
+                .map(|_| Shard {
+                    state: Mutex::new(ShardState { queue: VecDeque::new(), closed: false }),
+                    depth: AtomicUsize::new(0),
+                })
+                .collect(),
+            capacity_per_shard,
+            cursor: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            sleepers: AtomicUsize::new(0),
+            sleep_lock: Mutex::new(()),
+            wakeup: Condvar::new(),
+        }
+    }
+
+    /// Number of shards (one per worker).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard capacity bound.
+    pub fn capacity_per_shard(&self) -> usize {
+        self.capacity_per_shard
+    }
+
+    /// Instantaneous per-shard depths (racy gauges, for observability).
+    pub fn depths(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.depth.load(Ordering::SeqCst)).collect()
+    }
+
+    /// Instantaneous total queued items.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.depth.load(Ordering::SeqCst)).sum()
+    }
+
+    /// True when no shard currently holds an item.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True once [`ShardedQueue::close`] has run.
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    /// Place `item` on the shallowest shard (round-robin tie-break),
+    /// falling through ring-order when the depth hint was stale and the
+    /// chosen shard is actually full. Never blocks.
+    pub fn push(&self, item: T) -> Result<usize, PushError<T>> {
+        let n = self.shards.len();
+        let start = self.cursor.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best = start;
+        let mut best_depth = self.shards[start].depth.load(Ordering::SeqCst);
+        for k in 1..n {
+            let i = (start + k) % n;
+            let d = self.shards[i].depth.load(Ordering::SeqCst);
+            if d < best_depth {
+                best = i;
+                best_depth = d;
+            }
+        }
+        let mut item = Some(item);
+        for k in 0..n {
+            let i = (best + k) % n;
+            let shard = &self.shards[i];
+            let mut st = lock(&shard.state);
+            if st.closed {
+                return Err(PushError::Closed(item.take().expect("item present")));
+            }
+            if st.queue.len() >= self.capacity_per_shard {
+                continue;
+            }
+            st.queue.push_back(item.take().expect("item present"));
+            shard.depth.store(st.queue.len(), Ordering::SeqCst);
+            drop(st);
+            self.notify_one();
+            return Ok(i);
+        }
+        Err(PushError::Full(item.take().expect("item present")))
+    }
+
+    /// Pop up to `max` items for worker `home`: its own deque first
+    /// (FIFO), then a steal sweep over the siblings — deepest victim
+    /// first, oldest entries first, so stolen requests keep their latency
+    /// ordering. See [`Popped`] for the empty/drained distinction.
+    pub fn pop_some(&self, home: usize, max: usize) -> Popped<T> {
+        let n = self.shards.len();
+        debug_assert!(max > 0, "pop_some needs room for at least one item");
+        let home = home % n;
+        if let Some(items) = self.drain_shard(home, max) {
+            return Popped::Items { items, stolen: 0 };
+        }
+
+        // Steal sweep: deepest sibling first (racy hint), then ring order.
+        // Along the way, fold each sibling's (empty && closed) status
+        // observed under its lock — the evidence for a `Drained` verdict.
+        // No allocation: the victim order is a probe plus a ring walk.
+        let mut deepest = home; // sentinel: no non-empty hint found
+        let mut depth_hint = 0;
+        for k in 1..n {
+            let i = (home + k) % n;
+            let d = self.shards[i].depth.load(Ordering::SeqCst);
+            if d > depth_hint {
+                depth_hint = d;
+                deepest = i;
+            }
+        }
+        let mut all_closed = true;
+        if deepest != home {
+            if let Some(stolen) = self.steal_from(deepest, max, &mut all_closed) {
+                return stolen;
+            }
+        }
+        for k in 1..n {
+            let i = (home + k) % n;
+            if i == deepest {
+                continue; // already probed above
+            }
+            if let Some(stolen) = self.steal_from(i, max, &mut all_closed) {
+                return stolen;
+            }
+        }
+
+        // Re-check home under its lock: an item may have landed there
+        // during the sweep, and the Drained verdict needs home's own
+        // (empty && closed) observed under the lock too.
+        let shard = &self.shards[home];
+        let mut st = lock(&shard.state);
+        if !st.queue.is_empty() {
+            let k = st.queue.len().min(max);
+            let items: Vec<T> = st.queue.drain(..k).collect();
+            shard.depth.store(st.queue.len(), Ordering::SeqCst);
+            return Popped::Items { items, stolen: 0 };
+        }
+        if all_closed && st.closed {
+            Popped::Drained
+        } else {
+            Popped::Empty
+        }
+    }
+
+    /// Lock shard `i` and drain up to `max` items as a steal; when it is
+    /// empty, fold its closed flag (observed under the lock) into
+    /// `all_closed` for the caller's `Drained` verdict.
+    fn steal_from(&self, i: usize, max: usize, all_closed: &mut bool) -> Option<Popped<T>> {
+        let shard = &self.shards[i];
+        let mut st = lock(&shard.state);
+        if !st.queue.is_empty() {
+            let k = st.queue.len().min(max);
+            let items: Vec<T> = st.queue.drain(..k).collect();
+            shard.depth.store(st.queue.len(), Ordering::SeqCst);
+            return Some(Popped::Items { stolen: items.len(), items });
+        }
+        *all_closed &= st.closed;
+        None
+    }
+
+    fn drain_shard(&self, i: usize, max: usize) -> Option<Vec<T>> {
+        let shard = &self.shards[i];
+        let mut st = lock(&shard.state);
+        if st.queue.is_empty() {
+            return None;
+        }
+        let k = st.queue.len().min(max);
+        let items: Vec<T> = st.queue.drain(..k).collect();
+        shard.depth.store(st.queue.len(), Ordering::SeqCst);
+        Some(items)
+    }
+
+    /// Park the caller until an item is likely available, the queue
+    /// closes, or `timeout` elapses — whichever comes first. May wake
+    /// spuriously; callers re-poll.
+    pub fn wait(&self, timeout: Duration) {
+        if !self.is_empty() || self.is_closed() {
+            return;
+        }
+        self.sleepers.fetch_add(1, Ordering::SeqCst);
+        let guard = lock(&self.sleep_lock);
+        if self.is_empty() && !self.is_closed() {
+            let _ = self.wakeup.wait_timeout(guard, timeout);
+        }
+        self.sleepers.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    fn notify_one(&self) {
+        if self.sleepers.load(Ordering::SeqCst) > 0 {
+            // Taking the sleep lock orders this notify after any sleeper's
+            // final emptiness re-check, closing the lost-wakeup window.
+            drop(lock(&self.sleep_lock));
+            self.wakeup.notify_one();
+        }
+    }
+
+    /// Close the queue: latch every shard's closed flag (under its lock)
+    /// and wake all sleepers. Pushes fail from here on; queued items stay
+    /// poppable until drained.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        for shard in self.shards.iter() {
+            lock(&shard.state).closed = true;
+        }
+        drop(lock(&self.sleep_lock));
+        self.wakeup.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn items<T>(p: Popped<T>) -> Vec<T> {
+        match p {
+            Popped::Items { items, .. } => items,
+            other => panic!("expected items, got {}", kind(&other)),
+        }
+    }
+
+    fn kind<T>(p: &Popped<T>) -> &'static str {
+        match p {
+            Popped::Items { .. } => "Items",
+            Popped::Empty => "Empty",
+            Popped::Drained => "Drained",
+        }
+    }
+
+    #[test]
+    fn push_pop_fifo_within_shard() {
+        let q: ShardedQueue<u32> = ShardedQueue::new(1, 16);
+        for v in 0..5 {
+            q.push(v).unwrap();
+        }
+        assert_eq!(items(q.pop_some(0, 3)), vec![0, 1, 2]);
+        assert_eq!(items(q.pop_some(0, 8)), vec![3, 4]);
+        assert!(matches!(q.pop_some(0, 1), Popped::Empty));
+    }
+
+    #[test]
+    fn shortest_queue_placement_balances() {
+        let q: ShardedQueue<u32> = ShardedQueue::new(4, 400);
+        for v in 0..100 {
+            q.push(v).unwrap();
+        }
+        let depths = q.depths();
+        assert_eq!(depths.iter().sum::<usize>(), 100);
+        assert!(
+            depths.iter().all(|&d| d == 25),
+            "shortest-queue placement must balance: {depths:?}"
+        );
+    }
+
+    #[test]
+    fn backpressure_rejects_when_all_full() {
+        let q: ShardedQueue<u32> = ShardedQueue::new(2, 4); // 2 per shard
+        for v in 0..4 {
+            q.push(v).unwrap();
+        }
+        match q.push(99) {
+            Err(PushError::Full(v)) => assert_eq!(v, 99, "item handed back"),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        // Draining frees capacity again.
+        let _ = items(q.pop_some(0, 1));
+        q.push(99).unwrap();
+    }
+
+    #[test]
+    fn steal_takes_oldest_from_sibling() {
+        let q: ShardedQueue<u32> = ShardedQueue::new(2, 64);
+        let mut on0 = Vec::new();
+        for v in 0..8 {
+            if q.push(v).unwrap() == 0 {
+                on0.push(v);
+            }
+        }
+        assert!(!on0.is_empty(), "placement must use shard 0");
+        // Worker 1 drains its own shard first, then steals shard 0's
+        // entries — all of them, oldest first.
+        loop {
+            match q.pop_some(1, 8) {
+                Popped::Items { items, stolen: 0 } => {
+                    assert!(items.iter().all(|v| !on0.contains(v)), "own-shard drain");
+                }
+                Popped::Items { items, stolen } => {
+                    assert_eq!(stolen, items.len());
+                    assert_eq!(items, on0, "steal must take oldest-first FIFO order");
+                    break;
+                }
+                other => panic!("expected items, got {}", kind(&other)),
+            }
+        }
+    }
+
+    #[test]
+    fn close_rejects_pushes_but_drains_queued() {
+        let q: ShardedQueue<u32> = ShardedQueue::new(2, 16);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert!(matches!(q.push(3), Err(PushError::Closed(3))));
+        let mut drained = Vec::new();
+        loop {
+            match q.pop_some(0, 4) {
+                Popped::Items { mut items, .. } => drained.append(&mut items),
+                Popped::Drained => break,
+                Popped::Empty => panic!("closed+empty must report Drained"),
+            }
+        }
+        drained.sort_unstable();
+        assert_eq!(drained, vec![1, 2]);
+    }
+
+    #[test]
+    fn wait_returns_promptly_on_close() {
+        let q: Arc<ShardedQueue<u32>> = Arc::new(ShardedQueue::new(1, 4));
+        let waiter = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                // Generous timeout: the close below must cut it short.
+                q.wait(Duration::from_secs(30));
+            })
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        waiter.join().unwrap();
+    }
+
+    #[test]
+    fn wait_wakes_on_push() {
+        let q: Arc<ShardedQueue<u32>> = Arc::new(ShardedQueue::new(2, 8));
+        let waiter = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                q.wait(Duration::from_secs(30));
+                items(q.pop_some(0, 1))
+            })
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(7).unwrap();
+        assert_eq!(waiter.join().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_conserve_items() {
+        let q: Arc<ShardedQueue<u64>> = Arc::new(ShardedQueue::new(4, 256));
+        let producers: Vec<_> = (0..4u64)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        let v = p * 1000 + i;
+                        loop {
+                            match q.push(v) {
+                                Ok(_) => break,
+                                Err(PushError::Full(_)) => std::thread::yield_now(),
+                                Err(PushError::Closed(_)) => panic!("closed early"),
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..4usize)
+            .map(|w| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        match q.pop_some(w, 8) {
+                            Popped::Items { mut items, .. } => got.append(&mut items),
+                            Popped::Empty => q.wait(Duration::from_millis(5)),
+                            Popped::Drained => return got,
+                        }
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all = Vec::new();
+        for c in consumers {
+            all.append(&mut c.join().unwrap());
+        }
+        all.sort_unstable();
+        let mut expect: Vec<u64> =
+            (0..4u64).flat_map(|p| (0..500u64).map(move |i| p * 1000 + i)).collect();
+        expect.sort_unstable();
+        assert_eq!(all, expect, "every pushed item popped exactly once");
+    }
+}

@@ -16,8 +16,8 @@ use std::time::Instant;
 
 use snn_rtl::cli::Args;
 use snn_rtl::coordinator::{
-    Backend, BatchPolicy, BehavioralBackend, Coordinator, CoordinatorConfig, Request,
-    RtlBackend, XlaBackend,
+    Backend, BatchPolicy, BehavioralBackend, Coordinator, CoordinatorConfig,
+    FanoutPolicy, Request, RtlBackend, XlaBackend,
 };
 use snn_rtl::data::{codec, DigitGen};
 use snn_rtl::experiments::{self, Ctx};
@@ -128,6 +128,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             queue_depth: 1024,
             batch: BatchPolicy { max_batch: batch, ..Default::default() },
             early,
+            fanout: FanoutPolicy::default(),
         },
     );
     let handle = coord.handle();

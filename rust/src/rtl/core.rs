@@ -267,7 +267,7 @@ impl RtlCore {
         // Immediate path counts incrementally because enables — and with
         // them the schedule-relevant datapath state — can change per
         // integrate clock).
-        let integrate_clocks = ((n_in + k - 1) / k) as u64;
+        let integrate_clocks = n_in.div_ceil(k) as u64;
         let leak_clocks = match row_len {
             Some(r) => ((n_in - 1) / r + 1) as u64,
             None => 1,
@@ -353,7 +353,7 @@ impl RtlCore {
                 self.apply_prune_mask();
             }
             pixel = end;
-            if pixel == n_in || row_len.map_or(false, |r| pixel % r == 0) {
+            if pixel == n_in || row_len.is_some_and(|r| pixel % r == 0) {
                 self.neurons.leak_enabled(&mut self.act);
                 self.act.cycles += 1; // the Leak clock
             }
@@ -618,7 +618,7 @@ mod tests {
                 RtlCore::new(cfg.clone(), w.clone()).unwrap().with_pixels_per_cycle(k);
             let r = core.run(&img, 99).unwrap();
             // Cycle count: ceil(784/k) integrate clocks + leak + fire.
-            let integrate = (784 + k - 1) / k;
+            let integrate = 784usize.div_ceil(k);
             assert_eq!(r.cycles, (integrate as u64 + 2) * 4, "width {k}");
             match &reference {
                 None => reference = Some(r),

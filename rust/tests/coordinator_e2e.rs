@@ -10,7 +10,7 @@ use std::time::Duration;
 use common::artifacts_dir;
 use snn_rtl::coordinator::{
     Backend, BackendOutput, BatchPolicy, BehavioralBackend, Coordinator, CoordinatorConfig,
-    Request, XlaBackend,
+    FanoutPolicy, Request, XlaBackend,
 };
 use snn_rtl::data::{codec, DigitGen, Image};
 use snn_rtl::error::Error;
@@ -42,6 +42,7 @@ fn xla_backed_coordinator_serves_accurately() {
             queue_depth: 512,
             batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(2) },
             early: EarlyExit::Off,
+            fanout: FanoutPolicy::default(),
         },
     );
     let handle = coord.handle();
@@ -84,6 +85,7 @@ fn early_exit_saves_timesteps_on_xla() {
             queue_depth: 64,
             batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1) },
             early: EarlyExit::Margin { margin: 2, min_steps: chunk },
+            fanout: FanoutPolicy::default(),
         },
     );
     let handle = coord.handle();
@@ -125,6 +127,7 @@ fn xla_and_behavioral_coordinators_agree() {
                 queue_depth: 64,
                 batch: BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(1) },
                 early: EarlyExit::Off,
+                fanout: FanoutPolicy::default(),
             },
         )
     };
@@ -190,6 +193,7 @@ fn backend_fault_fails_batch_not_server() {
             // Batch of 1 so the poisoned request fails alone.
             batch: BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(10) },
             early: EarlyExit::Off,
+            fanout: FanoutPolicy::default(),
         },
     );
     let handle = coord.handle();

@@ -1,0 +1,378 @@
+//! Adversarial concurrency suite for the sharded coordinator: many
+//! producers against the work-stealing ingress, intra-batch fan-out
+//! reassembly, a pinned-worker steal-path scenario, and shutdown racing
+//! live submissions. Every test runs under a watchdog so a regression
+//! shows up as a failure, never as a hung CI job.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use snn_rtl::coordinator::{
+    Backend, BackendOutput, BatchPolicy, Coordinator, CoordinatorConfig, FanoutPolicy,
+    Request,
+};
+use snn_rtl::data::{Image, IMG_PIXELS};
+use snn_rtl::error::Error;
+use snn_rtl::snn::EarlyExit;
+use snn_rtl::SnnConfig;
+
+/// Run `body` on a helper thread and fail loudly if it does not finish
+/// within `limit` — the concurrency suite's hang detector. The panic
+/// unwinds in the main test thread, so cargo reports a normal failure.
+fn with_watchdog<F: FnOnce() + Send + 'static>(limit: Duration, body: F) {
+    let (done_tx, done_rx) = mpsc::channel();
+    let runner = std::thread::spawn(move || {
+        body();
+        let _ = done_tx.send(());
+    });
+    match done_rx.recv_timeout(limit) {
+        // Finished or panicked: join and propagate the real outcome.
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(payload) = runner.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("watchdog: test exceeded {limit:?} — likely a hang/deadlock")
+        }
+    }
+}
+
+fn image_for(seed: u32) -> Image {
+    Image { label: (seed % 10) as u8, pixels: vec![(seed % 251) as u8; IMG_PIXELS] }
+}
+
+/// Deterministic backend that echoes each request's seed back through the
+/// response (`class = seed % 10`, `spike_counts[0] = seed`,
+/// `spike_counts[1] = checksum(image)`), so any cross-wiring of requests
+/// and replies — lost, duplicated, or reordered sub-batch reassembly —
+/// is directly observable at the client. `steps_run` reports the
+/// (sub-)batch length the request was executed in.
+struct EchoBackend {
+    cfg: SnnConfig,
+    slow_seed: Option<u32>,
+    slow_for: Duration,
+}
+
+impl EchoBackend {
+    fn new() -> Self {
+        EchoBackend { cfg: SnnConfig::paper(), slow_seed: None, slow_for: Duration::ZERO }
+    }
+
+    fn with_slow_seed(seed: u32, slow_for: Duration) -> Self {
+        EchoBackend { slow_seed: Some(seed), slow_for, ..EchoBackend::new() }
+    }
+}
+
+fn checksum(img: &Image) -> u32 {
+    img.pixels.iter().fold(0u32, |h, &b| h.wrapping_mul(31).wrapping_add(u32::from(b)))
+}
+
+impl Backend for EchoBackend {
+    fn name(&self) -> &'static str {
+        "echo"
+    }
+
+    fn classify_batch(
+        &self,
+        images: &[&Image],
+        seeds: &[u32],
+        _early: EarlyExit,
+    ) -> snn_rtl::Result<Vec<BackendOutput>> {
+        if let Some(slow) = self.slow_seed {
+            if seeds.contains(&slow) {
+                std::thread::sleep(self.slow_for);
+            }
+        }
+        Ok(images
+            .iter()
+            .zip(seeds)
+            .map(|(img, &seed)| BackendOutput {
+                class: (seed % 10) as u8,
+                spike_counts: vec![seed, checksum(img)],
+                steps_run: images.len() as u32,
+            })
+            .collect())
+    }
+
+    fn config(&self) -> &SnnConfig {
+        &self.cfg
+    }
+}
+
+/// The headline stress test: 6 producers x 250 requests with mixed batch
+/// sizes (the batcher forms anything from singletons to 24-item batches,
+/// and fan-out splits the large ones), asserting zero lost, duplicated,
+/// or cross-wired replies and in-order sub-batch reassembly.
+#[test]
+fn stress_many_producers_no_loss_no_duplication() {
+    with_watchdog(Duration::from_secs(120), || {
+        const PRODUCERS: u32 = 6;
+        const PER_PRODUCER: u32 = 250;
+        let backend = Arc::new(EchoBackend::new());
+        let coord = Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                workers: 4,
+                queue_depth: 512,
+                batch: BatchPolicy { max_batch: 24, max_delay: Duration::from_micros(300) },
+                early: EarlyExit::Off,
+                // Low crossover so the stress load exercises fan-out
+                // reassembly constantly, not just on rare giant batches.
+                fanout: FanoutPolicy { min_batch: 8, max_parts: 3 },
+            },
+        );
+
+        let producers: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let handle = coord.handle();
+                std::thread::spawn(move || {
+                    let mut replies = Vec::new();
+                    for i in 0..PER_PRODUCER {
+                        let seed = p * 10_000 + i;
+                        let img = image_for(seed);
+                        let expect_sum = checksum(&img);
+                        // Mixed arrival pattern: bursts then a breather, so
+                        // batch sizes vary across the whole range.
+                        if i % 17 == 0 {
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                        let rx = loop {
+                            match handle.submit(Request {
+                                image: image_for(seed),
+                                seed: Some(seed),
+                            }) {
+                                Ok(rx) => break rx,
+                                Err(Error::Rejected(_)) => {
+                                    std::thread::sleep(Duration::from_micros(50));
+                                }
+                                Err(e) => panic!("unexpected submit error: {e}"),
+                            }
+                        };
+                        replies.push((seed, expect_sum, rx));
+                    }
+                    for (seed, expect_sum, rx) in replies {
+                        let resp = rx.recv().expect("reply channel dropped").expect("backend ok");
+                        assert_eq!(resp.seed, seed, "seed echo mismatch");
+                        assert_eq!(resp.class, (seed % 10) as u8, "cross-wired class");
+                        assert_eq!(
+                            resp.spike_counts[0], seed,
+                            "reply carries another request's payload"
+                        );
+                        assert_eq!(
+                            resp.spike_counts[1], expect_sum,
+                            "reply image checksum mismatch (reassembly disorder)"
+                        );
+                    }
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().expect("producer panicked");
+        }
+
+        let snap = coord.metrics().snapshot();
+        let total = u64::from(PRODUCERS * PER_PRODUCER);
+        assert_eq!(snap.completed, total, "every accepted request answered exactly once");
+        assert_eq!(snap.failed, 0);
+        assert!(
+            snap.fanout_batches > 0,
+            "stress run must exercise the fan-out path (mean batch {:.2})",
+            snap.mean_batch_size
+        );
+        coord.shutdown();
+    });
+}
+
+/// Steal-path pin: one worker gets stuck on a deliberately slow batch;
+/// its queued requests must be drained by the sibling long before the
+/// slow batch completes, and the steal counter must show it.
+#[test]
+fn siblings_steal_from_blocked_workers_shard() {
+    with_watchdog(Duration::from_secs(60), || {
+        const SLOW_SEED: u32 = 0xDEAD;
+        let slow_for = Duration::from_millis(800);
+        let backend = Arc::new(EchoBackend::with_slow_seed(SLOW_SEED, slow_for));
+        let coord = Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                workers: 2,
+                queue_depth: 256,
+                // Singleton batches: the slow request occupies exactly one
+                // worker, everything else is independent.
+                batch: BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(100) },
+                early: EarlyExit::Off,
+                fanout: FanoutPolicy::off(),
+            },
+        );
+        let handle = coord.handle();
+
+        let slow_rx = handle
+            .submit(Request { image: image_for(SLOW_SEED), seed: Some(SLOW_SEED) })
+            .unwrap();
+        // Give a worker time to pick the slow request up.
+        std::thread::sleep(Duration::from_millis(50));
+
+        // Burst 40 fast requests; shortest-queue placement spreads them
+        // over both shards, including the blocked worker's.
+        let t0 = Instant::now();
+        let fast: Vec<_> = (0..40u32)
+            .map(|i| handle.submit(Request { image: image_for(i), seed: Some(i) }).unwrap())
+            .collect();
+        for rx in fast {
+            rx.recv().unwrap().unwrap();
+        }
+        let fast_elapsed = t0.elapsed();
+        assert!(
+            fast_elapsed < slow_for,
+            "fast requests waited on the blocked worker ({fast_elapsed:?} >= {slow_for:?}) — \
+             stealing is not draining its shard"
+        );
+        let stolen = coord.metrics().snapshot().steals;
+        assert!(stolen > 0, "sibling must have stolen from the blocked worker's shard");
+
+        slow_rx.recv().unwrap().unwrap();
+        coord.shutdown();
+    });
+}
+
+/// Shutdown under load: submissions racing `Coordinator::stop` must all
+/// resolve — a response, a backend error, or `Error::Rejected` — and
+/// never hang. The watchdog is the assertion.
+#[test]
+fn shutdown_under_load_resolves_every_submission() {
+    with_watchdog(Duration::from_secs(60), || {
+        const PRODUCERS: u32 = 4;
+        const PER_PRODUCER: u32 = 300;
+        let backend = Arc::new(EchoBackend::new());
+        let coord = Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                workers: 3,
+                queue_depth: 64,
+                batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_micros(200) },
+                early: EarlyExit::Off,
+                fanout: FanoutPolicy { min_batch: 8, max_parts: 2 },
+            },
+        );
+
+        // Handshake instead of a timed sleep: the main thread stops the
+        // coordinator once a fraction of the flood has been submitted, so
+        // the remaining (majority of) submissions deterministically race
+        // the shutdown on any machine speed.
+        let submissions = Arc::new(AtomicU64::new(0));
+
+        let producers: Vec<_> = (0..PRODUCERS)
+            .map(|p| {
+                let handle = coord.handle();
+                let submissions = Arc::clone(&submissions);
+                std::thread::spawn(move || {
+                    let mut accepted = 0u64;
+                    let mut rejected = 0u64;
+                    let mut resolved = 0u64;
+                    for i in 0..PER_PRODUCER {
+                        let seed = p * 10_000 + i;
+                        submissions.fetch_add(1, Ordering::Relaxed);
+                        match handle.submit(Request { image: image_for(seed), seed: Some(seed) }) {
+                            Ok(rx) => {
+                                accepted += 1;
+                                // Any resolution is fine — a reply, a batch
+                                // error, or a dropped channel — it just must
+                                // arrive (the watchdog catches hangs).
+                                match rx.recv() {
+                                    Ok(Ok(resp)) => {
+                                        assert_eq!(resp.seed, seed);
+                                        resolved += 1;
+                                    }
+                                    Ok(Err(_)) | Err(_) => resolved += 1,
+                                }
+                            }
+                            Err(Error::Rejected(_)) => rejected += 1,
+                            Err(e) => panic!("unexpected submit error: {e}"),
+                        }
+                    }
+                    (accepted, rejected, resolved)
+                })
+            })
+            .collect();
+
+        // Shut down mid-flood: after at most 1/6 of the submissions, at
+        // least 1000 more are still to come, so some must hit the closed
+        // queue. The watchdog bounds the spin.
+        while submissions.load(Ordering::Relaxed) < u64::from(PRODUCERS * PER_PRODUCER) / 6 {
+            std::thread::sleep(Duration::from_micros(500));
+        }
+        coord.stop();
+
+        let mut accepted = 0u64;
+        let mut rejected = 0u64;
+        let mut resolved = 0u64;
+        for p in producers {
+            let (a, r, d) = p.join().expect("producer panicked");
+            accepted += a;
+            rejected += r;
+            resolved += d;
+        }
+        assert_eq!(
+            accepted + rejected,
+            u64::from(PRODUCERS * PER_PRODUCER),
+            "every submission must resolve to accept or reject"
+        );
+        assert_eq!(resolved, accepted, "every accepted submission must resolve");
+        assert!(rejected > 0, "shutdown raced no submission — weaken the sleep");
+    });
+}
+
+/// Sub-batch fan-out reassembly under a single worker: one large batch
+/// splits across engines, and `steps_run` (which the echo backend sets to
+/// the executed sub-batch length) proves the split actually happened
+/// while the seed echo proves order was restored.
+#[test]
+fn fanout_splits_large_batches_and_preserves_order() {
+    with_watchdog(Duration::from_secs(60), || {
+        let backend = Arc::new(EchoBackend::new());
+        let coord = Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 256,
+                // Generous delay: the batch dispatches the moment it is
+                // full, so this only pads against CI scheduler stalls
+                // mid-burst — it must not carve the 64 submits into
+                // sub-crossover batches.
+                batch: BatchPolicy { max_batch: 64, max_delay: Duration::from_millis(500) },
+                early: EarlyExit::Off,
+                fanout: FanoutPolicy { min_batch: 32, max_parts: 4 },
+            },
+        );
+        let handle = coord.handle();
+        let receivers: Vec<_> = (0..64u32)
+            .map(|i| {
+                (i, handle.submit(Request { image: image_for(i), seed: Some(i) }).unwrap())
+            })
+            .collect();
+        let mut saw_subbatch = false;
+        for (seed, rx) in receivers {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.seed, seed);
+            assert_eq!(resp.spike_counts[0], seed, "reassembly must restore order");
+            // A fanned 64-batch runs as sub-batches of at most 16.
+            if resp.steps_run <= 16 {
+                saw_subbatch = true;
+            }
+        }
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.completed, 64);
+        // The setup guarantees a fan-out-eligible batch (single worker,
+        // 64 queued submits, max_batch 64 >= min_batch 32) — an absent
+        // split is a fan-out regression, not an acceptable schedule.
+        assert!(snap.fanout_batches >= 1, "large batch never fanned out");
+        assert!(
+            saw_subbatch,
+            "fan-out recorded but every request reports a full-size batch"
+        );
+        coord.shutdown();
+    });
+}
