@@ -5,6 +5,7 @@ use std::path::Path;
 
 use crate::data::Image;
 use crate::error::{Error, Result};
+use crate::fixed::{quantize, WeightMatrix, WeightStack};
 
 /// Exact operation counts for one dense-MLP inference.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -140,6 +141,29 @@ impl Mlp {
     pub fn op_counts(&self) -> AnnOpCounts {
         AnnOpCounts::for_topology(self.n_in as u64, self.n_hidden as u64, self.n_out as u64)
     }
+
+    /// Quantize the trained MLP into a spiking [`WeightStack`]
+    /// (`[n_in, n_hidden, n_out]`): each dense layer maps to `bits`-wide
+    /// fixed point under a shared per-layer scale that places the largest
+    /// |w| at full range, so relative weight magnitudes — which determine
+    /// spiking winner order — survive quantization. Biases are dropped:
+    /// the SNN core has no bias path; threshold calibration absorbs them
+    /// (same substitution the paper's training pipeline makes).
+    pub fn to_weight_stack(&self, bits: u32) -> Result<WeightStack> {
+        let quantize_layer = |w: &[f32], n_in: usize, n_out: usize| -> Result<WeightMatrix> {
+            let max_abs = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let scale = if max_abs > 0.0 {
+                ((1i32 << (bits - 1)) - 1) as f32 / max_abs
+            } else {
+                1.0
+            };
+            WeightMatrix::from_rows(n_in, n_out, bits, w.iter().map(|&v| quantize(v, scale, bits)).collect())
+        };
+        WeightStack::from_layers(vec![
+            quantize_layer(&self.w1, self.n_in, self.n_hidden)?,
+            quantize_layer(&self.w2, self.n_hidden, self.n_out)?,
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -190,6 +214,34 @@ mod tests {
         let logits = m.logits(&img);
         assert_eq!(logits[0], 0.0, "relu must zero the negative hidden unit");
         assert!(logits[1] > 0.0);
+    }
+
+    #[test]
+    fn quantizing_exporter_builds_matching_stack() {
+        let mut m = Mlp::zeros(IMG_PIXELS, 4, 3);
+        // Distinct magnitudes per layer so the per-layer scale differs.
+        m.w1[0] = 2.0;
+        m.w1[1] = -1.0;
+        m.w1[5] = 0.5;
+        m.w2 = vec![0.25, -0.125, 0.0, 0.25, 0.0, 0.125, 0.0, 0.0, 0.25, -0.25, 0.125, 0.0];
+        let stack = m.to_weight_stack(9).unwrap();
+        assert_eq!(stack.topology(), vec![IMG_PIXELS, 4, 3]);
+        assert_eq!(stack.bits(), 9);
+        // The largest |w| of each layer maps to the full positive range.
+        assert_eq!(stack.layer(0).get(0, 0), 255);
+        assert_eq!(stack.layer(0).get(0, 1), -128, "half-magnitude negative weight");
+        assert_eq!(stack.layer(1).get(0, 0), 255);
+        // Sign and relative order survive.
+        assert!(stack.layer(1).get(0, 1) < 0);
+        assert!(stack.layer(1).get(1, 2).abs() < stack.layer(1).get(0, 0));
+    }
+
+    #[test]
+    fn quantizing_exporter_handles_all_zero_layer() {
+        let m = Mlp::zeros(IMG_PIXELS, 2, 2);
+        let stack = m.to_weight_stack(9).unwrap();
+        assert!(stack.layer(0).as_slice().iter().all(|&w| w == 0));
+        assert!(stack.layer(1).as_slice().iter().all(|&w| w == 0));
     }
 
     #[test]

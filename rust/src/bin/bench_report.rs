@@ -4,6 +4,9 @@
 //!
 //! * images/sec of the RTL **cycle path** (`RtlCore::run`) and **fast
 //!   path** (`RtlCore::run_fast`),
+//! * images/sec of the fast path at depth 1 (`[784, 10]`) vs depth 2
+//!   (`[784, 128, 10]`) plus coordinator qps for both — the cost of the
+//!   layered schedule, on the perf record,
 //! * end-to-end coordinator qps **and latency percentiles** over the
 //!   pooled fast-path `RtlBackend` at 1 / 2 / 4 / 8 workers on the
 //!   sharded work-stealing ingress,
@@ -11,10 +14,10 @@
 //!   — the latency (not just throughput) acceptance number of the
 //!   sharded-ingress PR,
 //!
-//! and writes the results to `BENCH_2.json` (plus stdout). `BENCH_1.json`
-//! (from the fast-path PR) recorded qps only; BENCH_2 supersedes it with
-//! the percentile columns the sharded ingress is accountable to
-//! (EXPERIMENTS.md §Perf, "Sharded ingress").
+//! and writes the results to `BENCH_3.json` (plus stdout). BENCH_1
+//! recorded qps only; BENCH_2 added the percentile columns; BENCH_3
+//! supersedes both with the depth rows of the N-layer refactor
+//! (EXPERIMENTS.md §Depth).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -24,7 +27,7 @@ use snn_rtl::coordinator::{
     BatchPolicy, Coordinator, CoordinatorConfig, FanoutPolicy, Request, RtlBackend,
 };
 use snn_rtl::data::{DigitGen, Image};
-use snn_rtl::fixed::WeightMatrix;
+use snn_rtl::fixed::{WeightMatrix, WeightStack};
 use snn_rtl::prng::Xorshift32;
 use snn_rtl::rtl::RtlCore;
 use snn_rtl::snn::EarlyExit;
@@ -36,6 +39,23 @@ fn weights(seed: u32) -> WeightMatrix {
         .unwrap()
 }
 
+/// A random stack for an arbitrary topology (same magnitude regime as the
+/// single-layer synthetic weights).
+fn stack(topology: &[usize], seed: u32) -> WeightStack {
+    let mut rng = Xorshift32::new(seed);
+    WeightStack::from_layers(
+        topology
+            .windows(2)
+            .map(|d| {
+                let data: Vec<i32> =
+                    (0..d[0] * d[1]).map(|_| rng.range_i32(-30, 60)).collect();
+                WeightMatrix::from_rows(d[0], d[1], 9, data).unwrap()
+            })
+            .collect(),
+    )
+    .unwrap()
+}
+
 struct CoordRow {
     qps: f64,
     p50_us: u64,
@@ -45,13 +65,14 @@ struct CoordRow {
 
 fn drive_coordinator(
     cfg: &SnnConfig,
+    engine_weights: WeightStack,
     workers: usize,
     batch: BatchPolicy,
     fanout: FanoutPolicy,
     requests: usize,
     images: &[Image],
 ) -> CoordRow {
-    let backend = Arc::new(RtlBackend::new(cfg.clone(), weights(7)).unwrap());
+    let backend = Arc::new(RtlBackend::new(cfg.clone(), engine_weights).unwrap());
     let coord = Coordinator::start(
         backend,
         CoordinatorConfig { workers, queue_depth: 2048, batch, early: EarlyExit::Off, fanout },
@@ -105,6 +126,22 @@ fn main() {
     println!("{}  |  {cycle_ips:.1} images/s", cycle.report());
     println!("{}  |  {fast_ips:.1} images/s  ({speedup:.1}x)", fast.report());
 
+    // Depth: single-layer vs the MLP-shaped two-layer pipeline, engine
+    // level first (images/sec of the fast path).
+    let deep_topology = vec![784usize, 128, 10];
+    let deep_cfg = SnnConfig::paper()
+        .with_topology(deep_topology.clone())
+        .with_timesteps(10);
+    let mut deep_core = RtlCore::new(deep_cfg.clone(), stack(&deep_topology, 7)).unwrap();
+    let mut seed = 1u32;
+    let deep_fast = bench.run("rtl_fast_path_784_128_10_t10", || {
+        seed = seed.wrapping_add(1);
+        black_box(deep_core.run_fast(&img, seed).unwrap());
+    });
+    let deep_ips = deep_fast.throughput(1.0);
+    let depth_cost = fast.mean_ns / deep_fast.mean_ns;
+    println!("{}  |  {deep_ips:.1} images/s  ({depth_cost:.2}x of single-layer)", deep_fast.report());
+
     // Worker scaling over the sharded ingress (small batches: throughput
     // and tail latency of the steady-state serving path).
     let images: Vec<Image> = (0..32).map(|i| gen.sample((i % 10) as u8, i / 10)).collect();
@@ -114,6 +151,7 @@ fn main() {
     for workers in [1usize, 2, 4, 8] {
         let row = drive_coordinator(
             &cfg,
+            weights(7).into(),
             workers,
             small_batch,
             FanoutPolicy::default(),
@@ -127,12 +165,39 @@ fn main() {
         scaling.push((workers, row));
     }
 
+    // Depth through the pooled coordinator: same serving shape, 4
+    // workers, single- vs two-layer engines.
+    let depth_requests = if quick { 96 } else { 384 };
+    let coord_shallow = drive_coordinator(
+        &cfg,
+        weights(7).into(),
+        4,
+        small_batch,
+        FanoutPolicy::default(),
+        depth_requests,
+        &images,
+    );
+    let coord_deep = drive_coordinator(
+        &deep_cfg,
+        stack(&deep_topology, 7),
+        4,
+        small_batch,
+        FanoutPolicy::default(),
+        depth_requests,
+        &images,
+    );
+    println!(
+        "coordinator_depth_w4: [784,10] {:.0} req/s p99 {} µs  |  [784,128,10] {:.0} req/s p99 {} µs",
+        coord_shallow.qps, coord_shallow.p99_us, coord_deep.qps, coord_deep.p99_us
+    );
+
     // Intra-batch fan-out: one worker stream of large (>= 32) batches; the
     // fan-out path must cut p99 against the single-engine baseline.
     let big_batch = BatchPolicy { max_batch: 64, max_delay: Duration::from_micros(500) };
     let fan_requests = if quick { 256 } else { 1024 };
     let fan_off = drive_coordinator(
         &cfg,
+        weights(7).into(),
         4,
         big_batch,
         FanoutPolicy::off(),
@@ -141,6 +206,7 @@ fn main() {
     );
     let fan_on = drive_coordinator(
         &cfg,
+        weights(7).into(),
         4,
         big_batch,
         FanoutPolicy { min_batch: 32, max_parts: 4 },
@@ -158,11 +224,22 @@ fn main() {
 
     // Hand-rolled JSON (no serde in the offline crate set).
     let mut json = String::from("{\n");
-    json.push_str("  \"bench\": \"BENCH_2\",\n");
+    json.push_str("  \"bench\": \"BENCH_3\",\n");
     json.push_str("  \"config\": \"paper_t10\",\n");
     json.push_str(&format!("  \"rtl_cycle_images_per_s\": {cycle_ips:.2},\n"));
     json.push_str(&format!("  \"rtl_fast_images_per_s\": {fast_ips:.2},\n"));
     json.push_str(&format!("  \"fast_path_speedup\": {speedup:.2},\n"));
+    json.push_str("  \"depth\": {\n");
+    json.push_str(&format!(
+        "    \"single_layer_784_10\": {{ \"images_per_s\": {fast_ips:.2}, \"coordinator_w4_qps\": {:.2}, \"coordinator_w4_p99_us\": {} }},\n",
+        coord_shallow.qps, coord_shallow.p99_us
+    ));
+    json.push_str(&format!(
+        "    \"two_layer_784_128_10\": {{ \"images_per_s\": {deep_ips:.2}, \"coordinator_w4_qps\": {:.2}, \"coordinator_w4_p99_us\": {} }},\n",
+        coord_deep.qps, coord_deep.p99_us
+    ));
+    json.push_str(&format!("    \"two_layer_throughput_ratio\": {depth_cost:.3}\n"));
+    json.push_str("  },\n");
     json.push_str("  \"coordinator_rtl\": {\n");
     for (i, (workers, row)) in scaling.iter().enumerate() {
         let comma = if i + 1 == scaling.len() { "" } else { "," };
@@ -183,6 +260,6 @@ fn main() {
         fan_on.qps, fan_on.p50_us, fan_on.p99_us
     ));
     json.push_str("  }\n}\n");
-    std::fs::write("BENCH_2.json", &json).expect("write BENCH_2.json");
-    println!("-> BENCH_2.json");
+    std::fs::write("BENCH_3.json", &json).expect("write BENCH_3.json");
+    println!("-> BENCH_3.json");
 }

@@ -5,6 +5,14 @@
 //! and pruning policy). The behavioral model, the RTL simulator and the
 //! AOT-compiled JAX graph all consume the same struct so that equivalence
 //! tests compare like with like.
+//!
+//! Since the N-layer refactor the topology is a dimension chain
+//! (`[784, 10]` for the paper's single fully connected layer,
+//! `[784, 128, 10]` for the MLP-shaped deep variant): entry `l` is the
+//! input width of layer `l`, entry `l+1` its output width. Every LIF
+//! parameter (threshold, decay, accumulator geometry, policies) is shared
+//! across layers, exactly as one hardware neuron-core design is
+//! instantiated per layer.
 
 use crate::error::{Error, Result};
 
@@ -28,7 +36,10 @@ pub enum LeakMode {
     /// contract).
     PerTimestep,
     /// After every `row_len` inputs (paper §III-B2 "after processing one
-    /// image row"); RTL-only refinement.
+    /// image row"); RTL-only refinement. Rows are image geometry, so this
+    /// schedule applies to the input layer's pixel walk; deeper layers
+    /// (whose inputs are spike registers, not pixel rows) leak once per
+    /// walk.
     PerRow { row_len: usize },
 }
 
@@ -57,10 +68,10 @@ pub enum DecisionPolicy {
 /// Complete architectural configuration of the SNN core.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SnnConfig {
-    /// Number of input channels (pixels). Paper: 28×28 = 784.
-    pub n_inputs: usize,
-    /// Number of output neurons (classes). Paper: 10.
-    pub n_outputs: usize,
+    /// Layer dimension chain: `topology[0]` input channels (pixels),
+    /// `topology[last]` output neurons (classes), anything between a
+    /// hidden spiking layer. Paper: `[784, 10]`.
+    pub topology: Vec<usize>,
     /// Firing threshold `V_th` in accumulator units. Paper: 128 (scaled by
     /// training; see artifacts manifest).
     pub v_th: i32,
@@ -92,8 +103,7 @@ impl Default for SnnConfig {
     /// spike-count readout.
     fn default() -> Self {
         SnnConfig {
-            n_inputs: 784,
-            n_outputs: 10,
+            topology: vec![784, 10],
             v_th: 128,
             v_rest: 0,
             decay_shift: 3,
@@ -112,6 +122,38 @@ impl SnnConfig {
     /// The paper's published configuration (alias of [`Default`]).
     pub fn paper() -> Self {
         Self::default()
+    }
+
+    /// Number of input channels (pixels). Paper: 28×28 = 784.
+    pub fn n_inputs(&self) -> usize {
+        self.topology[0]
+    }
+
+    /// Number of output neurons (classes). Paper: 10.
+    pub fn n_outputs(&self) -> usize {
+        self.topology[self.topology.len() - 1]
+    }
+
+    /// Number of weight layers (connections): `topology.len() - 1`.
+    pub fn n_layers(&self) -> usize {
+        self.topology.len() - 1
+    }
+
+    /// Input width of weight layer `l`.
+    pub fn layer_input(&self, l: usize) -> usize {
+        self.topology[l]
+    }
+
+    /// Output width (neuron count) of weight layer `l`.
+    pub fn layer_output(&self, l: usize) -> usize {
+        self.topology[l + 1]
+    }
+
+    /// The single-connection view of layer `l`: same LIF parameters,
+    /// topology narrowed to `[topology[l], topology[l+1]]`. This is the
+    /// config one behavioral [`crate::snn::LifLayer`] runs.
+    pub fn layer_config(&self, l: usize) -> SnnConfig {
+        SnnConfig { topology: vec![self.topology[l], self.topology[l + 1]], ..self.clone() }
     }
 
     /// Saturation bound of the accumulator: `2^(acc_bits-1) - 1`.
@@ -135,15 +177,27 @@ impl SnnConfig {
         -(1i32 << (self.weight_bits - 1))
     }
 
-    /// Weight storage footprint in bits (the paper's 8.6 KB figure is
-    /// `784 × 10 × 9` bits).
+    /// Weight storage footprint in bits, summed over the layer chain (the
+    /// paper's 8.6 KB figure is `784 × 10 × 9`).
     pub fn weight_storage_bits(&self) -> u64 {
-        self.n_inputs as u64 * self.n_outputs as u64 * u64::from(self.weight_bits)
+        (0..self.n_layers())
+            .map(|l| {
+                self.layer_input(l) as u64
+                    * self.layer_output(l) as u64
+                    * u64::from(self.weight_bits)
+            })
+            .sum()
     }
 
     /// Validate internal consistency; returns `self` for builder-style use.
     pub fn validated(self) -> Result<Self> {
-        if self.n_inputs == 0 || self.n_outputs == 0 {
+        if self.topology.len() < 2 {
+            return Err(Error::InvalidConfig(format!(
+                "topology needs at least an input and an output width, got {:?}",
+                self.topology
+            )));
+        }
+        if self.topology.iter().any(|&d| d == 0) {
             return Err(Error::InvalidConfig("topology dimensions must be nonzero".into()));
         }
         if !(2..=31).contains(&self.acc_bits) {
@@ -182,10 +236,11 @@ impl SnnConfig {
             return Err(Error::InvalidConfig("timesteps must be nonzero".into()));
         }
         if let LeakMode::PerRow { row_len } = self.leak_mode {
-            if row_len == 0 || row_len > self.n_inputs {
+            if row_len == 0 || row_len > self.n_inputs() {
                 return Err(Error::InvalidConfig(format!(
                     "leak row_len {} outside 1..={}",
-                    row_len, self.n_inputs
+                    row_len,
+                    self.n_inputs()
                 )));
             }
         }
@@ -202,6 +257,10 @@ impl SnnConfig {
     }
 
     /// Builder-style setters (used pervasively by experiments/ablations).
+    pub fn with_topology(mut self, t: Vec<usize>) -> Self {
+        self.topology = t;
+        self
+    }
     pub fn with_timesteps(mut self, t: u32) -> Self {
         self.timesteps = t;
         self
@@ -239,13 +298,30 @@ mod tests {
     #[test]
     fn paper_config_is_valid() {
         let c = SnnConfig::paper().validated().unwrap();
-        assert_eq!(c.n_inputs, 784);
-        assert_eq!(c.n_outputs, 10);
+        assert_eq!(c.n_inputs(), 784);
+        assert_eq!(c.n_outputs(), 10);
+        assert_eq!(c.n_layers(), 1);
         assert_eq!(c.v_th, 128);
         assert_eq!(c.weight_storage_bits(), 784 * 10 * 9);
         // Paper: "~8.6 KB"
         let kb = c.weight_storage_bits() as f64 / 8.0 / 1024.0;
         assert!((kb - 8.61).abs() < 0.02, "weight storage {kb} KB");
+    }
+
+    #[test]
+    fn layered_topology_accessors() {
+        let c = SnnConfig::paper().with_topology(vec![784, 128, 10]).validated().unwrap();
+        assert_eq!(c.n_layers(), 2);
+        assert_eq!(c.n_inputs(), 784);
+        assert_eq!(c.n_outputs(), 10);
+        assert_eq!((c.layer_input(0), c.layer_output(0)), (784, 128));
+        assert_eq!((c.layer_input(1), c.layer_output(1)), (128, 10));
+        assert_eq!(c.weight_storage_bits(), (784 * 128 + 128 * 10) * 9);
+        let l0 = c.layer_config(0);
+        assert_eq!(l0.topology, vec![784, 128]);
+        assert_eq!(l0.v_th, c.v_th);
+        let l1 = c.layer_config(1);
+        assert_eq!(l1.topology, vec![128, 10]);
     }
 
     #[test]
@@ -259,7 +335,11 @@ mod tests {
 
     #[test]
     fn rejects_bad_configs() {
-        assert!(SnnConfig { n_inputs: 0, ..SnnConfig::paper() }.validated().is_err());
+        assert!(SnnConfig { topology: vec![0, 10], ..SnnConfig::paper() }.validated().is_err());
+        assert!(SnnConfig { topology: vec![784], ..SnnConfig::paper() }.validated().is_err());
+        assert!(SnnConfig { topology: vec![784, 0, 10], ..SnnConfig::paper() }
+            .validated()
+            .is_err());
         assert!(SnnConfig { decay_shift: 0, ..SnnConfig::paper() }.validated().is_err());
         assert!(SnnConfig { v_th: 0, ..SnnConfig::paper() }.validated().is_err());
         assert!(SnnConfig { v_th: 1 << 30, acc_bits: 24, ..SnnConfig::paper() }
@@ -284,6 +364,7 @@ mod tests {
     #[test]
     fn builders_compose() {
         let c = SnnConfig::paper()
+            .with_topology(vec![784, 32, 10])
             .with_timesteps(5)
             .with_v_th(200)
             .with_decay_shift(4)
@@ -292,6 +373,7 @@ mod tests {
             .with_decision(DecisionPolicy::FirstSpike)
             .validated()
             .unwrap();
+        assert_eq!(c.topology, vec![784, 32, 10]);
         assert_eq!(c.timesteps, 5);
         assert_eq!(c.v_th, 200);
         assert_eq!(c.decay_shift, 4);

@@ -3,11 +3,13 @@
 //! | backend | substrate | early exit | use |
 //! |---|---|---|---|
 //! | [`BehavioralBackend`] | pure-Rust golden model | per-timestep | exactness + speed |
-//! | [`RtlBackend`] | RTL core (fast-path engine) | full window | cycle/energy accounting |
+//! | [`RtlBackend`] | RTL core (fast-path engine) | per-timestep | cycle/energy accounting |
 //! | [`XlaBackend`] | AOT JAX/Pallas via PJRT | per-chunk | the compiled L2/L1 stack |
 //!
 //! All three implement the same architectural contract, so the coordinator
-//! (and the equivalence tests) can swap them freely.
+//! (and the equivalence tests) can swap them freely. Backends are built
+//! from a [`WeightStack`], so any `SnnConfig::topology` depth serves —
+//! a bare [`WeightMatrix`] converts into the single-layer chain.
 //!
 //! Concurrency: the behavioral and RTL backends keep their stateful
 //! engines in an [`InstancePool`] — each `classify_batch` checks a private
@@ -19,15 +21,15 @@
 //! pool. The XLA backend still serializes (PJRT handles are `Send` but
 //! not `Sync`).
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::config::SnnConfig;
 use crate::data::Image;
 use crate::error::Result;
-use crate::fixed::WeightMatrix;
-use crate::rtl::RtlCore;
+use crate::fixed::{WeightMatrix, WeightStack};
+use crate::rtl::{ActivityCounters, RtlCore};
 use crate::runtime::XlaSnn;
-use crate::snn::{BehavioralNet, EarlyExit, LifLayer};
+use crate::snn::{BehavioralNet, EarlyExit, LifStack};
 use crate::util::priority_argmax;
 
 use super::pool::{default_pool_slots, InstancePool};
@@ -75,20 +77,20 @@ pub trait Backend: Send + Sync {
 // ---------------------------------------------------------------------------
 
 /// The behavioral golden model as a backend (per-image, early-exit
-/// capable). Worker threads check reusable [`LifLayer`] instances out of a
+/// capable). Worker threads check reusable [`LifStack`] instances out of a
 /// pool, so concurrent batches neither serialize nor clone layer state per
 /// request.
 pub struct BehavioralBackend {
     net: BehavioralNet,
-    layers: InstancePool<LifLayer>,
+    stacks: InstancePool<LifStack>,
 }
 
 impl BehavioralBackend {
-    pub fn new(cfg: SnnConfig, weights: WeightMatrix) -> Result<Self> {
+    pub fn new(cfg: SnnConfig, weights: impl Into<WeightStack>) -> Result<Self> {
         let net = BehavioralNet::new(cfg, weights)?;
-        let proto = net.layer_prototype();
-        let layers = InstancePool::new(default_pool_slots(), move || proto.clone());
-        Ok(BehavioralBackend { net, layers })
+        let proto = net.stack_prototype();
+        let stacks = InstancePool::new(default_pool_slots(), move || proto.clone());
+        Ok(BehavioralBackend { net, stacks })
     }
 }
 
@@ -104,12 +106,12 @@ impl Backend for BehavioralBackend {
         early: EarlyExit,
     ) -> Result<Vec<BackendOutput>> {
         let t = self.net.config().timesteps;
-        let mut layer = self.layers.checkout();
+        let mut stack = self.stacks.checkout();
         Ok(images
             .iter()
             .zip(seeds)
             .map(|(img, &seed)| {
-                let c = self.net.classify_with(&mut layer, img, seed, t, early);
+                let c = self.net.classify_with(&mut stack, img, seed, t, early);
                 BackendOutput {
                     class: c.class,
                     spike_counts: c.spike_counts,
@@ -127,36 +129,68 @@ impl Backend for BehavioralBackend {
 // ---------------------------------------------------------------------------
 
 /// The RTL core as a backend, running the batched-timestep fast path
-/// ([`RtlCore::run_fast`] — bit-exact with the cycle engine by property
-/// test). Each worker's batch checks a private core out of the pool, so
-/// cycle-accounted serving scales with the coordinator's worker count
+/// ([`RtlCore::run_fast_early`] — bit-exact with the cycle engine by
+/// property test, with the serving-level margin policy applied between
+/// timesteps). Each worker's batch checks a private core out of the pool,
+/// so cycle-accounted serving scales with the coordinator's worker count
 /// instead of serializing on a single simulator instance.
 pub struct RtlBackend {
     cores: InstancePool<RtlCore>,
     cfg: SnnConfig,
+    /// Activity harvested from cores the pool dropped (overflow past the
+    /// stash cap, poisoned slots). Folded into [`RtlBackend::total_cycles`]
+    /// so accounting stays exact under fan-out bursts.
+    evicted: Arc<Mutex<ActivityCounters>>,
 }
 
 impl RtlBackend {
-    pub fn new(cfg: SnnConfig, weights: WeightMatrix) -> Result<Self> {
+    pub fn new(cfg: SnnConfig, weights: impl Into<WeightStack>) -> Result<Self> {
+        Self::with_slots(cfg, weights, default_pool_slots())
+    }
+
+    /// Build with an explicit pool size (tests pin eviction behaviour;
+    /// production uses [`RtlBackend::new`]'s per-core default).
+    pub fn with_slots(
+        cfg: SnnConfig,
+        weights: impl Into<WeightStack>,
+        slots: usize,
+    ) -> Result<Self> {
+        let weights: WeightStack = weights.into();
         // Validate geometry/config once, up front, so the pool factory
         // cannot fail later.
         RtlCore::new(cfg.clone(), weights.clone())?;
         let factory_cfg = cfg.clone();
-        let cores = InstancePool::new(default_pool_slots(), move || {
+        let evicted = Arc::new(Mutex::new(ActivityCounters::default()));
+        let sink = Arc::clone(&evicted);
+        let cores = InstancePool::new(slots, move || {
             RtlCore::new(factory_cfg.clone(), weights.clone())
-                .expect("validated at RtlBackend::new")
+                .expect("validated at RtlBackend::with_slots")
+        })
+        .with_evict_hook(move |core: &mut RtlCore| {
+            if let Ok(mut total) = sink.lock() {
+                total.add(&core.total_activity());
+            }
         });
-        Ok(RtlBackend { cores, cfg })
+        Ok(RtlBackend { cores, cfg, evicted })
     }
 
-    /// Total cycles burned so far across the pooled cores (experiment
-    /// observability). Overflow instances are recycled through the pool's
-    /// stash and counted once released; only cores currently mid-batch or
-    /// dropped past the stash cap are missed.
-    pub fn total_cycles(&self) -> u64 {
-        let mut total = 0u64;
-        self.cores.for_each(|core| total += core.total_activity().cycles);
+    /// Total activity burned so far across every core this backend ever
+    /// ran: the live pool (slots + recycled stash) plus everything
+    /// harvested from dropped cores by the eviction hook. Exact once all
+    /// in-flight batches have returned their engines.
+    pub fn total_activity(&self) -> ActivityCounters {
+        let mut total = self
+            .evicted
+            .lock()
+            .map(|t| *t)
+            .unwrap_or_default();
+        self.cores.for_each(|core| total.add(&core.total_activity()));
         total
+    }
+
+    /// Total cycles burned so far (see [`RtlBackend::total_activity`]).
+    pub fn total_cycles(&self) -> u64 {
+        self.total_activity().cycles
     }
 }
 
@@ -169,18 +203,18 @@ impl Backend for RtlBackend {
         &self,
         images: &[&Image],
         seeds: &[u32],
-        _early: EarlyExit,
+        early: EarlyExit,
     ) -> Result<Vec<BackendOutput>> {
         let mut core = self.cores.checkout();
         images
             .iter()
             .zip(seeds)
             .map(|(img, &seed)| {
-                let r = core.run_fast(img, seed)?;
+                let r = core.run_fast_early(img, seed, early)?;
                 Ok(BackendOutput {
                     class: r.class,
                     spike_counts: r.spike_counts,
-                    steps_run: self.cfg.timesteps,
+                    steps_run: r.membrane_by_step.len() as u32,
                 })
             })
             .collect()
@@ -242,12 +276,14 @@ impl XlaBackend {
     }
 }
 
-/// True when every row's leader beats its runner-up by `margin`.
+/// True when every row's leader beats its runner-up by `margin`. Rows
+/// without a runner-up (degenerate single-output topologies) are never
+/// confident — same rule as the behavioral/RTL margin checks.
 fn all_confident(counts: &[Vec<u32>], margin: u32) -> bool {
     counts.iter().all(|row| {
         let mut sorted = row.clone();
         sorted.sort_unstable_by(|a, b| b.cmp(a));
-        sorted[0] >= sorted[1] + margin
+        sorted.len() > 1 && sorted[0] >= sorted[1] + margin
     })
 }
 
@@ -296,6 +332,7 @@ impl Backend for XlaBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::PruneMode;
     use crate::data::DigitGen;
     use std::sync::Arc;
 
@@ -308,6 +345,28 @@ mod tests {
             }
         }
         WeightMatrix::from_rows(784, 10, 9, w).unwrap()
+    }
+
+    /// A crisp 784→20→10 stack (same block structure as `test_weights`
+    /// routed through hidden pairs).
+    fn test_stack() -> WeightStack {
+        let mut w1 = vec![0i32; 784 * 20];
+        for i in 0..784 {
+            let block = i / 79;
+            if block < 10 {
+                w1[i * 20 + 2 * block] = 40;
+                w1[i * 20 + 2 * block + 1] = 40;
+            }
+        }
+        let mut w2 = vec![0i32; 20 * 10];
+        for h in 0..20 {
+            w2[h * 10 + h / 2] = 200;
+        }
+        WeightStack::from_layers(vec![
+            WeightMatrix::from_rows(784, 20, 9, w1).unwrap(),
+            WeightMatrix::from_rows(20, 10, 9, w2).unwrap(),
+        ])
+        .unwrap()
     }
 
     #[test]
@@ -326,6 +385,96 @@ mod tests {
             assert_eq!(x.spike_counts, y.spike_counts);
         }
         assert!(rtl.total_cycles() > 0);
+    }
+
+    #[test]
+    fn deep_backends_agree_through_the_pool() {
+        // The 2-layer stack through both pooled backends: same decisions,
+        // same final-layer counts.
+        let cfg = SnnConfig::paper()
+            .with_topology(vec![784, 20, 10])
+            .with_timesteps(5)
+            .with_prune(PruneMode::Off);
+        let beh = BehavioralBackend::new(cfg.clone(), test_stack()).unwrap();
+        let rtl = RtlBackend::new(cfg, test_stack()).unwrap();
+        let gen = DigitGen::new(3);
+        let images: Vec<Image> = (0..8).map(|i| gen.sample((i % 10) as u8, i)).collect();
+        let refs: Vec<&Image> = images.iter().collect();
+        let seeds: Vec<u32> = (0..8).map(|i| 300 + i).collect();
+        let a = beh.classify_batch(&refs, &seeds, EarlyExit::Off).unwrap();
+        let b = rtl.classify_batch(&refs, &seeds, EarlyExit::Off).unwrap();
+        assert_eq!(a, b, "deep behavioral and RTL backends diverge");
+    }
+
+    #[test]
+    fn rtl_early_exit_matches_behavioral_steps_run() {
+        // The satellite contract: the RTL backend's per-timestep margin
+        // check stops on exactly the timestep the behavioral model does —
+        // for every image, not just on average.
+        let cfg = SnnConfig::paper().with_timesteps(20).with_prune(PruneMode::Off);
+        let beh = BehavioralBackend::new(cfg.clone(), test_weights()).unwrap();
+        let rtl = RtlBackend::new(cfg, test_weights()).unwrap();
+        // Block images: class k lights exactly the pixels feeding output
+        // k, so the margin reliably opens within the window.
+        let images: Vec<Image> = (0..10)
+            .map(|class: usize| {
+                let mut px = vec![0u8; 784];
+                for (i, p) in px.iter_mut().enumerate() {
+                    if i / 79 == class {
+                        *p = 250;
+                    }
+                }
+                Image { label: class as u8, pixels: px }
+            })
+            .collect();
+        let refs: Vec<&Image> = images.iter().collect();
+        let seeds: Vec<u32> = (0..10).map(|i| 900 + i).collect();
+        let early = EarlyExit::Margin { margin: 3, min_steps: 2 };
+        let a = beh.classify_batch(&refs, &seeds, early).unwrap();
+        let b = rtl.classify_batch(&refs, &seeds, early).unwrap();
+        let mut any_early = false;
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.steps_run, y.steps_run, "steps_run diverges for image {i}");
+            assert_eq!(x.class, y.class, "class diverges for image {i}");
+            assert_eq!(x.spike_counts, y.spike_counts, "counts diverge for image {i}");
+            any_early |= x.steps_run < 20;
+        }
+        assert!(any_early, "margin never triggered — the test exercises nothing");
+    }
+
+    #[test]
+    fn rtl_cycle_accounting_is_exact_under_fanout_pressure() {
+        // 1 slot + stash cap 1, six concurrent batches: at least four
+        // overflow cores get built and some drop past the stash cap. The
+        // eviction hook must preserve their cycles, making the total
+        // exactly requests × (784+1+1) × T.
+        let timesteps = 3u32;
+        let cfg = SnnConfig::paper().with_timesteps(timesteps);
+        let rtl = Arc::new(RtlBackend::with_slots(cfg, test_weights(), 1).unwrap());
+        let gen = DigitGen::new(11);
+        let images: Arc<Vec<Image>> =
+            Arc::new((0..6).map(|i| gen.sample(i as u8, i)).collect());
+        let barrier = Arc::new(std::sync::Barrier::new(6));
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                let rtl = Arc::clone(&rtl);
+                let images = Arc::clone(&images);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    rtl.classify_batch(&[&images[i]], &[500 + i as u32], EarlyExit::Off)
+                        .unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            rtl.total_cycles(),
+            6 * 786 * u64::from(timesteps),
+            "cycles lost: eviction hook failed to harvest dropped cores"
+        );
     }
 
     #[test]

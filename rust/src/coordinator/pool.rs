@@ -39,6 +39,12 @@ pub struct InstancePool<T> {
     overflow_cap: usize,
     next: AtomicUsize,
     factory: Box<dyn Fn() -> T + Send + Sync>,
+    /// Last-look hook run on any instance the pool is about to *drop*
+    /// (overflow past the stash cap, or a poisoned slot being healed).
+    /// Lets owners harvest cumulative state — e.g. the RTL backend folds
+    /// a dying core's `ActivityCounters` into a shared total so cycle
+    /// accounting stays exact under fan-out bursts.
+    on_evict: Option<Box<dyn Fn(&mut T) + Send + Sync>>,
 }
 
 impl<T> InstancePool<T> {
@@ -52,6 +58,21 @@ impl<T> InstancePool<T> {
             overflow_cap: slots,
             next: AtomicUsize::new(0),
             factory: Box::new(factory),
+            on_evict: None,
+        }
+    }
+
+    /// Install the eviction hook (builder style; set before the pool is
+    /// shared). See the `on_evict` field docs.
+    pub fn with_evict_hook(mut self, hook: impl Fn(&mut T) + Send + Sync + 'static) -> Self {
+        self.on_evict = Some(Box::new(hook));
+        self
+    }
+
+    /// Run the eviction hook on an instance that is about to drop.
+    fn evict(&self, mut instance: T) {
+        if let Some(hook) = &self.on_evict {
+            hook(&mut instance);
         }
     }
 
@@ -76,12 +97,16 @@ impl<T> InstancePool<T> {
             let mut guard = match slot.try_lock() {
                 Ok(g) => g,
                 // A worker panicked mid-batch: the instance may be in a
-                // torn state, so drop it, heal the poison flag (or every
-                // future checkout would rebuild forever) and refill below.
+                // torn state, so drop it (through the eviction hook, so
+                // its cumulative counters are not lost), heal the poison
+                // flag (or every future checkout would rebuild forever)
+                // and refill below.
                 Err(TryLockError::Poisoned(p)) => {
                     slot.clear_poison();
                     let mut g = p.into_inner();
-                    *g = None;
+                    if let Some(dead) = g.take() {
+                        self.evict(dead);
+                    }
                     g
                 }
                 Err(TryLockError::WouldBlock) => continue,
@@ -98,13 +123,19 @@ impl<T> InstancePool<T> {
 
     /// Return a released overflow instance to the stash, up to the cap.
     fn restash(&self, instance: T) {
+        let mut instance = Some(instance);
         if let Ok(mut e) = self.extra.lock() {
             if e.len() < self.overflow_cap {
-                e.push(instance);
+                e.push(instance.take().expect("instance present"));
             }
         }
-        // A poisoned stash lock or a full stash simply drops the instance —
-        // the slot ring alone already guarantees the configured capacity.
+        // A poisoned stash lock or a full stash drops the instance — the
+        // slot ring alone already guarantees the configured capacity —
+        // but the eviction hook gets a last look first, so cumulative
+        // state (cycle counters) survives the drop.
+        if let Some(dropped) = instance {
+            self.evict(dropped);
+        }
     }
 
     /// Visit every pooled instance (blocking on busy slots), including
@@ -309,8 +340,33 @@ mod tests {
     }
 
     #[test]
-    fn parallel_hammering_is_safe() {
-        let pool = Arc::new(InstancePool::new(4, || 0u64));
+    fn evict_hook_sees_instances_dropped_past_the_stash_cap() {
+        let harvested = Arc::new(AtomicU32::new(0));
+        let sink = Arc::clone(&harvested);
+        let pool = InstancePool::new(2, || 1u32)
+            .with_evict_hook(move |v: &mut u32| {
+                sink.fetch_add(*v, Ordering::Relaxed);
+            });
+        {
+            // 6 concurrent checkouts: 2 slots + 4 overflow; stash cap 2,
+            // so exactly 2 overflow instances drop — through the hook.
+            let _gs: Vec<_> = (0..6).map(|_| pool.checkout()).collect();
+        }
+        assert_eq!(pool.stashed(), 2);
+        assert_eq!(
+            harvested.load(Ordering::Relaxed),
+            2,
+            "the two past-cap instances must pass through the evict hook"
+        );
+    }
+
+    #[test]
+    fn parallel_hammering_is_safe_and_evict_hook_keeps_totals_exact() {
+        let evicted = Arc::new(AtomicU32::new(0));
+        let sink = Arc::clone(&evicted);
+        let pool = Arc::new(InstancePool::new(4, || 0u64).with_evict_hook(move |v: &mut u64| {
+            sink.fetch_add(*v as u32, Ordering::Relaxed);
+        }));
         let threads: Vec<_> = (0..8)
             .map(|_| {
                 let pool = Arc::clone(&pool);
@@ -327,8 +383,9 @@ mod tests {
         }
         let mut total = 0u64;
         pool.for_each(|v| total += v);
-        // Overflow instances dropped past the stash cap lose their counts,
-        // so pooled totals are a lower bound capped by the true total.
-        assert!(total > 0 && total <= 8 * 500, "total {total}");
+        total += u64::from(evicted.load(Ordering::Relaxed));
+        // With the hook harvesting dropped instances the count is exact,
+        // not a lower bound.
+        assert_eq!(total, 8 * 500, "pooled + evicted totals must be exact");
     }
 }

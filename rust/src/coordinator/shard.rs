@@ -175,6 +175,23 @@ impl<T> ShardedQueue<T> {
         Err(PushError::Full(item.take().expect("item present")))
     }
 
+    /// The one lock-drain-store-depth primitive every pop path shares:
+    /// lock shard `i`, drain up to `max` items FIFO (refreshing the depth
+    /// mirror under the same lock), and report the closed flag as
+    /// observed under that lock — the evidence a `Drained` verdict needs.
+    fn drain_locked(&self, i: usize, max: usize) -> (Option<Vec<T>>, bool) {
+        let shard = &self.shards[i];
+        let mut st = lock(&shard.state);
+        let closed = st.closed;
+        if st.queue.is_empty() {
+            return (None, closed);
+        }
+        let k = st.queue.len().min(max);
+        let items: Vec<T> = st.queue.drain(..k).collect();
+        shard.depth.store(st.queue.len(), Ordering::SeqCst);
+        (Some(items), closed)
+    }
+
     /// Pop up to `max` items for worker `home`: its own deque first
     /// (FIFO), then a steal sweep over the siblings — deepest victim
     /// first, oldest entries first, so stolen requests keep their latency
@@ -183,7 +200,7 @@ impl<T> ShardedQueue<T> {
         let n = self.shards.len();
         debug_assert!(max > 0, "pop_some needs room for at least one item");
         let home = home % n;
-        if let Some(items) = self.drain_shard(home, max) {
+        if let (Some(items), _) = self.drain_locked(home, max) {
             return Popped::Items { items, stolen: 0 };
         }
 
@@ -220,47 +237,24 @@ impl<T> ShardedQueue<T> {
         // Re-check home under its lock: an item may have landed there
         // during the sweep, and the Drained verdict needs home's own
         // (empty && closed) observed under the lock too.
-        let shard = &self.shards[home];
-        let mut st = lock(&shard.state);
-        if !st.queue.is_empty() {
-            let k = st.queue.len().min(max);
-            let items: Vec<T> = st.queue.drain(..k).collect();
-            shard.depth.store(st.queue.len(), Ordering::SeqCst);
-            return Popped::Items { items, stolen: 0 };
-        }
-        if all_closed && st.closed {
-            Popped::Drained
-        } else {
-            Popped::Empty
+        match self.drain_locked(home, max) {
+            (Some(items), _) => Popped::Items { items, stolen: 0 },
+            (None, home_closed) if all_closed && home_closed => Popped::Drained,
+            (None, _) => Popped::Empty,
         }
     }
 
-    /// Lock shard `i` and drain up to `max` items as a steal; when it is
-    /// empty, fold its closed flag (observed under the lock) into
-    /// `all_closed` for the caller's `Drained` verdict.
+    /// Steal sweep step over shard `i` (see [`ShardedQueue::drain_locked`]);
+    /// when it is empty, fold its closed flag into `all_closed` for the
+    /// caller's `Drained` verdict.
     fn steal_from(&self, i: usize, max: usize, all_closed: &mut bool) -> Option<Popped<T>> {
-        let shard = &self.shards[i];
-        let mut st = lock(&shard.state);
-        if !st.queue.is_empty() {
-            let k = st.queue.len().min(max);
-            let items: Vec<T> = st.queue.drain(..k).collect();
-            shard.depth.store(st.queue.len(), Ordering::SeqCst);
-            return Some(Popped::Items { stolen: items.len(), items });
+        match self.drain_locked(i, max) {
+            (Some(items), _) => Some(Popped::Items { stolen: items.len(), items }),
+            (None, closed) => {
+                *all_closed &= closed;
+                None
+            }
         }
-        *all_closed &= st.closed;
-        None
-    }
-
-    fn drain_shard(&self, i: usize, max: usize) -> Option<Vec<T>> {
-        let shard = &self.shards[i];
-        let mut st = lock(&shard.state);
-        if st.queue.is_empty() {
-            return None;
-        }
-        let k = st.queue.len().min(max);
-        let items: Vec<T> = st.queue.drain(..k).collect();
-        shard.depth.store(st.queue.len(), Ordering::SeqCst);
-        Some(items)
     }
 
     /// Park the caller until an item is likely available, the queue

@@ -16,11 +16,14 @@ use std::path::Path;
 
 use super::{Dataset, Image, IMG_PIXELS, IMG_SIDE};
 use crate::error::{Error, Result};
-use crate::fixed::{pack_weights, unpack_weights, WeightMatrix};
+use crate::fixed::{pack_weights, unpack_weights, WeightMatrix, WeightStack};
 
 const DATASET_MAGIC: &[u8; 4] = b"SNND";
 const WEIGHTS_MAGIC: &[u8; 4] = b"SNNW";
 const VERSION: u32 = 1;
+/// SNNW version 2: the multi-layer stack layout (layer count + per-layer
+/// geometry header, then one packed blob per layer).
+const STACK_VERSION: u32 = 2;
 
 /// Weights plus the LIF calibration they were trained against.
 #[derive(Debug, Clone, PartialEq)]
@@ -42,8 +45,7 @@ impl WeightArtifact {
     pub fn config(&self) -> crate::SnnConfig {
         use crate::config::PruneMode;
         crate::SnnConfig {
-            n_inputs: self.weights.n_inputs(),
-            n_outputs: self.weights.n_outputs(),
+            topology: vec![self.weights.n_inputs(), self.weights.n_outputs()],
             v_th: self.v_th,
             decay_shift: self.decay_shift,
             weight_bits: self.weights.bits(),
@@ -190,6 +192,126 @@ pub fn load_weights(path: impl AsRef<Path>) -> Result<WeightArtifact> {
     Ok(WeightArtifact { weights, v_th, decay_shift, timesteps, prune_after })
 }
 
+/// A multi-layer weight chain plus the LIF calibration it was trained
+/// against — the N-layer generalization of [`WeightArtifact`], stored as
+/// SNNW version 2.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightStackArtifact {
+    pub stack: WeightStack,
+    pub v_th: i32,
+    pub decay_shift: u32,
+    pub timesteps: u32,
+    pub prune_after: u32,
+}
+
+impl WeightStackArtifact {
+    /// The [`crate::SnnConfig`] this stack was calibrated for.
+    pub fn config(&self) -> crate::SnnConfig {
+        use crate::config::PruneMode;
+        crate::SnnConfig {
+            topology: self.stack.topology(),
+            v_th: self.v_th,
+            decay_shift: self.decay_shift,
+            weight_bits: self.stack.bits(),
+            timesteps: self.timesteps,
+            prune: if self.prune_after == 0 {
+                PruneMode::Off
+            } else {
+                PruneMode::AfterFires { after_spikes: self.prune_after }
+            },
+            ..crate::SnnConfig::paper()
+        }
+    }
+}
+
+/// Write a multi-layer weight stack + calibration in SNNW v2 format.
+pub fn save_weight_stack(path: impl AsRef<Path>, art: &WeightStackArtifact) -> Result<()> {
+    let path = path.as_ref();
+    let mut out = Vec::new();
+    out.extend_from_slice(WEIGHTS_MAGIC);
+    out.extend_from_slice(&STACK_VERSION.to_le_bytes());
+    out.extend_from_slice(&(art.stack.n_layers() as u32).to_le_bytes());
+    for m in art.stack.layers() {
+        out.extend_from_slice(&(m.n_inputs() as u32).to_le_bytes());
+        out.extend_from_slice(&(m.n_outputs() as u32).to_le_bytes());
+    }
+    out.extend_from_slice(&art.stack.bits().to_le_bytes());
+    out.extend_from_slice(&art.v_th.to_le_bytes());
+    out.extend_from_slice(&art.decay_shift.to_le_bytes());
+    out.extend_from_slice(&art.timesteps.to_le_bytes());
+    out.extend_from_slice(&art.prune_after.to_le_bytes());
+    for m in art.stack.layers() {
+        let packed = pack_weights(m);
+        out.extend_from_slice(&(packed.len() as u32).to_le_bytes());
+        out.extend_from_slice(&packed);
+    }
+    write_atomic(path, &out)
+}
+
+/// Read a weight stack from an SNNW file. Accepts both the legacy
+/// single-layer version 1 (loaded as a one-layer stack) and the
+/// multi-layer version 2, so one loader serves every artifact vintage.
+pub fn load_weight_stack(path: impl AsRef<Path>) -> Result<WeightStackArtifact> {
+    let path = path.as_ref();
+    let buf = fs::read(path).map_err(|e| Error::io(path, e))?;
+    let mut r = Reader { buf: &buf, pos: 0, path };
+    if r.take(4)? != WEIGHTS_MAGIC {
+        return Err(Error::malformed(path, "bad magic (want SNNW)"));
+    }
+    let version = r.u32()?;
+    if version == VERSION {
+        // Legacy single-layer artifact: reuse the v1 loader wholesale.
+        let art = load_weights(path)?;
+        return Ok(WeightStackArtifact {
+            stack: art.weights.into(),
+            v_th: art.v_th,
+            decay_shift: art.decay_shift,
+            timesteps: art.timesteps,
+            prune_after: art.prune_after,
+        });
+    }
+    if version != STACK_VERSION {
+        return Err(Error::malformed(path, format!("unsupported version {version}")));
+    }
+    let n_layers = r.u32()? as usize;
+    if n_layers == 0 || n_layers > 16 {
+        return Err(Error::malformed(path, format!("layer count {n_layers} out of range")));
+    }
+    let mut dims = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let ni = r.u32()? as usize;
+        let no = r.u32()? as usize;
+        dims.push((ni, no));
+    }
+    let bits = r.u32()?;
+    if !(2..=16).contains(&bits) {
+        return Err(Error::malformed(path, format!("weight bits {bits} out of range")));
+    }
+    let v_th = r.i32()?;
+    let decay_shift = r.u32()?;
+    let timesteps = r.u32()?;
+    let prune_after = r.u32()?;
+    let mut layers = Vec::with_capacity(n_layers);
+    for &(ni, no) in &dims {
+        let packed_len = r.u32()? as usize;
+        let expected = (ni * no * bits as usize + 7) / 8;
+        if packed_len != expected {
+            return Err(Error::malformed(
+                path,
+                format!("packed length {packed_len} != expected {expected} for {ni}x{no}"),
+            ));
+        }
+        let packed = r.take(packed_len)?;
+        layers.push(unpack_weights(packed, ni, no, bits)?);
+    }
+    if r.pos != buf.len() {
+        return Err(Error::malformed(path, format!("{} trailing bytes", buf.len() - r.pos)));
+    }
+    let stack = WeightStack::from_layers(layers)
+        .map_err(|e| Error::malformed(path, format!("inconsistent layer chain: {e}")))?;
+    Ok(WeightStackArtifact { stack, v_th, decay_shift, timesteps, prune_after })
+}
+
 /// Write via a temp file + rename so concurrent readers never observe a
 /// half-written artifact.
 fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
@@ -234,6 +356,59 @@ mod tests {
         save_weights(&p, &art).unwrap();
         let back = load_weights(&p).unwrap();
         assert_eq!(back, art);
+    }
+
+    #[test]
+    fn weight_stack_roundtrip_v2() {
+        let l0 = WeightMatrix::from_rows(6, 4, 9, (0..24).map(|v| v * 11 - 120).collect()).unwrap();
+        let l1 = WeightMatrix::from_rows(4, 3, 9, (0..12).map(|v| 90 - v * 7).collect()).unwrap();
+        let art = WeightStackArtifact {
+            stack: WeightStack::from_layers(vec![l0, l1]).unwrap(),
+            v_th: 200,
+            decay_shift: 2,
+            timesteps: 12,
+            prune_after: 0,
+        };
+        let p = tmpdir().join("stack_roundtrip.bin");
+        save_weight_stack(&p, &art).unwrap();
+        let back = load_weight_stack(&p).unwrap();
+        assert_eq!(back, art);
+        assert_eq!(back.config().topology, vec![6, 4, 3]);
+    }
+
+    #[test]
+    fn weight_stack_loader_accepts_legacy_v1() {
+        let m = WeightMatrix::from_rows(4, 3, 9, (0..12).map(|v| v * 17 - 100).collect()).unwrap();
+        let art =
+            WeightArtifact { weights: m.clone(), v_th: 128, decay_shift: 3, timesteps: 20, prune_after: 3 };
+        let p = tmpdir().join("stack_legacy.bin");
+        save_weights(&p, &art).unwrap();
+        let stacked = load_weight_stack(&p).unwrap();
+        assert_eq!(stacked.stack.n_layers(), 1);
+        assert_eq!(stacked.stack.layer(0), &m);
+        assert_eq!(stacked.v_th, 128);
+        assert_eq!(stacked.prune_after, 3);
+    }
+
+    #[test]
+    fn weight_stack_rejects_truncation() {
+        let art = WeightStackArtifact {
+            stack: WeightStack::from_layers(vec![
+                WeightMatrix::zeros(5, 4, 9),
+                WeightMatrix::zeros(4, 2, 9),
+            ])
+            .unwrap(),
+            v_th: 100,
+            decay_shift: 3,
+            timesteps: 8,
+            prune_after: 1,
+        };
+        let p = tmpdir().join("stack_trunc.bin");
+        save_weight_stack(&p, &art).unwrap();
+        let bytes = fs::read(&p).unwrap();
+        let p2 = tmpdir().join("stack_trunc_cut.bin");
+        fs::write(&p2, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(load_weight_stack(&p2).is_err());
     }
 
     #[test]

@@ -59,7 +59,7 @@ pub fn prune_point(ctx: &Ctx, prune: PruneMode) -> Result<PrunePoint> {
         // read per add instead of one wide row read per input spike.
         let row_pj = r.activity.bram_reads as f64 * model.pj_bram_read;
         let col_pj = r.activity.adds as f64 * model.pj_bram_read
-            / ctx.cfg.n_outputs as f64;
+            / ctx.cfg.n_outputs() as f64;
         banked_nj += r.energy.dynamic_nj - row_pj * 1e-3 + col_pj * 1e-3;
     }
     Ok(PrunePoint {

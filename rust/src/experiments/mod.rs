@@ -10,6 +10,7 @@
 //! row.
 
 mod ablations;
+mod depth;
 mod fig4;
 mod fig5;
 mod fig67;
@@ -25,6 +26,7 @@ use crate::runtime::Manifest;
 use crate::SnnConfig;
 
 pub use ablations::{run_ablation_decay, run_ablation_modes, run_ablation_pruning, run_ablation_width};
+pub use depth::{depth_point, run_ablation_depth, DepthPoint};
 pub use fig4::run_fig4;
 pub use fig5::run_fig5;
 pub use fig67::{run_fig6, run_fig7};
@@ -98,10 +100,12 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
         "ablation-decay" => run_ablation_decay(ctx),
         "ablation-modes" => run_ablation_modes(ctx),
         "ablation-width" => run_ablation_width(ctx),
+        "ablation-depth" => run_ablation_depth(ctx),
         "all" => {
             for id in [
                 "table1", "fig4", "fig5", "fig6", "fig7", "table2", "fig8",
                 "ablation-pruning", "ablation-decay", "ablation-modes", "ablation-width",
+                "ablation-depth",
             ] {
                 println!("\n================ {id} ================");
                 run(id, ctx)?;

@@ -8,7 +8,7 @@
 
 mod weights;
 
-pub use weights::{pack_weights, unpack_weights, WeightMatrix};
+pub use weights::{pack_weights, unpack_weights, WeightMatrix, WeightStack};
 
 /// Saturating add clamped to a symmetric `bits`-wide signed range, i.e.
 /// `[-(2^(bits-1)-1), 2^(bits-1)-1]` — the behaviour of an adder with

@@ -93,6 +93,110 @@ impl WeightMatrix {
     }
 }
 
+/// An N-layer chain of weight matrices: one [`WeightMatrix`] per
+/// connection of the topology (`stack.layer(l)` maps `topology[l]` inputs
+/// to `topology[l+1]` neurons). The single-layer paper core is the
+/// degenerate case `n_layers() == 1`, obtainable via
+/// `WeightStack::from(matrix)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WeightStack {
+    layers: Vec<WeightMatrix>,
+}
+
+impl WeightStack {
+    /// Build from an ordered layer chain. Adjacent layers must agree on
+    /// their shared dimension and every layer must use the same weight
+    /// width (one BRAM word geometry per design).
+    pub fn from_layers(layers: Vec<WeightMatrix>) -> Result<Self> {
+        if layers.is_empty() {
+            return Err(Error::InvalidConfig("weight stack needs at least one layer".into()));
+        }
+        for (l, pair) in layers.windows(2).enumerate() {
+            if pair[0].n_outputs() != pair[1].n_inputs() {
+                return Err(Error::ShapeMismatch(format!(
+                    "layer {l} outputs {} but layer {} expects {} inputs",
+                    pair[0].n_outputs(),
+                    l + 1,
+                    pair[1].n_inputs()
+                )));
+            }
+            if pair[0].bits() != pair[1].bits() {
+                return Err(Error::InvalidConfig(format!(
+                    "layer {l} uses {}-bit weights but layer {} uses {}-bit",
+                    pair[0].bits(),
+                    l + 1,
+                    pair[1].bits()
+                )));
+            }
+        }
+        Ok(WeightStack { layers })
+    }
+
+    /// Number of weight layers (connections).
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Layer `l`'s matrix.
+    pub fn layer(&self, l: usize) -> &WeightMatrix {
+        &self.layers[l]
+    }
+
+    /// All layers in order.
+    pub fn layers(&self) -> &[WeightMatrix] {
+        &self.layers
+    }
+
+    /// Input width of the whole chain.
+    pub fn n_inputs(&self) -> usize {
+        self.layers[0].n_inputs()
+    }
+
+    /// Output width of the whole chain.
+    pub fn n_outputs(&self) -> usize {
+        self.layers[self.layers.len() - 1].n_outputs()
+    }
+
+    /// Shared weight width in bits.
+    pub fn bits(&self) -> u32 {
+        self.layers[0].bits()
+    }
+
+    /// The dimension chain `[n_in_0, n_out_0 (= n_in_1), ..., n_out_last]`
+    /// — directly comparable with [`crate::SnnConfig::topology`].
+    pub fn topology(&self) -> Vec<usize> {
+        let mut t = Vec::with_capacity(self.layers.len() + 1);
+        t.push(self.layers[0].n_inputs());
+        for m in &self.layers {
+            t.push(m.n_outputs());
+        }
+        t
+    }
+
+    /// Total dense-packed storage footprint in bytes (sum over layers).
+    pub fn packed_bytes(&self) -> usize {
+        self.layers.iter().map(WeightMatrix::packed_bytes).sum()
+    }
+
+    /// Check this stack against a config's topology; error text names the
+    /// first disagreement.
+    pub fn check_topology(&self, topology: &[usize]) -> Result<()> {
+        let mine = self.topology();
+        if mine != topology {
+            return Err(Error::ShapeMismatch(format!(
+                "weight stack topology {mine:?} vs config topology {topology:?}"
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl From<WeightMatrix> for WeightStack {
+    fn from(m: WeightMatrix) -> Self {
+        WeightStack { layers: vec![m] }
+    }
+}
+
 /// Pack weights into a dense little-endian bitstream, `bits` per weight,
 /// two's complement, no padding between entries — the BRAM image.
 pub fn pack_weights(m: &WeightMatrix) -> Vec<u8> {
@@ -210,6 +314,35 @@ mod tests {
         let m = WeightMatrix::zeros(4, 4, 9);
         let packed = pack_weights(&m);
         assert!(unpack_weights(&packed[..packed.len() - 1], 4, 4, 9).is_err());
+    }
+
+    #[test]
+    fn stack_validates_chain() {
+        let a = WeightMatrix::zeros(4, 3, 9);
+        let b = WeightMatrix::zeros(3, 2, 9);
+        let s = WeightStack::from_layers(vec![a.clone(), b.clone()]).unwrap();
+        assert_eq!(s.n_layers(), 2);
+        assert_eq!(s.topology(), vec![4, 3, 2]);
+        assert_eq!(s.n_inputs(), 4);
+        assert_eq!(s.n_outputs(), 2);
+        assert_eq!(s.packed_bytes(), a.packed_bytes() + b.packed_bytes());
+        s.check_topology(&[4, 3, 2]).unwrap();
+        assert!(s.check_topology(&[4, 2]).is_err());
+        // Mismatched chain dimension.
+        assert!(WeightStack::from_layers(vec![a.clone(), WeightMatrix::zeros(4, 2, 9)]).is_err());
+        // Mismatched bit width.
+        assert!(WeightStack::from_layers(vec![a, WeightMatrix::zeros(3, 2, 8)]).is_err());
+        // Empty stack.
+        assert!(WeightStack::from_layers(vec![]).is_err());
+    }
+
+    #[test]
+    fn stack_from_single_matrix() {
+        let m = WeightMatrix::zeros(784, 10, 9);
+        let s: WeightStack = m.clone().into();
+        assert_eq!(s.n_layers(), 1);
+        assert_eq!(s.layer(0), &m);
+        assert_eq!(s.topology(), vec![784, 10]);
     }
 
     #[test]

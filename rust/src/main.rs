@@ -53,7 +53,7 @@ fn print_usage() {
          commands:\n  \
          experiment <id|all>   regenerate a paper table/figure \n                        \
          (table1 fig4 fig5 fig6 fig7 table2 fig8\n                        \
-         ablation-pruning ablation-decay ablation-modes)\n  \
+         ablation-pruning ablation-decay ablation-modes ablation-depth)\n  \
          classify              classify one synthetic digit\n  \
          serve                 run the serving coordinator demo\n  \
          info                  show artifact calibration\n\n\

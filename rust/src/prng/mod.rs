@@ -85,8 +85,20 @@ impl StreamBank {
     }
 
     /// Advance every stream one step and return a view of the new states.
+    ///
+    /// Walks four interleaved lanes per iteration: the streams are
+    /// independent, so the XOR/shift stages vectorize across lanes (the
+    /// behavioral encoder's hottest loop). Bit-identical per lane to the
+    /// scalar walk — pinned by `rust/tests/encoder_stats.rs`.
     pub fn step(&mut self) -> &[u32] {
-        for s in &mut self.states {
+        let mut chunks = self.states.chunks_exact_mut(4);
+        for c in &mut chunks {
+            c[0] = xorshift::xorshift32_step(c[0]);
+            c[1] = xorshift::xorshift32_step(c[1]);
+            c[2] = xorshift::xorshift32_step(c[2]);
+            c[3] = xorshift::xorshift32_step(c[3]);
+        }
+        for s in chunks.into_remainder() {
             *s = xorshift::xorshift32_step(*s);
         }
         &self.states

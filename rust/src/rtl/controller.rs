@@ -1,27 +1,48 @@
 //! Layer controller (paper Fig. 3): the global FSM that sequences
-//! integration, leak and fire phases, owns the spike register and drives
-//! the per-neuron enable lines (`en_0 .. en_9`) implementing active
-//! pruning.
+//! integration, leak and fire phases, owns the per-layer spike registers
+//! and drives each layer's enable lines (`en_0 .. en_9`) implementing
+//! active pruning.
+//!
+//! Since the N-layer refactor the FSM time-multiplexes the layer chain
+//! inside one timestep: layer 0 integrates the encoder's pixel walk, then
+//! each deeper layer integrates the previous layer's latched spike
+//! register, each walk followed by its own Leak and Fire clocks. The
+//! timestep counter advances on the *final* layer's Fire clock. A
+//! single-layer topology reproduces the original schedule clock for clock.
 
 use crate::config::{LeakMode, PruneMode, SnnConfig};
 
 /// FSM states. One clock per state transition; `Integrate` self-loops over
-/// the pixel counter.
+/// the pixel counter within one layer's walk.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CtrlState {
     /// Waiting for an image load.
     Idle,
-    /// Walking pixels; the payload is the pixel counter value.
-    Integrate { pixel: usize },
-    /// Applying the shift-subtract decay (one clock, all neurons parallel).
-    /// `resume_pixel` is where integration continues in `PerRow` mode
-    /// (`None` = the end-of-timestep leak).
-    Leak { resume_pixel: Option<usize> },
-    /// Evaluating threshold comparators, latching the spike register,
-    /// updating the pruning mask.
-    Fire,
+    /// Walking layer `layer`'s inputs; `pixel` is the input counter value
+    /// (a pixel index for layer 0, a spike-register index above).
+    Integrate { layer: usize, pixel: usize },
+    /// Applying the shift-subtract decay to layer `layer` (one clock, all
+    /// neurons parallel). `resume_pixel` is where integration continues in
+    /// `PerRow` mode (`None` = the end-of-walk leak).
+    Leak { layer: usize, resume_pixel: Option<usize> },
+    /// Evaluating layer `layer`'s threshold comparators, latching its
+    /// spike register, updating its pruning mask.
+    Fire { layer: usize },
     /// Window complete; outputs valid.
     Done,
+}
+
+impl CtrlState {
+    /// The layer whose datapath is active this clock (`None` for
+    /// `Idle`/`Done`). Drives per-layer cycle attribution.
+    pub fn layer(&self) -> Option<usize> {
+        match *self {
+            CtrlState::Integrate { layer, .. }
+            | CtrlState::Leak { layer, .. }
+            | CtrlState::Fire { layer } => Some(layer),
+            CtrlState::Idle | CtrlState::Done => None,
+        }
+    }
 }
 
 /// The controller's architectural registers.
@@ -30,16 +51,22 @@ pub struct LayerController {
     state: CtrlState,
     /// Timestep counter register.
     timestep: u32,
-    /// Spike register: the fire pattern latched on the last `Fire` clock.
-    spike_reg: Vec<bool>,
-    /// Enable lines (true = enabled); pruning clears bits.
-    enables: Vec<bool>,
-    /// Count of set enable lines — the O(1) "any neuron still enabled"
-    /// signal the core's integrate path gates BRAM reads on (hoisted out
-    /// of the per-cycle loop; previously recomputed by scanning `enables`
-    /// every clock).
-    enabled_count: usize,
-    /// Datapath width: pixels served per `Integrate` clock. 1 = the
+    /// Per-layer spike registers: the fire pattern latched on each layer's
+    /// last `Fire` (or mid-walk Immediate) clock.
+    spike_reg: Vec<Vec<bool>>,
+    /// Per-layer OR-accumulated fire pattern of the *current timestep* —
+    /// the inter-layer hand-off register. Unlike `spike_reg` (overwritten
+    /// by every latch, cleared at the Fire clock under Immediate firing)
+    /// this keeps every spike a layer emitted this step, so the next
+    /// layer's walk sees the full pattern. Cleared when the final layer's
+    /// Fire clock ends the timestep.
+    step_fired: Vec<Vec<bool>>,
+    /// Per-layer enable lines (true = enabled); pruning clears bits.
+    enables: Vec<Vec<bool>>,
+    /// Per-layer count of set enable lines — the O(1) "any neuron still
+    /// enabled" signal the core's integrate path gates BRAM reads on.
+    enabled_count: Vec<usize>,
+    /// Datapath width: inputs served per `Integrate` clock. 1 = the
     /// paper's Fig. 1 pixel-serial datapath; wider values model a
     /// multi-lane encoder + adder tree (the only way the paper's §V-C
     /// 100 µs / Table II <1 µs latency claims can hold — see
@@ -50,15 +77,22 @@ pub struct LayerController {
 
 impl LayerController {
     pub fn new(cfg: &SnnConfig) -> Self {
+        let widths: Vec<usize> = (0..cfg.n_layers()).map(|l| cfg.layer_output(l)).collect();
         LayerController {
             state: CtrlState::Idle,
             timestep: 0,
-            spike_reg: vec![false; cfg.n_outputs],
-            enables: vec![true; cfg.n_outputs],
-            enabled_count: cfg.n_outputs,
+            spike_reg: widths.iter().map(|&n| vec![false; n]).collect(),
+            step_fired: widths.iter().map(|&n| vec![false; n]).collect(),
+            enables: widths.iter().map(|&n| vec![true; n]).collect(),
+            enabled_count: widths,
             pixels_per_cycle: 1,
             cfg: cfg.clone(),
         }
+    }
+
+    /// Number of weight layers sequenced per timestep.
+    pub fn n_layers(&self) -> usize {
+        self.spike_reg.len()
     }
 
     /// Set the datapath width (≥1). `PerRow` leak scheduling requires the
@@ -88,34 +122,48 @@ impl LayerController {
         self.timestep
     }
 
-    /// Spike register contents (`spike_reg[j]`).
-    pub fn spike_reg(&self) -> &[bool] {
-        &self.spike_reg
+    /// Layer `l`'s spike register contents (`spike_reg[j]`).
+    pub fn spike_reg(&self, l: usize) -> &[bool] {
+        &self.spike_reg[l]
     }
 
-    /// Enable line for neuron `j` (`en_j` in Fig. 3).
-    pub fn enable(&self, j: usize) -> bool {
-        self.enables[j]
+    /// Layer `l`'s OR-accumulated fire pattern for the current timestep
+    /// (what layer `l+1`'s integrate walk reads).
+    pub fn step_fired(&self, l: usize) -> &[bool] {
+        &self.step_fired[l]
     }
 
-    /// All enable lines.
-    pub fn enables(&self) -> &[bool] {
-        &self.enables
+    /// Enable line for neuron `j` of layer `l` (`en_j` in Fig. 3).
+    pub fn enable(&self, l: usize, j: usize) -> bool {
+        self.enables[l][j]
     }
 
-    /// O(1): is any neuron still enabled? (OR-reduction of the enable
-    /// lines; gates the weight BRAM once pruning has shut the array off.)
-    pub fn any_enabled(&self) -> bool {
-        self.enabled_count > 0
+    /// All enable lines of layer `l`.
+    pub fn enables(&self, l: usize) -> &[bool] {
+        &self.enables[l]
+    }
+
+    /// O(1): is any neuron of layer `l` still enabled? (OR-reduction of
+    /// the enable lines; gates the layer's weight BRAM once pruning has
+    /// shut the array off.)
+    pub fn any_enabled(&self, l: usize) -> bool {
+        self.enabled_count[l] > 0
     }
 
     /// `start` pulse: begin a new inference window.
     pub fn start(&mut self) {
-        self.state = CtrlState::Integrate { pixel: 0 };
+        self.state = CtrlState::Integrate { layer: 0, pixel: 0 };
         self.timestep = 0;
-        self.spike_reg.fill(false);
-        self.enables.fill(true);
-        self.enabled_count = self.enables.len();
+        for reg in &mut self.spike_reg {
+            reg.fill(false);
+        }
+        for f in &mut self.step_fired {
+            f.fill(false);
+        }
+        for (en, count) in self.enables.iter_mut().zip(&mut self.enabled_count) {
+            en.fill(true);
+            *count = en.len();
+        }
     }
 
     /// Jump straight to `Done` (used by the fast path, which executes the
@@ -125,19 +173,32 @@ impl LayerController {
         self.timestep = self.cfg.timesteps;
     }
 
-    /// Latch the fire pattern (driven by the `Fire`-state clock) and apply
-    /// the pruning mask update. `spike_counts[j]` must already include this
-    /// cycle's spikes.
-    pub fn latch_fire(&mut self, fired: &[bool], spike_counts: &[u32]) {
-        debug_assert_eq!(fired.len(), self.spike_reg.len());
-        self.spike_reg.copy_from_slice(fired);
+    /// Latch layer `l`'s fire pattern (driven by its `Fire`-state clock or
+    /// a mid-walk Immediate event), fold it into the timestep accumulator
+    /// and apply the pruning mask update. `spike_counts[j]` must already
+    /// include this cycle's spikes.
+    pub fn latch_fire(&mut self, l: usize, fired: &[bool], spike_counts: &[u32]) {
+        debug_assert_eq!(fired.len(), self.spike_reg[l].len());
+        self.spike_reg[l].copy_from_slice(fired);
+        for (acc, &f) in self.step_fired[l].iter_mut().zip(fired) {
+            *acc |= f;
+        }
         if let PruneMode::AfterFires { after_spikes } = self.cfg.prune {
             for (j, &count) in spike_counts.iter().enumerate() {
-                if count >= after_spikes && self.enables[j] {
-                    self.enables[j] = false;
-                    self.enabled_count -= 1;
+                if count >= after_spikes && self.enables[l][j] {
+                    self.enables[l][j] = false;
+                    self.enabled_count[l] -= 1;
                 }
             }
+        }
+    }
+
+    /// Clear the per-timestep fire accumulators (the end-of-timestep edge;
+    /// `advance` does this on the final layer's Fire clock, the fast path
+    /// calls it directly between timesteps).
+    pub fn end_timestep(&mut self) {
+        for f in &mut self.step_fired {
+            f.fill(false);
         }
     }
 
@@ -146,31 +207,42 @@ impl LayerController {
     pub fn advance(&mut self) {
         self.state = match self.state {
             CtrlState::Idle => CtrlState::Idle,
-            CtrlState::Integrate { pixel } => {
-                let next_pixel = (pixel + self.pixels_per_cycle).min(self.cfg.n_inputs);
-                let row_boundary = match self.cfg.leak_mode {
-                    LeakMode::PerRow { row_len } => next_pixel % row_len == 0,
-                    LeakMode::PerTimestep => false,
-                };
-                if next_pixel == self.cfg.n_inputs {
-                    // End of the integration window: the end-of-step leak.
-                    // (In PerRow mode the final row's leak is this same
-                    // clock — `resume_pixel: None` routes to Fire.)
-                    CtrlState::Leak { resume_pixel: None }
+            CtrlState::Integrate { layer, pixel } => {
+                let n_in = self.cfg.layer_input(layer);
+                let next_pixel = (pixel + self.pixels_per_cycle).min(n_in);
+                // Row boundaries are image geometry: only the input
+                // layer's pixel walk observes PerRow scheduling.
+                let row_boundary = layer == 0
+                    && match self.cfg.leak_mode {
+                        LeakMode::PerRow { row_len } => next_pixel % row_len == 0,
+                        LeakMode::PerTimestep => false,
+                    };
+                if next_pixel == n_in {
+                    // End of the walk: the end-of-walk leak. (In PerRow
+                    // mode the final row's leak is this same clock —
+                    // `resume_pixel: None` routes to Fire.)
+                    CtrlState::Leak { layer, resume_pixel: None }
                 } else if row_boundary {
-                    CtrlState::Leak { resume_pixel: Some(next_pixel) }
+                    CtrlState::Leak { layer, resume_pixel: Some(next_pixel) }
                 } else {
-                    CtrlState::Integrate { pixel: next_pixel }
+                    CtrlState::Integrate { layer, pixel: next_pixel }
                 }
             }
-            CtrlState::Leak { resume_pixel: Some(p) } => CtrlState::Integrate { pixel: p },
-            CtrlState::Leak { resume_pixel: None } => CtrlState::Fire,
-            CtrlState::Fire => {
-                self.timestep += 1;
-                if self.timestep >= self.cfg.timesteps {
-                    CtrlState::Done
+            CtrlState::Leak { layer, resume_pixel: Some(p) } => {
+                CtrlState::Integrate { layer, pixel: p }
+            }
+            CtrlState::Leak { layer, resume_pixel: None } => CtrlState::Fire { layer },
+            CtrlState::Fire { layer } => {
+                if layer + 1 < self.n_layers() {
+                    CtrlState::Integrate { layer: layer + 1, pixel: 0 }
                 } else {
-                    CtrlState::Integrate { pixel: 0 }
+                    self.timestep += 1;
+                    self.end_timestep();
+                    if self.timestep >= self.cfg.timesteps {
+                        CtrlState::Done
+                    } else {
+                        CtrlState::Integrate { layer: 0, pixel: 0 }
+                    }
                 }
             }
             CtrlState::Done => CtrlState::Done,
@@ -191,7 +263,7 @@ mod tests {
     use crate::config::{LeakMode, SnnConfig};
 
     fn tiny() -> SnnConfig {
-        SnnConfig { n_inputs: 4, n_outputs: 2, timesteps: 2, ..SnnConfig::paper() }
+        SnnConfig { topology: vec![4, 2], timesteps: 2, ..SnnConfig::paper() }
     }
 
     /// Walk the FSM and collect the state sequence for one window.
@@ -217,18 +289,42 @@ mod tests {
         assert_eq!(
             states,
             vec![
-                Integrate { pixel: 0 },
-                Integrate { pixel: 1 },
-                Integrate { pixel: 2 },
-                Integrate { pixel: 3 },
-                Leak { resume_pixel: None },
-                Fire,
-                Integrate { pixel: 0 },
-                Integrate { pixel: 1 },
-                Integrate { pixel: 2 },
-                Integrate { pixel: 3 },
-                Leak { resume_pixel: None },
-                Fire,
+                Integrate { layer: 0, pixel: 0 },
+                Integrate { layer: 0, pixel: 1 },
+                Integrate { layer: 0, pixel: 2 },
+                Integrate { layer: 0, pixel: 3 },
+                Leak { layer: 0, resume_pixel: None },
+                Fire { layer: 0 },
+                Integrate { layer: 0, pixel: 0 },
+                Integrate { layer: 0, pixel: 1 },
+                Integrate { layer: 0, pixel: 2 },
+                Integrate { layer: 0, pixel: 3 },
+                Leak { layer: 0, resume_pixel: None },
+                Fire { layer: 0 },
+                Done,
+            ]
+        );
+    }
+
+    #[test]
+    fn layered_schedule_multiplexes_within_timestep() {
+        // [3, 2, 2], T=1: the hidden walk (3 inputs) then the output walk
+        // (2 spike-register reads), each with leak + fire, in one step.
+        let cfg = SnnConfig { topology: vec![3, 2, 2], timesteps: 1, ..SnnConfig::paper() };
+        let states = trace_states(&cfg, 32);
+        use CtrlState::*;
+        assert_eq!(
+            states,
+            vec![
+                Integrate { layer: 0, pixel: 0 },
+                Integrate { layer: 0, pixel: 1 },
+                Integrate { layer: 0, pixel: 2 },
+                Leak { layer: 0, resume_pixel: None },
+                Fire { layer: 0 },
+                Integrate { layer: 1, pixel: 0 },
+                Integrate { layer: 1, pixel: 1 },
+                Leak { layer: 1, resume_pixel: None },
+                Fire { layer: 1 },
                 Done,
             ]
         );
@@ -246,16 +342,40 @@ mod tests {
         assert_eq!(
             states,
             vec![
-                Integrate { pixel: 0 },
-                Integrate { pixel: 1 },
-                Leak { resume_pixel: Some(2) },
-                Integrate { pixel: 2 },
-                Integrate { pixel: 3 },
-                Leak { resume_pixel: None },
-                Fire,
+                Integrate { layer: 0, pixel: 0 },
+                Integrate { layer: 0, pixel: 1 },
+                Leak { layer: 0, resume_pixel: Some(2) },
+                Integrate { layer: 0, pixel: 2 },
+                Integrate { layer: 0, pixel: 3 },
+                Leak { layer: 0, resume_pixel: None },
+                Fire { layer: 0 },
                 Done,
             ]
         );
+    }
+
+    #[test]
+    fn per_row_leak_stays_on_input_layer() {
+        // A deep topology under PerRow: the hidden walk gets row-aligned
+        // leaks, the output walk (spike-register inputs, no rows) gets
+        // exactly one end-of-walk leak.
+        let cfg = SnnConfig {
+            topology: vec![4, 3, 2],
+            leak_mode: LeakMode::PerRow { row_len: 2 },
+            timesteps: 1,
+            ..SnnConfig::paper()
+        };
+        let states = trace_states(&cfg, 48);
+        let layer1_leaks = states
+            .iter()
+            .filter(|s| matches!(s, CtrlState::Leak { layer: 1, .. }))
+            .count();
+        assert_eq!(layer1_leaks, 1, "deep layers leak once per walk: {states:?}");
+        let layer0_leaks = states
+            .iter()
+            .filter(|s| matches!(s, CtrlState::Leak { layer: 0, .. }))
+            .count();
+        assert_eq!(layer0_leaks, 2, "4-pixel walk with row_len 2 leaks twice");
     }
 
     #[test]
@@ -270,30 +390,56 @@ mod tests {
     fn pruning_mask_clears_enables() {
         let mut c = LayerController::new(&tiny());
         c.start();
-        assert!(c.enable(0) && c.enable(1));
-        c.latch_fire(&[true, false], &[1, 0]);
-        assert!(!c.enable(0), "fired neuron must be pruned");
-        assert!(c.enable(1));
-        assert_eq!(c.spike_reg(), &[true, false]);
+        assert!(c.enable(0, 0) && c.enable(0, 1));
+        c.latch_fire(0, &[true, false], &[1, 0]);
+        assert!(!c.enable(0, 0), "fired neuron must be pruned");
+        assert!(c.enable(0, 1));
+        assert_eq!(c.spike_reg(0), &[true, false]);
         // start() restores enables.
         c.start();
-        assert!(c.enable(0));
+        assert!(c.enable(0, 0));
+    }
+
+    #[test]
+    fn step_fired_accumulates_until_end_of_timestep() {
+        let mut c = LayerController::new(&tiny());
+        c.start();
+        // Two latches in one timestep (the Immediate-mode pattern): the
+        // spike register shows the last, the accumulator the union.
+        c.latch_fire(0, &[true, false], &[0, 0]);
+        c.latch_fire(0, &[false, true], &[0, 0]);
+        assert_eq!(c.spike_reg(0), &[false, true]);
+        assert_eq!(c.step_fired(0), &[true, true], "accumulator keeps the union");
+        c.end_timestep();
+        assert_eq!(c.step_fired(0), &[false, false]);
+        assert_eq!(c.spike_reg(0), &[false, true], "spike register survives the clear");
     }
 
     #[test]
     fn any_enabled_tracks_pruning() {
         let mut c = LayerController::new(&tiny());
         c.start();
-        assert!(c.any_enabled());
-        c.latch_fire(&[true, false], &[1, 0]);
-        assert!(c.any_enabled(), "one neuron still live");
+        assert!(c.any_enabled(0));
+        c.latch_fire(0, &[true, false], &[1, 0]);
+        assert!(c.any_enabled(0), "one neuron still live");
         // Re-latching the same counts must not double-decrement.
-        c.latch_fire(&[false, false], &[1, 0]);
-        assert!(c.any_enabled());
-        c.latch_fire(&[false, true], &[1, 1]);
-        assert!(!c.any_enabled(), "all pruned");
+        c.latch_fire(0, &[false, false], &[1, 0]);
+        assert!(c.any_enabled(0));
+        c.latch_fire(0, &[false, true], &[1, 1]);
+        assert!(!c.any_enabled(0), "all pruned");
         c.start();
-        assert!(c.any_enabled(), "start() restores the array");
+        assert!(c.any_enabled(0), "start() restores the array");
+    }
+
+    #[test]
+    fn per_layer_enables_are_independent() {
+        let cfg = SnnConfig { topology: vec![4, 2, 3], ..SnnConfig::paper() };
+        let mut c = LayerController::new(&cfg);
+        c.start();
+        c.latch_fire(0, &[true, true], &[1, 1]);
+        assert!(!c.any_enabled(0), "hidden layer fully pruned");
+        assert!(c.any_enabled(1), "output layer untouched");
+        assert_eq!(c.enables(1), &[true, true, true]);
     }
 
     #[test]
@@ -310,8 +456,8 @@ mod tests {
         let cfg = SnnConfig { prune: crate::config::PruneMode::Off, ..tiny() };
         let mut c = LayerController::new(&cfg);
         c.start();
-        c.latch_fire(&[true, true], &[5, 5]);
-        assert!(c.enable(0) && c.enable(1));
+        c.latch_fire(0, &[true, true], &[5, 5]);
+        assert!(c.enable(0, 0) && c.enable(0, 1));
     }
 
     #[test]

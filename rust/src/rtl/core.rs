@@ -1,24 +1,39 @@
-//! Top-level SNN core: controller + encoder + neuron array + weight BRAM.
+//! Top-level SNN core: controller + encoder + per-layer neuron arrays +
+//! per-layer weight BRAMs.
+//!
+//! Since the N-layer refactor the core instantiates one [`LifNeuronArray`]
+//! and one weight BRAM per connection of `SnnConfig::topology`, and the
+//! controller time-multiplexes the layer chain inside each timestep: the
+//! hidden layer integrates encoder spikes over the pixel walk, then every
+//! deeper layer integrates the previous layer's latched spike register —
+//! so one spike propagates through the whole depth within a single
+//! architectural step. The single-layer paper core is the degenerate case
+//! and reproduces the original schedule clock for clock.
 //!
 //! Two execution engines share the same architectural state:
 //!
 //! * the **cycle path** ([`RtlCore::tick_cycle`] / [`RtlCore::run`]) —
 //!   advances one clock per call through the controller FSM; required for
 //!   waveform capture and cycle-by-cycle observability;
-//! * the **fast path** ([`RtlCore::run_fast`]) — executes a whole timestep
-//!   per loop iteration: the Poisson comparator draws for a pixel range are
+//! * the **fast path** ([`RtlCore::run_fast`] /
+//!   [`RtlCore::run_fast_early`]) — executes a whole timestep per loop
+//!   iteration: the Poisson comparator draws for a pixel range are
 //!   bulk-generated into an active-pixel index list, only spiking rows are
 //!   integrated, and the cycle count is computed arithmetically from the
 //!   FSM schedule instead of being walked. It is **bit-exact and
 //!   activity-exact** with the cycle path across every
-//!   `FireMode`/`LeakMode`/`PruneMode`/datapath-width combination
+//!   `FireMode`/`LeakMode`/`PruneMode`/datapath-width/topology combination
 //!   (property-tested by `fast_path_equals_cycle_path`; equivalence
-//!   argument in EXPERIMENTS.md §Perf).
+//!   argument in EXPERIMENTS.md §Perf). `run_fast_early` additionally
+//!   applies the serving-level [`EarlyExit`] margin policy between
+//!   timesteps — the fast path makes the per-timestep check effectively
+//!   free.
 
 use crate::config::{FireMode, LeakMode, SnnConfig};
 use crate::data::Image;
 use crate::error::{Error, Result};
-use crate::fixed::WeightMatrix;
+use crate::fixed::WeightStack;
+use crate::snn::EarlyExit;
 
 use super::controller::{CtrlState, LayerController};
 use super::encoder::RtlPoissonEncoder;
@@ -29,72 +44,94 @@ use super::vcd::VcdWriter;
 /// Result of one inference window on the RTL core.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RtlResult {
-    /// Priority-encoded argmax of the spike-count registers.
+    /// Priority-encoded argmax of the final layer's spike-count registers.
     pub class: u8,
-    /// Spike counts per output neuron.
+    /// Spike counts per output neuron (final layer).
     pub spike_counts: Vec<u32>,
     /// Clock cycles consumed by the window (excludes load).
     pub cycles: u64,
-    /// Switching-activity totals for the window.
+    /// Switching-activity totals for the window (all layers + encoder).
     pub activity: ActivityCounters,
     /// Energy estimate under the core's [`EnergyModel`].
     pub energy: EnergyReport,
-    /// Membrane potential of every neuron after each timestep's Fire clock
-    /// (pre-reset value NOT included; equivalence tests use this).
+    /// Membrane potential of every neuron after each timestep's Fire
+    /// clocks, layers concatenated in topology order (for the single-layer
+    /// paper core: exactly the output layer). Each layer's snapshot is
+    /// taken at its own Fire clock.
     pub membrane_by_step: Vec<Vec<i32>>,
-    /// Spike register pattern after each timestep.
+    /// Fire-clock spike patterns after each timestep, layers concatenated
+    /// in the same order as `membrane_by_step`.
     pub spikes_by_step: Vec<Vec<bool>>,
+    /// Spike counts of every layer (the last entry equals `spike_counts`).
+    pub spike_counts_by_layer: Vec<Vec<u32>>,
+    /// Per-layer window activity: each layer's datapath events (adds,
+    /// BRAM reads, comparator checks, toggles) plus the clocks attributed
+    /// to its walk. The encoder front-end's events are shared, not
+    /// per-layer, so these sum to slightly less than `activity`.
+    pub activity_by_layer: Vec<ActivityCounters>,
+    /// Per-layer energy under the core's model (same caveat as
+    /// `activity_by_layer`).
+    pub energy_by_layer: Vec<EnergyReport>,
 }
 
 /// The synthesizable top (paper Fig. 3) as a cycle-stepped simulator with a
 /// batched-timestep fast path.
 pub struct RtlCore {
     cfg: SnnConfig,
-    weights: WeightMatrix,
+    weights: WeightStack,
     controller: LayerController,
     encoder: RtlPoissonEncoder,
-    neurons: LifNeuronArray,
-    act: ActivityCounters,
+    /// One neuron array per weight layer.
+    neurons: Vec<LifNeuronArray>,
+    /// Encoder front-end activity (PRNG steps, comparators, load toggles).
+    /// Cycles are *not* counted here — every clock belongs to a layer.
+    enc_act: ActivityCounters,
+    /// Per-layer cumulative activity: each layer's datapath events plus
+    /// the clocks attributed to its phases. Global totals are the sum of
+    /// these with `enc_act` ([`RtlCore::total_activity`]).
+    layer_act: Vec<ActivityCounters>,
+    /// Clock mirror for VCD timestamps (equals the summed layer cycles).
+    cycle_no: u64,
     energy_model: EnergyModel,
-    /// Membrane snapshot log (per timestep) while running.
+    /// Membrane snapshot log (per timestep, layers concatenated).
     membrane_log: Vec<Vec<i32>>,
     spike_log: Vec<Vec<bool>>,
-    /// Reusable fire-pattern buffer (hoisted out of the per-cycle loop).
-    fired_scratch: Vec<bool>,
-    /// Reusable active-pixel index list for the fast path.
+    /// Current timestep's concatenated snapshots under construction.
+    step_membranes: Vec<i32>,
+    step_spikes: Vec<bool>,
+    /// Reusable per-layer fire-pattern buffers.
+    fired_scratch: Vec<Vec<bool>>,
+    /// Reusable active-input index list for the fast path.
     active_scratch: Vec<u32>,
     /// Optional waveform sink.
     vcd: Option<VcdWriter>,
 }
 
 impl RtlCore {
-    pub fn new(cfg: SnnConfig, weights: WeightMatrix) -> Result<Self> {
+    /// Build a core from a config and any weight source convertible to a
+    /// [`WeightStack`] (a bare [`crate::fixed::WeightMatrix`] becomes the
+    /// single-layer chain).
+    pub fn new(cfg: SnnConfig, weights: impl Into<WeightStack>) -> Result<Self> {
         let cfg = cfg.validated()?;
-        if weights.n_inputs() != cfg.n_inputs || weights.n_outputs() != cfg.n_outputs {
-            return Err(Error::ShapeMismatch(format!(
-                "weights {}x{} vs config {}x{}",
-                weights.n_inputs(),
-                weights.n_outputs(),
-                cfg.n_inputs,
-                cfg.n_outputs
-            )));
-        }
-        if cfg.n_outputs > 64 {
-            return Err(Error::InvalidConfig(format!(
-                "RtlCore models at most 64 output neurons (u64 enable mask), got {}",
-                cfg.n_outputs
-            )));
-        }
+        let weights: WeightStack = weights.into();
+        weights.check_topology(&cfg.topology)?;
+        let n_layers = cfg.n_layers();
+        let neurons: Vec<LifNeuronArray> =
+            (0..n_layers).map(|l| LifNeuronArray::new(&cfg.layer_config(l))).collect();
         Ok(RtlCore {
             controller: LayerController::new(&cfg),
-            encoder: RtlPoissonEncoder::new(cfg.n_inputs),
-            neurons: LifNeuronArray::new(&cfg),
-            act: ActivityCounters::default(),
+            encoder: RtlPoissonEncoder::new(cfg.n_inputs()),
+            fired_scratch: (0..n_layers).map(|l| vec![false; cfg.layer_output(l)]).collect(),
+            neurons,
+            enc_act: ActivityCounters::default(),
+            layer_act: vec![ActivityCounters::default(); n_layers],
+            cycle_no: 0,
             energy_model: EnergyModel::default(),
             membrane_log: Vec::new(),
             spike_log: Vec::new(),
-            fired_scratch: vec![false; cfg.n_outputs],
-            active_scratch: Vec::with_capacity(cfg.n_inputs),
+            step_membranes: Vec::new(),
+            step_spikes: Vec::new(),
+            active_scratch: Vec::with_capacity(cfg.n_inputs()),
             weights,
             cfg,
             vcd: None,
@@ -116,7 +153,8 @@ impl RtlCore {
         self
     }
 
-    /// Attach a VCD waveform writer; signals are dumped every cycle.
+    /// Attach a VCD waveform writer; final-layer signals are dumped every
+    /// cycle.
     pub fn attach_vcd(&mut self, vcd: VcdWriter) {
         self.vcd = Some(vcd);
     }
@@ -135,26 +173,30 @@ impl RtlCore {
         self.controller.state()
     }
 
-    /// Current membrane potentials.
+    /// Current membrane potentials of the final (output) layer.
     pub fn membranes(&self) -> Vec<i32> {
-        self.neurons.membranes()
+        self.neurons[self.neurons.len() - 1].membranes()
     }
 
     /// `load` pulse: latch an image + seed, reset all neuron state, leave
-    /// the FSM in `Integrate{0}`.
+    /// the FSM in `Integrate{0,0}`.
     pub fn load_image(&mut self, img: &Image, seed: u32) -> Result<()> {
-        if img.pixels.len() != self.cfg.n_inputs {
+        if img.pixels.len() != self.cfg.n_inputs() {
             return Err(Error::ShapeMismatch(format!(
                 "image {} pixels vs core {}",
                 img.pixels.len(),
-                self.cfg.n_inputs
+                self.cfg.n_inputs()
             )));
         }
-        self.encoder.load(&img.pixels, seed, &mut self.act);
-        self.neurons.reset(&mut self.act);
+        self.encoder.load(&img.pixels, seed, &mut self.enc_act);
+        for (l, arr) in self.neurons.iter_mut().enumerate() {
+            arr.reset(&mut self.layer_act[l]);
+        }
         self.controller.start();
         self.membrane_log.clear();
         self.spike_log.clear();
+        self.step_membranes.clear();
+        self.step_spikes.clear();
         Ok(())
     }
 
@@ -164,221 +206,347 @@ impl RtlCore {
         let state = self.controller.state();
         match state {
             CtrlState::Idle | CtrlState::Done => return false,
-            CtrlState::Integrate { pixel } => {
+            CtrlState::Integrate { layer, pixel } => {
                 // One clock serves `pixels_per_cycle` lanes (1 = the
-                // paper's Fig. 1 pixel-serial datapath). Each lane has its
-                // own encoder comparator; spiking lanes fetch their weight
-                // row and pulse the adder tree. BRAM fetches happen only
-                // on a spike AND only while at least one neuron is still
-                // enabled — once pruning has gated the whole array, the
-                // weight memory goes idle too. (Measured consequence:
-                // without that gate, BRAM reads dominate dynamic energy
-                // and pruning saves almost nothing — EXPERIMENTS.md
-                // ablation A.)
-                let end = (pixel + self.controller.pixels_per_cycle()).min(self.cfg.n_inputs);
-                let any_enabled = self.controller.any_enabled();
-                for lane_pixel in pixel..end {
-                    let spike = self.encoder.tick_pixel(lane_pixel, &mut self.act);
+                // paper's Fig. 1 pixel-serial datapath). On layer 0 each
+                // lane has its own encoder comparator; deeper layers read
+                // the previous layer's spike accumulator instead. Spiking
+                // lanes fetch their weight row and pulse the adder tree.
+                // BRAM fetches happen only on a spike AND only while at
+                // least one neuron of the layer is still enabled — once
+                // pruning has gated the whole array, the weight memory
+                // goes idle too. (Measured consequence: without that
+                // gate, BRAM reads dominate dynamic energy and pruning
+                // saves almost nothing — EXPERIMENTS.md ablation A.)
+                let end =
+                    (pixel + self.controller.pixels_per_cycle()).min(self.cfg.layer_input(layer));
+                let any_enabled = self.controller.any_enabled(layer);
+                for lane in pixel..end {
+                    let spike = if layer == 0 {
+                        self.encoder.tick_pixel(lane, &mut self.enc_act)
+                    } else {
+                        self.controller.step_fired(layer - 1)[lane]
+                    };
                     if spike && any_enabled {
-                        self.act.bram_reads += 1;
-                        self.neurons.add_row(self.weights.row(lane_pixel), &mut self.act);
+                        self.layer_act[layer].bram_reads += 1;
+                        self.neurons[layer]
+                            .add_row(self.weights.layer(layer).row(lane), &mut self.layer_act[layer]);
                     }
                 }
                 // Immediate fire mode: comparator is combinational on the
                 // accumulator; fire mid-integration.
                 if self.cfg.fire_mode == FireMode::Immediate {
-                    self.fired_scratch.fill(false);
-                    let any =
-                        self.neurons.immediate_fire(&mut self.fired_scratch, &mut self.act);
+                    self.fired_scratch[layer].fill(false);
+                    let any = self.neurons[layer]
+                        .immediate_fire(&mut self.fired_scratch[layer], &mut self.layer_act[layer]);
                     if any {
-                        self.controller
-                            .latch_fire(&self.fired_scratch, self.neurons.spike_counts());
-                        self.apply_prune_mask();
+                        self.controller.latch_fire(
+                            layer,
+                            &self.fired_scratch[layer],
+                            self.neurons[layer].spike_counts(),
+                        );
+                        self.apply_prune_mask(layer);
                     }
                 }
             }
-            CtrlState::Leak { .. } => {
-                self.neurons.leak_enabled(&mut self.act);
+            CtrlState::Leak { layer, .. } => {
+                self.neurons[layer].leak_enabled(&mut self.layer_act[layer]);
             }
-            CtrlState::Fire => {
-                self.fired_scratch.fill(false);
+            CtrlState::Fire { layer } => {
+                self.fired_scratch[layer].fill(false);
                 if self.cfg.fire_mode == FireMode::EndOfStep {
-                    self.neurons.fire_check(&mut self.fired_scratch, &mut self.act);
+                    self.neurons[layer]
+                        .fire_check(&mut self.fired_scratch[layer], &mut self.layer_act[layer]);
                 }
-                self.controller.latch_fire(&self.fired_scratch, self.neurons.spike_counts());
-                self.apply_prune_mask();
-                self.membrane_log.push(self.neurons.membranes());
-                self.spike_log.push(self.fired_scratch.clone());
+                self.controller.latch_fire(
+                    layer,
+                    &self.fired_scratch[layer],
+                    self.neurons[layer].spike_counts(),
+                );
+                self.apply_prune_mask(layer);
+                self.step_membranes.extend_from_slice(self.neurons[layer].accs());
+                self.step_spikes.extend_from_slice(&self.fired_scratch[layer]);
+                if layer + 1 == self.neurons.len() {
+                    self.membrane_log.push(std::mem::take(&mut self.step_membranes));
+                    self.spike_log.push(std::mem::take(&mut self.step_spikes));
+                }
             }
         }
-        self.act.cycles += 1;
+        let layer = state.layer().expect("working states carry a layer");
+        self.layer_act[layer].cycles += 1;
+        self.cycle_no += 1;
         if let Some(v) = self.vcd.as_mut() {
-            let membranes = self.neurons.membranes();
+            let last = self.neurons.len() - 1;
+            let membranes = self.neurons[last].membranes();
             v.sample(
-                self.act.cycles,
+                self.cycle_no,
                 &state,
                 &membranes,
-                self.controller.spike_reg(),
-                self.controller.enables(),
+                self.controller.spike_reg(last),
+                self.controller.enables(last),
             );
         }
         self.controller.advance();
         self.controller.state() != CtrlState::Done
     }
 
-    /// Drive the enable latches from the controller's pruning mask.
-    fn apply_prune_mask(&mut self) {
-        self.neurons.set_enables(self.controller.enables());
+    /// Drive layer `l`'s enable latches from the controller's pruning mask.
+    fn apply_prune_mask(&mut self, l: usize) {
+        self.neurons[l].set_enables(self.controller.enables(l));
     }
 
     /// Run one full inference window through the cycle-stepped FSM.
     pub fn run(&mut self, img: &Image, seed: u32) -> Result<RtlResult> {
         self.load_image(img, seed)?;
-        let start_cycles = self.act.cycles;
-        let start_act = self.act;
+        let start = self.total_activity();
+        let start_layers = self.layer_act.clone();
         while self.tick_cycle() {}
-        Ok(self.collect_result(start_cycles, &start_act))
+        Ok(self.collect_result(&start, &start_layers))
     }
 
-    /// Run one full inference window on the batched-timestep fast path.
-    ///
-    /// Produces an [`RtlResult`] byte-identical to [`RtlCore::run`]
-    /// (including [`ActivityCounters`] and the per-step logs) without
-    /// walking the FSM clock by clock: per timestep the encoder bulk-draws
-    /// its comparators into an active-pixel list, only spiking rows reach
-    /// the adder tree, and cycle counts come from the closed-form schedule
-    /// (`⌈n_inputs/k⌉` integrate + leak + fire clocks). Falls back to the
-    /// cycle path when a VCD sink is attached, which needs every clock.
+    /// Run one full inference window on the batched-timestep fast path
+    /// (full window; see [`RtlCore::run_fast_early`] for the margin-exit
+    /// variant).
     pub fn run_fast(&mut self, img: &Image, seed: u32) -> Result<RtlResult> {
+        self.run_fast_early(img, seed, EarlyExit::Off)
+    }
+
+    /// Run one inference window on the fast path, optionally stopping
+    /// early once the final layer's leading spike count beats the
+    /// runner-up by the [`EarlyExit::Margin`] policy (checked between
+    /// timesteps, the same schedule point as the behavioral model's
+    /// check — `steps_run` parity is pinned by test).
+    ///
+    /// Produces an [`RtlResult`] byte-identical to [`RtlCore::run`] over
+    /// the executed window (including [`ActivityCounters`] and the
+    /// per-step logs) without walking the FSM clock by clock: per
+    /// timestep and per layer the active inputs are bulk-gathered (layer
+    /// 0 from the encoder comparators, deeper layers from the previous
+    /// layer's spike accumulator), only spiking rows reach the adder
+    /// tree, and cycle counts come from the closed-form schedule
+    /// (`⌈n_in/k⌉` integrate + leak + fire clocks per layer). Falls back
+    /// to the cycle path when a VCD sink is attached, which needs every
+    /// clock (the fallback runs the full window — early exit is a hint).
+    pub fn run_fast_early(
+        &mut self,
+        img: &Image,
+        seed: u32,
+        early: EarlyExit,
+    ) -> Result<RtlResult> {
         if self.vcd.is_some() {
             return self.run(img, seed);
         }
         self.load_image(img, seed)?;
-        let start_cycles = self.act.cycles;
-        let start_act = self.act;
+        let start = self.total_activity();
+        let start_layers = self.layer_act.clone();
 
-        let n_in = self.cfg.n_inputs;
         let k = self.controller.pixels_per_cycle();
         let row_len = match self.cfg.leak_mode {
             LeakMode::PerRow { row_len } => Some(row_len),
             LeakMode::PerTimestep => None,
         };
-        // Closed-form clock counts per timestep (EndOfStep only; the
-        // Immediate path counts incrementally because enables — and with
-        // them the schedule-relevant datapath state — can change per
-        // integrate clock).
-        let integrate_clocks = n_in.div_ceil(k) as u64;
-        let leak_clocks = match row_len {
-            Some(r) => ((n_in - 1) / r + 1) as u64,
-            None => 1,
-        };
+        let n_layers = self.neurons.len();
 
-        for _ in 0..self.cfg.timesteps {
-            match self.cfg.fire_mode {
-                FireMode::EndOfStep => {
-                    self.fast_integrate_end_of_step(row_len);
-                    self.act.cycles += integrate_clocks + leak_clocks;
+        'window: for t in 0..self.cfg.timesteps {
+            for l in 0..n_layers {
+                match self.cfg.fire_mode {
+                    FireMode::EndOfStep => {
+                        self.fast_integrate_end_of_step(l, row_len);
+                        // Closed-form clock counts for this layer's walk
+                        // (EndOfStep only; the Immediate path counts
+                        // incrementally because enables — and with them
+                        // the schedule-relevant datapath state — can
+                        // change per integrate clock).
+                        let n_in = self.cfg.layer_input(l);
+                        let integrate_clocks = n_in.div_ceil(k) as u64;
+                        let leak_clocks = match (l, row_len) {
+                            (0, Some(r)) => ((n_in - 1) / r + 1) as u64,
+                            _ => 1,
+                        };
+                        self.layer_act[l].cycles += integrate_clocks + leak_clocks;
+                        self.cycle_no += integrate_clocks + leak_clocks;
+                    }
+                    FireMode::Immediate => self.fast_integrate_immediate(l, k, row_len),
                 }
-                FireMode::Immediate => self.fast_integrate_immediate(k, row_len),
+                // The layer's Fire clock.
+                self.fired_scratch[l].fill(false);
+                if self.cfg.fire_mode == FireMode::EndOfStep {
+                    self.neurons[l]
+                        .fire_check(&mut self.fired_scratch[l], &mut self.layer_act[l]);
+                }
+                self.controller.latch_fire(
+                    l,
+                    &self.fired_scratch[l],
+                    self.neurons[l].spike_counts(),
+                );
+                self.apply_prune_mask(l);
+                self.step_membranes.extend_from_slice(self.neurons[l].accs());
+                self.step_spikes.extend_from_slice(&self.fired_scratch[l]);
+                self.layer_act[l].cycles += 1;
+                self.cycle_no += 1;
             }
-            // The Fire clock.
-            self.fired_scratch.fill(false);
-            if self.cfg.fire_mode == FireMode::EndOfStep {
-                self.neurons.fire_check(&mut self.fired_scratch, &mut self.act);
+            self.controller.end_timestep();
+            self.membrane_log.push(std::mem::take(&mut self.step_membranes));
+            self.spike_log.push(std::mem::take(&mut self.step_spikes));
+
+            if let EarlyExit::Margin { margin, min_steps } = early {
+                if t + 1 >= min_steps {
+                    // Same check, same schedule point as the behavioral
+                    // model (`snn::network::run_inference`). A margin
+                    // needs a runner-up: degenerate single-output
+                    // topologies never early-exit.
+                    let counts = self.neurons[n_layers - 1].spike_counts();
+                    let mut sorted: Vec<u32> = counts.to_vec();
+                    sorted.sort_unstable_by(|a, b| b.cmp(a));
+                    if sorted.len() > 1 && sorted[0] >= sorted[1] + margin {
+                        break 'window;
+                    }
+                }
             }
-            self.controller.latch_fire(&self.fired_scratch, self.neurons.spike_counts());
-            self.apply_prune_mask();
-            self.membrane_log.push(self.neurons.membranes());
-            self.spike_log.push(self.fired_scratch.clone());
-            self.act.cycles += 1;
         }
         self.controller.finish();
-        Ok(self.collect_result(start_cycles, &start_act))
+        Ok(self.collect_result(&start, &start_layers))
     }
 
-    /// One timestep's integrate + leak phases, `FireMode::EndOfStep`.
+    /// One layer's integrate + leak phases, `FireMode::EndOfStep`.
     ///
-    /// Enables cannot change mid-timestep in this mode (pruning only acts
-    /// on the Fire clock), so the BRAM gate is hoisted out of the pixel
-    /// loop and the whole leak segment structure reduces to: one segment
-    /// per row (`PerRow`) or one segment for the full frame, each followed
-    /// by its Leak clock — the last segment's leak being the end-of-step
-    /// leak, exactly as the FSM schedules it.
-    fn fast_integrate_end_of_step(&mut self, row_len: Option<usize>) {
-        let n_in = self.cfg.n_inputs;
-        let seg = row_len.unwrap_or(n_in);
-        let any_enabled = self.controller.any_enabled();
+    /// Enables cannot change mid-walk in this mode (pruning only acts on
+    /// Fire clocks), so the BRAM gate is hoisted out of the input loop and
+    /// the whole leak segment structure reduces to: one segment per image
+    /// row on layer 0 in `PerRow` mode, or one segment for the full walk,
+    /// each followed by its Leak clock — the last segment's leak being the
+    /// end-of-walk leak, exactly as the FSM schedules it.
+    fn fast_integrate_end_of_step(&mut self, l: usize, row_len: Option<usize>) {
+        let n_in = self.cfg.layer_input(l);
+        let seg = if l == 0 { row_len.unwrap_or(n_in) } else { n_in };
+        let any_enabled = self.controller.any_enabled(l);
         let mut start = 0usize;
         while start < n_in {
             let end = (start + seg).min(n_in);
             self.active_scratch.clear();
-            self.encoder.tick_range_into(start, end, &mut self.active_scratch, &mut self.act);
-            if any_enabled {
-                for &p in &self.active_scratch {
-                    self.act.bram_reads += 1;
-                    self.neurons.add_row(self.weights.row(p as usize), &mut self.act);
+            if l == 0 {
+                self.encoder.tick_range_into(start, end, &mut self.active_scratch, &mut self.enc_act);
+            } else {
+                let prev = self.controller.step_fired(l - 1);
+                for p in start..end {
+                    if prev[p] {
+                        self.active_scratch.push(p as u32);
+                    }
                 }
             }
-            self.neurons.leak_enabled(&mut self.act);
+            if any_enabled {
+                for &p in &self.active_scratch {
+                    self.layer_act[l].bram_reads += 1;
+                    self.neurons[l]
+                        .add_row(self.weights.layer(l).row(p as usize), &mut self.layer_act[l]);
+                }
+            }
+            self.neurons[l].leak_enabled(&mut self.layer_act[l]);
             start = end;
         }
     }
 
-    /// One timestep's integrate + leak phases, `FireMode::Immediate`.
+    /// One layer's integrate + leak phases, `FireMode::Immediate`.
     ///
     /// Replays the FSM's exact grouping: each integrate clock serves `k`
-    /// encoder lanes, then the combinational threshold check fires (and
-    /// possibly prunes) mid-phase; leak clocks land on row boundaries and
-    /// at the end of the frame. Cycle counting is incremental because the
-    /// schedule is walked group by group.
-    fn fast_integrate_immediate(&mut self, k: usize, row_len: Option<usize>) {
-        let n_in = self.cfg.n_inputs;
+    /// input lanes, then the combinational threshold check fires (and
+    /// possibly prunes) mid-phase; leak clocks land on row boundaries
+    /// (layer 0 only) and at the end of the walk. Cycle counting is
+    /// incremental because the schedule is walked group by group.
+    fn fast_integrate_immediate(&mut self, l: usize, k: usize, row_len: Option<usize>) {
+        let n_in = self.cfg.layer_input(l);
         let mut pixel = 0usize;
         while pixel < n_in {
             let end = (pixel + k).min(n_in);
-            let any_enabled = self.controller.any_enabled();
+            let any_enabled = self.controller.any_enabled(l);
             self.active_scratch.clear();
-            self.encoder.tick_range_into(pixel, end, &mut self.active_scratch, &mut self.act);
-            if any_enabled {
-                for &p in &self.active_scratch {
-                    self.act.bram_reads += 1;
-                    self.neurons.add_row(self.weights.row(p as usize), &mut self.act);
+            if l == 0 {
+                self.encoder.tick_range_into(pixel, end, &mut self.active_scratch, &mut self.enc_act);
+            } else {
+                let prev = self.controller.step_fired(l - 1);
+                for p in pixel..end {
+                    if prev[p] {
+                        self.active_scratch.push(p as u32);
+                    }
                 }
             }
-            self.act.cycles += 1; // the Integrate clock
-            self.fired_scratch.fill(false);
-            let any = self.neurons.immediate_fire(&mut self.fired_scratch, &mut self.act);
+            if any_enabled {
+                for &p in &self.active_scratch {
+                    self.layer_act[l].bram_reads += 1;
+                    self.neurons[l]
+                        .add_row(self.weights.layer(l).row(p as usize), &mut self.layer_act[l]);
+                }
+            }
+            self.layer_act[l].cycles += 1; // the Integrate clock
+            self.cycle_no += 1;
+            self.fired_scratch[l].fill(false);
+            let any = self.neurons[l]
+                .immediate_fire(&mut self.fired_scratch[l], &mut self.layer_act[l]);
             if any {
-                self.controller.latch_fire(&self.fired_scratch, self.neurons.spike_counts());
-                self.apply_prune_mask();
+                self.controller.latch_fire(
+                    l,
+                    &self.fired_scratch[l],
+                    self.neurons[l].spike_counts(),
+                );
+                self.apply_prune_mask(l);
             }
             pixel = end;
-            if pixel == n_in || row_len.is_some_and(|r| pixel % r == 0) {
-                self.neurons.leak_enabled(&mut self.act);
-                self.act.cycles += 1; // the Leak clock
+            let row_boundary = l == 0 && row_len.is_some_and(|r| pixel % r == 0);
+            if pixel == n_in || row_boundary {
+                self.neurons[l].leak_enabled(&mut self.layer_act[l]);
+                self.layer_act[l].cycles += 1; // the Leak clock
+                self.cycle_no += 1;
             }
         }
     }
 
-    /// Package the window's outputs + activity delta into an [`RtlResult`].
-    fn collect_result(&mut self, start_cycles: u64, start_act: &ActivityCounters) -> RtlResult {
-        let spike_counts = self.neurons.spike_counts().to_vec();
-        let window_act = self.act.since(start_act);
-        let energy = self.energy_model.evaluate(&window_act);
+    /// Package the window's outputs + activity deltas into an
+    /// [`RtlResult`].
+    fn collect_result(
+        &mut self,
+        start: &ActivityCounters,
+        start_layers: &[ActivityCounters],
+    ) -> RtlResult {
+        let window = self.total_activity().since(start);
+        let activity_by_layer: Vec<ActivityCounters> = self
+            .layer_act
+            .iter()
+            .zip(start_layers)
+            .map(|(a, s)| a.since(s))
+            .collect();
+        let energy = self.energy_model.evaluate(&window);
+        let energy_by_layer = self.energy_model.evaluate_layers(&activity_by_layer);
+        let spike_counts_by_layer: Vec<Vec<u32>> =
+            self.neurons.iter().map(|n| n.spike_counts().to_vec()).collect();
+        let spike_counts =
+            spike_counts_by_layer.last().cloned().expect("core has at least one layer");
         RtlResult {
             class: LayerController::decide(&spike_counts),
             spike_counts,
-            cycles: self.act.cycles - start_cycles,
-            activity: window_act,
+            cycles: window.cycles,
+            activity: window,
             energy,
             membrane_by_step: std::mem::take(&mut self.membrane_log),
             spikes_by_step: std::mem::take(&mut self.spike_log),
+            spike_counts_by_layer,
+            activity_by_layer,
+            energy_by_layer,
         }
     }
 
-    /// Cumulative activity across all windows run so far.
+    /// Cumulative activity across all windows run so far: encoder
+    /// front-end events plus every layer's datapath events and clocks.
     pub fn total_activity(&self) -> ActivityCounters {
-        self.act
+        let mut total = self.enc_act;
+        for la in &self.layer_act {
+            total.add(la);
+        }
+        total
+    }
+
+    /// Cumulative per-layer activity across all windows run so far.
+    pub fn layer_activity(&self) -> &[ActivityCounters] {
+        &self.layer_act
     }
 }
 
@@ -387,6 +555,7 @@ mod tests {
     use super::*;
     use crate::config::{DecisionPolicy, FireMode, LeakMode, PruneMode};
     use crate::data::DigitGen;
+    use crate::fixed::WeightMatrix;
     use crate::snn::BehavioralNet;
     use crate::testutil::PropRunner;
 
@@ -394,6 +563,20 @@ mod tests {
         let mut rng = crate::prng::Xorshift32::new(seed);
         let data: Vec<i32> = (0..7840).map(|_| rng.range_i32(-30, 60)).collect();
         WeightMatrix::from_rows(784, 10, 9, data).unwrap()
+    }
+
+    /// A random weight stack matching `topology` (9-bit, mild magnitudes
+    /// so the 24-bit accumulator never saturates).
+    fn test_stack(topology: &[usize], seed: u32) -> WeightStack {
+        let mut rng = crate::prng::Xorshift32::new(seed);
+        let layers = topology
+            .windows(2)
+            .map(|d| {
+                let data: Vec<i32> = (0..d[0] * d[1]).map(|_| rng.range_i32(-30, 60)).collect();
+                WeightMatrix::from_rows(d[0], d[1], 9, data).unwrap()
+            })
+            .collect();
+        WeightStack::from_layers(layers).unwrap()
     }
 
     #[test]
@@ -406,6 +589,26 @@ mod tests {
         assert_eq!(r.cycles, 786 * 3);
         assert_eq!(r.membrane_by_step.len(), 3);
         assert_eq!(r.spikes_by_step.len(), 3);
+    }
+
+    #[test]
+    fn layered_cycle_count_matches_schedule() {
+        // [784, 16, 10], T=2: per timestep the hidden walk costs 784+1+1
+        // and the output walk 16+1+1 clocks.
+        let cfg = SnnConfig::paper().with_topology(vec![784, 16, 10]).with_timesteps(2);
+        let mut core = RtlCore::new(cfg, test_stack(&[784, 16, 10], 5)).unwrap();
+        let img = DigitGen::new(1).sample(2, 0);
+        let r = core.run(&img, 7).unwrap();
+        assert_eq!(r.cycles, (786 + 18) * 2);
+        // Per-layer attribution decomposes the total exactly.
+        assert_eq!(r.activity_by_layer[0].cycles, 786 * 2);
+        assert_eq!(r.activity_by_layer[1].cycles, 18 * 2);
+        // Concatenated logs carry 16 hidden + 10 output entries per step.
+        assert_eq!(r.membrane_by_step.len(), 2);
+        assert_eq!(r.membrane_by_step[0].len(), 26);
+        assert_eq!(r.spikes_by_step[0].len(), 26);
+        assert_eq!(r.spike_counts_by_layer.len(), 2);
+        assert_eq!(r.spike_counts_by_layer[1], r.spike_counts);
     }
 
     #[test]
@@ -454,11 +657,56 @@ mod tests {
         });
     }
 
+    /// The layered equivalence theorem: a deep RTL core (EndOfStep,
+    /// PerTimestep) matches the chained behavioral stack — final-layer
+    /// decision, spike counts and the output-layer slice of every
+    /// per-step log — over random stacks/images/seeds.
+    #[test]
+    fn deep_rtl_equals_behavioral_model() {
+        PropRunner::new("deep_rtl_equiv", 8).run(|g| {
+            let hidden = g.rng.range_i32(8, 40) as usize;
+            let topology = vec![784, hidden, 10];
+            let cfg = SnnConfig::paper()
+                .with_topology(topology.clone())
+                .with_timesteps(g.rng.range_i32(2, 6) as u32)
+                .with_v_th(g.rng.range_i32(60, 300))
+                .with_decay_shift(g.rng.range_i32(1, 5) as u32);
+            let stack = test_stack(&topology, g.rng.next_u32());
+            let img = DigitGen::new(g.rng.next_u32()).sample(g.rng.below(10) as u8, g.rng.below(20));
+            let seed = g.rng.next_u32();
+
+            let mut core = RtlCore::new(cfg.clone(), stack.clone()).unwrap();
+            let rtl = core.run(&img, seed).unwrap();
+            assert_eq!(rtl.activity.saturations, 0, "saturation voids equivalence");
+
+            let net = BehavioralNet::new(cfg.clone(), stack).unwrap();
+            let (beh, traces) = net.classify_traced(&img, seed, cfg.timesteps);
+
+            assert_eq!(rtl.spike_counts, beh.spike_counts, "spike counts diverge");
+            assert_eq!(rtl.class, beh.class, "decision diverges");
+            for (t, trace) in traces.iter().enumerate() {
+                // The RTL log concatenates [hidden | output]; the
+                // behavioral trace carries the output layer.
+                assert_eq!(
+                    &rtl.membrane_by_step[t][hidden..],
+                    &trace.membrane[..],
+                    "output membrane diverges at step {t}"
+                );
+                assert_eq!(
+                    &rtl.spikes_by_step[t][hidden..],
+                    &trace.fired[..],
+                    "output fire pattern diverges at step {t}"
+                );
+            }
+        });
+    }
+
     /// The fast-path theorem: `run_fast` produces a bit-identical
     /// `RtlResult` — spike counts, decision, cycle count, per-step
-    /// membrane/fire logs AND every activity counter — across the full
-    /// fire/leak/prune mode cross-product, datapath widths, and weights
-    /// hot enough to exercise per-add saturation.
+    /// membrane/fire logs AND every activity counter (global and
+    /// per-layer) — across the full fire/leak/prune mode cross-product,
+    /// datapath widths, topology depths, and weights hot enough to
+    /// exercise per-add saturation.
     #[test]
     fn fast_path_equals_cycle_path() {
         PropRunner::new("fast_path_equiv", 40).run(|g| {
@@ -475,11 +723,18 @@ mod tests {
             ]);
             // Widths that divide 28 keep PerRow's alignment contract.
             let k = *g.choice(&[1usize, 2, 4, 7, 14, 28]);
+            // Sample the layered schedule too: the hidden widths are
+            // deliberately *not* multiples of k so the walk's final
+            // partial group is exercised.
+            let topology = g
+                .choice(&[vec![784usize, 10], vec![784, 24, 10], vec![784, 17, 12, 10]])
+                .clone();
             // Occasionally squeeze the accumulator so the saturating adder
             // actually clamps — the fast path must count those events and
             // clamp per-add exactly like the cycle path.
             let squeeze = g.rng.below(3) == 0;
             let cfg = SnnConfig::paper()
+                .with_topology(if squeeze { vec![784, 10] } else { topology.clone() })
                 .with_timesteps(g.rng.range_i32(1, 6) as u32)
                 .with_fire_mode(fire)
                 .with_leak_mode(leak)
@@ -489,9 +744,11 @@ mod tests {
             let cfg = if squeeze { SnnConfig { acc_bits: 9, ..cfg } } else { cfg };
             let w = if squeeze {
                 // Hot uniform drive against a 9-bit accumulator saturates.
-                WeightMatrix::from_rows(784, 10, 9, vec![120; 7840]).unwrap()
+                WeightStack::from(
+                    WeightMatrix::from_rows(784, 10, 9, vec![120; 7840]).unwrap(),
+                )
             } else {
-                test_weights(g.rng.next_u32())
+                test_stack(&topology, g.rng.next_u32())
             };
             let img = DigitGen::new(g.rng.next_u32()).sample(g.rng.below(10) as u8, g.rng.below(20));
             let seed = g.rng.next_u32();
@@ -518,7 +775,8 @@ mod tests {
             }
             assert_eq!(
                 slow, fast,
-                "fast path diverges (fire={fire:?} leak={leak:?} prune={prune:?} k={k})"
+                "fast path diverges (fire={fire:?} leak={leak:?} prune={prune:?} k={k} \
+                 topology={topology:?})"
             );
         });
     }
@@ -537,6 +795,44 @@ mod tests {
         let c = core.run(&img, 7).unwrap();
         assert_eq!(a, c, "interleaved cycle path must agree");
         assert_eq!(core.total_activity().cycles, 3 * 786 * 3);
+    }
+
+    #[test]
+    fn early_exit_stops_at_margin_and_preserves_prefix() {
+        // Without pruning the margin is reachable; the early window's
+        // per-step logs must be a prefix of the full window's.
+        let cfg = SnnConfig::paper().with_timesteps(20).with_prune(PruneMode::Off);
+        // Crisp block weights: one class accumulates a margin quickly.
+        let mut w = vec![0i32; 7840];
+        for i in 0..784 {
+            if i / 79 == 4 {
+                w[i * 10 + 4] = 40;
+            }
+        }
+        let w = WeightMatrix::from_rows(784, 10, 9, w).unwrap();
+        let mut px = vec![0u8; 784];
+        for (i, p) in px.iter_mut().enumerate() {
+            if i / 79 == 4 {
+                *p = 250;
+            }
+        }
+        let img = crate::data::Image { label: 4, pixels: px };
+
+        let mut core = RtlCore::new(cfg.clone(), w.clone()).unwrap();
+        let full = core.run_fast(&img, 9).unwrap();
+        let mut core = RtlCore::new(cfg, w).unwrap();
+        let early = core
+            .run_fast_early(&img, 9, EarlyExit::Margin { margin: 3, min_steps: 2 })
+            .unwrap();
+        assert_eq!(early.class, full.class);
+        let steps = early.membrane_by_step.len();
+        assert!(steps >= 2 && steps < 20, "margin never triggered: {steps} steps");
+        assert_eq!(early.cycles, 786 * steps as u64);
+        assert_eq!(
+            &early.membrane_by_step[..],
+            &full.membrane_by_step[..steps],
+            "early window must be a bit-exact prefix"
+        );
     }
 
     #[test]
@@ -593,6 +889,35 @@ mod tests {
         let mut core = RtlCore::new(cfg, w).unwrap();
         let r = core.run(&img, 3).unwrap();
         assert!(r.spike_counts.iter().all(|&c| c == 1), "{:?}", r.spike_counts);
+    }
+
+    #[test]
+    fn deep_core_propagates_spikes_through_hidden_layer() {
+        // Uniform positive drive: the hidden layer fires, which must give
+        // the output layer nonzero input current and spikes of its own.
+        let cfg = SnnConfig::paper()
+            .with_topology(vec![784, 12, 10])
+            .with_timesteps(4)
+            .with_v_th(100)
+            .with_prune(PruneMode::Off);
+        let l0 = WeightMatrix::from_rows(784, 12, 9, vec![20; 784 * 12]).unwrap();
+        let l1 = WeightMatrix::from_rows(12, 10, 9, vec![60; 120]).unwrap();
+        let stack = WeightStack::from_layers(vec![l0, l1]).unwrap();
+        let img = crate::data::Image { label: 0, pixels: vec![255; 784] };
+        let mut core = RtlCore::new(cfg, stack).unwrap();
+        let r = core.run_fast(&img, 11).unwrap();
+        assert!(
+            r.spike_counts_by_layer[0].iter().sum::<u32>() > 0,
+            "hidden layer never fired"
+        );
+        assert!(
+            r.spike_counts.iter().sum::<u32>() > 0,
+            "output layer never fired: hidden spikes did not propagate"
+        );
+        assert!(
+            r.activity_by_layer[1].bram_reads > 0,
+            "output layer BRAM idle despite hidden spikes"
+        );
     }
 
     #[test]
@@ -673,6 +998,14 @@ mod tests {
         let cfg = SnnConfig::paper();
         let w = WeightMatrix::zeros(100, 10, 9);
         assert!(RtlCore::new(cfg, w).is_err());
+        // A stack whose depth disagrees with the config is rejected too.
+        let cfg = SnnConfig::paper();
+        let stack = WeightStack::from_layers(vec![
+            WeightMatrix::zeros(784, 16, 9),
+            WeightMatrix::zeros(16, 10, 9),
+        ])
+        .unwrap();
+        assert!(RtlCore::new(cfg, stack).is_err());
         let cfg = SnnConfig::paper();
         let w = WeightMatrix::zeros(784, 10, 9);
         let mut core = RtlCore::new(cfg, w).unwrap();

@@ -62,6 +62,15 @@ impl RtlPoissonEncoder {
     /// (the counter sums are order-independent), but keeps the running
     /// toggle total in a register instead of read-modify-writing the
     /// counter struct per pixel.
+    ///
+    /// The body runs four interleaved xorshift32 lanes per iteration: the
+    /// per-pixel streams are independent, so the three XOR/shift stages
+    /// and the popcount vectorize across lanes (this is the fast path's
+    /// hottest loop — one draw per pixel per timestep). Spike indices are
+    /// emitted lane-by-lane in ascending order, so the active list is
+    /// byte-identical to the scalar walk; the pinned lane draws and
+    /// chi-squared law in `rust/tests/encoder_stats.rs` plus the golden
+    /// `run_fast` fixtures fail loudly on any bit drift.
     pub fn tick_range_into(
         &mut self,
         start: usize,
@@ -71,7 +80,39 @@ impl RtlPoissonEncoder {
     ) {
         debug_assert!(start <= end && end <= self.states.len());
         let mut toggles = 0u64;
-        for p in start..end {
+        let mut p = start;
+        while p + 4 <= end {
+            let s0 = self.states[p];
+            let s1 = self.states[p + 1];
+            let s2 = self.states[p + 2];
+            let s3 = self.states[p + 3];
+            let n0 = xorshift32_step(s0);
+            let n1 = xorshift32_step(s1);
+            let n2 = xorshift32_step(s2);
+            let n3 = xorshift32_step(s3);
+            toggles += u64::from((s0 ^ n0).count_ones())
+                + u64::from((s1 ^ n1).count_ones())
+                + u64::from((s2 ^ n2).count_ones())
+                + u64::from((s3 ^ n3).count_ones());
+            self.states[p] = n0;
+            self.states[p + 1] = n1;
+            self.states[p + 2] = n2;
+            self.states[p + 3] = n3;
+            if u32::from(self.intensities[p]) > (n0 & 0xFF) {
+                active.push(p as u32);
+            }
+            if u32::from(self.intensities[p + 1]) > (n1 & 0xFF) {
+                active.push(p as u32 + 1);
+            }
+            if u32::from(self.intensities[p + 2]) > (n2 & 0xFF) {
+                active.push(p as u32 + 2);
+            }
+            if u32::from(self.intensities[p + 3]) > (n3 & 0xFF) {
+                active.push(p as u32 + 3);
+            }
+            p += 4;
+        }
+        while p < end {
             let prev = self.states[p];
             let next = xorshift32_step(prev);
             toggles += u64::from((prev ^ next).count_ones());
@@ -79,6 +120,7 @@ impl RtlPoissonEncoder {
             if u32::from(self.intensities[p]) > (next & 0xFF) {
                 active.push(p as u32);
             }
+            p += 1;
         }
         act.reg_toggles += toggles;
         act.prng_steps += (end - start) as u64;
@@ -147,10 +189,13 @@ mod tests {
         b.load(&img.pixels, 77, &mut act_b);
         let mut active = Vec::new();
         for t in 0..8 {
-            // Uneven split exercises the range boundaries.
+            // Uneven splits exercise the range boundaries, including
+            // non-multiple-of-4 lengths that take the scalar tail of the
+            // 4-lane bulk walk.
             active.clear();
-            b.tick_range_into(0, 300, &mut active, &mut act_b);
-            b.tick_range_into(300, IMG_PIXELS, &mut active, &mut act_b);
+            b.tick_range_into(0, 157, &mut active, &mut act_b);
+            b.tick_range_into(157, 301, &mut active, &mut act_b);
+            b.tick_range_into(301, IMG_PIXELS, &mut active, &mut act_b);
             let mut expect = Vec::new();
             for p in 0..IMG_PIXELS {
                 if a.tick_pixel(p, &mut act_a) {

@@ -11,12 +11,14 @@
 //!
 //! * [`LifNeuronCore`] — one neuron as an object; the readable reference
 //!   model, kept for unit tests and documentation.
-//! * [`LifNeuronArray`] — the whole output layer as a structure-of-arrays
-//!   (flat `acc` / `spike_count` buffers plus a `u64` enable bitmask).
-//!   This is what [`crate::rtl::RtlCore`] actually runs: the per-cycle
-//!   inner loops walk contiguous memory and skip disabled neurons by bit
-//!   iteration instead of dispatching through an object array. The two are
-//!   proven activity- and state-equivalent by the property test below.
+//! * [`LifNeuronArray`] — one whole layer as a structure-of-arrays (flat
+//!   `acc` / `spike_count` buffers plus a multi-word enable bitmask, so
+//!   hidden layers wider than 64 neurons fit). This is what
+//!   [`crate::rtl::RtlCore`] actually runs — one array per layer of the
+//!   topology: the per-cycle inner loops walk contiguous memory and skip
+//!   disabled neurons by bit iteration instead of dispatching through an
+//!   object array. The two are proven activity- and state-equivalent by
+//!   the property test below.
 
 use crate::config::SnnConfig;
 use crate::fixed::leak;
@@ -155,11 +157,12 @@ impl LifNeuronCore {
 
 // ---------------------------------------------------------------------------
 
-/// The whole output layer as a structure-of-arrays.
+/// One whole layer as a structure-of-arrays.
 ///
-/// State layout: flat `acc` / `spike_count` vectors plus a `u64` enable
-/// bitmask (bit `j` = neuron `j` enabled). Supports at most 64 neurons —
-/// enforced by [`crate::rtl::RtlCore::new`] (the paper's layer has 10).
+/// State layout: flat `acc` / `spike_count` vectors plus a multi-word
+/// enable bitmask (bit `j % 64` of word `j / 64` = neuron `j` enabled), so
+/// any layer width works — the paper's output layer has 10 neurons, the
+/// MLP-shaped hidden layer 128.
 ///
 /// Every mutator records exactly the [`ActivityCounters`] events the
 /// per-neuron [`LifNeuronCore::tick`] would: adds, per-add saturations,
@@ -170,8 +173,8 @@ impl LifNeuronCore {
 pub struct LifNeuronArray {
     acc: Vec<i32>,
     spike_count: Vec<u32>,
-    /// Enable latches (bit `j` = `en_j`); cleared by the pruning mask.
-    enabled: u64,
+    /// Enable latch words; cleared by the pruning mask.
+    enabled: Vec<u64>,
     acc_max: i32,
     decay_shift: u32,
     v_th: i32,
@@ -179,12 +182,14 @@ pub struct LifNeuronArray {
 }
 
 impl LifNeuronArray {
+    /// Build an array sized to the config's *output* width — callers
+    /// construct one per layer via [`crate::SnnConfig::layer_config`].
     pub fn new(cfg: &SnnConfig) -> Self {
-        assert!(cfg.n_outputs <= 64, "LifNeuronArray supports at most 64 neurons");
+        let n = cfg.n_outputs();
         LifNeuronArray {
-            acc: vec![cfg.v_rest; cfg.n_outputs],
-            spike_count: vec![0; cfg.n_outputs],
-            enabled: Self::full_mask(cfg.n_outputs),
+            acc: vec![cfg.v_rest; n],
+            spike_count: vec![0; n],
+            enabled: Self::full_mask(n),
             acc_max: cfg.acc_max(),
             decay_shift: cfg.decay_shift,
             v_th: cfg.v_th,
@@ -192,12 +197,17 @@ impl LifNeuronArray {
         }
     }
 
-    fn full_mask(n: usize) -> u64 {
-        if n >= 64 {
-            u64::MAX
-        } else {
-            (1u64 << n) - 1
+    fn full_mask(n: usize) -> Vec<u64> {
+        let words = n.div_ceil(64).max(1);
+        let mut mask = vec![u64::MAX; words];
+        let rem = n % 64;
+        if rem != 0 {
+            mask[words - 1] = (1u64 << rem) - 1;
         }
+        if n == 0 {
+            mask[0] = 0;
+        }
+        mask
     }
 
     /// Number of neurons.
@@ -215,7 +225,12 @@ impl LifNeuronArray {
         self.acc[j]
     }
 
-    /// All membrane potentials.
+    /// All membrane potentials (borrowed; no allocation).
+    pub fn accs(&self) -> &[i32] {
+        &self.acc
+    }
+
+    /// All membrane potentials (owned copy).
     pub fn membranes(&self) -> Vec<i32> {
         self.acc.clone()
     }
@@ -227,22 +242,21 @@ impl LifNeuronArray {
 
     /// Enable latch of neuron `j`.
     pub fn enabled(&self, j: usize) -> bool {
-        (self.enabled >> j) & 1 == 1
+        (self.enabled[j / 64] >> (j % 64)) & 1 == 1
     }
 
     /// True while at least one neuron is still enabled.
     pub fn any_enabled(&self) -> bool {
-        self.enabled != 0
+        self.enabled.iter().any(|&w| w != 0)
     }
 
     /// Drive the enable latches from the controller's pruning mask.
     pub fn set_enables(&mut self, enables: &[bool]) {
         debug_assert_eq!(enables.len(), self.acc.len());
-        let mut mask = 0u64;
+        self.enabled.iter_mut().for_each(|w| *w = 0);
         for (j, &e) in enables.iter().enumerate() {
-            mask |= u64::from(e) << j;
+            self.enabled[j / 64] |= u64::from(e) << (j % 64);
         }
-        self.enabled = mask;
     }
 
     #[inline(always)]
@@ -266,31 +280,35 @@ impl LifNeuronArray {
     #[inline]
     pub fn add_row(&mut self, row: &[i32], act: &mut ActivityCounters) {
         debug_assert_eq!(row.len(), self.acc.len());
-        let mut m = self.enabled;
-        while m != 0 {
-            let j = m.trailing_zeros() as usize;
-            m &= m - 1;
-            let sum = i64::from(self.acc[j]) + i64::from(row[j]);
-            let clamped = sum.clamp(-i64::from(self.acc_max), i64::from(self.acc_max)) as i32;
-            if i64::from(clamped) != sum {
-                act.saturations += 1;
+        for wi in 0..self.enabled.len() {
+            let mut m = self.enabled[wi];
+            while m != 0 {
+                let j = wi * 64 + m.trailing_zeros() as usize;
+                m &= m - 1;
+                let sum = i64::from(self.acc[j]) + i64::from(row[j]);
+                let clamped = sum.clamp(-i64::from(self.acc_max), i64::from(self.acc_max)) as i32;
+                if i64::from(clamped) != sum {
+                    act.saturations += 1;
+                }
+                act.adds += 1;
+                self.write_acc(j, clamped, act);
             }
-            act.adds += 1;
-            self.write_acc(j, clamped, act);
         }
     }
 
     /// One `Leak` clock: shift-subtract decay on every enabled neuron.
     #[inline]
     pub fn leak_enabled(&mut self, act: &mut ActivityCounters) {
-        let mut m = self.enabled;
-        while m != 0 {
-            let j = m.trailing_zeros() as usize;
-            m &= m - 1;
-            let next = leak(self.acc[j], self.decay_shift);
-            act.shifts += 1;
-            act.adds += 1; // the subtract half of shift-subtract
-            self.write_acc(j, next, act);
+        for wi in 0..self.enabled.len() {
+            let mut m = self.enabled[wi];
+            while m != 0 {
+                let j = wi * 64 + m.trailing_zeros() as usize;
+                m &= m - 1;
+                let next = leak(self.acc[j], self.decay_shift);
+                act.shifts += 1;
+                act.adds += 1; // the subtract half of shift-subtract
+                self.write_acc(j, next, act);
+            }
         }
     }
 
@@ -299,16 +317,18 @@ impl LifNeuronArray {
     /// hard-resetting on a crossing. `fired` must be pre-cleared.
     pub fn fire_check(&mut self, fired: &mut [bool], act: &mut ActivityCounters) {
         debug_assert_eq!(fired.len(), self.acc.len());
-        let mut m = self.enabled;
-        while m != 0 {
-            let j = m.trailing_zeros() as usize;
-            m &= m - 1;
-            act.compares += 1;
-            if self.acc[j] >= self.v_th {
-                fired[j] = true;
-                self.spike_count[j] += 1;
-                act.reg_toggles += 1; // spike-count increment (approx.)
-                self.write_acc(j, self.v_rest, act);
+        for wi in 0..self.enabled.len() {
+            let mut m = self.enabled[wi];
+            while m != 0 {
+                let j = wi * 64 + m.trailing_zeros() as usize;
+                m &= m - 1;
+                act.compares += 1;
+                if self.acc[j] >= self.v_th {
+                    fired[j] = true;
+                    self.spike_count[j] += 1;
+                    act.reg_toggles += 1; // spike-count increment (approx.)
+                    self.write_acc(j, self.v_rest, act);
+                }
             }
         }
     }
@@ -321,17 +341,19 @@ impl LifNeuronArray {
     pub fn immediate_fire(&mut self, fired: &mut [bool], act: &mut ActivityCounters) -> bool {
         debug_assert_eq!(fired.len(), self.acc.len());
         let mut any = false;
-        let mut m = self.enabled;
-        while m != 0 {
-            let j = m.trailing_zeros() as usize;
-            m &= m - 1;
-            if self.acc[j] >= self.v_th {
-                act.compares += 1;
-                fired[j] = true;
-                any = true;
-                self.spike_count[j] += 1;
-                act.reg_toggles += 1;
-                self.write_acc(j, self.v_rest, act);
+        for wi in 0..self.enabled.len() {
+            let mut m = self.enabled[wi];
+            while m != 0 {
+                let j = wi * 64 + m.trailing_zeros() as usize;
+                m &= m - 1;
+                if self.acc[j] >= self.v_th {
+                    act.compares += 1;
+                    fired[j] = true;
+                    any = true;
+                    self.spike_count[j] += 1;
+                    act.reg_toggles += 1;
+                    self.write_acc(j, self.v_rest, act);
+                }
             }
         }
         any
@@ -428,9 +450,15 @@ mod tests {
         use crate::testutil::PropRunner;
 
         PropRunner::new("lif_array_equiv", 60).run(|g| {
-            let n = g.rng.range_i32(1, 12) as usize;
+            // Mostly narrow arrays, sometimes wider than one mask word so
+            // the multi-word enable iteration is exercised too.
+            let n = if g.rng.below(4) == 0 {
+                g.rng.range_i32(65, 140) as usize
+            } else {
+                g.rng.range_i32(1, 12) as usize
+            };
             let cfg = SnnConfig {
-                n_outputs: n,
+                topology: vec![784, n],
                 v_th: g.rng.range_i32(5, 60),
                 decay_shift: g.rng.range_i32(1, 4) as u32,
                 // Narrow accumulator so per-add saturation gets exercised.

@@ -135,6 +135,14 @@ impl EnergyModel {
         let avg_power_mw = if time_s > 0.0 { total_nj * 1e-9 / time_s * 1e3 } else { 0.0 };
         EnergyReport { dynamic_nj, static_nj, time_us, avg_power_mw }
     }
+
+    /// Per-layer energy reports from per-layer activity windows (the
+    /// N-layer core attributes every datapath event and clock to the
+    /// layer whose walk produced it; this converts each bucket under the
+    /// same constants as the whole-window [`EnergyModel::evaluate`]).
+    pub fn evaluate_layers(&self, layers: &[ActivityCounters]) -> Vec<EnergyReport> {
+        layers.iter().map(|a| self.evaluate(a)).collect()
+    }
 }
 
 #[cfg(test)]
@@ -201,6 +209,22 @@ mod tests {
         assert_eq!(a.reg_toggles, 7);
         assert_eq!(a.cycles, 8);
         assert_eq!(a.saturations, 9);
+    }
+
+    #[test]
+    fn per_layer_reports_decompose_the_total() {
+        let m = EnergyModel::default();
+        let l0 = ActivityCounters { adds: 1000, bram_reads: 40, cycles: 786, ..Default::default() };
+        let l1 = ActivityCounters { adds: 50, bram_reads: 8, cycles: 18, ..Default::default() };
+        let reports = m.evaluate_layers(&[l0, l1]);
+        assert_eq!(reports.len(), 2);
+        let mut total = l0;
+        total.add(&l1);
+        let whole = m.evaluate(&total);
+        let dyn_sum: f64 = reports.iter().map(|r| r.dynamic_nj).sum();
+        let static_sum: f64 = reports.iter().map(|r| r.static_nj).sum();
+        assert!((dyn_sum - whole.dynamic_nj).abs() < 1e-9);
+        assert!((static_sum - whole.static_nj).abs() < 1e-9);
     }
 
     #[test]

@@ -61,7 +61,7 @@ impl VcdWriter {
             CtrlState::Idle => 0,
             CtrlState::Integrate { .. } => 1,
             CtrlState::Leak { .. } => 2,
-            CtrlState::Fire => 3,
+            CtrlState::Fire { .. } => 3,
             CtrlState::Done => 4,
         }
     }
@@ -133,7 +133,7 @@ mod tests {
     #[test]
     fn only_changes_are_dumped() {
         let mut v = VcdWriter::new(2, 25);
-        let st = CtrlState::Integrate { pixel: 0 };
+        let st = CtrlState::Integrate { layer: 0, pixel: 0 };
         v.sample(1, &st, &[0, 0], &[false, false], &[true, true]);
         let after_first = v.out.len();
         // Identical sample: nothing new may be written.

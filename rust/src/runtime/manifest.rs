@@ -86,12 +86,30 @@ impl Manifest {
             .collect()
     }
 
+    /// The layer dimension chain of the artifacts. Multi-layer manifests
+    /// carry an explicit `topology=784,128,10` key; legacy manifests only
+    /// have the scalar `n_inputs`/`n_outputs` pair, which maps to the
+    /// single-layer chain.
+    pub fn topology(&self) -> Result<Vec<usize>> {
+        if self.kv.contains_key("topology") {
+            let dims: Vec<usize> =
+                self.u32_list("topology")?.into_iter().map(|d| d as usize).collect();
+            if dims.len() < 2 || dims.contains(&0) {
+                return Err(Error::malformed(
+                    self.dir.join("manifest.txt"),
+                    format!("topology {dims:?} needs >= 2 nonzero dims"),
+                ));
+            }
+            return Ok(dims);
+        }
+        Ok(vec![self.u32("n_inputs")? as usize, self.u32("n_outputs")? as usize])
+    }
+
     /// The SnnConfig the artifacts were built for.
     pub fn snn_config(&self) -> Result<SnnConfig> {
         let prune_after = self.u32("prune_after")?;
         SnnConfig {
-            n_inputs: self.u32("n_inputs")? as usize,
-            n_outputs: self.u32("n_outputs")? as usize,
+            topology: self.topology()?,
             v_th: self.i32("v_th")?,
             v_rest: self.i32("v_rest")?,
             decay_shift: self.u32("decay_shift")?,
@@ -146,10 +164,26 @@ mod tests {
         let m = Manifest::load(&dir).unwrap();
         let cfg = m.snn_config().unwrap();
         assert_eq!(cfg.v_th, 384);
+        assert_eq!(cfg.topology, vec![784, 10], "legacy scalar pair maps to one layer");
         assert_eq!(cfg.prune, PruneMode::AfterFires { after_spikes: 5 });
         assert_eq!(m.u32_list("forward_batches").unwrap(), vec![1, 8, 32]);
         assert_eq!(m.eval_seed(0).unwrap(), 12648430);
         assert_eq!(m.eval_seed(1).unwrap(), 12648430u32.wrapping_add(2654435761));
+    }
+
+    #[test]
+    fn topology_key_overrides_scalar_pair() {
+        let dir = std::env::temp_dir().join(format!("snn_manifest_topo_{}", std::process::id()));
+        write_manifest(&dir, &format!("{}topology=784,128,10\n", full_body()));
+        let m = Manifest::load(&dir).unwrap();
+        let cfg = m.snn_config().unwrap();
+        assert_eq!(cfg.topology, vec![784, 128, 10]);
+        assert_eq!(cfg.n_layers(), 2);
+        // Degenerate chains are rejected.
+        write_manifest(&dir, &format!("{}topology=784\n", full_body()));
+        assert!(Manifest::load(&dir).unwrap().snn_config().is_err());
+        write_manifest(&dir, &format!("{}topology=784,0,10\n", full_body()));
+        assert!(Manifest::load(&dir).unwrap().snn_config().is_err());
     }
 
     #[test]

@@ -125,14 +125,14 @@ impl XlaSnn {
         };
 
         let weights_lit = literal_i32(
-            &[cfg.n_inputs, cfg.n_outputs],
+            &[cfg.n_inputs(), cfg.n_outputs()],
             weights.weights.as_slice(),
         )?;
         // Synchronous-copy upload (see the note in `chunk_start` about the
         // async hazard of buffer_from_host_literal).
         let weights_buf = client.buffer_from_host_buffer(
             weights.weights.as_slice(),
-            &[cfg.n_inputs, cfg.n_outputs],
+            &[cfg.n_inputs(), cfg.n_outputs()],
             None,
         )?;
 
@@ -153,12 +153,21 @@ impl XlaSnn {
     }
 
     fn check_calibration(cfg: &SnnConfig, w: &WeightArtifact) -> Result<()> {
+        // The compiled HLO graphs implement the single-FC-layer forward;
+        // a deep manifest must be rejected here, not silently served with
+        // single-layer dynamics.
+        if cfg.n_layers() != 1 {
+            return Err(Error::InvalidConfig(format!(
+                "the XLA backend's compiled executables are single-layer; manifest \
+                 topology {:?} needs the behavioral or rtl backend",
+                cfg.topology
+            )));
+        }
         let wc = w.config();
         if wc.v_th != cfg.v_th
             || wc.decay_shift != cfg.decay_shift
             || wc.prune != cfg.prune
-            || wc.n_inputs != cfg.n_inputs
-            || wc.n_outputs != cfg.n_outputs
+            || wc.topology != cfg.topology
         {
             return Err(Error::InvalidConfig(format!(
                 "weights calibration {wc:?} disagrees with manifest config {cfg:?} — \
@@ -224,8 +233,8 @@ impl XlaSnn {
         b: usize,
     ) -> Result<Vec<Vec<u32>>> {
         let exe = &self.forwards[&b];
-        let p = self.cfg.n_inputs;
-        let n = self.cfg.n_outputs;
+        let p = self.cfg.n_inputs();
+        let n = self.cfg.n_outputs();
         let mut img_flat = vec![0i32; b * p];
         for (row, img) in images.iter().enumerate() {
             for (k, &px) in img.pixels.iter().enumerate() {
@@ -258,7 +267,7 @@ impl XlaSnn {
                 seeds.len()
             )));
         }
-        let p = self.cfg.n_inputs;
+        let p = self.cfg.n_inputs();
         let mut img_flat = vec![0i32; b * p];
         for (row, img) in images.iter().enumerate() {
             for (k, &px) in img.pixels.iter().enumerate() {
@@ -313,8 +322,8 @@ impl XlaSnn {
         st.steps_run += self.chunk_steps;
 
         // Packed layout: [states(P) | acc(N) | counts(N) | enabled(N)].
-        let p = self.cfg.n_inputs;
-        let n = self.cfg.n_outputs;
+        let p = self.cfg.n_inputs();
+        let n = self.cfg.n_outputs();
         let stride = p + 3 * n;
         let flat = st.carry.to_literal_sync()?.to_vec::<i32>()?;
         Ok((0..st.occupancy)
@@ -332,8 +341,8 @@ impl XlaSnn {
             .as_ref()
             .ok_or_else(|| Error::InvalidConfig("ann_weights.bin not built".into()))?;
         let max_b = *self.ann.keys().last().expect("ann exe");
-        let p = self.cfg.n_inputs;
-        let n = self.cfg.n_outputs;
+        let p = self.cfg.n_inputs();
+        let n = self.cfg.n_outputs();
         let mut out = Vec::with_capacity(images.len());
         let mut i = 0;
         while i < images.len() {

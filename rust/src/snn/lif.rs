@@ -57,17 +57,17 @@ pub struct LifLayer {
 impl LifLayer {
     /// Build a layer; the weight geometry must match the config.
     pub fn new(cfg: SnnConfig, weights: &WeightMatrix) -> Result<Self> {
-        if weights.n_inputs() != cfg.n_inputs || weights.n_outputs() != cfg.n_outputs {
+        if weights.n_inputs() != cfg.n_inputs() || weights.n_outputs() != cfg.n_outputs() {
             return Err(Error::ShapeMismatch(format!(
                 "weights {}x{} vs config {}x{}",
                 weights.n_inputs(),
                 weights.n_outputs(),
-                cfg.n_inputs,
-                cfg.n_outputs
+                cfg.n_inputs(),
+                cfg.n_outputs()
             )));
         }
-        let n = cfg.n_outputs;
-        let n_in = cfg.n_inputs;
+        let n = cfg.n_outputs();
+        let n_in = cfg.n_inputs();
         Ok(LifLayer {
             w_rows: std::sync::Arc::new(weights.as_slice().to_vec()),
             acc: vec![cfg.v_rest; n],
@@ -119,7 +119,7 @@ impl LifLayer {
     /// fire flags into a caller-provided buffer and records no trace
     /// (perf pass 3, EXPERIMENTS.md §Perf).
     pub fn step_into(&mut self, spikes_in: &[bool], fired_out: &mut [bool]) {
-        assert_eq!(spikes_in.len(), self.cfg.n_inputs, "input spike vector length");
+        assert_eq!(spikes_in.len(), self.cfg.n_inputs(), "input spike vector length");
         self.active_scratch.clear();
         for (i, &s) in spikes_in.iter().enumerate() {
             if s {
@@ -135,9 +135,9 @@ impl LifLayer {
     /// takes the spiking input *indices* directly — the fused
     /// encoder→integration hot path of the serving backend.
     pub fn step_events_into(&mut self, active: &[u32], fired_out: &mut [bool]) {
-        let n_out = self.cfg.n_outputs;
+        let n_out = self.cfg.n_outputs();
         assert_eq!(fired_out.len(), n_out, "output flag buffer length");
-        debug_assert!(active.iter().all(|&i| (i as usize) < self.cfg.n_inputs));
+        debug_assert!(active.iter().all(|&i| (i as usize) < self.cfg.n_inputs()));
 
         let n_enabled = self.enabled.iter().filter(|&&e| e).count() as u64;
         self.adds_performed += active.len() as u64 * n_enabled;
@@ -176,9 +176,8 @@ impl LifLayer {
 
     /// Advance one timestep, returning full observability.
     pub fn step_traced(&mut self, spikes_in: &[bool]) -> StepTrace {
-        assert_eq!(spikes_in.len(), self.cfg.n_inputs, "input spike vector length");
-        let n_in = self.cfg.n_inputs;
-        let n_out = self.cfg.n_outputs;
+        assert_eq!(spikes_in.len(), self.cfg.n_inputs(), "input spike vector length");
+        let n_out = self.cfg.n_outputs();
         let mut input_current = vec![0i32; n_out];
         let mut fired = vec![false; n_out];
         let mut membrane_pre = vec![0i32; n_out];
@@ -256,8 +255,7 @@ mod tests {
 
     fn tiny_cfg() -> SnnConfig {
         SnnConfig {
-            n_inputs: 4,
-            n_outputs: 2,
+            topology: vec![4, 2],
             v_th: 10,
             v_rest: 0,
             decay_shift: 1,
@@ -269,7 +267,7 @@ mod tests {
     }
 
     fn layer(cfg: &SnnConfig, w: Vec<i32>) -> LifLayer {
-        let m = WeightMatrix::from_rows(cfg.n_inputs, cfg.n_outputs, cfg.weight_bits, w).unwrap();
+        let m = WeightMatrix::from_rows(cfg.n_inputs(), cfg.n_outputs(), cfg.weight_bits, w).unwrap();
         LifLayer::new(cfg.clone(), &m).unwrap()
     }
 
@@ -395,8 +393,7 @@ mod tests {
     fn prop_membrane_always_within_register_bounds() {
         PropRunner::new("lif_register_bounds", 200).run(|g| {
             let cfg = SnnConfig {
-                n_inputs: 16,
-                n_outputs: 4,
+                topology: vec![16, 4],
                 acc_bits: g.rng.range_i32(8, 24) as u32,
                 v_th: g.rng.range_i32(1, 100),
                 decay_shift: g.rng.range_i32(1, 6) as u32,
@@ -430,8 +427,7 @@ mod tests {
         // traced path across random weights, configs and spike streams.
         PropRunner::new("step_into_equiv", 150).run(|g| {
             let cfg = SnnConfig {
-                n_inputs: 24,
-                n_outputs: 5,
+                topology: vec![24, 5],
                 v_th: g.rng.range_i32(5, 80),
                 decay_shift: g.rng.range_i32(1, 5) as u32,
                 acc_bits: 20,
@@ -464,8 +460,7 @@ mod tests {
     fn prop_spike_counts_monotone_and_bounded() {
         PropRunner::new("lif_spike_counts", 100).run(|g| {
             let cfg = SnnConfig {
-                n_inputs: 8,
-                n_outputs: 3,
+                topology: vec![8, 3],
                 v_th: 20,
                 decay_shift: 2,
                 acc_bits: 16,

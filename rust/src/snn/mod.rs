@@ -13,7 +13,7 @@ mod network;
 
 pub use encoder::{encode_image, encode_step, PoissonEncoder};
 pub use lif::{LifLayer, StepTrace};
-pub use network::{classify, classify_with_trace, BehavioralNet, Classification, EarlyExit};
+pub use network::{classify, classify_with_trace, BehavioralNet, Classification, EarlyExit, LifStack};
 
 #[cfg(test)]
 mod tests {

@@ -1,9 +1,19 @@
-//! Full behavioral inference: encoder + LIF layer + readout policies.
+//! Full behavioral inference: encoder + chained LIF layers + readout.
+//!
+//! Since the N-layer refactor the behavioral model runs a [`LifStack`] — a
+//! chain of [`LifLayer`]s matching `SnnConfig::topology`. Within one
+//! timestep each layer's fired vector feeds the next layer's event-driven
+//! integration (`step_events_into`), so a spike propagates through the
+//! whole depth in a single architectural step, exactly as the RTL core
+//! time-multiplexes its layer walks inside one timestep. The decision,
+//! early-exit margin and spike counts read from the final layer;
+//! `adds_performed` sums the integrate work of every layer (sparsity
+//! accounting stays whole-network).
 
 use crate::config::{DecisionPolicy, SnnConfig};
 use crate::data::Image;
 use crate::error::Result;
-use crate::fixed::WeightMatrix;
+use crate::fixed::WeightStack;
 use crate::snn::{LifLayer, PoissonEncoder, StepTrace};
 use crate::util::priority_argmax;
 
@@ -29,13 +39,15 @@ pub enum EarlyExit {
 pub struct Classification {
     /// Predicted class.
     pub class: u8,
-    /// Output spike counts per class over the executed window.
+    /// Output spike counts per class over the executed window (final
+    /// layer).
     pub spike_counts: Vec<u32>,
-    /// Timestep at which each neuron first fired (`None` = never).
+    /// Timestep at which each output neuron first fired (`None` = never).
     pub first_spike: Vec<Option<u32>>,
     /// Timesteps actually executed (< window when early exit triggers).
     pub steps_run: u32,
-    /// Integrate-adds actually performed (sparsity accounting).
+    /// Integrate-adds actually performed across all layers (sparsity
+    /// accounting).
     pub adds_performed: u64,
 }
 
@@ -68,19 +80,115 @@ impl Classification {
     }
 }
 
+/// The chained per-layer state of one inference engine instance: the
+/// poolable unit the serving backend checks out per batch. Weights are
+/// shared behind `Arc` inside each [`LifLayer`], so clones are O(state).
+#[derive(Debug, Clone)]
+pub struct LifStack {
+    layers: Vec<LifLayer>,
+    /// Per-layer fired scratch (`fired[l][j]`), reused across steps.
+    fired: Vec<Vec<bool>>,
+    /// Reusable index buffer carrying one layer's spikes into the next.
+    relay: Vec<u32>,
+}
+
+impl LifStack {
+    /// Build the chain; the stack's topology must match the config's.
+    pub fn new(cfg: &SnnConfig, weights: &WeightStack) -> Result<Self> {
+        weights.check_topology(&cfg.topology)?;
+        let mut layers = Vec::with_capacity(cfg.n_layers());
+        for l in 0..cfg.n_layers() {
+            layers.push(LifLayer::new(cfg.layer_config(l), weights.layer(l))?);
+        }
+        let fired = (0..cfg.n_layers()).map(|l| vec![false; cfg.layer_output(l)]).collect();
+        Ok(LifStack { layers, fired, relay: Vec::new() })
+    }
+
+    /// Number of weight layers.
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Layer `l` (observability).
+    pub fn layer(&self, l: usize) -> &LifLayer {
+        &self.layers[l]
+    }
+
+    /// The final (output) layer.
+    pub fn output(&self) -> &LifLayer {
+        self.layers.last().expect("stack has at least one layer")
+    }
+
+    /// Final-layer spike counts so far.
+    pub fn spike_counts(&self) -> &[u32] {
+        self.output().spike_counts()
+    }
+
+    /// Integrate-adds performed so far, summed over every layer.
+    pub fn adds_performed(&self) -> u64 {
+        self.layers.iter().map(LifLayer::adds_performed).sum()
+    }
+
+    /// Reset all per-inference state (keeps weights).
+    pub fn reset(&mut self) {
+        for l in &mut self.layers {
+            l.reset();
+        }
+    }
+
+    /// Advance one timestep from an active-input index list, chaining each
+    /// layer's fired vector into the next layer's event list. Writes the
+    /// final layer's fire flags into `fired_out`.
+    pub fn step_events_into(&mut self, active: &[u32], fired_out: &mut [bool]) {
+        let n = self.layers.len();
+        for l in 0..n {
+            if l == 0 {
+                self.layers[0].step_events_into(active, &mut self.fired[0]);
+            } else {
+                self.relay.clear();
+                for (i, &f) in self.fired[l - 1].iter().enumerate() {
+                    if f {
+                        self.relay.push(i as u32);
+                    }
+                }
+                let relay = std::mem::take(&mut self.relay);
+                self.layers[l].step_events_into(&relay, &mut self.fired[l]);
+                self.relay = relay;
+            }
+        }
+        fired_out.copy_from_slice(&self.fired[n - 1]);
+    }
+
+    /// Advance one timestep with full observability; returns the *final*
+    /// layer's trace (hidden layers still advance — Fig. 4 plots output
+    /// neurons).
+    pub fn step_traced(&mut self, spikes_in: &[bool]) -> StepTrace {
+        let n = self.layers.len();
+        let mut trace = self.layers[0].step_traced(spikes_in);
+        for l in 1..n {
+            let fired_prev = std::mem::take(&mut trace.fired);
+            trace = self.layers[l].step_traced(&fired_prev);
+        }
+        trace
+    }
+}
+
 /// The behavioral inference backend: weights + config, reusable across
-/// images (stateless between calls; the per-call layer state is pooled).
+/// images (stateless between calls; the per-call stack state is pooled).
 #[derive(Debug, Clone)]
 pub struct BehavioralNet {
     cfg: SnnConfig,
-    layer: LifLayer,
+    stack: LifStack,
 }
 
 impl BehavioralNet {
-    pub fn new(cfg: SnnConfig, weights: WeightMatrix) -> Result<Self> {
+    /// Build from a config and any weight source convertible to a
+    /// [`WeightStack`] (a bare [`crate::fixed::WeightMatrix`] becomes the
+    /// single-layer chain).
+    pub fn new(cfg: SnnConfig, weights: impl Into<WeightStack>) -> Result<Self> {
         let cfg = cfg.validated()?;
-        let layer = LifLayer::new(cfg.clone(), &weights)?;
-        Ok(BehavioralNet { cfg, layer })
+        let stack = LifStack::new(&cfg, &weights.into())?;
+        Ok(BehavioralNet { cfg, stack })
     }
 
     pub fn config(&self) -> &SnnConfig {
@@ -100,75 +208,76 @@ impl BehavioralNet {
         timesteps: u32,
         early: EarlyExit,
     ) -> Classification {
-        let mut layer = self.layer.clone();
-        let (c, _) = run_inference(&self.cfg, &mut layer, img, seed, timesteps, early, false);
+        let mut stack = self.stack.clone();
+        let (c, _) = run_inference(&self.cfg, &mut stack, img, seed, timesteps, early, false);
         c
     }
 
-    /// Classify using a caller-owned layer instance (the pooled serving hot
-    /// path: the backend checks a [`LifLayer`] out of its worker pool and
+    /// Classify using a caller-owned stack instance (the pooled serving hot
+    /// path: the backend checks a [`LifStack`] out of its worker pool and
     /// reuses its state buffers across requests instead of cloning per
     /// call). Identical dynamics to [`BehavioralNet::classify_opts`] —
-    /// `run_inference` resets the layer first.
+    /// `run_inference` resets the stack first.
     pub fn classify_with(
         &self,
-        layer: &mut LifLayer,
+        stack: &mut LifStack,
         img: &Image,
         seed: u32,
         timesteps: u32,
         early: EarlyExit,
     ) -> Classification {
-        run_inference(&self.cfg, layer, img, seed, timesteps, early, false).0
+        run_inference(&self.cfg, stack, img, seed, timesteps, early, false).0
     }
 
-    /// A fresh layer instance wired to this net's weights (seed for
+    /// A fresh stack instance wired to this net's weights (seed for
     /// instance pools; cheap — weights are shared behind `Arc`).
-    pub fn layer_prototype(&self) -> LifLayer {
-        self.layer.clone()
+    pub fn stack_prototype(&self) -> LifStack {
+        self.stack.clone()
     }
 
-    /// Classify and capture the full per-step trace (Fig. 4 / goldens).
+    /// Classify and capture the full per-step output-layer trace
+    /// (Fig. 4 / goldens).
     pub fn classify_traced(
         &self,
         img: &Image,
         seed: u32,
         timesteps: u32,
     ) -> (Classification, Vec<StepTrace>) {
-        let mut layer = self.layer.clone();
-        run_inference(&self.cfg, &mut layer, img, seed, timesteps, EarlyExit::Off, true)
+        let mut stack = self.stack.clone();
+        run_inference(&self.cfg, &mut stack, img, seed, timesteps, EarlyExit::Off, true)
     }
 }
 
 /// Shared inference loop.
 fn run_inference(
     cfg: &SnnConfig,
-    layer: &mut LifLayer,
+    stack: &mut LifStack,
     img: &Image,
     seed: u32,
     timesteps: u32,
     early: EarlyExit,
     want_trace: bool,
 ) -> (Classification, Vec<StepTrace>) {
-    layer.reset();
+    stack.reset();
     let mut enc = PoissonEncoder::new(img, seed);
-    let mut spikes_in = vec![false; cfg.n_inputs];
-    let mut active = Vec::with_capacity(cfg.n_inputs);
-    let mut fired = vec![false; cfg.n_outputs];
-    let mut first_spike: Vec<Option<u32>> = vec![None; cfg.n_outputs];
+    let mut spikes_in = vec![false; cfg.n_inputs()];
+    let mut active = Vec::with_capacity(cfg.n_inputs());
+    let mut fired = vec![false; cfg.n_outputs()];
+    let mut first_spike: Vec<Option<u32>> = vec![None; cfg.n_outputs()];
     let mut traces = Vec::new();
     let mut steps_run = 0u32;
 
     for t in 0..timesteps {
         if want_trace {
             enc.step_into(&mut spikes_in);
-            let trace = layer.step_traced(&spikes_in);
+            let trace = stack.step_traced(&spikes_in);
             fired.copy_from_slice(&trace.fired);
             traces.push(trace);
         } else {
             // Fused event-list hot path (perf passes 3+4): the encoder
             // emits spiking indices directly into the integration step.
             enc.step_active_into(&mut active);
-            layer.step_events_into(&active, &mut fired);
+            stack.step_events_into(&active, &mut fired);
         }
         for (j, &f) in fired.iter().enumerate() {
             if f && first_spike[j].is_none() {
@@ -179,17 +288,20 @@ fn run_inference(
 
         if let EarlyExit::Margin { margin, min_steps } = early {
             if steps_run >= min_steps {
-                let counts = layer.spike_counts();
+                // A margin needs a runner-up: degenerate single-output
+                // topologies never early-exit (mirrored by the RTL fast
+                // path's check — parity is pinned by test).
+                let counts = stack.spike_counts();
                 let mut sorted: Vec<u32> = counts.to_vec();
                 sorted.sort_unstable_by(|a, b| b.cmp(a));
-                if sorted[0] >= sorted[1] + margin {
+                if sorted.len() > 1 && sorted[0] >= sorted[1] + margin {
                     break;
                 }
             }
         }
     }
 
-    let spike_counts = layer.spike_counts().to_vec();
+    let spike_counts = stack.spike_counts().to_vec();
     let class = Classification::decide(cfg.decision, &spike_counts, &first_spike);
     (
         Classification {
@@ -197,25 +309,30 @@ fn run_inference(
             spike_counts,
             first_spike,
             steps_run,
-            adds_performed: layer.adds_performed(),
+            adds_performed: stack.adds_performed(),
         },
         traces,
     )
 }
 
 /// Convenience free function: classify with a fresh net (tests, examples).
-pub fn classify(cfg: &SnnConfig, weights: &WeightMatrix, img: &Image, seed: u32) -> Result<Classification> {
-    Ok(BehavioralNet::new(cfg.clone(), weights.clone())?.classify(img, seed))
+pub fn classify(
+    cfg: &SnnConfig,
+    weights: impl Into<WeightStack>,
+    img: &Image,
+    seed: u32,
+) -> Result<Classification> {
+    Ok(BehavioralNet::new(cfg.clone(), weights)?.classify(img, seed))
 }
 
 /// Convenience free function with trace capture.
 pub fn classify_with_trace(
     cfg: &SnnConfig,
-    weights: &WeightMatrix,
+    weights: impl Into<WeightStack>,
     img: &Image,
     seed: u32,
 ) -> Result<(Classification, Vec<StepTrace>)> {
-    Ok(BehavioralNet::new(cfg.clone(), weights.clone())?.classify_traced(img, seed, cfg.timesteps))
+    Ok(BehavioralNet::new(cfg.clone(), weights)?.classify_traced(img, seed, cfg.timesteps))
 }
 
 #[cfg(test)]
@@ -223,6 +340,7 @@ mod tests {
     use super::*;
     use crate::config::{DecisionPolicy, PruneMode};
     use crate::data::{Image, IMG_PIXELS};
+    use crate::fixed::WeightMatrix;
 
     /// Weights that make neuron k respond to intensity in "its" block of
     /// pixels: a crisp, controllable classifier for testing readout.
@@ -247,6 +365,29 @@ mod tests {
         Image { label: class as u8, pixels: px }
     }
 
+    /// A 784→20→10 stack that routes block k through hidden pair
+    /// (2k, 2k+1) into output k: a deep classifier with the same crisp
+    /// readout as `block_weights`.
+    fn deep_block_stack() -> WeightStack {
+        let mut w1 = vec![0i32; 784 * 20];
+        for i in 0..784 {
+            let block = i / 79;
+            if block < 10 {
+                w1[i * 20 + 2 * block] = 40;
+                w1[i * 20 + 2 * block + 1] = 40;
+            }
+        }
+        let mut w2 = vec![0i32; 20 * 10];
+        for h in 0..20 {
+            w2[h * 10 + h / 2] = 200;
+        }
+        WeightStack::from_layers(vec![
+            WeightMatrix::from_rows(784, 20, 9, w1).unwrap(),
+            WeightMatrix::from_rows(20, 10, 9, w2).unwrap(),
+        ])
+        .unwrap()
+    }
+
     #[test]
     fn block_classifier_is_correct() {
         let cfg = SnnConfig::paper().with_timesteps(10);
@@ -255,6 +396,51 @@ mod tests {
             let out = net.classify(&block_image(class), 42 + class as u32);
             assert_eq!(out.class as usize, class, "counts {:?}", out.spike_counts);
         }
+    }
+
+    #[test]
+    fn deep_block_classifier_is_correct() {
+        // Two spiking layers end to end: the hidden pair fires on the
+        // block's drive, and 200-weight fan-in pushes the output neuron
+        // over threshold in the same window.
+        let cfg = SnnConfig::paper()
+            .with_topology(vec![784, 20, 10])
+            .with_timesteps(10)
+            .with_prune(PruneMode::Off);
+        let net = BehavioralNet::new(cfg, deep_block_stack()).unwrap();
+        for class in 0..10usize {
+            let out = net.classify(&block_image(class), 42 + class as u32);
+            assert_eq!(out.class as usize, class, "counts {:?}", out.spike_counts);
+            assert_eq!(out.spike_counts.len(), 10);
+        }
+    }
+
+    #[test]
+    fn stack_rejects_topology_mismatch() {
+        let cfg = SnnConfig::paper().with_topology(vec![784, 16, 10]);
+        assert!(BehavioralNet::new(cfg, deep_block_stack()).is_err());
+        let cfg = SnnConfig::paper(); // [784, 10] vs 2-layer stack
+        assert!(BehavioralNet::new(cfg, deep_block_stack()).is_err());
+    }
+
+    #[test]
+    fn deep_adds_sum_across_layers() {
+        let cfg = SnnConfig::paper()
+            .with_topology(vec![784, 20, 10])
+            .with_timesteps(6)
+            .with_prune(PruneMode::Off);
+        let net = BehavioralNet::new(cfg, deep_block_stack()).unwrap();
+        let out = net.classify(&block_image(2), 5);
+        let mut stack = net.stack_prototype();
+        let redo = net.classify_with(&mut stack, &block_image(2), 5, 6, EarlyExit::Off);
+        assert_eq!(out, redo);
+        // Layer-wise accounting must decompose the total.
+        let per_layer: u64 = (0..stack.n_layers()).map(|l| stack.layer(l).adds_performed()).sum();
+        assert_eq!(per_layer, out.adds_performed);
+        assert!(
+            stack.layer(0).adds_performed() > 0 && stack.layer(1).adds_performed() > 0,
+            "both layers must integrate"
+        );
     }
 
     #[test]
@@ -310,13 +496,37 @@ mod tests {
     }
 
     #[test]
-    fn pooled_layer_reuse_matches_fresh_clone() {
-        // A single reused layer instance must produce identical results to
+    fn deep_traced_matches_event_path() {
+        // The traced path (boolean relay) and the event-list path (index
+        // relay) must produce identical final-layer outcomes at depth 2.
+        let cfg = SnnConfig::paper()
+            .with_topology(vec![784, 20, 10])
+            .with_timesteps(8)
+            .with_prune(PruneMode::Off);
+        let net = BehavioralNet::new(cfg.clone(), deep_block_stack()).unwrap();
+        for class in [0usize, 3, 9] {
+            let img = block_image(class);
+            let fast = net.classify_opts(&img, 11, 8, EarlyExit::Off);
+            let (traced, traces) = net.classify_traced(&img, 11, 8);
+            assert_eq!(fast, traced, "paths diverge for class {class}");
+            assert_eq!(traces.len(), 8);
+            // Per-step fired flags must agree with the first-spike record.
+            for (j, fs) in traced.first_spike.iter().enumerate() {
+                if let Some(t) = fs {
+                    assert!(traces[*t as usize].fired[j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_stack_reuse_matches_fresh_clone() {
+        // A single reused stack instance must produce identical results to
         // per-call clones, including straight after early-exit runs that
         // leave partial state behind.
         let cfg = SnnConfig::paper().with_timesteps(12).with_prune(PruneMode::Off);
         let net = BehavioralNet::new(cfg, block_weights()).unwrap();
-        let mut pooled = net.layer_prototype();
+        let mut pooled = net.stack_prototype();
         for i in 0..12u32 {
             let img = block_image((i % 10) as usize);
             let early = if i % 2 == 0 {
