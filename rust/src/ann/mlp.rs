@@ -3,6 +3,7 @@
 
 use std::path::Path;
 
+use crate::config::LayerParams;
 use crate::data::Image;
 use crate::error::{Error, Result};
 use crate::fixed::{quantize, WeightMatrix, WeightStack};
@@ -150,19 +151,59 @@ impl Mlp {
     /// the SNN core has no bias path; threshold calibration absorbs them
     /// (same substitution the paper's training pipeline makes).
     pub fn to_weight_stack(&self, bits: u32) -> Result<WeightStack> {
-        let quantize_layer = |w: &[f32], n_in: usize, n_out: usize| -> Result<WeightMatrix> {
-            let max_abs = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-            let scale = if max_abs > 0.0 {
-                ((1i32 << (bits - 1)) - 1) as f32 / max_abs
-            } else {
-                1.0
+        Ok(self.to_weight_stack_scaled(bits)?.0)
+    }
+
+    /// Like [`Mlp::to_weight_stack`], additionally returning each layer's
+    /// float→integer scale (`full_range / max|w|`; 1.0 for an all-zero
+    /// layer) — the input to per-layer threshold calibration.
+    pub fn to_weight_stack_scaled(&self, bits: u32) -> Result<(WeightStack, Vec<f32>)> {
+        let quantize_layer =
+            |w: &[f32], n_in: usize, n_out: usize| -> Result<(WeightMatrix, f32)> {
+                let max_abs = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let scale = if max_abs > 0.0 {
+                    ((1i32 << (bits - 1)) - 1) as f32 / max_abs
+                } else {
+                    1.0
+                };
+                let m = WeightMatrix::from_rows(
+                    n_in,
+                    n_out,
+                    bits,
+                    w.iter().map(|&v| quantize(v, scale, bits)).collect(),
+                )?;
+                Ok((m, scale))
             };
-            WeightMatrix::from_rows(n_in, n_out, bits, w.iter().map(|&v| quantize(v, scale, bits)).collect())
-        };
-        WeightStack::from_layers(vec![
-            quantize_layer(&self.w1, self.n_in, self.n_hidden)?,
-            quantize_layer(&self.w2, self.n_hidden, self.n_out)?,
-        ])
+        let (m1, s1) = quantize_layer(&self.w1, self.n_in, self.n_hidden)?;
+        let (m2, s2) = quantize_layer(&self.w2, self.n_hidden, self.n_out)?;
+        Ok((WeightStack::from_layers(vec![m1, m2])?, vec![s1, s2]))
+    }
+
+    /// Quantize *and calibrate*: because each layer independently maps its
+    /// largest |w| to full range, a single integer threshold means a
+    /// *different* effective float threshold per layer — the deep-accuracy
+    /// limiter the ROADMAP calls out. This exporter fixes the float-domain
+    /// threshold instead: `base_v_th` is taken as layer 0's calibration
+    /// (i.e. the float threshold `θ = base_v_th / scale_0`) and every
+    /// layer `l` gets `v_th_l = round(θ · scale_l)`, so all layers fire at
+    /// the same point of their float-domain activation. Returns the stack
+    /// plus one threshold-only [`LayerParams`] override per layer (layer 0
+    /// keeps `base_v_th` exactly).
+    pub fn calibrated_layer_params(
+        &self,
+        bits: u32,
+        base_v_th: i32,
+    ) -> Result<(WeightStack, Vec<LayerParams>)> {
+        let (stack, scales) = self.to_weight_stack_scaled(bits)?;
+        let s0 = scales[0].max(f32::EPSILON);
+        let params = scales
+            .iter()
+            .map(|&s| {
+                let v = (base_v_th as f32 * s / s0).round().max(1.0) as i32;
+                LayerParams::with_v_th(v)
+            })
+            .collect();
+        Ok((stack, params))
     }
 }
 
@@ -234,6 +275,34 @@ mod tests {
         // Sign and relative order survive.
         assert!(stack.layer(1).get(0, 1) < 0);
         assert!(stack.layer(1).get(1, 2).abs() < stack.layer(1).get(0, 0));
+    }
+
+    #[test]
+    fn calibrated_exporter_scales_thresholds_per_layer() {
+        let mut m = Mlp::zeros(IMG_PIXELS, 4, 3);
+        // Layer 1 max |w| = 2.0 → scale 255/2 = 127.5; layer 2 max |w| =
+        // 0.25 → scale 255/0.25 = 1020 (4x layer 1's scale).
+        m.w1[0] = 2.0;
+        m.w2[0] = 0.25;
+        let (stack, params) = m.calibrated_layer_params(9, 128).unwrap();
+        assert_eq!(stack.topology(), vec![IMG_PIXELS, 4, 3]);
+        assert_eq!(params.len(), 2);
+        assert_eq!(params[0].v_th, Some(128), "layer 0 keeps the base calibration");
+        assert_eq!(
+            params[1].v_th,
+            Some(1024),
+            "layer 1's threshold must scale with its quantization scale (8x here: \
+             scale ratio 1020/127.5)"
+        );
+        assert!(params.iter().all(|p| p.decay_shift.is_none() && p.prune.is_none()));
+        // The calibrated params slot straight into a config.
+        let cfg = crate::SnnConfig::paper()
+            .with_topology(stack.topology())
+            .with_v_th(128)
+            .with_layer_params(params)
+            .validated()
+            .unwrap();
+        assert_eq!(cfg.layer_v_th(1), 1024);
     }
 
     #[test]

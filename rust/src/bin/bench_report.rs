@@ -14,24 +14,37 @@
 //!   — the latency (not just throughput) acceptance number of the
 //!   sharded-ingress PR,
 //!
-//! and writes the results to `BENCH_3.json` (plus stdout). BENCH_1
-//! recorded qps only; BENCH_2 added the percentile columns; BENCH_3
-//! supersedes both with the depth rows of the N-layer refactor
-//! (EXPERIMENTS.md §Depth).
+//! * accuracy of the 3-layer calibration demo stack under one shared
+//!   `v_th` vs per-layer calibrated thresholds (+ per-layer pruning) — the
+//!   per-layer parameterization acceptance row — plus 3-layer fast-path
+//!   images/sec,
+//!
+//! and writes the results to `BENCH_4.json` (plus stdout; the emitted
+//! name is the single `BENCH_NAME` constant). BENCH_1 recorded qps only;
+//! BENCH_2 added the percentile columns; BENCH_3 added the depth rows of
+//! the N-layer refactor; BENCH_4 supersedes them with the per-layer
+//! threshold/pruning rows (EXPERIMENTS.md §Depth).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use snn_rtl::bench::{black_box, Bench};
+use snn_rtl::config::PruneMode;
 use snn_rtl::coordinator::{
     BatchPolicy, Coordinator, CoordinatorConfig, FanoutPolicy, Request, RtlBackend,
 };
 use snn_rtl::data::{DigitGen, Image};
+use snn_rtl::experiments::{
+    calibration_demo_image, calibration_demo_prune, calibration_demo_stack,
+};
 use snn_rtl::fixed::{WeightMatrix, WeightStack};
 use snn_rtl::prng::Xorshift32;
 use snn_rtl::rtl::RtlCore;
 use snn_rtl::snn::EarlyExit;
 use snn_rtl::SnnConfig;
+
+/// The emitted report name — bump this (one place) when a PR adds rows.
+const BENCH_NAME: &str = "BENCH_4";
 
 fn weights(seed: u32) -> WeightMatrix {
     let mut rng = Xorshift32::new(seed);
@@ -142,6 +155,56 @@ fn main() {
     let depth_cost = fast.mean_ns / deep_fast.mean_ns;
     println!("{}  |  {deep_ips:.1} images/s  ({depth_cost:.2}x of single-layer)", deep_fast.report());
 
+    // 3-layer rows: fast-path throughput of the [784, 20, 10, 10] demo
+    // stack, and the per-layer-threshold acceptance numbers — the same
+    // closed-form stack under one shared v_th (which provably silences
+    // the readout) vs calibrated per-layer thresholds (+ pruning).
+    let (demo_stack, demo_v_th) = calibration_demo_stack();
+    let demo_topology = demo_stack.topology();
+    let three_base = SnnConfig::paper()
+        .with_topology(demo_topology.clone())
+        .with_timesteps(10)
+        .with_v_th(128)
+        .with_prune(PruneMode::Off);
+    let mut three_core = RtlCore::new(
+        three_base.clone().with_layer_params(demo_v_th.clone()),
+        demo_stack.clone(),
+    )
+    .unwrap();
+    let mut seed = 1u32;
+    let three_fast = bench.run("rtl_fast_path_784_20_10_10_t10", || {
+        seed = seed.wrapping_add(1);
+        black_box(three_core.run_fast(&img, seed).unwrap());
+    });
+    let three_ips = three_fast.throughput(1.0);
+    println!("{}  |  {three_ips:.1} images/s (3-layer)", three_fast.report());
+
+    let demo_accuracy = |cfg: &SnnConfig| -> f64 {
+        let mut core = RtlCore::new(cfg.clone(), demo_stack.clone()).unwrap();
+        let mut hits = 0usize;
+        for class in 0..10usize {
+            let r = core.run_fast(&calibration_demo_image(class), 0x900 + class as u32).unwrap();
+            hits += usize::from(r.class as usize == class);
+        }
+        hits as f64 / 10.0
+    };
+    let acc_shared = demo_accuracy(&three_base);
+    let acc_calibrated =
+        demo_accuracy(&three_base.clone().with_layer_params(demo_v_th));
+    let acc_cal_prune =
+        demo_accuracy(&three_base.clone().with_layer_params(calibration_demo_prune()));
+    println!(
+        "depth_ablation_3layer: shared v_th {:.0}%  |  per-layer v_th {:.0}%  |  \
+         per-layer v_th + prune {:.0}%",
+        acc_shared * 100.0,
+        acc_calibrated * 100.0,
+        acc_cal_prune * 100.0
+    );
+    assert!(
+        acc_calibrated > acc_shared,
+        "acceptance: the calibrated 3-layer stack must beat the shared-v_th baseline"
+    );
+
     // Worker scaling over the sharded ingress (small batches: throughput
     // and tail latency of the steady-state serving path).
     let images: Vec<Image> = (0..32).map(|i| gen.sample((i % 10) as u8, i / 10)).collect();
@@ -224,7 +287,7 @@ fn main() {
 
     // Hand-rolled JSON (no serde in the offline crate set).
     let mut json = String::from("{\n");
-    json.push_str("  \"bench\": \"BENCH_3\",\n");
+    json.push_str(&format!("  \"bench\": \"{BENCH_NAME}\",\n"));
     json.push_str("  \"config\": \"paper_t10\",\n");
     json.push_str(&format!("  \"rtl_cycle_images_per_s\": {cycle_ips:.2},\n"));
     json.push_str(&format!("  \"rtl_fast_images_per_s\": {fast_ips:.2},\n"));
@@ -238,7 +301,17 @@ fn main() {
         "    \"two_layer_784_128_10\": {{ \"images_per_s\": {deep_ips:.2}, \"coordinator_w4_qps\": {:.2}, \"coordinator_w4_p99_us\": {} }},\n",
         coord_deep.qps, coord_deep.p99_us
     ));
-    json.push_str(&format!("    \"two_layer_throughput_ratio\": {depth_cost:.3}\n"));
+    json.push_str(&format!("    \"two_layer_throughput_ratio\": {depth_cost:.3},\n"));
+    json.push_str(&format!(
+        "    \"three_layer_784_20_10_10\": {{ \"images_per_s\": {three_ips:.2} }},\n"
+    ));
+    json.push_str("    \"three_layer_calibration\": {\n");
+    json.push_str(&format!("      \"shared_v_th_accuracy\": {acc_shared:.3},\n"));
+    json.push_str(&format!("      \"per_layer_v_th_accuracy\": {acc_calibrated:.3},\n"));
+    json.push_str(&format!(
+        "      \"per_layer_v_th_prune_accuracy\": {acc_cal_prune:.3}\n"
+    ));
+    json.push_str("    }\n");
     json.push_str("  },\n");
     json.push_str("  \"coordinator_rtl\": {\n");
     for (i, (workers, row)) in scaling.iter().enumerate() {
@@ -260,6 +333,7 @@ fn main() {
         fan_on.qps, fan_on.p50_us, fan_on.p99_us
     ));
     json.push_str("  }\n}\n");
-    std::fs::write("BENCH_3.json", &json).expect("write BENCH_3.json");
-    println!("-> BENCH_3.json");
+    let out = format!("{BENCH_NAME}.json");
+    std::fs::write(&out, &json).unwrap_or_else(|e| panic!("write {out}: {e}"));
+    println!("-> {out}");
 }

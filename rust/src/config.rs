@@ -9,10 +9,16 @@
 //! Since the N-layer refactor the topology is a dimension chain
 //! (`[784, 10]` for the paper's single fully connected layer,
 //! `[784, 128, 10]` for the MLP-shaped deep variant): entry `l` is the
-//! input width of layer `l`, entry `l+1` its output width. Every LIF
-//! parameter (threshold, decay, accumulator geometry, policies) is shared
-//! across layers, exactly as one hardware neuron-core design is
-//! instantiated per layer.
+//! input width of layer `l`, entry `l+1` its output width.
+//!
+//! Since the per-layer parameterization pass the LIF threshold, decay and
+//! pruning policy can additionally differ *per connection*:
+//! [`SnnConfig::layer_params`] holds one optional [`LayerParams`] override
+//! per layer, and the scalar fields remain the shared defaults — an empty
+//! override list reproduces the shared-parameter core bit for bit. The
+//! accumulator/weight geometry and the fire/leak scheduling policies stay
+//! global (one datapath design instantiated per layer; only its
+//! calibration registers differ).
 
 use crate::error::{Error, Result};
 
@@ -65,6 +71,29 @@ pub enum DecisionPolicy {
     FirstSpike,
 }
 
+/// Per-layer overrides of the scalar LIF calibration. `None` fields
+/// inherit the matching scalar on [`SnnConfig`], so an all-`None` entry
+/// (or an empty override list) is bit-identical to the shared-parameter
+/// core. Hardware view: each layer's neuron array has its own threshold
+/// and decay registers plus its own pruning counter limit; the datapath
+/// geometry is shared.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LayerParams {
+    /// Firing threshold for this layer (`None` = shared `v_th`).
+    pub v_th: Option<i32>,
+    /// Decay exponent for this layer (`None` = shared `decay_shift`).
+    pub decay_shift: Option<u32>,
+    /// Pruning policy for this layer (`None` = shared `prune`).
+    pub prune: Option<PruneMode>,
+}
+
+impl LayerParams {
+    /// Override only the threshold (the most common calibration axis).
+    pub fn with_v_th(v: i32) -> Self {
+        LayerParams { v_th: Some(v), ..Self::default() }
+    }
+}
+
 /// Complete architectural configuration of the SNN core.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SnnConfig {
@@ -94,6 +123,10 @@ pub struct SnnConfig {
     pub prune: PruneMode,
     /// Classification readout policy.
     pub decision: DecisionPolicy,
+    /// Per-layer overrides of `v_th`/`decay_shift`/`prune`. Either empty
+    /// (every layer shares the scalars above) or exactly one entry per
+    /// weight layer. Resolved via [`SnnConfig::layer_v_th`] and friends.
+    pub layer_params: Vec<LayerParams>,
 }
 
 impl Default for SnnConfig {
@@ -114,6 +147,7 @@ impl Default for SnnConfig {
             leak_mode: LeakMode::PerTimestep,
             prune: PruneMode::AfterFires { after_spikes: 1 },
             decision: DecisionPolicy::SpikeCount,
+            layer_params: Vec::new(),
         }
     }
 }
@@ -149,11 +183,55 @@ impl SnnConfig {
         self.topology[l + 1]
     }
 
-    /// The single-connection view of layer `l`: same LIF parameters,
-    /// topology narrowed to `[topology[l], topology[l+1]]`. This is the
-    /// config one behavioral [`crate::snn::LifLayer`] runs.
+    /// The override record for layer `l` (all-`None` when the list is
+    /// empty or the layer has no entry).
+    fn layer_over(&self, l: usize) -> LayerParams {
+        self.layer_params.get(l).copied().unwrap_or_default()
+    }
+
+    /// Resolved firing threshold of layer `l` (override or shared `v_th`).
+    pub fn layer_v_th(&self, l: usize) -> i32 {
+        self.layer_over(l).v_th.unwrap_or(self.v_th)
+    }
+
+    /// Resolved decay exponent of layer `l`.
+    pub fn layer_decay_shift(&self, l: usize) -> u32 {
+        self.layer_over(l).decay_shift.unwrap_or(self.decay_shift)
+    }
+
+    /// Resolved pruning policy of layer `l`.
+    pub fn layer_prune(&self, l: usize) -> PruneMode {
+        self.layer_over(l).prune.unwrap_or(self.prune)
+    }
+
+    /// The single-connection view of layer `l`: topology narrowed to
+    /// `[topology[l], topology[l+1]]` with the layer's *resolved*
+    /// threshold/decay/prune written into the scalar fields (and no
+    /// further overrides). This is the config one behavioral
+    /// [`crate::snn::LifLayer`] — or one RTL neuron array — runs, so the
+    /// per-layer parameterization threads through every model level from
+    /// this one resolution point.
     pub fn layer_config(&self, l: usize) -> SnnConfig {
-        SnnConfig { topology: vec![self.topology[l], self.topology[l + 1]], ..self.clone() }
+        SnnConfig {
+            topology: vec![self.topology[l], self.topology[l + 1]],
+            v_th: self.layer_v_th(l),
+            decay_shift: self.layer_decay_shift(l),
+            prune: self.layer_prune(l),
+            layer_params: Vec::new(),
+            ..self.clone()
+        }
+    }
+
+    /// The largest early-exit margin the *output* layer's pruning policy
+    /// can ever produce: with `AfterFires { after_spikes: a }` every spike
+    /// count register caps at `a`, so the best reachable lead is `a` (the
+    /// leader at `a`, the runner-up at 0) and any larger margin silently
+    /// never triggers. `None` = unbounded (readout pruning off).
+    pub fn max_reachable_margin(&self) -> Option<u32> {
+        match self.layer_prune(self.n_layers().saturating_sub(1)) {
+            PruneMode::Off => None,
+            PruneMode::AfterFires { after_spikes } => Some(after_spikes),
+        }
     }
 
     /// Saturation bound of the accumulator: `2^(acc_bits-1) - 1`.
@@ -253,6 +331,40 @@ impl SnnConfig {
                 ));
             }
         }
+        if !self.layer_params.is_empty() && self.layer_params.len() != self.n_layers() {
+            return Err(Error::InvalidConfig(format!(
+                "layer_params carries {} entries for a {}-layer topology \
+                 (must be empty or one per weight layer)",
+                self.layer_params.len(),
+                self.n_layers()
+            )));
+        }
+        for l in 0..self.n_layers() {
+            let v = self.layer_v_th(l);
+            if v <= self.v_rest {
+                return Err(Error::InvalidConfig(format!(
+                    "layer {l} v_th ({v}) must exceed v_rest ({})",
+                    self.v_rest
+                )));
+            }
+            if v > self.acc_max() {
+                return Err(Error::InvalidConfig(format!(
+                    "layer {l} v_th ({v}) exceeds accumulator saturation ({})",
+                    self.acc_max()
+                )));
+            }
+            let d = self.layer_decay_shift(l);
+            if d == 0 || d > 30 {
+                return Err(Error::InvalidConfig(format!(
+                    "layer {l} decay_shift {d} outside supported range 1..=30"
+                )));
+            }
+            if let PruneMode::AfterFires { after_spikes: 0 } = self.layer_prune(l) {
+                return Err(Error::InvalidConfig(format!(
+                    "layer {l} prune after_spikes must be >= 1"
+                )));
+            }
+        }
         Ok(self)
     }
 
@@ -287,6 +399,10 @@ impl SnnConfig {
     }
     pub fn with_decision(mut self, d: DecisionPolicy) -> Self {
         self.decision = d;
+        self
+    }
+    pub fn with_layer_params(mut self, p: Vec<LayerParams>) -> Self {
+        self.layer_params = p;
         self
     }
 }
@@ -359,6 +475,103 @@ mod tests {
         .validated()
         .is_err());
         assert!(SnnConfig { acc_bits: 32, ..SnnConfig::paper() }.validated().is_err());
+    }
+
+    #[test]
+    fn layer_params_resolve_with_scalar_fallback() {
+        let c = SnnConfig::paper()
+            .with_topology(vec![784, 16, 10])
+            .with_layer_params(vec![
+                LayerParams { v_th: Some(300), decay_shift: None, prune: Some(PruneMode::Off) },
+                LayerParams { v_th: None, decay_shift: Some(5), prune: None },
+            ])
+            .validated()
+            .unwrap();
+        assert_eq!(c.layer_v_th(0), 300);
+        assert_eq!(c.layer_v_th(1), c.v_th, "missing field inherits the scalar");
+        assert_eq!(c.layer_decay_shift(0), c.decay_shift);
+        assert_eq!(c.layer_decay_shift(1), 5);
+        assert_eq!(c.layer_prune(0), PruneMode::Off);
+        assert_eq!(c.layer_prune(1), c.prune);
+        // layer_config writes the resolved values into the scalar slots.
+        let l0 = c.layer_config(0);
+        assert_eq!(l0.v_th, 300);
+        assert_eq!(l0.prune, PruneMode::Off);
+        assert!(l0.layer_params.is_empty());
+        let l1 = c.layer_config(1);
+        assert_eq!(l1.v_th, c.v_th);
+        assert_eq!(l1.decay_shift, 5);
+    }
+
+    #[test]
+    fn empty_layer_params_is_bit_identical_default() {
+        // The shared-parameter core resolves to the scalars everywhere.
+        let c = SnnConfig::paper();
+        assert!(c.layer_params.is_empty());
+        assert_eq!(c.layer_v_th(0), 128);
+        assert_eq!(c.layer_decay_shift(0), 3);
+        assert_eq!(c.layer_prune(0), PruneMode::AfterFires { after_spikes: 1 });
+        assert_eq!(c.layer_config(0), SnnConfig::paper());
+    }
+
+    #[test]
+    fn layer_params_are_validated() {
+        // Wrong arity.
+        assert!(SnnConfig::paper()
+            .with_layer_params(vec![LayerParams::default(), LayerParams::default()])
+            .validated()
+            .is_err());
+        // Per-layer v_th below rest / above saturation.
+        assert!(SnnConfig::paper()
+            .with_layer_params(vec![LayerParams::with_v_th(0)])
+            .validated()
+            .is_err());
+        assert!(SnnConfig::paper()
+            .with_layer_params(vec![LayerParams::with_v_th(1 << 24)])
+            .validated()
+            .is_err());
+        // Per-layer decay/prune out of range.
+        assert!(SnnConfig::paper()
+            .with_layer_params(vec![LayerParams {
+                decay_shift: Some(0),
+                ..Default::default()
+            }])
+            .validated()
+            .is_err());
+        assert!(SnnConfig::paper()
+            .with_layer_params(vec![LayerParams {
+                prune: Some(PruneMode::AfterFires { after_spikes: 0 }),
+                ..Default::default()
+            }])
+            .validated()
+            .is_err());
+        // A full, in-range override list passes.
+        assert!(SnnConfig::paper()
+            .with_layer_params(vec![LayerParams::with_v_th(200)])
+            .validated()
+            .is_ok());
+    }
+
+    #[test]
+    fn margin_cap_follows_output_layer_prune() {
+        let c = SnnConfig::paper();
+        assert_eq!(c.max_reachable_margin(), Some(1), "paper prunes after one fire");
+        assert_eq!(c.clone().with_prune(PruneMode::Off).max_reachable_margin(), None);
+        let prune_at = |n: u32| LayerParams {
+            prune: Some(PruneMode::AfterFires { after_spikes: n }),
+            ..Default::default()
+        };
+        let prune_off = LayerParams { prune: Some(PruneMode::Off), ..Default::default() };
+        // Per-layer: aggressive hidden pruning, readout intact → unbounded.
+        let c = SnnConfig::paper()
+            .with_topology(vec![784, 16, 10])
+            .with_layer_params(vec![prune_at(1), prune_off]);
+        assert_eq!(c.max_reachable_margin(), None);
+        // And the converse: readout pruned at 3 caps the margin at 3.
+        let c = SnnConfig::paper()
+            .with_topology(vec![784, 16, 10])
+            .with_layer_params(vec![prune_off, prune_at(3)]);
+        assert_eq!(c.max_reachable_margin(), Some(3));
     }
 
     #[test]

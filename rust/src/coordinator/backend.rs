@@ -30,7 +30,7 @@ use crate::fixed::{WeightMatrix, WeightStack};
 use crate::rtl::{ActivityCounters, RtlCore};
 use crate::runtime::XlaSnn;
 use crate::snn::{BehavioralNet, EarlyExit, LifStack};
-use crate::util::priority_argmax;
+use crate::util::{margin_reached, priority_argmax};
 
 use super::pool::{default_pool_slots, InstancePool};
 
@@ -276,15 +276,12 @@ impl XlaBackend {
     }
 }
 
-/// True when every row's leader beats its runner-up by `margin`. Rows
-/// without a runner-up (degenerate single-output topologies) are never
-/// confident — same rule as the behavioral/RTL margin checks.
+/// True when every row's leader beats its runner-up by `margin` — the
+/// batched form of the one shared margin predicate
+/// ([`crate::util::margin_reached`]), so all three backends apply the
+/// identical rule (including "no runner-up is never confident").
 fn all_confident(counts: &[Vec<u32>], margin: u32) -> bool {
-    counts.iter().all(|row| {
-        let mut sorted = row.clone();
-        sorted.sort_unstable_by(|a, b| b.cmp(a));
-        sorted.len() > 1 && sorted[0] >= sorted[1] + margin
-    })
+    counts.iter().all(|row| margin_reached(row, margin))
 }
 
 impl Backend for XlaBackend {
@@ -305,7 +302,10 @@ impl Backend for XlaBackend {
         early: EarlyExit,
     ) -> Result<Vec<BackendOutput>> {
         let snn = self.snn.lock().unwrap();
-        match early {
+        // Behavioral/RTL engines clamp internally; the chunked XLA loop
+        // applies the same clamp here so an unreachable margin cannot
+        // silently run every chunk to the full window.
+        match early.clamped_for(&self.cfg) {
             EarlyExit::Margin { margin, min_steps } => {
                 self.classify_chunked(&snn, images, seeds, margin, min_steps)
             }

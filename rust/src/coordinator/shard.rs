@@ -10,9 +10,13 @@
 //!   on the shallowest shard (round-robin tie-break), so ingress pressure
 //!   spreads without a global lock;
 //! * **work stealing** — a worker drains its own deque first and, when
-//!   empty, steals the *oldest* entries from the deepest sibling, so a
-//!   worker pinned on a slow batch cannot strand the requests queued
-//!   behind it;
+//!   empty, sweeps the siblings from a *rotating* starting victim and
+//!   steals at most *half* of the victim's backlog (oldest entries first),
+//!   so a worker pinned on a slow batch cannot strand the requests queued
+//!   behind it, while the victim is never emptied by one bulk steal and
+//!   repeated steals spread across siblings instead of hammering one
+//!   (the PR-2 follow-on: full-batch steals from a fixed victim order
+//!   starved the deepest shard's own worker under skewed arrivals);
 //! * **exact close semantics** — `close()` latches a per-shard flag under
 //!   each shard's lock, and [`ShardedQueue::pop_some`] only reports
 //!   [`Popped::Drained`] after observing every shard empty *and* closed
@@ -71,6 +75,10 @@ pub struct ShardedQueue<T> {
     capacity_per_shard: usize,
     /// Round-robin cursor breaking shortest-queue ties.
     cursor: AtomicUsize,
+    /// Rotating start for the steal sweep: successive steals begin at
+    /// different siblings, so one deep victim is not re-hit by every
+    /// hungry worker while its peers still hold work.
+    steal_cursor: AtomicUsize,
     /// Fast "no push can ever succeed again" flag (the per-shard flags
     /// under their locks are the authoritative close protocol).
     closed: AtomicBool,
@@ -102,6 +110,7 @@ impl<T> ShardedQueue<T> {
                 .collect(),
             capacity_per_shard,
             cursor: AtomicUsize::new(0),
+            steal_cursor: AtomicUsize::new(0),
             closed: AtomicBool::new(false),
             sleepers: AtomicUsize::new(0),
             sleep_lock: Mutex::new(()),
@@ -176,79 +185,77 @@ impl<T> ShardedQueue<T> {
     }
 
     /// The one lock-drain-store-depth primitive every pop path shares:
-    /// lock shard `i`, drain up to `max` items FIFO (refreshing the depth
-    /// mirror under the same lock), and report the closed flag as
-    /// observed under that lock — the evidence a `Drained` verdict needs.
-    fn drain_locked(&self, i: usize, max: usize) -> (Option<Vec<T>>, bool) {
+    /// lock shard `i`, drain items FIFO (refreshing the depth mirror under
+    /// the same lock), and report the closed flag as observed under that
+    /// lock — the evidence a `Drained` verdict needs. An owner drain
+    /// (`steal_half: false`) takes up to `max` items; a steal
+    /// (`steal_half: true`) additionally caps the take at *half* the
+    /// victim's backlog (rounded up, so a 1-deep victim is still
+    /// stealable), leaving the newer half for the victim's own worker.
+    fn drain_locked(&self, i: usize, max: usize, steal_half: bool) -> (Option<Vec<T>>, bool) {
         let shard = &self.shards[i];
         let mut st = lock(&shard.state);
         let closed = st.closed;
         if st.queue.is_empty() {
             return (None, closed);
         }
-        let k = st.queue.len().min(max);
+        let cap = if steal_half { st.queue.len().div_ceil(2) } else { st.queue.len() };
+        let k = cap.min(max);
         let items: Vec<T> = st.queue.drain(..k).collect();
         shard.depth.store(st.queue.len(), Ordering::SeqCst);
         (Some(items), closed)
     }
 
     /// Pop up to `max` items for worker `home`: its own deque first
-    /// (FIFO), then a steal sweep over the siblings — deepest victim
-    /// first, oldest entries first, so stolen requests keep their latency
-    /// ordering. See [`Popped`] for the empty/drained distinction.
+    /// (FIFO), then a steal sweep over the siblings — starting victim
+    /// rotated per sweep, oldest entries first, at most half of one
+    /// victim's backlog — so stolen requests keep their latency ordering
+    /// without starving the victim. See [`Popped`] for the empty/drained
+    /// distinction.
     pub fn pop_some(&self, home: usize, max: usize) -> Popped<T> {
         let n = self.shards.len();
         debug_assert!(max > 0, "pop_some needs room for at least one item");
         let home = home % n;
-        if let (Some(items), _) = self.drain_locked(home, max) {
+        if let (Some(items), _) = self.drain_locked(home, max, false) {
             return Popped::Items { items, stolen: 0 };
         }
 
-        // Steal sweep: deepest sibling first (racy hint), then ring order.
-        // Along the way, fold each sibling's (empty && closed) status
-        // observed under its lock — the evidence for a `Drained` verdict.
-        // No allocation: the victim order is a probe plus a ring walk.
-        let mut deepest = home; // sentinel: no non-empty hint found
-        let mut depth_hint = 0;
-        for k in 1..n {
-            let i = (home + k) % n;
-            let d = self.shards[i].depth.load(Ordering::SeqCst);
-            if d > depth_hint {
-                depth_hint = d;
-                deepest = i;
-            }
-        }
+        // Steal sweep: walk every sibling once in ring order from a
+        // rotated start (`home + 1 + cursor mod (n-1)` is never home), so
+        // consecutive sweeps — from this worker or its peers — open on
+        // different victims. Along the way, fold each sibling's
+        // (empty && closed) status observed under its lock — the evidence
+        // for a `Drained` verdict. No allocation: a cursor and a ring walk.
         let mut all_closed = true;
-        if deepest != home {
-            if let Some(stolen) = self.steal_from(deepest, max, &mut all_closed) {
-                return stolen;
-            }
-        }
-        for k in 1..n {
-            let i = (home + k) % n;
-            if i == deepest {
-                continue; // already probed above
-            }
-            if let Some(stolen) = self.steal_from(i, max, &mut all_closed) {
-                return stolen;
+        if n > 1 {
+            let start =
+                (home + 1 + self.steal_cursor.fetch_add(1, Ordering::Relaxed) % (n - 1)) % n;
+            for k in 0..n {
+                let i = (start + k) % n;
+                if i == home {
+                    continue;
+                }
+                if let Some(stolen) = self.steal_from(i, max, &mut all_closed) {
+                    return stolen;
+                }
             }
         }
 
         // Re-check home under its lock: an item may have landed there
         // during the sweep, and the Drained verdict needs home's own
         // (empty && closed) observed under the lock too.
-        match self.drain_locked(home, max) {
+        match self.drain_locked(home, max, false) {
             (Some(items), _) => Popped::Items { items, stolen: 0 },
             (None, home_closed) if all_closed && home_closed => Popped::Drained,
             (None, _) => Popped::Empty,
         }
     }
 
-    /// Steal sweep step over shard `i` (see [`ShardedQueue::drain_locked`]);
-    /// when it is empty, fold its closed flag into `all_closed` for the
-    /// caller's `Drained` verdict.
+    /// Steal sweep step over shard `i` (see [`ShardedQueue::drain_locked`]
+    /// — steal-half semantics); when it is empty, fold its closed flag
+    /// into `all_closed` for the caller's `Drained` verdict.
     fn steal_from(&self, i: usize, max: usize, all_closed: &mut bool) -> Option<Popped<T>> {
-        match self.drain_locked(i, max) {
+        match self.drain_locked(i, max, true) {
             (Some(items), _) => Some(Popped::Items { stolen: items.len(), items }),
             (None, closed) => {
                 *all_closed &= closed;
@@ -363,22 +370,119 @@ mod tests {
                 on0.push(v);
             }
         }
-        assert!(!on0.is_empty(), "placement must use shard 0");
+        assert!(on0.len() >= 2, "placement must use shard 0");
         // Worker 1 drains its own shard first, then steals shard 0's
-        // entries — all of them, oldest first.
+        // entries half a backlog at a time — oldest first, so the
+        // concatenation of the steals is exactly shard 0's FIFO order.
+        let mut stolen_all = Vec::new();
+        let mut steal_events = 0;
         loop {
             match q.pop_some(1, 8) {
                 Popped::Items { items, stolen: 0 } => {
                     assert!(items.iter().all(|v| !on0.contains(v)), "own-shard drain");
                 }
-                Popped::Items { items, stolen } => {
+                Popped::Items { mut items, stolen } => {
                     assert_eq!(stolen, items.len());
-                    assert_eq!(items, on0, "steal must take oldest-first FIFO order");
-                    break;
+                    steal_events += 1;
+                    stolen_all.append(&mut items);
                 }
+                Popped::Empty => break,
                 other => panic!("expected items, got {}", kind(&other)),
             }
         }
+        assert_eq!(stolen_all, on0, "steals must take oldest-first FIFO order");
+        assert!(
+            steal_events >= 2,
+            "steal-half must take multiple rounds to empty a {}-deep victim",
+            on0.len()
+        );
+    }
+
+    #[test]
+    fn steal_takes_at_most_half_and_rotates_victims() {
+        // 4 shards, 10 items each (shortest-queue placement balances).
+        let q: ShardedQueue<u32> = ShardedQueue::new(4, 40);
+        for v in 0..40 {
+            q.push(v).unwrap();
+        }
+        assert_eq!(q.depths(), vec![10, 10, 10, 10]);
+        // Worker 0 drains its own shard, then steals. Each steal must
+        // take exactly ceil(10/2) = 5 from a full victim, and the three
+        // successive sweeps must each pick a *different* victim.
+        let own = items(q.pop_some(0, 100));
+        assert_eq!(own.len(), 10);
+        let mut victims = Vec::new();
+        for round in 0..3 {
+            let before = q.depths();
+            match q.pop_some(0, 100) {
+                Popped::Items { items, stolen } => {
+                    assert_eq!(stolen, 5, "round {round}: steal must cap at half of 10");
+                    assert_eq!(items.len(), 5);
+                }
+                other => panic!("round {round}: expected items, got {}", kind(&other)),
+            }
+            let after = q.depths();
+            let victim = (0..4)
+                .find(|&i| after[i] < before[i])
+                .expect("one shard must have shrunk");
+            assert_eq!(before[victim] - after[victim], 5);
+            victims.push(victim);
+        }
+        victims.sort_unstable();
+        assert_eq!(victims, vec![1, 2, 3], "rotation must spread steals over all siblings");
+        // Next round: victims hold 5 each → steals take ceil(5/2) = 3.
+        match q.pop_some(0, 100) {
+            Popped::Items { stolen, .. } => assert_eq!(stolen, 3),
+            other => panic!("expected items, got {}", kind(&other)),
+        }
+    }
+
+    #[test]
+    fn skewed_arrivals_drain_through_half_steals() {
+        // Skewed-arrival stress: three of four workers are stalled, so
+        // their shards only drain through worker 0's steal sweeps. Every
+        // item must come out exactly once, and the steal path must be the
+        // one doing the work (stolen > 0 on most pops once home is dry).
+        let q: Arc<ShardedQueue<u64>> = Arc::new(ShardedQueue::new(4, 64));
+        let producer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                for v in 0..2000u64 {
+                    loop {
+                        match q.push(v) {
+                            Ok(_) => break,
+                            Err(PushError::Full(_)) => std::thread::yield_now(),
+                            Err(PushError::Closed(_)) => panic!("closed early"),
+                        }
+                    }
+                }
+            })
+        };
+        let consumer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let (mut got, mut steal_pops) = (Vec::new(), 0u32);
+                loop {
+                    match q.pop_some(0, 8) {
+                        Popped::Items { mut items, stolen } => {
+                            steal_pops += u32::from(stolen > 0);
+                            got.append(&mut items);
+                        }
+                        Popped::Empty => q.wait(Duration::from_millis(2)),
+                        Popped::Drained => return (got, steal_pops),
+                    }
+                }
+            })
+        };
+        producer.join().unwrap();
+        q.close();
+        let (mut got, steal_pops) = consumer.join().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..2000u64).collect::<Vec<_>>(), "items lost or duplicated");
+        assert!(
+            steal_pops > 0,
+            "skewed load must exercise the steal path (3 of 4 shards have no worker)"
+        );
     }
 
     #[test]

@@ -15,6 +15,7 @@ use std::io::Write as _;
 use std::path::Path;
 
 use super::{Dataset, Image, IMG_PIXELS, IMG_SIDE};
+use crate::config::LayerParams;
 use crate::error::{Error, Result};
 use crate::fixed::{pack_weights, unpack_weights, WeightMatrix, WeightStack};
 
@@ -24,6 +25,12 @@ const VERSION: u32 = 1;
 /// SNNW version 2: the multi-layer stack layout (layer count + per-layer
 /// geometry header, then one packed blob per layer).
 const STACK_VERSION: u32 = 2;
+/// SNNW version 3: version 2 plus a per-layer parameter block — one
+/// `(v_th: i32, decay_shift: u32, prune_after: u32)` triple per layer
+/// between the scalar calibration and the packed blobs. Written only when
+/// an artifact actually carries per-layer overrides, so uniform stacks
+/// keep producing byte-identical v2 files.
+const LAYER_PARAMS_VERSION: u32 = 3;
 
 /// Weights plus the LIF calibration they were trained against.
 #[derive(Debug, Clone, PartialEq)]
@@ -194,7 +201,8 @@ pub fn load_weights(path: impl AsRef<Path>) -> Result<WeightArtifact> {
 
 /// A multi-layer weight chain plus the LIF calibration it was trained
 /// against — the N-layer generalization of [`WeightArtifact`], stored as
-/// SNNW version 2.
+/// SNNW version 2 (uniform calibration) or version 3 (per-layer
+/// calibration block).
 #[derive(Debug, Clone, PartialEq)]
 pub struct WeightStackArtifact {
     pub stack: WeightStack,
@@ -202,6 +210,12 @@ pub struct WeightStackArtifact {
     pub decay_shift: u32,
     pub timesteps: u32,
     pub prune_after: u32,
+    /// Per-layer overrides of the scalar calibration above. Empty = every
+    /// layer shares the scalars (serialized as v2, byte-identical to
+    /// pre-existing artifacts); non-empty = one entry per layer,
+    /// serialized as the v3 parameter block. The writer stores *resolved*
+    /// values, so a reloaded artifact carries all-`Some` entries.
+    pub layer_params: Vec<LayerParams>,
 }
 
 impl WeightStackArtifact {
@@ -219,17 +233,44 @@ impl WeightStackArtifact {
             } else {
                 PruneMode::AfterFires { after_spikes: self.prune_after }
             },
+            layer_params: self.layer_params.clone(),
             ..crate::SnnConfig::paper()
         }
     }
+
+    /// The resolved `(v_th, decay_shift, prune_after)` triple of layer `l`
+    /// — what the v3 writer serializes. `prune_after` uses the same
+    /// encoding as the scalar field: 0 = pruning off.
+    fn resolved_layer(&self, l: usize) -> (i32, u32, u32) {
+        use crate::config::PruneMode;
+        let over = self.layer_params.get(l).copied().unwrap_or_default();
+        let prune_after = match over.prune {
+            Some(PruneMode::Off) => 0,
+            Some(PruneMode::AfterFires { after_spikes }) => after_spikes,
+            None => self.prune_after,
+        };
+        (over.v_th.unwrap_or(self.v_th), over.decay_shift.unwrap_or(self.decay_shift), prune_after)
+    }
 }
 
-/// Write a multi-layer weight stack + calibration in SNNW v2 format.
+/// Write a multi-layer weight stack + calibration. Uniform artifacts
+/// (empty `layer_params`) serialize as SNNW v2, byte-identical to the
+/// previous writer; artifacts with per-layer overrides add the v3
+/// parameter block (resolved values, one triple per layer).
 pub fn save_weight_stack(path: impl AsRef<Path>, art: &WeightStackArtifact) -> Result<()> {
     let path = path.as_ref();
+    if !art.layer_params.is_empty() && art.layer_params.len() != art.stack.n_layers() {
+        return Err(Error::InvalidConfig(format!(
+            "artifact layer_params carries {} entries for a {}-layer stack",
+            art.layer_params.len(),
+            art.stack.n_layers()
+        )));
+    }
+    let version =
+        if art.layer_params.is_empty() { STACK_VERSION } else { LAYER_PARAMS_VERSION };
     let mut out = Vec::new();
     out.extend_from_slice(WEIGHTS_MAGIC);
-    out.extend_from_slice(&STACK_VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&(art.stack.n_layers() as u32).to_le_bytes());
     for m in art.stack.layers() {
         out.extend_from_slice(&(m.n_inputs() as u32).to_le_bytes());
@@ -240,6 +281,14 @@ pub fn save_weight_stack(path: impl AsRef<Path>, art: &WeightStackArtifact) -> R
     out.extend_from_slice(&art.decay_shift.to_le_bytes());
     out.extend_from_slice(&art.timesteps.to_le_bytes());
     out.extend_from_slice(&art.prune_after.to_le_bytes());
+    if version == LAYER_PARAMS_VERSION {
+        for l in 0..art.stack.n_layers() {
+            let (v_th, decay_shift, prune_after) = art.resolved_layer(l);
+            out.extend_from_slice(&v_th.to_le_bytes());
+            out.extend_from_slice(&decay_shift.to_le_bytes());
+            out.extend_from_slice(&prune_after.to_le_bytes());
+        }
+    }
     for m in art.stack.layers() {
         let packed = pack_weights(m);
         out.extend_from_slice(&(packed.len() as u32).to_le_bytes());
@@ -248,9 +297,10 @@ pub fn save_weight_stack(path: impl AsRef<Path>, art: &WeightStackArtifact) -> R
     write_atomic(path, &out)
 }
 
-/// Read a weight stack from an SNNW file. Accepts both the legacy
-/// single-layer version 1 (loaded as a one-layer stack) and the
-/// multi-layer version 2, so one loader serves every artifact vintage.
+/// Read a weight stack from an SNNW file. Accepts the legacy single-layer
+/// version 1 (loaded as a one-layer stack), the uniform multi-layer
+/// version 2, and the per-layer-parameter version 3, so one loader serves
+/// every artifact vintage.
 pub fn load_weight_stack(path: impl AsRef<Path>) -> Result<WeightStackArtifact> {
     let path = path.as_ref();
     let buf = fs::read(path).map_err(|e| Error::io(path, e))?;
@@ -268,9 +318,10 @@ pub fn load_weight_stack(path: impl AsRef<Path>) -> Result<WeightStackArtifact> 
             decay_shift: art.decay_shift,
             timesteps: art.timesteps,
             prune_after: art.prune_after,
+            layer_params: Vec::new(),
         });
     }
-    if version != STACK_VERSION {
+    if version != STACK_VERSION && version != LAYER_PARAMS_VERSION {
         return Err(Error::malformed(path, format!("unsupported version {version}")));
     }
     let n_layers = r.u32()? as usize;
@@ -291,6 +342,30 @@ pub fn load_weight_stack(path: impl AsRef<Path>) -> Result<WeightStackArtifact> 
     let decay_shift = r.u32()?;
     let timesteps = r.u32()?;
     let prune_after = r.u32()?;
+    let mut layer_params = Vec::new();
+    if version == LAYER_PARAMS_VERSION {
+        use crate::config::PruneMode;
+        for l in 0..n_layers {
+            let lv_th = r.i32()?;
+            let ldecay = r.u32()?;
+            let lprune = r.u32()?;
+            if ldecay == 0 || ldecay > 30 {
+                return Err(Error::malformed(
+                    path,
+                    format!("layer {l} decay_shift {ldecay} out of range"),
+                ));
+            }
+            layer_params.push(LayerParams {
+                v_th: Some(lv_th),
+                decay_shift: Some(ldecay),
+                prune: Some(if lprune == 0 {
+                    PruneMode::Off
+                } else {
+                    PruneMode::AfterFires { after_spikes: lprune }
+                }),
+            });
+        }
+    }
     let mut layers = Vec::with_capacity(n_layers);
     for &(ni, no) in &dims {
         let packed_len = r.u32()? as usize;
@@ -309,7 +384,7 @@ pub fn load_weight_stack(path: impl AsRef<Path>) -> Result<WeightStackArtifact> 
     }
     let stack = WeightStack::from_layers(layers)
         .map_err(|e| Error::malformed(path, format!("inconsistent layer chain: {e}")))?;
-    Ok(WeightStackArtifact { stack, v_th, decay_shift, timesteps, prune_after })
+    Ok(WeightStackArtifact { stack, v_th, decay_shift, timesteps, prune_after, layer_params })
 }
 
 /// Write via a temp file + rename so concurrent readers never observe a
@@ -368,12 +443,102 @@ mod tests {
             decay_shift: 2,
             timesteps: 12,
             prune_after: 0,
+            layer_params: Vec::new(),
         };
         let p = tmpdir().join("stack_roundtrip.bin");
         save_weight_stack(&p, &art).unwrap();
         let back = load_weight_stack(&p).unwrap();
         assert_eq!(back, art);
         assert_eq!(back.config().topology, vec![6, 4, 3]);
+        // Uniform artifacts must keep writing v2 bytes (read-compat with
+        // every pre-v3 consumer): version word at offset 4.
+        let bytes = fs::read(&p).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 2);
+    }
+
+    #[test]
+    fn weight_stack_roundtrip_v3_per_layer_params() {
+        use crate::config::PruneMode;
+        let l0 = WeightMatrix::from_rows(6, 4, 9, (0..24).map(|v| v * 11 - 120).collect()).unwrap();
+        let l1 = WeightMatrix::from_rows(4, 3, 9, (0..12).map(|v| 90 - v * 7).collect()).unwrap();
+        let art = WeightStackArtifact {
+            stack: WeightStack::from_layers(vec![l0, l1]).unwrap(),
+            v_th: 200,
+            decay_shift: 2,
+            timesteps: 12,
+            prune_after: 1,
+            layer_params: vec![
+                LayerParams {
+                    v_th: Some(300),
+                    decay_shift: Some(3),
+                    prune: Some(PruneMode::AfterFires { after_spikes: 2 }),
+                },
+                LayerParams {
+                    v_th: Some(40),
+                    decay_shift: Some(4),
+                    prune: Some(PruneMode::Off),
+                },
+            ],
+        };
+        let p = tmpdir().join("stack_roundtrip_v3.bin");
+        save_weight_stack(&p, &art).unwrap();
+        let bytes = fs::read(&p).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 3);
+        let back = load_weight_stack(&p).unwrap();
+        assert_eq!(back, art);
+        let cfg = back.config().validated().unwrap();
+        assert_eq!(cfg.layer_v_th(0), 300);
+        assert_eq!(cfg.layer_v_th(1), 40);
+        assert_eq!(cfg.layer_decay_shift(1), 4);
+        assert_eq!(cfg.layer_prune(0), PruneMode::AfterFires { after_spikes: 2 });
+        assert_eq!(cfg.layer_prune(1), PruneMode::Off);
+        assert_eq!(cfg.max_reachable_margin(), None, "unpruned readout");
+    }
+
+    #[test]
+    fn weight_stack_v3_writer_resolves_partial_overrides() {
+        // A partially-specified override list (None fields inherit the
+        // scalars) serializes resolved and loads back fully-specified.
+        use crate::config::PruneMode;
+        let art = WeightStackArtifact {
+            stack: WeightStack::from_layers(vec![
+                WeightMatrix::zeros(5, 4, 9),
+                WeightMatrix::zeros(4, 2, 9),
+            ])
+            .unwrap(),
+            v_th: 128,
+            decay_shift: 3,
+            timesteps: 8,
+            prune_after: 2,
+            layer_params: vec![LayerParams::with_v_th(60), LayerParams::default()],
+        };
+        let p = tmpdir().join("stack_v3_partial.bin");
+        save_weight_stack(&p, &art).unwrap();
+        let back = load_weight_stack(&p).unwrap();
+        assert_eq!(
+            back.layer_params,
+            vec![
+                LayerParams {
+                    v_th: Some(60),
+                    decay_shift: Some(3),
+                    prune: Some(PruneMode::AfterFires { after_spikes: 2 }),
+                },
+                LayerParams {
+                    v_th: Some(128),
+                    decay_shift: Some(3),
+                    prune: Some(PruneMode::AfterFires { after_spikes: 2 }),
+                },
+            ],
+            "writer must resolve None fields against the scalar calibration"
+        );
+        // Resolved and original describe the same architectural config.
+        assert_eq!(
+            back.config().validated().unwrap().layer_config(0),
+            art.config().validated().unwrap().layer_config(0)
+        );
+        // Arity mismatch is rejected at save time.
+        let bad = WeightStackArtifact { layer_params: vec![LayerParams::default()], ..art };
+        assert!(save_weight_stack(tmpdir().join("bad_arity.bin"), &bad).is_err());
     }
 
     #[test]
@@ -402,6 +567,7 @@ mod tests {
             decay_shift: 3,
             timesteps: 8,
             prune_after: 1,
+            layer_params: Vec::new(),
         };
         let p = tmpdir().join("stack_trunc.bin");
         save_weight_stack(&p, &art).unwrap();

@@ -26,7 +26,10 @@ use crate::runtime::Manifest;
 use crate::SnnConfig;
 
 pub use ablations::{run_ablation_decay, run_ablation_modes, run_ablation_pruning, run_ablation_width};
-pub use depth::{depth_point, run_ablation_depth, DepthPoint};
+pub use depth::{
+    calibration_demo_image, calibration_demo_prune, calibration_demo_stack, depth_point,
+    depth_point_over, run_ablation_depth, DepthPoint,
+};
 pub use fig4::run_fig4;
 pub use fig5::run_fig5;
 pub use fig67::{run_fig6, run_fig7};

@@ -72,6 +72,10 @@ pub struct LayerController {
     /// 100 µs / Table II <1 µs latency claims can hold — see
     /// `experiments::ablations::run_ablation_width`).
     pixels_per_cycle: usize,
+    /// Per-layer resolved pruning policy (the controller's mask update is
+    /// the one place pruning acts, so this is the one place the per-layer
+    /// prune axis lands in the RTL model).
+    prune: Vec<PruneMode>,
     cfg: SnnConfig,
 }
 
@@ -86,6 +90,7 @@ impl LayerController {
             enables: widths.iter().map(|&n| vec![true; n]).collect(),
             enabled_count: widths,
             pixels_per_cycle: 1,
+            prune: (0..cfg.n_layers()).map(|l| cfg.layer_prune(l)).collect(),
             cfg: cfg.clone(),
         }
     }
@@ -183,7 +188,7 @@ impl LayerController {
         for (acc, &f) in self.step_fired[l].iter_mut().zip(fired) {
             *acc |= f;
         }
-        if let PruneMode::AfterFires { after_spikes } = self.cfg.prune {
+        if let PruneMode::AfterFires { after_spikes } = self.prune[l] {
             for (j, &count) in spike_counts.iter().enumerate() {
                 if count >= after_spikes && self.enables[l][j] {
                     self.enables[l][j] = false;
@@ -440,6 +445,30 @@ mod tests {
         assert!(!c.any_enabled(0), "hidden layer fully pruned");
         assert!(c.any_enabled(1), "output layer untouched");
         assert_eq!(c.enables(1), &[true, true, true]);
+    }
+
+    #[test]
+    fn per_layer_prune_policies_act_independently() {
+        // Hidden layer prunes after 1 fire, readout never: the same latch
+        // sequence must gate layer 0 and leave layer 1 untouched.
+        use crate::config::{LayerParams, PruneMode};
+        let cfg = SnnConfig {
+            topology: vec![4, 2, 2],
+            layer_params: vec![
+                LayerParams {
+                    prune: Some(PruneMode::AfterFires { after_spikes: 1 }),
+                    ..Default::default()
+                },
+                LayerParams { prune: Some(PruneMode::Off), ..Default::default() },
+            ],
+            ..SnnConfig::paper()
+        };
+        let mut c = LayerController::new(&cfg);
+        c.start();
+        c.latch_fire(0, &[true, true], &[1, 1]);
+        c.latch_fire(1, &[true, true], &[5, 5]);
+        assert!(!c.any_enabled(0), "hidden layer must be fully pruned");
+        assert_eq!(c.enables(1), &[true, true], "unpruned readout keeps its enables");
     }
 
     #[test]

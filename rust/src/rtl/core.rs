@@ -34,6 +34,7 @@ use crate::data::Image;
 use crate::error::{Error, Result};
 use crate::fixed::WeightStack;
 use crate::snn::EarlyExit;
+use crate::util::margin_reached;
 
 use super::controller::{CtrlState, LayerController};
 use super::encoder::RtlPoissonEncoder;
@@ -336,6 +337,10 @@ impl RtlCore {
         if self.vcd.is_some() {
             return self.run(img, seed);
         }
+        // Same clamp, same entry point as the behavioral model: margins
+        // the output layer's prune cap makes unreachable are brought down
+        // instead of silently running the full window.
+        let early = early.clamped_for(&self.cfg);
         self.load_image(img, seed)?;
         let start = self.total_activity();
         let start_layers = self.layer_act.clone();
@@ -390,17 +395,15 @@ impl RtlCore {
             self.spike_log.push(std::mem::take(&mut self.step_spikes));
 
             if let EarlyExit::Margin { margin, min_steps } = early {
-                if t + 1 >= min_steps {
-                    // Same check, same schedule point as the behavioral
-                    // model (`snn::network::run_inference`). A margin
-                    // needs a runner-up: degenerate single-output
-                    // topologies never early-exit.
-                    let counts = self.neurons[n_layers - 1].spike_counts();
-                    let mut sorted: Vec<u32> = counts.to_vec();
-                    sorted.sort_unstable_by(|a, b| b.cmp(a));
-                    if sorted.len() > 1 && sorted[0] >= sorted[1] + margin {
-                        break 'window;
-                    }
+                // Same predicate (`util::margin_reached`), same schedule
+                // point as the behavioral model's check in
+                // `snn::network::run_inference` — and allocation-free,
+                // where this loop used to clone + sort the whole count
+                // vector every timestep.
+                if t + 1 >= min_steps
+                    && margin_reached(self.neurons[n_layers - 1].spike_counts(), margin)
+                {
+                    break 'window;
                 }
             }
         }
@@ -657,20 +660,56 @@ mod tests {
         });
     }
 
+    /// A random per-layer override list for `n_layers` layers: each field
+    /// of each entry is independently an override or a scalar fallback,
+    /// so the sweep covers partial, full and empty heterogeneity.
+    fn random_layer_params(
+        g: &mut crate::testutil::Gen,
+        n_layers: usize,
+    ) -> Vec<crate::config::LayerParams> {
+        (0..n_layers)
+            .map(|_| crate::config::LayerParams {
+                v_th: if g.rng.below(2) == 0 {
+                    Some(g.rng.range_i32(60, 300))
+                } else {
+                    None
+                },
+                decay_shift: if g.rng.below(2) == 0 {
+                    Some(g.rng.range_i32(1, 5) as u32)
+                } else {
+                    None
+                },
+                prune: if g.rng.below(2) == 0 {
+                    Some(*g.choice(&[
+                        PruneMode::Off,
+                        PruneMode::AfterFires { after_spikes: 1 },
+                        PruneMode::AfterFires { after_spikes: 3 },
+                    ]))
+                } else {
+                    None
+                },
+            })
+            .collect()
+    }
+
     /// The layered equivalence theorem: a deep RTL core (EndOfStep,
     /// PerTimestep) matches the chained behavioral stack — final-layer
     /// decision, spike counts and the output-layer slice of every
-    /// per-step log — over random stacks/images/seeds.
+    /// per-step log — over random stacks/images/seeds, including
+    /// heterogeneous per-layer threshold/decay/prune overrides.
     #[test]
     fn deep_rtl_equals_behavioral_model() {
         PropRunner::new("deep_rtl_equiv", 8).run(|g| {
             let hidden = g.rng.range_i32(8, 40) as usize;
             let topology = vec![784, hidden, 10];
+            let layer_params =
+                if g.rng.below(2) == 0 { random_layer_params(g, 2) } else { Vec::new() };
             let cfg = SnnConfig::paper()
                 .with_topology(topology.clone())
                 .with_timesteps(g.rng.range_i32(2, 6) as u32)
                 .with_v_th(g.rng.range_i32(60, 300))
-                .with_decay_shift(g.rng.range_i32(1, 5) as u32);
+                .with_decay_shift(g.rng.range_i32(1, 5) as u32)
+                .with_layer_params(layer_params);
             let stack = test_stack(&topology, g.rng.next_u32());
             let img = DigitGen::new(g.rng.next_u32()).sample(g.rng.below(10) as u8, g.rng.below(20));
             let seed = g.rng.next_u32();
@@ -742,6 +781,14 @@ mod tests {
                 .with_v_th(if squeeze { 120 } else { g.rng.range_i32(80, 300) })
                 .with_decay_shift(g.rng.range_i32(1, 5) as u32);
             let cfg = if squeeze { SnnConfig { acc_bits: 9, ..cfg } } else { cfg };
+            // Half the non-squeeze cases attach heterogeneous per-layer
+            // threshold/decay/prune overrides, so the fast path is proven
+            // bit-exact on the per-layer axis at depths 1-3 too.
+            let cfg = if !squeeze && g.rng.below(2) == 0 {
+                cfg.with_layer_params(random_layer_params(g, topology.len() - 1))
+            } else {
+                cfg
+            };
             let w = if squeeze {
                 // Hot uniform drive against a 9-bit accumulator saturates.
                 WeightStack::from(
@@ -776,7 +823,8 @@ mod tests {
             assert_eq!(
                 slow, fast,
                 "fast path diverges (fire={fire:?} leak={leak:?} prune={prune:?} k={k} \
-                 topology={topology:?})"
+                 topology={topology:?} layer_params={:?})",
+                cfg.layer_params
             );
         });
     }
@@ -832,6 +880,85 @@ mod tests {
             &early.membrane_by_step[..],
             &full.membrane_by_step[..steps],
             "early window must be a bit-exact prefix"
+        );
+    }
+
+    #[test]
+    fn unreachable_margin_clamps_on_fast_path() {
+        // Bugfix regression, RTL side: prune-after-1 caps every count at
+        // 1, so margin 4 used to silently never trigger and the fast path
+        // ran the full 20-step window. The clamp must make it behave
+        // exactly like margin 1 — same early stop, same prefix.
+        let cfg = SnnConfig::paper()
+            .with_timesteps(20)
+            .with_prune(PruneMode::AfterFires { after_spikes: 1 });
+        let mut w = vec![0i32; 7840];
+        for i in 0..784 {
+            if i / 79 == 4 {
+                w[i * 10 + 4] = 40;
+            }
+        }
+        let w = WeightMatrix::from_rows(784, 10, 9, w).unwrap();
+        let mut px = vec![0u8; 784];
+        for (i, p) in px.iter_mut().enumerate() {
+            if i / 79 == 4 {
+                *p = 250;
+            }
+        }
+        let img = crate::data::Image { label: 4, pixels: px };
+
+        let unreachable = RtlCore::new(cfg.clone(), w.clone())
+            .unwrap()
+            .run_fast_early(&img, 9, EarlyExit::Margin { margin: 4, min_steps: 2 })
+            .unwrap();
+        let capped = RtlCore::new(cfg, w)
+            .unwrap()
+            .run_fast_early(&img, 9, EarlyExit::Margin { margin: 1, min_steps: 2 })
+            .unwrap();
+        assert_eq!(unreachable, capped, "clamped margin must match the reachable one");
+        assert!(
+            (unreachable.membrane_by_step.len() as u32) < 20,
+            "clamped margin must still exit early"
+        );
+    }
+
+    #[test]
+    fn per_layer_prune_policies_act_independently_in_rtl() {
+        // Unpruned hidden layer + prune-after-1 readout: the hidden layer
+        // keeps firing every step while the output layer gates off after
+        // its first spike — the PruneMode-per-layer ROADMAP item, proven
+        // identical on both engines. (A shared policy caps *both* layers,
+        // so the hidden counts below discriminate the per-layer path.)
+        use crate::config::LayerParams;
+        let cfg = SnnConfig::paper()
+            .with_topology(vec![784, 12, 10])
+            .with_timesteps(6)
+            .with_v_th(100)
+            .with_layer_params(vec![
+                LayerParams { prune: Some(PruneMode::Off), ..Default::default() },
+                LayerParams {
+                    prune: Some(PruneMode::AfterFires { after_spikes: 1 }),
+                    ..Default::default()
+                },
+            ]);
+        let l0 = WeightMatrix::from_rows(784, 12, 9, vec![20; 784 * 12]).unwrap();
+        let l1 = WeightMatrix::from_rows(12, 10, 9, vec![60; 120]).unwrap();
+        let stack = WeightStack::from_layers(vec![l0, l1]).unwrap();
+        let img = crate::data::Image { label: 0, pixels: vec![255; 784] };
+        let mut core = RtlCore::new(cfg.clone(), stack.clone()).unwrap();
+        let fast = core.run_fast(&img, 11).unwrap();
+        let mut core = RtlCore::new(cfg, stack).unwrap();
+        let slow = core.run(&img, 11).unwrap();
+        assert_eq!(fast, slow, "per-layer prune diverges between engines");
+        assert!(
+            fast.spike_counts_by_layer[0].iter().all(|&c| c == 6),
+            "unpruned hidden layer must fire every step: {:?}",
+            fast.spike_counts_by_layer[0]
+        );
+        assert!(
+            fast.spike_counts.iter().all(|&c| c == 1),
+            "pruned readout must cap at 1: {:?}",
+            fast.spike_counts
         );
     }
 

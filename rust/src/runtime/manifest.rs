@@ -4,7 +4,7 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use crate::config::{PruneMode, SnnConfig};
+use crate::config::{LayerParams, PruneMode, SnnConfig};
 use crate::error::{Error, Result};
 
 /// Parsed artifact manifest: the build-time configuration every runtime
@@ -105,6 +105,66 @@ impl Manifest {
         Ok(vec![self.u32("n_inputs")? as usize, self.u32("n_outputs")? as usize])
     }
 
+    /// Optional per-layer parameter overrides: the `layer_params=` key
+    /// holds one `v_th:decay_shift:prune_after` triple per weight layer,
+    /// comma separated (`layer_params=160:3:1,128:2:0`). Any field may be
+    /// `-` to inherit the scalar default; `prune_after` follows the
+    /// scalar convention (0 = pruning off). Returns an empty list when
+    /// the key is absent.
+    pub fn layer_params(&self) -> Result<Vec<LayerParams>> {
+        let Some(raw) = self.kv.get("layer_params") else {
+            return Ok(Vec::new());
+        };
+        let path = self.dir.join("manifest.txt");
+        let mut out = Vec::new();
+        for (l, entry) in raw.split(',').enumerate() {
+            let fields: Vec<&str> = entry.trim().split(':').collect();
+            if fields.len() != 3 {
+                return Err(Error::malformed(
+                    &path,
+                    format!(
+                        "layer_params entry {l}: want v_th:decay_shift:prune_after, \
+                         got {entry:?}"
+                    ),
+                ));
+            }
+            // Each field parses into its exact target width — a wrapping
+            // `as` cast would let `-1` or `2^32+1` masquerade as a valid
+            // huge/small value instead of the malformed-manifest error
+            // every other bad field gets.
+            let v_th = match fields[0] {
+                "-" => None,
+                s => Some(s.parse::<i32>().map_err(|e| {
+                    Error::malformed(&path, format!("layer_params entry {l} v_th: {e}"))
+                })?),
+            };
+            let decay_shift = match fields[1] {
+                "-" => None,
+                s => Some(s.parse::<u32>().map_err(|e| {
+                    Error::malformed(&path, format!("layer_params entry {l} decay_shift: {e}"))
+                })?),
+            };
+            let prune = match fields[2] {
+                "-" => None,
+                s => {
+                    let after = s.parse::<u32>().map_err(|e| {
+                        Error::malformed(
+                            &path,
+                            format!("layer_params entry {l} prune_after: {e}"),
+                        )
+                    })?;
+                    Some(if after == 0 {
+                        PruneMode::Off
+                    } else {
+                        PruneMode::AfterFires { after_spikes: after }
+                    })
+                }
+            };
+            out.push(LayerParams { v_th, decay_shift, prune });
+        }
+        Ok(out)
+    }
+
     /// The SnnConfig the artifacts were built for.
     pub fn snn_config(&self) -> Result<SnnConfig> {
         let prune_after = self.u32("prune_after")?;
@@ -121,6 +181,7 @@ impl Manifest {
             } else {
                 PruneMode::AfterFires { after_spikes: prune_after }
             },
+            layer_params: self.layer_params()?,
             ..SnnConfig::paper()
         }
         .validated()
@@ -187,6 +248,42 @@ mod tests {
     }
 
     #[test]
+    fn layer_params_key_parses_and_validates() {
+        let dir = std::env::temp_dir().join(format!("snn_manifest_lp_{}", std::process::id()));
+        write_manifest(
+            &dir,
+            &format!("{}topology=784,128,10\nlayer_params=160:-:1,40:2:0\n", full_body()),
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let cfg = m.snn_config().unwrap();
+        assert_eq!(cfg.layer_v_th(0), 160);
+        assert_eq!(cfg.layer_decay_shift(0), 3, "`-` inherits the scalar decay");
+        assert_eq!(cfg.layer_prune(0), PruneMode::AfterFires { after_spikes: 1 });
+        assert_eq!(cfg.layer_v_th(1), 40);
+        assert_eq!(cfg.layer_decay_shift(1), 2);
+        assert_eq!(cfg.layer_prune(1), PruneMode::Off);
+        // Arity mismatch against the topology is rejected by validation.
+        write_manifest(
+            &dir,
+            &format!("{}topology=784,128,10\nlayer_params=160:3:1\n", full_body()),
+        );
+        assert!(Manifest::load(&dir).unwrap().snn_config().is_err());
+        // Malformed entries are rejected at parse.
+        write_manifest(&dir, &format!("{}layer_params=160:3\n", full_body()));
+        assert!(Manifest::load(&dir).unwrap().snn_config().is_err());
+        write_manifest(&dir, &format!("{}layer_params=abc:3:1\n", full_body()));
+        assert!(Manifest::load(&dir).unwrap().snn_config().is_err());
+        // Out-of-width values must be malformed, not silently wrapped.
+        write_manifest(&dir, &format!("{}layer_params=160:3:-1\n", full_body()));
+        assert!(Manifest::load(&dir).unwrap().snn_config().is_err());
+        write_manifest(&dir, &format!("{}layer_params=4294967297:3:1\n", full_body()));
+        assert!(Manifest::load(&dir).unwrap().snn_config().is_err());
+        // Absent key → empty overrides (the shared-parameter default).
+        write_manifest(&dir, full_body());
+        assert!(Manifest::load(&dir).unwrap().snn_config().unwrap().layer_params.is_empty());
+    }
+
+    #[test]
     fn rejects_bad_schema_and_lines() {
         let dir = std::env::temp_dir().join(format!("snn_manifest_bad_{}", std::process::id()));
         write_manifest(&dir, "schema=2\n");
@@ -205,8 +302,8 @@ mod tests {
         if dir.join("manifest.txt").exists() {
             let m = Manifest::load(&dir).unwrap();
             let cfg = m.snn_config().unwrap();
-            assert_eq!(cfg.n_inputs, 784);
-            assert_eq!(cfg.n_outputs, 10);
+            assert_eq!(cfg.n_inputs(), 784);
+            assert_eq!(cfg.n_outputs(), 10);
         }
     }
 }

@@ -163,6 +163,17 @@ impl XlaSnn {
                 cfg.topology
             )));
         }
+        // The HLO graphs bake the scalar calibration in at compile time;
+        // per-layer overrides cannot reach them. Reject rather than serve
+        // dynamics that diverge from the behavioral/RTL backends.
+        if !cfg.layer_params.is_empty() {
+            return Err(Error::InvalidConfig(
+                "manifest carries layer_params overrides, which the compiled XLA \
+                 executables cannot apply; use the behavioral or rtl backend (or \
+                 rebuild artifacts without per-layer overrides)"
+                    .into(),
+            ));
+        }
         let wc = w.config();
         if wc.v_th != cfg.v_th
             || wc.decay_shift != cfg.decay_shift

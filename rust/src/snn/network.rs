@@ -15,7 +15,7 @@ use crate::data::Image;
 use crate::error::Result;
 use crate::fixed::WeightStack;
 use crate::snn::{LifLayer, PoissonEncoder, StepTrace};
-use crate::util::priority_argmax;
+use crate::util::{margin_reached, priority_argmax};
 
 /// Early-termination policy applied between timesteps (the serving-level
 /// generalization of the paper's active-pruning idea: stop paying for
@@ -29,9 +29,38 @@ pub enum EarlyExit {
     ///
     /// Note the interaction with neuron-level pruning: with the paper's
     /// `PruneMode::AfterFires { after_spikes: 1 }` every spike count is
-    /// capped at 1, so the reachable margin is 1. Use `margin: 1` with
-    /// pruning on, or disable pruning for larger margins.
+    /// capped at 1, so the reachable margin is 1. Margins above the
+    /// output layer's cap are clamped at inference entry
+    /// ([`EarlyExit::clamped_for`]) instead of silently running the full
+    /// window.
     Margin { margin: u32, min_steps: u32 },
+}
+
+impl EarlyExit {
+    /// Clamp an unreachable margin down to the output layer's pruning cap
+    /// ([`SnnConfig::max_reachable_margin`]). With `AfterFires(a)` on the
+    /// readout every spike count saturates at `a`, so `margin > a` could
+    /// never trigger — historically that silently disabled early exit and
+    /// ran the full window. Both inference engines (behavioral
+    /// `run_inference` and `RtlCore::run_fast_early`) call this at entry,
+    /// so the clamped policy — and therefore `steps_run` — stays identical
+    /// across them. Warns once per process on the first clamp.
+    pub fn clamped_for(self, cfg: &SnnConfig) -> EarlyExit {
+        let EarlyExit::Margin { margin, min_steps } = self else { return self };
+        let Some(cap) = cfg.max_reachable_margin() else { return self };
+        if margin <= cap {
+            return self;
+        }
+        static WARNED: std::sync::Once = std::sync::Once::new();
+        WARNED.call_once(|| {
+            eprintln!(
+                "warning: EarlyExit margin {margin} is unreachable under the output \
+                 layer's prune cap {cap}; clamping to {cap} (raise after_spikes or \
+                 disable readout pruning for larger margins)"
+            );
+        });
+        EarlyExit::Margin { margin: cap, min_steps }
+    }
 }
 
 /// Inference result.
@@ -259,6 +288,7 @@ fn run_inference(
     want_trace: bool,
 ) -> (Classification, Vec<StepTrace>) {
     stack.reset();
+    let early = early.clamped_for(cfg);
     let mut enc = PoissonEncoder::new(img, seed);
     let mut spikes_in = vec![false; cfg.n_inputs()];
     let mut active = Vec::with_capacity(cfg.n_inputs());
@@ -287,16 +317,11 @@ fn run_inference(
         steps_run = t + 1;
 
         if let EarlyExit::Margin { margin, min_steps } = early {
-            if steps_run >= min_steps {
-                // A margin needs a runner-up: degenerate single-output
-                // topologies never early-exit (mirrored by the RTL fast
-                // path's check — parity is pinned by test).
-                let counts = stack.spike_counts();
-                let mut sorted: Vec<u32> = counts.to_vec();
-                sorted.sort_unstable_by(|a, b| b.cmp(a));
-                if sorted.len() > 1 && sorted[0] >= sorted[1] + margin {
-                    break;
-                }
+            // The shared allocation-free predicate (`util::margin_reached`)
+            // — the same function the RTL fast path evaluates at the same
+            // schedule point, so the two engines cannot drift.
+            if steps_run >= min_steps && margin_reached(stack.spike_counts(), margin) {
+                break;
             }
         }
     }
@@ -455,6 +480,90 @@ mod tests {
         assert_eq!(full.class, early.class);
         assert!(early.steps_run < full.steps_run, "early exit never triggered");
         assert!(early.adds_performed < full.adds_performed);
+    }
+
+    #[test]
+    fn unreachable_margin_is_clamped_not_ignored() {
+        // Bugfix regression: with AfterFires(1) pruning every spike count
+        // caps at 1, so margin 3 used to be silently unreachable and the
+        // window always ran to completion. The clamp must bring it down
+        // to the reachable cap and actually exit early.
+        let cfg = SnnConfig::paper()
+            .with_timesteps(20)
+            .with_prune(PruneMode::AfterFires { after_spikes: 1 });
+        let net = BehavioralNet::new(cfg.clone(), block_weights()).unwrap();
+        let img = block_image(4);
+        let unreachable =
+            net.classify_opts(&img, 7, 20, EarlyExit::Margin { margin: 3, min_steps: 2 });
+        let capped =
+            net.classify_opts(&img, 7, 20, EarlyExit::Margin { margin: 1, min_steps: 2 });
+        assert_eq!(
+            unreachable, capped,
+            "margin above the prune cap must behave exactly like the clamped margin"
+        );
+        assert!(
+            unreachable.steps_run < 20,
+            "clamped margin must still exit early (ran {} steps)",
+            unreachable.steps_run
+        );
+
+        // The clamp itself, unit level: cap follows the *output* layer.
+        let clamped = EarlyExit::Margin { margin: 9, min_steps: 0 }.clamped_for(&cfg);
+        assert_eq!(clamped, EarlyExit::Margin { margin: 1, min_steps: 0 });
+        let unpruned = cfg.clone().with_prune(PruneMode::Off);
+        let kept = EarlyExit::Margin { margin: 9, min_steps: 0 }.clamped_for(&unpruned);
+        assert_eq!(kept, EarlyExit::Margin { margin: 9, min_steps: 0 });
+        assert_eq!(EarlyExit::Off.clamped_for(&cfg), EarlyExit::Off);
+    }
+
+    #[test]
+    fn per_layer_thresholds_change_behavioral_dynamics() {
+        // A deep stack whose readout drive is far below the shared
+        // threshold: shared config never fires the output layer, the
+        // per-layer override recovers it. (The depth experiment measures
+        // the same effect end to end; this pins the behavioral chain.)
+        use crate::config::LayerParams;
+        let cfg_shared = SnnConfig::paper()
+            .with_topology(vec![784, 20, 10])
+            .with_timesteps(10)
+            .with_v_th(128)
+            .with_prune(PruneMode::Off);
+        // Readout weights scaled far down: per-step drive is 2 × 6 = 12,
+        // whose leak plateau (monotone convergence to 84 = the fixed
+        // point of v ← v + 12 − ((v+12)>>3)) can never reach 128 at any
+        // window length.
+        let mut w1 = vec![0i32; 784 * 20];
+        for i in 0..784 {
+            let block = i / 79;
+            if block < 10 {
+                w1[i * 20 + 2 * block] = 40;
+                w1[i * 20 + 2 * block + 1] = 40;
+            }
+        }
+        let mut w2 = vec![0i32; 20 * 10];
+        for h in 0..20 {
+            w2[h * 10 + h / 2] = 6;
+        }
+        let stack = WeightStack::from_layers(vec![
+            WeightMatrix::from_rows(784, 20, 9, w1).unwrap(),
+            WeightMatrix::from_rows(20, 10, 9, w2).unwrap(),
+        ])
+        .unwrap();
+        let shared = BehavioralNet::new(cfg_shared.clone(), stack.clone()).unwrap();
+        let out = shared.classify(&block_image(6), 3);
+        assert_eq!(
+            out.spike_counts.iter().sum::<u32>(),
+            0,
+            "shared threshold must starve the readout for this stack"
+        );
+        let cfg_cal = cfg_shared
+            .with_layer_params(vec![LayerParams::default(), LayerParams::with_v_th(30)])
+            .validated()
+            .unwrap();
+        let calibrated = BehavioralNet::new(cfg_cal, stack).unwrap();
+        let out = calibrated.classify(&block_image(6), 3);
+        assert_eq!(out.class, 6, "calibrated readout threshold recovers the class");
+        assert!(out.spike_counts[6] > 0);
     }
 
     #[test]

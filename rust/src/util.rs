@@ -20,9 +20,78 @@ pub fn priority_argmax(xs: &[u32]) -> usize {
     best
 }
 
+/// Allocation-free top-2 scan: the largest and second-largest values of
+/// `xs` (duplicates count twice: `[5, 5]` → `(5, 5)`). `None` when the
+/// slice has no runner-up. One pass, no clone, no sort — this replaces the
+/// per-timestep `to_vec` + `sort_unstable` the early-exit margin checks
+/// used to pay on every step of every inference.
+#[inline]
+pub fn top2(xs: &[u32]) -> Option<(u32, u32)> {
+    if xs.len() < 2 {
+        return None;
+    }
+    let (mut best, mut second) =
+        if xs[0] >= xs[1] { (xs[0], xs[1]) } else { (xs[1], xs[0]) };
+    for &x in &xs[2..] {
+        if x > best {
+            second = best;
+            best = x;
+        } else if x > second {
+            second = x;
+        }
+    }
+    Some((best, second))
+}
+
+/// The one early-exit margin predicate shared by the behavioral model, the
+/// RTL fast path and the XLA chunk loop: true when the leading spike count
+/// beats the runner-up by at least `margin`. A margin needs a runner-up,
+/// so degenerate single-output slices are never confident. Keeping this in
+/// one place means the schedule points cannot drift apart.
+#[inline]
+pub fn margin_reached(counts: &[u32], margin: u32) -> bool {
+    match top2(counts) {
+        Some((best, second)) => best >= second.saturating_add(margin),
+        None => false,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn top2_matches_sorted_reference() {
+        let cases: &[&[u32]] = &[
+            &[3, 1, 4, 1, 5],
+            &[5, 5],
+            &[0, 0, 0],
+            &[9, 1],
+            &[1, 9],
+            &[2, 7, 7, 3],
+            &[u32::MAX, 1, u32::MAX],
+        ];
+        for xs in cases {
+            let mut sorted = xs.to_vec();
+            sorted.sort_unstable_by(|a, b| b.cmp(a));
+            assert_eq!(top2(xs), Some((sorted[0], sorted[1])), "{xs:?}");
+        }
+        assert_eq!(top2(&[]), None);
+        assert_eq!(top2(&[7]), None);
+    }
+
+    #[test]
+    fn margin_predicate() {
+        assert!(margin_reached(&[5, 2, 0], 3));
+        assert!(!margin_reached(&[5, 3, 0], 3));
+        assert!(margin_reached(&[0, 4, 1], 3));
+        // No runner-up: never confident.
+        assert!(!margin_reached(&[9], 1));
+        assert!(!margin_reached(&[], 1));
+        // Saturating arithmetic near the top of the range.
+        assert!(!margin_reached(&[u32::MAX, u32::MAX], 1));
+        assert!(margin_reached(&[u32::MAX, 0], u32::MAX));
+    }
 
     #[test]
     fn picks_the_maximum() {

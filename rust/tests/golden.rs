@@ -8,7 +8,7 @@
 mod common;
 
 use common::{artifacts_dir, Cursor};
-use snn_rtl::config::{FireMode, LeakMode, PruneMode};
+use snn_rtl::config::{FireMode, LayerParams, LeakMode, PruneMode};
 use snn_rtl::data::{codec, Image, IMG_PIXELS};
 use snn_rtl::fixed::{WeightMatrix, WeightStack};
 use snn_rtl::rtl::RtlCore;
@@ -576,6 +576,7 @@ fn weight_stack_artifact_roundtrip_preserves_deep_fixture() {
         decay_shift: 3,
         timesteps: 8,
         prune_after: 0,
+        layer_params: Vec::new(),
     };
     codec::save_weight_stack(&path, &art).unwrap();
     let back = codec::load_weight_stack(&path).unwrap();
@@ -587,6 +588,254 @@ fn weight_stack_artifact_roundtrip_preserves_deep_fixture() {
     let mut core = RtlCore::new(cfg, back.stack).unwrap();
     let r = core.run_fast(&fixture_image(case.image), case.seed).unwrap();
     assert_eq!(r.spike_counts, case.counts, "reloaded stack diverges from golden");
+    assert_eq!(r.class, case.winner);
+}
+
+// ---------------------------------------------------------------------------
+// Embedded heterogeneous per-layer golden vectors — pinned 3-layer outputs
+// ---------------------------------------------------------------------------
+//
+// Same methodology as the fixtures above, for the `[784, 14, 12, 10]`
+// topology with *distinct* per-layer parameters: layer 0 fires at 260
+// (decay 3, prune after 2), layer 1 at 120 (decay 2, prune after 1),
+// layer 2 at 40 (decay 4, pruning off). The scalar defaults are set to
+// values no layer uses (`v_th 999`, `decay 5`, `prune after 7`), so any
+// code path that falls back to the shared scalars instead of the
+// per-layer resolution drifts loudly. Constants were generated from the
+// Python transliteration in `tools/gen_golden_fixtures.py`, which first
+// reproduces all 18 pre-existing fixtures bit-for-bit (validating the
+// transliteration) before emitting these. Two configs pin the two
+// schedule modes: `hetero` (EndOfStep — also cross-checked against the
+// behavioral stack) and `hetero_fire` (Immediate mid-walk fires).
+
+/// Closed-form 3-layer fixture stack: block diagonals at +42/+90/+70 with
+/// deterministic small noise elsewhere (mirrored in the generator).
+fn hetero_fixture_stack() -> WeightStack {
+    let w0 = (0..IMG_PIXELS * 14)
+        .map(|k| {
+            let (i, h) = (k / 14, k % 14);
+            if i / 56 == h {
+                42
+            } else {
+                ((i * 23 + h * 7) % 17) as i32 - 8
+            }
+        })
+        .collect();
+    let w1 = (0..14 * 12)
+        .map(|k| {
+            let (h, m) = (k / 12, k % 12);
+            if m == h % 12 {
+                90
+            } else {
+                ((h * 13 + m * 3) % 11) as i32 - 5
+            }
+        })
+        .collect();
+    let w2 = (0..12 * 10)
+        .map(|k| {
+            let (m, j) = (k / 10, k % 10);
+            if j == m % 10 {
+                70
+            } else {
+                ((m * 7 + j * 11) % 13) as i32 - 6
+            }
+        })
+        .collect();
+    WeightStack::from_layers(vec![
+        WeightMatrix::from_rows(IMG_PIXELS, 14, 9, w0).unwrap(),
+        WeightMatrix::from_rows(14, 12, 9, w1).unwrap(),
+        WeightMatrix::from_rows(12, 10, 9, w2).unwrap(),
+    ])
+    .unwrap()
+}
+
+fn hetero_fixture_config(name: &str) -> SnnConfig {
+    let base = SnnConfig::paper()
+        .with_topology(vec![784, 14, 12, 10])
+        .with_timesteps(8)
+        // Deliberately unused scalars: every layer overrides all three.
+        .with_v_th(999)
+        .with_decay_shift(5)
+        .with_prune(PruneMode::AfterFires { after_spikes: 7 })
+        .with_layer_params(vec![
+            LayerParams {
+                v_th: Some(260),
+                decay_shift: Some(3),
+                prune: Some(PruneMode::AfterFires { after_spikes: 2 }),
+            },
+            LayerParams {
+                v_th: Some(120),
+                decay_shift: Some(2),
+                prune: Some(PruneMode::AfterFires { after_spikes: 1 }),
+            },
+            LayerParams { v_th: Some(40), decay_shift: Some(4), prune: Some(PruneMode::Off) },
+        ]);
+    match name {
+        "hetero" => base,
+        "hetero_fire" => base.with_fire_mode(FireMode::Immediate),
+        other => panic!("unknown hetero fixture config {other}"),
+    }
+}
+
+struct HeteroGoldenCase {
+    config: &'static str,
+    image: &'static str,
+    seed: u32,
+    l0_counts: [u32; 14],
+    l1_counts: [u32; 12],
+    counts: [u32; 10],
+    winner: u8,
+    cycles: u64,
+}
+
+/// Cycle budget: (784+1+1) + (14+1+1) + (12+1+1) = 816 clocks per
+/// timestep, 6528 over the 8-step window for every case.
+const HETERO_GOLDEN_CASES: &[HeteroGoldenCase] = &[
+    HeteroGoldenCase {
+        config: "hetero",
+        image: "ramp",
+        seed: 0x1111_2222,
+        l0_counts: [1, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2],
+        l1_counts: [1, 1, 0, 0, 0, 1, 0, 1, 0, 1, 0, 1],
+        counts: [1, 2, 0, 0, 0, 1, 0, 1, 0, 1],
+        winner: 1,
+        cycles: 6528,
+    },
+    HeteroGoldenCase {
+        config: "hetero",
+        image: "rev",
+        seed: 0x3333_4444,
+        l0_counts: [2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 1],
+        l1_counts: [1, 0, 0, 1, 0, 1, 1, 1, 0, 1, 1, 0],
+        counts: [1, 0, 0, 1, 0, 1, 1, 1, 0, 1],
+        winner: 0,
+        cycles: 6528,
+    },
+    HeteroGoldenCase {
+        config: "hetero",
+        image: "band",
+        seed: 0x5555_6666,
+        l0_counts: [2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2],
+        l1_counts: [1, 1, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0],
+        counts: [1, 1, 0, 0, 0, 1, 0, 0, 0, 0],
+        winner: 0,
+        cycles: 6528,
+    },
+    HeteroGoldenCase {
+        config: "hetero_fire",
+        image: "ramp",
+        seed: 0x1111_2222,
+        l0_counts: [1, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2],
+        l1_counts: [0, 1, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0],
+        counts: [0, 1, 1, 0, 0, 0, 0, 0, 0, 0],
+        winner: 1,
+        cycles: 6528,
+    },
+    HeteroGoldenCase {
+        config: "hetero_fire",
+        image: "rev",
+        seed: 0x3333_4444,
+        l0_counts: [2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 1],
+        l1_counts: [1, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0],
+        counts: [1, 0, 0, 0, 0, 0, 0, 0, 0, 0],
+        winner: 0,
+        cycles: 6528,
+    },
+    HeteroGoldenCase {
+        config: "hetero_fire",
+        image: "band",
+        seed: 0x5555_6666,
+        l0_counts: [2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2, 2],
+        l1_counts: [1, 1, 1, 1, 1, 0, 0, 0, 0, 0, 1, 1],
+        counts: [2, 2, 1, 1, 1, 0, 0, 0, 0, 0],
+        winner: 0,
+        cycles: 6528,
+    },
+];
+
+#[test]
+fn hetero_run_fast_matches_pinned_golden_vectors() {
+    for case in HETERO_GOLDEN_CASES {
+        let cfg = hetero_fixture_config(case.config);
+        let img = fixture_image(case.image);
+        let mut core = RtlCore::new(cfg, hetero_fixture_stack()).unwrap();
+        let r = core.run_fast(&img, case.seed).unwrap();
+        let tag = format!("{}/{}", case.config, case.image);
+        assert_eq!(
+            r.spike_counts_by_layer[0], case.l0_counts,
+            "{tag}: layer-0 spike counts drifted"
+        );
+        assert_eq!(
+            r.spike_counts_by_layer[1], case.l1_counts,
+            "{tag}: layer-1 spike counts drifted"
+        );
+        assert_eq!(r.spike_counts, case.counts, "{tag}: output counts drifted");
+        assert_eq!(r.class, case.winner, "{tag}: winner drifted");
+        assert_eq!(r.cycles, case.cycles, "{tag}: cycle count drifted");
+    }
+}
+
+#[test]
+fn hetero_cycle_path_matches_pinned_golden_vectors() {
+    // The same constants through the cycle-stepped FSM: a per-layer
+    // parameter drift that hits only one engine is localized immediately.
+    for case in HETERO_GOLDEN_CASES {
+        let cfg = hetero_fixture_config(case.config);
+        let img = fixture_image(case.image);
+        let mut core = RtlCore::new(cfg, hetero_fixture_stack()).unwrap();
+        let r = core.run(&img, case.seed).unwrap();
+        let tag = format!("{}/{}", case.config, case.image);
+        assert_eq!(r.spike_counts_by_layer[0], case.l0_counts, "{tag}: cycle-path layer 0");
+        assert_eq!(r.spike_counts_by_layer[1], case.l1_counts, "{tag}: cycle-path layer 1");
+        assert_eq!(r.spike_counts, case.counts, "{tag}: cycle-path output counts");
+        assert_eq!(r.class, case.winner, "{tag}: cycle-path winner");
+        assert_eq!(r.cycles, case.cycles, "{tag}: cycle-path cycle count");
+    }
+}
+
+#[test]
+fn hetero_behavioral_model_matches_pinned_golden_vectors() {
+    // The chained behavioral stack implements the architectural contract
+    // (EndOfStep firing, per-timestep leak) — the `hetero` config is
+    // exactly that, so its constants pin the behavioral per-layer
+    // resolution too (the third engine cross-check).
+    for case in HETERO_GOLDEN_CASES.iter().filter(|c| c.config == "hetero") {
+        let cfg = hetero_fixture_config(case.config);
+        let img = fixture_image(case.image);
+        let net = BehavioralNet::new(cfg, hetero_fixture_stack()).unwrap();
+        let out = net.classify(&img, case.seed);
+        let tag = format!("behavioral-{}/{}", case.config, case.image);
+        assert_eq!(out.spike_counts, case.counts, "{tag}: spike counts drifted");
+        assert_eq!(out.class, case.winner, "{tag}: winner drifted");
+    }
+}
+
+#[test]
+fn hetero_stack_artifact_roundtrips_through_snnw_v3() {
+    // The v3 per-layer parameter block must round-trip the heterogeneous
+    // calibration, and the reloaded config must reproduce a pinned case.
+    let dir = std::env::temp_dir().join(format!("snn_golden_hetero_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("weights_hetero.bin");
+    let cfg = hetero_fixture_config("hetero");
+    let art = codec::WeightStackArtifact {
+        stack: hetero_fixture_stack(),
+        v_th: cfg.v_th,
+        decay_shift: cfg.decay_shift,
+        timesteps: cfg.timesteps,
+        prune_after: 7,
+        layer_params: cfg.layer_params.clone(),
+    };
+    codec::save_weight_stack(&path, &art).unwrap();
+    let back = codec::load_weight_stack(&path).unwrap();
+    assert_eq!(back.layer_params, art.layer_params, "v3 param block drifted");
+
+    let case = &HETERO_GOLDEN_CASES[0]; // hetero/ramp
+    // The artifact's config (scalars + v3 block + paper scheduling
+    // defaults) is exactly the fixture's EndOfStep config.
+    let mut core = RtlCore::new(back.config(), back.stack).unwrap();
+    let r = core.run_fast(&fixture_image(case.image), case.seed).unwrap();
+    assert_eq!(r.spike_counts, case.counts, "reloaded v3 config diverges from golden");
     assert_eq!(r.class, case.winner);
 }
 

@@ -1,0 +1,280 @@
+#!/usr/bin/env python3
+"""Golden-fixture generator: an independent transliteration of the
+documented architectural semantics (encoder, LIF datapath, layered
+schedule, pruning controller) used to derive the checked-in constants in
+rust/tests/golden.rs.
+
+Protocol (same as PRs 2-3): the transliteration must first reproduce the
+existing pinned fixtures bit-for-bit -- all 9 single-layer cases and all
+9 two-layer cases -- before any newly generated constants are trusted.
+Run with no arguments; it validates, then prints the heterogeneous
+per-layer fixture table.
+"""
+
+M32 = 0xFFFFFFFF
+
+def splitmix32(x):
+    z = (x + 0x9E3779B9) & M32
+    z = ((z ^ (z >> 16)) * 0x85EBCA6B) & M32
+    z = ((z ^ (z >> 13)) * 0xC2B2AE35) & M32
+    return (z ^ (z >> 16)) & M32
+
+def xorshift32_step(x):
+    x ^= (x << 13) & M32
+    x ^= x >> 17
+    x ^= (x << 5) & M32
+    return x & M32
+
+def pixel_seed(seed, index):
+    s = splitmix32((seed ^ (index * 0x9E3779B9 & M32)) & M32)
+    return s if s != 0 else 0xDEADBEEF
+
+IMG_PIXELS = 784
+
+def fixture_image(kind):
+    px = []
+    for i in range(IMG_PIXELS):
+        if kind == "ramp":
+            px.append((i * 255) // 783)
+        elif kind == "rev":
+            px.append(255 - (i * 255) // 783)
+        elif kind == "band":
+            px.append(255 if 300 <= i < 500 else 30)
+        else:
+            raise ValueError(kind)
+    return px
+
+def fixture_weights_single():
+    w = []
+    for i in range(IMG_PIXELS):
+        row = []
+        for j in range(10):
+            row.append(48 if i // 79 == j else ((i * 31 + j * 17) % 23) - 11)
+        w.append(row)
+    return [w]
+
+def deep_fixture_stack():
+    w0 = []
+    for i in range(IMG_PIXELS):
+        row = []
+        for h in range(12):
+            row.append(44 if i // 66 == h else ((i * 29 + h * 13) % 19) - 9)
+        w0.append(row)
+    w1 = []
+    for h in range(12):
+        row = []
+        for j in range(10):
+            row.append(100 if j == h % 10 else ((h * 11 + j * 5) % 15) - 7)
+        w1.append(row)
+    return [w0, w1]
+
+def hetero_fixture_stack():
+    """3 weight layers, [784, 14, 12, 10]."""
+    w0 = []
+    for i in range(IMG_PIXELS):
+        row = []
+        for h in range(14):
+            row.append(42 if i // 56 == h else ((i * 23 + h * 7) % 17) - 8)
+        w0.append(row)
+    w1 = []
+    for h in range(14):
+        row = []
+        for m in range(12):
+            row.append(90 if m == h % 12 else ((h * 13 + m * 3) % 11) - 5)
+        w1.append(row)
+    w2 = []
+    for m in range(12):
+        row = []
+        for j in range(10):
+            row.append(70 if j == m % 10 else ((m * 7 + j * 11) % 13) - 6)
+        w2.append(row)
+    return [w0, w1, w2]
+
+def sat(v, acc_bits):
+    mx = (1 << (acc_bits - 1)) - 1
+    return max(-mx, min(mx, v))
+
+def leak(v, n):
+    return v - (v >> n)   # python >> on negatives is arithmetic (floor)
+
+class Layer:
+    def __init__(self, n, v_th, decay, prune_after, acc_bits):
+        self.n = n
+        self.v_th = v_th
+        self.decay = decay
+        self.prune_after = prune_after  # 0 = off
+        self.acc_bits = acc_bits
+        self.acc = [0] * n
+        self.count = [0] * n
+        self.enabled = [True] * n
+        self.step_fired = [False] * n  # OR-accumulated over the timestep
+
+    def add_row(self, row):
+        for j in range(self.n):
+            if self.enabled[j]:
+                self.acc[j] = sat(self.acc[j] + row[j], self.acc_bits)
+
+    def leak_enabled(self):
+        for j in range(self.n):
+            if self.enabled[j]:
+                self.acc[j] = leak(self.acc[j], self.decay)
+
+    def latch_prune(self):
+        if self.prune_after:
+            for j in range(self.n):
+                if self.count[j] >= self.prune_after:
+                    self.enabled[j] = False
+
+    def fire_check(self):
+        fired = [False] * self.n
+        for j in range(self.n):
+            if self.enabled[j] and self.acc[j] >= self.v_th:
+                fired[j] = True
+                self.count[j] += 1
+                self.acc[j] = 0
+        for j in range(self.n):
+            self.step_fired[j] |= fired[j]
+        self.latch_prune()
+        return fired
+
+    def immediate_fire(self):
+        any_f = False
+        for j in range(self.n):
+            if self.enabled[j] and self.acc[j] >= self.v_th:
+                self.count[j] += 1
+                self.acc[j] = 0
+                self.step_fired[j] = True
+                any_f = True
+        if any_f:
+            self.latch_prune()
+
+def run_core(stack, image, seed, timesteps, fire_mode, leak_row_len,
+             layer_params, acc_bits=24):
+    """fire_mode: 'end' | 'imm'; leak_row_len: None or row length (layer 0
+    only); layer_params: list of (v_th, decay, prune_after) per layer."""
+    n_layers = len(stack)
+    widths = [len(stack[l][0]) for l in range(n_layers)]
+    layers = [Layer(widths[l], *layer_params[l], acc_bits) for l in range(n_layers)]
+    states = [pixel_seed(seed, i) for i in range(IMG_PIXELS)]
+    cycles = 0
+    for _t in range(timesteps):
+        for l in range(n_layers):
+            n_in = IMG_PIXELS if l == 0 else widths[l - 1]
+            # integrate walk, one input lane per clock (k = 1)
+            for p in range(n_in):
+                if l == 0:
+                    states[p] = xorshift32_step(states[p])
+                    spike = image[p] > (states[p] & 0xFF)
+                else:
+                    spike = layers[l - 1].step_fired[p]
+                if spike:
+                    layers[l].add_row(stack[l][p])
+                cycles += 1
+                if fire_mode == "imm":
+                    layers[l].immediate_fire()
+                row_boundary = (l == 0 and leak_row_len is not None
+                                and (p + 1) % leak_row_len == 0)
+                if p + 1 == n_in or row_boundary:
+                    layers[l].leak_enabled()
+                    cycles += 1
+            # fire clock
+            if fire_mode == "end":
+                layers[l].fire_check()
+            else:
+                layers[l].latch_prune()
+            cycles += 1
+        for l in range(n_layers):
+            layers[l].step_fired = [False] * widths[l]
+    counts = [layers[l].count for l in range(n_layers)]
+    winner = max(range(widths[-1]), key=lambda j: (counts[-1][j], -j))
+    return counts, winner, cycles
+
+# --- validation against the pinned single-layer fixtures -------------------
+
+SINGLE_CASES = [
+    ("fire", "ramp", 0x11112222, [0, 0, 0, 1, 1, 1, 1, 1, 1, 1], 3, 6288),
+    ("fire", "rev", 0x33334444, [1, 1, 1, 1, 1, 1, 1, 0, 0, 0], 0, 6288),
+    ("fire", "band", 0x55556666, [0, 0, 0, 0, 1, 1, 1, 0, 0, 0], 4, 6288),
+    ("leak", "ramp", 0x11112222, [0, 0, 0, 0, 6, 8, 8, 8, 8, 8], 5, 6504),
+    ("leak", "rev", 0x33334444, [0, 0, 0, 4, 8, 8, 8, 7, 8, 0], 4, 6504),
+    ("leak", "band", 0x55556666, [0, 0, 0, 0, 8, 8, 8, 1, 5, 8], 4, 6504),
+    ("prune", "ramp", 0x11112222, [0, 2, 2, 2, 2, 2, 2, 2, 2, 2], 1, 6288),
+    ("prune", "rev", 0x33334444, [2, 2, 2, 2, 2, 2, 2, 2, 2, 0], 0, 6288),
+    ("prune", "band", 0x55556666, [2, 2, 2, 2, 2, 2, 2, 2, 2, 2], 0, 6288),
+]
+
+def single_cfg(name):
+    # (v_th, decay, prune_after), fire_mode, row_len
+    if name == "fire":
+        return (6000, 3, 1), "imm", None
+    if name == "leak":
+        return (200, 3, 0), "end", 28
+    if name == "prune":
+        return (800, 3, 2), "end", None
+    raise ValueError(name)
+
+DEEP_CASES = [
+    ("deep", "ramp", 0x11112222,
+     [2, 6, 8, 8, 8, 8, 8, 8, 8, 8, 8, 8], [2, 3, 1, 2, 2, 1, 1, 1, 1, 1], 1, 6400),
+    ("deep", "rev", 0x33334444,
+     [8, 8, 8, 8, 8, 8, 8, 8, 8, 7, 6, 0], [3, 1, 1, 2, 1, 1, 2, 1, 1, 1], 0, 6400),
+    ("deep", "band", 0x55556666,
+     [5, 3, 6, 5, 8, 8, 8, 8, 4, 4, 6, 4], [2, 1, 1, 1, 1, 1, 1, 1, 0, 0], 0, 6400),
+    ("deep_prune", "ramp", 0x11112222,
+     [2] * 12, [1, 2, 0, 0, 0, 0, 0, 0, 0, 0], 1, 6400),
+    ("deep_prune", "rev", 0x33334444,
+     [2] * 11 + [1], [2, 1, 0, 0, 0, 0, 0, 0, 0, 0], 0, 6400),
+    ("deep_prune", "band", 0x55556666,
+     [2] * 12, [2, 1, 0, 0, 0, 0, 0, 0, 0, 0], 0, 6400),
+    ("deep_fire", "ramp", 0x11112222,
+     [2] * 12, [1, 1, 0, 0, 0, 0, 0, 0, 0, 0], 0, 6400),
+    ("deep_fire", "rev", 0x33334444,
+     [2] * 12, [1, 1, 0, 0, 0, 0, 0, 0, 0, 0], 0, 6400),
+    ("deep_fire", "band", 0x55556666,
+     [2] * 12, [1, 2, 0, 1, 0, 0, 0, 0, 0, 1], 1, 6400),
+]
+
+def deep_cfg(name):
+    if name == "deep":
+        return (300, 3, 0), "end"
+    if name == "deep_prune":
+        return (180, 3, 2), "end"
+    if name == "deep_fire":
+        return (150, 3, 2), "imm"
+    raise ValueError(name)
+
+def validate():
+    stack = fixture_weights_single()
+    for cfg, img, seed, counts, winner, cycles in SINGLE_CASES:
+        params, mode, row = single_cfg(cfg)
+        got_c, got_w, got_cy = run_core(
+            stack, fixture_image(img), seed, 8, mode, row, [params])
+        assert got_c[-1] == counts, (cfg, img, got_c[-1], counts)
+        assert got_w == winner and got_cy == cycles, (cfg, img, got_w, got_cy)
+    dstack = deep_fixture_stack()
+    for cfg, img, seed, hidden, counts, winner, cycles in DEEP_CASES:
+        params, mode = deep_cfg(cfg)
+        got_c, got_w, got_cy = run_core(
+            dstack, fixture_image(img), seed, 8, mode, None, [params, params])
+        assert got_c[0] == hidden, (cfg, img, got_c[0], hidden)
+        assert got_c[1] == counts, (cfg, img, got_c[1], counts)
+        assert got_w == winner and got_cy == cycles, (cfg, img, got_w, got_cy)
+    print("validated: all 18 pinned fixtures reproduced bit-for-bit")
+
+# --- heterogeneous per-layer fixtures --------------------------------------
+
+HETERO_PARAMS = [(260, 3, 2), (120, 2, 1), (40, 4, 0)]
+
+def hetero():
+    stack = hetero_fixture_stack()
+    for mode_name, mode in [("hetero", "end"), ("hetero_fire", "imm")]:
+        for img in ["ramp", "rev", "band"]:
+            seed = {"ramp": 0x11112222, "rev": 0x33334444, "band": 0x55556666}[img]
+            counts, winner, cycles = run_core(
+                stack, fixture_image(img), seed, 8, mode, None, HETERO_PARAMS)
+            print(f"{mode_name}/{img}: l0={counts[0]} l1={counts[1]} "
+                  f"l2={counts[2]} winner={winner} cycles={cycles}")
+
+if __name__ == "__main__":
+    validate()
+    hetero()
