@@ -19,19 +19,35 @@
 //!   per-layer parameterization acceptance row — plus 3-layer fast-path
 //!   images/sec,
 //!
-//! and writes the results to `BENCH_4.json` (plus stdout; the emitted
+//! * **batched vs per-image engine throughput** at batch 1/8/32/64: one
+//!   `RtlCore::run_fast_batch` sweep for the whole batch vs the same
+//!   images through a per-image `run_fast` loop — the row-reuse
+//!   acceptance numbers of the batch-parallel engine PR (coordinator rows
+//!   above run the batched backends end to end),
+//!
+//! * **paced-arrival (open-loop) tail latency**: a fixed-rate request
+//!   clock with latency measured from each request's *scheduled* arrival,
+//!   not its send — free of coordinated omission, which the closed-loop
+//!   rows (kept for comparison) structurally understate at saturation,
+//!
+//! * the **calibrated fan-out crossover** (`FanoutPolicy::calibrated`)
+//!   measured for the RTL backend,
+//!
+//! and writes the results to `BENCH_5.json` (plus stdout; the emitted
 //! name is the single `BENCH_NAME` constant). BENCH_1 recorded qps only;
 //! BENCH_2 added the percentile columns; BENCH_3 added the depth rows of
-//! the N-layer refactor; BENCH_4 supersedes them with the per-layer
-//! threshold/pruning rows (EXPERIMENTS.md §Depth).
+//! the N-layer refactor; BENCH_4 the per-layer threshold/pruning rows;
+//! BENCH_5 supersedes them with the batched-engine and open-loop rows
+//! (EXPERIMENTS.md §Batch).
 
+use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use snn_rtl::bench::{black_box, Bench};
 use snn_rtl::config::PruneMode;
 use snn_rtl::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, FanoutPolicy, Request, RtlBackend,
+    BatchPolicy, Coordinator, CoordinatorConfig, FanoutPolicy, Histogram, Request, RtlBackend,
 };
 use snn_rtl::data::{DigitGen, Image};
 use snn_rtl::experiments::{
@@ -44,7 +60,7 @@ use snn_rtl::snn::EarlyExit;
 use snn_rtl::SnnConfig;
 
 /// The emitted report name — bump this (one place) when a PR adds rows.
-const BENCH_NAME: &str = "BENCH_4";
+const BENCH_NAME: &str = "BENCH_5";
 
 fn weights(seed: u32) -> WeightMatrix {
     let mut rng = Xorshift32::new(seed);
@@ -114,6 +130,121 @@ fn drive_coordinator(
     CoordRow { qps, p50_us: snap.latency_p50_us, p99_us: snap.latency_p99_us, steals: snap.steals }
 }
 
+struct PacedRow {
+    offered_qps: f64,
+    achieved_qps: f64,
+    p50_us: u64,
+    p99_us: u64,
+    max_us: u64,
+    rejected: u64,
+}
+
+/// Open-loop (paced-arrival) load generator: requests fire on a fixed-rate
+/// clock regardless of how fast earlier responses come back, and each
+/// latency is measured from the request's *scheduled* arrival — so a slow
+/// server stalls the measurement, not the arrival process. The closed-loop
+/// driver above, by contrast, only sends request `i+1` after `i` was
+/// accepted, which silently thins the arrival rate exactly when the server
+/// is slow (coordinated omission) and under-reports tail latency. A
+/// request rejected by backpressure is counted (`rejected`), not retried —
+/// an open-loop client does not wait for permission to exist.
+#[allow(clippy::too_many_arguments)]
+fn drive_coordinator_paced(
+    cfg: &SnnConfig,
+    engine_weights: WeightStack,
+    workers: usize,
+    batch: BatchPolicy,
+    fanout: FanoutPolicy,
+    offered_qps: f64,
+    requests: usize,
+    images: &[Image],
+) -> PacedRow {
+    let backend = Arc::new(RtlBackend::new(cfg.clone(), engine_weights).unwrap());
+    let coord = Coordinator::start(
+        backend,
+        CoordinatorConfig { workers, queue_depth: 4096, batch, early: EarlyExit::Off, fanout },
+    );
+    let handle = coord.handle();
+    let latency = Arc::new(Histogram::default());
+    // Collector thread: polls every pending reply with `try_recv` instead
+    // of draining serially — responses complete out of submission order
+    // across workers, and a serial `recv` would attribute an earlier slow
+    // request's completion time to later fast ones (head-of-line blocking
+    // in the *measurement*). Polling bounds the timestamp error by the
+    // poll interval, independent of completion order.
+    let (tx, rx) = mpsc::channel::<(Instant, mpsc::Receiver<_>)>();
+    let collector = {
+        let latency = Arc::clone(&latency);
+        std::thread::spawn(move || {
+            let mut pending: Vec<(Instant, mpsc::Receiver<_>)> = Vec::new();
+            let mut open = true;
+            let mut done = 0u64;
+            while open || !pending.is_empty() {
+                let mut progressed = false;
+                loop {
+                    match rx.try_recv() {
+                        Ok(entry) => {
+                            pending.push(entry);
+                            progressed = true;
+                        }
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+                pending.retain(|(scheduled, reply)| match reply.try_recv() {
+                    Ok(_) => {
+                        latency.record(scheduled.elapsed());
+                        done += 1;
+                        progressed = true;
+                        false
+                    }
+                    Err(mpsc::TryRecvError::Empty) => true,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        progressed = true;
+                        false // dropped reply: not a completion
+                    }
+                });
+                if !progressed {
+                    std::thread::sleep(Duration::from_micros(20));
+                }
+            }
+            done
+        })
+    };
+    let interval = Duration::from_secs_f64(1.0 / offered_qps);
+    let t0 = Instant::now();
+    let mut rejected = 0u64;
+    for i in 0..requests {
+        let scheduled = t0 + interval.mul_f64(i as f64);
+        while let Some(wait) = scheduled.checked_duration_since(Instant::now()) {
+            if wait.is_zero() {
+                break;
+            }
+            std::thread::sleep(wait);
+        }
+        let image = images[i % images.len()].clone();
+        match handle.submit(Request { image, seed: Some(i as u32 + 1) }) {
+            Ok(reply) => tx.send((scheduled, reply)).unwrap(),
+            Err(_) => rejected += 1, // open-loop: the request is lost, not retried
+        }
+    }
+    drop(tx);
+    let done = collector.join().unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    PacedRow {
+        offered_qps,
+        achieved_qps: done as f64 / wall,
+        p50_us: latency.quantile_us(0.50),
+        p99_us: latency.quantile_us(0.99),
+        max_us: latency.max_us(),
+        rejected,
+    }
+}
+
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let bench = if quick { Bench::quick() } else { Bench::default() };
@@ -138,6 +269,51 @@ fn main() {
     let speedup = cycle.mean_ns / fast.mean_ns;
     println!("{}  |  {cycle_ips:.1} images/s", cycle.report());
     println!("{}  |  {fast_ips:.1} images/s  ({speedup:.1}x)", fast.report());
+
+    // Batched vs per-image engine throughput: one `run_fast_batch` sweep
+    // for the whole batch (each weight row walked once per timestep)
+    // against the same images through the per-image fast path.
+    let batch_gen = DigitGen::new(9);
+    let mut batched_rows: Vec<(usize, f64, f64)> = Vec::new();
+    for bs in [1usize, 8, 32, 64] {
+        let batch_images: Vec<Image> =
+            (0..bs).map(|i| batch_gen.sample((i % 10) as u8, i)).collect();
+        let refs: Vec<&Image> = batch_images.iter().collect();
+        let mut core = RtlCore::new(cfg.clone(), weights(7)).unwrap();
+        let mut round = 0u32;
+        let batched = bench.run(&format!("rtl_fast_batch_b{bs}"), || {
+            round = round.wrapping_add(1);
+            let seeds: Vec<u32> =
+                (0..bs as u32).map(|i| round.wrapping_mul(131).wrapping_add(i)).collect();
+            black_box(core.run_fast_batch(&refs, &seeds, EarlyExit::Off).unwrap());
+        });
+        let mut core = RtlCore::new(cfg.clone(), weights(7)).unwrap();
+        let mut round = 0u32;
+        let per_image = bench.run(&format!("rtl_fast_per_image_b{bs}"), || {
+            round = round.wrapping_add(1);
+            for (i, img) in batch_images.iter().enumerate() {
+                let seed = round.wrapping_mul(131).wrapping_add(i as u32);
+                black_box(core.run_fast(img, seed).unwrap());
+            }
+        });
+        let batched_ips = batched.throughput(bs as f64);
+        let per_image_ips = per_image.throughput(bs as f64);
+        println!(
+            "batched_engine_b{bs}: batched {batched_ips:.1} images/s  |  per-image \
+             {per_image_ips:.1} images/s  ({:.2}x)",
+            batched_ips / per_image_ips
+        );
+        batched_rows.push((bs, batched_ips, per_image_ips));
+    }
+
+    // Adaptive fan-out crossover, measured against the (batched) RTL
+    // backend: the policy the fixed 32/4 defaults would be replaced by.
+    let probe_backend = RtlBackend::new(cfg.clone(), weights(7)).unwrap();
+    let calibrated = FanoutPolicy::calibrated(&probe_backend, 4);
+    println!(
+        "calibrated_fanout: min_batch {}  max_parts {}",
+        calibrated.min_batch, calibrated.max_parts
+    );
 
     // Depth: single-layer vs the MLP-shaped two-layer pipeline, engine
     // level first (images/sec of the fast path).
@@ -285,6 +461,31 @@ fn main() {
         fan_on.qps, fan_on.p50_us, fan_on.p99_us
     );
 
+    // Open-loop (paced-arrival) tail latency at ~70% of the closed-loop
+    // 4-worker capacity: latency measured from each request's scheduled
+    // arrival, so queueing delay the closed-loop driver hides is on the
+    // record. The closed-loop w4 row above is the comparison point.
+    let closed_w4_qps = scaling.iter().find(|(w, _)| *w == 4).map(|(_, r)| r.qps).unwrap();
+    let offered = (closed_w4_qps * 0.7).max(50.0);
+    let paced_requests =
+        ((offered * if quick { 1.0 } else { 3.0 }) as usize).clamp(100, 8000);
+    let paced = drive_coordinator_paced(
+        &cfg,
+        weights(7).into(),
+        4,
+        small_batch,
+        FanoutPolicy::default(),
+        offered,
+        paced_requests,
+        &images,
+    );
+    println!(
+        "paced_arrival_w4: offered {:.0} req/s  achieved {:.0} req/s  p50 {} µs  \
+         p99 {} µs  max {} µs  rejected {}",
+        paced.offered_qps, paced.achieved_qps, paced.p50_us, paced.p99_us, paced.max_us,
+        paced.rejected
+    );
+
     // Hand-rolled JSON (no serde in the offline crate set).
     let mut json = String::from("{\n");
     json.push_str(&format!("  \"bench\": \"{BENCH_NAME}\",\n"));
@@ -312,6 +513,29 @@ fn main() {
         "      \"per_layer_v_th_prune_accuracy\": {acc_cal_prune:.3}\n"
     ));
     json.push_str("    }\n");
+    json.push_str("  },\n");
+    json.push_str("  \"batched_engine\": {\n");
+    for (i, (bs, batched_ips, per_image_ips)) in batched_rows.iter().enumerate() {
+        let comma = if i + 1 == batched_rows.len() { "" } else { "," };
+        json.push_str(&format!(
+            "    \"b{bs}\": {{ \"batched_images_per_s\": {batched_ips:.2}, \
+             \"per_image_images_per_s\": {per_image_ips:.2}, \"speedup\": {:.3} }}{comma}\n",
+            batched_ips / per_image_ips
+        ));
+    }
+    json.push_str("  },\n");
+    json.push_str(&format!(
+        "  \"calibrated_fanout\": {{ \"min_batch\": {}, \"max_parts\": {} }},\n",
+        calibrated.min_batch, calibrated.max_parts
+    ));
+    json.push_str("  \"paced_arrival_w4\": {\n");
+    json.push_str(&format!("    \"offered_qps\": {:.2},\n", paced.offered_qps));
+    json.push_str(&format!("    \"achieved_qps\": {:.2},\n", paced.achieved_qps));
+    json.push_str(&format!("    \"p50_us\": {},\n", paced.p50_us));
+    json.push_str(&format!("    \"p99_us\": {},\n", paced.p99_us));
+    json.push_str(&format!("    \"max_us\": {},\n", paced.max_us));
+    json.push_str(&format!("    \"rejected\": {},\n", paced.rejected));
+    json.push_str(&format!("    \"closed_loop_w4_qps\": {closed_w4_qps:.2}\n"));
     json.push_str("  },\n");
     json.push_str("  \"coordinator_rtl\": {\n");
     for (i, (workers, row)) in scaling.iter().enumerate() {

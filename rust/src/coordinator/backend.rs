@@ -1,15 +1,23 @@
 //! Inference backends the coordinator can schedule onto.
 //!
-//! | backend | substrate | early exit | use |
-//! |---|---|---|---|
-//! | [`BehavioralBackend`] | pure-Rust golden model | per-timestep | exactness + speed |
-//! | [`RtlBackend`] | RTL core (fast-path engine) | per-timestep | cycle/energy accounting |
-//! | [`XlaBackend`] | AOT JAX/Pallas via PJRT | per-chunk | the compiled L2/L1 stack |
+//! | backend | substrate | early exit | batch dimension | use |
+//! |---|---|---|---|---|
+//! | [`BehavioralBackend`] | batched golden model ([`LifBatchStack`]) | per-timestep, per-image | one `step_batch` sweep per timestep | exactness + speed |
+//! | [`RtlBackend`] | RTL core batch engine ([`RtlCore::run_fast_batch`]) | per-timestep, per-image | one row walk serves the sub-batch | cycle/energy accounting |
+//! | [`XlaBackend`] | AOT JAX/Pallas via PJRT | per-chunk | compiled batch dim (padded chunks) | the compiled L2/L1 stack |
 //!
 //! All three implement the same architectural contract, so the coordinator
 //! (and the equivalence tests) can swap them freely. Backends are built
 //! from a [`WeightStack`], so any `SnnConfig::topology` depth serves —
 //! a bare [`WeightMatrix`] converts into the single-layer chain.
+//!
+//! The batch dimension survives the engine boundary: `classify_batch`
+//! hands the **whole sub-batch to one engine call**, which runs one
+//! timestep sweep for all of its images (each weight row fetched once per
+//! timestep, applied to every image whose input fired) instead of a
+//! per-image loop. Results are bit-exact with the sequential engines
+//! image for image — per-`(image, seed)` PRNG streams commute with
+//! batching (EXPERIMENTS.md §Batch).
 //!
 //! Concurrency: the behavioral and RTL backends keep their stateful
 //! engines in an [`InstancePool`] — each `classify_batch` checks a private
@@ -18,8 +26,9 @@
 //! coordinator's intra-batch fan-out relies on exactly this: each
 //! sub-batch of a split batch calls `classify_batch` concurrently and
 //! draws its own engine, so one large request burst spreads across the
-//! pool. The XLA backend still serializes (PJRT handles are `Send` but
-//! not `Sync`).
+//! pool — [`crate::coordinator::FanoutPolicy`] remains the *outer*
+//! parallelism tier above the engines' inner batch dimension. The XLA
+//! backend still serializes (PJRT handles are `Send` but not `Sync`).
 
 use std::sync::{Arc, Mutex};
 
@@ -29,7 +38,7 @@ use crate::error::Result;
 use crate::fixed::{WeightMatrix, WeightStack};
 use crate::rtl::{ActivityCounters, RtlCore};
 use crate::runtime::XlaSnn;
-use crate::snn::{BehavioralNet, EarlyExit, LifStack};
+use crate::snn::{BehavioralNet, EarlyExit, LifBatchStack};
 use crate::util::{margin_reached, priority_argmax};
 
 use super::pool::{default_pool_slots, InstancePool};
@@ -76,19 +85,21 @@ pub trait Backend: Send + Sync {
 
 // ---------------------------------------------------------------------------
 
-/// The behavioral golden model as a backend (per-image, early-exit
-/// capable). Worker threads check reusable [`LifStack`] instances out of a
-/// pool, so concurrent batches neither serialize nor clone layer state per
-/// request.
+/// The behavioral golden model as a backend (batched, early-exit
+/// capable). Worker threads check reusable [`LifBatchStack`] instances
+/// out of a pool and hand each whole sub-batch to **one**
+/// [`BehavioralNet::classify_batch_with`] engine pass, so concurrent
+/// batches neither serialize nor degrade to a per-image loop at the
+/// engine boundary.
 pub struct BehavioralBackend {
     net: BehavioralNet,
-    stacks: InstancePool<LifStack>,
+    stacks: InstancePool<LifBatchStack>,
 }
 
 impl BehavioralBackend {
     pub fn new(cfg: SnnConfig, weights: impl Into<WeightStack>) -> Result<Self> {
         let net = BehavioralNet::new(cfg, weights)?;
-        let proto = net.stack_prototype();
+        let proto = net.batch_prototype();
         let stacks = InstancePool::new(default_pool_slots(), move || proto.clone());
         Ok(BehavioralBackend { net, stacks })
     }
@@ -107,16 +118,14 @@ impl Backend for BehavioralBackend {
     ) -> Result<Vec<BackendOutput>> {
         let t = self.net.config().timesteps;
         let mut stack = self.stacks.checkout();
-        Ok(images
-            .iter()
-            .zip(seeds)
-            .map(|(img, &seed)| {
-                let c = self.net.classify_with(&mut stack, img, seed, t, early);
-                BackendOutput {
-                    class: c.class,
-                    spike_counts: c.spike_counts,
-                    steps_run: c.steps_run,
-                }
+        Ok(self
+            .net
+            .classify_batch_with(&mut stack, images, seeds, t, early)?
+            .into_iter()
+            .map(|c| BackendOutput {
+                class: c.class,
+                spike_counts: c.spike_counts,
+                steps_run: c.steps_run,
             })
             .collect())
     }
@@ -128,12 +137,14 @@ impl Backend for BehavioralBackend {
 
 // ---------------------------------------------------------------------------
 
-/// The RTL core as a backend, running the batched-timestep fast path
-/// ([`RtlCore::run_fast_early`] — bit-exact with the cycle engine by
-/// property test, with the serving-level margin policy applied between
-/// timesteps). Each worker's batch checks a private core out of the pool,
-/// so cycle-accounted serving scales with the coordinator's worker count
-/// instead of serializing on a single simulator instance.
+/// The RTL core as a backend, running the batch-parallel fast path
+/// ([`RtlCore::run_fast_batch`] — bit-exact with the sequential fast
+/// path image for image, itself bit-exact with the cycle engine, with
+/// the serving-level margin policy applied between timesteps per image).
+/// Each worker's batch checks a private core out of the pool and runs its
+/// whole sub-batch through one timestep sweep, so cycle-accounted serving
+/// scales with the coordinator's worker count *and* amortizes every
+/// weight-row fetch over the sub-batch.
 pub struct RtlBackend {
     cores: InstancePool<RtlCore>,
     cfg: SnnConfig,
@@ -206,18 +217,15 @@ impl Backend for RtlBackend {
         early: EarlyExit,
     ) -> Result<Vec<BackendOutput>> {
         let mut core = self.cores.checkout();
-        images
-            .iter()
-            .zip(seeds)
-            .map(|(img, &seed)| {
-                let r = core.run_fast_early(img, seed, early)?;
-                Ok(BackendOutput {
-                    class: r.class,
-                    spike_counts: r.spike_counts,
-                    steps_run: r.membrane_by_step.len() as u32,
-                })
+        Ok(core
+            .run_fast_batch(images, seeds, early)?
+            .into_iter()
+            .map(|r| BackendOutput {
+                class: r.class,
+                steps_run: r.membrane_by_step.len() as u32,
+                spike_counts: r.spike_counts,
             })
-            .collect()
+            .collect())
     }
 
     fn config(&self) -> &SnnConfig {
@@ -440,6 +448,29 @@ mod tests {
             any_early |= x.steps_run < 20;
         }
         assert!(any_early, "margin never triggered — the test exercises nothing");
+    }
+
+    #[test]
+    fn batched_backend_equals_singleton_calls() {
+        // The batch dimension must be invisible in the results: one call
+        // with 8 images equals 8 one-image calls, on both pooled batched
+        // backends, including per-image early exit.
+        let cfg = SnnConfig::paper().with_timesteps(5).with_prune(PruneMode::Off);
+        let beh = BehavioralBackend::new(cfg.clone(), test_weights()).unwrap();
+        let rtl = RtlBackend::new(cfg, test_weights()).unwrap();
+        let gen = DigitGen::new(17);
+        let images: Vec<Image> = (0..8).map(|i| gen.sample(i as u8, i)).collect();
+        let refs: Vec<&Image> = images.iter().collect();
+        let seeds: Vec<u32> = (0..8).map(|i| 50 + i).collect();
+        let early = EarlyExit::Margin { margin: 2, min_steps: 2 };
+        for backend in [&beh as &dyn Backend, &rtl as &dyn Backend] {
+            let batched = backend.classify_batch(&refs, &seeds, early).unwrap();
+            for i in 0..8 {
+                let solo =
+                    backend.classify_batch(&refs[i..=i], &seeds[i..=i], early).unwrap();
+                assert_eq!(batched[i], solo[0], "{} lane {i}", backend.name());
+            }
+        }
     }
 
     #[test]

@@ -80,6 +80,51 @@ impl FanoutPolicy {
             self.max_parts.min(n)
         }
     }
+
+    /// Approximate overhead of dispatching one fan-out sub-batch (scoped
+    /// thread spawn + join + reassembly). The calibration constant behind
+    /// [`FanoutPolicy::from_cost`].
+    pub const DISPATCH_COST: Duration = Duration::from_micros(120);
+
+    /// Derive the crossover from a *measured* per-image cost and the
+    /// engine pool's slot count — the adaptive replacement for the fixed
+    /// `32/4` defaults. Splitting a batch of `n` into two halves saves
+    /// `n/2 · c` of serialized compute and pays ~2 dispatches, so fan-out
+    /// starts earning its keep from `n > 4·D/c`: a slow backend (large
+    /// `c`) wants a low crossover, an echo-fast one a high crossover.
+    /// `max_parts` is the pool's slot count — more parts than engines
+    /// just queue. Deterministic given its inputs (the probe lives in
+    /// [`FanoutPolicy::calibrated`]).
+    pub fn from_cost(per_image: Duration, pool_slots: usize) -> FanoutPolicy {
+        let per_image_ns = per_image.as_nanos().max(1);
+        let min_batch = (4 * Self::DISPATCH_COST.as_nanos())
+            .div_ceil(per_image_ns)
+            .clamp(2, 1 << 16) as usize;
+        FanoutPolicy { min_batch, max_parts: pool_slots.max(1) }
+    }
+
+    /// One-shot measured calibration: probe the backend with a small
+    /// synthetic batch (mid-gray images, fixed seeds — deterministic
+    /// work), take the per-image wall cost, and derive the policy via
+    /// [`FanoutPolicy::from_cost`].
+    pub fn calibrated(backend: &dyn Backend, pool_slots: usize) -> FanoutPolicy {
+        const PROBE: usize = 4;
+        const REPS: u32 = 3;
+        let n = backend.config().n_inputs();
+        let images: Vec<Image> = (0..PROBE)
+            .map(|i| Image { label: 0, pixels: vec![64 + 32 * i as u8; n] })
+            .collect();
+        let refs: Vec<&Image> = images.iter().collect();
+        let seeds: Vec<u32> = (1..=PROBE as u32).collect();
+        // Warmup builds the pool instance and faults the weights in.
+        let _ = backend.classify_batch(&refs, &seeds, EarlyExit::Off);
+        let t0 = Instant::now();
+        for _ in 0..REPS {
+            let _ = backend.classify_batch(&refs, &seeds, EarlyExit::Off);
+        }
+        let per_image = t0.elapsed() / (REPS * PROBE as u32);
+        Self::from_cost(per_image, pool_slots)
+    }
 }
 
 /// Coordinator configuration.
@@ -243,6 +288,9 @@ fn worker_loop(
     cfg: CoordinatorConfig,
 ) {
     let mut batcher: Batcher<InFlight> = Batcher::new(cfg.batch);
+    // Per-worker steal-rotation cursor: the steal path touches no shared
+    // atomic — each worker's sweeps walk the siblings on its own schedule.
+    let mut steal_cursor = 0usize;
     loop {
         match batcher.poll(Instant::now()) {
             BatchDecision::Dispatch => {
@@ -250,7 +298,7 @@ fn worker_loop(
             }
             BatchDecision::Wait(timeout) => {
                 // Fill the forming batch: own shard first, then steal.
-                match queue.pop_some(id, batcher.remaining()) {
+                match queue.pop_some(id, batcher.remaining(), &mut steal_cursor) {
                     Popped::Items { items, stolen } => {
                         if stolen > 0 {
                             metrics.steals.fetch_add(stolen as u64, Ordering::Relaxed);
@@ -546,6 +594,86 @@ mod tests {
         let eager = FanoutPolicy { min_batch: 0, max_parts: 8 };
         assert_eq!(eager.parts_for(1), 1);
         assert_eq!(eager.parts_for(3), 3, "parts never exceed the batch size");
+    }
+
+    /// A stub backend whose per-image cost is known and fixed (busy-spin:
+    /// sleep granularity is far too coarse for µs-scale calibration).
+    struct FixedCostBackend {
+        cfg: SnnConfig,
+        per_image: Duration,
+    }
+
+    impl Backend for FixedCostBackend {
+        fn name(&self) -> &'static str {
+            "fixed-cost-stub"
+        }
+
+        fn classify_batch(
+            &self,
+            images: &[&Image],
+            seeds: &[u32],
+            _early: EarlyExit,
+        ) -> Result<Vec<BackendOutput>> {
+            let until = Instant::now() + self.per_image * images.len() as u32;
+            while Instant::now() < until {
+                std::hint::spin_loop();
+            }
+            Ok(images
+                .iter()
+                .zip(seeds)
+                .map(|(_, &s)| BackendOutput {
+                    class: (s % 10) as u8,
+                    spike_counts: vec![0; 10],
+                    steps_run: 1,
+                })
+                .collect())
+        }
+
+        fn config(&self) -> &SnnConfig {
+            &self.cfg
+        }
+    }
+
+    #[test]
+    fn calibrated_fanout_adapts_to_backend_cost() {
+        // The derivation is pure — pin the crossover math first.
+        assert_eq!(
+            FanoutPolicy::from_cost(Duration::from_micros(480), 4),
+            FanoutPolicy { min_batch: 2, max_parts: 4 }
+        );
+        let fast = FanoutPolicy::from_cost(Duration::from_nanos(100), 8);
+        assert_eq!(fast, FanoutPolicy { min_batch: 4800, max_parts: 8 });
+        // Monotone: a slower backend gets a lower crossover.
+        assert!(
+            FanoutPolicy::from_cost(Duration::from_micros(10), 4).min_batch
+                > FanoutPolicy::from_cost(Duration::from_micros(100), 4).min_batch
+        );
+        // Degenerate inputs clamp sanely.
+        assert_eq!(FanoutPolicy::from_cost(Duration::ZERO, 0).max_parts, 1);
+        assert!(FanoutPolicy::from_cost(Duration::ZERO, 1).min_batch <= 1 << 16);
+
+        // The measured probe on stubs of known cost: the slow stub must
+        // calibrate to (near) the floor, the zero-cost stub far above it,
+        // and max_parts must follow the pool's slot count.
+        let slow = FixedCostBackend {
+            cfg: SnnConfig::paper(),
+            per_image: Duration::from_micros(500),
+        };
+        let p_slow = FanoutPolicy::calibrated(&slow, 4);
+        assert_eq!(p_slow.max_parts, 4);
+        assert!(
+            p_slow.min_batch <= 4,
+            "slow backend must fan out early, got crossover {}",
+            p_slow.min_batch
+        );
+        let echo = FixedCostBackend { cfg: SnnConfig::paper(), per_image: Duration::ZERO };
+        let p_echo = FanoutPolicy::calibrated(&echo, 2);
+        assert_eq!(p_echo.max_parts, 2);
+        assert!(
+            p_echo.min_batch > p_slow.min_batch && p_echo.min_batch >= 8,
+            "echo-fast backend must get a much higher crossover, got {}",
+            p_echo.min_batch
+        );
     }
 
     #[test]

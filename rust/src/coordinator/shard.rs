@@ -16,7 +16,12 @@
 //!   behind it, while the victim is never emptied by one bulk steal and
 //!   repeated steals spread across siblings instead of hammering one
 //!   (the PR-2 follow-on: full-batch steals from a fixed victim order
-//!   starved the deepest shard's own worker under skewed arrivals);
+//!   starved the deepest shard's own worker under skewed arrivals). The
+//!   rotation cursor is **per-worker state** — each caller passes its own
+//!   cursor to [`ShardedQueue::pop_some`] — so the steal path touches no
+//!   shared atomic at all: a worker's successive sweeps open on victims
+//!   `home+1, home+2, …` in its own deterministic schedule, and distinct
+//!   workers still de-phase naturally because their `home` offsets differ;
 //! * **exact close semantics** — `close()` latches a per-shard flag under
 //!   each shard's lock, and [`ShardedQueue::pop_some`] only reports
 //!   [`Popped::Drained`] after observing every shard empty *and* closed
@@ -75,10 +80,6 @@ pub struct ShardedQueue<T> {
     capacity_per_shard: usize,
     /// Round-robin cursor breaking shortest-queue ties.
     cursor: AtomicUsize,
-    /// Rotating start for the steal sweep: successive steals begin at
-    /// different siblings, so one deep victim is not re-hit by every
-    /// hungry worker while its peers still hold work.
-    steal_cursor: AtomicUsize,
     /// Fast "no push can ever succeed again" flag (the per-shard flags
     /// under their locks are the authoritative close protocol).
     closed: AtomicBool,
@@ -110,7 +111,6 @@ impl<T> ShardedQueue<T> {
                 .collect(),
             capacity_per_shard,
             cursor: AtomicUsize::new(0),
-            steal_cursor: AtomicUsize::new(0),
             closed: AtomicBool::new(false),
             sleepers: AtomicUsize::new(0),
             sleep_lock: Mutex::new(()),
@@ -208,11 +208,16 @@ impl<T> ShardedQueue<T> {
 
     /// Pop up to `max` items for worker `home`: its own deque first
     /// (FIFO), then a steal sweep over the siblings — starting victim
-    /// rotated per sweep, oldest entries first, at most half of one
-    /// victim's backlog — so stolen requests keep their latency ordering
-    /// without starving the victim. See [`Popped`] for the empty/drained
+    /// rotated per sweep via the *caller-owned* `steal_cursor`, oldest
+    /// entries first, at most half of one victim's backlog — so stolen
+    /// requests keep their latency ordering without starving the victim.
+    /// The cursor is per-worker state (each worker passes its own),
+    /// advancing once per sweep: sweep `c` opens on victim
+    /// `home + 1 + c mod (n-1)` — never `home` — so one worker's
+    /// consecutive sweeps walk the siblings round-robin with zero shared
+    /// atomics on the steal path. See [`Popped`] for the empty/drained
     /// distinction.
-    pub fn pop_some(&self, home: usize, max: usize) -> Popped<T> {
+    pub fn pop_some(&self, home: usize, max: usize, steal_cursor: &mut usize) -> Popped<T> {
         let n = self.shards.len();
         debug_assert!(max > 0, "pop_some needs room for at least one item");
         let home = home % n;
@@ -220,16 +225,16 @@ impl<T> ShardedQueue<T> {
             return Popped::Items { items, stolen: 0 };
         }
 
-        // Steal sweep: walk every sibling once in ring order from a
-        // rotated start (`home + 1 + cursor mod (n-1)` is never home), so
-        // consecutive sweeps — from this worker or its peers — open on
-        // different victims. Along the way, fold each sibling's
-        // (empty && closed) status observed under its lock — the evidence
-        // for a `Drained` verdict. No allocation: a cursor and a ring walk.
+        // Steal sweep: walk every sibling once in ring order from the
+        // rotated start, folding each sibling's (empty && closed) status
+        // observed under its lock — the evidence for a `Drained` verdict.
+        // No allocation, no shared state: a caller-owned cursor and a
+        // ring walk.
         let mut all_closed = true;
         if n > 1 {
-            let start =
-                (home + 1 + self.steal_cursor.fetch_add(1, Ordering::Relaxed) % (n - 1)) % n;
+            let c = *steal_cursor;
+            *steal_cursor = c.wrapping_add(1);
+            let start = (home + 1 + c % (n - 1)) % n;
             for k in 0..n {
                 let i = (start + k) % n;
                 if i == home {
@@ -327,9 +332,10 @@ mod tests {
         for v in 0..5 {
             q.push(v).unwrap();
         }
-        assert_eq!(items(q.pop_some(0, 3)), vec![0, 1, 2]);
-        assert_eq!(items(q.pop_some(0, 8)), vec![3, 4]);
-        assert!(matches!(q.pop_some(0, 1), Popped::Empty));
+        let mut cur = 0;
+        assert_eq!(items(q.pop_some(0, 3, &mut cur)), vec![0, 1, 2]);
+        assert_eq!(items(q.pop_some(0, 8, &mut cur)), vec![3, 4]);
+        assert!(matches!(q.pop_some(0, 1, &mut cur), Popped::Empty));
     }
 
     #[test]
@@ -357,7 +363,7 @@ mod tests {
             other => panic!("expected Full, got {other:?}"),
         }
         // Draining frees capacity again.
-        let _ = items(q.pop_some(0, 1));
+        let _ = items(q.pop_some(0, 1, &mut 0));
         q.push(99).unwrap();
     }
 
@@ -376,8 +382,9 @@ mod tests {
         // concatenation of the steals is exactly shard 0's FIFO order.
         let mut stolen_all = Vec::new();
         let mut steal_events = 0;
+        let mut cur = 0;
         loop {
-            match q.pop_some(1, 8) {
+            match q.pop_some(1, 8, &mut cur) {
                 Popped::Items { items, stolen: 0 } => {
                     assert!(items.iter().all(|v| !on0.contains(v)), "own-shard drain");
                 }
@@ -406,15 +413,18 @@ mod tests {
             q.push(v).unwrap();
         }
         assert_eq!(q.depths(), vec![10, 10, 10, 10]);
-        // Worker 0 drains its own shard, then steals. Each steal must
-        // take exactly ceil(10/2) = 5 from a full victim, and the three
-        // successive sweeps must each pick a *different* victim.
-        let own = items(q.pop_some(0, 100));
+        // Worker 0 drains its own shard, then steals with its own
+        // per-worker cursor. Each steal must take exactly ceil(10/2) = 5
+        // from a full victim, and the three successive sweeps must open
+        // on victims 1, 2, 3 *in that order* — sweep `c` starts at
+        // `home + 1 + c mod (n-1)`, the per-worker schedule.
+        let mut cur = 0;
+        let own = items(q.pop_some(0, 100, &mut cur));
         assert_eq!(own.len(), 10);
         let mut victims = Vec::new();
         for round in 0..3 {
             let before = q.depths();
-            match q.pop_some(0, 100) {
+            match q.pop_some(0, 100, &mut cur) {
                 Popped::Items { items, stolen } => {
                     assert_eq!(stolen, 5, "round {round}: steal must cap at half of 10");
                     assert_eq!(items.len(), 5);
@@ -428,13 +438,26 @@ mod tests {
             assert_eq!(before[victim] - after[victim], 5);
             victims.push(victim);
         }
-        victims.sort_unstable();
-        assert_eq!(victims, vec![1, 2, 3], "rotation must spread steals over all siblings");
+        assert_eq!(
+            victims,
+            vec![1, 2, 3],
+            "per-worker cursor must rotate victims deterministically in ring order"
+        );
         // Next round: victims hold 5 each → steals take ceil(5/2) = 3.
-        match q.pop_some(0, 100) {
+        match q.pop_some(0, 100, &mut cur) {
             Popped::Items { stolen, .. } => assert_eq!(stolen, 3),
             other => panic!("expected items, got {}", kind(&other)),
         }
+        // A different worker's fresh cursor opens on *its* first sibling:
+        // after draining its own shard, worker 2's sweep 0 starts at
+        // shard 3 (`home + 1 + 0`).
+        let mut cur2 = 0;
+        let own2 = items(q.pop_some(2, 100, &mut cur2));
+        assert!(!own2.is_empty(), "worker 2 drains its own shard first");
+        let before = q.depths();
+        let _ = items(q.pop_some(2, 100, &mut cur2));
+        let after = q.depths();
+        assert!(after[3] < before[3], "worker 2's first steal must open on shard 3");
     }
 
     #[test]
@@ -462,8 +485,9 @@ mod tests {
             let q = Arc::clone(&q);
             std::thread::spawn(move || {
                 let (mut got, mut steal_pops) = (Vec::new(), 0u32);
+                let mut cur = 0;
                 loop {
-                    match q.pop_some(0, 8) {
+                    match q.pop_some(0, 8, &mut cur) {
                         Popped::Items { mut items, stolen } => {
                             steal_pops += u32::from(stolen > 0);
                             got.append(&mut items);
@@ -493,8 +517,9 @@ mod tests {
         q.close();
         assert!(matches!(q.push(3), Err(PushError::Closed(3))));
         let mut drained = Vec::new();
+        let mut cur = 0;
         loop {
-            match q.pop_some(0, 4) {
+            match q.pop_some(0, 4, &mut cur) {
                 Popped::Items { mut items, .. } => drained.append(&mut items),
                 Popped::Drained => break,
                 Popped::Empty => panic!("closed+empty must report Drained"),
@@ -526,7 +551,7 @@ mod tests {
             let q = Arc::clone(&q);
             std::thread::spawn(move || {
                 q.wait(Duration::from_secs(30));
-                items(q.pop_some(0, 1))
+                items(q.pop_some(0, 1, &mut 0))
             })
         };
         std::thread::sleep(Duration::from_millis(20));
@@ -559,8 +584,9 @@ mod tests {
                 let q = Arc::clone(&q);
                 std::thread::spawn(move || {
                     let mut got = Vec::new();
+                    let mut cur = 0;
                     loop {
-                        match q.pop_some(w, 8) {
+                        match q.pop_some(w, 8, &mut cur) {
                             Popped::Items { mut items, .. } => got.append(&mut items),
                             Popped::Empty => q.wait(Duration::from_millis(5)),
                             Popped::Drained => return got,

@@ -111,7 +111,7 @@ fn two_layer_stack(ctx: &Ctx) -> Result<(WeightStack, Vec<LayerParams>, bool)> {
 /// never reaches the threshold, so the output layer is silent and every
 /// image ties to class 0; the returned per-layer thresholds
 /// (`[1500, 300, 20]`) restore firing at every depth. Used by the depth
-/// ablation, the BENCH_4 accuracy row and the regression tests.
+/// ablation, the bench-report accuracy row and the regression tests.
 pub fn calibration_demo_stack() -> (WeightStack, Vec<LayerParams>) {
     let n_in = IMG_PIXELS;
     let mut w0 = vec![0i32; n_in * 20];
@@ -392,7 +392,7 @@ mod tests {
             shared.accuracy
         );
         assert_eq!(calibrated.accuracy, 1.0, "calibrated thresholds recover every class");
-        assert!(calibrated.accuracy > shared.accuracy, "the BENCH_4 acceptance row");
+        assert!(calibrated.accuracy > shared.accuracy, "the bench-report acceptance row");
         assert_eq!(
             pruned.accuracy, 1.0,
             "per-layer pruning (readout intact) must not cost accuracy"

@@ -29,7 +29,7 @@
 //!   timesteps — the fast path makes the per-timestep check effectively
 //!   free.
 
-use crate::config::{FireMode, LeakMode, SnnConfig};
+use crate::config::{FireMode, LeakMode, PruneMode, SnnConfig};
 use crate::data::Image;
 use crate::error::{Error, Result};
 use crate::fixed::WeightStack;
@@ -38,9 +38,14 @@ use crate::util::margin_reached;
 
 use super::controller::{CtrlState, LayerController};
 use super::encoder::RtlPoissonEncoder;
-use super::lif_neuron::LifNeuronArray;
+use super::lif_neuron::{LifBatchArray, LifNeuronArray};
 use super::power::{ActivityCounters, EnergyModel, EnergyReport};
 use super::vcd::VcdWriter;
+
+/// Batch lanes one [`RtlCore::run_fast_batch`] sweep multiplexes: the
+/// transposed active masks are single `u64` words, so larger sub-batches
+/// are processed in chunks of this many images.
+pub const BATCH_LANES: usize = 64;
 
 /// Result of one inference window on the RTL core.
 #[derive(Debug, Clone, PartialEq)]
@@ -411,6 +416,207 @@ impl RtlCore {
         Ok(self.collect_result(&start, &start_layers))
     }
 
+    /// Run a whole sub-batch of images through **one timestep sweep**:
+    /// per timestep, each image's independent Poisson lanes are drawn,
+    /// then every weight row is walked **once** and applied to every
+    /// batch image whose input fired (bitset-transposed active masks —
+    /// `mask[p]` bit `b` = image `b`'s input `p` spiked), so the row
+    /// fetch that dominates the per-image fast path is amortized over the
+    /// batch. Per-image early exit retires images from the sweep via
+    /// batch compaction (the active-lane list shrinks; retired lanes stop
+    /// drawing PRNG lanes and stop accruing cycles, exactly where the
+    /// sequential engine would have stopped).
+    ///
+    /// **Bit-exact with the sequential path**: because the PRNG streams
+    /// are per-`(image, seed)` and every lane's neuron state, activity
+    /// counters and schedule are private, batching only reorders work
+    /// *across* images — each image's own operations retain the exact
+    /// sequential order. `run_fast_batch(images, seeds, early)[i]` equals
+    /// `run_fast_early(images[i], seeds[i], early)` field for field,
+    /// including [`ActivityCounters`] and the per-step logs (pinned by
+    /// `batched_fast_path_equals_sequential` and the golden fixtures).
+    /// Every lane's window activity folds into the core's cumulative
+    /// totals, so cycle counts — and every window-attributed event —
+    /// in [`RtlCore::total_activity`] stay exact under batching. The
+    /// *load-pulse* toggle events (encoder re-seed / accumulator reset
+    /// Hamming distances, which are excluded from every window) are
+    /// those of fresh per-lane state, so they can differ from a reused
+    /// sequential core's — they depend on engine reuse history, which
+    /// already varies with pool assignment.
+    ///
+    /// Falls back to per-image [`RtlCore::run_fast_early`] when a VCD
+    /// sink is attached (waveforms need every clock of one engine).
+    /// Sub-batches larger than [`BATCH_LANES`] are processed in chunks.
+    pub fn run_fast_batch(
+        &mut self,
+        images: &[&Image],
+        seeds: &[u32],
+        early: EarlyExit,
+    ) -> Result<Vec<RtlResult>> {
+        if images.len() != seeds.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "batch of {} images vs {} seeds",
+                images.len(),
+                seeds.len()
+            )));
+        }
+        if self.vcd.is_some() {
+            return images
+                .iter()
+                .zip(seeds)
+                .map(|(img, &seed)| self.run_fast_early(img, seed, early))
+                .collect();
+        }
+        let mut out = Vec::with_capacity(images.len());
+        for (imgs, sds) in images.chunks(BATCH_LANES).zip(seeds.chunks(BATCH_LANES)) {
+            self.run_batch_chunk(imgs, sds, early, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    /// One ≤[`BATCH_LANES`]-image chunk of [`RtlCore::run_fast_batch`].
+    fn run_batch_chunk(
+        &mut self,
+        images: &[&Image],
+        seeds: &[u32],
+        early: EarlyExit,
+        out: &mut Vec<RtlResult>,
+    ) -> Result<()> {
+        let n_inputs = self.cfg.n_inputs();
+        for img in images {
+            if img.pixels.len() != n_inputs {
+                return Err(Error::ShapeMismatch(format!(
+                    "image {} pixels vs core {}",
+                    img.pixels.len(),
+                    n_inputs
+                )));
+            }
+        }
+        let early = early.clamped_for(&self.cfg);
+        let n_layers = self.cfg.n_layers();
+        let b_n = images.len();
+        let row_len = match self.cfg.leak_mode {
+            LeakMode::PerRow { row_len } => Some(row_len),
+            LeakMode::PerTimestep => None,
+        };
+        let max_width =
+            (0..n_layers).map(|l| self.cfg.layer_output(l)).max().expect("≥1 layer");
+
+        // Per-lane state: encoder + per-image activity and logs. The load
+        // pulse is recorded separately — the sequential engines snapshot
+        // their window *after* `load_image`, so seeding-network events
+        // belong to the cumulative totals, not the per-image window.
+        let lanes: Vec<BatchLane> = images
+            .iter()
+            .zip(seeds)
+            .map(|(img, &seed)| {
+                let mut lane = BatchLane {
+                    enc: RtlPoissonEncoder::new(n_inputs),
+                    load_act: ActivityCounters::default(),
+                    enc_act: ActivityCounters::default(),
+                    layer_act: vec![ActivityCounters::default(); n_layers],
+                    membrane_log: Vec::new(),
+                    spike_log: Vec::new(),
+                    step_membranes: Vec::new(),
+                    step_spikes: Vec::new(),
+                };
+                lane.enc.load(&img.pixels, seed, &mut lane.load_act);
+                lane
+            })
+            .collect();
+
+        let mut run = BatchRun {
+            cfg: &self.cfg,
+            weights: &self.weights,
+            k: self.controller.pixels_per_cycle(),
+            row_len,
+            prune: (0..n_layers).map(|l| self.cfg.layer_prune(l)).collect(),
+            arrays: (0..n_layers)
+                .map(|l| LifBatchArray::new(&self.cfg.layer_config(l), b_n))
+                .collect(),
+            lanes,
+            step_fired: (0..n_layers).map(|l| vec![0u64; self.cfg.layer_output(l)]).collect(),
+            masks: vec![0u64; n_inputs],
+            idx_scratch: Vec::with_capacity(n_inputs),
+            fired_scratch: vec![false; max_width],
+            active: (0..b_n).collect(),
+        };
+
+        for t in 0..self.cfg.timesteps {
+            for l in 0..n_layers {
+                match self.cfg.fire_mode {
+                    FireMode::EndOfStep => {
+                        run.integrate_end_of_step(l);
+                        // Closed-form clock counts, as on the sequential
+                        // fast path — identical for every active lane
+                        // (the schedule depends only on the config).
+                        let n_in = self.cfg.layer_input(l);
+                        let integrate_clocks = n_in.div_ceil(run.k) as u64;
+                        let leak_clocks = match (l, row_len) {
+                            (0, Some(r)) => ((n_in - 1) / r + 1) as u64,
+                            _ => 1,
+                        };
+                        for &b in &run.active {
+                            run.lanes[b].layer_act[l].cycles += integrate_clocks + leak_clocks;
+                        }
+                    }
+                    FireMode::Immediate => run.integrate_immediate(l),
+                }
+                run.fire_clock(l);
+            }
+            run.close_timestep();
+            if let EarlyExit::Margin { margin, min_steps } = early {
+                // Same predicate, same schedule point as the sequential
+                // engines; confident lanes retire from the sweep.
+                if t + 1 >= min_steps {
+                    run.retire_confident(margin);
+                }
+            }
+            if run.active.is_empty() {
+                break;
+            }
+        }
+
+        let BatchRun { lanes, arrays, .. } = run;
+        for (b, lane) in lanes.into_iter().enumerate() {
+            let mut window = lane.enc_act;
+            for la in &lane.layer_act {
+                window.add(la);
+            }
+            // Fold the lane into the core's cumulative totals so backend
+            // cycle accounting (and every window-attributed event) stays
+            // exact under batching; see the method docs for the
+            // load-pulse toggle caveat.
+            self.enc_act.add(&lane.load_act);
+            self.enc_act.add(&lane.enc_act);
+            for (l, la) in lane.layer_act.iter().enumerate() {
+                self.layer_act[l].add(la);
+            }
+            self.cycle_no += window.cycles;
+
+            let activity_by_layer = lane.layer_act;
+            let energy = self.energy_model.evaluate(&window);
+            let energy_by_layer = self.energy_model.evaluate_layers(&activity_by_layer);
+            let spike_counts_by_layer: Vec<Vec<u32>> =
+                arrays.iter().map(|a| a.spike_counts(b).to_vec()).collect();
+            let spike_counts =
+                spike_counts_by_layer.last().cloned().expect("core has at least one layer");
+            out.push(RtlResult {
+                class: LayerController::decide(&spike_counts),
+                spike_counts,
+                cycles: window.cycles,
+                activity: window,
+                energy,
+                membrane_by_step: lane.membrane_log,
+                spikes_by_step: lane.spike_log,
+                spike_counts_by_layer,
+                activity_by_layer,
+                energy_by_layer,
+            });
+        }
+        Ok(())
+    }
+
     /// One layer's integrate + leak phases, `FireMode::EndOfStep`.
     ///
     /// Enables cannot change mid-walk in this mode (pruning only acts on
@@ -550,6 +756,220 @@ impl RtlCore {
     /// Cumulative per-layer activity across all windows run so far.
     pub fn layer_activity(&self) -> &[ActivityCounters] {
         &self.layer_act
+    }
+}
+
+/// Per-image state of one batched sweep lane: its private encoder,
+/// activity buckets and per-step logs.
+struct BatchLane {
+    enc: RtlPoissonEncoder,
+    /// Load-pulse events (seeding network): folded into the core's
+    /// cumulative totals, excluded from the per-image window — the
+    /// sequential engines snapshot their window *after* `load_image`.
+    load_act: ActivityCounters,
+    enc_act: ActivityCounters,
+    layer_act: Vec<ActivityCounters>,
+    membrane_log: Vec<Vec<i32>>,
+    spike_log: Vec<Vec<bool>>,
+    step_membranes: Vec<i32>,
+    step_spikes: Vec<bool>,
+}
+
+/// One in-flight batched sweep: the transposed-mask schedule walker
+/// behind [`RtlCore::run_fast_batch`]. Field-disjoint from the core's
+/// single-image state — a batch run never disturbs `RtlCore::neurons` or
+/// the controller registers.
+struct BatchRun<'a> {
+    cfg: &'a SnnConfig,
+    weights: &'a WeightStack,
+    k: usize,
+    row_len: Option<usize>,
+    /// Per-layer resolved pruning policy (mirrors the controller's).
+    prune: Vec<PruneMode>,
+    arrays: Vec<LifBatchArray>,
+    lanes: Vec<BatchLane>,
+    /// Per-layer transposed fire masks for the current timestep:
+    /// `step_fired[l][j]` bit `b` = lane `b`'s neuron `j` fired this step
+    /// — the inter-layer hand-off register, batch-wide. Cleared at the
+    /// end of each timestep like the controller's accumulator.
+    step_fired: Vec<Vec<u64>>,
+    /// Layer-0 transposed input masks (rebuilt per segment/group from the
+    /// per-lane encoder draws).
+    masks: Vec<u64>,
+    /// Per-lane encoder spike-index scratch.
+    idx_scratch: Vec<u32>,
+    /// Per-lane fire-pattern scratch (sized to the widest layer).
+    fired_scratch: Vec<bool>,
+    /// Lanes still running, in submission order. Early exit compacts this
+    /// list; retired lanes drop out of every subsequent sweep.
+    active: Vec<usize>,
+}
+
+impl BatchRun<'_> {
+    /// Per-lane BRAM gate as a bitmask over lanes. Under `EndOfStep`
+    /// firing enables cannot change mid-walk, so the caller hoists this
+    /// out of the walk exactly like the sequential engine; `Immediate`
+    /// recomputes it per integrate group.
+    fn bram_gate(&self, l: usize) -> u64 {
+        let mut gate = 0u64;
+        for &b in &self.active {
+            if self.arrays[l].any_enabled(b) {
+                gate |= 1 << b;
+            }
+        }
+        gate
+    }
+
+    /// Draw every active lane's Poisson comparators for input range
+    /// `start..end` into the transposed masks. Each lane's PRNG stream
+    /// advances exactly as its sequential window would — retired lanes
+    /// draw nothing.
+    fn draw_layer0(&mut self, start: usize, end: usize) {
+        self.masks[start..end].fill(0);
+        for &b in &self.active {
+            let lane = &mut self.lanes[b];
+            self.idx_scratch.clear();
+            lane.enc.tick_range_into(start, end, &mut self.idx_scratch, &mut lane.enc_act);
+            for &p in &self.idx_scratch {
+                self.masks[p as usize] |= 1 << b;
+            }
+        }
+    }
+
+    /// The row-reuse inner loop: for each input of `start..end`, fetch
+    /// its weight row **once** and integrate it into every gated lane
+    /// whose input fired. Ascending `p` preserves each lane's sequential
+    /// row order; per-lane BRAM reads and adder activity land in that
+    /// lane's own counters.
+    fn apply_rows(&mut self, l: usize, start: usize, end: usize, gate: u64) {
+        let weights = self.weights.layer(l);
+        for p in start..end {
+            let src = if l == 0 { self.masks[p] } else { self.step_fired[l - 1][p] };
+            let mut m = src & gate;
+            if m == 0 {
+                continue;
+            }
+            let row = weights.row(p);
+            while m != 0 {
+                let b = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let act = &mut self.lanes[b].layer_act[l];
+                act.bram_reads += 1;
+                self.arrays[l].add_row(b, row, act);
+            }
+        }
+    }
+
+    /// One layer's integrate + leak phases, `FireMode::EndOfStep` —
+    /// the batched mirror of `fast_integrate_end_of_step`: one segment
+    /// per image row on layer 0 in `PerRow` mode (or one for the full
+    /// walk), each followed by its Leak clock on every active lane.
+    fn integrate_end_of_step(&mut self, l: usize) {
+        let n_in = self.cfg.layer_input(l);
+        let seg = if l == 0 { self.row_len.unwrap_or(n_in) } else { n_in };
+        let gate = self.bram_gate(l);
+        let mut start = 0usize;
+        while start < n_in {
+            let end = (start + seg).min(n_in);
+            if l == 0 {
+                self.draw_layer0(start, end);
+            }
+            self.apply_rows(l, start, end, gate);
+            for &b in &self.active {
+                self.arrays[l].leak_enabled(b, &mut self.lanes[b].layer_act[l]);
+            }
+            start = end;
+        }
+    }
+
+    /// One layer's integrate + leak phases, `FireMode::Immediate` — the
+    /// batched mirror of `fast_integrate_immediate`: each integrate clock
+    /// serves `k` input lanes, the combinational threshold check fires
+    /// (and possibly prunes) mid-phase per lane, and leak clocks land on
+    /// row boundaries (layer 0) and at the end of the walk.
+    fn integrate_immediate(&mut self, l: usize) {
+        let n_in = self.cfg.layer_input(l);
+        let width = self.arrays[l].width();
+        let mut pixel = 0usize;
+        while pixel < n_in {
+            let end = (pixel + self.k).min(n_in);
+            let gate = self.bram_gate(l);
+            if l == 0 {
+                self.draw_layer0(pixel, end);
+            }
+            self.apply_rows(l, pixel, end, gate);
+            for &b in &self.active {
+                self.lanes[b].layer_act[l].cycles += 1; // the Integrate clock
+                let fired = &mut self.fired_scratch[..width];
+                fired.fill(false);
+                let any =
+                    self.arrays[l].immediate_fire(b, fired, &mut self.lanes[b].layer_act[l]);
+                if any {
+                    for (j, &f) in fired.iter().enumerate() {
+                        if f {
+                            self.step_fired[l][j] |= 1 << b;
+                        }
+                    }
+                    self.arrays[l].latch_prune(b, self.prune[l]);
+                }
+            }
+            pixel = end;
+            let row_boundary = l == 0 && self.row_len.is_some_and(|r| pixel % r == 0);
+            if pixel == n_in || row_boundary {
+                for &b in &self.active {
+                    let act = &mut self.lanes[b].layer_act[l];
+                    self.arrays[l].leak_enabled(b, act);
+                    act.cycles += 1; // the Leak clock
+                }
+            }
+        }
+    }
+
+    /// The layer's Fire clock on every active lane: threshold check
+    /// (`EndOfStep` only), fire-mask latch into the inter-layer hand-off,
+    /// pruning-mask update, per-step snapshots and the clock itself.
+    fn fire_clock(&mut self, l: usize) {
+        let width = self.arrays[l].width();
+        let end_of_step = self.cfg.fire_mode == FireMode::EndOfStep;
+        for &b in &self.active {
+            let fired = &mut self.fired_scratch[..width];
+            fired.fill(false);
+            if end_of_step {
+                self.arrays[l].fire_check(b, fired, &mut self.lanes[b].layer_act[l]);
+            }
+            for (j, &f) in fired.iter().enumerate() {
+                if f {
+                    self.step_fired[l][j] |= 1 << b;
+                }
+            }
+            self.arrays[l].latch_prune(b, self.prune[l]);
+            let lane = &mut self.lanes[b];
+            lane.step_membranes.extend_from_slice(self.arrays[l].accs(b));
+            lane.step_spikes.extend_from_slice(fired);
+            lane.layer_act[l].cycles += 1;
+        }
+    }
+
+    /// End-of-timestep edge: push every active lane's per-step snapshot
+    /// and clear the batch-wide fire accumulators.
+    fn close_timestep(&mut self) {
+        for &b in &self.active {
+            let lane = &mut self.lanes[b];
+            lane.membrane_log.push(std::mem::take(&mut lane.step_membranes));
+            lane.spike_log.push(std::mem::take(&mut lane.step_spikes));
+        }
+        for f in &mut self.step_fired {
+            f.fill(0);
+        }
+    }
+
+    /// Batch compaction: retire every lane whose final-layer margin is
+    /// reached from the active list (submission order preserved for the
+    /// survivors).
+    fn retire_confident(&mut self, margin: u32) {
+        let arrays = &self.arrays;
+        let last = arrays.len() - 1;
+        self.active.retain(|&b| !margin_reached(arrays[last].spike_counts(b), margin));
     }
 }
 
@@ -827,6 +1247,168 @@ mod tests {
                 cfg.layer_params
             );
         });
+    }
+
+    /// The batch equivalence theorem: `run_fast_batch` equals
+    /// `run_fast_early` image for image — full `RtlResult` equality
+    /// including every activity counter and per-step log — swept across
+    /// batch sizes 1–9 × depths 1–3 × heterogeneous `layer_params` ×
+    /// early-exit on/off, with both fire modes and `PerRow` leak folded
+    /// into the sweep. Deterministic nested loops (not sampled), so the
+    /// full cross-product is exercised on every run.
+    #[test]
+    fn batched_fast_path_equals_sequential() {
+        use crate::config::LayerParams;
+        let mut rng = crate::prng::Xorshift32::new(0xBA7C_4E11);
+        let topologies: [Vec<usize>; 3] =
+            [vec![784, 10], vec![784, 17, 10], vec![784, 14, 12, 10]];
+        for topology in &topologies {
+            let stack = test_stack(topology, rng.next_u32());
+            let n_layers = topology.len() - 1;
+            for batch in 1usize..=9 {
+                for early_on in [false, true] {
+                    let early = if early_on {
+                        EarlyExit::Margin { margin: 2, min_steps: 1 }
+                    } else {
+                        EarlyExit::Off
+                    };
+                    let fire = if batch % 2 == 0 {
+                        FireMode::Immediate
+                    } else {
+                        FireMode::EndOfStep
+                    };
+                    let leak = if batch % 3 == 0 {
+                        LeakMode::PerRow { row_len: 28 }
+                    } else {
+                        LeakMode::PerTimestep
+                    };
+                    // Half the cases carry heterogeneous per-layer
+                    // threshold/decay/prune overrides.
+                    let layer_params: Vec<LayerParams> = if rng.below(2) == 0 {
+                        (0..n_layers)
+                            .map(|_| LayerParams {
+                                v_th: Some(60 + rng.below(200) as i32),
+                                decay_shift: Some(1 + rng.below(4)),
+                                prune: Some(if rng.below(2) == 0 {
+                                    PruneMode::Off
+                                } else {
+                                    PruneMode::AfterFires { after_spikes: 1 + rng.below(3) }
+                                }),
+                            })
+                            .collect()
+                    } else {
+                        Vec::new()
+                    };
+                    let cfg = SnnConfig::paper()
+                        .with_topology(topology.clone())
+                        .with_timesteps(4)
+                        .with_v_th(90 + rng.below(120) as i32)
+                        .with_fire_mode(fire)
+                        .with_leak_mode(leak)
+                        .with_prune(PruneMode::Off)
+                        .with_layer_params(layer_params);
+                    let gen = DigitGen::new(rng.next_u32());
+                    let images: Vec<crate::data::Image> =
+                        (0..batch).map(|i| gen.sample(rng.below(10) as u8, i)).collect();
+                    let refs: Vec<&crate::data::Image> = images.iter().collect();
+                    let seeds: Vec<u32> = (0..batch).map(|_| rng.next_u32()).collect();
+
+                    let mut batch_core = RtlCore::new(cfg.clone(), stack.clone()).unwrap();
+                    let got = batch_core.run_fast_batch(&refs, &seeds, early).unwrap();
+                    assert_eq!(got.len(), batch);
+                    let mut seq_core = RtlCore::new(cfg.clone(), stack.clone()).unwrap();
+                    for (i, (img, &seed)) in images.iter().zip(&seeds).enumerate() {
+                        let want = seq_core.run_fast_early(img, seed, early).unwrap();
+                        assert_eq!(
+                            got[i], want,
+                            "lane {i} diverges (batch={batch} topology={topology:?} \
+                             fire={fire:?} leak={leak:?} early={early:?})"
+                        );
+                    }
+                    // Cumulative cycle accounting stays exact under
+                    // batching (the backend's total_cycles contract).
+                    assert_eq!(
+                        batch_core.total_activity().cycles,
+                        seq_core.total_activity().cycles,
+                        "cumulative cycles diverge"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Batched early-exit compaction: image A exits at step 2 while
+    /// image B (black — never fires, never confident) runs the full
+    /// window. A's retirement must not perturb B's counts/cycles/logs,
+    /// and per-image `steps_run` must match the behavioral model exactly.
+    #[test]
+    fn batched_early_exit_compaction_is_isolated() {
+        let cfg = SnnConfig::paper().with_timesteps(12).with_prune(PruneMode::Off);
+        let mut w = vec![0i32; 7840];
+        for i in 0..784 {
+            if i / 79 == 4 {
+                w[i * 10 + 4] = 40;
+            }
+        }
+        let w = WeightMatrix::from_rows(784, 10, 9, w).unwrap();
+        let mut px = vec![0u8; 784];
+        for (i, p) in px.iter_mut().enumerate() {
+            if i / 79 == 4 {
+                *p = 250;
+            }
+        }
+        let img_a = crate::data::Image { label: 4, pixels: px };
+        let img_b = crate::data::Image { label: 0, pixels: vec![0; 784] };
+        let early = EarlyExit::Margin { margin: 2, min_steps: 2 };
+
+        let mut core = RtlCore::new(cfg.clone(), w.clone()).unwrap();
+        let batch = core.run_fast_batch(&[&img_a, &img_b], &[7, 9], early).unwrap();
+        let steps_a = batch[0].membrane_by_step.len();
+        assert!(steps_a >= 2 && steps_a < 12, "A must exit early, ran {steps_a}");
+        assert_eq!(batch[1].membrane_by_step.len(), 12, "B must run the full window");
+        assert_eq!(batch[0].cycles, 786 * steps_a as u64);
+        assert_eq!(batch[1].cycles, 786 * 12);
+
+        // Both lanes bit-exact vs solo runs: the retirement is invisible.
+        let solo_a = RtlCore::new(cfg.clone(), w.clone())
+            .unwrap()
+            .run_fast_early(&img_a, 7, early)
+            .unwrap();
+        let solo_b = RtlCore::new(cfg.clone(), w.clone())
+            .unwrap()
+            .run_fast_early(&img_b, 9, early)
+            .unwrap();
+        assert_eq!(batch[0], solo_a, "A diverges from its solo window");
+        assert_eq!(batch[1], solo_b, "B perturbed by A's retirement");
+
+        // steps_run parity with the behavioral model, per image.
+        let net = BehavioralNet::new(cfg, w).unwrap();
+        let beh_a = net.classify_opts(&img_a, 7, 12, early);
+        let beh_b = net.classify_opts(&img_b, 9, 12, early);
+        assert_eq!(beh_a.steps_run as usize, steps_a, "A steps_run diverges");
+        assert_eq!(beh_b.steps_run, 12, "B steps_run diverges");
+        assert_eq!(batch[0].spike_counts, beh_a.spike_counts);
+        assert_eq!(batch[1].spike_counts, beh_b.spike_counts);
+    }
+
+    #[test]
+    fn batch_chunks_past_64_lanes_and_rejects_seed_mismatch() {
+        let cfg = SnnConfig::paper().with_timesteps(1);
+        let w = test_weights(3);
+        let gen = DigitGen::new(5);
+        let images: Vec<crate::data::Image> =
+            (0..70).map(|i| gen.sample((i % 10) as u8, i)).collect();
+        let refs: Vec<&crate::data::Image> = images.iter().collect();
+        let seeds: Vec<u32> = (0..70).map(|i| 40 + i as u32).collect();
+        let mut core = RtlCore::new(cfg.clone(), w.clone()).unwrap();
+        assert!(core.run_fast_batch(&refs[..2], &seeds[..1], EarlyExit::Off).is_err());
+        let got = core.run_fast_batch(&refs, &seeds, EarlyExit::Off).unwrap();
+        assert_eq!(got.len(), 70);
+        let mut seq = RtlCore::new(cfg, w).unwrap();
+        for (i, r) in got.iter().enumerate() {
+            assert_eq!(r, &seq.run_fast(&images[i], seeds[i]).unwrap(), "lane {i}");
+        }
+        assert_eq!(core.run_fast_batch(&[], &[], EarlyExit::Off).unwrap().len(), 0);
     }
 
     #[test]

@@ -7,20 +7,32 @@
 //! commits the posedge. All datapath activity is recorded into
 //! [`ActivityCounters`].
 //!
-//! Two representations share the same semantics:
+//! Three representations share the same semantics:
 //!
 //! * [`LifNeuronCore`] — one neuron as an object; the readable reference
 //!   model, kept for unit tests and documentation.
 //! * [`LifNeuronArray`] — one whole layer as a structure-of-arrays (flat
 //!   `acc` / `spike_count` buffers plus a multi-word enable bitmask, so
 //!   hidden layers wider than 64 neurons fit). This is what
-//!   [`crate::rtl::RtlCore`] actually runs — one array per layer of the
-//!   topology: the per-cycle inner loops walk contiguous memory and skip
-//!   disabled neurons by bit iteration instead of dispatching through an
-//!   object array. The two are proven activity- and state-equivalent by
-//!   the property test below.
+//!   [`crate::rtl::RtlCore`] actually runs on the single-image paths —
+//!   one array per layer of the topology: the per-cycle inner loops walk
+//!   contiguous memory and skip disabled neurons by bit iteration instead
+//!   of dispatching through an object array.
+//! * [`LifBatchArray`] — one layer × a whole sub-batch: per-image
+//!   accumulator/spike-count planes plus one enable bitmask per batch
+//!   lane, addressed `plane[b * width + j]`. This is the state behind
+//!   [`crate::rtl::RtlCore::run_fast_batch`], where one weight-row fetch
+//!   is applied to every batch image whose input fired.
+//!
+//! The single-image array and the batch array run the *same* lane-level
+//! datapath primitives (`lane_add_row` / `lane_leak` / `lane_fire_check` /
+//! `lane_immediate_fire` below) — the wrappers differ only in plane
+//! addressing, so the arithmetic (per-add saturation, Hamming-distance
+//! toggle accounting, enable gating) cannot drift between the sequential
+//! and the batched engines. All three representations are proven state-
+//! and activity-equivalent by the property tests below.
 
-use crate::config::SnnConfig;
+use crate::config::{PruneMode, SnnConfig};
 use crate::fixed::leak;
 
 use super::power::ActivityCounters;
@@ -157,6 +169,158 @@ impl LifNeuronCore {
 
 // ---------------------------------------------------------------------------
 
+/// The calibration registers one neuron lane runs under (resolved per
+/// layer; shared by every lane of a batch — a batch multiplexes images
+/// over one physical layer, so the calibration is common by construction).
+#[derive(Debug, Clone, Copy)]
+struct LaneParams {
+    acc_max: i32,
+    decay_shift: u32,
+    v_th: i32,
+    v_rest: i32,
+}
+
+impl LaneParams {
+    fn from_cfg(cfg: &SnnConfig) -> Self {
+        LaneParams {
+            acc_max: cfg.acc_max(),
+            decay_shift: cfg.decay_shift,
+            v_th: cfg.v_th,
+            v_rest: cfg.v_rest,
+        }
+    }
+}
+
+/// Register write with Hamming-distance toggle accounting — the one
+/// `write_acc` every lane-level primitive goes through.
+#[inline(always)]
+fn write_acc_at(acc: &mut [i32], j: usize, next: i32, act: &mut ActivityCounters) {
+    act.reg_toggles += u64::from(((acc[j] as u32) ^ (next as u32)).count_ones());
+    acc[j] = next;
+}
+
+/// One BRAM row pulse over one lane: integrate `row[j]` into every
+/// *enabled* neuron with per-add saturation (ascending `j`, like the
+/// adder-tree fanout).
+#[inline]
+fn lane_add_row(
+    acc: &mut [i32],
+    enabled: &[u64],
+    row: &[i32],
+    p: &LaneParams,
+    act: &mut ActivityCounters,
+) {
+    debug_assert_eq!(row.len(), acc.len());
+    for wi in 0..enabled.len() {
+        let mut m = enabled[wi];
+        while m != 0 {
+            let j = wi * 64 + m.trailing_zeros() as usize;
+            m &= m - 1;
+            let sum = i64::from(acc[j]) + i64::from(row[j]);
+            let clamped = sum.clamp(-i64::from(p.acc_max), i64::from(p.acc_max)) as i32;
+            if i64::from(clamped) != sum {
+                act.saturations += 1;
+            }
+            act.adds += 1;
+            write_acc_at(acc, j, clamped, act);
+        }
+    }
+}
+
+/// One `Leak` clock over one lane: shift-subtract decay on every enabled
+/// neuron.
+#[inline]
+fn lane_leak(acc: &mut [i32], enabled: &[u64], p: &LaneParams, act: &mut ActivityCounters) {
+    for wi in 0..enabled.len() {
+        let mut m = enabled[wi];
+        while m != 0 {
+            let j = wi * 64 + m.trailing_zeros() as usize;
+            m &= m - 1;
+            let next = leak(acc[j], p.decay_shift);
+            act.shifts += 1;
+            act.adds += 1; // the subtract half of shift-subtract
+            write_acc_at(acc, j, next, act);
+        }
+    }
+}
+
+/// One `Fire` clock over one lane (`FireMode::EndOfStep`): evaluate the
+/// threshold comparator of every enabled neuron, setting `fired[j]` and
+/// hard-resetting on a crossing. `fired` must be pre-cleared.
+fn lane_fire_check(
+    acc: &mut [i32],
+    spike_count: &mut [u32],
+    enabled: &[u64],
+    fired: &mut [bool],
+    p: &LaneParams,
+    act: &mut ActivityCounters,
+) {
+    debug_assert_eq!(fired.len(), acc.len());
+    for wi in 0..enabled.len() {
+        let mut m = enabled[wi];
+        while m != 0 {
+            let j = wi * 64 + m.trailing_zeros() as usize;
+            m &= m - 1;
+            act.compares += 1;
+            if acc[j] >= p.v_th {
+                fired[j] = true;
+                spike_count[j] += 1;
+                act.reg_toggles += 1; // spike-count increment (approx.)
+                write_acc_at(acc, j, p.v_rest, act);
+            }
+        }
+    }
+}
+
+/// Mid-integration combinational fire over one lane
+/// (`FireMode::Immediate`): only neurons whose accumulator is at/above
+/// threshold commit a `FireCheck` (and its comparator activity), exactly
+/// like the cycle path's `above_threshold()` pre-gate. Returns true when
+/// any neuron fired. `fired` must be pre-cleared.
+fn lane_immediate_fire(
+    acc: &mut [i32],
+    spike_count: &mut [u32],
+    enabled: &[u64],
+    fired: &mut [bool],
+    p: &LaneParams,
+    act: &mut ActivityCounters,
+) -> bool {
+    debug_assert_eq!(fired.len(), acc.len());
+    let mut any = false;
+    for wi in 0..enabled.len() {
+        let mut m = enabled[wi];
+        while m != 0 {
+            let j = wi * 64 + m.trailing_zeros() as usize;
+            m &= m - 1;
+            if acc[j] >= p.v_th {
+                act.compares += 1;
+                fired[j] = true;
+                any = true;
+                spike_count[j] += 1;
+                act.reg_toggles += 1;
+                write_acc_at(acc, j, p.v_rest, act);
+            }
+        }
+    }
+    any
+}
+
+/// Full enable mask for `n` neurons over `words` mask words.
+fn full_mask_words(n: usize) -> Vec<u64> {
+    let words = n.div_ceil(64).max(1);
+    let mut mask = vec![u64::MAX; words];
+    let rem = n % 64;
+    if rem != 0 {
+        mask[words - 1] = (1u64 << rem) - 1;
+    }
+    if n == 0 {
+        mask[0] = 0;
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------------
+
 /// One whole layer as a structure-of-arrays.
 ///
 /// State layout: flat `acc` / `spike_count` vectors plus a multi-word
@@ -175,10 +339,7 @@ pub struct LifNeuronArray {
     spike_count: Vec<u32>,
     /// Enable latch words; cleared by the pruning mask.
     enabled: Vec<u64>,
-    acc_max: i32,
-    decay_shift: u32,
-    v_th: i32,
-    v_rest: i32,
+    params: LaneParams,
 }
 
 impl LifNeuronArray {
@@ -189,25 +350,9 @@ impl LifNeuronArray {
         LifNeuronArray {
             acc: vec![cfg.v_rest; n],
             spike_count: vec![0; n],
-            enabled: Self::full_mask(n),
-            acc_max: cfg.acc_max(),
-            decay_shift: cfg.decay_shift,
-            v_th: cfg.v_th,
-            v_rest: cfg.v_rest,
+            enabled: full_mask_words(n),
+            params: LaneParams::from_cfg(cfg),
         }
-    }
-
-    fn full_mask(n: usize) -> Vec<u64> {
-        let words = n.div_ceil(64).max(1);
-        let mut mask = vec![u64::MAX; words];
-        let rem = n % 64;
-        if rem != 0 {
-            mask[words - 1] = (1u64 << rem) - 1;
-        }
-        if n == 0 {
-            mask[0] = 0;
-        }
-        mask
     }
 
     /// Number of neurons.
@@ -259,78 +404,41 @@ impl LifNeuronArray {
         }
     }
 
-    #[inline(always)]
-    fn write_acc(&mut self, j: usize, next: i32, act: &mut ActivityCounters) {
-        act.reg_toggles += u64::from(((self.acc[j] as u32) ^ (next as u32)).count_ones());
-        self.acc[j] = next;
-    }
-
     /// Synchronous reset of every neuron (new inference window); re-enables
     /// the whole array, like `NeuronCtrl::Reset` on each core.
     pub fn reset(&mut self, act: &mut ActivityCounters) {
         for j in 0..self.acc.len() {
-            self.write_acc(j, self.v_rest, act);
+            write_acc_at(&mut self.acc, j, self.params.v_rest, act);
         }
         self.spike_count.fill(0);
-        self.enabled = Self::full_mask(self.acc.len());
+        self.enabled = full_mask_words(self.acc.len());
     }
 
     /// One BRAM row pulse: integrate `row[j]` into every *enabled* neuron
     /// with per-add saturation (ascending `j`, like the adder-tree fanout).
     #[inline]
     pub fn add_row(&mut self, row: &[i32], act: &mut ActivityCounters) {
-        debug_assert_eq!(row.len(), self.acc.len());
-        for wi in 0..self.enabled.len() {
-            let mut m = self.enabled[wi];
-            while m != 0 {
-                let j = wi * 64 + m.trailing_zeros() as usize;
-                m &= m - 1;
-                let sum = i64::from(self.acc[j]) + i64::from(row[j]);
-                let clamped = sum.clamp(-i64::from(self.acc_max), i64::from(self.acc_max)) as i32;
-                if i64::from(clamped) != sum {
-                    act.saturations += 1;
-                }
-                act.adds += 1;
-                self.write_acc(j, clamped, act);
-            }
-        }
+        lane_add_row(&mut self.acc, &self.enabled, row, &self.params, act);
     }
 
     /// One `Leak` clock: shift-subtract decay on every enabled neuron.
     #[inline]
     pub fn leak_enabled(&mut self, act: &mut ActivityCounters) {
-        for wi in 0..self.enabled.len() {
-            let mut m = self.enabled[wi];
-            while m != 0 {
-                let j = wi * 64 + m.trailing_zeros() as usize;
-                m &= m - 1;
-                let next = leak(self.acc[j], self.decay_shift);
-                act.shifts += 1;
-                act.adds += 1; // the subtract half of shift-subtract
-                self.write_acc(j, next, act);
-            }
-        }
+        lane_leak(&mut self.acc, &self.enabled, &self.params, act);
     }
 
     /// One `Fire` clock (`FireMode::EndOfStep`): evaluate the threshold
     /// comparator of every enabled neuron, setting `fired[j]` and
     /// hard-resetting on a crossing. `fired` must be pre-cleared.
     pub fn fire_check(&mut self, fired: &mut [bool], act: &mut ActivityCounters) {
-        debug_assert_eq!(fired.len(), self.acc.len());
-        for wi in 0..self.enabled.len() {
-            let mut m = self.enabled[wi];
-            while m != 0 {
-                let j = wi * 64 + m.trailing_zeros() as usize;
-                m &= m - 1;
-                act.compares += 1;
-                if self.acc[j] >= self.v_th {
-                    fired[j] = true;
-                    self.spike_count[j] += 1;
-                    act.reg_toggles += 1; // spike-count increment (approx.)
-                    self.write_acc(j, self.v_rest, act);
-                }
-            }
-        }
+        lane_fire_check(
+            &mut self.acc,
+            &mut self.spike_count,
+            &self.enabled,
+            fired,
+            &self.params,
+            act,
+        );
     }
 
     /// Mid-integration combinational fire (`FireMode::Immediate`): only
@@ -339,24 +447,165 @@ impl LifNeuronArray {
     /// `above_threshold()` pre-gate. Returns true when any neuron fired.
     /// `fired` must be pre-cleared.
     pub fn immediate_fire(&mut self, fired: &mut [bool], act: &mut ActivityCounters) -> bool {
-        debug_assert_eq!(fired.len(), self.acc.len());
-        let mut any = false;
-        for wi in 0..self.enabled.len() {
-            let mut m = self.enabled[wi];
-            while m != 0 {
-                let j = wi * 64 + m.trailing_zeros() as usize;
-                m &= m - 1;
-                if self.acc[j] >= self.v_th {
-                    act.compares += 1;
-                    fired[j] = true;
-                    any = true;
-                    self.spike_count[j] += 1;
-                    act.reg_toggles += 1;
-                    self.write_acc(j, self.v_rest, act);
-                }
+        lane_immediate_fire(
+            &mut self.acc,
+            &mut self.spike_count,
+            &self.enabled,
+            fired,
+            &self.params,
+            act,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// One layer × a whole sub-batch: per-image accumulator, spike-count and
+/// enable planes over one shared calibration, addressed
+/// `plane[b * width + j]` (lane-major, so each image's neuron state stays
+/// contiguous for the row-apply inner loop).
+///
+/// This is the state behind [`crate::rtl::RtlCore::run_fast_batch`]: the
+/// batched engine walks each weight row **once** per timestep and calls
+/// [`LifBatchArray::add_row`] for every lane whose input fired, so the
+/// row fetch is amortized over the batch while each lane's arithmetic —
+/// the shared lane primitives above — stays bit-identical to a private
+/// [`LifNeuronArray`] (pinned by `batch_array_matches_single_arrays`).
+///
+/// Pruning lives here too ([`LifBatchArray::latch_prune`]): a lane's
+/// enable plane is driven from its own spike counts exactly like the
+/// controller's mask update, so per-image gating never couples lanes.
+#[derive(Debug, Clone)]
+pub struct LifBatchArray {
+    /// Neurons per lane (the layer width).
+    n: usize,
+    /// Enable mask words per lane.
+    words: usize,
+    lanes: usize,
+    acc: Vec<i32>,
+    spike_count: Vec<u32>,
+    enabled: Vec<u64>,
+    params: LaneParams,
+}
+
+impl LifBatchArray {
+    /// Build `lanes` fresh lanes sized to the config's *output* width
+    /// (callers construct one per layer via
+    /// [`crate::SnnConfig::layer_config`]). Every lane starts reset:
+    /// `v_rest` accumulators, zero counts, fully enabled.
+    pub fn new(cfg: &SnnConfig, lanes: usize) -> Self {
+        let n = cfg.n_outputs();
+        let words = n.div_ceil(64).max(1);
+        let lane_mask = full_mask_words(n);
+        let mut enabled = Vec::with_capacity(words * lanes);
+        for _ in 0..lanes {
+            enabled.extend_from_slice(&lane_mask);
+        }
+        LifBatchArray {
+            n,
+            words,
+            lanes,
+            acc: vec![cfg.v_rest; n * lanes],
+            spike_count: vec![0; n * lanes],
+            enabled,
+            params: LaneParams::from_cfg(cfg),
+        }
+    }
+
+    /// Batch lanes held.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Neurons per lane.
+    pub fn width(&self) -> usize {
+        self.n
+    }
+
+    /// Lane `b`'s membrane potentials.
+    pub fn accs(&self, b: usize) -> &[i32] {
+        &self.acc[b * self.n..(b + 1) * self.n]
+    }
+
+    /// Lane `b`'s spike-count registers.
+    pub fn spike_counts(&self, b: usize) -> &[u32] {
+        &self.spike_count[b * self.n..(b + 1) * self.n]
+    }
+
+    /// True while at least one neuron of lane `b` is still enabled — the
+    /// per-image BRAM gate.
+    pub fn any_enabled(&self, b: usize) -> bool {
+        self.enabled[b * self.words..(b + 1) * self.words].iter().any(|&w| w != 0)
+    }
+
+    /// One BRAM row pulse into lane `b` (per-add saturation, ascending `j`).
+    #[inline]
+    pub fn add_row(&mut self, b: usize, row: &[i32], act: &mut ActivityCounters) {
+        lane_add_row(
+            &mut self.acc[b * self.n..(b + 1) * self.n],
+            &self.enabled[b * self.words..(b + 1) * self.words],
+            row,
+            &self.params,
+            act,
+        );
+    }
+
+    /// One `Leak` clock on lane `b`.
+    #[inline]
+    pub fn leak_enabled(&mut self, b: usize, act: &mut ActivityCounters) {
+        lane_leak(
+            &mut self.acc[b * self.n..(b + 1) * self.n],
+            &self.enabled[b * self.words..(b + 1) * self.words],
+            &self.params,
+            act,
+        );
+    }
+
+    /// One `Fire` clock on lane `b` (`FireMode::EndOfStep`); `fired` must
+    /// be pre-cleared and `width()` long.
+    pub fn fire_check(&mut self, b: usize, fired: &mut [bool], act: &mut ActivityCounters) {
+        lane_fire_check(
+            &mut self.acc[b * self.n..(b + 1) * self.n],
+            &mut self.spike_count[b * self.n..(b + 1) * self.n],
+            &self.enabled[b * self.words..(b + 1) * self.words],
+            fired,
+            &self.params,
+            act,
+        );
+    }
+
+    /// Mid-integration combinational fire on lane `b`
+    /// (`FireMode::Immediate`); `fired` must be pre-cleared.
+    pub fn immediate_fire(
+        &mut self,
+        b: usize,
+        fired: &mut [bool],
+        act: &mut ActivityCounters,
+    ) -> bool {
+        lane_immediate_fire(
+            &mut self.acc[b * self.n..(b + 1) * self.n],
+            &mut self.spike_count[b * self.n..(b + 1) * self.n],
+            &self.enabled[b * self.words..(b + 1) * self.words],
+            fired,
+            &self.params,
+            act,
+        )
+    }
+
+    /// Drive lane `b`'s enable plane from its own spike counts — the
+    /// controller's pruning-mask update, applied at the same latch points
+    /// the sequential engine applies it (fire clocks, and mid-walk
+    /// Immediate fires). Clearing is idempotent, exactly like the
+    /// controller's `enabled_count` guard.
+    pub fn latch_prune(&mut self, b: usize, mode: PruneMode) {
+        let PruneMode::AfterFires { after_spikes } = mode else { return };
+        let counts = &self.spike_count[b * self.n..(b + 1) * self.n];
+        let mask = &mut self.enabled[b * self.words..(b + 1) * self.words];
+        for (j, &count) in counts.iter().enumerate() {
+            if count >= after_spikes {
+                mask[j / 64] &= !(1u64 << (j % 64));
             }
         }
-        any
     }
 }
 
@@ -527,6 +776,107 @@ mod tests {
                     assert_eq!(array.enabled(j), c.enabled(), "enable at {j}");
                 }
                 assert_eq!(act_a, act_c, "activity counters diverge");
+            }
+        });
+    }
+
+    /// Every lane of a [`LifBatchArray`] must stay state- and
+    /// activity-identical to a private [`LifNeuronArray`] driven with the
+    /// same command stream — lanes are independent by construction, and a
+    /// random interleaving of per-lane commands must never couple them.
+    /// This is the foundation of `RtlCore::run_fast_batch`'s bit-exactness.
+    #[test]
+    fn batch_array_matches_single_arrays() {
+        use crate::testutil::PropRunner;
+
+        PropRunner::new("lif_batch_equiv", 40).run(|g| {
+            let lanes = g.rng.range_i32(1, 7) as usize;
+            // Mostly narrow layers, sometimes wider than one mask word.
+            let n = if g.rng.below(4) == 0 {
+                g.rng.range_i32(65, 100) as usize
+            } else {
+                g.rng.range_i32(1, 14) as usize
+            };
+            let cfg = SnnConfig {
+                topology: vec![784, n],
+                v_th: g.rng.range_i32(5, 60),
+                decay_shift: g.rng.range_i32(1, 4) as u32,
+                acc_bits: g.rng.range_i32(8, 16) as u32,
+                ..SnnConfig::paper()
+            };
+            let prune = *g.choice(&[
+                PruneMode::Off,
+                PruneMode::AfterFires { after_spikes: 1 },
+                PruneMode::AfterFires { after_spikes: 2 },
+            ]);
+            let mut batch = LifBatchArray::new(&cfg, lanes);
+            let mut singles: Vec<LifNeuronArray> =
+                (0..lanes).map(|_| LifNeuronArray::new(&cfg)).collect();
+            let mut act_b: Vec<ActivityCounters> =
+                vec![ActivityCounters::default(); lanes];
+            let mut act_s: Vec<ActivityCounters> =
+                vec![ActivityCounters::default(); lanes];
+            let mut fired_b = vec![false; n];
+            let mut fired_s = vec![false; n];
+
+            for _ in 0..100 {
+                // One random command on one random lane per round: the
+                // interleaving across lanes is itself randomized.
+                let b = g.rng.below(lanes as u32) as usize;
+                match g.rng.below(5) {
+                    0 => {
+                        let row = g.vec_i32(n, -120, 120);
+                        batch.add_row(b, &row, &mut act_b[b]);
+                        singles[b].add_row(&row, &mut act_s[b]);
+                    }
+                    1 => {
+                        batch.leak_enabled(b, &mut act_b[b]);
+                        singles[b].leak_enabled(&mut act_s[b]);
+                    }
+                    2 => {
+                        fired_b.fill(false);
+                        fired_s.fill(false);
+                        batch.fire_check(b, &mut fired_b, &mut act_b[b]);
+                        singles[b].fire_check(&mut fired_s, &mut act_s[b]);
+                        assert_eq!(fired_b, fired_s, "fire pattern diverges on lane {b}");
+                    }
+                    3 => {
+                        fired_b.fill(false);
+                        fired_s.fill(false);
+                        let any_b = batch.immediate_fire(b, &mut fired_b, &mut act_b[b]);
+                        let any_s = singles[b].immediate_fire(&mut fired_s, &mut act_s[b]);
+                        assert_eq!(any_b, any_s, "immediate any-fire diverges on {b}");
+                        assert_eq!(fired_b, fired_s, "immediate pattern diverges on {b}");
+                    }
+                    _ => {
+                        // Prune latch: the single array mirrors the
+                        // controller's mask update from its own counts.
+                        batch.latch_prune(b, prune);
+                        if let PruneMode::AfterFires { after_spikes } = prune {
+                            let enables: Vec<bool> = (0..n)
+                                .map(|j| {
+                                    singles[b].enabled(j)
+                                        && singles[b].spike_counts()[j] < after_spikes
+                                })
+                                .collect();
+                            singles[b].set_enables(&enables);
+                        }
+                    }
+                }
+                for (lane, single) in singles.iter().enumerate() {
+                    assert_eq!(batch.accs(lane), single.accs(), "membranes, lane {lane}");
+                    assert_eq!(
+                        batch.spike_counts(lane),
+                        single.spike_counts(),
+                        "counts, lane {lane}"
+                    );
+                    for j in 0..n {
+                        let bit = batch.enabled[lane * batch.words + j / 64] >> (j % 64) & 1;
+                        assert_eq!(bit == 1, single.enabled(j), "enable {j}, lane {lane}");
+                    }
+                    assert_eq!(batch.any_enabled(lane), single.any_enabled());
+                    assert_eq!(act_b[lane], act_s[lane], "activity, lane {lane}");
+                }
             }
         });
     }

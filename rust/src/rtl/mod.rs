@@ -45,12 +45,16 @@
 //!
 //! ## Execution engines
 //!
-//! The core offers two engines over one architectural state: the
-//! cycle-stepped FSM walk ([`RtlCore::tick_cycle`] / [`RtlCore::run`]) and
-//! the batched-timestep fast path ([`RtlCore::run_fast`]) that the serving
-//! backend uses. The fast path is bit- and activity-exact with the cycle
-//! path (property-tested across all mode combinations) — see
-//! EXPERIMENTS.md §Perf for the equivalence argument and measured speedup.
+//! The core offers three engines over one architecture: the cycle-stepped
+//! FSM walk ([`RtlCore::tick_cycle`] / [`RtlCore::run`]), the
+//! batched-timestep fast path ([`RtlCore::run_fast`]) and the
+//! batch-parallel fast path ([`RtlCore::run_fast_batch`]) that runs a
+//! whole sub-batch of images through one timestep sweep, walking each
+//! weight row once per timestep for the entire batch. The fast path is
+//! bit- and activity-exact with the cycle path, and the batched path is
+//! bit-exact with the fast path image for image (both property-tested
+//! across all mode combinations) — see EXPERIMENTS.md §Perf / §Batch for
+//! the equivalence arguments and measured speedups.
 //!
 //! ## Equivalence to the behavioral model
 //!
@@ -71,8 +75,8 @@ pub mod power;
 mod vcd;
 
 pub use controller::{CtrlState, LayerController};
-pub use core::{RtlCore, RtlResult};
+pub use self::core::{RtlCore, RtlResult, BATCH_LANES};
 pub use encoder::RtlPoissonEncoder;
-pub use lif_neuron::{LifNeuronArray, LifNeuronCore, NeuronCtrl};
+pub use lif_neuron::{LifBatchArray, LifNeuronArray, LifNeuronCore, NeuronCtrl};
 pub use power::{ActivityCounters, EnergyModel, EnergyReport};
 pub use vcd::VcdWriter;

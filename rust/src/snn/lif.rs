@@ -247,6 +247,241 @@ impl LifLayer {
     }
 }
 
+// ---------------------------------------------------------------------------
+
+/// One layer × a whole sub-batch of the behavioral model: per-image
+/// accumulator/count/enable planes (`plane[b * n_out + j]`, lane-major)
+/// over the layer's shared `Arc`'d weights.
+#[derive(Debug, Clone)]
+struct LifBatchLayer {
+    /// The narrowed single-layer config (per-layer params resolved).
+    cfg: SnnConfig,
+    w_rows: std::sync::Arc<Vec<i32>>,
+    acc: Vec<i32>,
+    spike_counts: Vec<u32>,
+    enabled: Vec<bool>,
+    /// Integrate-adds actually performed, per lane.
+    adds_performed: Vec<u64>,
+    /// Per-lane input-current accumulation plane for the current step.
+    current: Vec<i32>,
+}
+
+/// The batched behavioral engine: a [`LifStack`] with a batch dimension.
+/// One [`LifBatchStack::step_batch`] call advances every live image of a
+/// sub-batch through one timestep, relaying each layer's per-image fired
+/// vectors (as bitset-transposed masks — `fired[l][j]` bit `b` = image
+/// `b`'s neuron `j` fired) into the next layer's event set, so each
+/// weight row is read **once** per timestep and its current is added into
+/// every image whose input fired.
+///
+/// Per-image dynamics are identical to [`LifLayer::step_events_into`]
+/// (same saturation/leak/fire/prune update, same `adds_performed`
+/// accounting) — lanes share nothing but the weights, so batching only
+/// reorders work across images. Pinned against the sequential path by
+/// `batched_inference_equals_sequential`.
+#[derive(Debug, Clone)]
+pub struct LifBatchStack {
+    layers: Vec<LifBatchLayer>,
+    lanes: usize,
+    /// Layer-0 transposed input-mask scratch.
+    masks: Vec<u64>,
+    /// Per-layer transposed fire masks for the current step (the relay).
+    fired_masks: Vec<Vec<u64>>,
+    /// Per-layer, per-lane fire counts this step (the next layer's
+    /// event-list lengths, for adds accounting).
+    fired_len: Vec<Vec<u32>>,
+}
+
+impl LifBatchStack {
+    /// Batch lanes one stack multiplexes (the transposed masks are single
+    /// `u64` words); larger sub-batches are chunked by the caller.
+    pub const MAX_LANES: usize = 64;
+
+    /// Build from a stack's layers, sharing their weight `Arc`s (state
+    /// planes start empty; [`LifBatchStack::reset`] sizes them per batch).
+    pub(crate) fn from_layers(layers: &[LifLayer]) -> Self {
+        let max_in = layers.iter().map(|l| l.cfg.n_inputs()).max().unwrap_or(0);
+        LifBatchStack {
+            layers: layers
+                .iter()
+                .map(|l| LifBatchLayer {
+                    cfg: l.cfg.clone(),
+                    w_rows: std::sync::Arc::clone(&l.w_rows),
+                    acc: Vec::new(),
+                    spike_counts: Vec::new(),
+                    enabled: Vec::new(),
+                    adds_performed: Vec::new(),
+                    current: Vec::new(),
+                })
+                .collect(),
+            lanes: 0,
+            masks: vec![0; max_in],
+            fired_masks: layers.iter().map(|l| vec![0u64; l.cfg.n_outputs()]).collect(),
+            fired_len: layers.iter().map(|_| Vec::new()).collect(),
+        }
+    }
+
+    /// Number of weight layers.
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Current batch width.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Reset for a fresh sub-batch of `lanes` images (≤ `MAX_LANES`):
+    /// every lane starts with `v_rest` accumulators, zero counts, full
+    /// enables — exactly [`LifStack::reset`], per image.
+    pub fn reset(&mut self, lanes: usize) {
+        assert!(lanes <= Self::MAX_LANES, "batch chunk exceeds {} lanes", Self::MAX_LANES);
+        self.lanes = lanes;
+        for layer in &mut self.layers {
+            let n = layer.cfg.n_outputs();
+            layer.acc.clear();
+            layer.acc.resize(lanes * n, layer.cfg.v_rest);
+            layer.spike_counts.clear();
+            layer.spike_counts.resize(lanes * n, 0);
+            layer.enabled.clear();
+            layer.enabled.resize(lanes * n, true);
+            layer.adds_performed.clear();
+            layer.adds_performed.resize(lanes, 0);
+            layer.current.clear();
+            layer.current.resize(lanes * n, 0);
+        }
+        for fl in &mut self.fired_len {
+            fl.clear();
+            fl.resize(lanes, 0);
+        }
+        for fm in &mut self.fired_masks {
+            fm.fill(0);
+        }
+    }
+
+    /// Advance one timestep for every lane in `live`, chaining each
+    /// layer's fired masks into the next layer's event set. `active[b]`
+    /// is lane `b`'s layer-0 event list (spiking input indices); entries
+    /// of retired lanes are ignored.
+    pub fn step_batch(&mut self, live: &[usize], active: &[Vec<u32>]) {
+        for fm in &mut self.fired_masks {
+            fm.fill(0);
+        }
+        let n_layers = self.layers.len();
+        for l in 0..n_layers {
+            let n_in = self.layers[l].cfg.n_inputs();
+            let n_out = self.layers[l].cfg.n_outputs();
+
+            // Clear the live lanes' current planes and account this
+            // step's integrate adds (events × enabled neurons, counted at
+            // step entry exactly like `step_events_into`).
+            {
+                let layer = &mut self.layers[l];
+                for &b in live {
+                    layer.current[b * n_out..(b + 1) * n_out].fill(0);
+                    let n_enabled = layer.enabled[b * n_out..(b + 1) * n_out]
+                        .iter()
+                        .filter(|&&e| e)
+                        .count() as u64;
+                    let events = if l == 0 {
+                        active[b].len() as u64
+                    } else {
+                        u64::from(self.fired_len[l - 1][b])
+                    };
+                    layer.adds_performed[b] += events * n_enabled;
+                }
+            }
+
+            // Build the transposed input masks (layer 0 from the encoder
+            // event lists; deeper layers read the previous layer's fire
+            // masks directly) and run the row-reuse sweep: each weight
+            // row is fetched once and added into every firing lane's
+            // current plane, ascending `i` so per-lane sums keep the
+            // sequential order.
+            if l == 0 {
+                self.masks[..n_in].fill(0);
+                for &b in live {
+                    for &i in &active[b] {
+                        self.masks[i as usize] |= 1u64 << b;
+                    }
+                }
+            }
+            {
+                let layer = &mut self.layers[l];
+                let (w_rows, current) = (&layer.w_rows, &mut layer.current);
+                let src: &[u64] =
+                    if l == 0 { &self.masks[..n_in] } else { &self.fired_masks[l - 1] };
+                for (i, &src_mask) in src.iter().enumerate() {
+                    let mut m = src_mask;
+                    if m == 0 {
+                        continue;
+                    }
+                    let row = &w_rows[i * n_out..(i + 1) * n_out];
+                    while m != 0 {
+                        let b = m.trailing_zeros() as usize;
+                        m &= m - 1;
+                        let cur = &mut current[b * n_out..(b + 1) * n_out];
+                        for (c, &w) in cur.iter_mut().zip(row) {
+                            *c += w;
+                        }
+                    }
+                }
+            }
+
+            // Integrate/leak/fire/prune per live lane — the exact
+            // `step_events_into` neuron update, plane-addressed.
+            let layer = &mut self.layers[l];
+            let fired_masks_l = &mut self.fired_masks[l];
+            let fired_len_l = &mut self.fired_len[l];
+            for &b in live {
+                let base = b * n_out;
+                let mut fires = 0u32;
+                for j in 0..n_out {
+                    if !layer.enabled[base + j] {
+                        continue;
+                    }
+                    let integrated = sat_clamp(
+                        i64::from(layer.acc[base + j]) + i64::from(layer.current[base + j]),
+                        layer.cfg.acc_bits,
+                    );
+                    let leaked = leak(integrated, layer.cfg.decay_shift);
+                    if leaked >= layer.cfg.v_th {
+                        fired_masks_l[j] |= 1u64 << b;
+                        fires += 1;
+                        layer.spike_counts[base + j] += 1;
+                        layer.acc[base + j] = layer.cfg.v_rest;
+                        if let PruneMode::AfterFires { after_spikes } = layer.cfg.prune {
+                            if layer.spike_counts[base + j] >= after_spikes {
+                                layer.enabled[base + j] = false;
+                            }
+                        }
+                    } else {
+                        layer.acc[base + j] = leaked;
+                    }
+                }
+                fired_len_l[b] = fires;
+            }
+        }
+    }
+
+    /// Lane `b`'s final-layer spike counts.
+    pub fn spike_counts(&self, b: usize) -> &[u32] {
+        let layer = self.layers.last().expect("stack has at least one layer");
+        let n = layer.cfg.n_outputs();
+        &layer.spike_counts[b * n..(b + 1) * n]
+    }
+
+    /// Did lane `b`'s output neuron `j` fire on the last step?
+    pub fn output_fired(&self, b: usize, j: usize) -> bool {
+        self.fired_masks.last().expect("stack has at least one layer")[j] >> b & 1 == 1
+    }
+
+    /// Lane `b`'s integrate-adds, summed over every layer.
+    pub fn adds_performed(&self, b: usize) -> u64 {
+        self.layers.iter().map(|l| l.adds_performed[b]).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

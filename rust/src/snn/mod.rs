@@ -12,7 +12,7 @@ mod lif;
 mod network;
 
 pub use encoder::{encode_image, encode_step, PoissonEncoder};
-pub use lif::{LifLayer, StepTrace};
+pub use lif::{LifBatchStack, LifLayer, StepTrace};
 pub use network::{classify, classify_with_trace, BehavioralNet, Classification, EarlyExit, LifStack};
 
 #[cfg(test)]

@@ -12,9 +12,9 @@
 
 use crate::config::{DecisionPolicy, SnnConfig};
 use crate::data::Image;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::fixed::WeightStack;
-use crate::snn::{LifLayer, PoissonEncoder, StepTrace};
+use crate::snn::{LifBatchStack, LifLayer, PoissonEncoder, StepTrace};
 use crate::util::{margin_reached, priority_argmax};
 
 /// Early-termination policy applied between timesteps (the serving-level
@@ -188,6 +188,13 @@ impl LifStack {
         fired_out.copy_from_slice(&self.fired[n - 1]);
     }
 
+    /// A batched mirror of this stack: per-image state planes over the
+    /// same shared weights ([`LifBatchStack`]; the poolable unit of the
+    /// batched serving backend — cheap, weights stay behind `Arc`).
+    pub fn batch_prototype(&self) -> LifBatchStack {
+        LifBatchStack::from_layers(&self.layers)
+    }
+
     /// Advance one timestep with full observability; returns the *final*
     /// layer's trace (hidden layers still advance — Fig. 4 plots output
     /// neurons).
@@ -264,6 +271,46 @@ impl BehavioralNet {
         self.stack.clone()
     }
 
+    /// A fresh batched stack wired to this net's weights (seed for the
+    /// batched serving backend's pool).
+    pub fn batch_prototype(&self) -> LifBatchStack {
+        self.stack.batch_prototype()
+    }
+
+    /// Classify a whole sub-batch through **one batched engine pass**:
+    /// per timestep, every live image's encoder events are drawn, then
+    /// [`LifBatchStack::step_batch`] walks each weight row once for the
+    /// batch. Per-image results equal [`BehavioralNet::classify_opts`]
+    /// exactly — the per-`(image, seed)` PRNG streams and per-image state
+    /// planes commute with batching (pinned by test), and early exit
+    /// retires images from the sweep on the same timestep the sequential
+    /// loop would stop. Sub-batches beyond
+    /// [`LifBatchStack::MAX_LANES`] images are processed in chunks.
+    pub fn classify_batch_with(
+        &self,
+        batch: &mut LifBatchStack,
+        images: &[&Image],
+        seeds: &[u32],
+        timesteps: u32,
+        early: EarlyExit,
+    ) -> Result<Vec<Classification>> {
+        if images.len() != seeds.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "batch of {} images vs {} seeds",
+                images.len(),
+                seeds.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(images.len());
+        for (imgs, sds) in images
+            .chunks(LifBatchStack::MAX_LANES)
+            .zip(seeds.chunks(LifBatchStack::MAX_LANES))
+        {
+            run_batch_inference(&self.cfg, batch, imgs, sds, timesteps, early, &mut out);
+        }
+        Ok(out)
+    }
+
     /// Classify and capture the full per-step output-layer trace
     /// (Fig. 4 / goldens).
     pub fn classify_traced(
@@ -338,6 +385,68 @@ fn run_inference(
         },
         traces,
     )
+}
+
+/// Shared batched inference loop (one ≤`MAX_LANES` chunk): the batch-wide
+/// mirror of [`run_inference`] — same clamp, same margin predicate at the
+/// same schedule point, per image.
+fn run_batch_inference(
+    cfg: &SnnConfig,
+    batch: &mut LifBatchStack,
+    images: &[&Image],
+    seeds: &[u32],
+    timesteps: u32,
+    early: EarlyExit,
+    out: &mut Vec<Classification>,
+) {
+    let b_n = images.len();
+    batch.reset(b_n);
+    let early = early.clamped_for(cfg);
+    let mut encoders: Vec<PoissonEncoder> =
+        images.iter().zip(seeds).map(|(img, &s)| PoissonEncoder::new(img, s)).collect();
+    let mut active: Vec<Vec<u32>> =
+        (0..b_n).map(|_| Vec::with_capacity(cfg.n_inputs())).collect();
+    let mut live: Vec<usize> = (0..b_n).collect();
+    let n_out = cfg.n_outputs();
+    let mut first_spike: Vec<Vec<Option<u32>>> = vec![vec![None; n_out]; b_n];
+    let mut steps_run = vec![0u32; b_n];
+
+    for t in 0..timesteps {
+        // Each live image draws its own independent Poisson events…
+        for &b in &live {
+            encoders[b].step_active_into(&mut active[b]);
+        }
+        // …and one engine pass serves the whole sub-batch.
+        batch.step_batch(&live, &active);
+        for &b in &live {
+            for j in 0..n_out {
+                if batch.output_fired(b, j) && first_spike[b][j].is_none() {
+                    first_spike[b][j] = Some(t);
+                }
+            }
+            steps_run[b] = t + 1;
+        }
+        if let EarlyExit::Margin { margin, min_steps } = early {
+            if t + 1 >= min_steps {
+                live.retain(|&b| !margin_reached(batch.spike_counts(b), margin));
+            }
+        }
+        if live.is_empty() {
+            break;
+        }
+    }
+
+    for b in 0..b_n {
+        let spike_counts = batch.spike_counts(b).to_vec();
+        let class = Classification::decide(cfg.decision, &spike_counts, &first_spike[b]);
+        out.push(Classification {
+            class,
+            spike_counts,
+            first_spike: std::mem::take(&mut first_spike[b]),
+            steps_run: steps_run[b],
+            adds_performed: batch.adds_performed(b),
+        });
+    }
 }
 
 /// Convenience free function: classify with a fresh net (tests, examples).
@@ -626,6 +735,80 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The behavioral batch theorem: `classify_batch_with` equals
+    /// `classify_opts` image for image — full `Classification` equality,
+    /// including `first_spike`, `steps_run` and `adds_performed` — across
+    /// batch sizes, depths, per-layer overrides, and early-exit on/off,
+    /// with one reused batch state across all calls (pinning reset too).
+    #[test]
+    fn batched_inference_equals_sequential() {
+        use crate::config::LayerParams;
+        let mut rng = crate::prng::Xorshift32::new(0xBEE5);
+        let configs: Vec<(SnnConfig, WeightStack)> = vec![
+            (
+                SnnConfig::paper().with_timesteps(6).with_prune(PruneMode::Off),
+                WeightStack::from(block_weights()),
+            ),
+            (
+                SnnConfig::paper()
+                    .with_topology(vec![784, 20, 10])
+                    .with_timesteps(6)
+                    .with_prune(PruneMode::Off),
+                deep_block_stack(),
+            ),
+            (
+                // Heterogeneous per-layer thresholds + readout pruning:
+                // the per-layer resolution must batch identically, and
+                // the margin clamp must bite identically in both paths.
+                SnnConfig::paper()
+                    .with_topology(vec![784, 20, 10])
+                    .with_timesteps(6)
+                    .with_prune(PruneMode::Off)
+                    .with_layer_params(vec![
+                        LayerParams::default(),
+                        LayerParams {
+                            v_th: Some(100),
+                            decay_shift: Some(2),
+                            prune: Some(PruneMode::AfterFires { after_spikes: 1 }),
+                        },
+                    ]),
+                deep_block_stack(),
+            ),
+        ];
+        for (cfg, stack) in configs {
+            let net = BehavioralNet::new(cfg, stack).unwrap();
+            let mut batch_state = net.batch_prototype();
+            for batch in [1usize, 2, 5, 9] {
+                for early in
+                    [EarlyExit::Off, EarlyExit::Margin { margin: 2, min_steps: 2 }]
+                {
+                    let images: Vec<Image> =
+                        (0..batch).map(|i| block_image((i * 3 + batch) % 10)).collect();
+                    let refs: Vec<&Image> = images.iter().collect();
+                    let seeds: Vec<u32> = (0..batch).map(|_| rng.next_u32()).collect();
+                    let got = net
+                        .classify_batch_with(&mut batch_state, &refs, &seeds, 6, early)
+                        .unwrap();
+                    assert_eq!(got.len(), batch);
+                    for (i, g) in got.iter().enumerate() {
+                        let want = net.classify_opts(&images[i], seeds[i], 6, early);
+                        assert_eq!(g, &want, "lane {i} (batch={batch}, early={early:?})");
+                    }
+                }
+            }
+        }
+
+        // Length mismatch is an error, not a panic (contract parity with
+        // `RtlCore::run_fast_batch`).
+        let net = BehavioralNet::new(SnnConfig::paper().with_timesteps(2), block_weights())
+            .unwrap();
+        let mut bs = net.batch_prototype();
+        let img = block_image(1);
+        assert!(net
+            .classify_batch_with(&mut bs, &[&img, &img], &[1], 2, EarlyExit::Off)
+            .is_err());
     }
 
     #[test]

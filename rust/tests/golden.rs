@@ -317,6 +317,32 @@ fn run_fast_matches_pinned_golden_vectors() {
 }
 
 #[test]
+fn batched_run_fast_matches_pinned_golden_vectors() {
+    // All nine single-layer fixtures through `run_fast_batch`, batching
+    // each config's three images (distinct seeds) into ONE sweep: the
+    // batched engine must reproduce every pinned constant — per-image
+    // PRNG streams commute with batching.
+    for config in ["fire", "leak", "prune"] {
+        let cases: Vec<&GoldenCase> =
+            GOLDEN_CASES.iter().filter(|c| c.config == config).collect();
+        assert_eq!(cases.len(), 3);
+        let images: Vec<Image> = cases.iter().map(|c| fixture_image(c.image)).collect();
+        let refs: Vec<&Image> = images.iter().collect();
+        let seeds: Vec<u32> = cases.iter().map(|c| c.seed).collect();
+        let mut core = RtlCore::new(fixture_config(config), fixture_weights()).unwrap();
+        let results = core
+            .run_fast_batch(&refs, &seeds, snn_rtl::snn::EarlyExit::Off)
+            .unwrap();
+        for (case, r) in cases.iter().zip(&results) {
+            let tag = format!("batched {}/{}", case.config, case.image);
+            assert_eq!(r.spike_counts, case.counts, "{tag}: spike counts drifted");
+            assert_eq!(r.class, case.winner, "{tag}: winner drifted");
+            assert_eq!(r.cycles, case.cycles, "{tag}: cycle count drifted");
+        }
+    }
+}
+
+#[test]
 fn cycle_path_matches_pinned_golden_vectors() {
     // The same constants through the cycle-stepped FSM: a drift that hits
     // only one engine is localized immediately.
@@ -522,6 +548,36 @@ fn deep_run_fast_matches_pinned_golden_vectors() {
         );
         assert_eq!(r.class, case.winner, "{tag}: winner drifted");
         assert_eq!(r.cycles, case.cycles, "{tag}: cycle count drifted");
+    }
+}
+
+#[test]
+fn batched_deep_run_fast_matches_pinned_golden_vectors() {
+    // The nine 2-layer fixtures through the batched layered schedule —
+    // per-layer counts included, so the batched inter-layer hand-off
+    // masks are pinned too.
+    for config in ["deep", "deep_prune", "deep_fire"] {
+        let cases: Vec<&DeepGoldenCase> =
+            DEEP_GOLDEN_CASES.iter().filter(|c| c.config == config).collect();
+        assert_eq!(cases.len(), 3);
+        let images: Vec<Image> = cases.iter().map(|c| fixture_image(c.image)).collect();
+        let refs: Vec<&Image> = images.iter().collect();
+        let seeds: Vec<u32> = cases.iter().map(|c| c.seed).collect();
+        let mut core =
+            RtlCore::new(deep_fixture_config(config), deep_fixture_stack()).unwrap();
+        let results = core
+            .run_fast_batch(&refs, &seeds, snn_rtl::snn::EarlyExit::Off)
+            .unwrap();
+        for (case, r) in cases.iter().zip(&results) {
+            let tag = format!("batched {}/{}", case.config, case.image);
+            assert_eq!(
+                r.spike_counts_by_layer[0], case.hidden_counts,
+                "{tag}: hidden counts drifted"
+            );
+            assert_eq!(r.spike_counts, case.counts, "{tag}: output counts drifted");
+            assert_eq!(r.class, case.winner, "{tag}: winner drifted");
+            assert_eq!(r.cycles, case.cycles, "{tag}: cycle count drifted");
+        }
     }
 }
 
@@ -772,6 +828,98 @@ fn hetero_run_fast_matches_pinned_golden_vectors() {
         assert_eq!(r.spike_counts, case.counts, "{tag}: output counts drifted");
         assert_eq!(r.class, case.winner, "{tag}: winner drifted");
         assert_eq!(r.cycles, case.cycles, "{tag}: cycle count drifted");
+    }
+}
+
+#[test]
+fn batched_hetero_run_fast_matches_pinned_golden_vectors() {
+    // The six heterogeneous 3-layer fixtures through the batched path —
+    // with these, all 24 embedded golden fixtures anchor
+    // `run_fast_batch`: per-layer parameter resolution must batch
+    // identically under both fire modes.
+    for config in ["hetero", "hetero_fire"] {
+        let cases: Vec<&HeteroGoldenCase> =
+            HETERO_GOLDEN_CASES.iter().filter(|c| c.config == config).collect();
+        assert_eq!(cases.len(), 3);
+        let images: Vec<Image> = cases.iter().map(|c| fixture_image(c.image)).collect();
+        let refs: Vec<&Image> = images.iter().collect();
+        let seeds: Vec<u32> = cases.iter().map(|c| c.seed).collect();
+        let mut core =
+            RtlCore::new(hetero_fixture_config(config), hetero_fixture_stack()).unwrap();
+        let results = core
+            .run_fast_batch(&refs, &seeds, snn_rtl::snn::EarlyExit::Off)
+            .unwrap();
+        for (case, r) in cases.iter().zip(&results) {
+            let tag = format!("batched {}/{}", case.config, case.image);
+            assert_eq!(r.spike_counts_by_layer[0], case.l0_counts, "{tag}: layer 0");
+            assert_eq!(r.spike_counts_by_layer[1], case.l1_counts, "{tag}: layer 1");
+            assert_eq!(r.spike_counts, case.counts, "{tag}: output counts");
+            assert_eq!(r.class, case.winner, "{tag}: winner");
+            assert_eq!(r.cycles, case.cycles, "{tag}: cycle count");
+        }
+    }
+}
+
+#[test]
+fn batched_behavioral_matches_pinned_golden_vectors() {
+    // The batched behavioral engine against the architectural-contract
+    // fixtures (EndOfStep + per-timestep leak): `prune`, `deep`,
+    // `deep_prune` and `hetero` constants all reproduce through ONE
+    // `classify_batch_with` pass per config.
+    use snn_rtl::snn::EarlyExit;
+    {
+        let cases: Vec<&GoldenCase> =
+            GOLDEN_CASES.iter().filter(|c| c.config == "prune").collect();
+        let images: Vec<Image> = cases.iter().map(|c| fixture_image(c.image)).collect();
+        let refs: Vec<&Image> = images.iter().collect();
+        let seeds: Vec<u32> = cases.iter().map(|c| c.seed).collect();
+        let cfg = fixture_config("prune");
+        let net = BehavioralNet::new(cfg.clone(), fixture_weights()).unwrap();
+        let mut batch = net.batch_prototype();
+        let outs = net
+            .classify_batch_with(&mut batch, &refs, &seeds, cfg.timesteps, EarlyExit::Off)
+            .unwrap();
+        for (case, out) in cases.iter().zip(&outs) {
+            let tag = format!("batched-behavioral {}/{}", case.config, case.image);
+            assert_eq!(out.spike_counts, case.counts, "{tag}: counts drifted");
+            assert_eq!(out.class, case.winner, "{tag}: winner drifted");
+        }
+    }
+    for config in ["deep", "deep_prune"] {
+        let cases: Vec<&DeepGoldenCase> =
+            DEEP_GOLDEN_CASES.iter().filter(|c| c.config == config).collect();
+        let images: Vec<Image> = cases.iter().map(|c| fixture_image(c.image)).collect();
+        let refs: Vec<&Image> = images.iter().collect();
+        let seeds: Vec<u32> = cases.iter().map(|c| c.seed).collect();
+        let cfg = deep_fixture_config(config);
+        let net = BehavioralNet::new(cfg.clone(), deep_fixture_stack()).unwrap();
+        let mut batch = net.batch_prototype();
+        let outs = net
+            .classify_batch_with(&mut batch, &refs, &seeds, cfg.timesteps, EarlyExit::Off)
+            .unwrap();
+        for (case, out) in cases.iter().zip(&outs) {
+            let tag = format!("batched-behavioral {}/{}", case.config, case.image);
+            assert_eq!(out.spike_counts, case.counts, "{tag}: counts drifted");
+            assert_eq!(out.class, case.winner, "{tag}: winner drifted");
+        }
+    }
+    {
+        let cases: Vec<&HeteroGoldenCase> =
+            HETERO_GOLDEN_CASES.iter().filter(|c| c.config == "hetero").collect();
+        let images: Vec<Image> = cases.iter().map(|c| fixture_image(c.image)).collect();
+        let refs: Vec<&Image> = images.iter().collect();
+        let seeds: Vec<u32> = cases.iter().map(|c| c.seed).collect();
+        let cfg = hetero_fixture_config("hetero");
+        let net = BehavioralNet::new(cfg.clone(), hetero_fixture_stack()).unwrap();
+        let mut batch = net.batch_prototype();
+        let outs = net
+            .classify_batch_with(&mut batch, &refs, &seeds, cfg.timesteps, EarlyExit::Off)
+            .unwrap();
+        for (case, out) in cases.iter().zip(&outs) {
+            let tag = format!("batched-behavioral hetero/{}", case.image);
+            assert_eq!(out.spike_counts, case.counts, "{tag}: counts drifted");
+            assert_eq!(out.class, case.winner, "{tag}: winner drifted");
+        }
     }
 }
 

@@ -4,11 +4,14 @@ documented architectural semantics (encoder, LIF datapath, layered
 schedule, pruning controller) used to derive the checked-in constants in
 rust/tests/golden.rs.
 
-Protocol (same as PRs 2-3): the transliteration must first reproduce the
-existing pinned fixtures bit-for-bit -- all 9 single-layer cases and all
-9 two-layer cases -- before any newly generated constants are trusted.
-Run with no arguments; it validates, then prints the heterogeneous
-per-layer fixture table.
+Protocol (same as PRs 2-4): the transliteration must first reproduce the
+existing pinned fixtures bit-for-bit -- all 9 single-layer cases, all 9
+two-layer cases and all 6 heterogeneous 3-layer cases -- before any newly
+generated constants are trusted. Run with no arguments; it validates the
+sequential schedule, then cross-checks the BATCHED schedule
+(`run_core_batch`, mirroring `RtlCore::run_fast_batch`: one weight-row
+walk per timestep serves every image of the batch) against the same 24
+fixture constants, and finally prints the heterogeneous fixture table.
 """
 
 M32 = 0xFFFFFFFF
@@ -243,6 +246,37 @@ def deep_cfg(name):
         return (150, 3, 2), "imm"
     raise ValueError(name)
 
+# --- heterogeneous per-layer fixtures --------------------------------------
+
+HETERO_PARAMS = [(260, 3, 2), (120, 2, 1), (40, 4, 0)]
+
+# The pinned heterogeneous constants (rust/tests/golden.rs
+# HETERO_GOLDEN_CASES): (config, image, seed, l0, l1, counts, winner,
+# cycles).
+HETERO_CASES = [
+    ("hetero", "ramp", 0x11112222,
+     [1] + [2] * 13, [1, 1, 0, 0, 0, 1, 0, 1, 0, 1, 0, 1],
+     [1, 2, 0, 0, 0, 1, 0, 1, 0, 1], 1, 6528),
+    ("hetero", "rev", 0x33334444,
+     [2] * 13 + [1], [1, 0, 0, 1, 0, 1, 1, 1, 0, 1, 1, 0],
+     [1, 0, 0, 1, 0, 1, 1, 1, 0, 1], 0, 6528),
+    ("hetero", "band", 0x55556666,
+     [2] * 14, [1, 1, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0],
+     [1, 1, 0, 0, 0, 1, 0, 0, 0, 0], 0, 6528),
+    ("hetero_fire", "ramp", 0x11112222,
+     [1] + [2] * 13, [0, 1, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0],
+     [0, 1, 1, 0, 0, 0, 0, 0, 0, 0], 1, 6528),
+    ("hetero_fire", "rev", 0x33334444,
+     [2] * 13 + [1], [1] + [0] * 11,
+     [1] + [0] * 9, 0, 6528),
+    ("hetero_fire", "band", 0x55556666,
+     [2] * 14, [1, 1, 1, 1, 1, 0, 0, 0, 0, 0, 1, 1],
+     [2, 2, 1, 1, 1, 0, 0, 0, 0, 0], 0, 6528),
+]
+
+def hetero_mode(cfg):
+    return "end" if cfg == "hetero" else "imm"
+
 def validate():
     stack = fixture_weights_single()
     for cfg, img, seed, counts, winner, cycles in SINGLE_CASES:
@@ -259,11 +293,113 @@ def validate():
         assert got_c[0] == hidden, (cfg, img, got_c[0], hidden)
         assert got_c[1] == counts, (cfg, img, got_c[1], counts)
         assert got_w == winner and got_cy == cycles, (cfg, img, got_w, got_cy)
-    print("validated: all 18 pinned fixtures reproduced bit-for-bit")
+    hstack = hetero_fixture_stack()
+    for cfg, img, seed, l0, l1, counts, winner, cycles in HETERO_CASES:
+        got_c, got_w, got_cy = run_core(
+            hstack, fixture_image(img), seed, 8, hetero_mode(cfg), None,
+            HETERO_PARAMS)
+        assert got_c[0] == l0 and got_c[1] == l1, (cfg, img, got_c)
+        assert got_c[2] == counts, (cfg, img, got_c[2], counts)
+        assert got_w == winner and got_cy == cycles, (cfg, img, got_w, got_cy)
+    print("validated: all 24 pinned fixtures reproduced bit-for-bit")
 
-# --- heterogeneous per-layer fixtures --------------------------------------
+# --- batched-schedule cross-check ------------------------------------------
 
-HETERO_PARAMS = [(260, 3, 2), (120, 2, 1), (40, 4, 0)]
+def run_core_batch(stack, images, seeds, timesteps, fire_mode, leak_row_len,
+                   layer_params, acc_bits=24):
+    """The batched sweep, mirroring RtlCore::run_fast_batch: per timestep,
+    per layer, per integrate group, draw EVERY image's lanes first, then
+    walk each weight row once and apply it to every image whose input
+    fired. Per-image state (PRNG streams, layers, cycle counters) is
+    disjoint, so batching only reorders work across images -- the
+    commutation argument behind the Rust batch engine's bit-exactness."""
+    n_layers = len(stack)
+    widths = [len(stack[l][0]) for l in range(n_layers)]
+    B = len(images)
+    layers = [[Layer(widths[l], *layer_params[l], acc_bits)
+               for l in range(n_layers)] for _ in range(B)]
+    states = [[pixel_seed(seeds[b], i) for i in range(IMG_PIXELS)]
+              for b in range(B)]
+    cycles = [0] * B
+    batch = list(range(B))
+    for _t in range(timesteps):
+        for l in range(n_layers):
+            n_in = IMG_PIXELS if l == 0 else widths[l - 1]
+            for p in range(n_in):
+                # transposed active mask for input p over the batch
+                fired_by = []
+                for b in batch:
+                    if l == 0:
+                        states[b][p] = xorshift32_step(states[b][p])
+                        spike = images[b][p] > (states[b][p] & 0xFF)
+                    else:
+                        spike = layers[b][l - 1].step_fired[p]
+                    if spike:
+                        fired_by.append(b)
+                # ONE row walk serves every firing image of the batch
+                row = stack[l][p]
+                for b in fired_by:
+                    layers[b][l].add_row(row)
+                for b in batch:
+                    cycles[b] += 1
+                    if fire_mode == "imm":
+                        layers[b][l].immediate_fire()
+                row_boundary = (l == 0 and leak_row_len is not None
+                                and (p + 1) % leak_row_len == 0)
+                if p + 1 == n_in or row_boundary:
+                    for b in batch:
+                        layers[b][l].leak_enabled()
+                        cycles[b] += 1
+            for b in batch:
+                if fire_mode == "end":
+                    layers[b][l].fire_check()
+                else:
+                    layers[b][l].latch_prune()
+                cycles[b] += 1
+        for b in batch:
+            for l in range(n_layers):
+                layers[b][l].step_fired = [False] * widths[l]
+    out = []
+    for b in range(B):
+        counts = [layers[b][l].count for l in range(n_layers)]
+        winner = max(range(widths[-1]), key=lambda j: (counts[-1][j], -j))
+        out.append((counts, winner, cycles[b]))
+    return out
+
+def validate_batch():
+    """Anchor the batched schedule: all 24 pinned fixture rows reproduced
+    by run_core_batch, batching each config's three images into ONE
+    sweep."""
+    stack = fixture_weights_single()
+    for cfg_name in ["fire", "leak", "prune"]:
+        cases = [c for c in SINGLE_CASES if c[0] == cfg_name]
+        params, mode, row = single_cfg(cfg_name)
+        got = run_core_batch(stack, [fixture_image(c[1]) for c in cases],
+                             [c[2] for c in cases], 8, mode, row, [params])
+        for (cfg, img, _s, counts, winner, cycles), (gc, gw, gcy) in zip(cases, got):
+            assert gc[-1] == counts and gw == winner and gcy == cycles, \
+                ("batched", cfg, img, gc[-1], gw, gcy)
+    dstack = deep_fixture_stack()
+    for cfg_name in ["deep", "deep_prune", "deep_fire"]:
+        cases = [c for c in DEEP_CASES if c[0] == cfg_name]
+        params, mode = deep_cfg(cfg_name)
+        got = run_core_batch(dstack, [fixture_image(c[1]) for c in cases],
+                             [c[2] for c in cases], 8, mode, None,
+                             [params, params])
+        for (cfg, img, _s, hidden, counts, winner, cycles), (gc, gw, gcy) in zip(cases, got):
+            assert gc[0] == hidden and gc[1] == counts, ("batched", cfg, img, gc)
+            assert gw == winner and gcy == cycles, ("batched", cfg, img, gw, gcy)
+    hstack = hetero_fixture_stack()
+    for cfg_name in ["hetero", "hetero_fire"]:
+        cases = [c for c in HETERO_CASES if c[0] == cfg_name]
+        got = run_core_batch(hstack, [fixture_image(c[1]) for c in cases],
+                             [c[2] for c in cases], 8, hetero_mode(cfg_name),
+                             None, HETERO_PARAMS)
+        for (cfg, img, _s, l0, l1, counts, winner, cycles), (gc, gw, gcy) in zip(cases, got):
+            assert gc[0] == l0 and gc[1] == l1 and gc[2] == counts, \
+                ("batched", cfg, img, gc)
+            assert gw == winner and gcy == cycles, ("batched", cfg, img, gw, gcy)
+    print("validated: batched sweep reproduces all 24 fixtures image-for-image")
 
 def hetero():
     stack = hetero_fixture_stack()
@@ -277,4 +413,5 @@ def hetero():
 
 if __name__ == "__main__":
     validate()
+    validate_batch()
     hetero()
