@@ -9,6 +9,7 @@ use std::time::{Duration, Instant};
 
 use snn_rtl::coordinator::{
     BatchPolicy, BehavioralBackend, Coordinator, CoordinatorConfig, FanoutPolicy, Request,
+    SupervisionPolicy,
 };
 use snn_rtl::data::{codec, DigitGen, Image};
 use snn_rtl::runtime::Manifest;
@@ -32,7 +33,7 @@ fn drive(name: &str, coord: &Coordinator, images: &[Image], requests: usize) -> 
     for i in 0..requests {
         let img = images[i % images.len()].clone();
         loop {
-            match handle.submit(Request { image: img.clone(), seed: Some(i as u32 + 1) }) {
+            match handle.submit(Request::new(img.clone()).with_seed(i as u32 + 1)) {
                 Ok(rx) => {
                     receivers.push(rx);
                     break;
@@ -92,6 +93,7 @@ fn main() {
                     batch: BatchPolicy { max_batch, max_delay: Duration::from_micros(500) },
                     early: EarlyExit::Off,
                     fanout: FanoutPolicy::default(),
+                    supervision: SupervisionPolicy::default(),
                 },
             );
             let name = format!("behavioral_w{workers}_b{max_batch}");
@@ -117,6 +119,7 @@ fn main() {
                 batch: BatchPolicy { max_batch: 64, max_delay: Duration::from_micros(500) },
                 early: EarlyExit::Off,
                 fanout,
+                supervision: SupervisionPolicy::default(),
             },
         );
         let name = format!("behavioral_w4_b64_{tag}");
@@ -138,6 +141,7 @@ fn main() {
                 batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_micros(500) },
                 early: EarlyExit::Margin { margin: 2, min_steps: 3 },
                 fanout: FanoutPolicy::default(),
+                supervision: SupervisionPolicy::default(),
             },
         );
         let row = drive("behavioral_early_exit", &coord, &images, requests);

@@ -33,12 +33,23 @@
 //! * the **calibrated fan-out crossover** (`FanoutPolicy::calibrated`)
 //!   measured for the RTL backend,
 //!
-//! and writes the results to `BENCH_5.json` (plus stdout; the emitted
+//! * **degraded-mode serving**: the closed-loop 4-worker shape with the
+//!   RTL backend wrapped in `FaultInjectingBackend` at 0‰ / 10‰ / 50‰
+//!   mixed fault rates (panics, transient errors, wrong-length replies) —
+//!   throughput, p99, completed/failed splits, retry and worker-restart
+//!   counts — plus a best-of-3 paired overhead check of the wrapper at 0‰
+//!   against the unwrapped backend,
+//!
+//! and writes the results to `BENCH_6.json` (plus stdout; the emitted
 //! name is the single `BENCH_NAME` constant). BENCH_1 recorded qps only;
 //! BENCH_2 added the percentile columns; BENCH_3 added the depth rows of
 //! the N-layer refactor; BENCH_4 the per-layer threshold/pruning rows;
-//! BENCH_5 supersedes them with the batched-engine and open-loop rows
-//! (EXPERIMENTS.md §Batch).
+//! BENCH_5 the batched-engine and open-loop rows (EXPERIMENTS.md §Batch);
+//! BENCH_6 supersedes them with the fault-injection rows (EXPERIMENTS.md
+//! §Robustness). Note the guarded batch path (`catch_unwind` + typed
+//! replies) is in *every* BENCH_6 row — its cost shows up as the
+//! BENCH_5 → BENCH_6 delta of the unchanged rows, not as a within-report
+//! column.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -47,7 +58,8 @@ use std::time::{Duration, Instant};
 use snn_rtl::bench::{black_box, Bench};
 use snn_rtl::config::PruneMode;
 use snn_rtl::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, FanoutPolicy, Histogram, Request, RtlBackend,
+    Backend, BatchPolicy, Coordinator, CoordinatorConfig, FanoutPolicy, FaultInjectingBackend,
+    FaultPlan, Histogram, Request, RtlBackend, SupervisionPolicy,
 };
 use snn_rtl::data::{DigitGen, Image};
 use snn_rtl::experiments::{
@@ -60,7 +72,7 @@ use snn_rtl::snn::EarlyExit;
 use snn_rtl::SnnConfig;
 
 /// The emitted report name — bump this (one place) when a PR adds rows.
-const BENCH_NAME: &str = "BENCH_5";
+const BENCH_NAME: &str = "BENCH_6";
 
 fn weights(seed: u32) -> WeightMatrix {
     let mut rng = Xorshift32::new(seed);
@@ -104,7 +116,14 @@ fn drive_coordinator(
     let backend = Arc::new(RtlBackend::new(cfg.clone(), engine_weights).unwrap());
     let coord = Coordinator::start(
         backend,
-        CoordinatorConfig { workers, queue_depth: 2048, batch, early: EarlyExit::Off, fanout },
+        CoordinatorConfig {
+            workers,
+            queue_depth: 2048,
+            batch,
+            early: EarlyExit::Off,
+            fanout,
+            supervision: SupervisionPolicy::default(),
+        },
     );
     let handle = coord.handle();
     let t0 = Instant::now();
@@ -112,7 +131,7 @@ fn drive_coordinator(
     for i in 0..requests {
         let img = images[i % images.len()].clone();
         loop {
-            match handle.submit(Request { image: img.clone(), seed: Some(i as u32 + 1) }) {
+            match handle.submit(Request::new(img.clone()).with_seed(i as u32 + 1)) {
                 Ok(rx) => {
                     receivers.push(rx);
                     break;
@@ -162,7 +181,14 @@ fn drive_coordinator_paced(
     let backend = Arc::new(RtlBackend::new(cfg.clone(), engine_weights).unwrap());
     let coord = Coordinator::start(
         backend,
-        CoordinatorConfig { workers, queue_depth: 4096, batch, early: EarlyExit::Off, fanout },
+        CoordinatorConfig {
+            workers,
+            queue_depth: 4096,
+            batch,
+            early: EarlyExit::Off,
+            fanout,
+            supervision: SupervisionPolicy::default(),
+        },
     );
     let handle = coord.handle();
     let latency = Arc::new(Histogram::default());
@@ -226,7 +252,7 @@ fn drive_coordinator_paced(
             std::thread::sleep(wait);
         }
         let image = images[i % images.len()].clone();
-        match handle.submit(Request { image, seed: Some(i as u32 + 1) }) {
+        match handle.submit(Request::new(image).with_seed(i as u32 + 1)) {
             Ok(reply) => tx.send((scheduled, reply)).unwrap(),
             Err(_) => rejected += 1, // open-loop: the request is lost, not retried
         }
@@ -242,6 +268,88 @@ fn drive_coordinator_paced(
         p99_us: latency.quantile_us(0.99),
         max_us: latency.max_us(),
         rejected,
+    }
+}
+
+struct FaultRow {
+    per_mille: u32,
+    qps: f64,
+    p99_us: u64,
+    completed: u64,
+    failed: u64,
+    retries: u64,
+    restarts: u64,
+    panics: u64,
+}
+
+/// Closed-loop 4-worker serving with the RTL backend wrapped in
+/// [`FaultInjectingBackend`] at a mixed fault rate. Every request gets a
+/// terminal reply (success or typed error); `recv` is never unwrapped
+/// past the outer channel, so the row reports the completed/failed split
+/// instead of dying on the first injected fault. Supervision is generous
+/// (unbounded restarts, short backoff): the row measures degraded-mode
+/// throughput, not restart-budget exhaustion.
+fn drive_coordinator_faulted(
+    cfg: &SnnConfig,
+    engine_weights: WeightStack,
+    per_mille: u32,
+    requests: usize,
+    images: &[Image],
+) -> FaultRow {
+    let inner: Arc<dyn Backend> =
+        Arc::new(RtlBackend::new(cfg.clone(), engine_weights).unwrap());
+    let backend =
+        Arc::new(FaultInjectingBackend::new(inner, FaultPlan::mixed(0xFA57, per_mille)));
+    let coord = Coordinator::start(
+        backend,
+        CoordinatorConfig {
+            workers: 4,
+            queue_depth: 2048,
+            batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_micros(500) },
+            early: EarlyExit::Off,
+            fanout: FanoutPolicy::default(),
+            supervision: SupervisionPolicy {
+                max_restarts_per_worker: u32::MAX,
+                backoff_base: Duration::from_micros(50),
+                backoff_cap: Duration::from_millis(1),
+            },
+        },
+    );
+    let handle = coord.handle();
+    let t0 = Instant::now();
+    let mut receivers = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let img = images[i % images.len()].clone();
+        loop {
+            match handle.submit(Request::new(img.clone()).with_seed(i as u32 + 1)) {
+                Ok(rx) => {
+                    receivers.push(rx);
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_micros(100)),
+            }
+        }
+    }
+    let mut completed = 0u64;
+    let mut failed = 0u64;
+    for rx in receivers {
+        match rx.recv().expect("fault-injected request lost its terminal reply") {
+            Ok(_) => completed += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    let qps = requests as f64 / t0.elapsed().as_secs_f64();
+    let snap = coord.metrics().snapshot();
+    coord.shutdown();
+    FaultRow {
+        per_mille,
+        qps,
+        p99_us: snap.latency_p99_us,
+        completed,
+        failed,
+        retries: snap.subbatch_retries,
+        restarts: snap.worker_restarts,
+        panics: snap.panics_recovered,
     }
 }
 
@@ -486,6 +594,50 @@ fn main() {
         paced.rejected
     );
 
+    // Degraded-mode serving: 0‰ / 10‰ / 50‰ mixed fault schedules through
+    // the fault-injecting wrapper, plus a best-of-3 paired overhead check
+    // of the wrapper itself at 0‰ (it must be free when injecting
+    // nothing; the catch_unwind guard is in both paths by construction).
+    let fault_requests = if quick { 192 } else { 768 };
+    let mut fault_rows = Vec::new();
+    for per_mille in [0u32, 10, 50] {
+        let row =
+            drive_coordinator_faulted(&cfg, weights(7).into(), per_mille, fault_requests, &images);
+        println!(
+            "fault_injection_w4_{per_mille}permille: {:.0} req/s  p99 {} µs  ok {}  \
+             failed {}  retries {}  restarts {}  panics {}",
+            row.qps, row.p99_us, row.completed, row.failed, row.retries, row.restarts, row.panics
+        );
+        fault_rows.push(row);
+    }
+    let mut plain_best = 0f64;
+    let mut wrapped_best = 0f64;
+    for _ in 0..3 {
+        let plain = drive_coordinator(
+            &cfg,
+            weights(7).into(),
+            4,
+            small_batch,
+            FanoutPolicy::default(),
+            fault_requests,
+            &images,
+        );
+        plain_best = plain_best.max(plain.qps);
+        let wrapped =
+            drive_coordinator_faulted(&cfg, weights(7).into(), 0, fault_requests, &images);
+        wrapped_best = wrapped_best.max(wrapped.qps);
+    }
+    let wrapper_ratio = wrapped_best / plain_best;
+    println!(
+        "fault_wrapper_overhead: plain {plain_best:.0} req/s  wrapped@0 {wrapped_best:.0} req/s  \
+         ratio {wrapper_ratio:.3} (target >= 0.98)"
+    );
+    assert!(
+        wrapper_ratio > 0.90,
+        "fault wrapper at 0 per mille costs >10% throughput ({wrapper_ratio:.3}) — \
+         the injection path is on the hot path"
+    );
+
     // Hand-rolled JSON (no serde in the offline crate set).
     let mut json = String::from("{\n");
     json.push_str(&format!("  \"bench\": \"{BENCH_NAME}\",\n"));
@@ -556,6 +708,21 @@ fn main() {
         "    \"fanout_on\": {{ \"qps\": {:.2}, \"p50_us\": {}, \"p99_us\": {} }}\n",
         fan_on.qps, fan_on.p50_us, fan_on.p99_us
     ));
+    json.push_str("  },\n");
+    json.push_str("  \"fault_injection_w4\": {\n");
+    json.push_str(&format!(
+        "    \"wrapper_overhead\": {{ \"plain_qps\": {plain_best:.2}, \
+         \"wrapped_0permille_qps\": {wrapped_best:.2}, \"ratio\": {wrapper_ratio:.4} }},\n"
+    ));
+    for (i, r) in fault_rows.iter().enumerate() {
+        let comma = if i + 1 == fault_rows.len() { "" } else { "," };
+        json.push_str(&format!(
+            "    \"per_mille_{}\": {{ \"qps\": {:.2}, \"p99_us\": {}, \"completed\": {}, \
+             \"failed\": {}, \"subbatch_retries\": {}, \"worker_restarts\": {}, \
+             \"panics_recovered\": {} }}{comma}\n",
+            r.per_mille, r.qps, r.p99_us, r.completed, r.failed, r.retries, r.restarts, r.panics
+        ));
+    }
     json.push_str("  }\n}\n");
     let out = format!("{BENCH_NAME}.json");
     std::fs::write(&out, &json).unwrap_or_else(|e| panic!("write {out}: {e}"));

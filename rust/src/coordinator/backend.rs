@@ -41,7 +41,7 @@ use crate::runtime::XlaSnn;
 use crate::snn::{BehavioralNet, EarlyExit, LifBatchStack};
 use crate::util::{margin_reached, priority_argmax};
 
-use super::pool::{default_pool_slots, InstancePool};
+use super::pool::{default_pool_slots, lock_recover, InstancePool};
 
 /// Per-image inference output, backend-agnostic.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -81,6 +81,14 @@ pub trait Backend: Send + Sync {
 
     /// The architectural config this backend runs.
     fn config(&self) -> &SnnConfig;
+
+    /// Engines this backend has quarantined (discarded as possibly-torn
+    /// after an error or panic) and rebuilt from its factory. Backends
+    /// without pooled engines report 0. The coordinator mirrors this into
+    /// `ServerMetrics::quarantined_engines` after every batch.
+    fn quarantined_engines(&self) -> u64 {
+        0
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -118,20 +126,30 @@ impl Backend for BehavioralBackend {
     ) -> Result<Vec<BackendOutput>> {
         let t = self.net.config().timesteps;
         let mut stack = self.stacks.checkout();
-        Ok(self
-            .net
-            .classify_batch_with(&mut stack, images, seeds, t, early)?
-            .into_iter()
-            .map(|c| BackendOutput {
-                class: c.class,
-                spike_counts: c.spike_counts,
-                steps_run: c.steps_run,
-            })
-            .collect())
+        match self.net.classify_batch_with(&mut stack, images, seeds, t, early) {
+            Ok(results) => Ok(results
+                .into_iter()
+                .map(|c| BackendOutput {
+                    class: c.class,
+                    spike_counts: c.spike_counts,
+                    steps_run: c.steps_run,
+                })
+                .collect()),
+            Err(e) => {
+                // The stack may hold partial membrane/PRNG state from the
+                // failed pass; quarantine it rather than serve from it.
+                stack.discard();
+                Err(e)
+            }
+        }
     }
 
     fn config(&self) -> &SnnConfig {
         self.net.config()
+    }
+
+    fn quarantined_engines(&self) -> u64 {
+        self.stacks.quarantined()
     }
 }
 
@@ -178,9 +196,10 @@ impl RtlBackend {
                 .expect("validated at RtlBackend::with_slots")
         })
         .with_evict_hook(move |core: &mut RtlCore| {
-            if let Ok(mut total) = sink.lock() {
-                total.add(&core.total_activity());
-            }
+            // Poison-recovering: the harvested totals are plain counters
+            // and must survive a panicking thread, or cycle accounting
+            // silently loses the dying core's activity.
+            lock_recover(&sink).add(&core.total_activity());
         });
         Ok(RtlBackend { cores, cfg, evicted })
     }
@@ -190,11 +209,7 @@ impl RtlBackend {
     /// harvested from dropped cores by the eviction hook. Exact once all
     /// in-flight batches have returned their engines.
     pub fn total_activity(&self) -> ActivityCounters {
-        let mut total = self
-            .evicted
-            .lock()
-            .map(|t| *t)
-            .unwrap_or_default();
+        let mut total = *lock_recover(&self.evicted);
         self.cores.for_each(|core| total.add(&core.total_activity()));
         total
     }
@@ -217,19 +232,31 @@ impl Backend for RtlBackend {
         early: EarlyExit,
     ) -> Result<Vec<BackendOutput>> {
         let mut core = self.cores.checkout();
-        Ok(core
-            .run_fast_batch(images, seeds, early)?
-            .into_iter()
-            .map(|r| BackendOutput {
-                class: r.class,
-                steps_run: r.membrane_by_step.len() as u32,
-                spike_counts: r.spike_counts,
-            })
-            .collect())
+        match core.run_fast_batch(images, seeds, early) {
+            Ok(results) => Ok(results
+                .into_iter()
+                .map(|r| BackendOutput {
+                    class: r.class,
+                    steps_run: r.membrane_by_step.len() as u32,
+                    spike_counts: r.spike_counts,
+                })
+                .collect()),
+            Err(e) => {
+                // Quarantine the core: the failed run may have advanced
+                // membranes/PRNGs partway. The evict hook harvests its
+                // cycle counters first, so accounting stays exact.
+                core.discard();
+                Err(e)
+            }
+        }
     }
 
     fn config(&self) -> &SnnConfig {
         &self.cfg
+    }
+
+    fn quarantined_engines(&self) -> u64 {
+        self.cores.quarantined()
     }
 }
 
@@ -309,7 +336,12 @@ impl Backend for XlaBackend {
         seeds: &[u32],
         early: EarlyExit,
     ) -> Result<Vec<BackendOutput>> {
-        let snn = self.snn.lock().unwrap();
+        // Poison-recovering: a panic elsewhere must not cascade through
+        // every subsequent XLA request. `XlaSnn` holds opaque PJRT
+        // executables and buffers that a Rust unwind cannot tear (no
+        // internal invariants are mutated mid-call from this side), so
+        // recovering the guard is sound.
+        let snn = lock_recover(&self.snn);
         // Behavioral/RTL engines clamp internally; the chunked XLA loop
         // applies the same clamp here so an unreachable margin cannot
         // silently run every chunk to the full window.
@@ -549,6 +581,30 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn rtl_quarantines_errored_cores_and_keeps_cycles_exact() {
+        use crate::error::Error;
+        let timesteps = 3u32;
+        let cfg = SnnConfig::paper().with_timesteps(timesteps);
+        let rtl = RtlBackend::with_slots(cfg, test_weights(), 1).unwrap();
+        let gen = DigitGen::new(4);
+        let good = gen.sample(1, 0);
+        // Burn cycles on a good request...
+        rtl.classify_batch(&[&good], &[1], EarlyExit::Off).unwrap();
+        // ...then hit the engine with a malformed image: typed error, the
+        // core is quarantined, and its cycles are harvested by the evict
+        // hook rather than lost.
+        let bad = Image { label: 0, pixels: vec![0u8; 10] };
+        let err = rtl.classify_batch(&[&bad], &[2], EarlyExit::Off);
+        assert!(matches!(err, Err(Error::ShapeMismatch(_))), "want shape error: {err:?}");
+        assert_eq!(rtl.quarantined_engines(), 1);
+        // The pool rebuilds from the factory: serving continues and the
+        // accounting is exact — two successful full-window runs, nothing
+        // lost to the discard, nothing double-counted.
+        rtl.classify_batch(&[&good], &[1], EarlyExit::Off).unwrap();
+        assert_eq!(rtl.total_cycles(), 2 * 786 * u64::from(timesteps));
     }
 
     #[test]

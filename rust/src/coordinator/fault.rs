@@ -1,0 +1,326 @@
+//! Deterministic fault injection for chaos tests and degraded-mode
+//! benchmarks.
+//!
+//! [`FaultInjectingBackend`] wraps any [`Backend`] and injects faults on a
+//! **deterministic seeded schedule**: whether a request is a fault victim
+//! is a pure function of `(plan seed, request seed)` — see
+//! [`FaultPlan::classify`] — so a chaos run is reproducible bit for bit
+//! and a test can enumerate its victims up front instead of asserting on
+//! probabilities.
+//!
+//! Fault semantics are chosen so the coordinator's recovery story is
+//! observable end to end:
+//!
+//! * **Panic** victims are *hard* faults: every call whose batch contains
+//!   one panics (before touching the inner backend), so the request can
+//!   never succeed — it must surface as `Err(BackendPanicked)` after the
+//!   retry also panics, and each panicked batch costs the worker its
+//!   thread (exercising supervision).
+//! * **Transient error** and **wrong-length** victims fire **once per
+//!   victim seed**: the first call containing the victim misbehaves, the
+//!   coordinator's single retry re-runs the same images and seeds on a
+//!   fresh engine, and the retry succeeds — bit-exact with a fault-free
+//!   run, which the chaos suite asserts.
+//! * **Latency-spike** victims sleep before delegating: deadlines expire,
+//!   queues back up, shedding and admission control engage — but results
+//!   stay correct.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::SnnConfig;
+use crate::data::Image;
+use crate::error::{Error, Result};
+use crate::prng::{splitmix32, GOLDEN_GAMMA};
+use crate::snn::EarlyExit;
+
+use super::backend::{Backend, BackendOutput};
+use super::pool::lock_recover;
+
+/// What the schedule has in store for one request seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Left alone.
+    None,
+    /// Hard fault: every batch containing this seed panics.
+    Panic,
+    /// Fires once: the first batch containing this seed gets an error.
+    TransientError,
+    /// Fires once: the first batch containing this seed returns one
+    /// output too few (a broken batch contract).
+    WrongLength,
+    /// Every batch containing this seed sleeps `latency_spike` first.
+    LatencySpike,
+}
+
+/// Deterministic fault schedule: per-mille rates over the request-seed
+/// space, keyed by a plan seed. Rates must sum to ≤ 1000.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    /// Schedule key: different plan seeds pick different victim sets.
+    pub seed: u32,
+    /// Per-mille of request seeds that are hard panic victims.
+    pub panic_per_mille: u32,
+    /// Per-mille of request seeds that fire one transient error.
+    pub error_per_mille: u32,
+    /// Per-mille of request seeds that fire one wrong-length reply.
+    pub wrong_len_per_mille: u32,
+    /// Per-mille of request seeds that always spike latency.
+    pub latency_per_mille: u32,
+    /// Sleep inserted for latency victims' batches.
+    pub latency_spike: Duration,
+}
+
+impl FaultPlan {
+    /// A schedule that injects nothing (overhead measurements).
+    pub fn none(seed: u32) -> Self {
+        FaultPlan {
+            seed,
+            panic_per_mille: 0,
+            error_per_mille: 0,
+            wrong_len_per_mille: 0,
+            latency_per_mille: 0,
+            latency_spike: Duration::ZERO,
+        }
+    }
+
+    /// A mixed schedule totalling `per_mille` faults: half transient
+    /// errors, a quarter panics, a quarter wrong-length replies (the
+    /// BENCH_6 degraded-mode mix; latency spikes are left to tests that
+    /// exercise deadlines explicitly).
+    pub fn mixed(seed: u32, per_mille: u32) -> Self {
+        assert!(per_mille <= 1000, "rate out of range: {per_mille}");
+        FaultPlan {
+            seed,
+            panic_per_mille: per_mille / 4,
+            error_per_mille: per_mille / 2,
+            wrong_len_per_mille: per_mille / 4,
+            latency_per_mille: 0,
+            latency_spike: Duration::ZERO,
+        }
+    }
+
+    /// The fate of `request_seed` under this plan — a pure function, so
+    /// tests can enumerate victims before submitting anything.
+    pub fn classify(&self, request_seed: u32) -> FaultKind {
+        let total = self.panic_per_mille
+            + self.error_per_mille
+            + self.wrong_len_per_mille
+            + self.latency_per_mille;
+        debug_assert!(total <= 1000, "fault rates sum past 1000 per mille");
+        if total == 0 {
+            return FaultKind::None;
+        }
+        let roll = splitmix32(request_seed ^ self.seed.wrapping_mul(GOLDEN_GAMMA)) % 1000;
+        if roll < self.panic_per_mille {
+            FaultKind::Panic
+        } else if roll < self.panic_per_mille + self.error_per_mille {
+            FaultKind::TransientError
+        } else if roll < self.panic_per_mille + self.error_per_mille + self.wrong_len_per_mille {
+            FaultKind::WrongLength
+        } else if roll < total {
+            FaultKind::LatencySpike
+        } else {
+            FaultKind::None
+        }
+    }
+}
+
+/// Injection counters (what actually fired, for test assertions).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultInjections {
+    pub calls: u64,
+    pub panics: u64,
+    pub errors: u64,
+    pub wrong_lengths: u64,
+    pub latency_spikes: u64,
+}
+
+/// A [`Backend`] decorator that injects the [`FaultPlan`]'s faults. See
+/// the module docs for the exact semantics of each fault kind.
+pub struct FaultInjectingBackend {
+    inner: Arc<dyn Backend>,
+    plan: FaultPlan,
+    /// Transient victims (error / wrong-length) that have already fired.
+    fired: Mutex<HashSet<u32>>,
+    calls: AtomicU64,
+    panics: AtomicU64,
+    errors: AtomicU64,
+    wrong_lengths: AtomicU64,
+    latency_spikes: AtomicU64,
+}
+
+impl FaultInjectingBackend {
+    pub fn new(inner: Arc<dyn Backend>, plan: FaultPlan) -> Self {
+        FaultInjectingBackend {
+            inner,
+            plan,
+            fired: Mutex::new(HashSet::new()),
+            calls: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            wrong_lengths: AtomicU64::new(0),
+            latency_spikes: AtomicU64::new(0),
+        }
+    }
+
+    /// The schedule this wrapper runs.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// What has fired so far.
+    pub fn injections(&self) -> FaultInjections {
+        FaultInjections {
+            calls: self.calls.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            wrong_lengths: self.wrong_lengths.load(Ordering::Relaxed),
+            latency_spikes: self.latency_spikes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// First not-yet-fired transient victim of `kind` in `seeds`, marking
+    /// it fired. One victim per call: the coordinator's retry then meets
+    /// an already-fired victim and passes.
+    fn take_transient(&self, seeds: &[u32], kind: FaultKind) -> Option<u32> {
+        let mut fired = lock_recover(&self.fired);
+        let victim =
+            seeds.iter().copied().find(|&s| self.plan.classify(s) == kind && !fired.contains(&s));
+        if let Some(s) = victim {
+            fired.insert(s);
+        }
+        victim
+    }
+}
+
+impl Backend for FaultInjectingBackend {
+    fn name(&self) -> &'static str {
+        "fault-injecting"
+    }
+
+    fn classify_batch(
+        &self,
+        images: &[&Image],
+        seeds: &[u32],
+        early: EarlyExit,
+    ) -> Result<Vec<BackendOutput>> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+
+        // Latency victims stall the whole batch (queue pressure builds,
+        // deadlines expire) but change nothing about the results.
+        if seeds.iter().any(|&s| self.plan.classify(s) == FaultKind::LatencySpike) {
+            self.latency_spikes.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.plan.latency_spike);
+        }
+
+        // Transient error: fires before the inner backend runs, so a
+        // retry of the identical (images, seeds) chunk is bit-exact.
+        if let Some(victim) = self.take_transient(seeds, FaultKind::TransientError) {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Coordinator(format!(
+                "injected transient backend error (victim seed {victim})"
+            )));
+        }
+
+        // Hard panic: fires on every call containing a victim.
+        let hard = seeds.iter().find(|&&s| self.plan.classify(s) == FaultKind::Panic);
+        if let Some(&victim) = hard {
+            self.panics.fetch_add(1, Ordering::Relaxed);
+            panic!("injected backend panic (victim seed {victim})");
+        }
+
+        let wrong_len = self.take_transient(seeds, FaultKind::WrongLength);
+        let mut out = self.inner.classify_batch(images, seeds, early)?;
+        if wrong_len.is_some() {
+            self.wrong_lengths.fetch_add(1, Ordering::Relaxed);
+            out.pop();
+        }
+        Ok(out)
+    }
+
+    fn parallel_capable(&self) -> bool {
+        self.inner.parallel_capable()
+    }
+
+    fn config(&self) -> &SnnConfig {
+        self.inner.config()
+    }
+
+    fn quarantined_engines(&self) -> u64 {
+        self.inner.quarantined_engines()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count_kinds(plan: &FaultPlan, n: u32) -> (u32, u32, u32, u32) {
+        let (mut p, mut e, mut w, mut l) = (0, 0, 0, 0);
+        for s in 0..n {
+            match plan.classify(s) {
+                FaultKind::Panic => p += 1,
+                FaultKind::TransientError => e += 1,
+                FaultKind::WrongLength => w += 1,
+                FaultKind::LatencySpike => l += 1,
+                FaultKind::None => {}
+            }
+        }
+        (p, e, w, l)
+    }
+
+    #[test]
+    fn classify_is_deterministic_and_tracks_rates() {
+        let plan = FaultPlan {
+            seed: 0xC0FFEE,
+            panic_per_mille: 10,
+            error_per_mille: 20,
+            wrong_len_per_mille: 10,
+            latency_per_mille: 10,
+            latency_spike: Duration::from_millis(1),
+        };
+        for s in 0..256 {
+            assert_eq!(plan.classify(s), plan.classify(s), "must be pure");
+        }
+        let n = 20_000;
+        let (p, e, w, l) = count_kinds(&plan, n);
+        // splitmix32 is a good mixer: observed rates land near nominal.
+        let near = |got: u32, per_mille: u32| {
+            let want = n * per_mille / 1000;
+            got >= want / 2 && got <= want * 2
+        };
+        assert!(near(p, 10), "panic rate off: {p}");
+        assert!(near(e, 20), "error rate off: {e}");
+        assert!(near(w, 10), "wrong-length rate off: {w}");
+        assert!(near(l, 10), "latency rate off: {l}");
+    }
+
+    #[test]
+    fn none_plan_never_classifies_victims() {
+        let plan = FaultPlan::none(7);
+        let (p, e, w, l) = count_kinds(&plan, 4096);
+        assert_eq!((p, e, w, l), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn mixed_plan_splits_the_budget() {
+        let plan = FaultPlan::mixed(3, 40);
+        assert_eq!(plan.panic_per_mille, 10);
+        assert_eq!(plan.error_per_mille, 20);
+        assert_eq!(plan.wrong_len_per_mille, 10);
+        assert_eq!(plan.latency_per_mille, 0);
+    }
+
+    #[test]
+    fn different_plan_seeds_pick_different_victims() {
+        let a = FaultPlan::mixed(1, 100);
+        let b = FaultPlan::mixed(2, 100);
+        let victims = |p: &FaultPlan| -> Vec<u32> {
+            (0..2000).filter(|&s| p.classify(s) != FaultKind::None).collect()
+        };
+        assert_ne!(victims(&a), victims(&b));
+    }
+}

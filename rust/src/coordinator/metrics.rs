@@ -92,6 +92,22 @@ pub struct ServerMetrics {
     pub subbatches: AtomicU64,
     /// Timesteps actually executed (early-exit savings show up here).
     pub steps_executed: AtomicU64,
+    /// Queued requests dropped at pop time because their deadline had
+    /// already expired (each one still gets a terminal `Shed` reply).
+    pub shed: AtomicU64,
+    /// Deadline expiry events: shed requests, submit-time rejections of
+    /// already-expired deadlines, and completed-but-late deliveries.
+    pub deadline_expired: AtomicU64,
+    /// Backend panics caught by the `catch_unwind` batch guard (initial
+    /// attempts and retries both count).
+    pub panics_recovered: AtomicU64,
+    /// Worker threads respawned by the supervisor after a panic death.
+    pub worker_restarts: AtomicU64,
+    /// Failed (sub-)batches retried once on a fresh engine.
+    pub subbatch_retries: AtomicU64,
+    /// Gauge mirroring the backend's quarantined-engine count (engines
+    /// discarded as possibly-torn and rebuilt from the factory).
+    pub quarantined_engines: AtomicU64,
 }
 
 /// Point-in-time copy for reporting.
@@ -112,6 +128,12 @@ pub struct MetricsSnapshot {
     pub latency_mean_us: f64,
     pub latency_max_us: u64,
     pub steps_executed: u64,
+    pub shed: u64,
+    pub deadline_expired: u64,
+    pub panics_recovered: u64,
+    pub worker_restarts: u64,
+    pub subbatch_retries: u64,
+    pub quarantined_engines: u64,
 }
 
 impl ServerMetrics {
@@ -134,6 +156,12 @@ impl ServerMetrics {
             latency_mean_us: self.latency.mean_us(),
             latency_max_us: self.latency.max_us(),
             steps_executed: self.steps_executed.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            panics_recovered: self.panics_recovered.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            subbatch_retries: self.subbatch_retries.load(Ordering::Relaxed),
+            quarantined_engines: self.quarantined_engines.load(Ordering::Relaxed),
         }
     }
 }
@@ -186,5 +214,23 @@ mod tests {
         assert_eq!(s.steals, 3);
         assert_eq!(s.fanout_batches, 2);
         assert_eq!(s.subbatches, 7);
+    }
+
+    #[test]
+    fn snapshot_carries_fault_tolerance_counters() {
+        let m = ServerMetrics::default();
+        m.shed.store(4, Ordering::Relaxed);
+        m.deadline_expired.store(5, Ordering::Relaxed);
+        m.panics_recovered.store(6, Ordering::Relaxed);
+        m.worker_restarts.store(3, Ordering::Relaxed);
+        m.subbatch_retries.store(2, Ordering::Relaxed);
+        m.quarantined_engines.store(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.shed, 4);
+        assert_eq!(s.deadline_expired, 5);
+        assert_eq!(s.panics_recovered, 6);
+        assert_eq!(s.worker_restarts, 3);
+        assert_eq!(s.subbatch_retries, 2);
+        assert_eq!(s.quarantined_engines, 1);
     }
 }

@@ -7,9 +7,9 @@
 //!
 //! Threading model: callers submit through a [`ShardedQueue`] — one
 //! bounded deque per worker, shortest-queue placement, backpressure =
-//! `Error::Rejected` when every shard is full. Each worker drains its own
-//! shard first and steals the oldest entries from the deepest sibling when
-//! dry, so a slow batch cannot head-of-line-block the pool. Workers
+//! `Error::Overloaded` when every shard is full. Each worker drains its
+//! own shard first and steals the oldest entries from the deepest sibling
+//! when dry, so a slow batch cannot head-of-line-block the pool. Workers
 //! assemble batches under a max-size / max-delay policy and run them on a
 //! [`Backend`]; batches above the [`FanoutPolicy`] crossover split into
 //! sub-batches executed concurrently on pooled engines and reassembled in
@@ -22,9 +22,19 @@
 //! a non-blocking [`InstancePool`] per batch (or per sub-batch under
 //! fan-out), so adding workers adds real parallelism instead of queueing
 //! on one engine mutex.
+//!
+//! Fault tolerance: requests carry optional deadlines (expired work is
+//! shed with a typed reply instead of computed), backend calls run behind
+//! `catch_unwind` (a panicking engine is quarantined by its pool and the
+//! worker is respawned by a supervisor under [`SupervisionPolicy`]),
+//! failed sub-batches are retried once on a fresh engine (bit-exact, same
+//! seeds), and shutdown drains-or-rejects so every in-flight request gets
+//! exactly one terminal reply. [`FaultInjectingBackend`] provides the
+//! deterministic fault schedule the chaos suite and BENCH_6 run against.
 
 mod backend;
 mod batcher;
+mod fault;
 mod metrics;
 mod pool;
 mod server;
@@ -32,9 +42,11 @@ mod shard;
 
 pub use backend::{Backend, BackendOutput, BehavioralBackend, RtlBackend, XlaBackend};
 pub use batcher::{BatchPolicy, Batcher};
+pub use fault::{FaultInjectingBackend, FaultInjections, FaultKind, FaultPlan};
 pub use metrics::{Histogram, MetricsSnapshot, ServerMetrics};
 pub use pool::{InstancePool, PoolGuard};
 pub use server::{
     Coordinator, CoordinatorConfig, FanoutPolicy, Request, Response, SubmitHandle,
+    SupervisionPolicy,
 };
 pub use shard::{Popped, PushError, ShardedQueue};

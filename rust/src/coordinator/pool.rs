@@ -24,12 +24,31 @@
 //!
 //! The slot mutex is only ever acquired uncontended (`try_lock`), so the
 //! hot path is one atomic per checkout — worker scaling is limited by the
-//! engines themselves, not by pool bookkeeping. A poisoned slot (a panic
-//! mid-batch) is healed by rebuilding the instance from the factory.
+//! engines themselves, not by pool bookkeeping.
+//!
+//! **Quarantine.** An engine that was checked out when something went
+//! wrong never returns to the free list: callers route errors through
+//! [`PoolGuard::discard`], a panic while an overflow guard is live is
+//! detected in `Drop` via `std::thread::panicking()`, and a panic while a
+//! *slot* guard is live poisons the slot mutex, which the next `checkout`
+//! heals by evicting the torn instance and rebuilding from the factory.
+//! All three paths run the eviction hook first (so cumulative state such
+//! as RTL cycle counters survives) and bump the [`InstancePool::quarantined`]
+//! counter. Capacity never shrinks: a discarded slot refills lazily on the
+//! next checkout exactly like a never-used slot.
 
 use std::ops::{Deref, DerefMut};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard, TryLockError};
+
+/// Poison-recovering lock for state that stays sound across a panic
+/// (counter sinks, recycled-instance stashes, fault bookkeeping). A
+/// `PoisonError` only means *some* thread panicked while holding the
+/// guard; for these uses the data is still meaningful, and propagating
+/// the panic would cascade one fault through every subsequent request.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// A pool of reusable engine instances. See the module docs.
 pub struct InstancePool<T> {
@@ -45,6 +64,10 @@ pub struct InstancePool<T> {
     /// a dying core's `ActivityCounters` into a shared total so cycle
     /// accounting stays exact under fan-out bursts.
     on_evict: Option<Box<dyn Fn(&mut T) + Send + Sync>>,
+    /// Instances thrown away because they may be in a torn state (explicit
+    /// [`PoolGuard::discard`], poisoned-slot heal, panic during an
+    /// overflow checkout). Each one is rebuilt from the factory on demand.
+    quarantined: AtomicU64,
 }
 
 impl<T> InstancePool<T> {
@@ -59,6 +82,7 @@ impl<T> InstancePool<T> {
             next: AtomicUsize::new(0),
             factory: Box::new(factory),
             on_evict: None,
+            quarantined: AtomicU64::new(0),
         }
     }
 
@@ -76,6 +100,18 @@ impl<T> InstancePool<T> {
         }
     }
 
+    /// Drop a possibly-torn instance through the eviction hook and count
+    /// the quarantine event.
+    fn quarantine_instance(&self, instance: T) {
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+        self.evict(instance);
+    }
+
+    /// Engines quarantined (and later rebuilt) over the pool's lifetime.
+    pub fn quarantined(&self) -> u64 {
+        self.quarantined.load(Ordering::Relaxed)
+    }
+
     /// Slot count (capacity before overflow instances get built).
     pub fn capacity(&self) -> usize {
         self.slots.len()
@@ -83,7 +119,7 @@ impl<T> InstancePool<T> {
 
     /// Recycled overflow instances currently stashed (observability).
     pub fn stashed(&self) -> usize {
-        self.extra.lock().map_or(0, |e| e.len())
+        lock_recover(&self.extra).len()
     }
 
     /// Check out an instance without ever blocking: the first free slot in
@@ -97,15 +133,15 @@ impl<T> InstancePool<T> {
             let mut guard = match slot.try_lock() {
                 Ok(g) => g,
                 // A worker panicked mid-batch: the instance may be in a
-                // torn state, so drop it (through the eviction hook, so
-                // its cumulative counters are not lost), heal the poison
-                // flag (or every future checkout would rebuild forever)
-                // and refill below.
+                // torn state, so quarantine it (through the eviction hook,
+                // so its cumulative counters are not lost), heal the
+                // poison flag (or every future checkout would rebuild
+                // forever) and refill below.
                 Err(TryLockError::Poisoned(p)) => {
                     slot.clear_poison();
                     let mut g = p.into_inner();
                     if let Some(dead) = g.take() {
-                        self.evict(dead);
+                        self.quarantine_instance(dead);
                     }
                     g
                 }
@@ -116,7 +152,7 @@ impl<T> InstancePool<T> {
             }
             return PoolGuard { pool: self, inner: GuardInner::Slot(guard) };
         }
-        let recycled = self.extra.lock().ok().and_then(|mut e| e.pop());
+        let recycled = lock_recover(&self.extra).pop();
         let instance = recycled.unwrap_or_else(|| (self.factory)());
         PoolGuard { pool: self, inner: GuardInner::Overflow(Some(instance)) }
     }
@@ -124,15 +160,16 @@ impl<T> InstancePool<T> {
     /// Return a released overflow instance to the stash, up to the cap.
     fn restash(&self, instance: T) {
         let mut instance = Some(instance);
-        if let Ok(mut e) = self.extra.lock() {
+        {
+            let mut e = lock_recover(&self.extra);
             if e.len() < self.overflow_cap {
                 e.push(instance.take().expect("instance present"));
             }
         }
-        // A poisoned stash lock or a full stash drops the instance — the
-        // slot ring alone already guarantees the configured capacity —
-        // but the eviction hook gets a last look first, so cumulative
-        // state (cycle counters) survives the drop.
+        // A full stash drops the instance — the slot ring alone already
+        // guarantees the configured capacity — but the eviction hook gets
+        // a last look first, so cumulative state (cycle counters)
+        // survives the drop.
         if let Some(dropped) = instance {
             self.evict(dropped);
         }
@@ -152,10 +189,7 @@ impl<T> InstancePool<T> {
                 f(v);
             }
         }
-        let extra = match self.extra.lock() {
-            Ok(g) => g,
-            Err(p) => p.into_inner(),
-        };
+        let extra = lock_recover(&self.extra);
         for v in extra.iter() {
             f(v);
         }
@@ -174,6 +208,28 @@ enum GuardInner<'a, T> {
 pub struct PoolGuard<'a, T> {
     pool: &'a InstancePool<T>,
     inner: GuardInner<'a, T>,
+}
+
+impl<T> PoolGuard<'_, T> {
+    /// Quarantine the held instance instead of returning it to the pool.
+    ///
+    /// The engine is dropped through the eviction hook (cumulative
+    /// counters survive) and its slot refills lazily from the factory on
+    /// the next checkout, so pool capacity never shrinks. Callers invoke
+    /// this whenever the engine returned an error mid-batch: the engine's
+    /// internal state (membranes, PRNG banks, pipeline registers) may be
+    /// torn, and a rebuilt instance is cheap insurance against serving
+    /// wrong answers from it.
+    pub fn discard(mut self) {
+        let dead = match &mut self.inner {
+            GuardInner::Slot(g) => g.take(),
+            GuardInner::Overflow(v) => v.take(),
+        };
+        if let Some(instance) = dead {
+            self.pool.quarantine_instance(instance);
+        }
+        // Drop now releases an empty slot (or an empty overflow option).
+    }
 }
 
 impl<T> Deref for PoolGuard<'_, T> {
@@ -199,7 +255,14 @@ impl<T> Drop for PoolGuard<'_, T> {
     fn drop(&mut self) {
         if let GuardInner::Overflow(v) = &mut self.inner {
             if let Some(instance) = v.take() {
-                self.pool.restash(instance);
+                // Unwinding through an overflow checkout leaves no poison
+                // trace (no slot mutex involved), so the panic check here
+                // is what keeps a torn overflow engine out of the stash.
+                if std::thread::panicking() {
+                    self.pool.quarantine_instance(instance);
+                } else {
+                    self.pool.restash(instance);
+                }
             }
         }
     }
@@ -387,5 +450,70 @@ mod tests {
         // With the hook harvesting dropped instances the count is exact,
         // not a lower bound.
         assert_eq!(total, 8 * 500, "pooled + evicted totals must be exact");
+    }
+
+    #[test]
+    fn discard_quarantines_and_slot_rebuilds_from_factory() {
+        let built = Arc::new(AtomicU32::new(0));
+        let harvested = Arc::new(AtomicU32::new(0));
+        let (b, sink) = (Arc::clone(&built), Arc::clone(&harvested));
+        let pool = InstancePool::new(1, move || {
+            b.fetch_add(1, Ordering::Relaxed);
+            7u32
+        })
+        .with_evict_hook(move |v: &mut u32| {
+            sink.fetch_add(*v, Ordering::Relaxed);
+        });
+        {
+            let mut g = pool.checkout();
+            *g = 100; // accumulate some state, then hit an "error"
+            g.discard();
+        }
+        assert_eq!(pool.quarantined(), 1);
+        assert_eq!(harvested.load(Ordering::Relaxed), 100, "evict hook must harvest the discard");
+        // The slot refills lazily — capacity never shrank.
+        {
+            let g = pool.checkout();
+            assert_eq!(*g, 7, "factory-fresh instance after discard");
+        }
+        assert_eq!(built.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn panic_with_slot_guard_poisons_then_heals_with_quarantine() {
+        let harvested = Arc::new(AtomicU32::new(0));
+        let sink = Arc::clone(&harvested);
+        let pool = Arc::new(InstancePool::new(1, || 5u32).with_evict_hook(move |v: &mut u32| {
+            sink.fetch_add(*v, Ordering::Relaxed);
+        }));
+        let p = Arc::clone(&pool);
+        let t = std::thread::spawn(move || {
+            let mut g = p.checkout();
+            *g = 99;
+            panic!("boom mid-batch");
+        });
+        assert!(t.join().is_err(), "probe thread must panic");
+        // Next checkout heals the poisoned slot: torn instance evicted +
+        // counted, fresh one built.
+        let g = pool.checkout();
+        assert_eq!(*g, 5);
+        assert_eq!(pool.quarantined(), 1);
+        assert_eq!(harvested.load(Ordering::Relaxed), 99);
+    }
+
+    #[test]
+    fn panic_with_overflow_guard_quarantines_instead_of_restashing() {
+        let pool = Arc::new(InstancePool::new(1, || 0u32));
+        let slot_guard = pool.checkout(); // occupy the only slot
+        let p = Arc::clone(&pool);
+        let t = std::thread::spawn(move || {
+            let mut g = p.checkout(); // overflow checkout
+            *g = 1;
+            panic!("boom with overflow engine");
+        });
+        assert!(t.join().is_err());
+        drop(slot_guard);
+        assert_eq!(pool.stashed(), 0, "torn overflow instance must not be recycled");
+        assert_eq!(pool.quarantined(), 1);
     }
 }

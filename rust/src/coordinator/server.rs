@@ -1,5 +1,29 @@
-//! The coordinator proper: sharded ingress router + work-stealing worker
-//! pool + intra-batch fan-out + response plumbing.
+//! The coordinator proper: sharded ingress router + supervised
+//! work-stealing worker pool + intra-batch fan-out + response plumbing.
+//!
+//! # Fault model
+//!
+//! Every submitted request resolves to **exactly one terminal reply**:
+//!
+//! * `Ok(Response)` — classified (possibly after one transparent retry);
+//! * `Err(Overloaded)` — refused at submit time, all ingress shards full;
+//! * `Err(Shed)` — its deadline expired before the backend ran it (at
+//!   submit or at pop time);
+//! * `Err(BackendPanicked)` / a typed backend error — the batch (and its
+//!   one retry) failed;
+//! * `Err(ShuttingDown)` — the coordinator stopped before running it.
+//!
+//! The conservation argument: a request lives in exactly one place at a
+//! time — the ingress queue, a worker's forming batch, or `run_batch` —
+//! and every exit from each place sends a reply. `run_batch` sends all of
+//! its replies (success, shed, or replicated error) *before* the worker
+//! re-raises a caught backend panic, so a dying worker never carries
+//! unanswered requests with it; the supervisor respawns the worker
+//! (bounded restarts, exponential backoff) and, if every worker is gone
+//! for good, sweeps the queue and rejects the leftovers with
+//! `ShuttingDown`. Backend panics are contained by `catch_unwind` at the
+//! engine-call boundary, and any engine that was checked out at the time
+//! is quarantined by the pool instead of being reused.
 
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender};
@@ -19,6 +43,13 @@ use super::shard::{Popped, PushError, ShardedQueue};
 /// How long an idle worker parks between shutdown checks.
 const IDLE_POLL: Duration = Duration::from_millis(50);
 
+/// How often the supervisor checks its workers for panic deaths.
+const SUPERVISE_POLL: Duration = Duration::from_millis(2);
+
+/// A caught panic's payload, carried out of the guarded backend call so
+/// the worker can re-raise it once every reply in the batch is out.
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+
 /// A classification request.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -26,6 +57,28 @@ pub struct Request {
     /// Encoder seed; `None` lets the coordinator assign one from its
     /// request counter (deterministic given submission order).
     pub seed: Option<u32>,
+    /// Optional deadline: once passed, the coordinator sheds the request
+    /// (typed `Shed` reply) instead of running work nobody awaits.
+    pub deadline: Option<Instant>,
+}
+
+impl Request {
+    /// A request with no explicit seed and no deadline.
+    pub fn new(image: Image) -> Self {
+        Request { image, seed: None, deadline: None }
+    }
+
+    /// Pin the encoder seed (reproducibility).
+    pub fn with_seed(mut self, seed: u32) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Set the shedding deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
 }
 
 /// A classification response.
@@ -42,6 +95,7 @@ struct InFlight {
     request: Request,
     seed: u32,
     submitted: Instant,
+    deadline: Option<Instant>,
     reply: SyncSender<Result<Response>>,
 }
 
@@ -127,6 +181,39 @@ impl FanoutPolicy {
     }
 }
 
+/// Worker supervision: how aggressively panic-killed workers respawn.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SupervisionPolicy {
+    /// Restart budget per worker slot; a slot that exhausts it stays
+    /// dead. When every slot is dead the coordinator rejects the backlog
+    /// (`ShuttingDown`) instead of stranding it.
+    pub max_restarts_per_worker: u32,
+    /// First-restart backoff; doubles per consecutive restart of the
+    /// same slot.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+}
+
+impl Default for SupervisionPolicy {
+    fn default() -> Self {
+        SupervisionPolicy {
+            max_restarts_per_worker: 64,
+            backoff_base: Duration::from_micros(200),
+            backoff_cap: Duration::from_millis(5),
+        }
+    }
+}
+
+impl SupervisionPolicy {
+    fn backoff_for(&self, restarts: u32) -> Duration {
+        // Shift capped at 2^8 so the multiplier cannot overflow; the
+        // duration itself is clamped to the configured ceiling anyway.
+        let mult = 1u32 << restarts.min(8);
+        (self.backoff_base * mult).min(self.backoff_cap)
+    }
+}
+
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -143,6 +230,8 @@ pub struct CoordinatorConfig {
     pub early: EarlyExit,
     /// Intra-batch fan-out policy.
     pub fanout: FanoutPolicy,
+    /// Worker restart policy after panic deaths.
+    pub supervision: SupervisionPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -153,6 +242,7 @@ impl Default for CoordinatorConfig {
             batch: BatchPolicy::default(),
             early: EarlyExit::Off,
             fanout: FanoutPolicy::default(),
+            supervision: SupervisionPolicy::default(),
         }
     }
 }
@@ -166,16 +256,24 @@ pub struct SubmitHandle {
 }
 
 impl SubmitHandle {
-    /// Submit a request; returns the receiver for its response. Fails fast
-    /// with [`Error::Rejected`] when every ingress shard is full
-    /// (backpressure) or the server is shutting down.
+    /// Submit a request; returns the receiver for its response. Fails
+    /// fast — never blocks — with [`Error::Overloaded`] when every
+    /// ingress shard is full (backpressure), [`Error::ShuttingDown`]
+    /// after shutdown, or [`Error::Shed`] when the request's deadline has
+    /// already passed.
     pub fn submit(&self, request: Request) -> Result<Receiver<Result<Response>>> {
+        if request.deadline.is_some_and(|d| d <= Instant::now()) {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            self.metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Shed("deadline already expired at submit".into()));
+        }
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
         let seed = request
             .seed
             .unwrap_or_else(|| self.seed_counter.fetch_add(1, Ordering::Relaxed));
+        let deadline = request.deadline;
         let inflight =
-            InFlight { request, seed, submitted: Instant::now(), reply: reply_tx };
+            InFlight { request, seed, submitted: Instant::now(), deadline, reply: reply_tx };
         match self.queue.push(inflight) {
             Ok(_shard) => {
                 self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
@@ -183,27 +281,60 @@ impl SubmitHandle {
             }
             Err(PushError::Full(_)) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(Error::Rejected("ingress queue full".into()))
+                Err(Error::Overloaded("every ingress shard is at capacity".into()))
             }
             Err(PushError::Closed(_)) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(Error::Rejected("coordinator is shut down".into()))
+                Err(Error::ShuttingDown("coordinator is shut down".into()))
             }
         }
     }
 
     /// Submit and block for the response (convenience).
     pub fn classify(&self, image: Image) -> Result<Response> {
-        let rx = self.submit(Request { image, seed: None })?;
+        let rx = self.submit(Request::new(image))?;
         rx.recv()
             .map_err(|_| Error::Coordinator("worker dropped the reply channel".into()))?
     }
+
+    /// Submit with a deadline and block at most `timeout` for the
+    /// response. The deadline rides along on the request, so a timed-out
+    /// caller's work is shed in the queue instead of computed for nobody;
+    /// the wait itself resolves with [`Error::Timeout`] if no terminal
+    /// reply arrives in time. No caller of this method can block forever.
+    pub fn classify_timeout(&self, image: Image, timeout: Duration) -> Result<Response> {
+        let deadline = Instant::now() + timeout;
+        let rx = self.submit(Request::new(image).with_deadline(deadline))?;
+        match rx.recv_timeout(timeout) {
+            Ok(result) => result,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(Error::Timeout(format!("no reply within {timeout:?}")))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::Coordinator("worker dropped the reply channel".into()))
+            }
+        }
+    }
+}
+
+/// Everything a worker (or its supervisor, to respawn one) needs.
+struct WorkerCtx {
+    queue: Arc<ShardedQueue<InFlight>>,
+    backend: Arc<dyn Backend>,
+    metrics: Arc<ServerMetrics>,
+    cfg: CoordinatorConfig,
+}
+
+struct WorkerSlot {
+    id: usize,
+    handle: Option<JoinHandle<()>>,
+    restarts: u32,
 }
 
 /// The running coordinator.
 pub struct Coordinator {
     handle: SubmitHandle,
-    workers: Vec<JoinHandle<()>>,
+    supervisor: Option<JoinHandle<()>>,
     queue: Arc<ShardedQueue<InFlight>>,
     metrics: Arc<ServerMetrics>,
 }
@@ -211,21 +342,24 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start the worker pool over `backend`. Each worker owns one ingress
     /// shard; the submit path load-balances across them and workers steal
-    /// from siblings when their own shard runs dry.
+    /// from siblings when their own shard runs dry. A supervisor thread
+    /// watches the pool: a worker killed by a backend panic is respawned
+    /// under [`SupervisionPolicy`], so no worker thread stays dead.
     pub fn start(backend: Arc<dyn Backend>, cfg: CoordinatorConfig) -> Self {
         assert!(cfg.workers >= 1);
         let queue = Arc::new(ShardedQueue::new(cfg.workers, cfg.queue_depth));
         let metrics = Arc::new(ServerMetrics::default());
 
-        let workers = (0..cfg.workers)
-            .map(|id| {
-                let queue = Arc::clone(&queue);
-                let backend = Arc::clone(&backend);
-                let metrics = Arc::clone(&metrics);
-                let cfg = cfg.clone();
-                std::thread::spawn(move || worker_loop(id, queue, backend, metrics, cfg))
-            })
+        let ctx = WorkerCtx {
+            queue: Arc::clone(&queue),
+            backend,
+            metrics: Arc::clone(&metrics),
+            cfg: cfg.clone(),
+        };
+        let slots: Vec<WorkerSlot> = (0..cfg.workers)
+            .map(|id| WorkerSlot { id, handle: Some(spawn_worker(id, &ctx)), restarts: 0 })
             .collect();
+        let supervisor = std::thread::spawn(move || supervisor_loop(ctx, slots));
 
         Coordinator {
             handle: SubmitHandle {
@@ -233,7 +367,7 @@ impl Coordinator {
                 seed_counter: Arc::new(AtomicU32::new(1)),
                 metrics: Arc::clone(&metrics),
             },
-            workers,
+            supervisor: Some(supervisor),
             queue,
             metrics,
         }
@@ -254,12 +388,14 @@ impl Coordinator {
         self.queue.depths()
     }
 
-    /// Drain and stop: queued and in-flight requests complete, new
-    /// submissions fail with [`Error::Rejected`].
+    /// Drain and stop: queued and in-flight requests complete (or resolve
+    /// with a typed error — nothing is dropped on the floor, even if a
+    /// worker dies mid-drain), new submissions fail with
+    /// [`Error::ShuttingDown`].
     pub fn shutdown(mut self) {
         self.queue.close();
-        for w in std::mem::take(&mut self.workers) {
-            let _ = w.join();
+        if let Some(sup) = self.supervisor.take() {
+            let _ = sup.join();
         }
     }
 
@@ -273,10 +409,73 @@ impl Drop for Coordinator {
     /// Parity with the old channel-based design, where dropping the
     /// coordinator disconnected the ingress channel: close the queue so
     /// the workers drain what is left and exit, instead of parking on
-    /// the condvar forever. `shutdown()` additionally joins them; a bare
-    /// drop only guarantees they terminate.
+    /// the condvar forever. `shutdown()` additionally joins the
+    /// supervisor; a bare drop only guarantees termination.
     fn drop(&mut self) {
         self.queue.close();
+    }
+}
+
+fn spawn_worker(id: usize, ctx: &WorkerCtx) -> JoinHandle<()> {
+    let queue = Arc::clone(&ctx.queue);
+    let backend = Arc::clone(&ctx.backend);
+    let metrics = Arc::clone(&ctx.metrics);
+    let cfg = ctx.cfg.clone();
+    std::thread::spawn(move || worker_loop(id, queue, backend, metrics, cfg))
+}
+
+/// Watch the worker slots; respawn panic deaths within budget. A worker
+/// that returns normally finished a clean drain (queue closed and empty)
+/// and leaves its slot retired. When every slot is retired or out of
+/// budget, sweep whatever is still queued and give each request a typed
+/// `ShuttingDown` reply — the drain-or-reject half of shutdown.
+fn supervisor_loop(ctx: WorkerCtx, mut slots: Vec<WorkerSlot>) {
+    loop {
+        let mut alive = 0usize;
+        for slot in &mut slots {
+            if slot.handle.as_ref().is_some_and(JoinHandle::is_finished) {
+                let died = slot.handle.take().expect("checked above").join().is_err();
+                let drained = ctx.queue.is_closed() && ctx.queue.is_empty();
+                let budget = ctx.cfg.supervision.max_restarts_per_worker;
+                if died && !drained && slot.restarts < budget {
+                    std::thread::sleep(ctx.cfg.supervision.backoff_for(slot.restarts));
+                    slot.restarts += 1;
+                    ctx.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                    slot.handle = Some(spawn_worker(slot.id, &ctx));
+                }
+            }
+            alive += usize::from(slot.handle.is_some());
+        }
+        if alive == 0 {
+            break;
+        }
+        std::thread::sleep(SUPERVISE_POLL);
+    }
+    reject_leftovers(&ctx);
+}
+
+/// Terminal sweep: nothing is left to run requests, so every request
+/// still queued gets exactly one `ShuttingDown` reply.
+fn reject_leftovers(ctx: &WorkerCtx) {
+    // Idempotent; also covers the every-worker-out-of-budget path, where
+    // the queue is still open but permanently unserved.
+    ctx.queue.close();
+    let mut cursor = 0usize;
+    loop {
+        match ctx.queue.pop_some(0, 64, &mut cursor) {
+            Popped::Items { items, .. } => {
+                for inflight in items {
+                    ctx.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    let msg = "coordinator stopped before this request ran";
+                    let _ = inflight.reply.try_send(Err(Error::ShuttingDown(msg.into())));
+                }
+            }
+            Popped::Drained => return,
+            // Unreachable once the queue is closed and empty shards are
+            // observed atomically, but parking briefly is safer than
+            // spinning if that ever changes.
+            Popped::Empty => std::thread::sleep(Duration::from_millis(1)),
+        }
     }
 }
 
@@ -294,7 +493,7 @@ fn worker_loop(
     loop {
         match batcher.poll(Instant::now()) {
             BatchDecision::Dispatch => {
-                run_batch(&backend, &metrics, &cfg, batcher.take());
+                dispatch(&backend, &metrics, &cfg, batcher.take());
             }
             BatchDecision::Wait(timeout) => {
                 // Fill the forming batch: own shard first, then steal.
@@ -310,7 +509,7 @@ fn worker_loop(
                         if batcher.is_empty() {
                             return;
                         }
-                        run_batch(&backend, &metrics, &cfg, batcher.take());
+                        dispatch(&backend, &metrics, &cfg, batcher.take());
                     }
                     Popped::Empty => {
                         // Nothing to pop: park until new work, the batch
@@ -323,62 +522,183 @@ fn worker_loop(
     }
 }
 
-fn run_batch(
+/// Run one batch; if the backend panicked underneath it, re-raise the
+/// panic *after* every reply is sent. The worker thread genuinely dies —
+/// "let it crash" — and the supervisor replaces it with a fresh one, so
+/// `worker_restarts` counts panicked batches one for one and no state
+/// from the panicking call survives in the worker.
+fn dispatch(
     backend: &Arc<dyn Backend>,
     metrics: &ServerMetrics,
     cfg: &CoordinatorConfig,
     batch: Vec<InFlight>,
 ) {
+    if let Some(payload) = run_batch(backend, metrics, cfg, batch) {
+        std::panic::resume_unwind(payload);
+    }
+}
+
+/// Execute a batch and send exactly one terminal reply per request.
+/// Returns the first caught panic payload, if any, for the worker to
+/// re-raise (after the replies — see the module-level fault model).
+fn run_batch(
+    backend: &Arc<dyn Backend>,
+    metrics: &ServerMetrics,
+    cfg: &CoordinatorConfig,
+    batch: Vec<InFlight>,
+) -> Option<PanicPayload> {
     if batch.is_empty() {
-        return;
+        return None;
+    }
+    // Deadline check at pop time: work that nobody is waiting for any
+    // more is shed, not computed.
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(batch.len());
+    for inflight in batch {
+        if inflight.deadline.is_some_and(|d| d <= now) {
+            metrics.shed.fetch_add(1, Ordering::Relaxed);
+            metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            let err = Error::Shed("deadline expired before execution".into());
+            let _ = inflight.reply.try_send(Err(err));
+        } else {
+            live.push(inflight);
+        }
+    }
+    if live.is_empty() {
+        return None;
     }
     metrics.batches.fetch_add(1, Ordering::Relaxed);
-    metrics.batched_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    metrics.batched_items.fetch_add(live.len() as u64, Ordering::Relaxed);
 
-    let images: Vec<&Image> = batch.iter().map(|f| &f.request.image).collect();
-    let seeds: Vec<u32> = batch.iter().map(|f| f.seed).collect();
+    let images: Vec<&Image> = live.iter().map(|f| &f.request.image).collect();
+    let seeds: Vec<u32> = live.iter().map(|f| f.seed).collect();
     let parts = if backend.parallel_capable() {
-        cfg.fanout.parts_for(batch.len())
+        cfg.fanout.parts_for(live.len())
     } else {
         // Splitting across a backend that serializes internally (the XLA
         // mutex) costs thread dispatch for zero overlap.
         1
     };
     let start = Instant::now();
-    let result = if parts <= 1 {
-        backend.classify_batch(&images, &seeds, cfg.early)
+    let (results, payload) = if parts <= 1 {
+        run_chunk_with_retry(&**backend, metrics, cfg.early, &images, &seeds)
     } else {
         fan_out_batch(&**backend, metrics, cfg.early, &images, &seeds, parts)
     };
     metrics.batch_latency.record(start.elapsed());
+    metrics.quarantined_engines.store(backend.quarantined_engines(), Ordering::Relaxed);
 
-    match result {
-        Ok(outputs) => {
-            debug_assert_eq!(outputs.len(), batch.len());
-            for (inflight, out) in batch.into_iter().zip(outputs) {
-                respond_ok(metrics, inflight, out);
+    debug_assert_eq!(results.len(), live.len());
+    for (inflight, result) in live.into_iter().zip(results) {
+        match result {
+            Ok(out) => respond_ok(metrics, inflight, out),
+            Err(e) => {
+                metrics.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = inflight.reply.try_send(Err(e));
             }
         }
-        Err(e) => {
-            // Batch-level failure: every request in it gets the error.
-            let msg = e.to_string();
-            for inflight in batch {
-                metrics.failed.fetch_add(1, Ordering::Relaxed);
-                let _ = inflight.reply.try_send(Err(Error::Coordinator(msg.clone())));
-            }
+    }
+    payload
+}
+
+/// One guarded backend call. `catch_unwind` converts an engine panic
+/// into `Err(BackendPanicked)` (counted, payload preserved for the
+/// worker's re-raise), and a wrong-length reply into a typed error
+/// instead of silently cross-wiring request ↔ response pairs.
+///
+/// `AssertUnwindSafe` is justified by engine quarantine: an engine that
+/// was checked out when the panic unwound never returns to the free list
+/// (slot poisoning / panicking-drop eviction in `InstancePool`), so no
+/// later caller can observe its broken invariants; the coordinator's own
+/// shared state (queues, metrics) is either lock-free atomics or
+/// poison-recovering locks over panic-sound data.
+fn call_guarded(
+    backend: &dyn Backend,
+    metrics: &ServerMetrics,
+    early: EarlyExit,
+    images: &[&Image],
+    seeds: &[u32],
+) -> (Result<Vec<BackendOutput>>, Option<PanicPayload>) {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        backend.classify_batch(images, seeds, early)
+    })) {
+        Ok(Ok(out)) if out.len() == images.len() => (Ok(out), None),
+        Ok(Ok(out)) => {
+            let (got, want) = (out.len(), images.len());
+            let msg = format!("backend returned {got} outputs for a batch of {want}");
+            (Err(Error::Coordinator(msg)), None)
+        }
+        Ok(Err(e)) => (Err(e), None),
+        Err(payload) => {
+            metrics.panics_recovered.fetch_add(1, Ordering::Relaxed);
+            let msg = panic_message(payload.as_ref());
+            (Err(Error::BackendPanicked(msg)), Some(payload))
         }
     }
 }
 
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Expand a chunk-level result to per-request results (a failed chunk
+/// replicates its error to every request in it).
+fn expand_chunk(result: Result<Vec<BackendOutput>>, n: usize) -> Vec<Result<BackendOutput>> {
+    match result {
+        Ok(outs) => outs.into_iter().map(Ok).collect(),
+        Err(e) => (0..n).map(|_| Err(e.replicate())).collect(),
+    }
+}
+
+/// Guarded single-chunk execution with one retry. The retry checks a
+/// fresh engine out of the pool (the failed one was quarantined) and
+/// replays the identical images and seeds, so a recovered chunk is
+/// bit-exact with an unfaulted run — per-(image, seed) PRNG streams make
+/// results independent of which engine instance serves them.
+fn run_chunk_with_retry(
+    backend: &dyn Backend,
+    metrics: &ServerMetrics,
+    early: EarlyExit,
+    images: &[&Image],
+    seeds: &[u32],
+) -> (Vec<Result<BackendOutput>>, Option<PanicPayload>) {
+    let (first, mut payload) = call_guarded(backend, metrics, early, images, seeds);
+    let result = match first {
+        Ok(out) => Ok(out),
+        Err(_) => {
+            metrics.subbatch_retries.fetch_add(1, Ordering::Relaxed);
+            let (second, p2) = call_guarded(backend, metrics, early, images, seeds);
+            if payload.is_none() {
+                payload = p2;
+            }
+            second
+        }
+    };
+    (expand_chunk(result, images.len()), payload)
+}
+
 /// Split one large batch into `parts` contiguous sub-batches, run them
 /// concurrently on the backend (whose engine pool hands each call a
-/// private instance), and reassemble the outputs in submission order.
+/// private instance), retry each failed sub-batch once, and reassemble
+/// per-request outcomes in submission order.
 ///
 /// Ordering argument: `chunks` yields contiguous, non-overlapping slices
-/// in ascending index order; sub-batch `k` is joined and appended before
-/// sub-batch `k+1`, and every backend returns outputs positionally, so
-/// `out[i]` is the result of `images[i]` regardless of which thread ran
+/// in ascending index order; sub-batch `k`'s outcomes are appended before
+/// sub-batch `k+1`'s, and every backend returns outputs positionally, so
+/// `out[i]` is the outcome of `images[i]` regardless of which thread ran
 /// it or when it finished. The stress suite pins this end to end.
+///
+/// Degradation argument: a sub-batch failure (error or caught panic) is
+/// contained to its chunk — the other chunks' results are kept, the
+/// failed chunk is retried once on a fresh engine with the same seeds
+/// (bit-exact on success), and only a twice-failed chunk's requests get
+/// error replies.
 fn fan_out_batch(
     backend: &dyn Backend,
     metrics: &ServerMetrics,
@@ -386,33 +706,62 @@ fn fan_out_batch(
     images: &[&Image],
     seeds: &[u32],
     parts: usize,
-) -> Result<Vec<BackendOutput>> {
+) -> (Vec<Result<BackendOutput>>, Option<PanicPayload>) {
     let chunk = images.len().div_ceil(parts);
     metrics.fanout_batches.fetch_add(1, Ordering::Relaxed);
-    std::thread::scope(|scope| {
+    // Phase 1: all sub-batches run concurrently, each behind its own
+    // catch_unwind (a panicking sub-batch thread would otherwise abort
+    // the scope by poisoning the join).
+    let mut attempts = std::thread::scope(|scope| {
         let mut tails = Vec::new();
         for (imgs, sds) in images[chunk..].chunks(chunk).zip(seeds[chunk..].chunks(chunk)) {
-            tails.push(scope.spawn(move || backend.classify_batch(imgs, sds, early)));
+            tails.push(scope.spawn(move || call_guarded(backend, metrics, early, imgs, sds)));
         }
         metrics.subbatches.fetch_add(tails.len() as u64 + 1, Ordering::Relaxed);
-        // Run the first sub-batch on this worker thread; the spawned tails
-        // overlap with it.
-        let mut out = backend.classify_batch(&images[..chunk], &seeds[..chunk], early)?;
-        let mut first_err = None;
+        // Run the first sub-batch on this worker thread; the spawned
+        // tails overlap with it.
+        let head = call_guarded(backend, metrics, early, &images[..chunk], &seeds[..chunk]);
+        let mut all = vec![head];
         for handle in tails {
-            match handle.join().expect("sub-batch thread panicked") {
-                Ok(mut part) => out.append(&mut part),
-                Err(e) => first_err = first_err.or(Some(e)),
+            all.push(handle.join().expect("guarded sub-batch cannot panic"));
+        }
+        all
+    });
+    // Phase 2: one sequential retry per failed sub-batch, same slices,
+    // fresh engine (the failed one was quarantined by the pool).
+    let mut payload = None;
+    for (k, entry) in attempts.iter_mut().enumerate() {
+        if payload.is_none() {
+            payload = entry.1.take();
+        }
+        if entry.0.is_err() {
+            metrics.subbatch_retries.fetch_add(1, Ordering::Relaxed);
+            let lo = k * chunk;
+            let hi = (lo + chunk).min(images.len());
+            let (retry, p2) =
+                call_guarded(backend, metrics, early, &images[lo..hi], &seeds[lo..hi]);
+            if payload.is_none() {
+                payload = p2;
             }
+            entry.0 = retry;
         }
-        match first_err {
-            Some(e) => Err(e),
-            None => Ok(out),
-        }
-    })
+    }
+    // Phase 3: expand chunk outcomes to per-request outcomes, in order.
+    let mut out = Vec::with_capacity(images.len());
+    for (k, (result, _)) in attempts.into_iter().enumerate() {
+        let lo = k * chunk;
+        let n = (lo + chunk).min(images.len()) - lo;
+        out.extend(expand_chunk(result, n));
+    }
+    (out, payload)
 }
 
 fn respond_ok(metrics: &ServerMetrics, inflight: InFlight, out: BackendOutput) {
+    if inflight.deadline.is_some_and(|d| d <= Instant::now()) {
+        // The work finished late: still delivered (the caller may yet be
+        // listening), but the expiry goes on record.
+        metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    }
     metrics.completed.fetch_add(1, Ordering::Relaxed);
     metrics.steps_executed.fetch_add(u64::from(out.steps_run), Ordering::Relaxed);
     metrics.latency.record(inflight.submitted.elapsed());
@@ -431,6 +780,7 @@ mod tests {
     use crate::coordinator::backend::BehavioralBackend;
     use crate::data::{DigitGen, IMG_PIXELS};
     use crate::fixed::WeightMatrix;
+    use std::sync::atomic::AtomicBool;
 
     fn block_weights() -> WeightMatrix {
         let mut w = vec![0i32; 784 * 10];
@@ -464,6 +814,7 @@ mod tests {
                 batch: BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(1) },
                 early: EarlyExit::Off,
                 fanout: FanoutPolicy::default(),
+                supervision: SupervisionPolicy::default(),
             },
         )
     }
@@ -490,7 +841,7 @@ mod tests {
         let receivers: Vec<_> = (0..64)
             .map(|i| {
                 let img = block_image(i % 10);
-                (i % 10, handle.submit(Request { image: img, seed: Some(42 + i as u32) }).unwrap())
+                (i % 10, handle.submit(Request::new(img).with_seed(42 + i as u32)).unwrap())
             })
             .collect();
         for (class, rx) in receivers {
@@ -509,17 +860,12 @@ mod tests {
         let handle = coord.handle();
         let img = DigitGen::new(1).sample(4, 0);
         let a = handle
-            .submit(Request { image: img.clone(), seed: Some(7) })
+            .submit(Request::new(img.clone()).with_seed(7))
             .unwrap()
             .recv()
             .unwrap()
             .unwrap();
-        let b = handle
-            .submit(Request { image: img, seed: Some(7) })
-            .unwrap()
-            .recv()
-            .unwrap()
-            .unwrap();
+        let b = handle.submit(Request::new(img).with_seed(7)).unwrap().recv().unwrap().unwrap();
         assert_eq!(a, b);
         coord.shutdown();
     }
@@ -527,15 +873,15 @@ mod tests {
     #[test]
     fn backpressure_rejects_when_full() {
         // One worker, tiny queue, and a flood of submissions from this
-        // thread: some must be rejected, none lost.
+        // thread: some must be rejected (typed Overloaded), none lost.
         let coord = start_coordinator(1, 2);
         let handle = coord.handle();
         let mut accepted = Vec::new();
         let mut rejected = 0usize;
         for i in 0..200 {
-            match handle.submit(Request { image: block_image(i % 10), seed: Some(i as u32) }) {
+            match handle.submit(Request::new(block_image(i % 10)).with_seed(i as u32)) {
                 Ok(rx) => accepted.push(rx),
-                Err(Error::Rejected(_)) => rejected += 1,
+                Err(Error::Overloaded(_)) => rejected += 1,
                 Err(e) => panic!("unexpected error {e}"),
             }
         }
@@ -554,10 +900,8 @@ mod tests {
         let handle = coord.handle();
         handle.classify(block_image(1)).unwrap();
         coord.shutdown();
-        assert!(matches!(
-            handle.submit(Request { image: block_image(1), seed: None }),
-            Err(Error::Rejected(_))
-        ));
+        let res = handle.submit(Request::new(block_image(1)));
+        assert!(matches!(res, Err(Error::ShuttingDown(_))));
     }
 
     #[test]
@@ -574,6 +918,7 @@ mod tests {
                 batch: BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(100) },
                 early: EarlyExit::Margin { margin: 3, min_steps: 2 },
                 fanout: FanoutPolicy::default(),
+                supervision: SupervisionPolicy::default(),
             },
         );
         let resp = coord.handle().classify(block_image(5)).unwrap();
@@ -634,6 +979,21 @@ mod tests {
         }
     }
 
+    fn start_fixed_cost(per_image: Duration, queue: usize) -> Coordinator {
+        let backend = Arc::new(FixedCostBackend { cfg: SnnConfig::paper(), per_image });
+        Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: queue,
+                batch: BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(50) },
+                early: EarlyExit::Off,
+                fanout: FanoutPolicy::off(),
+                supervision: SupervisionPolicy::default(),
+            },
+        )
+    }
+
     #[test]
     fn calibrated_fanout_adapts_to_backend_cost() {
         // The derivation is pure — pin the crossover math first.
@@ -691,6 +1051,7 @@ mod tests {
                 batch: BatchPolicy { max_batch: 40, max_delay: Duration::from_millis(20) },
                 early: EarlyExit::Off,
                 fanout: FanoutPolicy { min_batch: 8, max_parts: 4 },
+                supervision: SupervisionPolicy::default(),
             },
         );
         let handle = coord.handle();
@@ -698,7 +1059,7 @@ mod tests {
             .map(|i| {
                 let class = i % 10;
                 let rx = handle
-                    .submit(Request { image: block_image(class), seed: Some(1000 + i as u32) })
+                    .submit(Request::new(block_image(class)).with_seed(1000 + i as u32))
                     .unwrap();
                 (class, rx)
             })
@@ -723,6 +1084,262 @@ mod tests {
     fn shard_depth_gauges_exposed() {
         let coord = start_coordinator(3, 96);
         assert_eq!(coord.shard_depths().len(), 3);
+        coord.shutdown();
+    }
+
+    // -----------------------------------------------------------------
+    // Fault tolerance
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn expired_deadline_is_rejected_at_submit() {
+        let coord = start_coordinator(1, 8);
+        let handle = coord.handle();
+        let res = handle.submit(Request::new(block_image(0)).with_deadline(Instant::now()));
+        assert!(matches!(res, Err(Error::Shed(_))), "want Shed, got {res:?}");
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.deadline_expired, 1);
+        assert_eq!(snap.submitted, 0, "an expired request never enters the queue");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn queued_requests_past_deadline_are_shed_at_pop() {
+        // A 5 ms-per-image backend and one worker: request A occupies the
+        // worker long past B's 1 ms deadline, so B is shed at pop time.
+        let coord = start_fixed_cost(Duration::from_millis(5), 16);
+        let handle = coord.handle();
+        let a = handle.submit(Request::new(block_image(0)).with_seed(1)).unwrap();
+        let req = Request::new(block_image(1))
+            .with_seed(2)
+            .with_deadline(Instant::now() + Duration::from_millis(1));
+        let b = handle.submit(req).unwrap();
+        assert!(a.recv().unwrap().is_ok());
+        let shed = b.recv().unwrap();
+        assert!(matches!(shed, Err(Error::Shed(_))), "want Shed, got {shed:?}");
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.shed, 1);
+        assert!(snap.deadline_expired >= 1);
+        assert_eq!(snap.completed, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn classify_timeout_bounds_the_wait() {
+        let coord = start_fixed_cost(Duration::from_millis(50), 16);
+        let handle = coord.handle();
+        let t0 = Instant::now();
+        let res = handle.classify_timeout(block_image(0), Duration::from_millis(2));
+        assert!(
+            matches!(res, Err(Error::Timeout(_)) | Err(Error::Shed(_))),
+            "want Timeout or Shed, got {res:?}"
+        );
+        assert!(t0.elapsed() < Duration::from_secs(5), "classify_timeout must not block");
+        coord.shutdown();
+    }
+
+    /// Panics on every batch containing the victim seed.
+    struct PanickingBackend {
+        cfg: SnnConfig,
+        victim: u32,
+    }
+
+    impl Backend for PanickingBackend {
+        fn name(&self) -> &'static str {
+            "panicking-stub"
+        }
+        fn classify_batch(
+            &self,
+            images: &[&Image],
+            seeds: &[u32],
+            _early: EarlyExit,
+        ) -> Result<Vec<BackendOutput>> {
+            if seeds.contains(&self.victim) {
+                panic!("stub panic (victim seed {})", self.victim);
+            }
+            Ok(images
+                .iter()
+                .zip(seeds)
+                .map(|(_, &s)| BackendOutput {
+                    class: (s % 10) as u8,
+                    spike_counts: vec![s; 2],
+                    steps_run: 1,
+                })
+                .collect())
+        }
+        fn config(&self) -> &SnnConfig {
+            &self.cfg
+        }
+    }
+
+    #[test]
+    fn backend_panic_is_contained_and_worker_respawned() {
+        let backend = Arc::new(PanickingBackend { cfg: SnnConfig::paper(), victim: 0xDEAD });
+        let coord = Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 16,
+                batch: BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(10) },
+                early: EarlyExit::Off,
+                fanout: FanoutPolicy::off(),
+                supervision: SupervisionPolicy {
+                    max_restarts_per_worker: 8,
+                    backoff_base: Duration::from_micros(50),
+                    backoff_cap: Duration::from_millis(1),
+                },
+            },
+        );
+        let handle = coord.handle();
+        // The victim's batch panics on the first attempt and again on the
+        // retry: typed terminal reply, not a hung channel.
+        let bad = handle
+            .submit(Request::new(block_image(0)).with_seed(0xDEAD))
+            .unwrap()
+            .recv()
+            .expect("panicked batch must still send a terminal reply");
+        assert!(matches!(bad, Err(Error::BackendPanicked(_))), "got {bad:?}");
+        // The worker died with the panic; the supervisor respawns it and
+        // serving continues.
+        let good = handle
+            .submit(Request::new(block_image(3)).with_seed(3))
+            .unwrap()
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert_eq!(good.class, 3);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while coord.metrics().snapshot().worker_restarts == 0 {
+            assert!(Instant::now() < deadline, "supervisor never restarted the worker");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.worker_restarts, 1, "one panicked batch = one restart");
+        assert_eq!(snap.panics_recovered, 2, "initial attempt + retry both panic");
+        assert_eq!(snap.subbatch_retries, 1);
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.completed, 1);
+        coord.shutdown();
+    }
+
+    /// Always replies one output short (broken batch contract).
+    struct ShortReplyBackend {
+        cfg: SnnConfig,
+    }
+
+    impl Backend for ShortReplyBackend {
+        fn name(&self) -> &'static str {
+            "short-reply-stub"
+        }
+        fn classify_batch(
+            &self,
+            images: &[&Image],
+            _seeds: &[u32],
+            _early: EarlyExit,
+        ) -> Result<Vec<BackendOutput>> {
+            Ok((1..images.len())
+                .map(|_| BackendOutput { class: 0, spike_counts: vec![], steps_run: 1 })
+                .collect())
+        }
+        fn config(&self) -> &SnnConfig {
+            &self.cfg
+        }
+    }
+
+    #[test]
+    fn wrong_length_reply_is_a_typed_error_not_a_lost_reply() {
+        let backend = Arc::new(ShortReplyBackend { cfg: SnnConfig::paper() });
+        let coord = Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 8,
+                batch: BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(10) },
+                early: EarlyExit::Off,
+                fanout: FanoutPolicy::off(),
+                supervision: SupervisionPolicy::default(),
+            },
+        );
+        let res = coord
+            .handle()
+            .submit(Request::new(block_image(0)).with_seed(1))
+            .unwrap()
+            .recv()
+            .expect("wrong-length batch must still send a terminal reply");
+        match res {
+            Err(Error::Coordinator(msg)) => {
+                assert!(msg.contains("outputs"), "unhelpful message: {msg}")
+            }
+            other => panic!("want typed length error, got {other:?}"),
+        }
+        assert_eq!(coord.metrics().snapshot().failed, 1);
+        coord.shutdown();
+    }
+
+    /// Fails exactly the first call, then behaves (seed-echo outputs).
+    struct FlakyOnceBackend {
+        cfg: SnnConfig,
+        tripped: AtomicBool,
+    }
+
+    impl Backend for FlakyOnceBackend {
+        fn name(&self) -> &'static str {
+            "flaky-once-stub"
+        }
+        fn classify_batch(
+            &self,
+            images: &[&Image],
+            seeds: &[u32],
+            _early: EarlyExit,
+        ) -> Result<Vec<BackendOutput>> {
+            if !self.tripped.swap(true, Ordering::SeqCst) {
+                return Err(Error::Xla("transient stub fault".into()));
+            }
+            Ok(images
+                .iter()
+                .zip(seeds)
+                .map(|(_, &s)| BackendOutput {
+                    class: (s % 10) as u8,
+                    spike_counts: vec![s; 2],
+                    steps_run: 1,
+                })
+                .collect())
+        }
+        fn config(&self) -> &SnnConfig {
+            &self.cfg
+        }
+    }
+
+    #[test]
+    fn transient_backend_fault_recovers_via_retry() {
+        let backend = Arc::new(FlakyOnceBackend {
+            cfg: SnnConfig::paper(),
+            tripped: AtomicBool::new(false),
+        });
+        let coord = Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 8,
+                batch: BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(10) },
+                early: EarlyExit::Off,
+                fanout: FanoutPolicy::off(),
+                supervision: SupervisionPolicy::default(),
+            },
+        );
+        let resp = coord
+            .handle()
+            .submit(Request::new(block_image(0)).with_seed(7))
+            .unwrap()
+            .recv()
+            .unwrap()
+            .expect("single transient fault must be absorbed by the retry");
+        assert_eq!(resp.spike_counts, vec![7; 2]);
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.subbatch_retries, 1);
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.failed, 0);
         coord.shutdown();
     }
 }

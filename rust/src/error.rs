@@ -3,6 +3,12 @@
 //! The library uses a structured [`Error`] with hand-written `Display` /
 //! `std::error::Error` impls (`thiserror` is not in the offline crate set);
 //! binaries and examples bubble it up through `Box<dyn std::error::Error>`.
+//!
+//! The serving coordinator relies on the *typed* variants as its terminal
+//! reply vocabulary: every submitted request resolves to `Ok(Response)` or
+//! exactly one of [`Error::Overloaded`], [`Error::Shed`],
+//! [`Error::BackendPanicked`], [`Error::ShuttingDown`], or a backend error
+//! ([`Error::Xla`] / [`Error::ShapeMismatch`] / [`Error::Coordinator`]).
 
 use std::fmt;
 use std::path::PathBuf;
@@ -25,10 +31,28 @@ pub enum Error {
     /// A runtime (PJRT / XLA) failure.
     Xla(String),
 
-    /// The coordinator rejected a request (queue full, shut down, ...).
-    Rejected(String),
+    /// Admission control refused the request: every ingress shard was at
+    /// capacity. The caller should back off and retry.
+    Overloaded(String),
 
-    /// A worker or channel disappeared mid-flight.
+    /// The request's deadline expired before the backend ran it, so the
+    /// coordinator dropped it instead of doing work nobody is waiting for.
+    Shed(String),
+
+    /// The backend panicked while executing the batch containing this
+    /// request. The engine involved has been quarantined and the worker
+    /// replaced; retrying with the same seed is deterministic and safe.
+    BackendPanicked(String),
+
+    /// The coordinator is shutting down (or has stopped) and will not run
+    /// this request.
+    ShuttingDown(String),
+
+    /// A blocking wait on a reply gave up after its timeout.
+    Timeout(String),
+
+    /// A worker or channel disappeared mid-flight, or a backend broke the
+    /// batch contract (e.g. a wrong-length reply).
     Coordinator(String),
 
     /// Dimension mismatch between tensors / images / weight matrices.
@@ -46,7 +70,11 @@ impl fmt::Display for Error {
             }
             Error::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
             Error::Xla(msg) => write!(f, "xla runtime error: {msg}"),
-            Error::Rejected(msg) => write!(f, "request rejected: {msg}"),
+            Error::Overloaded(msg) => write!(f, "overloaded: {msg}"),
+            Error::Shed(msg) => write!(f, "request shed: {msg}"),
+            Error::BackendPanicked(msg) => write!(f, "backend panicked: {msg}"),
+            Error::ShuttingDown(msg) => write!(f, "shutting down: {msg}"),
+            Error::Timeout(msg) => write!(f, "timed out: {msg}"),
             Error::Coordinator(msg) => write!(f, "coordinator internal failure: {msg}"),
             Error::ShapeMismatch(msg) => write!(f, "shape mismatch: {msg}"),
         }
@@ -72,6 +100,28 @@ impl Error {
     pub fn malformed(path: impl Into<PathBuf>, reason: impl Into<String>) -> Self {
         Error::MalformedArtifact { path: path.into(), reason: reason.into() }
     }
+
+    /// Clone-like duplication for fanning one failure out to every request
+    /// in a batch. `std::io::Error` is not `Clone`, so [`Error::Io`]
+    /// degrades to [`Error::Coordinator`] carrying the rendered message;
+    /// every other variant replicates structurally.
+    pub fn replicate(&self) -> Error {
+        match self {
+            Error::Io { .. } => Error::Coordinator(self.to_string()),
+            Error::MalformedArtifact { path, reason } => {
+                Error::MalformedArtifact { path: path.clone(), reason: reason.clone() }
+            }
+            Error::InvalidConfig(m) => Error::InvalidConfig(m.clone()),
+            Error::Xla(m) => Error::Xla(m.clone()),
+            Error::Overloaded(m) => Error::Overloaded(m.clone()),
+            Error::Shed(m) => Error::Shed(m.clone()),
+            Error::BackendPanicked(m) => Error::BackendPanicked(m.clone()),
+            Error::ShuttingDown(m) => Error::ShuttingDown(m.clone()),
+            Error::Timeout(m) => Error::Timeout(m.clone()),
+            Error::Coordinator(m) => Error::Coordinator(m.clone()),
+            Error::ShapeMismatch(m) => Error::ShapeMismatch(m.clone()),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -88,5 +138,27 @@ mod tests {
         let e = Error::malformed("m.txt", "bad magic");
         assert!(e.to_string().contains("bad magic"));
         assert!(std::error::Error::source(&e).is_none());
+    }
+
+    #[test]
+    fn typed_serving_errors_render_their_class() {
+        assert!(Error::Overloaded("all shards full".into()).to_string().starts_with("overloaded"));
+        assert!(Error::Shed("expired".into()).to_string().contains("shed"));
+        assert!(Error::BackendPanicked("boom".into()).to_string().contains("panicked"));
+        assert!(Error::ShuttingDown("stop".into()).to_string().contains("shutting down"));
+        assert!(Error::Timeout("5ms".into()).to_string().contains("timed out"));
+    }
+
+    #[test]
+    fn replicate_preserves_variant_except_io() {
+        let e = Error::BackendPanicked("boom".into());
+        assert!(matches!(e.replicate(), Error::BackendPanicked(m) if m == "boom"));
+
+        let e = Error::ShapeMismatch("784 vs 10".into());
+        assert!(matches!(e.replicate(), Error::ShapeMismatch(_)));
+
+        let io = Error::io("x", std::io::Error::other("disk"));
+        let r = io.replicate();
+        assert!(matches!(&r, Error::Coordinator(m) if m.contains("disk")));
     }
 }

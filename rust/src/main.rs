@@ -17,7 +17,7 @@ use std::time::Instant;
 use snn_rtl::cli::Args;
 use snn_rtl::coordinator::{
     Backend, BatchPolicy, BehavioralBackend, Coordinator, CoordinatorConfig,
-    FanoutPolicy, Request, RtlBackend, XlaBackend,
+    FanoutPolicy, Request, RtlBackend, SupervisionPolicy, XlaBackend,
 };
 use snn_rtl::data::{codec, DigitGen};
 use snn_rtl::experiments::{self, Ctx};
@@ -129,6 +129,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             batch: BatchPolicy { max_batch: batch, ..Default::default() },
             early,
             fanout: FanoutPolicy::default(),
+            supervision: SupervisionPolicy::default(),
         },
     );
     let handle = coord.handle();
@@ -142,7 +143,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let class = (i % 10) as u8;
         let img = gen.sample(class, (i / 10) as u32);
         correct_labels.push(class);
-        receivers.push(handle.submit(Request { image: img, seed: Some(i as u32 + 1) })?);
+        receivers.push(handle.submit(Request::new(img).with_seed(i as u32 + 1))?);
     }
     let mut hits = 0usize;
     for (rx, label) in receivers.into_iter().zip(correct_labels) {

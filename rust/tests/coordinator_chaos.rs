@@ -1,0 +1,653 @@
+//! Deterministic chaos suite for the fault-tolerant coordinator: a seeded
+//! [`FaultInjectingBackend`] schedule drives panics, transient errors,
+//! wrong-length replies and latency spikes through the full serving path,
+//! and the assertions are exact — victims are enumerated from the plan up
+//! front, never sampled. Invariants pinned here:
+//!
+//! * every accepted request gets **exactly one** terminal reply (no
+//!   duplicates), under mixed faults, under batching and fan-out, and
+//!   after the supervisor's restart budget runs out;
+//! * recovered requests (transient error / wrong-length, absorbed by the
+//!   one retry) are **bit-exact** with a fault-free run of the same
+//!   (image, seed);
+//! * hard panic victims surface as typed `BackendPanicked` errors, and
+//!   each panicked batch costs exactly one worker death plus one
+//!   supervised respawn;
+//! * engine pools quarantine instances that were checked out across a
+//!   panic, and never shrink below their configured capacity.
+//!
+//! Everything runs under a watchdog so a regression is a failure, never a
+//! hung CI job.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use snn_rtl::coordinator::{
+    Backend, BackendOutput, BatchPolicy, Coordinator, CoordinatorConfig, FanoutPolicy,
+    FaultInjectingBackend, FaultKind, FaultPlan, InstancePool, Request, Response, RtlBackend,
+    SupervisionPolicy,
+};
+use snn_rtl::data::{DigitGen, Image, IMG_PIXELS};
+use snn_rtl::error::Error;
+use snn_rtl::fixed::WeightMatrix;
+use snn_rtl::prng::splitmix32;
+use snn_rtl::snn::EarlyExit;
+use snn_rtl::SnnConfig;
+
+/// Run `body` on a helper thread and fail loudly if it does not finish
+/// within `limit` — the chaos suite's hang detector.
+fn with_watchdog<F: FnOnce() + Send + 'static>(limit: Duration, body: F) {
+    let (done_tx, done_rx) = mpsc::channel();
+    let runner = std::thread::spawn(move || {
+        body();
+        let _ = done_tx.send(());
+    });
+    match done_rx.recv_timeout(limit) {
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(payload) = runner.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("watchdog: test exceeded {limit:?} — likely a hang/deadlock")
+        }
+    }
+}
+
+/// Block-diagonal weights: pixel block `k` feeds output `k`, so real
+/// engines produce crisp, reproducible classifications.
+fn test_weights() -> WeightMatrix {
+    let mut w = vec![0i32; 784 * 10];
+    for i in 0..784 {
+        let block = i / 79;
+        if block < 10 {
+            w[i * 10 + block] = 40;
+        }
+    }
+    WeightMatrix::from_rows(784, 10, 9, w).unwrap()
+}
+
+/// Deterministic seed → image mapping shared by the serving run and the
+/// fault-free reference run.
+fn image_for_seed(seed: u32) -> Image {
+    DigitGen::new(7).sample((seed % 10) as u8, seed % 37)
+}
+
+fn blank_image() -> Image {
+    Image { label: 0, pixels: vec![0u8; IMG_PIXELS] }
+}
+
+/// First `n` request seeds (from 1 upward) the plan classifies as `kind` —
+/// victim enumeration is a pure function of the plan, so the suite knows
+/// every request's fate before submitting anything.
+fn seeds_of_kind(plan: &FaultPlan, kind: FaultKind, n: usize) -> Vec<u32> {
+    (1u32..).filter(|&s| plan.classify(s) == kind).take(n).collect()
+}
+
+/// Deterministic shuffle: order by a hash of the seed, so victims scatter
+/// across the submission stream identically on every run.
+fn shuffled(mut seeds: Vec<u32>) -> Vec<u32> {
+    seeds.sort_by_key(|&s| splitmix32(s ^ 0x5EED_CAFE));
+    seeds
+}
+
+/// Fault-free ground truth per seed, computed on a private engine.
+fn reference_outputs(backend: &RtlBackend, seeds: &[u32]) -> HashMap<u32, BackendOutput> {
+    seeds
+        .iter()
+        .map(|&s| {
+            let img = image_for_seed(s);
+            let out = backend.classify_batch(&[&img], &[s], EarlyExit::Off).unwrap();
+            (s, out.into_iter().next().unwrap())
+        })
+        .collect()
+}
+
+fn assert_bit_exact(resp: &Response, want: &BackendOutput, seed: u32) {
+    assert_eq!(resp.seed, seed, "seed echo mismatch");
+    assert_eq!(resp.class, want.class, "class diverged for seed {seed}");
+    assert_eq!(resp.spike_counts, want.spike_counts, "counts not bit-exact for seed {seed}");
+    assert_eq!(resp.steps_run, want.steps_run, "steps diverged for seed {seed}");
+}
+
+/// Mixed chaos over singleton batches: with `max_batch = 1` every request
+/// is its own batch, so each request's outcome is exactly determined by
+/// its own fault kind — panic victims fail typed, every transient victim
+/// recovers bit-exactly via the retry, and every counter is exact.
+#[test]
+fn mixed_chaos_every_request_resolves_bit_exactly() {
+    with_watchdog(Duration::from_secs(120), || {
+        let plan = FaultPlan {
+            seed: 0x0051_CE55,
+            panic_per_mille: 25,
+            error_per_mille: 25,
+            wrong_len_per_mille: 25,
+            latency_per_mille: 25,
+            latency_spike: Duration::from_millis(1),
+        };
+        let panics = seeds_of_kind(&plan, FaultKind::Panic, 8);
+        let errors = seeds_of_kind(&plan, FaultKind::TransientError, 10);
+        let wrongs = seeds_of_kind(&plan, FaultKind::WrongLength, 6);
+        let lates = seeds_of_kind(&plan, FaultKind::LatencySpike, 4);
+        let clean = seeds_of_kind(&plan, FaultKind::None, 72);
+        let mut all = Vec::new();
+        for list in [&panics, &errors, &wrongs, &lates, &clean] {
+            all.extend_from_slice(list);
+        }
+        let all = shuffled(all);
+
+        let cfg = SnnConfig::paper().with_timesteps(4);
+        let reference = RtlBackend::new(cfg.clone(), test_weights()).unwrap();
+        let expected = reference_outputs(&reference, &all);
+
+        let inner: Arc<dyn Backend> = Arc::new(RtlBackend::new(cfg, test_weights()).unwrap());
+        let wrapper = Arc::new(FaultInjectingBackend::new(inner, plan));
+        let coord = Coordinator::start(
+            Arc::clone(&wrapper) as Arc<dyn Backend>,
+            CoordinatorConfig {
+                workers: 2,
+                queue_depth: 256,
+                batch: BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(50) },
+                early: EarlyExit::Off,
+                fanout: FanoutPolicy::off(),
+                supervision: SupervisionPolicy {
+                    max_restarts_per_worker: 32,
+                    backoff_base: Duration::from_micros(50),
+                    backoff_cap: Duration::from_millis(1),
+                },
+            },
+        );
+        let handle = coord.handle();
+        let receivers: Vec<_> = all
+            .iter()
+            .map(|&s| {
+                let rx = loop {
+                    match handle.submit(Request::new(image_for_seed(s)).with_seed(s)) {
+                        Ok(rx) => break rx,
+                        Err(Error::Overloaded(_)) => {
+                            std::thread::sleep(Duration::from_micros(100));
+                        }
+                        Err(e) => panic!("unexpected submit error: {e}"),
+                    }
+                };
+                (s, rx)
+            })
+            .collect();
+        for (s, rx) in receivers {
+            let reply = rx.recv().expect("every request must get a terminal reply");
+            assert!(rx.try_recv().is_err(), "duplicate reply for seed {s}");
+            if plan.classify(s) == FaultKind::Panic {
+                assert!(
+                    matches!(reply, Err(Error::BackendPanicked(_))),
+                    "hard victim {s} must fail typed, got {reply:?}"
+                );
+            } else {
+                let resp = reply.unwrap_or_else(|e| panic!("seed {s} must recover: {e}"));
+                assert_bit_exact(&resp, &expected[&s], s);
+            }
+        }
+
+        // The restart counter trails the last panicked reply by one
+        // supervisor poll; wait for it before asserting exact counts.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while coord.metrics().snapshot().worker_restarts < 8 {
+            assert!(Instant::now() < deadline, "supervisor never caught all 8 deaths");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.completed, 92);
+        assert_eq!(snap.failed, 8, "only the 8 hard panic victims fail");
+        assert_eq!(snap.shed, 0);
+        assert_eq!(snap.submitted, snap.completed + snap.failed + snap.shed);
+        assert_eq!(snap.panics_recovered, 16, "initial attempt + retry per panic victim");
+        assert_eq!(snap.worker_restarts, 8, "one death per panicked singleton batch");
+        assert_eq!(snap.subbatch_retries, 24, "every faulted singleton retried once");
+        assert_eq!(snap.quarantined_engines, 0, "wrapper faults fire before engine checkout");
+        let inj = wrapper.injections();
+        assert_eq!(inj.panics, 16);
+        assert_eq!(inj.errors, 10);
+        assert_eq!(inj.wrong_lengths, 6);
+        assert_eq!(inj.latency_spikes, 4);
+        coord.shutdown();
+    });
+}
+
+/// Mixed chaos with real batching and fan-out: outcomes of chunk-mates are
+/// coupled (a hard victim poisons its twice-failed chunk), so the suite
+/// asserts the conservation laws instead of per-request fates — exactly
+/// one reply each, every `Ok` bit-exact, metrics conserve, and the pool
+/// serves a clean recovery round afterwards.
+#[test]
+fn batched_chaos_conserves_replies_and_recovers() {
+    with_watchdog(Duration::from_secs(120), || {
+        let plan = FaultPlan::mixed(0xB47C, 80);
+        let panics = seeds_of_kind(&plan, FaultKind::Panic, 5);
+        let errors = seeds_of_kind(&plan, FaultKind::TransientError, 8);
+        let wrongs = seeds_of_kind(&plan, FaultKind::WrongLength, 5);
+        let mut clean = seeds_of_kind(&plan, FaultKind::None, 166);
+        let recovery = clean.split_off(150);
+        let mut all = Vec::new();
+        for list in [&panics, &errors, &wrongs, &clean] {
+            all.extend_from_slice(list);
+        }
+        let all = shuffled(all);
+        let total = all.len() as u64;
+
+        let cfg = SnnConfig::paper().with_timesteps(4);
+        let reference = RtlBackend::new(cfg.clone(), test_weights()).unwrap();
+        let mut everything = all.clone();
+        everything.extend_from_slice(&recovery);
+        let expected = Arc::new(reference_outputs(&reference, &everything));
+
+        let inner: Arc<dyn Backend> = Arc::new(RtlBackend::new(cfg, test_weights()).unwrap());
+        let wrapper = Arc::new(FaultInjectingBackend::new(inner, plan));
+        let coord = Coordinator::start(
+            Arc::clone(&wrapper) as Arc<dyn Backend>,
+            CoordinatorConfig {
+                workers: 4,
+                queue_depth: 512,
+                batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_micros(300) },
+                early: EarlyExit::Off,
+                fanout: FanoutPolicy { min_batch: 8, max_parts: 2 },
+                supervision: SupervisionPolicy::default(),
+            },
+        );
+
+        let halves: Vec<Vec<u32>> =
+            all.chunks(all.len().div_ceil(2)).map(<[u32]>::to_vec).collect();
+        let producers: Vec<_> = halves
+            .into_iter()
+            .map(|half| {
+                let handle = coord.handle();
+                let expected = Arc::clone(&expected);
+                std::thread::spawn(move || {
+                    let mut replies = Vec::new();
+                    for &s in &half {
+                        let rx = loop {
+                            match handle.submit(Request::new(image_for_seed(s)).with_seed(s)) {
+                                Ok(rx) => break rx,
+                                Err(Error::Overloaded(_)) => {
+                                    std::thread::sleep(Duration::from_micros(100));
+                                }
+                                Err(e) => panic!("unexpected submit error: {e}"),
+                            }
+                        };
+                        replies.push((s, rx));
+                    }
+                    let (mut ok, mut collateral) = (0u64, 0u64);
+                    for (s, rx) in replies {
+                        let reply = rx.recv().expect("request lost its reply");
+                        assert!(rx.try_recv().is_err(), "duplicate reply for seed {s}");
+                        match (plan.classify(s), reply) {
+                            (FaultKind::Panic, Ok(_)) => panic!("hard victim {s} succeeded"),
+                            (FaultKind::Panic, Err(_)) => collateral += 1,
+                            (_, Ok(resp)) => {
+                                assert_bit_exact(&resp, &expected[&s], s);
+                                ok += 1;
+                            }
+                            // A chunk-mate of a twice-failed chunk: the
+                            // error reply is legitimate; what matters is
+                            // that it arrived, typed, exactly once.
+                            (_, Err(_)) => collateral += 1,
+                        }
+                    }
+                    (ok, collateral)
+                })
+            })
+            .collect();
+        let (mut ok_total, mut collateral_total) = (0u64, 0u64);
+        for p in producers {
+            let (ok, collateral) = p.join().expect("producer panicked");
+            ok_total += ok;
+            collateral_total += collateral;
+        }
+
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while coord.metrics().snapshot().worker_restarts == 0 {
+            assert!(Instant::now() < deadline, "no worker was ever restarted");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let storm = coord.metrics().snapshot();
+        assert_eq!(storm.submitted, total);
+        assert_eq!(storm.completed, ok_total);
+        assert_eq!(storm.failed, collateral_total);
+        assert_eq!(storm.shed, 0);
+        assert_eq!(
+            storm.completed + storm.failed,
+            storm.submitted,
+            "reply conservation violated under batched chaos"
+        );
+        let inj = wrapper.injections();
+        assert!(inj.panics >= 2, "hard victims never reached a worker");
+        assert!(
+            storm.worker_restarts * 2 <= inj.panics,
+            "each death needs >= 2 injected panics (attempt + retry): {} deaths, {} panics",
+            storm.worker_restarts,
+            inj.panics
+        );
+
+        // Recovery round: the respawned workers and healed engines serve
+        // clean requests bit-exactly after the storm.
+        let handle = coord.handle();
+        for &s in &recovery {
+            let resp = handle
+                .submit(Request::new(image_for_seed(s)).with_seed(s))
+                .unwrap()
+                .recv()
+                .unwrap()
+                .expect("post-chaos request failed");
+            assert_bit_exact(&resp, &expected[&s], s);
+        }
+        let after = coord.metrics().snapshot();
+        assert_eq!(
+            after.completed,
+            ok_total + recovery.len() as u64,
+            "the pool must keep serving after the storm"
+        );
+        coord.shutdown();
+    });
+}
+
+/// Seed-echo stub backend (instant), the substrate for latency and
+/// shutdown chaos where real compute would only add noise.
+struct EchoStub {
+    cfg: SnnConfig,
+}
+
+impl Backend for EchoStub {
+    fn name(&self) -> &'static str {
+        "echo-stub"
+    }
+
+    fn classify_batch(
+        &self,
+        images: &[&Image],
+        seeds: &[u32],
+        _early: EarlyExit,
+    ) -> snn_rtl::Result<Vec<BackendOutput>> {
+        Ok(images
+            .iter()
+            .zip(seeds)
+            .map(|(_, &s)| BackendOutput {
+                class: (s % 10) as u8,
+                spike_counts: vec![s],
+                steps_run: 1,
+            })
+            .collect())
+    }
+
+    fn config(&self) -> &SnnConfig {
+        &self.cfg
+    }
+}
+
+/// An injected latency spike stalls the single worker long enough that
+/// every deadline-carrying request queued behind it expires — all of them
+/// must be shed with typed replies at pop time, not computed late.
+#[test]
+fn latency_spikes_shed_expired_deadlines() {
+    with_watchdog(Duration::from_secs(60), || {
+        let plan = FaultPlan {
+            seed: 0xD1A7,
+            panic_per_mille: 0,
+            error_per_mille: 0,
+            wrong_len_per_mille: 0,
+            latency_per_mille: 200,
+            latency_spike: Duration::from_millis(40),
+        };
+        let victim = seeds_of_kind(&plan, FaultKind::LatencySpike, 1)[0];
+        let clean = seeds_of_kind(&plan, FaultKind::None, 6);
+        let stub: Arc<dyn Backend> = Arc::new(EchoStub { cfg: SnnConfig::paper() });
+        let wrapper = Arc::new(FaultInjectingBackend::new(stub, plan));
+        let coord = Coordinator::start(
+            Arc::clone(&wrapper) as Arc<dyn Backend>,
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 32,
+                batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_micros(200) },
+                early: EarlyExit::Off,
+                fanout: FanoutPolicy::off(),
+                supervision: SupervisionPolicy::default(),
+            },
+        );
+        let handle = coord.handle();
+
+        // The spike victim occupies the only worker for 40 ms. Wait for
+        // its batch to actually be in flight (the batch counter bumps just
+        // before the backend call) so the doomed requests cannot ride in
+        // the victim's own batch.
+        let slow_rx = handle.submit(Request::new(blank_image()).with_seed(victim)).unwrap();
+        let t0 = Instant::now();
+        while coord.metrics().snapshot().batches == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "victim batch never dispatched");
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        // ...so these 1 ms deadlines are long dead by the next pop.
+        let doomed: Vec<_> = clean
+            .iter()
+            .map(|&s| {
+                let req = Request::new(blank_image())
+                    .with_seed(s)
+                    .with_deadline(Instant::now() + Duration::from_millis(1));
+                handle.submit(req).unwrap()
+            })
+            .collect();
+
+        let slow = slow_rx.recv().unwrap().expect("the spiked batch still succeeds");
+        assert_eq!(slow.spike_counts, vec![victim]);
+        for rx in doomed {
+            let reply = rx.recv().expect("shed request lost its reply");
+            assert!(matches!(reply, Err(Error::Shed(_))), "want Shed, got {reply:?}");
+        }
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.shed, 6);
+        assert_eq!(snap.deadline_expired, 6);
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.failed, 0);
+        assert_eq!(snap.submitted, 7);
+        assert_eq!(wrapper.injections().latency_spikes, 1);
+        coord.shutdown();
+    });
+}
+
+/// Panic storm past the restart budget: once every worker slot is out of
+/// restarts, the coordinator must reject the stranded backlog with typed
+/// `ShuttingDown` replies — every accepted request still resolves, the
+/// restart counter lands exactly on `workers x budget`, and nothing hangs.
+#[test]
+fn worker_budget_exhaustion_drains_or_rejects_everything() {
+    with_watchdog(Duration::from_secs(60), || {
+        let plan = FaultPlan {
+            seed: 0xBEEF,
+            panic_per_mille: 120,
+            error_per_mille: 0,
+            wrong_len_per_mille: 0,
+            latency_per_mille: 0,
+            latency_spike: Duration::ZERO,
+        };
+        let victims = (1..=400u32).filter(|&s| plan.classify(s) == FaultKind::Panic).count();
+        assert!(victims >= 12, "plan seed produced too few hard victims: {victims}");
+
+        let stub: Arc<dyn Backend> = Arc::new(EchoStub { cfg: SnnConfig::paper() });
+        let wrapper = Arc::new(FaultInjectingBackend::new(stub, plan));
+        let coord = Coordinator::start(
+            Arc::clone(&wrapper) as Arc<dyn Backend>,
+            CoordinatorConfig {
+                workers: 2,
+                queue_depth: 64,
+                batch: BatchPolicy { max_batch: 4, max_delay: Duration::from_micros(100) },
+                early: EarlyExit::Off,
+                fanout: FanoutPolicy::off(),
+                supervision: SupervisionPolicy {
+                    max_restarts_per_worker: 2,
+                    backoff_base: Duration::from_micros(50),
+                    backoff_cap: Duration::from_micros(500),
+                },
+            },
+        );
+        let handle = coord.handle();
+
+        let mut accepted = Vec::new();
+        let mut shut_out = 0u64;
+        for s in 1..=400u32 {
+            loop {
+                match handle.submit(Request::new(blank_image()).with_seed(s)) {
+                    Ok(rx) => {
+                        accepted.push((s, rx));
+                        break;
+                    }
+                    Err(Error::Overloaded(_)) => {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    Err(Error::ShuttingDown(_)) => {
+                        shut_out += 1;
+                        break;
+                    }
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                }
+            }
+        }
+
+        let (mut ok, mut panicked, mut swept) = (0u64, 0u64, 0u64);
+        for (s, rx) in accepted {
+            match rx.recv().expect("accepted request lost its reply") {
+                Ok(resp) => {
+                    assert_ne!(plan.classify(s), FaultKind::Panic, "hard victim {s} succeeded");
+                    assert_eq!(resp.spike_counts, vec![s], "cross-wired echo for seed {s}");
+                    ok += 1;
+                }
+                Err(Error::BackendPanicked(_)) => panicked += 1,
+                Err(Error::ShuttingDown(_)) => swept += 1,
+                Err(e) => panic!("untyped terminal reply for seed {s}: {e}"),
+            }
+        }
+
+        assert!(
+            swept > 0 || shut_out > 0,
+            "the dead pool must reject its backlog (swept {swept}, shut out {shut_out})"
+        );
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.worker_restarts, 4, "2 workers x restart budget 2");
+        assert_eq!(snap.completed, ok);
+        assert_eq!(snap.failed, panicked + swept);
+        assert_eq!(snap.shed, 0);
+        assert_eq!(
+            snap.submitted,
+            ok + panicked + swept,
+            "every accepted request must resolve exactly once"
+        );
+        assert_eq!(
+            wrapper.injections().panics,
+            12,
+            "6 worker lives, each consumed by one panicked batch (attempt + retry)"
+        );
+        coord.shutdown();
+    });
+}
+
+/// Panics on the victim while holding an engine checked out of its own
+/// pool — the quarantine path the fault wrapper (which panics before any
+/// engine checkout) cannot reach.
+struct EngineHoldingPanicBackend {
+    cfg: SnnConfig,
+    engines: InstancePool<Vec<u64>>,
+    victim: u32,
+}
+
+impl Backend for EngineHoldingPanicBackend {
+    fn name(&self) -> &'static str {
+        "engine-holding-panic-stub"
+    }
+
+    fn classify_batch(
+        &self,
+        images: &[&Image],
+        seeds: &[u32],
+        _early: EarlyExit,
+    ) -> snn_rtl::Result<Vec<BackendOutput>> {
+        let mut engine = self.engines.checkout();
+        engine.push(seeds.len() as u64);
+        if seeds.contains(&self.victim) {
+            panic!("panic with engine state {:?} checked out", engine.len());
+        }
+        Ok(images
+            .iter()
+            .zip(seeds)
+            .map(|(_, &s)| BackendOutput {
+                class: (s % 10) as u8,
+                spike_counts: vec![s],
+                steps_run: 1,
+            })
+            .collect())
+    }
+
+    fn config(&self) -> &SnnConfig {
+        &self.cfg
+    }
+
+    fn quarantined_engines(&self) -> u64 {
+        self.engines.quarantined()
+    }
+}
+
+/// A panic that unwinds through a live engine checkout must poison the
+/// slot; the next checkout heals it by quarantining the torn engine and
+/// rebuilding from the factory — capacity intact, gauge mirrored.
+#[test]
+fn panicking_engine_is_quarantined_not_reused() {
+    with_watchdog(Duration::from_secs(60), || {
+        let backend = Arc::new(EngineHoldingPanicBackend {
+            cfg: SnnConfig::paper(),
+            engines: InstancePool::new(1, Vec::new),
+            victim: 0xE5E5,
+        });
+        let coord = Coordinator::start(
+            Arc::clone(&backend) as Arc<dyn Backend>,
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 8,
+                batch: BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(10) },
+                early: EarlyExit::Off,
+                fanout: FanoutPolicy::off(),
+                supervision: SupervisionPolicy {
+                    max_restarts_per_worker: 4,
+                    backoff_base: Duration::from_micros(50),
+                    backoff_cap: Duration::from_millis(1),
+                },
+            },
+        );
+        let handle = coord.handle();
+        let bad = handle
+            .submit(Request::new(blank_image()).with_seed(0xE5E5))
+            .unwrap()
+            .recv()
+            .expect("panicked batch must still send a terminal reply");
+        assert!(matches!(bad, Err(Error::BackendPanicked(_))), "got {bad:?}");
+        let good = handle
+            .submit(Request::new(blank_image()).with_seed(9))
+            .unwrap()
+            .recv()
+            .unwrap()
+            .expect("server must survive the engine panic");
+        assert_eq!(good.class, 9);
+        // Initial attempt and retry both panicked mid-checkout: both torn
+        // engines were quarantined (at the heal on the next checkout), and
+        // the single-slot pool still serves — capacity never shrank.
+        assert_eq!(backend.engines.quarantined(), 2, "attempt + retry engines quarantined");
+        assert_eq!(backend.engines.capacity(), 1);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while coord.metrics().snapshot().worker_restarts == 0 {
+            assert!(Instant::now() < deadline, "supervisor never restarted the worker");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.panics_recovered, 2);
+        assert_eq!(snap.worker_restarts, 1);
+        assert_eq!(snap.quarantined_engines, 2, "gauge must mirror the backend's pool");
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.failed, 1);
+        coord.shutdown();
+    });
+}

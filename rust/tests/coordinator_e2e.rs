@@ -10,7 +10,7 @@ use std::time::Duration;
 use common::artifacts_dir;
 use snn_rtl::coordinator::{
     Backend, BackendOutput, BatchPolicy, BehavioralBackend, Coordinator, CoordinatorConfig,
-    FanoutPolicy, Request, XlaBackend,
+    FanoutPolicy, Request, SupervisionPolicy, XlaBackend,
 };
 use snn_rtl::data::{codec, DigitGen, Image};
 use snn_rtl::error::Error;
@@ -43,6 +43,7 @@ fn xla_backed_coordinator_serves_accurately() {
             batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(2) },
             early: EarlyExit::Off,
             fanout: FanoutPolicy::default(),
+            supervision: SupervisionPolicy::default(),
         },
     );
     let handle = coord.handle();
@@ -52,7 +53,7 @@ fn xla_backed_coordinator_serves_accurately() {
         .map(|i| {
             let class = (i % 10) as u8;
             let img = gen.sample(class, (i / 10) as u32);
-            (class, handle.submit(Request { image: img, seed: Some(500 + i as u32) }).unwrap())
+            (class, handle.submit(Request::new(img).with_seed(500 + i as u32)).unwrap())
         })
         .collect();
     let mut hits = 0usize;
@@ -86,6 +87,7 @@ fn early_exit_saves_timesteps_on_xla() {
             batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1) },
             early: EarlyExit::Margin { margin: 2, min_steps: chunk },
             fanout: FanoutPolicy::default(),
+            supervision: SupervisionPolicy::default(),
         },
     );
     let handle = coord.handle();
@@ -128,6 +130,7 @@ fn xla_and_behavioral_coordinators_agree() {
                 batch: BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(1) },
                 early: EarlyExit::Off,
                 fanout: FanoutPolicy::default(),
+                supervision: SupervisionPolicy::default(),
             },
         )
     };
@@ -136,11 +139,8 @@ fn xla_and_behavioral_coordinators_agree() {
     let gen = DigitGen::new(2);
     for i in 0..20u32 {
         let img = gen.sample((i % 10) as u8, i / 10);
-        let rx = cx
-            .handle()
-            .submit(Request { image: img.clone(), seed: Some(900 + i) })
-            .unwrap();
-        let rb = cb.handle().submit(Request { image: img, seed: Some(900 + i) }).unwrap();
+        let rx = cx.handle().submit(Request::new(img.clone()).with_seed(900 + i)).unwrap();
+        let rb = cb.handle().submit(Request::new(img).with_seed(900 + i)).unwrap();
         let a = rx.recv().unwrap().unwrap();
         let b = rb.recv().unwrap().unwrap();
         assert_eq!(a.class, b.class, "request {i}");
@@ -194,28 +194,24 @@ fn backend_fault_fails_batch_not_server() {
             batch: BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(10) },
             early: EarlyExit::Off,
             fanout: FanoutPolicy::default(),
+            supervision: SupervisionPolicy::default(),
         },
     );
     let handle = coord.handle();
     let img = Image { label: 0, pixels: vec![0; 784] };
 
-    // Poisoned request errors...
-    let bad = handle
-        .submit(Request { image: img.clone(), seed: Some(0xBAD) })
-        .unwrap()
-        .recv()
-        .unwrap();
+    // Poisoned request errors (the fault is persistent, so the retry
+    // fails too)...
+    let bad =
+        handle.submit(Request::new(img.clone()).with_seed(0xBAD)).unwrap().recv().unwrap();
     assert!(bad.is_err(), "poisoned request must surface the backend error");
 
     // ...and the server keeps serving afterwards.
-    let good = handle
-        .submit(Request { image: img, seed: Some(1) })
-        .unwrap()
-        .recv()
-        .unwrap();
+    let good = handle.submit(Request::new(img).with_seed(1)).unwrap().recv().unwrap();
     assert!(good.is_ok(), "server must survive a failed batch");
     let snap = coord.metrics().snapshot();
     assert_eq!(snap.failed, 1);
     assert_eq!(snap.completed, 1);
+    assert_eq!(snap.subbatch_retries, 1, "the failed singleton batch is retried once");
     coord.shutdown();
 }

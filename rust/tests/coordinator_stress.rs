@@ -11,7 +11,7 @@ use std::time::{Duration, Instant};
 
 use snn_rtl::coordinator::{
     Backend, BackendOutput, BatchPolicy, Coordinator, CoordinatorConfig, FanoutPolicy,
-    Request,
+    Request, SupervisionPolicy,
 };
 use snn_rtl::data::{Image, IMG_PIXELS};
 use snn_rtl::error::Error;
@@ -122,6 +122,7 @@ fn stress_many_producers_no_loss_no_duplication() {
                 // Low crossover so the stress load exercises fan-out
                 // reassembly constantly, not just on rare giant batches.
                 fanout: FanoutPolicy { min_batch: 8, max_parts: 3 },
+                supervision: SupervisionPolicy::default(),
             },
         );
 
@@ -140,12 +141,9 @@ fn stress_many_producers_no_loss_no_duplication() {
                             std::thread::sleep(Duration::from_micros(200));
                         }
                         let rx = loop {
-                            match handle.submit(Request {
-                                image: image_for(seed),
-                                seed: Some(seed),
-                            }) {
+                            match handle.submit(Request::new(image_for(seed)).with_seed(seed)) {
                                 Ok(rx) => break rx,
-                                Err(Error::Rejected(_)) => {
+                                Err(Error::Overloaded(_)) => {
                                     std::thread::sleep(Duration::from_micros(50));
                                 }
                                 Err(e) => panic!("unexpected submit error: {e}"),
@@ -205,13 +203,13 @@ fn siblings_steal_from_blocked_workers_shard() {
                 batch: BatchPolicy { max_batch: 1, max_delay: Duration::from_micros(100) },
                 early: EarlyExit::Off,
                 fanout: FanoutPolicy::off(),
+                supervision: SupervisionPolicy::default(),
             },
         );
         let handle = coord.handle();
 
-        let slow_rx = handle
-            .submit(Request { image: image_for(SLOW_SEED), seed: Some(SLOW_SEED) })
-            .unwrap();
+        let slow_rx =
+            handle.submit(Request::new(image_for(SLOW_SEED)).with_seed(SLOW_SEED)).unwrap();
         // Give a worker time to pick the slow request up.
         std::thread::sleep(Duration::from_millis(50));
 
@@ -219,7 +217,7 @@ fn siblings_steal_from_blocked_workers_shard() {
         // over both shards, including the blocked worker's.
         let t0 = Instant::now();
         let fast: Vec<_> = (0..40u32)
-            .map(|i| handle.submit(Request { image: image_for(i), seed: Some(i) }).unwrap())
+            .map(|i| handle.submit(Request::new(image_for(i)).with_seed(i)).unwrap())
             .collect();
         for rx in fast {
             rx.recv().unwrap().unwrap();
@@ -239,8 +237,9 @@ fn siblings_steal_from_blocked_workers_shard() {
 }
 
 /// Shutdown under load: submissions racing `Coordinator::stop` must all
-/// resolve — a response, a backend error, or `Error::Rejected` — and
-/// never hang. The watchdog is the assertion.
+/// resolve with a response or a *typed* refusal (`Overloaded` before the
+/// close, `ShuttingDown` after — at submit or as a drain-reject reply) —
+/// never a dropped channel, never a hang. The watchdog is the assertion.
 #[test]
 fn shutdown_under_load_resolves_every_submission() {
     with_watchdog(Duration::from_secs(60), || {
@@ -255,6 +254,7 @@ fn shutdown_under_load_resolves_every_submission() {
                 batch: BatchPolicy { max_batch: 8, max_delay: Duration::from_micros(200) },
                 early: EarlyExit::Off,
                 fanout: FanoutPolicy { min_batch: 8, max_parts: 2 },
+                supervision: SupervisionPolicy::default(),
             },
         );
 
@@ -271,29 +271,36 @@ fn shutdown_under_load_resolves_every_submission() {
                 std::thread::spawn(move || {
                     let mut accepted = 0u64;
                     let mut rejected = 0u64;
+                    let mut shut_out = 0u64;
                     let mut resolved = 0u64;
                     for i in 0..PER_PRODUCER {
                         let seed = p * 10_000 + i;
                         submissions.fetch_add(1, Ordering::Relaxed);
-                        match handle.submit(Request { image: image_for(seed), seed: Some(seed) }) {
+                        match handle.submit(Request::new(image_for(seed)).with_seed(seed)) {
                             Ok(rx) => {
                                 accepted += 1;
-                                // Any resolution is fine — a reply, a batch
-                                // error, or a dropped channel — it just must
-                                // arrive (the watchdog catches hangs).
-                                match rx.recv() {
-                                    Ok(Ok(resp)) => {
+                                // Every accepted request must get exactly one
+                                // terminal reply — a response, or the typed
+                                // drain-reject. A dropped channel is a lost
+                                // request and fails the test.
+                                match rx.recv().expect("accepted request lost its reply") {
+                                    Ok(resp) => {
                                         assert_eq!(resp.seed, seed);
                                         resolved += 1;
                                     }
-                                    Ok(Err(_)) | Err(_) => resolved += 1,
+                                    Err(Error::ShuttingDown(_)) => resolved += 1,
+                                    Err(e) => panic!("untyped terminal reply: {e}"),
                                 }
                             }
-                            Err(Error::Rejected(_)) => rejected += 1,
+                            Err(Error::Overloaded(_)) => rejected += 1,
+                            Err(Error::ShuttingDown(_)) => {
+                                rejected += 1;
+                                shut_out += 1;
+                            }
                             Err(e) => panic!("unexpected submit error: {e}"),
                         }
                     }
-                    (accepted, rejected, resolved)
+                    (accepted, rejected, shut_out, resolved)
                 })
             })
             .collect();
@@ -308,11 +315,13 @@ fn shutdown_under_load_resolves_every_submission() {
 
         let mut accepted = 0u64;
         let mut rejected = 0u64;
+        let mut shut_out = 0u64;
         let mut resolved = 0u64;
         for p in producers {
-            let (a, r, d) = p.join().expect("producer panicked");
+            let (a, r, s, d) = p.join().expect("producer panicked");
             accepted += a;
             rejected += r;
+            shut_out += s;
             resolved += d;
         }
         assert_eq!(
@@ -321,7 +330,10 @@ fn shutdown_under_load_resolves_every_submission() {
             "every submission must resolve to accept or reject"
         );
         assert_eq!(resolved, accepted, "every accepted submission must resolve");
-        assert!(rejected > 0, "shutdown raced no submission — weaken the sleep");
+        assert!(
+            shut_out > 0,
+            "shutdown raced no submission — the handshake stopped too late"
+        );
     });
 }
 
@@ -345,13 +357,12 @@ fn fanout_splits_large_batches_and_preserves_order() {
                 batch: BatchPolicy { max_batch: 64, max_delay: Duration::from_millis(500) },
                 early: EarlyExit::Off,
                 fanout: FanoutPolicy { min_batch: 32, max_parts: 4 },
+                supervision: SupervisionPolicy::default(),
             },
         );
         let handle = coord.handle();
         let receivers: Vec<_> = (0..64u32)
-            .map(|i| {
-                (i, handle.submit(Request { image: image_for(i), seed: Some(i) }).unwrap())
-            })
+            .map(|i| (i, handle.submit(Request::new(image_for(i)).with_seed(i)).unwrap()))
             .collect();
         let mut saw_subbatch = false;
         for (seed, rx) in receivers {
