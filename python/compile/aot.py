@@ -46,6 +46,11 @@ GOLDEN_SEED = 0xC0FFEE
 CHUNK_STEPS = 5
 FORWARD_BATCHES = (1, 8, 32)
 ANN_BATCHES = (1, 32)
+# Unstructured magnitude-pruning sweep for the sparse serving engine:
+# ascending candidate thresholds, keep the largest whose validation
+# accuracy stays within the budget of the dense calibration.
+SPARSE_THRESHOLD_CANDIDATES = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32)
+SPARSE_ACC_BUDGET = 0.01
 
 
 def to_hlo_text(lowered, return_tuple: bool = True) -> str:
@@ -85,9 +90,40 @@ def build_datasets(out_dir: str, log):
     return train, test
 
 
+def calibrate_sparse(out_dir: str, w_q, xval, yval, cfg: M.ModelConfig, log):
+    """Magnitude-pruning sweep + SNNW v4 export for the sparse engine.
+
+    Ascending thresholds zero ever more |w| < t entries
+    (aio.magnitude_prune, same keep predicate as the Rust CSR builder);
+    the largest threshold whose validation accuracy stays within
+    SPARSE_ACC_BUDGET of dense wins. The v4 artifact stores the ORIGINAL
+    dense weights + the threshold — the serving side derives the CSR, so
+    threshold 0 (nothing safely prunable) still yields a valid sparse
+    artifact that is bit-exact with dense."""
+    dense_acc = T.evaluate_snn(w_q, xval, yval, cfg, timesteps=10)
+    best_t = 0
+    for t in SPARSE_THRESHOLD_CANDIDATES:
+        acc = T.evaluate_snn(aio.magnitude_prune(w_q, t), xval, yval, cfg,
+                             timesteps=10)
+        density = aio.sparse_nnz(w_q, t) / w_q.size
+        log(f"sparse: threshold {t}: acc {acc:.4f} "
+            f"(dense {dense_acc:.4f}, density {density:.3f})")
+        if acc + SPARSE_ACC_BUDGET >= dense_acc:
+            best_t = t
+        else:
+            break
+    aio.save_weight_stack(
+        os.path.join(out_dir, "weights_sparse.bin"), [w_q],
+        bits=cfg.weight_bits, v_th=cfg.v_th, decay_shift=cfg.decay_shift,
+        timesteps=cfg.timesteps, prune_after=cfg.prune_after,
+        sparse_threshold=best_t)
+    return best_t, aio.sparse_nnz(w_q, best_t) / w_q.size
+
+
 def build_weights(out_dir: str, train, test, cfg: M.ModelConfig, log):
     wpath = os.path.join(out_dir, "weights.bin")
     apath = os.path.join(out_dir, "ann_weights.bin")
+    spath = os.path.join(out_dir, "weights_sparse.bin")
     stats = {}
     if os.path.exists(wpath) and os.path.exists(apath):
         log("weights: cached")
@@ -95,6 +131,15 @@ def build_weights(out_dir: str, train, test, cfg: M.ModelConfig, log):
         cfg = M.ModelConfig(v_th=meta["v_th"], decay_shift=meta["decay_shift"],
                             timesteps=meta["timesteps"],
                             prune_after=meta["prune_after"])
+        if os.path.exists(spath):
+            _, smeta = aio.load_weight_stack(spath)
+            stats["sparse_threshold"] = smeta["sparse_threshold"]
+            stats["sparse_density"] = aio.sparse_nnz(
+                w, smeta["sparse_threshold"]) / w.size
+        else:
+            (xte, yte) = test
+            stats["sparse_threshold"], stats["sparse_density"] = \
+                calibrate_sparse(out_dir, w, xte[:1000], yte[:1000], cfg, log)
         return w, aio.load_ann(apath), cfg, stats
 
     (xtr, ytr), (xte, yte) = train, test
@@ -111,6 +156,9 @@ def build_weights(out_dir: str, train, test, cfg: M.ModelConfig, log):
     aio.save_weights(wpath, w_q, bits=cfg.weight_bits, v_th=cfg.v_th,
                      decay_shift=cfg.decay_shift, timesteps=cfg.timesteps,
                      prune_after=cfg.prune_after)
+    log("weights: magnitude-pruning sweep for the sparse engine ...")
+    stats["sparse_threshold"], stats["sparse_density"] = \
+        calibrate_sparse(out_dir, w_q, xte[:1000], yte[:1000], cfg, log)
 
     log("weights: training baseline ANN (784-32-10) ...")
     ann = T.train_ann(xtr, ytr, log=log)

@@ -136,6 +136,133 @@ def load_weights(path: str):
                    prune_after=prune)
 
 
+# -- SNNW stack (v2 uniform / v3 per-layer params / v4 sparse) ----------------
+#
+# Byte-identical to rust/src/data/codec.rs::save_weight_stack. Version
+# selection mirrors the Rust writer: a sparse threshold forces v4, a
+# per-layer parameter block alone gives v3, plain uniform stacks stay v2.
+
+STACK_VERSION = 2
+LAYER_PARAMS_VERSION = 3
+SPARSE_VERSION = 4
+
+
+def magnitude_prune(weights: np.ndarray, threshold: int) -> np.ndarray:
+    """Unstructured magnitude pruning: zero every |w| < threshold.
+
+    The keep predicate (|w| >= threshold) matches rust
+    fixed::SparseWeightLayer::from_dense, so a dense engine running the
+    pruned matrix and a sparse engine walking the CSR at `threshold`
+    integrate identical currents."""
+    assert threshold >= 0
+    w = np.asarray(weights)
+    return np.where(np.abs(w) >= threshold, w, 0).astype(w.dtype)
+
+
+def sparse_nnz(weights: np.ndarray, threshold: int) -> int:
+    """Survivors of the keep predicate — the v4 per-layer checksum word."""
+    assert threshold >= 0
+    return int((np.abs(np.asarray(weights)) >= threshold).sum())
+
+
+def save_weight_stack(path: str, layers, *, bits: int, v_th: int,
+                      decay_shift: int, timesteps: int, prune_after: int,
+                      layer_params=None, sparse_threshold=None):
+    """layers: list of int32[ni, no] (each no == next ni); layer_params:
+    optional list of fully-resolved (v_th, decay_shift, prune_after)
+    triples, one per layer; sparse_threshold: optional magnitude-pruning
+    calibration (>= 0) that adds the v4 sparse section."""
+    layers = [np.asarray(w) for w in layers]
+    for a, b in zip(layers, layers[1:]):
+        assert a.shape[1] == b.shape[0], "inconsistent layer chain"
+    if layer_params is not None:
+        assert len(layer_params) == len(layers)
+    if sparse_threshold is not None:
+        assert sparse_threshold >= 0
+        version = SPARSE_VERSION
+    elif layer_params:
+        version = LAYER_PARAMS_VERSION
+    else:
+        version = STACK_VERSION
+    out = bytearray()
+    out += b"SNNW"
+    out += struct.pack("<II", version, len(layers))
+    for w in layers:
+        out += struct.pack("<II", *w.shape)
+    out += struct.pack("<IiIII", bits, v_th, decay_shift, timesteps,
+                       prune_after)
+    if version == SPARSE_VERSION:
+        out += struct.pack("<I", 1 if layer_params else 0)
+    if layer_params:
+        for lv, ld, lp in layer_params:
+            out += struct.pack("<iII", lv, ld, lp)
+    if version == SPARSE_VERSION:
+        out += struct.pack("<i", sparse_threshold)
+        for w in layers:
+            out += struct.pack("<I", sparse_nnz(w, sparse_threshold))
+    for w in layers:
+        packed = pack_weights(w, bits)
+        out += struct.pack("<I", len(packed))
+        out += packed
+    _write_atomic(path, bytes(out))
+
+
+def load_weight_stack(path: str):
+    """Returns (layers, meta) for SNNW v2/v3/v4 (v1 loads via
+    load_weights). meta carries layer_params (list of triples or None) and
+    sparse_threshold (int or None); the v4 nnz words are re-checked."""
+    with open(path, "rb") as f:
+        buf = f.read()
+    assert buf[:4] == b"SNNW"
+    version, n_layers = struct.unpack_from("<II", buf, 4)
+    assert version in (STACK_VERSION, LAYER_PARAMS_VERSION, SPARSE_VERSION)
+    pos = 12
+    dims = []
+    for _ in range(n_layers):
+        dims.append(struct.unpack_from("<II", buf, pos))
+        pos += 8
+    bits, v_th, decay, steps, prune = struct.unpack_from("<IiIII", buf, pos)
+    pos += 20
+    has_params = version == LAYER_PARAMS_VERSION
+    if version == SPARSE_VERSION:
+        (flag,) = struct.unpack_from("<I", buf, pos)
+        pos += 4
+        assert flag in (0, 1)
+        has_params = flag == 1
+    layer_params = None
+    if has_params:
+        layer_params = []
+        for _ in range(n_layers):
+            layer_params.append(struct.unpack_from("<iII", buf, pos))
+            pos += 12
+    sparse_threshold = None
+    expected_nnz = []
+    if version == SPARSE_VERSION:
+        (sparse_threshold,) = struct.unpack_from("<i", buf, pos)
+        pos += 4
+        assert sparse_threshold >= 0
+        for _ in range(n_layers):
+            expected_nnz.append(struct.unpack_from("<I", buf, pos)[0])
+            pos += 4
+    layers = []
+    for ni, no in dims:
+        (plen,) = struct.unpack_from("<I", buf, pos)
+        pos += 4
+        assert plen == (ni * no * bits + 7) // 8
+        layers.append(unpack_weights(buf[pos:pos + plen], ni, no, bits))
+        pos += plen
+    assert pos == len(buf), "trailing bytes"
+    if sparse_threshold is not None:
+        for l, w in enumerate(layers):
+            got = sparse_nnz(w, sparse_threshold)
+            assert got == expected_nnz[l], \
+                f"layer {l}: nnz {got} != header {expected_nnz[l]}"
+    meta = dict(v_th=v_th, decay_shift=decay, timesteps=steps, bits=bits,
+                prune_after=prune, layer_params=layer_params,
+                sparse_threshold=sparse_threshold)
+    return layers, meta
+
+
 # -- SNNA (ANN f32 weights) --------------------------------------------------
 
 def save_ann(path: str, w1, b1, w2, b2):

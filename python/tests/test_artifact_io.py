@@ -1,6 +1,7 @@
 """Artifact codec roundtrips + agreement with the built artifacts."""
 
 import os
+import struct
 
 import numpy as np
 import pytest
@@ -44,6 +45,62 @@ def test_weights_file_roundtrip(tmp_path):
     assert (w2 == w).all()
     assert meta == dict(v_th=384, decay_shift=3, timesteps=20, bits=9,
                         prune_after=5)
+
+
+def test_magnitude_prune_matches_csr_keep_predicate():
+    w = np.array([[-5, -3, 0, 2], [7, -2, 3, -8]], dtype=np.int32)
+    pruned = aio.magnitude_prune(w, 3)
+    assert (pruned == np.array([[-5, -3, 0, 0], [7, 0, 3, -8]])).all()
+    assert aio.sparse_nnz(w, 3) == 5
+    # Threshold 0 keeps everything, explicit zeros included.
+    assert (aio.magnitude_prune(w, 0) == w).all()
+    assert aio.sparse_nnz(w, 0) == w.size
+
+
+def test_weight_stack_roundtrip_v2_v3_v4(tmp_path):
+    rng = np.random.default_rng(7)
+    layers = [rng.integers(-200, 201, (20, 6)).astype(np.int32),
+              rng.integers(-200, 201, (6, 4)).astype(np.int32)]
+    cal = dict(bits=9, v_th=300, decay_shift=3, timesteps=8, prune_after=2)
+
+    p2 = str(tmp_path / "s2.bin")
+    aio.save_weight_stack(p2, layers, **cal)
+    back, meta = aio.load_weight_stack(p2)
+    assert all((a == b).all() for a, b in zip(back, layers))
+    assert meta["layer_params"] is None and meta["sparse_threshold"] is None
+    with open(p2, "rb") as f:
+        assert struct.unpack_from("<I", f.read(), 4)[0] == 2
+
+    p3 = str(tmp_path / "s3.bin")
+    triples = [(160, 3, 1), (40, 2, 0)]
+    aio.save_weight_stack(p3, layers, layer_params=triples, **cal)
+    _, meta = aio.load_weight_stack(p3)
+    assert meta["layer_params"] == triples
+    with open(p3, "rb") as f:
+        assert struct.unpack_from("<I", f.read(), 4)[0] == 3
+
+    p4 = str(tmp_path / "s4.bin")
+    aio.save_weight_stack(p4, layers, layer_params=triples,
+                          sparse_threshold=25, **cal)
+    back, meta = aio.load_weight_stack(p4)
+    assert all((a == b).all() for a, b in zip(back, layers))
+    assert meta["layer_params"] == triples
+    assert meta["sparse_threshold"] == 25
+    with open(p4, "rb") as f:
+        buf = f.read()
+    assert struct.unpack_from("<I", buf, 4)[0] == 4
+    # A lying nnz word must be caught by the load-time recount.
+    # v4 header with params: 4+4+4 + 2*8 + 20 + 4(flag) + 2*12 + 4(thresh).
+    nnz_off = 4 + 4 + 4 + 16 + 20 + 4 + 24 + 4
+    (nnz0,) = struct.unpack_from("<I", buf, nnz_off)
+    assert nnz0 == aio.sparse_nnz(layers[0], 25)
+    lied = bytearray(buf)
+    struct.pack_into("<I", lied, nnz_off, nnz0 + 1)
+    p4bad = str(tmp_path / "s4bad.bin")
+    with open(p4bad, "wb") as f:
+        f.write(bytes(lied))
+    with pytest.raises(AssertionError):
+        aio.load_weight_stack(p4bad)
 
 
 def test_ann_roundtrip(tmp_path):

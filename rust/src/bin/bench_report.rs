@@ -40,14 +40,23 @@
 //!   counts — plus a best-of-3 paired overhead check of the wrapper at 0‰
 //!   against the unwrapped backend,
 //!
-//! and writes the results to `BENCH_6.json` (plus stdout; the emitted
+//! * **sparse vs dense engine throughput**: the same magnitude-pruned
+//!   stack through the dense row sweep (`run_fast_batch`) and the CSR
+//!   silence-skipping sweep (`run_fast_batch_sparse`) at 100 / 50 / 10%
+//!   weight density for `[784, 10]` and `[784, 128, 10]` — images/s and
+//!   adds-performed per batch, the acceptance numbers of the event-driven
+//!   sparse engine PR (plus the `density_crossover` constant the pooled
+//!   backend routes by),
+//!
+//! and writes the results to `BENCH_7.json` (plus stdout; the emitted
 //! name is the single `BENCH_NAME` constant). BENCH_1 recorded qps only;
 //! BENCH_2 added the percentile columns; BENCH_3 added the depth rows of
 //! the N-layer refactor; BENCH_4 the per-layer threshold/pruning rows;
 //! BENCH_5 the batched-engine and open-loop rows (EXPERIMENTS.md §Batch);
-//! BENCH_6 supersedes them with the fault-injection rows (EXPERIMENTS.md
-//! §Robustness). Note the guarded batch path (`catch_unwind` + typed
-//! replies) is in *every* BENCH_6 row — its cost shows up as the
+//! BENCH_6 the fault-injection rows (EXPERIMENTS.md §Robustness);
+//! BENCH_7 supersedes them with the sparse-vs-dense rows (EXPERIMENTS.md
+//! §Sparse). Note the guarded batch path (`catch_unwind` + typed
+//! replies) is in *every* row since BENCH_6 — its cost shows up as the
 //! BENCH_5 → BENCH_6 delta of the unchanged rows, not as a within-report
 //! column.
 
@@ -59,7 +68,7 @@ use snn_rtl::bench::{black_box, Bench};
 use snn_rtl::config::PruneMode;
 use snn_rtl::coordinator::{
     Backend, BatchPolicy, Coordinator, CoordinatorConfig, FanoutPolicy, FaultInjectingBackend,
-    FaultPlan, Histogram, Request, RtlBackend, SupervisionPolicy,
+    FaultPlan, Histogram, Request, RtlBackend, SupervisionPolicy, SPARSE_DENSITY_CROSSOVER,
 };
 use snn_rtl::data::{DigitGen, Image};
 use snn_rtl::experiments::{
@@ -72,7 +81,7 @@ use snn_rtl::snn::EarlyExit;
 use snn_rtl::SnnConfig;
 
 /// The emitted report name — bump this (one place) when a PR adds rows.
-const BENCH_NAME: &str = "BENCH_6";
+const BENCH_NAME: &str = "BENCH_7";
 
 fn weights(seed: u32) -> WeightMatrix {
     let mut rng = Xorshift32::new(seed);
@@ -95,6 +104,43 @@ fn stack(topology: &[usize], seed: u32) -> WeightStack {
             .collect(),
     )
     .unwrap()
+}
+
+/// A stack with a deterministic fraction of entries zeroed — magnitude
+/// pruning's worst-case layout (uniformly scattered holes, no structure),
+/// so the CSR sweep earns its speedup purely from skipped synapses.
+fn stack_at_density(topology: &[usize], seed: u32, density_pct: u32) -> WeightStack {
+    let mut rng = Xorshift32::new(seed);
+    let mut mask = Xorshift32::new(seed ^ 0x9E37_79B9);
+    WeightStack::from_layers(
+        topology
+            .windows(2)
+            .map(|d| {
+                let data: Vec<i32> = (0..d[0] * d[1])
+                    .map(|_| {
+                        let w = rng.range_i32(-30, 60);
+                        if mask.range_i32(1, 100) <= density_pct as i32 {
+                            w
+                        } else {
+                            0
+                        }
+                    })
+                    .collect();
+                WeightMatrix::from_rows(d[0], d[1], 9, data).unwrap()
+            })
+            .collect(),
+    )
+    .unwrap()
+}
+
+struct SparseRow {
+    topology: &'static str,
+    density_pct: u32,
+    measured_density: f64,
+    dense_ips: f64,
+    sparse_ips: f64,
+    dense_adds: u64,
+    sparse_adds: u64,
 }
 
 struct CoordRow {
@@ -414,6 +460,93 @@ fn main() {
         batched_rows.push((bs, batched_ips, per_image_ips));
     }
 
+    // Sparse vs dense: the same pruned stack through the dense row sweep
+    // and the CSR silence-skipping sweep at 100 / 50 / 10% weight density.
+    // Threshold 0 on the unpruned stack is the bit-exactness anchor (CSR
+    // keeps every entry, explicit zeros included); the pruned rows use
+    // threshold 1 so the CSR drops exactly the zeroed entries. Dense adds
+    // stay ~flat across densities (every output in an active row pays an
+    // add, zero weight or not); sparse adds must scale with density.
+    let sparse_gen = DigitGen::new(11);
+    let sparse_images: Vec<Image> =
+        (0..32).map(|i| sparse_gen.sample((i % 10) as u8, i)).collect();
+    let sparse_refs: Vec<&Image> = sparse_images.iter().collect();
+    let sparse_seeds: Vec<u32> = (1..=sparse_refs.len() as u32).collect();
+    let mut sparse_rows: Vec<SparseRow> = Vec::new();
+    for (name, topology) in
+        [("784_10", vec![784usize, 10]), ("784_128_10", vec![784usize, 128, 10])]
+    {
+        let row_cfg = SnnConfig::paper().with_topology(topology.clone()).with_timesteps(10);
+        for density_pct in [100u32, 50, 10] {
+            let pruned = stack_at_density(&topology, 7, density_pct);
+            let threshold = if density_pct == 100 { 0 } else { 1 };
+            let measured_density = pruned.to_csr(threshold).density();
+            let mut dense_core = RtlCore::new(row_cfg.clone(), pruned.clone()).unwrap();
+            let dense = bench.run(&format!("rtl_dense_{name}_d{density_pct}"), || {
+                black_box(
+                    dense_core.run_fast_batch(&sparse_refs, &sparse_seeds, EarlyExit::Off).unwrap(),
+                );
+            });
+            let dense_adds: u64 = dense_core
+                .run_fast_batch(&sparse_refs, &sparse_seeds, EarlyExit::Off)
+                .unwrap()
+                .iter()
+                .map(|r| r.activity.adds)
+                .sum();
+            let mut sparse_core = RtlCore::new(row_cfg.clone(), pruned.clone()).unwrap();
+            sparse_core.attach_sparse(threshold);
+            let sparse = bench.run(&format!("rtl_sparse_{name}_d{density_pct}"), || {
+                black_box(
+                    sparse_core
+                        .run_fast_batch_sparse(&sparse_refs, &sparse_seeds, EarlyExit::Off)
+                        .unwrap(),
+                );
+            });
+            let sparse_adds: u64 = sparse_core
+                .run_fast_batch_sparse(&sparse_refs, &sparse_seeds, EarlyExit::Off)
+                .unwrap()
+                .iter()
+                .map(|r| r.activity.adds)
+                .sum();
+            let row = SparseRow {
+                topology: name,
+                density_pct,
+                measured_density,
+                dense_ips: dense.throughput(sparse_refs.len() as f64),
+                sparse_ips: sparse.throughput(sparse_refs.len() as f64),
+                dense_adds,
+                sparse_adds,
+            };
+            println!(
+                "sparse_vs_dense_{name}_d{density_pct}: dense {:.1} images/s ({} adds)  |  \
+                 sparse {:.1} images/s ({} adds)  ({:.2}x, density {:.3})",
+                row.dense_ips,
+                row.dense_adds,
+                row.sparse_ips,
+                row.sparse_adds,
+                row.sparse_ips / row.dense_ips,
+                row.measured_density
+            );
+            if density_pct == 10 {
+                assert!(
+                    row.sparse_ips >= 2.0 * row.dense_ips,
+                    "acceptance: the CSR sweep must be >= 2x dense at 10% density \
+                     ({name}: {:.1} vs {:.1} images/s)",
+                    row.sparse_ips,
+                    row.dense_ips
+                );
+                assert!(
+                    row.sparse_adds * 5 < row.dense_adds,
+                    "acceptance: sparse adds must scale with density \
+                     ({name}: {} sparse vs {} dense at 10%)",
+                    row.sparse_adds,
+                    row.dense_adds
+                );
+            }
+            sparse_rows.push(row);
+        }
+    }
+
     // Adaptive fan-out crossover, measured against the (batched) RTL
     // backend: the policy the fixed 32/4 defaults would be replaced by.
     let probe_backend = RtlBackend::new(cfg.clone(), weights(7)).unwrap();
@@ -673,6 +806,25 @@ fn main() {
             "    \"b{bs}\": {{ \"batched_images_per_s\": {batched_ips:.2}, \
              \"per_image_images_per_s\": {per_image_ips:.2}, \"speedup\": {:.3} }}{comma}\n",
             batched_ips / per_image_ips
+        ));
+    }
+    json.push_str("  },\n");
+    json.push_str("  \"sparse_vs_dense\": {\n");
+    json.push_str(&format!("    \"density_crossover\": {SPARSE_DENSITY_CROSSOVER},\n"));
+    for (i, r) in sparse_rows.iter().enumerate() {
+        let comma = if i + 1 == sparse_rows.len() { "" } else { "," };
+        json.push_str(&format!(
+            "    \"{}_d{}\": {{ \"density\": {:.4}, \"dense_images_per_s\": {:.2}, \
+             \"sparse_images_per_s\": {:.2}, \"dense_adds\": {}, \"sparse_adds\": {}, \
+             \"speedup\": {:.3} }}{comma}\n",
+            r.topology,
+            r.density_pct,
+            r.measured_density,
+            r.dense_ips,
+            r.sparse_ips,
+            r.dense_adds,
+            r.sparse_adds,
+            r.sparse_ips / r.dense_ips
         ));
     }
     json.push_str("  },\n");

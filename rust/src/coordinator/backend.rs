@@ -170,7 +170,24 @@ pub struct RtlBackend {
     /// stash cap, poisoned slots). Folded into [`RtlBackend::total_cycles`]
     /// so accounting stays exact under fan-out bursts.
     evicted: Arc<Mutex<ActivityCounters>>,
+    /// CSR density of the attached sparse image, when one was built
+    /// ([`RtlBackend::with_sparse`]); `None` = dense-only backend.
+    sparse_density: Option<f64>,
+    /// Whether batches route to the event-driven sparse sweep (density at
+    /// or below [`SPARSE_DENSITY_CROSSOVER`]).
+    serve_sparse: bool,
 }
+
+/// Density at which the event-driven sparse sweep overtakes the dense row
+/// walk. The dense engine does `n_out` adds per active input row
+/// regardless of weights; the sparse sweep does `nnz(row)` adds plus
+/// per-entry indexing overhead (an index load and an indirect write per
+/// entry, versus the dense walk's streaming access) — roughly 2× the
+/// per-entry cost, putting break-even near half density. Measured on the
+/// bench harness (BENCH_7 `density_crossover`) the observed crossover sits
+/// between 0.5 and 1.0 depending on topology; 0.5 is the conservative
+/// choice, guaranteeing the sparse route is never slower.
+pub const SPARSE_DENSITY_CROSSOVER: f64 = 0.5;
 
 impl RtlBackend {
     pub fn new(cfg: SnnConfig, weights: impl Into<WeightStack>) -> Result<Self> {
@@ -184,16 +201,57 @@ impl RtlBackend {
         weights: impl Into<WeightStack>,
         slots: usize,
     ) -> Result<Self> {
-        let weights: WeightStack = weights.into();
+        Self::build(cfg, weights.into(), slots, None)
+    }
+
+    /// Build with a sparse calibration (an SNNW v4 artifact's magnitude
+    /// threshold): the CSR image is derived once, its density decides the
+    /// serving route — at or below [`SPARSE_DENSITY_CROSSOVER`] every
+    /// pooled core carries the CSR and batches run the event-driven
+    /// sparse sweep; above it the dense row walk stays (the CSR would win
+    /// nothing), and only the density measurement is kept.
+    pub fn with_sparse(
+        cfg: SnnConfig,
+        weights: impl Into<WeightStack>,
+        threshold: i32,
+    ) -> Result<Self> {
+        Self::with_sparse_slots(cfg, weights, threshold, default_pool_slots())
+    }
+
+    /// [`RtlBackend::with_sparse`] with an explicit pool size.
+    pub fn with_sparse_slots(
+        cfg: SnnConfig,
+        weights: impl Into<WeightStack>,
+        threshold: i32,
+        slots: usize,
+    ) -> Result<Self> {
+        Self::build(cfg, weights.into(), slots, Some(threshold))
+    }
+
+    fn build(
+        cfg: SnnConfig,
+        weights: WeightStack,
+        slots: usize,
+        sparse_threshold: Option<i32>,
+    ) -> Result<Self> {
         // Validate geometry/config once, up front, so the pool factory
         // cannot fail later.
         RtlCore::new(cfg.clone(), weights.clone())?;
+        let csr = sparse_threshold.map(|t| weights.to_csr(t));
+        let sparse_density = csr.as_ref().map(crate::fixed::SparseWeightStack::density);
+        let serve_sparse = sparse_density.map_or(false, |d| d <= SPARSE_DENSITY_CROSSOVER);
+        let attach = if serve_sparse { csr } else { None };
         let factory_cfg = cfg.clone();
         let evicted = Arc::new(Mutex::new(ActivityCounters::default()));
         let sink = Arc::clone(&evicted);
         let cores = InstancePool::new(slots, move || {
-            RtlCore::new(factory_cfg.clone(), weights.clone())
-                .expect("validated at RtlBackend::with_slots")
+            let mut core = RtlCore::new(factory_cfg.clone(), weights.clone())
+                .expect("validated at RtlBackend::build");
+            if let Some(csr) = &attach {
+                core.attach_sparse_stack(csr.clone())
+                    .expect("CSR derived from this core's own stack");
+            }
+            core
         })
         .with_evict_hook(move |core: &mut RtlCore| {
             // Poison-recovering: the harvested totals are plain counters
@@ -201,7 +259,17 @@ impl RtlBackend {
             // silently loses the dying core's activity.
             lock_recover(&sink).add(&core.total_activity());
         });
-        Ok(RtlBackend { cores, cfg, evicted })
+        Ok(RtlBackend { cores, cfg, evicted, sparse_density, serve_sparse })
+    }
+
+    /// CSR density of the sparse calibration, when one was supplied.
+    pub fn sparse_density(&self) -> Option<f64> {
+        self.sparse_density
+    }
+
+    /// True when batches route to the event-driven sparse sweep.
+    pub fn serves_sparse(&self) -> bool {
+        self.serve_sparse
     }
 
     /// Total activity burned so far across every core this backend ever
@@ -232,7 +300,12 @@ impl Backend for RtlBackend {
         early: EarlyExit,
     ) -> Result<Vec<BackendOutput>> {
         let mut core = self.cores.checkout();
-        match core.run_fast_batch(images, seeds, early) {
+        let run = if self.serve_sparse {
+            core.run_fast_batch_sparse(images, seeds, early)
+        } else {
+            core.run_fast_batch(images, seeds, early)
+        };
+        match run {
             Ok(results) => Ok(results
                 .into_iter()
                 .map(|r| BackendOutput {
@@ -503,6 +576,62 @@ mod tests {
                 assert_eq!(batched[i], solo[0], "{} lane {i}", backend.name());
             }
         }
+    }
+
+    #[test]
+    fn sparse_backend_routes_by_density_and_agrees_with_dense() {
+        // `test_weights` is ~1 hot entry per row: at threshold 1 the CSR
+        // drops the explicit zeros and lands near 10% density, so the
+        // backend must route to the event-driven sweep — and dropping
+        // zero weights changes no accumulator, so every output matches
+        // the dense backend bit for bit (including early-exit steps_run).
+        let cfg = SnnConfig::paper().with_timesteps(6).with_prune(PruneMode::Off);
+        let dense = RtlBackend::new(cfg.clone(), test_weights()).unwrap();
+        let sparse = RtlBackend::with_sparse(cfg.clone(), test_weights(), 1).unwrap();
+        assert!(sparse.serves_sparse());
+        let d = sparse.sparse_density().unwrap();
+        assert!(d < 0.2, "block-diagonal weights should be very sparse: {d}");
+        assert_eq!(dense.sparse_density(), None);
+        assert!(!dense.serves_sparse());
+
+        let gen = DigitGen::new(21);
+        let images: Vec<Image> = (0..8).map(|i| gen.sample(i as u8, i)).collect();
+        let refs: Vec<&Image> = images.iter().collect();
+        let seeds: Vec<u32> = (0..8).map(|i| 400 + i).collect();
+        for early in [EarlyExit::Off, EarlyExit::Margin { margin: 2, min_steps: 2 }] {
+            let a = dense.classify_batch(&refs, &seeds, early).unwrap();
+            let b = sparse.classify_batch(&refs, &seeds, early).unwrap();
+            assert_eq!(a, b, "sparse-routed backend diverges from dense ({early:?})");
+        }
+
+        // Deep stacks route too: the 2-layer test stack is also sparse.
+        let deep_cfg = SnnConfig::paper()
+            .with_topology(vec![784, 20, 10])
+            .with_timesteps(5)
+            .with_prune(PruneMode::Off);
+        let deep_dense = RtlBackend::new(deep_cfg.clone(), test_stack()).unwrap();
+        let deep_sparse = RtlBackend::with_sparse(deep_cfg, test_stack(), 1).unwrap();
+        assert!(deep_sparse.serves_sparse());
+        let a = deep_dense.classify_batch(&refs, &seeds, EarlyExit::Off).unwrap();
+        let b = deep_sparse.classify_batch(&refs, &seeds, EarlyExit::Off).unwrap();
+        assert_eq!(a, b, "deep sparse-routed backend diverges from dense");
+    }
+
+    #[test]
+    fn dense_weights_stay_on_the_dense_route() {
+        // Threshold 0 keeps every entry (density 1.0 > crossover): the
+        // backend measures the density but serves dense — and still
+        // answers identically.
+        let cfg = SnnConfig::paper().with_timesteps(4);
+        let auto = RtlBackend::with_sparse(cfg.clone(), test_weights(), 0).unwrap();
+        assert_eq!(auto.sparse_density(), Some(1.0));
+        assert!(!auto.serves_sparse(), "density 1.0 must not route sparse");
+        let dense = RtlBackend::new(cfg, test_weights()).unwrap();
+        let gen = DigitGen::new(2);
+        let img = gen.sample(4, 0);
+        let a = dense.classify_batch(&[&img], &[9], EarlyExit::Off).unwrap();
+        let b = auto.classify_batch(&[&img], &[9], EarlyExit::Off).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -59,6 +59,12 @@ impl<T> Batcher<T> {
         self.policy.max_batch - self.items.len()
     }
 
+    /// The forming batch's items, in arrival order (read-only: the worker
+    /// inspects pending deadlines to bound its park).
+    pub fn items(&self) -> &[T] {
+        &self.items
+    }
+
     /// Add an item that arrived at `now`.
     pub fn push(&mut self, item: T, now: Instant) {
         assert!(self.items.len() < self.policy.max_batch, "push into full batch");

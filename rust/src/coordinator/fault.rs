@@ -209,13 +209,6 @@ impl Backend for FaultInjectingBackend {
     ) -> Result<Vec<BackendOutput>> {
         self.calls.fetch_add(1, Ordering::Relaxed);
 
-        // Latency victims stall the whole batch (queue pressure builds,
-        // deadlines expire) but change nothing about the results.
-        if seeds.iter().any(|&s| self.plan.classify(s) == FaultKind::LatencySpike) {
-            self.latency_spikes.fetch_add(1, Ordering::Relaxed);
-            std::thread::sleep(self.plan.latency_spike);
-        }
-
         // Transient error: fires before the inner backend runs, so a
         // retry of the identical (images, seeds) chunk is bit-exact.
         if let Some(victim) = self.take_transient(seeds, FaultKind::TransientError) {
@@ -233,7 +226,47 @@ impl Backend for FaultInjectingBackend {
         }
 
         let wrong_len = self.take_transient(seeds, FaultKind::WrongLength);
-        let mut out = self.inner.classify_batch(images, seeds, early)?;
+
+        // Latency victims stall only their own sub-batch: fault-free
+        // siblings sharing the batch run on the inner backend *before*
+        // the injected sleep, so their measured latency is untouched —
+        // only the victims' slice pays the spike. Results are re-spliced
+        // in submission order, bit-exact with an unsplit call (per-image
+        // PRNG streams are independent). Pinned by the chaos suite's
+        // `latency_spike_delays_only_the_victims_subbatch`.
+        let victim_idx: Vec<usize> = seeds
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &s)| (self.plan.classify(s) == FaultKind::LatencySpike).then_some(i))
+            .collect();
+        let mut out = if victim_idx.is_empty() {
+            self.inner.classify_batch(images, seeds, early)?
+        } else {
+            self.latency_spikes.fetch_add(1, Ordering::Relaxed);
+            let rest_idx: Vec<usize> =
+                (0..seeds.len()).filter(|i| !victim_idx.contains(i)).collect();
+            let gather = |idx: &[usize]| -> (Vec<&Image>, Vec<u32>) {
+                (idx.iter().map(|&i| images[i]).collect(), idx.iter().map(|&i| seeds[i]).collect())
+            };
+            let rest_out = if rest_idx.is_empty() {
+                Vec::new()
+            } else {
+                let (imgs, sds) = gather(&rest_idx);
+                self.inner.classify_batch(&imgs, &sds, early)?
+            };
+            std::thread::sleep(self.plan.latency_spike);
+            let (imgs, sds) = gather(&victim_idx);
+            let vic_out = self.inner.classify_batch(&imgs, &sds, early)?;
+            let mut merged: Vec<Option<BackendOutput>> = Vec::new();
+            merged.resize_with(seeds.len(), || None);
+            for (&i, o) in rest_idx.iter().zip(rest_out) {
+                merged[i] = Some(o);
+            }
+            for (&i, o) in victim_idx.iter().zip(vic_out) {
+                merged[i] = Some(o);
+            }
+            merged.into_iter().flatten().collect()
+        };
         if wrong_len.is_some() {
             self.wrong_lengths.fetch_add(1, Ordering::Relaxed);
             out.pop();

@@ -140,11 +140,25 @@ impl ServerMetrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batched_items.load(Ordering::Relaxed);
+        // Conservation law: `submitted >= completed + failed + shed` must
+        // hold in *every* snapshot, not just at quiescence. Each request's
+        // lifecycle bumps `submitted` (at admission) strictly before its
+        // terminal counter, so the snapshot reads the terminal sinks
+        // FIRST and `submitted` LAST: the `Acquire` loads pair with the
+        // sinks' `Release` increments (and the admission bump
+        // happens-before the terminal bump via the queue hand-off), so
+        // every terminal event we count here has its submission visible
+        // by the time `submitted` is read. Reading in the other order let
+        // a racing completion land between the two loads and transiently
+        // break the invariant (see `snapshot_conservation_under_load`).
+        let shed = self.shed.load(Ordering::Acquire);
+        let completed = self.completed.load(Ordering::Acquire);
+        let failed = self.failed.load(Ordering::Acquire);
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
-            completed: self.completed.load(Ordering::Relaxed),
-            failed: self.failed.load(Ordering::Relaxed),
+            completed,
+            failed,
             batches,
             steals: self.steals.load(Ordering::Relaxed),
             fanout_batches: self.fanout_batches.load(Ordering::Relaxed),
@@ -156,7 +170,7 @@ impl ServerMetrics {
             latency_mean_us: self.latency.mean_us(),
             latency_max_us: self.latency.max_us(),
             steps_executed: self.steps_executed.load(Ordering::Relaxed),
-            shed: self.shed.load(Ordering::Relaxed),
+            shed,
             deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
             panics_recovered: self.panics_recovered.load(Ordering::Relaxed),
             worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
@@ -214,6 +228,72 @@ mod tests {
         assert_eq!(s.steals, 3);
         assert_eq!(s.fanout_batches, 2);
         assert_eq!(s.subbatches, 7);
+    }
+
+    /// The conservation law must hold in *every* concurrent snapshot:
+    /// writer threads drive full submit→terminal lifecycles (with the
+    /// production orderings: Relaxed admission, Release terminal) while a
+    /// hammer thread snapshots nonstop and asserts
+    /// `submitted >= completed + failed + shed` each time, then exact
+    /// equality at quiescence. Deterministic: fixed iteration counts,
+    /// join()-synchronized, no sleeps.
+    #[test]
+    fn snapshot_conservation_under_load() {
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+
+        let m = Arc::new(ServerMetrics::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        const WRITERS: usize = 4;
+        const PER_WRITER: u64 = 50_000;
+
+        let writers: Vec<_> = (0..WRITERS)
+            .map(|w| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for i in 0..PER_WRITER {
+                        m.submitted.fetch_add(1, Ordering::Relaxed);
+                        // Production terminal bumps are Release (they pair
+                        // with the snapshot's Acquire loads).
+                        match (i + w as u64) % 3 {
+                            0 => m.completed.fetch_add(1, Ordering::Release),
+                            1 => m.failed.fetch_add(1, Ordering::Release),
+                            _ => m.shed.fetch_add(1, Ordering::Release),
+                        };
+                    }
+                })
+            })
+            .collect();
+        let hammer = {
+            let m = Arc::clone(&m);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut snaps = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let s = m.snapshot();
+                    assert!(
+                        s.submitted >= s.completed + s.failed + s.shed,
+                        "conservation torn: {} submitted < {}+{}+{} resolved",
+                        s.submitted,
+                        s.completed,
+                        s.failed,
+                        s.shed
+                    );
+                    snaps += 1;
+                }
+                snaps
+            })
+        };
+        for w in writers {
+            w.join().expect("writer panicked");
+        }
+        stop.store(true, Ordering::Relaxed);
+        let snaps = hammer.join().expect("snapshot hammer saw a torn snapshot");
+        assert!(snaps > 0, "hammer never ran");
+        let s = m.snapshot();
+        let total = WRITERS as u64 * PER_WRITER;
+        assert_eq!(s.submitted, total);
+        assert_eq!(s.completed + s.failed + s.shed, total, "quiescent equality");
     }
 
     #[test]

@@ -40,7 +40,9 @@ mod pool;
 mod server;
 mod shard;
 
-pub use backend::{Backend, BackendOutput, BehavioralBackend, RtlBackend, XlaBackend};
+pub use backend::{
+    Backend, BackendOutput, BehavioralBackend, RtlBackend, XlaBackend, SPARSE_DENSITY_CROSSOVER,
+};
 pub use batcher::{BatchPolicy, Batcher};
 pub use fault::{FaultInjectingBackend, FaultInjections, FaultKind, FaultPlan};
 pub use metrics::{Histogram, MetricsSnapshot, ServerMetrics};

@@ -465,7 +465,12 @@ fn reject_leftovers(ctx: &WorkerCtx) {
         match ctx.queue.pop_some(0, 64, &mut cursor) {
             Popped::Items { items, .. } => {
                 for inflight in items {
-                    ctx.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    // Terminal counters bump with Release: they pair with
+                    // the snapshot's Acquire loads so the conservation
+                    // law `submitted >= completed + failed + shed` holds
+                    // in every concurrent snapshot (see
+                    // `ServerMetrics::snapshot`).
+                    ctx.metrics.failed.fetch_add(1, Ordering::Release);
                     let msg = "coordinator stopped before this request ran";
                     let _ = inflight.reply.try_send(Err(Error::ShuttingDown(msg.into())));
                 }
@@ -513,13 +518,37 @@ fn worker_loop(
                     }
                     Popped::Empty => {
                         // Nothing to pop: park until new work, the batch
-                        // deadline, or shutdown.
-                        queue.wait(if batcher.is_empty() { IDLE_POLL } else { timeout });
+                        // deadline, the *soonest request deadline*, or
+                        // shutdown. Without the deadline bound, an
+                        // expired request on a quiet shard sat un-shed
+                        // until the next push or the full batch delay
+                        // woke the worker — its typed `Shed` reply
+                        // arrived arbitrarily late (idle-shard deadline
+                        // starvation; pinned by
+                        // `idle_shard_sheds_expired_deadline_on_time`).
+                        let park = if batcher.is_empty() { IDLE_POLL } else { timeout };
+                        let now = Instant::now();
+                        match soonest_deadline(batcher.items()) {
+                            // A deadline already passed: dispatch now so
+                            // `run_batch`'s pop-time shed sends the
+                            // reply instead of computing for nobody.
+                            Some(d) if d <= now => {
+                                dispatch(&backend, &metrics, &cfg, batcher.take());
+                            }
+                            Some(d) => queue.wait(park.min(d - now)),
+                            None => queue.wait(park),
+                        }
                     }
                 }
             }
         }
     }
+}
+
+/// Earliest deadline among a forming batch's requests, if any carries
+/// one.
+fn soonest_deadline(items: &[InFlight]) -> Option<Instant> {
+    items.iter().filter_map(|f| f.deadline).min()
 }
 
 /// Run one batch; if the backend panicked underneath it, re-raise the
@@ -556,7 +585,7 @@ fn run_batch(
     let mut live = Vec::with_capacity(batch.len());
     for inflight in batch {
         if inflight.deadline.is_some_and(|d| d <= now) {
-            metrics.shed.fetch_add(1, Ordering::Relaxed);
+            metrics.shed.fetch_add(1, Ordering::Release);
             metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
             let err = Error::Shed("deadline expired before execution".into());
             let _ = inflight.reply.try_send(Err(err));
@@ -593,7 +622,7 @@ fn run_batch(
         match result {
             Ok(out) => respond_ok(metrics, inflight, out),
             Err(e) => {
-                metrics.failed.fetch_add(1, Ordering::Relaxed);
+                metrics.failed.fetch_add(1, Ordering::Release);
                 let _ = inflight.reply.try_send(Err(e));
             }
         }
@@ -762,7 +791,7 @@ fn respond_ok(metrics: &ServerMetrics, inflight: InFlight, out: BackendOutput) {
         // listening), but the expiry goes on record.
         metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
     }
-    metrics.completed.fetch_add(1, Ordering::Relaxed);
+    metrics.completed.fetch_add(1, Ordering::Release);
     metrics.steps_executed.fetch_add(u64::from(out.steps_run), Ordering::Relaxed);
     metrics.latency.record(inflight.submitted.elapsed());
     let _ = inflight.reply.try_send(Ok(Response {
@@ -1122,6 +1151,54 @@ mod tests {
         assert_eq!(snap.shed, 1);
         assert!(snap.deadline_expired >= 1);
         assert_eq!(snap.completed, 1);
+        coord.shutdown();
+    }
+
+    /// Regression: idle-shard deadline starvation. With a huge batch
+    /// `max_delay` and no other traffic, a short-deadline request used to
+    /// sit in the worker's forming batch until the *batch* timer (or the
+    /// next push) woke the worker — its typed `Shed` reply arrived
+    /// arbitrarily late. The park is now bounded by the soonest pending
+    /// deadline, so the reply must land promptly. Bounded by
+    /// `recv_timeout`, no sleeps.
+    #[test]
+    fn idle_shard_sheds_expired_deadline_on_time() {
+        let backend =
+            Arc::new(FixedCostBackend { cfg: SnnConfig::paper(), per_image: Duration::ZERO });
+        let coord = Coordinator::start(
+            backend,
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 8,
+                // The batch timer alone would hold the reply for 30 s.
+                batch: BatchPolicy { max_batch: 4, max_delay: Duration::from_secs(30) },
+                early: EarlyExit::Off,
+                fanout: FanoutPolicy::off(),
+                supervision: SupervisionPolicy::default(),
+            },
+        );
+        let handle = coord.handle();
+        let t0 = Instant::now();
+        let rx = handle
+            .submit(
+                Request::new(block_image(0))
+                    .with_seed(1)
+                    .with_deadline(Instant::now() + Duration::from_millis(20)),
+            )
+            .unwrap();
+        let reply = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("shed reply must not wait out the batch max_delay");
+        assert!(matches!(reply, Err(Error::Shed(_))), "want Shed, got {reply:?}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "shed reply took {:?} — deadline did not bound the park",
+            t0.elapsed()
+        );
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.shed, 1);
+        assert!(snap.deadline_expired >= 1);
+        assert_eq!(snap.completed, 0, "expired work must be shed, not computed");
         coord.shutdown();
     }
 

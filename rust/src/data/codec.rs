@@ -17,7 +17,7 @@ use std::path::Path;
 use super::{Dataset, Image, IMG_PIXELS, IMG_SIDE};
 use crate::config::LayerParams;
 use crate::error::{Error, Result};
-use crate::fixed::{pack_weights, unpack_weights, WeightMatrix, WeightStack};
+use crate::fixed::{pack_weights, unpack_weights, SparseWeightStack, WeightMatrix, WeightStack};
 
 const DATASET_MAGIC: &[u8; 4] = b"SNND";
 const WEIGHTS_MAGIC: &[u8; 4] = b"SNNW";
@@ -31,6 +31,16 @@ const STACK_VERSION: u32 = 2;
 /// an artifact actually carries per-layer overrides, so uniform stacks
 /// keep producing byte-identical v2 files.
 const LAYER_PARAMS_VERSION: u32 = 3;
+/// SNNW version 4: version 3's layout made self-describing (an explicit
+/// `has_layer_params` flag instead of implying the block from the version
+/// word) plus a sparse section between the calibration and the packed
+/// blobs: the magnitude-pruning threshold the CSR serving path was
+/// calibrated for and one expected-nnz word per layer (`|w| >= threshold`
+/// survivor count, checked on load so a corrupted-but-unpackable blob is
+/// still rejected). Written only when an artifact carries sparse
+/// calibration, so dense artifacts keep producing byte-identical v2/v3
+/// files.
+const SPARSE_VERSION: u32 = 4;
 
 /// Weights plus the LIF calibration they were trained against.
 #[derive(Debug, Clone, PartialEq)]
@@ -216,6 +226,13 @@ pub struct WeightStackArtifact {
     /// serialized as the v3 parameter block. The writer stores *resolved*
     /// values, so a reloaded artifact carries all-`Some` entries.
     pub layer_params: Vec<LayerParams>,
+    /// Magnitude-pruning threshold the sparse (CSR) serving path was
+    /// calibrated for, from the export pipeline's unstructured pruning
+    /// sweep. `None` = no sparse calibration (serializes as v2/v3,
+    /// byte-identical to pre-v4 artifacts); `Some(t)` adds the v4 sparse
+    /// section. Threshold 0 is a legal calibration: "serve sparse, prune
+    /// nothing" (the CSR sweep is bit-exact with dense there).
+    pub sparse_threshold: Option<i32>,
 }
 
 impl WeightStackArtifact {
@@ -251,12 +268,21 @@ impl WeightStackArtifact {
         };
         (over.v_th.unwrap_or(self.v_th), over.decay_shift.unwrap_or(self.decay_shift), prune_after)
     }
+
+    /// The CSR view of the stack at the artifact's calibrated threshold.
+    /// Artifacts without a sparse section use threshold 0 (every entry
+    /// kept), so the result is always a faithful sparse serving image.
+    pub fn to_csr(&self) -> SparseWeightStack {
+        self.stack.to_csr(self.sparse_threshold.unwrap_or(0))
+    }
 }
 
 /// Write a multi-layer weight stack + calibration. Uniform artifacts
-/// (empty `layer_params`) serialize as SNNW v2, byte-identical to the
-/// previous writer; artifacts with per-layer overrides add the v3
-/// parameter block (resolved values, one triple per layer).
+/// (empty `layer_params`, no sparse calibration) serialize as SNNW v2,
+/// byte-identical to the previous writer; artifacts with per-layer
+/// overrides add the v3 parameter block (resolved values, one triple per
+/// layer); artifacts with a sparse threshold serialize as v4 (flagged
+/// parameter block + sparse section).
 pub fn save_weight_stack(path: impl AsRef<Path>, art: &WeightStackArtifact) -> Result<()> {
     let path = path.as_ref();
     if !art.layer_params.is_empty() && art.layer_params.len() != art.stack.n_layers() {
@@ -266,8 +292,18 @@ pub fn save_weight_stack(path: impl AsRef<Path>, art: &WeightStackArtifact) -> R
             art.stack.n_layers()
         )));
     }
-    let version =
-        if art.layer_params.is_empty() { STACK_VERSION } else { LAYER_PARAMS_VERSION };
+    if let Some(t) = art.sparse_threshold {
+        if t < 0 {
+            return Err(Error::InvalidConfig(format!("sparse threshold {t} must be >= 0")));
+        }
+    }
+    let version = if art.sparse_threshold.is_some() {
+        SPARSE_VERSION
+    } else if art.layer_params.is_empty() {
+        STACK_VERSION
+    } else {
+        LAYER_PARAMS_VERSION
+    };
     let mut out = Vec::new();
     out.extend_from_slice(WEIGHTS_MAGIC);
     out.extend_from_slice(&version.to_le_bytes());
@@ -281,12 +317,23 @@ pub fn save_weight_stack(path: impl AsRef<Path>, art: &WeightStackArtifact) -> R
     out.extend_from_slice(&art.decay_shift.to_le_bytes());
     out.extend_from_slice(&art.timesteps.to_le_bytes());
     out.extend_from_slice(&art.prune_after.to_le_bytes());
-    if version == LAYER_PARAMS_VERSION {
+    let write_params = !art.layer_params.is_empty();
+    if version == SPARSE_VERSION {
+        out.extend_from_slice(&(write_params as u32).to_le_bytes());
+    }
+    if write_params {
         for l in 0..art.stack.n_layers() {
             let (v_th, decay_shift, prune_after) = art.resolved_layer(l);
             out.extend_from_slice(&v_th.to_le_bytes());
             out.extend_from_slice(&decay_shift.to_le_bytes());
             out.extend_from_slice(&prune_after.to_le_bytes());
+        }
+    }
+    if let Some(t) = art.sparse_threshold {
+        out.extend_from_slice(&t.to_le_bytes());
+        let csr = art.stack.to_csr(t);
+        for l in 0..csr.n_layers() {
+            out.extend_from_slice(&(csr.layer(l).nnz() as u32).to_le_bytes());
         }
     }
     for m in art.stack.layers() {
@@ -299,8 +346,8 @@ pub fn save_weight_stack(path: impl AsRef<Path>, art: &WeightStackArtifact) -> R
 
 /// Read a weight stack from an SNNW file. Accepts the legacy single-layer
 /// version 1 (loaded as a one-layer stack), the uniform multi-layer
-/// version 2, and the per-layer-parameter version 3, so one loader serves
-/// every artifact vintage.
+/// version 2, the per-layer-parameter version 3, and the sparse-calibrated
+/// version 4, so one loader serves every artifact vintage.
 pub fn load_weight_stack(path: impl AsRef<Path>) -> Result<WeightStackArtifact> {
     let path = path.as_ref();
     let buf = fs::read(path).map_err(|e| Error::io(path, e))?;
@@ -319,9 +366,10 @@ pub fn load_weight_stack(path: impl AsRef<Path>) -> Result<WeightStackArtifact> 
             timesteps: art.timesteps,
             prune_after: art.prune_after,
             layer_params: Vec::new(),
+            sparse_threshold: None,
         });
     }
-    if version != STACK_VERSION && version != LAYER_PARAMS_VERSION {
+    if version != STACK_VERSION && version != LAYER_PARAMS_VERSION && version != SPARSE_VERSION {
         return Err(Error::malformed(path, format!("unsupported version {version}")));
     }
     let n_layers = r.u32()? as usize;
@@ -342,8 +390,19 @@ pub fn load_weight_stack(path: impl AsRef<Path>) -> Result<WeightStackArtifact> 
     let decay_shift = r.u32()?;
     let timesteps = r.u32()?;
     let prune_after = r.u32()?;
+    // v3 implies the parameter block from the version word; v4 carries an
+    // explicit flag so sparse artifacts work with or without overrides.
+    let has_layer_params = if version == SPARSE_VERSION {
+        match r.u32()? {
+            0 => false,
+            1 => true,
+            f => return Err(Error::malformed(path, format!("bad layer_params flag {f}"))),
+        }
+    } else {
+        version == LAYER_PARAMS_VERSION
+    };
     let mut layer_params = Vec::new();
-    if version == LAYER_PARAMS_VERSION {
+    if has_layer_params {
         use crate::config::PruneMode;
         for l in 0..n_layers {
             let lv_th = r.i32()?;
@@ -366,6 +425,18 @@ pub fn load_weight_stack(path: impl AsRef<Path>) -> Result<WeightStackArtifact> 
             });
         }
     }
+    let mut sparse_threshold = None;
+    let mut expected_nnz = Vec::new();
+    if version == SPARSE_VERSION {
+        let t = r.i32()?;
+        if t < 0 {
+            return Err(Error::malformed(path, format!("sparse threshold {t} < 0")));
+        }
+        sparse_threshold = Some(t);
+        for _ in 0..n_layers {
+            expected_nnz.push(r.u32()? as usize);
+        }
+    }
     let mut layers = Vec::with_capacity(n_layers);
     for &(ni, no) in &dims {
         let packed_len = r.u32()? as usize;
@@ -384,7 +455,33 @@ pub fn load_weight_stack(path: impl AsRef<Path>) -> Result<WeightStackArtifact> 
     }
     let stack = WeightStack::from_layers(layers)
         .map_err(|e| Error::malformed(path, format!("inconsistent layer chain: {e}")))?;
-    Ok(WeightStackArtifact { stack, v_th, decay_shift, timesteps, prune_after, layer_params })
+    if let Some(t) = sparse_threshold {
+        // The stored survivor counts are a checksum over the weights: a
+        // blob that unpacks cleanly but was bit-flipped almost surely
+        // shifts some |w| across the threshold, so recount and compare.
+        let csr = stack.to_csr(t);
+        for l in 0..csr.n_layers() {
+            let got = csr.layer(l).nnz();
+            if got != expected_nnz[l] {
+                return Err(Error::malformed(
+                    path,
+                    format!(
+                        "layer {l}: {got} entries survive threshold {t}, header promised {}",
+                        expected_nnz[l]
+                    ),
+                ));
+            }
+        }
+    }
+    Ok(WeightStackArtifact {
+        stack,
+        v_th,
+        decay_shift,
+        timesteps,
+        prune_after,
+        layer_params,
+        sparse_threshold,
+    })
 }
 
 /// Write via a temp file + rename so concurrent readers never observe a
@@ -444,6 +541,7 @@ mod tests {
             timesteps: 12,
             prune_after: 0,
             layer_params: Vec::new(),
+            sparse_threshold: None,
         };
         let p = tmpdir().join("stack_roundtrip.bin");
         save_weight_stack(&p, &art).unwrap();
@@ -479,6 +577,7 @@ mod tests {
                     prune: Some(PruneMode::Off),
                 },
             ],
+            sparse_threshold: None,
         };
         let p = tmpdir().join("stack_roundtrip_v3.bin");
         save_weight_stack(&p, &art).unwrap();
@@ -511,6 +610,7 @@ mod tests {
             timesteps: 8,
             prune_after: 2,
             layer_params: vec![LayerParams::with_v_th(60), LayerParams::default()],
+            sparse_threshold: None,
         };
         let p = tmpdir().join("stack_v3_partial.bin");
         save_weight_stack(&p, &art).unwrap();
@@ -542,6 +642,82 @@ mod tests {
     }
 
     #[test]
+    fn weight_stack_roundtrip_v4_sparse() {
+        let l0 = WeightMatrix::from_rows(6, 4, 9, (0..24).map(|v| v * 11 - 120).collect()).unwrap();
+        let l1 = WeightMatrix::from_rows(4, 3, 9, (0..12).map(|v| 90 - v * 7).collect()).unwrap();
+        let art = WeightStackArtifact {
+            stack: WeightStack::from_layers(vec![l0, l1]).unwrap(),
+            v_th: 200,
+            decay_shift: 2,
+            timesteps: 12,
+            prune_after: 0,
+            layer_params: Vec::new(),
+            sparse_threshold: Some(30),
+        };
+        let p = tmpdir().join("stack_roundtrip_v4.bin");
+        save_weight_stack(&p, &art).unwrap();
+        let bytes = fs::read(&p).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 4);
+        let back = load_weight_stack(&p).unwrap();
+        assert_eq!(back, art);
+        // The CSR view honors the calibrated threshold.
+        let csr = back.to_csr();
+        assert_eq!(csr.topology(), vec![6, 4, 3]);
+        assert!(csr.density() < 1.0, "threshold 30 must prune something");
+        assert_eq!(csr.to_dense(), art.stack.to_csr(30).to_dense());
+
+        // Lying survivor counts are rejected: bump the first nnz word.
+        // Uniform v4 header: magic(4) ver(4) n_layers(4) dims(4*4) bits(4)
+        // v_th(4) decay(4) steps(4) prune(4) flag(4) threshold(4) = 52.
+        let mut lied = bytes.clone();
+        let nnz0 = u32::from_le_bytes(lied[52..56].try_into().unwrap());
+        lied[52..56].copy_from_slice(&(nnz0 + 1).to_le_bytes());
+        let p2 = tmpdir().join("stack_v4_lied_nnz.bin");
+        fs::write(&p2, &lied).unwrap();
+        let err = load_weight_stack(&p2).unwrap_err();
+        assert!(err.to_string().contains("promised"), "{err}");
+
+        // Negative thresholds never serialize.
+        let bad = WeightStackArtifact { sparse_threshold: Some(-1), ..art.clone() };
+        assert!(save_weight_stack(tmpdir().join("neg_thresh.bin"), &bad).is_err());
+    }
+
+    #[test]
+    fn weight_stack_v4_carries_layer_params_and_threshold_zero() {
+        use crate::config::PruneMode;
+        let l0 = WeightMatrix::from_rows(6, 4, 9, (0..24).map(|v| v * 11 - 120).collect()).unwrap();
+        let l1 = WeightMatrix::from_rows(4, 3, 9, (0..12).map(|v| 90 - v * 7).collect()).unwrap();
+        let art = WeightStackArtifact {
+            stack: WeightStack::from_layers(vec![l0, l1]).unwrap(),
+            v_th: 200,
+            decay_shift: 2,
+            timesteps: 12,
+            prune_after: 1,
+            layer_params: vec![
+                LayerParams {
+                    v_th: Some(300),
+                    decay_shift: Some(3),
+                    prune: Some(PruneMode::AfterFires { after_spikes: 2 }),
+                },
+                LayerParams { v_th: Some(40), decay_shift: Some(4), prune: Some(PruneMode::Off) },
+            ],
+            // Threshold 0 = "serve sparse, prune nothing": the CSR image
+            // keeps every entry and the sweep is bit-exact with dense.
+            sparse_threshold: Some(0),
+        };
+        let p = tmpdir().join("stack_v4_params.bin");
+        save_weight_stack(&p, &art).unwrap();
+        let bytes = fs::read(&p).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 4);
+        let back = load_weight_stack(&p).unwrap();
+        assert_eq!(back, art);
+        assert_eq!(back.config().validated().unwrap().layer_v_th(1), 40);
+        let csr = back.to_csr();
+        assert_eq!(csr.density(), 1.0, "threshold 0 keeps every entry");
+        assert_eq!(csr.to_dense(), back.stack);
+    }
+
+    #[test]
     fn weight_stack_loader_accepts_legacy_v1() {
         let m = WeightMatrix::from_rows(4, 3, 9, (0..12).map(|v| v * 17 - 100).collect()).unwrap();
         let art =
@@ -568,6 +744,7 @@ mod tests {
             timesteps: 8,
             prune_after: 1,
             layer_params: Vec::new(),
+            sparse_threshold: None,
         };
         let p = tmpdir().join("stack_trunc.bin");
         save_weight_stack(&p, &art).unwrap();

@@ -15,6 +15,7 @@ mod fig4;
 mod fig5;
 mod fig67;
 mod fig8;
+mod sparsity;
 mod table1;
 mod table2;
 
@@ -34,6 +35,7 @@ pub use fig4::run_fig4;
 pub use fig5::run_fig5;
 pub use fig67::{run_fig6, run_fig7};
 pub use fig8::run_fig8;
+pub use sparsity::{run_ablation_sparsity, sparsity_point, SparsePoint};
 pub use table1::run_table1;
 pub use table2::run_table2;
 
@@ -104,11 +106,12 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
         "ablation-modes" => run_ablation_modes(ctx),
         "ablation-width" => run_ablation_width(ctx),
         "ablation-depth" => run_ablation_depth(ctx),
+        "ablation-sparsity" => run_ablation_sparsity(ctx),
         "all" => {
             for id in [
                 "table1", "fig4", "fig5", "fig6", "fig7", "table2", "fig8",
                 "ablation-pruning", "ablation-decay", "ablation-modes", "ablation-width",
-                "ablation-depth",
+                "ablation-depth", "ablation-sparsity",
             ] {
                 println!("\n================ {id} ================");
                 run(id, ctx)?;

@@ -6,8 +6,10 @@
 //! This module provides those primitives plus the pack/unpack codec for the
 //! dense 9-bit weight memory (the source of the paper's 8.6 KB figure).
 
+mod sparse;
 mod weights;
 
+pub use sparse::{SparseWeightLayer, SparseWeightStack};
 pub use weights::{pack_weights, unpack_weights, WeightMatrix, WeightStack};
 
 /// Saturating add clamped to a symmetric `bits`-wide signed range, i.e.

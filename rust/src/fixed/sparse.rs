@@ -1,0 +1,312 @@
+//! CSR sparse weight storage for the event-driven engines.
+//!
+//! Unstructured magnitude pruning leaves most entries of a trained weight
+//! matrix at (or near) zero, yet the dense engines still stream every row
+//! word through the adder tree. [`SparseWeightLayer`] stores one
+//! connection layer in compressed-sparse-row form — per input row, the
+//! column indices and values of the entries that survive a magnitude
+//! threshold — so the silence-skipping sweeps
+//! ([`crate::rtl::RtlCore::run_fast_sparse`] and the sparse arm of
+//! `run_fast_batch`) touch only (active input × retained synapse) pairs.
+//!
+//! The keep predicate is `|w| >= threshold`. **Threshold 0 keeps every
+//! entry — including explicit zeros** — so the CSR walk visits exactly
+//! the set of (input, output) pairs the dense row walk visits, in the
+//! same ascending-column order as the dense adder-tree fanout
+//! (`lane_add_row` iterates enabled outputs ascending). That makes the
+//! sparse sweep *bit-exact and activity-exact* with the dense fast path
+//! at threshold 0: the dense engine counts an add even for a zero
+//! weight, and so does the threshold-0 CSR. At threshold ≥ 1, zeros and
+//! sub-threshold magnitudes drop out; the saved adds/BRAM pulses appear
+//! as naturally lower [`crate::rtl::ActivityCounters`] — the same
+//! crediting mechanism the BRAM-gating ablation uses for pruned neurons.
+
+use crate::error::{Error, Result};
+
+use super::weights::{WeightMatrix, WeightStack};
+
+/// One connection layer in CSR form: `row_ptr[i]..row_ptr[i+1]` indexes
+/// the retained entries of input row `i` in `col_idx` / `values`
+/// (ascending column order within each row).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SparseWeightLayer {
+    n_inputs: usize,
+    n_outputs: usize,
+    bits: u32,
+    /// The magnitude threshold the layer was built with (`|w| >= threshold`
+    /// kept).
+    threshold: i32,
+    row_ptr: Vec<u32>,
+    col_idx: Vec<u32>,
+    values: Vec<i32>,
+}
+
+impl SparseWeightLayer {
+    /// Build from a dense matrix, keeping every entry with
+    /// `|w| >= threshold`. Threshold 0 keeps everything (exact dense
+    /// mirror); threshold 1 drops only explicit zeros.
+    pub fn from_dense(m: &WeightMatrix, threshold: i32) -> Self {
+        assert!(threshold >= 0, "magnitude threshold must be non-negative");
+        let (ni, no) = (m.n_inputs(), m.n_outputs());
+        let mut row_ptr = Vec::with_capacity(ni + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u32);
+        for i in 0..ni {
+            let row = m.row(i);
+            for (j, &w) in row.iter().enumerate() {
+                if w.abs() >= threshold {
+                    col_idx.push(j as u32);
+                    values.push(w);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        SparseWeightLayer { n_inputs: ni, n_outputs: no, bits: m.bits(), threshold, row_ptr, col_idx, values }
+    }
+
+    pub fn n_inputs(&self) -> usize {
+        self.n_inputs
+    }
+    pub fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// The magnitude threshold this layer was pruned at.
+    pub fn threshold(&self) -> i32 {
+        self.threshold
+    }
+
+    /// Retained entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Retained fraction of the dense plane, in `[0, 1]`.
+    pub fn density(&self) -> f64 {
+        if self.n_inputs * self.n_outputs == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.n_inputs * self.n_outputs) as f64
+    }
+
+    /// Input row `i`'s retained entries: `(columns, weights)`, ascending
+    /// column order — what the event-driven sweep integrates when input
+    /// `i` fires. Empty for a fully pruned row (the sweep then skips the
+    /// BRAM pulse entirely).
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> (&[u32], &[i32]) {
+        let (a, b) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+        (&self.col_idx[a..b], &self.values[a..b])
+    }
+
+    /// Reconstruct the dense matrix (pruned entries become 0).
+    pub fn to_dense(&self) -> WeightMatrix {
+        let mut data = vec![0i32; self.n_inputs * self.n_outputs];
+        for i in 0..self.n_inputs {
+            let (cols, vals) = self.row(i);
+            for (&j, &w) in cols.iter().zip(vals) {
+                data[i * self.n_outputs + j as usize] = w;
+            }
+        }
+        WeightMatrix::from_rows(self.n_inputs, self.n_outputs, self.bits, data)
+            .expect("CSR entries came from a valid dense matrix")
+    }
+
+    /// Storage footprint of the CSR image in bytes: packed values at the
+    /// weight width plus one `u32` column index per entry and the row
+    /// pointer array — the figure the density-crossover analysis trades
+    /// against the dense plane.
+    pub fn packed_bytes(&self) -> usize {
+        (self.nnz() * self.bits as usize + 7) / 8
+            + self.col_idx.len() * 4
+            + self.row_ptr.len() * 4
+    }
+}
+
+/// An N-layer chain of [`SparseWeightLayer`]s — the CSR twin of
+/// [`WeightStack`], built via [`WeightStack::to_csr`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SparseWeightStack {
+    layers: Vec<SparseWeightLayer>,
+}
+
+impl SparseWeightStack {
+    pub fn from_layers(layers: Vec<SparseWeightLayer>) -> Result<Self> {
+        if layers.is_empty() {
+            return Err(Error::InvalidConfig("sparse stack needs at least one layer".into()));
+        }
+        for (l, pair) in layers.windows(2).enumerate() {
+            if pair[0].n_outputs() != pair[1].n_inputs() {
+                return Err(Error::ShapeMismatch(format!(
+                    "sparse layer {l} outputs {} but layer {} expects {} inputs",
+                    pair[0].n_outputs(),
+                    l + 1,
+                    pair[1].n_inputs()
+                )));
+            }
+        }
+        Ok(SparseWeightStack { layers })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn layer(&self, l: usize) -> &SparseWeightLayer {
+        &self.layers[l]
+    }
+
+    pub fn layers(&self) -> &[SparseWeightLayer] {
+        &self.layers
+    }
+
+    /// The dimension chain, comparable with [`crate::SnnConfig::topology`].
+    pub fn topology(&self) -> Vec<usize> {
+        let mut t = Vec::with_capacity(self.layers.len() + 1);
+        t.push(self.layers[0].n_inputs());
+        for m in &self.layers {
+            t.push(m.n_outputs());
+        }
+        t
+    }
+
+    pub fn check_topology(&self, topology: &[usize]) -> Result<()> {
+        let mine = self.topology();
+        if mine != topology {
+            return Err(Error::ShapeMismatch(format!(
+                "sparse stack topology {mine:?} vs config topology {topology:?}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Total retained entries.
+    pub fn nnz(&self) -> usize {
+        self.layers.iter().map(SparseWeightLayer::nnz).sum()
+    }
+
+    /// Retained fraction over the whole chain's dense planes.
+    pub fn density(&self) -> f64 {
+        let dense: usize =
+            self.layers.iter().map(|m| m.n_inputs() * m.n_outputs()).sum();
+        if dense == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / dense as f64
+    }
+
+    /// Total CSR storage footprint in bytes.
+    pub fn packed_bytes(&self) -> usize {
+        self.layers.iter().map(SparseWeightLayer::packed_bytes).sum()
+    }
+
+    /// Reconstruct the dense stack (pruned entries become 0).
+    pub fn to_dense(&self) -> WeightStack {
+        WeightStack::from_layers(self.layers.iter().map(SparseWeightLayer::to_dense).collect())
+            .expect("CSR chain came from a valid dense stack")
+    }
+}
+
+impl WeightStack {
+    /// CSR view of this stack under magnitude threshold `threshold`
+    /// (keep iff `|w| >= threshold`; see the module docs for the
+    /// threshold-0 exactness contract).
+    pub fn to_csr(&self, threshold: i32) -> SparseWeightStack {
+        SparseWeightStack {
+            layers: self
+                .layers()
+                .iter()
+                .map(|m| SparseWeightLayer::from_dense(m, threshold))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::PropRunner;
+
+    fn random_matrix(g: &mut crate::testutil::Gen, ni: usize, no: usize) -> WeightMatrix {
+        let data = g.vec_i32(ni * no, -60, 60);
+        WeightMatrix::from_rows(ni, no, 9, data).unwrap()
+    }
+
+    #[test]
+    fn threshold_zero_is_a_full_mirror() {
+        PropRunner::new("csr_threshold0_mirror", 50).run(|g| {
+            let ni = g.rng.range_i32(1, 40) as usize;
+            let no = g.rng.range_i32(1, 16) as usize;
+            let m = random_matrix(g, ni, no);
+            let sp = SparseWeightLayer::from_dense(&m, 0);
+            assert_eq!(sp.nnz(), ni * no, "threshold 0 must keep every entry");
+            assert_eq!(sp.density(), 1.0);
+            assert_eq!(sp.to_dense(), m, "threshold-0 roundtrip must be lossless");
+            // Ascending-column contract inside every row.
+            for i in 0..ni {
+                let (cols, vals) = sp.row(i);
+                assert!(cols.windows(2).all(|w| w[0] < w[1]), "columns must ascend");
+                for (&j, &w) in cols.iter().zip(vals) {
+                    assert_eq!(w, m.get(i, j as usize));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn threshold_prunes_by_magnitude() {
+        PropRunner::new("csr_magnitude_prune", 50).run(|g| {
+            let ni = g.rng.range_i32(1, 30) as usize;
+            let no = g.rng.range_i32(1, 12) as usize;
+            let m = random_matrix(g, ni, no);
+            let th = g.rng.range_i32(1, 50);
+            let sp = SparseWeightLayer::from_dense(&m, th);
+            let want: usize =
+                m.as_slice().iter().filter(|&&w| w.abs() >= th).count();
+            assert_eq!(sp.nnz(), want, "keep predicate must be |w| >= {th}");
+            // The reconstructed dense plane zeroes exactly the dropped set.
+            let back = sp.to_dense();
+            for i in 0..ni {
+                for j in 0..no {
+                    let w = m.get(i, j);
+                    let expect = if w.abs() >= th { w } else { 0 };
+                    assert_eq!(back.get(i, j), expect, "entry ({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn stack_to_csr_tracks_topology_and_density() {
+        let a = WeightMatrix::from_rows(4, 3, 9, vec![0, 5, -5, 0, 0, 0, 1, -1, 2, 0, 9, 0]).unwrap();
+        let b = WeightMatrix::from_rows(3, 2, 9, vec![0, 7, 0, 0, -3, 0]).unwrap();
+        let stack = WeightStack::from_layers(vec![a, b]).unwrap();
+        let sp = stack.to_csr(1);
+        assert_eq!(sp.topology(), vec![4, 3, 2]);
+        sp.check_topology(&[4, 3, 2]).unwrap();
+        assert!(sp.check_topology(&[4, 2]).is_err());
+        assert_eq!(sp.layer(0).nnz(), 6);
+        assert_eq!(sp.layer(1).nnz(), 2);
+        assert_eq!(sp.nnz(), 8);
+        let dense_entries = (4 * 3 + 3 * 2) as f64;
+        assert!((sp.density() - 8.0 / dense_entries).abs() < 1e-12);
+        // A fully pruned row reports itself empty — the silence-skip hook.
+        let (cols, vals) = sp.layer(0).row(1);
+        assert!(cols.is_empty() && vals.is_empty());
+        // Heavier threshold is monotonically sparser.
+        assert!(stack.to_csr(8).nnz() < sp.nnz());
+        assert_eq!(stack.to_csr(0).density(), 1.0);
+    }
+
+    #[test]
+    fn rejects_broken_chain() {
+        let a = SparseWeightLayer::from_dense(&WeightMatrix::zeros(4, 3, 9), 0);
+        let b = SparseWeightLayer::from_dense(&WeightMatrix::zeros(4, 2, 9), 0);
+        assert!(SparseWeightStack::from_layers(vec![a, b]).is_err());
+        assert!(SparseWeightStack::from_layers(vec![]).is_err());
+    }
+}

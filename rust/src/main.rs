@@ -53,7 +53,8 @@ fn print_usage() {
          commands:\n  \
          experiment <id|all>   regenerate a paper table/figure \n                        \
          (table1 fig4 fig5 fig6 fig7 table2 fig8\n                        \
-         ablation-pruning ablation-decay ablation-modes ablation-depth)\n  \
+         ablation-pruning ablation-decay ablation-modes ablation-depth\n                        \
+         ablation-sparsity)\n  \
          classify              classify one synthetic digit\n  \
          serve                 run the serving coordinator demo\n  \
          info                  show artifact calibration\n\n\
@@ -209,7 +210,10 @@ fn make_backend(name: &str, artifacts: &str) -> Result<Arc<dyn Backend>> {
     let weights = codec::load_weights(manifest.path("weights.bin"))?;
     Ok(match name {
         "behavioral" => Arc::new(BehavioralBackend::new(cfg, weights.weights)?),
-        "rtl" => Arc::new(RtlBackend::new(cfg, weights.weights)?),
+        "rtl" => match manifest.sparse_threshold()? {
+            Some(t) => Arc::new(RtlBackend::with_sparse(cfg, weights.weights, t)?),
+            None => Arc::new(RtlBackend::new(cfg, weights.weights)?),
+        },
         "xla" => Arc::new(XlaBackend::new(XlaSnn::load(artifacts)?)),
         other => return Err(format!("unknown backend {other:?} (behavioral|rtl|xla)").into()),
     })

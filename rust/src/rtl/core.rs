@@ -32,7 +32,7 @@
 use crate::config::{FireMode, LeakMode, PruneMode, SnnConfig};
 use crate::data::Image;
 use crate::error::{Error, Result};
-use crate::fixed::WeightStack;
+use crate::fixed::{SparseWeightLayer, SparseWeightStack, WeightStack};
 use crate::snn::EarlyExit;
 use crate::util::margin_reached;
 
@@ -109,6 +109,9 @@ pub struct RtlCore {
     fired_scratch: Vec<Vec<bool>>,
     /// Reusable active-input index list for the fast path.
     active_scratch: Vec<u32>,
+    /// CSR twin of `weights` for the event-driven sparse sweeps
+    /// ([`RtlCore::attach_sparse`]). `None` until attached.
+    sparse: Option<SparseWeightStack>,
     /// Optional waveform sink.
     vcd: Option<VcdWriter>,
 }
@@ -138,6 +141,7 @@ impl RtlCore {
             step_membranes: Vec::new(),
             step_spikes: Vec::new(),
             active_scratch: Vec::with_capacity(cfg.n_inputs()),
+            sparse: None,
             weights,
             cfg,
             vcd: None,
@@ -416,6 +420,241 @@ impl RtlCore {
         Ok(self.collect_result(&start, &start_layers))
     }
 
+    /// Build (or rebuild) the CSR twin of the core's weight stack under
+    /// magnitude threshold `threshold` (keep iff `|w| >= threshold`) and
+    /// attach it for the event-driven sweeps. Threshold 0 keeps every
+    /// entry, making [`RtlCore::run_fast_sparse`] bit-exact with the
+    /// dense fast path; threshold ≥ 1 drops zeros and sub-threshold
+    /// magnitudes, and the saved rows/synapses show up as lower
+    /// [`ActivityCounters`].
+    pub fn attach_sparse(&mut self, threshold: i32) {
+        self.sparse = Some(self.weights.to_csr(threshold));
+    }
+
+    /// Attach a prebuilt CSR stack (must match the core's topology).
+    pub fn attach_sparse_stack(&mut self, sparse: SparseWeightStack) -> Result<()> {
+        sparse.check_topology(&self.cfg.topology)?;
+        self.sparse = Some(sparse);
+        Ok(())
+    }
+
+    /// Density of the attached CSR stack, if any.
+    pub fn sparse_density(&self) -> Option<f64> {
+        self.sparse.as_ref().map(SparseWeightStack::density)
+    }
+
+    /// Run one full inference window on the **event-driven sparse sweep**
+    /// (requires [`RtlCore::attach_sparse`]); see
+    /// [`RtlCore::run_fast_sparse_early`].
+    pub fn run_fast_sparse(&mut self, img: &Image, seed: u32) -> Result<RtlResult> {
+        self.run_fast_sparse_early(img, seed, EarlyExit::Off)
+    }
+
+    /// The sparse twin of [`RtlCore::run_fast_early`]: the same
+    /// timestep/layer schedule, closed-form cycle counts, fire/leak/prune
+    /// clocking and early-exit policy, but integration iterates only
+    /// (active input × retained synapse) CSR entries instead of dense
+    /// rows — a fully pruned row skips its BRAM pulse entirely, and each
+    /// retained entry runs the identical per-add saturation and
+    /// Hamming-toggle arithmetic as the dense adder tree
+    /// (`lane_add_sparse`). At magnitude threshold 0 the CSR holds every
+    /// entry, so the result — including every [`ActivityCounters`] field
+    /// and per-step log — is bit-identical to the dense fast path
+    /// (property-tested and pinned by all golden fixtures). At threshold
+    /// ≥ 1 the schedule (cycles) is unchanged while adds/BRAM
+    /// reads/toggles drop with density.
+    pub fn run_fast_sparse_early(
+        &mut self,
+        img: &Image,
+        seed: u32,
+        early: EarlyExit,
+    ) -> Result<RtlResult> {
+        let sparse = self.sparse.take().ok_or_else(|| {
+            Error::InvalidConfig("no sparse weights attached (call attach_sparse first)".into())
+        })?;
+        let out = self.run_sparse_window(&sparse, img, seed, early);
+        self.sparse = Some(sparse);
+        out
+    }
+
+    /// The sparse window body (split out so the CSR stack can be taken
+    /// out of `self` for the duration — the integrate helpers need it
+    /// alongside mutable neuron state).
+    fn run_sparse_window(
+        &mut self,
+        sparse: &SparseWeightStack,
+        img: &Image,
+        seed: u32,
+        early: EarlyExit,
+    ) -> Result<RtlResult> {
+        let early = early.clamped_for(&self.cfg);
+        self.load_image(img, seed)?;
+        let start = self.total_activity();
+        let start_layers = self.layer_act.clone();
+
+        let k = self.controller.pixels_per_cycle();
+        let row_len = match self.cfg.leak_mode {
+            LeakMode::PerRow { row_len } => Some(row_len),
+            LeakMode::PerTimestep => None,
+        };
+        let n_layers = self.neurons.len();
+
+        'window: for t in 0..self.cfg.timesteps {
+            for l in 0..n_layers {
+                match self.cfg.fire_mode {
+                    FireMode::EndOfStep => {
+                        self.sparse_integrate_end_of_step(sparse.layer(l), l, row_len);
+                        // Closed-form clock counts: the FSM schedule walks
+                        // every input lane regardless of weight contents,
+                        // so sparsity changes datapath events, never
+                        // clocks — identical to the dense fast path.
+                        let n_in = self.cfg.layer_input(l);
+                        let integrate_clocks = n_in.div_ceil(k) as u64;
+                        let leak_clocks = match (l, row_len) {
+                            (0, Some(r)) => ((n_in - 1) / r + 1) as u64,
+                            _ => 1,
+                        };
+                        self.layer_act[l].cycles += integrate_clocks + leak_clocks;
+                        self.cycle_no += integrate_clocks + leak_clocks;
+                    }
+                    FireMode::Immediate => {
+                        self.sparse_integrate_immediate(sparse.layer(l), l, k, row_len)
+                    }
+                }
+                // The layer's Fire clock — identical to the dense path.
+                self.fired_scratch[l].fill(false);
+                if self.cfg.fire_mode == FireMode::EndOfStep {
+                    self.neurons[l]
+                        .fire_check(&mut self.fired_scratch[l], &mut self.layer_act[l]);
+                }
+                self.controller.latch_fire(
+                    l,
+                    &self.fired_scratch[l],
+                    self.neurons[l].spike_counts(),
+                );
+                self.apply_prune_mask(l);
+                self.step_membranes.extend_from_slice(self.neurons[l].accs());
+                self.step_spikes.extend_from_slice(&self.fired_scratch[l]);
+                self.layer_act[l].cycles += 1;
+                self.cycle_no += 1;
+            }
+            self.controller.end_timestep();
+            self.membrane_log.push(std::mem::take(&mut self.step_membranes));
+            self.spike_log.push(std::mem::take(&mut self.step_spikes));
+
+            if let EarlyExit::Margin { margin, min_steps } = early {
+                if t + 1 >= min_steps
+                    && margin_reached(self.neurons[n_layers - 1].spike_counts(), margin)
+                {
+                    break 'window;
+                }
+            }
+        }
+        self.controller.finish();
+        Ok(self.collect_result(&start, &start_layers))
+    }
+
+    /// Sparse twin of [`RtlCore::fast_integrate_end_of_step`]: same
+    /// segment/leak structure, but each active input applies only its
+    /// retained CSR entries, and a fully pruned row skips its BRAM pulse.
+    fn sparse_integrate_end_of_step(
+        &mut self,
+        layer: &SparseWeightLayer,
+        l: usize,
+        row_len: Option<usize>,
+    ) {
+        let n_in = self.cfg.layer_input(l);
+        let seg = if l == 0 { row_len.unwrap_or(n_in) } else { n_in };
+        let any_enabled = self.controller.any_enabled(l);
+        let mut start = 0usize;
+        while start < n_in {
+            let end = (start + seg).min(n_in);
+            self.active_scratch.clear();
+            if l == 0 {
+                self.encoder.tick_range_into(start, end, &mut self.active_scratch, &mut self.enc_act);
+            } else {
+                let prev = self.controller.step_fired(l - 1);
+                for p in start..end {
+                    if prev[p] {
+                        self.active_scratch.push(p as u32);
+                    }
+                }
+            }
+            if any_enabled {
+                for &p in &self.active_scratch {
+                    let (cols, vals) = layer.row(p as usize);
+                    if cols.is_empty() {
+                        // Silence skip: the whole row was pruned away, so
+                        // the weight memory is never pulsed for it.
+                        continue;
+                    }
+                    self.layer_act[l].bram_reads += 1;
+                    self.neurons[l].add_row_sparse(cols, vals, &mut self.layer_act[l]);
+                }
+            }
+            self.neurons[l].leak_enabled(&mut self.layer_act[l]);
+            start = end;
+        }
+    }
+
+    /// Sparse twin of [`RtlCore::fast_integrate_immediate`]: same k-wide
+    /// group walk, mid-phase fire and leak clocking, CSR row application.
+    fn sparse_integrate_immediate(
+        &mut self,
+        layer: &SparseWeightLayer,
+        l: usize,
+        k: usize,
+        row_len: Option<usize>,
+    ) {
+        let n_in = self.cfg.layer_input(l);
+        let mut pixel = 0usize;
+        while pixel < n_in {
+            let end = (pixel + k).min(n_in);
+            let any_enabled = self.controller.any_enabled(l);
+            self.active_scratch.clear();
+            if l == 0 {
+                self.encoder.tick_range_into(pixel, end, &mut self.active_scratch, &mut self.enc_act);
+            } else {
+                let prev = self.controller.step_fired(l - 1);
+                for p in pixel..end {
+                    if prev[p] {
+                        self.active_scratch.push(p as u32);
+                    }
+                }
+            }
+            if any_enabled {
+                for &p in &self.active_scratch {
+                    let (cols, vals) = layer.row(p as usize);
+                    if cols.is_empty() {
+                        continue;
+                    }
+                    self.layer_act[l].bram_reads += 1;
+                    self.neurons[l].add_row_sparse(cols, vals, &mut self.layer_act[l]);
+                }
+            }
+            self.layer_act[l].cycles += 1; // the Integrate clock
+            self.cycle_no += 1;
+            self.fired_scratch[l].fill(false);
+            let any = self.neurons[l]
+                .immediate_fire(&mut self.fired_scratch[l], &mut self.layer_act[l]);
+            if any {
+                self.controller.latch_fire(
+                    l,
+                    &self.fired_scratch[l],
+                    self.neurons[l].spike_counts(),
+                );
+                self.apply_prune_mask(l);
+            }
+            pixel = end;
+            let row_boundary = l == 0 && row_len.is_some_and(|r| pixel % r == 0);
+            if pixel == n_in || row_boundary {
+                self.neurons[l].leak_enabled(&mut self.layer_act[l]);
+                self.layer_act[l].cycles += 1; // the Leak clock
+                self.cycle_no += 1;
+            }
+        }
+    }
+
     /// Run a whole sub-batch of images through **one timestep sweep**:
     /// per timestep, each image's independent Poisson lanes are drawn,
     /// then every weight row is walked **once** and applied to every
@@ -469,17 +708,56 @@ impl RtlCore {
         }
         let mut out = Vec::with_capacity(images.len());
         for (imgs, sds) in images.chunks(BATCH_LANES).zip(seeds.chunks(BATCH_LANES)) {
-            self.run_batch_chunk(imgs, sds, early, &mut out)?;
+            self.run_batch_chunk(imgs, sds, early, None, &mut out)?;
         }
         Ok(out)
     }
 
-    /// One ≤[`BATCH_LANES`]-image chunk of [`RtlCore::run_fast_batch`].
+    /// The sparse arm of [`RtlCore::run_fast_batch`] (requires
+    /// [`RtlCore::attach_sparse`]): the same one-timestep-sweep batching —
+    /// each retained weight row fetched once per timestep and applied to
+    /// every lane whose input fired — but row application iterates only
+    /// CSR entries, and fully pruned rows skip their fetch for the whole
+    /// batch. Bit-exact lane-for-lane with
+    /// [`RtlCore::run_fast_sparse_early`] (and, at threshold 0, with the
+    /// dense engines). Does not sample VCD (waveform capture stays on the
+    /// dense cycle path).
+    pub fn run_fast_batch_sparse(
+        &mut self,
+        images: &[&Image],
+        seeds: &[u32],
+        early: EarlyExit,
+    ) -> Result<Vec<RtlResult>> {
+        if images.len() != seeds.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "batch of {} images vs {} seeds",
+                images.len(),
+                seeds.len()
+            )));
+        }
+        let sparse = self.sparse.take().ok_or_else(|| {
+            Error::InvalidConfig("no sparse weights attached (call attach_sparse first)".into())
+        })?;
+        let mut out = Vec::with_capacity(images.len());
+        let mut result = Ok(());
+        for (imgs, sds) in images.chunks(BATCH_LANES).zip(seeds.chunks(BATCH_LANES)) {
+            result = self.run_batch_chunk(imgs, sds, early, Some(&sparse), &mut out);
+            if result.is_err() {
+                break;
+            }
+        }
+        self.sparse = Some(sparse);
+        result.map(|()| out)
+    }
+
+    /// One ≤[`BATCH_LANES`]-image chunk of [`RtlCore::run_fast_batch`]
+    /// (dense when `sparse` is `None`, CSR row application otherwise).
     fn run_batch_chunk(
         &mut self,
         images: &[&Image],
         seeds: &[u32],
         early: EarlyExit,
+        sparse: Option<&SparseWeightStack>,
         out: &mut Vec<RtlResult>,
     ) -> Result<()> {
         let n_inputs = self.cfg.n_inputs();
@@ -528,6 +806,7 @@ impl RtlCore {
         let mut run = BatchRun {
             cfg: &self.cfg,
             weights: &self.weights,
+            sparse,
             k: self.controller.pixels_per_cycle(),
             row_len,
             prune: (0..n_layers).map(|l| self.cfg.layer_prune(l)).collect(),
@@ -782,6 +1061,9 @@ struct BatchLane {
 struct BatchRun<'a> {
     cfg: &'a SnnConfig,
     weights: &'a WeightStack,
+    /// When set, `apply_rows` integrates CSR entries instead of dense
+    /// rows (the sparse arm of the batched sweep).
+    sparse: Option<&'a SparseWeightStack>,
     k: usize,
     row_len: Option<usize>,
     /// Per-layer resolved pruning policy (mirrors the controller's).
@@ -842,6 +1124,30 @@ impl BatchRun<'_> {
     /// row order; per-lane BRAM reads and adder activity land in that
     /// lane's own counters.
     fn apply_rows(&mut self, l: usize, start: usize, end: usize, gate: u64) {
+        if let Some(sp) = self.sparse {
+            // CSR arm: a fully pruned row skips its fetch for the whole
+            // batch; retained entries run the same per-add arithmetic.
+            let layer = sp.layer(l);
+            for p in start..end {
+                let src = if l == 0 { self.masks[p] } else { self.step_fired[l - 1][p] };
+                let mut m = src & gate;
+                if m == 0 {
+                    continue;
+                }
+                let (cols, vals) = layer.row(p);
+                if cols.is_empty() {
+                    continue;
+                }
+                while m != 0 {
+                    let b = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let act = &mut self.lanes[b].layer_act[l];
+                    act.bram_reads += 1;
+                    self.arrays[l].add_row_sparse(b, cols, vals, act);
+                }
+            }
+            return;
+        }
         let weights = self.weights.layer(l);
         for p in start..end {
             let src = if l == 0 { self.masks[p] } else { self.step_fired[l - 1][p] };
@@ -1337,7 +1643,161 @@ mod tests {
         }
     }
 
-    /// Batched early-exit compaction: image A exits at step 2 while
+    /// The sparse lockdown theorem: at magnitude threshold 0 the
+    /// event-driven sweep (`run_fast_sparse` / `run_fast_batch_sparse`)
+    /// produces the full-`RtlResult`-equality of the dense engines —
+    /// every activity counter, per-step log and cycle — and above
+    /// threshold 0 the schedule (cycles) stays identical while
+    /// adds/BRAM reads only ever shrink and the winner stays a valid
+    /// class. Deterministic nested loops over thresholds
+    /// (0 / light / heavy) × depths 1–3 × batch 1–9, with fire modes,
+    /// `PerRow` leak, hetero `layer_params` and early exit folded in.
+    #[test]
+    fn sparse_sweep_equals_dense_at_threshold_zero() {
+        use crate::config::LayerParams;
+        let mut rng = crate::prng::Xorshift32::new(0x5AB5_E001);
+        let topologies: [Vec<usize>; 3] =
+            [vec![784, 10], vec![784, 17, 10], vec![784, 14, 12, 10]];
+        for topology in &topologies {
+            let stack = test_stack(topology, rng.next_u32());
+            let n_layers = topology.len() - 1;
+            for &threshold in &[0i32, 15, 40] {
+                // Dense reference plane for this threshold: the CSR's
+                // dropped entries zeroed. Zero-weight adds change no
+                // state, so the sparse sweep must match a dense run of
+                // this plane bit for bit in everything except the adds
+                // and BRAM pulses it skips.
+                let pruned_stack = stack.to_csr(threshold).to_dense();
+                for batch in 1usize..=9 {
+                    let early = if batch % 2 == 1 {
+                        EarlyExit::Margin { margin: 2, min_steps: 1 }
+                    } else {
+                        EarlyExit::Off
+                    };
+                    let fire = if batch % 3 == 0 {
+                        FireMode::Immediate
+                    } else {
+                        FireMode::EndOfStep
+                    };
+                    let leak = if batch % 4 == 0 {
+                        LeakMode::PerRow { row_len: 28 }
+                    } else {
+                        LeakMode::PerTimestep
+                    };
+                    let layer_params: Vec<LayerParams> = if rng.below(2) == 0 {
+                        (0..n_layers)
+                            .map(|_| LayerParams {
+                                v_th: Some(60 + rng.below(200) as i32),
+                                decay_shift: Some(1 + rng.below(4)),
+                                prune: Some(if rng.below(2) == 0 {
+                                    PruneMode::Off
+                                } else {
+                                    PruneMode::AfterFires { after_spikes: 1 + rng.below(3) }
+                                }),
+                            })
+                            .collect()
+                    } else {
+                        Vec::new()
+                    };
+                    let cfg = SnnConfig::paper()
+                        .with_topology(topology.clone())
+                        .with_timesteps(4)
+                        .with_v_th(90 + rng.below(120) as i32)
+                        .with_fire_mode(fire)
+                        .with_leak_mode(leak)
+                        .with_prune(PruneMode::Off)
+                        .with_layer_params(layer_params);
+                    let gen = DigitGen::new(rng.next_u32());
+                    let images: Vec<crate::data::Image> =
+                        (0..batch).map(|i| gen.sample(rng.below(10) as u8, i)).collect();
+                    let refs: Vec<&crate::data::Image> = images.iter().collect();
+                    let seeds: Vec<u32> = (0..batch).map(|_| rng.next_u32()).collect();
+
+                    let mut sparse_core = RtlCore::new(cfg.clone(), stack.clone()).unwrap();
+                    sparse_core.attach_sparse(threshold);
+                    let sparse_batch =
+                        sparse_core.run_fast_batch_sparse(&refs, &seeds, early).unwrap();
+                    assert_eq!(sparse_batch.len(), batch);
+
+                    let mut seq_sparse = RtlCore::new(cfg.clone(), stack.clone()).unwrap();
+                    seq_sparse.attach_sparse(threshold);
+                    let mut seq_pruned =
+                        RtlCore::new(cfg.clone(), pruned_stack.clone()).unwrap();
+                    for (i, (img, &seed)) in images.iter().zip(&seeds).enumerate() {
+                        let want_sparse =
+                            seq_sparse.run_fast_sparse_early(img, seed, early).unwrap();
+                        // Batched sparse ≡ sequential sparse, always.
+                        assert_eq!(
+                            sparse_batch[i], want_sparse,
+                            "sparse batch lane {i} diverges (threshold={threshold} \
+                             batch={batch} topology={topology:?} fire={fire:?})"
+                        );
+                        let dense = seq_pruned.run_fast_early(img, seed, early).unwrap();
+                        if threshold == 0 {
+                            // Full RtlResult equality: the threshold-0 CSR
+                            // is the dense engine, event for event.
+                            assert_eq!(
+                                want_sparse, dense,
+                                "threshold-0 sparse diverges from dense (lane {i} \
+                                 batch={batch} topology={topology:?} fire={fire:?})"
+                            );
+                        } else {
+                            // Zero-weight adds change no membrane state,
+                            // so against the pruned dense plane the
+                            // sparse sweep is bit-exact in results,
+                            // schedule and logs — only the adds and BRAM
+                            // pulses it skipped are (weakly) lower.
+                            assert_eq!(want_sparse.class, dense.class, "winner diverges");
+                            assert_eq!(want_sparse.spike_counts, dense.spike_counts);
+                            assert_eq!(
+                                want_sparse.spike_counts_by_layer,
+                                dense.spike_counts_by_layer
+                            );
+                            assert_eq!(want_sparse.cycles, dense.cycles, "schedule diverges");
+                            assert_eq!(want_sparse.membrane_by_step, dense.membrane_by_step);
+                            assert_eq!(want_sparse.spikes_by_step, dense.spikes_by_step);
+                            assert_eq!(
+                                want_sparse.activity.saturations,
+                                dense.activity.saturations
+                            );
+                            assert_eq!(want_sparse.activity.compares, dense.activity.compares);
+                            assert_eq!(
+                                want_sparse.activity.prng_steps,
+                                dense.activity.prng_steps
+                            );
+                            assert!(
+                                want_sparse.activity.adds <= dense.activity.adds,
+                                "skipped synapses must only lower adds: {} > {}",
+                                want_sparse.activity.adds,
+                                dense.activity.adds
+                            );
+                            assert!(
+                                want_sparse.activity.bram_reads <= dense.activity.bram_reads,
+                                "skipped rows must only lower BRAM reads"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Guard rails: the sparse entry points demand an attached CSR stack,
+    /// and a topology-mismatched prebuilt stack is rejected.
+    #[test]
+    fn sparse_entry_points_require_attached_stack() {
+        let cfg = SnnConfig::paper().with_timesteps(1);
+        let img = DigitGen::new(1).sample(0, 0);
+        let mut core = RtlCore::new(cfg.clone(), test_weights(1)).unwrap();
+        assert!(core.run_fast_sparse(&img, 1).is_err());
+        assert!(core.run_fast_batch_sparse(&[&img], &[1], EarlyExit::Off).is_err());
+        assert!(core.sparse_density().is_none());
+        let wrong = test_stack(&[784, 12, 10], 2).to_csr(0);
+        assert!(core.attach_sparse_stack(wrong).is_err());
+        core.attach_sparse(0);
+        assert_eq!(core.sparse_density(), Some(1.0));
+        core.run_fast_sparse(&img, 1).unwrap();
+    }
     /// image B (black — never fires, never confident) runs the full
     /// window. A's retirement must not perturb B's counts/cycles/logs,
     /// and per-image `steps_run` must match the behavioral model exactly.

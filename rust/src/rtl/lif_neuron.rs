@@ -227,6 +227,40 @@ fn lane_add_row(
     }
 }
 
+/// One CSR row pulse over one lane: integrate the row's retained
+/// `(column, weight)` entries into every *enabled* neuron, per-add
+/// saturation, ascending column order — the event-driven twin of
+/// [`lane_add_row`]. Skipped synapses (pruned entries, disabled
+/// neurons) record nothing, which is exactly how the BRAM-gating
+/// ablation credits pruned neurons: the counters are simply lower. At
+/// magnitude threshold 0 the CSR holds every entry, so the visited set,
+/// order and arithmetic are identical to the dense walk — bit- and
+/// activity-exact.
+#[inline]
+fn lane_add_sparse(
+    acc: &mut [i32],
+    enabled: &[u64],
+    cols: &[u32],
+    vals: &[i32],
+    p: &LaneParams,
+    act: &mut ActivityCounters,
+) {
+    debug_assert_eq!(cols.len(), vals.len());
+    for (&j, &w) in cols.iter().zip(vals) {
+        let j = j as usize;
+        if (enabled[j / 64] >> (j % 64)) & 1 == 0 {
+            continue;
+        }
+        let sum = i64::from(acc[j]) + i64::from(w);
+        let clamped = sum.clamp(-i64::from(p.acc_max), i64::from(p.acc_max)) as i32;
+        if i64::from(clamped) != sum {
+            act.saturations += 1;
+        }
+        act.adds += 1;
+        write_acc_at(acc, j, clamped, act);
+    }
+}
+
 /// One `Leak` clock over one lane: shift-subtract decay on every enabled
 /// neuron.
 #[inline]
@@ -421,6 +455,15 @@ impl LifNeuronArray {
         lane_add_row(&mut self.acc, &self.enabled, row, &self.params, act);
     }
 
+    /// One CSR row pulse: integrate the retained `(column, weight)`
+    /// entries into every *enabled* neuron (per-add saturation, ascending
+    /// column) — see [`lane_add_sparse`] for the dense-equivalence
+    /// contract.
+    #[inline]
+    pub fn add_row_sparse(&mut self, cols: &[u32], vals: &[i32], act: &mut ActivityCounters) {
+        lane_add_sparse(&mut self.acc, &self.enabled, cols, vals, &self.params, act);
+    }
+
     /// One `Leak` clock: shift-subtract decay on every enabled neuron.
     #[inline]
     pub fn leak_enabled(&mut self, act: &mut ActivityCounters) {
@@ -545,6 +588,26 @@ impl LifBatchArray {
             &mut self.acc[b * self.n..(b + 1) * self.n],
             &self.enabled[b * self.words..(b + 1) * self.words],
             row,
+            &self.params,
+            act,
+        );
+    }
+
+    /// One CSR row pulse into lane `b` (per-add saturation, ascending
+    /// column; see [`lane_add_sparse`]).
+    #[inline]
+    pub fn add_row_sparse(
+        &mut self,
+        b: usize,
+        cols: &[u32],
+        vals: &[i32],
+        act: &mut ActivityCounters,
+    ) {
+        lane_add_sparse(
+            &mut self.acc[b * self.n..(b + 1) * self.n],
+            &self.enabled[b * self.words..(b + 1) * self.words],
+            cols,
+            vals,
             &self.params,
             act,
         );
@@ -777,6 +840,85 @@ mod tests {
                 }
                 assert_eq!(act_a, act_c, "activity counters diverge");
             }
+        });
+    }
+
+    /// The CSR row pulse at threshold 0 must be state- and
+    /// activity-identical to the dense row pulse — the per-entry
+    /// foundation of the sparse sweep's bit-exactness — and above
+    /// threshold 0 it must apply exactly the surviving subset.
+    #[test]
+    fn sparse_add_matches_dense_at_threshold_zero() {
+        use crate::fixed::{SparseWeightLayer, WeightMatrix};
+        use crate::testutil::PropRunner;
+
+        PropRunner::new("lane_sparse_equiv", 60).run(|g| {
+            let n = if g.rng.below(4) == 0 {
+                g.rng.range_i32(65, 120) as usize
+            } else {
+                g.rng.range_i32(1, 14) as usize
+            };
+            let cfg = SnnConfig {
+                topology: vec![784, n],
+                v_th: g.rng.range_i32(5, 60),
+                decay_shift: g.rng.range_i32(1, 4) as u32,
+                acc_bits: g.rng.range_i32(8, 16) as u32,
+                ..SnnConfig::paper()
+            };
+            let rows = 6usize;
+            let m = WeightMatrix::from_rows(rows, n, 9, g.vec_i32(rows * n, -120, 120)).unwrap();
+            let csr0 = SparseWeightLayer::from_dense(&m, 0);
+
+            let mut dense = LifNeuronArray::new(&cfg);
+            let mut sparse = LifNeuronArray::new(&cfg);
+            let mut act_d = ActivityCounters::default();
+            let mut act_s = ActivityCounters::default();
+            let mut fired = vec![false; n];
+            for round in 0..40 {
+                let i = g.rng.below(rows as u32) as usize;
+                let (cols, vals) = csr0.row(i);
+                dense.add_row(m.row(i), &mut act_d);
+                sparse.add_row_sparse(cols, vals, &mut act_s);
+                if round % 7 == 3 {
+                    // Random pruning mask: the enabled-gating must agree.
+                    let enables: Vec<bool> =
+                        (0..n).map(|_| g.rng.next_u32() & 1 == 1).collect();
+                    dense.set_enables(&enables);
+                    sparse.set_enables(&enables);
+                }
+                if round % 5 == 2 {
+                    dense.leak_enabled(&mut act_d);
+                    sparse.leak_enabled(&mut act_s);
+                    fired.fill(false);
+                    dense.fire_check(&mut fired, &mut act_d);
+                    fired.fill(false);
+                    sparse.fire_check(&mut fired, &mut act_s);
+                }
+                assert_eq!(dense.accs(), sparse.accs(), "membranes diverge");
+                assert_eq!(act_d, act_s, "activity diverges at threshold 0");
+            }
+
+            // Above threshold 0 the sparse pulse applies exactly the
+            // surviving entries: fewer (or equal) adds, and the membrane
+            // equals a dense pulse of the pruned plane.
+            let th = g.rng.range_i32(1, 100);
+            let csr = SparseWeightLayer::from_dense(&m, th);
+            let pruned = csr.to_dense();
+            let mut via_sparse = LifNeuronArray::new(&cfg);
+            let mut via_pruned_dense = LifNeuronArray::new(&cfg);
+            let mut a_s = ActivityCounters::default();
+            let mut a_d = ActivityCounters::default();
+            for i in 0..rows {
+                let (cols, vals) = csr.row(i);
+                via_sparse.add_row_sparse(cols, vals, &mut a_s);
+                via_pruned_dense.add_row(pruned.row(i), &mut a_d);
+            }
+            assert_eq!(via_sparse.accs(), via_pruned_dense.accs());
+            assert!(
+                a_s.adds <= a_d.adds,
+                "sparse must never add more than the pruned dense plane"
+            );
+            assert_eq!(a_s.adds as usize, csr.nnz(), "one add per retained synapse");
         });
     }
 

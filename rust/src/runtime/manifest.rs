@@ -199,6 +199,41 @@ impl Manifest {
         let mult = self.u32("eval_seed_mult")?;
         Ok(base.wrapping_add(index.wrapping_mul(mult)))
     }
+
+    /// Optional sparse serving calibration: the magnitude-pruning
+    /// threshold the export pipeline applied when writing the SNNW v4
+    /// sparse section (`sparse_threshold=` key; absent = dense-only
+    /// artifact). Never negative.
+    pub fn sparse_threshold(&self) -> Result<Option<i32>> {
+        if !self.kv.contains_key("sparse_threshold") {
+            return Ok(None);
+        }
+        let t = self.i32("sparse_threshold")?;
+        if t < 0 {
+            return Err(Error::malformed(
+                self.dir.join("manifest.txt"),
+                format!("sparse_threshold {t} < 0"),
+            ));
+        }
+        Ok(Some(t))
+    }
+
+    /// Optional recorded CSR density (`nnz / total` at
+    /// `sparse_threshold`, in [0, 1]) — advisory: lets backend selection
+    /// pick the sparse engine without re-deriving the CSR image.
+    pub fn sparse_density(&self) -> Result<Option<f64>> {
+        if !self.kv.contains_key("sparse_density") {
+            return Ok(None);
+        }
+        let d = self.f64("sparse_density")?;
+        if !(0.0..=1.0).contains(&d) {
+            return Err(Error::malformed(
+                self.dir.join("manifest.txt"),
+                format!("sparse_density {d} outside [0, 1]"),
+            ));
+        }
+        Ok(Some(d))
+    }
 }
 
 #[cfg(test)]
@@ -281,6 +316,29 @@ mod tests {
         // Absent key → empty overrides (the shared-parameter default).
         write_manifest(&dir, full_body());
         assert!(Manifest::load(&dir).unwrap().snn_config().unwrap().layer_params.is_empty());
+    }
+
+    #[test]
+    fn sparse_keys_parse_and_validate() {
+        let dir = std::env::temp_dir().join(format!("snn_manifest_sp_{}", std::process::id()));
+        // Absent keys → None (every pre-sparse manifest stays valid).
+        write_manifest(&dir, full_body());
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.sparse_threshold().unwrap(), None);
+        assert_eq!(m.sparse_density().unwrap(), None);
+        // Present keys parse.
+        write_manifest(
+            &dir,
+            &format!("{}sparse_threshold=12\nsparse_density=0.085\n", full_body()),
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.sparse_threshold().unwrap(), Some(12));
+        assert_eq!(m.sparse_density().unwrap(), Some(0.085));
+        // Out-of-range values are malformed, not clamped.
+        write_manifest(&dir, &format!("{}sparse_threshold=-3\n", full_body()));
+        assert!(Manifest::load(&dir).unwrap().sparse_threshold().is_err());
+        write_manifest(&dir, &format!("{}sparse_density=1.5\n", full_body()));
+        assert!(Manifest::load(&dir).unwrap().sparse_density().is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@
 
 use crate::config::{PruneMode, SnnConfig};
 use crate::error::{Error, Result};
-use crate::fixed::{leak, sat_clamp, WeightMatrix};
+use crate::fixed::{leak, sat_clamp, SparseWeightLayer, WeightMatrix};
 
 /// Per-step observability record (drives Fig. 4 and the golden traces).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -148,6 +148,65 @@ impl LifLayer {
             let row = &self.w_rows[i as usize * n_out..(i as usize + 1) * n_out];
             for (c, &w) in self.current_scratch.iter_mut().zip(row) {
                 *c += w;
+            }
+        }
+
+        for j in 0..n_out {
+            fired_out[j] = false;
+            if !self.enabled[j] {
+                continue;
+            }
+            let integrated =
+                sat_clamp(i64::from(self.acc[j]) + i64::from(self.current_scratch[j]), self.cfg.acc_bits);
+            let leaked = leak(integrated, self.cfg.decay_shift);
+            if leaked >= self.cfg.v_th {
+                fired_out[j] = true;
+                self.spike_counts[j] += 1;
+                self.acc[j] = self.cfg.v_rest;
+                if let PruneMode::AfterFires { after_spikes } = self.cfg.prune {
+                    if self.spike_counts[j] >= after_spikes {
+                        self.enabled[j] = false;
+                    }
+                }
+            } else {
+                self.acc[j] = leaked;
+            }
+        }
+    }
+
+    /// Event-list step over a CSR weight layer (the behavioral mirror of
+    /// the RTL sparse sweep): integration touches only the retained
+    /// synapses of each active input's row, and `adds_performed` credits
+    /// only retained entries whose target neuron is still enabled — the
+    /// event-rate accounting of EXPERIMENTS.md §Sparse. At prune
+    /// threshold 0 the CSR keeps every entry, so dynamics *and* the adds
+    /// count match [`LifLayer::step_events_into`] exactly (property-tested
+    /// in `network.rs`).
+    pub fn step_events_sparse_into(
+        &mut self,
+        active: &[u32],
+        sparse: &SparseWeightLayer,
+        fired_out: &mut [bool],
+    ) {
+        let n_out = self.cfg.n_outputs();
+        assert_eq!(fired_out.len(), n_out, "output flag buffer length");
+        assert_eq!(sparse.n_inputs(), self.cfg.n_inputs(), "sparse layer input width");
+        assert_eq!(sparse.n_outputs(), n_out, "sparse layer output width");
+        debug_assert!(active.iter().all(|&i| (i as usize) < self.cfg.n_inputs()));
+
+        self.current_scratch.clear();
+        self.current_scratch.resize(n_out, 0i32);
+        // Pruning only flips enables in the fire loop below, so `enabled`
+        // is constant across this accumulation: counting enabled retained
+        // entries here equals `events × n_enabled` at threshold 0.
+        for &i in active {
+            let (cols, vals) = sparse.row(i as usize);
+            for (&j, &w) in cols.iter().zip(vals) {
+                let j = j as usize;
+                self.current_scratch[j] += w;
+                if self.enabled[j] {
+                    self.adds_performed += 1;
+                }
             }
         }
 
@@ -687,6 +746,74 @@ mod tests {
                 assert_eq!(a.spike_counts(), b.spike_counts(), "counts diverge at {step}");
                 assert_eq!(a.enabled(), b.enabled(), "enables diverge at {step}");
                 assert_eq!(a.adds_performed(), b.adds_performed(), "adds diverge at {step}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_sparse_events_equal_dense_at_threshold_zero() {
+        // The CSR event step must be a drop-in mirror of the dense event
+        // step: identical membranes, fires, counts, enables, AND the same
+        // adds_performed — threshold 0 keeps every entry, so enabled
+        // retained entries per step = events × n_enabled.
+        PropRunner::new("lif_sparse_equiv", 120).run(|g| {
+            let cfg = SnnConfig {
+                topology: vec![24, 5],
+                v_th: g.rng.range_i32(5, 80),
+                decay_shift: g.rng.range_i32(1, 5) as u32,
+                acc_bits: 20,
+                prune: *g.choice(&[
+                    PruneMode::Off,
+                    PruneMode::AfterFires { after_spikes: 1 },
+                    PruneMode::AfterFires { after_spikes: 3 },
+                ]),
+                ..SnnConfig::paper()
+            };
+            let w = g.vec_i32(24 * 5, -60, 60);
+            let m = WeightMatrix::from_rows(24, 5, 9, w).unwrap();
+            let sparse0 = crate::fixed::SparseWeightLayer::from_dense(&m, 0);
+            let threshold = g.rng.range_i32(10, 40);
+            let sparse_t = crate::fixed::SparseWeightLayer::from_dense(&m, threshold);
+            let pruned = sparse_t.to_dense();
+            let mut dense = LifLayer::new(cfg.clone(), &m).unwrap();
+            let mut mirror = LifLayer::new(cfg.clone(), &m).unwrap();
+            // Above threshold 0, the sparse step over `m`'s CSR equals the
+            // *dense* step over the pruned re-densification — zero-weight
+            // adds are state-neutral — except adds_performed, which only
+            // credits retained synapses.
+            let mut dense_pruned = LifLayer::new(cfg.clone(), &pruned).unwrap();
+            let mut mirror_pruned = LifLayer::new(cfg, &pruned).unwrap();
+            let mut fired_a = vec![false; 5];
+            let mut fired_b = vec![false; 5];
+            for step in 0..30 {
+                let spikes: Vec<bool> = (0..24).map(|_| g.rng.next_u32() & 1 == 1).collect();
+                let active: Vec<u32> = spikes
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, &s)| s.then_some(i as u32))
+                    .collect();
+                dense.step_events_into(&active, &mut fired_a);
+                mirror.step_events_sparse_into(&active, &sparse0, &mut fired_b);
+                assert_eq!(fired_a, fired_b, "fired diverges at step {step}");
+                assert_eq!(dense.membrane(), mirror.membrane(), "membrane at {step}");
+                assert_eq!(dense.spike_counts(), mirror.spike_counts(), "counts at {step}");
+                assert_eq!(dense.enabled(), mirror.enabled(), "enables at {step}");
+                assert_eq!(
+                    dense.adds_performed(),
+                    mirror.adds_performed(),
+                    "adds diverge at step {step}"
+                );
+
+                dense_pruned.step_events_into(&active, &mut fired_a);
+                mirror_pruned.step_events_sparse_into(&active, &sparse_t, &mut fired_b);
+                assert_eq!(fired_a, fired_b, "pruned fired diverges at step {step}");
+                assert_eq!(dense_pruned.membrane(), mirror_pruned.membrane());
+                assert_eq!(dense_pruned.spike_counts(), mirror_pruned.spike_counts());
+                assert_eq!(dense_pruned.enabled(), mirror_pruned.enabled());
+                assert!(
+                    mirror_pruned.adds_performed() <= dense_pruned.adds_performed(),
+                    "sparse must never credit more adds than the dense walk"
+                );
             }
         });
     }

@@ -13,7 +13,7 @@
 use crate::config::{DecisionPolicy, SnnConfig};
 use crate::data::Image;
 use crate::error::{Error, Result};
-use crate::fixed::WeightStack;
+use crate::fixed::{SparseWeightStack, WeightStack};
 use crate::snn::{LifBatchStack, LifLayer, PoissonEncoder, StepTrace};
 use crate::util::{margin_reached, priority_argmax};
 
@@ -188,6 +188,36 @@ impl LifStack {
         fired_out.copy_from_slice(&self.fired[n - 1]);
     }
 
+    /// The CSR mirror of [`LifStack::step_events_into`]: each layer
+    /// integrates only the retained synapses of its active inputs' rows
+    /// (the behavioral silence-skipping sweep). `sparse` must share this
+    /// stack's topology; at prune threshold 0 the dynamics and
+    /// `adds_performed` match the dense event path exactly.
+    pub fn step_events_sparse_into(
+        &mut self,
+        sparse: &SparseWeightStack,
+        active: &[u32],
+        fired_out: &mut [bool],
+    ) {
+        let n = self.layers.len();
+        for l in 0..n {
+            if l == 0 {
+                self.layers[0].step_events_sparse_into(active, sparse.layer(0), &mut self.fired[0]);
+            } else {
+                self.relay.clear();
+                for (i, &f) in self.fired[l - 1].iter().enumerate() {
+                    if f {
+                        self.relay.push(i as u32);
+                    }
+                }
+                let relay = std::mem::take(&mut self.relay);
+                self.layers[l].step_events_sparse_into(&relay, sparse.layer(l), &mut self.fired[l]);
+                self.relay = relay;
+            }
+        }
+        fired_out.copy_from_slice(&self.fired[n - 1]);
+    }
+
     /// A batched mirror of this stack: per-image state planes over the
     /// same shared weights ([`LifBatchStack`]; the poolable unit of the
     /// batched serving backend — cheap, weights stay behind `Arc`).
@@ -245,7 +275,7 @@ impl BehavioralNet {
         early: EarlyExit,
     ) -> Classification {
         let mut stack = self.stack.clone();
-        let (c, _) = run_inference(&self.cfg, &mut stack, img, seed, timesteps, early, false);
+        let (c, _) = run_inference(&self.cfg, &mut stack, None, img, seed, timesteps, early, false);
         c
     }
 
@@ -262,7 +292,26 @@ impl BehavioralNet {
         timesteps: u32,
         early: EarlyExit,
     ) -> Classification {
-        run_inference(&self.cfg, stack, img, seed, timesteps, early, false).0
+        run_inference(&self.cfg, stack, None, img, seed, timesteps, early, false).0
+    }
+
+    /// Classify through the event-driven **sparse** sweep: identical loop
+    /// to [`BehavioralNet::classify_with`] but each layer step walks only
+    /// the CSR-retained synapses of its active inputs. The CSR stack must
+    /// match this net's topology (typically `weights.to_csr(threshold)` of
+    /// the same stack, so threshold 0 is bit-exact with the dense path —
+    /// pinned by `sparse_classify_equals_dense_at_threshold_zero`).
+    pub fn classify_sparse_with(
+        &self,
+        stack: &mut LifStack,
+        sparse: &SparseWeightStack,
+        img: &Image,
+        seed: u32,
+        timesteps: u32,
+        early: EarlyExit,
+    ) -> Result<Classification> {
+        sparse.check_topology(&self.cfg.topology)?;
+        Ok(run_inference(&self.cfg, stack, Some(sparse), img, seed, timesteps, early, false).0)
     }
 
     /// A fresh stack instance wired to this net's weights (seed for
@@ -320,14 +369,17 @@ impl BehavioralNet {
         timesteps: u32,
     ) -> (Classification, Vec<StepTrace>) {
         let mut stack = self.stack.clone();
-        run_inference(&self.cfg, &mut stack, img, seed, timesteps, EarlyExit::Off, true)
+        run_inference(&self.cfg, &mut stack, None, img, seed, timesteps, EarlyExit::Off, true)
     }
 }
 
-/// Shared inference loop.
+/// Shared inference loop. With `sparse` set the event path integrates
+/// through the CSR sweep instead of dense rows (trace capture stays
+/// dense-only — goldens anchor the traced path).
 fn run_inference(
     cfg: &SnnConfig,
     stack: &mut LifStack,
+    sparse: Option<&SparseWeightStack>,
     img: &Image,
     seed: u32,
     timesteps: u32,
@@ -354,7 +406,10 @@ fn run_inference(
             // Fused event-list hot path (perf passes 3+4): the encoder
             // emits spiking indices directly into the integration step.
             enc.step_active_into(&mut active);
-            stack.step_events_into(&active, &mut fired);
+            match sparse {
+                Some(sp) => stack.step_events_sparse_into(sp, &active, &mut fired),
+                None => stack.step_events_into(&active, &mut fired),
+            }
         }
         for (j, &f) in fired.iter().enumerate() {
             if f && first_spike[j].is_none() {
@@ -808,6 +863,81 @@ mod tests {
         let img = block_image(1);
         assert!(net
             .classify_batch_with(&mut bs, &[&img, &img], &[1], 2, EarlyExit::Off)
+            .is_err());
+    }
+
+    /// Behavioral sparse theorem: at threshold 0 the CSR sweep equals the
+    /// dense event path in full `Classification` (including
+    /// `adds_performed`); above it, it equals the dense path run over the
+    /// pruned re-densification (zero-weight adds are state-neutral), with
+    /// adds weakly lower.
+    #[test]
+    fn sparse_classify_equals_dense_at_threshold_zero() {
+        use crate::config::LayerParams;
+        let configs: Vec<(SnnConfig, WeightStack)> = vec![
+            (
+                SnnConfig::paper().with_timesteps(8).with_prune(PruneMode::Off),
+                WeightStack::from(block_weights()),
+            ),
+            (
+                SnnConfig::paper()
+                    .with_topology(vec![784, 20, 10])
+                    .with_timesteps(8)
+                    .with_prune(PruneMode::Off)
+                    .with_layer_params(vec![
+                        LayerParams::default(),
+                        LayerParams {
+                            v_th: Some(100),
+                            decay_shift: Some(2),
+                            prune: Some(PruneMode::AfterFires { after_spikes: 1 }),
+                        },
+                    ]),
+                deep_block_stack(),
+            ),
+        ];
+        for (cfg, stack) in configs {
+            let net = BehavioralNet::new(cfg.clone(), stack.clone()).unwrap();
+            let mut pooled = net.stack_prototype();
+            let csr0 = stack.to_csr(0);
+            for (i, early) in [EarlyExit::Off, EarlyExit::Margin { margin: 2, min_steps: 2 }]
+                .into_iter()
+                .enumerate()
+            {
+                let img = block_image((3 + i) % 10);
+                let seed = 90 + i as u32;
+                let dense = net.classify_opts(&img, seed, 8, early);
+                let got = net
+                    .classify_sparse_with(&mut pooled, &csr0, &img, seed, 8, early)
+                    .unwrap();
+                assert_eq!(got, dense, "threshold-0 sparse diverged (early={early:?})");
+
+                // Heavy magnitude pruning vs the pruned-dense reference.
+                let threshold = 35;
+                let csr_t = stack.to_csr(threshold);
+                let pruned_net =
+                    BehavioralNet::new(cfg.clone(), csr_t.to_dense()).unwrap();
+                let want = pruned_net.classify_opts(&img, seed, 8, early);
+                let got = net
+                    .classify_sparse_with(&mut pooled, &csr_t, &img, seed, 8, early)
+                    .unwrap();
+                assert_eq!(got.class, want.class);
+                assert_eq!(got.spike_counts, want.spike_counts);
+                assert_eq!(got.first_spike, want.first_spike);
+                assert_eq!(got.steps_run, want.steps_run);
+                assert!(got.adds_performed <= want.adds_performed);
+            }
+        }
+
+        // Topology mismatch is a typed error.
+        let net = BehavioralNet::new(
+            SnnConfig::paper().with_timesteps(2),
+            block_weights(),
+        )
+        .unwrap();
+        let mut pooled = net.stack_prototype();
+        let wrong = deep_block_stack().to_csr(0);
+        assert!(net
+            .classify_sparse_with(&mut pooled, &wrong, &block_image(0), 1, 2, EarlyExit::Off)
             .is_err());
     }
 

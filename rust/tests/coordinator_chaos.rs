@@ -452,6 +452,118 @@ fn latency_spikes_shed_expired_deadlines() {
     });
 }
 
+/// Seed-echo stub that records the submission time of every inner call —
+/// the probe for asserting *when* each sub-batch reached the backend.
+struct RecordingStub {
+    cfg: SnnConfig,
+    calls: std::sync::Mutex<Vec<(Vec<u32>, Instant)>>,
+}
+
+impl Backend for RecordingStub {
+    fn name(&self) -> &'static str {
+        "recording-stub"
+    }
+
+    fn classify_batch(
+        &self,
+        images: &[&Image],
+        seeds: &[u32],
+        _early: EarlyExit,
+    ) -> snn_rtl::Result<Vec<BackendOutput>> {
+        self.calls.lock().unwrap().push((seeds.to_vec(), Instant::now()));
+        Ok(images
+            .iter()
+            .zip(seeds)
+            .map(|(_, &s)| BackendOutput {
+                class: (s % 10) as u8,
+                spike_counts: vec![s],
+                steps_run: 1,
+            })
+            .collect())
+    }
+
+    fn config(&self) -> &SnnConfig {
+        &self.cfg
+    }
+}
+
+/// Bugfix regression: a latency-spike victim must stall only its own
+/// sub-batch. The fault-free siblings' inner call lands *before* the
+/// injected sleep, the victims' call lands after it, the merged reply
+/// keeps submission order bit-exactly, and a victim-free batch pays no
+/// delay at all.
+#[test]
+fn latency_spike_delays_only_the_victims_subbatch() {
+    with_watchdog(Duration::from_secs(60), || {
+        let spike = Duration::from_millis(80);
+        let plan = FaultPlan {
+            seed: 0xD1A7,
+            panic_per_mille: 0,
+            error_per_mille: 0,
+            wrong_len_per_mille: 0,
+            latency_per_mille: 200,
+            latency_spike: spike,
+        };
+        let victims = seeds_of_kind(&plan, FaultKind::LatencySpike, 2);
+        let clean = seeds_of_kind(&plan, FaultKind::None, 4);
+        let stub = Arc::new(RecordingStub {
+            cfg: SnnConfig::paper(),
+            calls: std::sync::Mutex::new(Vec::new()),
+        });
+        let wrapper =
+            FaultInjectingBackend::new(Arc::clone(&stub) as Arc<dyn Backend>, plan);
+
+        // Interleave victims among clean seeds so the splice has to work
+        // for non-contiguous victim positions.
+        let seeds =
+            vec![clean[0], victims[0], clean[1], clean[2], victims[1], clean[3]];
+        let imgs: Vec<Image> = seeds.iter().map(|_| blank_image()).collect();
+        let refs: Vec<&Image> = imgs.iter().collect();
+        let t0 = Instant::now();
+        let out = wrapper.classify_batch(&refs, &seeds, EarlyExit::Off).unwrap();
+
+        // Merged reply: submission order, one output per request, echo
+        // bit-exact — the split is invisible in the results.
+        assert_eq!(out.len(), seeds.len());
+        for (i, &s) in seeds.iter().enumerate() {
+            assert_eq!(out[i].spike_counts, vec![s], "slot {i} lost its order");
+            assert_eq!(out[i].class, (s % 10) as u8);
+        }
+
+        // The siblings' inner call must predate the sleep; the victims'
+        // must trail it. (Half-spike tolerance: the only work before the
+        // first call is vector bookkeeping.)
+        let calls = stub.calls.lock().unwrap().clone();
+        assert_eq!(calls.len(), 2, "exactly one sibling call + one victim call");
+        let (rest_seeds, rest_t) = &calls[0];
+        let (vic_seeds, vic_t) = &calls[1];
+        assert_eq!(rest_seeds, &vec![clean[0], clean[1], clean[2], clean[3]]);
+        assert_eq!(vic_seeds, &victims);
+        assert!(
+            rest_t.duration_since(t0) < spike / 2,
+            "fault-free siblings waited {:?} behind the injected spike",
+            rest_t.duration_since(t0)
+        );
+        assert!(
+            vic_t.duration_since(t0) >= spike,
+            "victims' sub-batch ran {:?} after submit — before the spike elapsed",
+            vic_t.duration_since(t0)
+        );
+        assert_eq!(wrapper.injections().latency_spikes, 1);
+
+        // A victim-free batch takes the single-call path: no split, no
+        // sleep.
+        let t1 = Instant::now();
+        let out = wrapper
+            .classify_batch(&refs[..4], &clean, EarlyExit::Off)
+            .unwrap();
+        assert!(t1.elapsed() < spike / 2, "victim-free batch was delayed");
+        assert_eq!(out.len(), 4);
+        assert_eq!(stub.calls.lock().unwrap().len(), 3);
+        assert_eq!(wrapper.injections().latency_spikes, 1, "no spike may fire");
+    });
+}
+
 /// Panic storm past the restart budget: once every worker slot is out of
 /// restarts, the coordinator must reject the stranded backlog with typed
 /// `ShuttingDown` replies — every accepted request still resolves, the

@@ -633,6 +633,7 @@ fn weight_stack_artifact_roundtrip_preserves_deep_fixture() {
         timesteps: 8,
         prune_after: 0,
         layer_params: Vec::new(),
+        sparse_threshold: None,
     };
     codec::save_weight_stack(&path, &art).unwrap();
     let back = codec::load_weight_stack(&path).unwrap();
@@ -861,6 +862,92 @@ fn batched_hetero_run_fast_matches_pinned_golden_vectors() {
 }
 
 #[test]
+fn sparse_sweep_matches_all_pinned_golden_vectors() {
+    // All 24 embedded fixtures (9 single-layer, 9 two-layer, 6
+    // heterogeneous 3-layer) re-anchored through the event-driven sparse
+    // sweep at magnitude threshold 0: the CSR image keeps every entry, so
+    // `run_fast_sparse` must reproduce not just the pinned constants but
+    // the *entire* dense `run_fast` result — per-step logs, per-layer
+    // activity, energy — bit for bit.
+    let run_both = |cfg: SnnConfig, stack: WeightStack, img: &Image, seed: u32| {
+        let mut dense = RtlCore::new(cfg.clone(), stack.clone()).unwrap();
+        let want = dense.run_fast(img, seed).unwrap();
+        let mut sparse = RtlCore::new(cfg, stack).unwrap();
+        sparse.attach_sparse(0);
+        assert_eq!(sparse.sparse_density(), Some(1.0));
+        let got = sparse.run_fast_sparse(img, seed).unwrap();
+        assert_eq!(got, want, "sparse sweep diverges from dense at threshold 0");
+        got
+    };
+    for case in GOLDEN_CASES {
+        let r = run_both(
+            fixture_config(case.config),
+            fixture_weights().into(),
+            &fixture_image(case.image),
+            case.seed,
+        );
+        let tag = format!("sparse {}/{}", case.config, case.image);
+        assert_eq!(r.spike_counts, case.counts, "{tag}: counts drifted");
+        assert_eq!(r.class, case.winner, "{tag}: winner drifted");
+        assert_eq!(r.cycles, case.cycles, "{tag}: cycle count drifted");
+    }
+    for case in DEEP_GOLDEN_CASES {
+        let r = run_both(
+            deep_fixture_config(case.config),
+            deep_fixture_stack(),
+            &fixture_image(case.image),
+            case.seed,
+        );
+        let tag = format!("sparse {}/{}", case.config, case.image);
+        assert_eq!(r.spike_counts_by_layer[0], case.hidden_counts, "{tag}: hidden counts");
+        assert_eq!(r.spike_counts, case.counts, "{tag}: counts drifted");
+        assert_eq!(r.class, case.winner, "{tag}: winner drifted");
+        assert_eq!(r.cycles, case.cycles, "{tag}: cycle count drifted");
+    }
+    for case in HETERO_GOLDEN_CASES {
+        let r = run_both(
+            hetero_fixture_config(case.config),
+            hetero_fixture_stack(),
+            &fixture_image(case.image),
+            case.seed,
+        );
+        let tag = format!("sparse {}/{}", case.config, case.image);
+        assert_eq!(r.spike_counts_by_layer[0], case.l0_counts, "{tag}: layer 0");
+        assert_eq!(r.spike_counts_by_layer[1], case.l1_counts, "{tag}: layer 1");
+        assert_eq!(r.spike_counts, case.counts, "{tag}: counts drifted");
+        assert_eq!(r.class, case.winner, "{tag}: winner drifted");
+        assert_eq!(r.cycles, case.cycles, "{tag}: cycle count drifted");
+    }
+}
+
+#[test]
+fn batched_sparse_sweep_matches_pinned_golden_vectors() {
+    // The batched sparse arm over the 2-layer fixtures: each config's
+    // three images in ONE CSR-driven sweep must reproduce the pinned
+    // constants (and the per-layer hand-off masks they imply).
+    for config in ["deep", "deep_prune", "deep_fire"] {
+        let cases: Vec<&DeepGoldenCase> =
+            DEEP_GOLDEN_CASES.iter().filter(|c| c.config == config).collect();
+        let images: Vec<Image> = cases.iter().map(|c| fixture_image(c.image)).collect();
+        let refs: Vec<&Image> = images.iter().collect();
+        let seeds: Vec<u32> = cases.iter().map(|c| c.seed).collect();
+        let mut core =
+            RtlCore::new(deep_fixture_config(config), deep_fixture_stack()).unwrap();
+        core.attach_sparse(0);
+        let results = core
+            .run_fast_batch_sparse(&refs, &seeds, snn_rtl::snn::EarlyExit::Off)
+            .unwrap();
+        for (case, r) in cases.iter().zip(&results) {
+            let tag = format!("batched-sparse {}/{}", case.config, case.image);
+            assert_eq!(r.spike_counts_by_layer[0], case.hidden_counts, "{tag}: hidden");
+            assert_eq!(r.spike_counts, case.counts, "{tag}: output counts");
+            assert_eq!(r.class, case.winner, "{tag}: winner");
+            assert_eq!(r.cycles, case.cycles, "{tag}: cycle count");
+        }
+    }
+}
+
+#[test]
 fn batched_behavioral_matches_pinned_golden_vectors() {
     // The batched behavioral engine against the architectural-contract
     // fixtures (EndOfStep + per-timestep leak): `prune`, `deep`,
@@ -973,6 +1060,7 @@ fn hetero_stack_artifact_roundtrips_through_snnw_v3() {
         timesteps: cfg.timesteps,
         prune_after: 7,
         layer_params: cfg.layer_params.clone(),
+        sparse_threshold: None,
     };
     codec::save_weight_stack(&path, &art).unwrap();
     let back = codec::load_weight_stack(&path).unwrap();

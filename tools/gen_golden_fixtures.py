@@ -11,7 +11,9 @@ generated constants are trusted. Run with no arguments; it validates the
 sequential schedule, then cross-checks the BATCHED schedule
 (`run_core_batch`, mirroring `RtlCore::run_fast_batch`: one weight-row
 walk per timestep serves every image of the batch) against the same 24
-fixture constants, and finally prints the heterogeneous fixture table.
+fixture constants, then the SPARSE schedule (a CSR walk mirroring
+`RtlCore::run_fast_sparse`, at keep-thresholds 0 and 1) against the same
+constants, and finally prints the heterogeneous fixture table.
 """
 
 M32 = 0xFFFFFFFF
@@ -117,6 +119,12 @@ class Layer:
             if self.enabled[j]:
                 self.acc[j] = sat(self.acc[j] + row[j], self.acc_bits)
 
+    def add_row_sparse(self, entries):
+        """CSR row: only the surviving (col, weight) pairs are visited."""
+        for j, w in entries:
+            if self.enabled[j]:
+                self.acc[j] = sat(self.acc[j] + w, self.acc_bits)
+
     def leak_enabled(self):
         for j in range(self.n):
             if self.enabled[j]:
@@ -152,9 +160,11 @@ class Layer:
             self.latch_prune()
 
 def run_core(stack, image, seed, timesteps, fire_mode, leak_row_len,
-             layer_params, acc_bits=24):
+             layer_params, acc_bits=24, csr=None):
     """fire_mode: 'end' | 'imm'; leak_row_len: None or row length (layer 0
-    only); layer_params: list of (v_th, decay, prune_after) per layer."""
+    only); layer_params: list of (v_th, decay, prune_after) per layer;
+    csr: None for the dense row walk, or a to_csr() stack -- the sparse
+    sweep visits only the surviving (col, weight) pairs of active rows."""
     n_layers = len(stack)
     widths = [len(stack[l][0]) for l in range(n_layers)]
     layers = [Layer(widths[l], *layer_params[l], acc_bits) for l in range(n_layers)]
@@ -171,7 +181,10 @@ def run_core(stack, image, seed, timesteps, fire_mode, leak_row_len,
                 else:
                     spike = layers[l - 1].step_fired[p]
                 if spike:
-                    layers[l].add_row(stack[l][p])
+                    if csr is None:
+                        layers[l].add_row(stack[l][p])
+                    else:
+                        layers[l].add_row_sparse(csr[l][p])
                 cycles += 1
                 if fire_mode == "imm":
                     layers[l].immediate_fire()
@@ -401,6 +414,56 @@ def validate_batch():
             assert gw == winner and gcy == cycles, ("batched", cfg, img, gw, gcy)
     print("validated: batched sweep reproduces all 24 fixtures image-for-image")
 
+# --- sparse (CSR) sweep cross-check ----------------------------------------
+
+def to_csr(stack, threshold):
+    """Per layer, per input row: the (col, weight) pairs with |w| >=
+    threshold, in column order -- mirroring fixed::SparseWeightStack's keep
+    predicate. Threshold 0 keeps every entry (explicit zeros included);
+    threshold 1 drops exactly the explicit zeros, whose adds are
+    state-neutral, so both must reproduce the dense fixtures bit-for-bit."""
+    assert threshold >= 0
+    return [[[(j, w) for j, w in enumerate(row) if abs(w) >= threshold]
+             for row in layer] for layer in stack]
+
+def validate_sparse():
+    """Anchor the event-driven sparse sweep: all 24 pinned fixture rows
+    reproduced through the CSR walk, at threshold 0 (every entry kept) AND
+    at threshold 1 (explicit zeros dropped -- the smallest real pruning)."""
+    for threshold in (0, 1):
+        stack = fixture_weights_single()
+        scsr = to_csr(stack, threshold)
+        for cfg, img, seed, counts, winner, cycles in SINGLE_CASES:
+            params, mode, row = single_cfg(cfg)
+            got_c, got_w, got_cy = run_core(
+                stack, fixture_image(img), seed, 8, mode, row, [params],
+                csr=scsr)
+            assert got_c[-1] == counts and got_w == winner and got_cy == cycles, \
+                ("sparse", threshold, cfg, img, got_c[-1], got_w, got_cy)
+        dstack = deep_fixture_stack()
+        dcsr = to_csr(dstack, threshold)
+        for cfg, img, seed, hidden, counts, winner, cycles in DEEP_CASES:
+            params, mode = deep_cfg(cfg)
+            got_c, got_w, got_cy = run_core(
+                dstack, fixture_image(img), seed, 8, mode, None,
+                [params, params], csr=dcsr)
+            assert got_c[0] == hidden and got_c[1] == counts, \
+                ("sparse", threshold, cfg, img, got_c)
+            assert got_w == winner and got_cy == cycles, \
+                ("sparse", threshold, cfg, img, got_w, got_cy)
+        hstack = hetero_fixture_stack()
+        hcsr = to_csr(hstack, threshold)
+        for cfg, img, seed, l0, l1, counts, winner, cycles in HETERO_CASES:
+            got_c, got_w, got_cy = run_core(
+                hstack, fixture_image(img), seed, 8, hetero_mode(cfg), None,
+                HETERO_PARAMS, csr=hcsr)
+            assert got_c[0] == l0 and got_c[1] == l1 and got_c[2] == counts, \
+                ("sparse", threshold, cfg, img, got_c)
+            assert got_w == winner and got_cy == cycles, \
+                ("sparse", threshold, cfg, img, got_w, got_cy)
+    print("validated: sparse CSR sweep reproduces all 24 fixtures "
+          "at thresholds 0 and 1")
+
 def hetero():
     stack = hetero_fixture_stack()
     for mode_name, mode in [("hetero", "end"), ("hetero_fire", "imm")]:
@@ -414,4 +477,5 @@ def hetero():
 if __name__ == "__main__":
     validate()
     validate_batch()
+    validate_sparse()
     hetero()

@@ -1,17 +1,18 @@
 #!/usr/bin/env bash
 # Perf-trajectory bench runner: builds the release binary and emits
-# BENCH_6.json (images/sec for the RTL cycle path vs fast path, batched
-# vs per-image engine throughput at batch 1/8/32/64, 1/2/3-layer depth
-# rows with the shared- vs per-layer-v_th calibration accuracy,
-# coordinator qps + p50/p99 at 1/2/4/8 workers over the batched backends,
-# large-batch latency with intra-batch fan-out off vs on, the calibrated
-# fan-out crossover, an open-loop paced-arrival tail-latency row free of
-# coordinated omission, and a fault-injection row measuring goodput and
-# recovery counters under a deterministic mixed fault plan). Pass
-# --quick for a short run.
+# BENCH_7.json (images/sec for the RTL cycle path vs fast path, batched
+# vs per-image engine throughput at batch 1/8/32/64, sparse-vs-dense
+# engine throughput and adds-performed at 100/50/10% weight density for
+# [784,10] and [784,128,10], 1/2/3-layer depth rows with the shared- vs
+# per-layer-v_th calibration accuracy, coordinator qps + p50/p99 at
+# 1/2/4/8 workers over the batched backends, large-batch latency with
+# intra-batch fan-out off vs on, the calibrated fan-out crossover, an
+# open-loop paced-arrival tail-latency row free of coordinated omission,
+# and a fault-injection row measuring goodput and recovery counters
+# under a deterministic mixed fault plan). Pass --quick for a short run.
 #
 #   tools/run_bench.sh [--quick]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 cargo run --release --bin bench-report -- "$@"
-echo "wrote $(pwd)/BENCH_6.json"
+echo "wrote $(pwd)/BENCH_7.json"
