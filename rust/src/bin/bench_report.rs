@@ -19,11 +19,15 @@
 //!   per-layer parameterization acceptance row — plus 3-layer fast-path
 //!   images/sec,
 //!
-//! * **batched vs per-image engine throughput** at batch 1/8/32/64: one
-//!   `RtlCore::run_fast_batch` sweep for the whole batch vs the same
-//!   images through a per-image `run_fast` loop — the row-reuse
-//!   acceptance numbers of the batch-parallel engine PR (coordinator rows
-//!   above run the batched backends end to end),
+//! * **batched vs per-image engine throughput** at batch
+//!   1/8/32/64/128/256: one `RtlCore::run_fast_batch` sweep for the whole
+//!   batch vs the same images through a per-image `run_fast` loop — the
+//!   row-reuse acceptance numbers of the batch-parallel engine PR
+//!   (coordinator rows above run the batched backends end to end). The
+//!   b128/b256 rows run a single multi-word chunk (`BATCH_LANES` = 256),
+//!   so each weight row is fetched once per timestep for the whole batch;
+//!   the report asserts images/s at b128 beats b64 — scaling must not go
+//!   flat past the old one-word lane limit,
 //!
 //! * **paced-arrival (open-loop) tail latency**: a fixed-rate request
 //!   clock with latency measured from each request's *scheduled* arrival,
@@ -46,19 +50,24 @@
 //!   weight density for `[784, 10]` and `[784, 128, 10]` — images/s and
 //!   adds-performed per batch, the acceptance numbers of the event-driven
 //!   sparse engine PR (plus the `density_crossover` constant the pooled
-//!   backend routes by),
+//!   backend routes by), and a `sparse_batched_wide` row: the 10%-density
+//!   `[784, 128, 10]` stack through one 128-lane (two mask words) chunk,
+//!   asserting the CSR speedup survives the neuron-major wide sweep
+//!   (≥ 2× dense at b128),
 //!
-//! and writes the results to `BENCH_7.json` (plus stdout; the emitted
+//! and writes the results to `BENCH_8.json` (plus stdout; the emitted
 //! name is the single `BENCH_NAME` constant). BENCH_1 recorded qps only;
 //! BENCH_2 added the percentile columns; BENCH_3 added the depth rows of
 //! the N-layer refactor; BENCH_4 the per-layer threshold/pruning rows;
 //! BENCH_5 the batched-engine and open-loop rows (EXPERIMENTS.md §Batch);
 //! BENCH_6 the fault-injection rows (EXPERIMENTS.md §Robustness);
-//! BENCH_7 supersedes them with the sparse-vs-dense rows (EXPERIMENTS.md
-//! §Sparse). Note the guarded batch path (`catch_unwind` + typed
-//! replies) is in *every* row since BENCH_6 — its cost shows up as the
-//! BENCH_5 → BENCH_6 delta of the unchanged rows, not as a within-report
-//! column.
+//! BENCH_7 the sparse-vs-dense rows (EXPERIMENTS.md §Sparse); BENCH_8
+//! supersedes them with the wide-lane rows — `batched_engine` extended to
+//! b128/b256 and the `sparse_batched_wide` row of the neuron-major
+//! multi-word engine. Note the guarded batch path (`catch_unwind` +
+//! typed replies) is in *every* row since BENCH_6 — its cost shows up as
+//! the BENCH_5 → BENCH_6 delta of the unchanged rows, not as a
+//! within-report column.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -81,7 +90,7 @@ use snn_rtl::snn::EarlyExit;
 use snn_rtl::SnnConfig;
 
 /// The emitted report name — bump this (one place) when a PR adds rows.
-const BENCH_NAME: &str = "BENCH_7";
+const BENCH_NAME: &str = "BENCH_8";
 
 fn weights(seed: u32) -> WeightMatrix {
     let mut rng = Xorshift32::new(seed);
@@ -426,12 +435,15 @@ fn main() {
 
     // Batched vs per-image engine throughput: one `run_fast_batch` sweep
     // for the whole batch (each weight row walked once per timestep)
-    // against the same images through the per-image fast path.
+    // against the same images through the per-image fast path. b128 and
+    // b256 exercise the multi-word lane masks: one chunk (BATCH_LANES =
+    // 256) serves the whole batch, so each weight row is fetched once per
+    // timestep for 128 / 256 images instead of twice / four times.
     let batch_gen = DigitGen::new(9);
     let mut batched_rows: Vec<(usize, f64, f64)> = Vec::new();
-    for bs in [1usize, 8, 32, 64] {
+    for bs in [1usize, 8, 32, 64, 128, 256] {
         let batch_images: Vec<Image> =
-            (0..bs).map(|i| batch_gen.sample((i % 10) as u8, i)).collect();
+            (0..bs).map(|i| batch_gen.sample((i % 10) as u8, i as u32)).collect();
         let refs: Vec<&Image> = batch_images.iter().collect();
         let mut core = RtlCore::new(cfg.clone(), weights(7)).unwrap();
         let mut round = 0u32;
@@ -459,6 +471,17 @@ fn main() {
         );
         batched_rows.push((bs, batched_ips, per_image_ips));
     }
+    let batched_ips_at = |n: usize| {
+        batched_rows.iter().find(|&&(bs, ..)| bs == n).map(|&(_, ips, _)| ips).unwrap()
+    };
+    assert!(
+        batched_ips_at(128) > batched_ips_at(64),
+        "acceptance: wide-lane scaling — batched images/s at b128 ({:.1}) must beat \
+         b64 ({:.1}); flat scaling past 64 lanes means the multi-word chunk is not \
+         amortizing row fetches",
+        batched_ips_at(128),
+        batched_ips_at(64)
+    );
 
     // Sparse vs dense: the same pruned stack through the dense row sweep
     // and the CSR silence-skipping sweep at 100 / 50 / 10% weight density.
@@ -546,6 +569,46 @@ fn main() {
             sparse_rows.push(row);
         }
     }
+
+    // Wide-lane sparse row: the 10%-density two-layer stack through one
+    // 128-lane chunk — two mask words, every CSR row walked once per
+    // timestep for all 128 lanes. The silence-skipping speedup must
+    // survive the neuron-major wide sweep at the same width.
+    let wide_images: Vec<Image> =
+        (0..128).map(|i| sparse_gen.sample((i % 10) as u8, 1000 + i)).collect();
+    let wide_refs: Vec<&Image> = wide_images.iter().collect();
+    let wide_seeds: Vec<u32> = (1..=wide_refs.len() as u32).collect();
+    let wide_topology = vec![784usize, 128, 10];
+    let wide_cfg = SnnConfig::paper().with_topology(wide_topology.clone()).with_timesteps(10);
+    let wide_pruned = stack_at_density(&wide_topology, 7, 10);
+    let wide_density = wide_pruned.to_csr(1).density();
+    let mut wide_dense_core = RtlCore::new(wide_cfg.clone(), wide_pruned.clone()).unwrap();
+    let wide_dense = bench.run("rtl_dense_784_128_10_d10_b128", || {
+        black_box(
+            wide_dense_core.run_fast_batch(&wide_refs, &wide_seeds, EarlyExit::Off).unwrap(),
+        );
+    });
+    let mut wide_sparse_core = RtlCore::new(wide_cfg, wide_pruned).unwrap();
+    wide_sparse_core.attach_sparse(1);
+    let wide_sparse = bench.run("rtl_sparse_784_128_10_d10_b128", || {
+        black_box(
+            wide_sparse_core
+                .run_fast_batch_sparse(&wide_refs, &wide_seeds, EarlyExit::Off)
+                .unwrap(),
+        );
+    });
+    let wide_dense_ips = wide_dense.throughput(wide_refs.len() as f64);
+    let wide_sparse_ips = wide_sparse.throughput(wide_refs.len() as f64);
+    println!(
+        "sparse_batched_wide_784_128_10_d10_b128: dense {wide_dense_ips:.1} images/s  |  \
+         sparse {wide_sparse_ips:.1} images/s  ({:.2}x, density {wide_density:.3})",
+        wide_sparse_ips / wide_dense_ips
+    );
+    assert!(
+        wide_sparse_ips >= 2.0 * wide_dense_ips,
+        "acceptance: the CSR sweep must stay >= 2x dense through a >64-lane chunk \
+         ({wide_sparse_ips:.1} vs {wide_dense_ips:.1} images/s at b128)"
+    );
 
     // Adaptive fan-out crossover, measured against the (batched) RTL
     // backend: the policy the fixed 32/4 defaults would be replaced by.
@@ -828,6 +891,12 @@ fn main() {
         ));
     }
     json.push_str("  },\n");
+    json.push_str(&format!(
+        "  \"sparse_batched_wide\": {{ \"topology\": \"784_128_10\", \"batch\": 128, \
+         \"density\": {wide_density:.4}, \"dense_images_per_s\": {wide_dense_ips:.2}, \
+         \"sparse_images_per_s\": {wide_sparse_ips:.2}, \"speedup\": {:.3} }},\n",
+        wide_sparse_ips / wide_dense_ips
+    ));
     json.push_str(&format!(
         "  \"calibrated_fanout\": {{ \"min_batch\": {}, \"max_parts\": {} }},\n",
         calibrated.min_batch, calibrated.max_parts

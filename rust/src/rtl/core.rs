@@ -42,10 +42,21 @@ use super::lif_neuron::{LifBatchArray, LifNeuronArray};
 use super::power::{ActivityCounters, EnergyModel, EnergyReport};
 use super::vcd::VcdWriter;
 
-/// Batch lanes one [`RtlCore::run_fast_batch`] sweep multiplexes: the
-/// transposed active masks are single `u64` words, so larger sub-batches
-/// are processed in chunks of this many images.
-pub const BATCH_LANES: usize = 64;
+/// Default lane-chunk width for [`RtlCore::run_fast_batch`]: larger
+/// sub-batches are processed in chunks of this many images. The
+/// transposed active/step-fired masks are **multi-word** bitsets
+/// (`lanes.div_ceil(64)` words per input/neuron), so this is a tuning
+/// knob — 256 lanes keeps a chunk's neuron-major accumulator planes
+/// L2-resident for the paper's topologies — not an architectural
+/// ceiling like the old single-word 64.
+pub const BATCH_LANES: usize = 256;
+
+/// Number of lane chunks [`RtlCore::run_fast_batch`] splits an
+/// `n`-image sub-batch into (observability for sizing tests and the
+/// bench harness).
+pub fn batch_chunks(n: usize) -> usize {
+    n.div_ceil(BATCH_LANES)
+}
 
 /// Result of one inference window on the RTL core.
 #[derive(Debug, Clone, PartialEq)]
@@ -112,6 +123,9 @@ pub struct RtlCore {
     /// CSR twin of `weights` for the event-driven sparse sweeps
     /// ([`RtlCore::attach_sparse`]). `None` until attached.
     sparse: Option<SparseWeightStack>,
+    /// Pooled batched-sweep scratch (masks, planes, gates, encoders) —
+    /// reused across chunks and across `run_fast_batch` calls.
+    batch_scratch: BatchScratch,
     /// Optional waveform sink.
     vcd: Option<VcdWriter>,
 }
@@ -142,6 +156,22 @@ impl RtlCore {
             step_spikes: Vec::new(),
             active_scratch: Vec::with_capacity(cfg.n_inputs()),
             sparse: None,
+            batch_scratch: BatchScratch {
+                encoders: Vec::new(),
+                arrays: (0..n_layers)
+                    .map(|l| LifBatchArray::new(&cfg.layer_config(l), 0))
+                    .collect(),
+                layer_act: vec![Vec::new(); n_layers],
+                step_fired: vec![Vec::new(); n_layers],
+                masks: Vec::new(),
+                gate: Vec::new(),
+                apply: Vec::new(),
+                idx: Vec::new(),
+                fired: Vec::new(),
+                active: Vec::new(),
+                counts: Vec::new(),
+                prune: (0..n_layers).map(|l| cfg.layer_prune(l)).collect(),
+            },
             weights,
             cfg,
             vcd: None,
@@ -679,9 +709,9 @@ impl RtlCore {
     /// in [`RtlCore::total_activity`] stay exact under batching. The
     /// *load-pulse* toggle events (encoder re-seed / accumulator reset
     /// Hamming distances, which are excluded from every window) are
-    /// those of fresh per-lane state, so they can differ from a reused
-    /// sequential core's — they depend on engine reuse history, which
-    /// already varies with pool assignment.
+    /// those of the pooled per-lane encoder state, so they can differ
+    /// from a reused sequential core's — they depend on engine reuse
+    /// history, which already varies with pool assignment.
     ///
     /// Falls back to per-image [`RtlCore::run_fast_early`] when a VCD
     /// sink is attached (waveforms need every clock of one engine).
@@ -773,6 +803,9 @@ impl RtlCore {
         let early = early.clamped_for(&self.cfg);
         let n_layers = self.cfg.n_layers();
         let b_n = images.len();
+        // Lane-mask words for this chunk: sized to the chunk actually
+        // running, so small batches keep single-word masks.
+        let lw = b_n.div_ceil(64).max(1);
         let row_len = match self.cfg.leak_mode {
             LeakMode::PerRow { row_len } => Some(row_len),
             LeakMode::PerTimestep => None,
@@ -780,28 +813,46 @@ impl RtlCore {
         let max_width =
             (0..n_layers).map(|l| self.cfg.layer_output(l)).max().expect("≥1 layer");
 
-        // Per-lane state: encoder + per-image activity and logs. The load
+        // Re-arm the pooled scratch arena for this chunk. Everything here
+        // reuses the buffers of previous chunks/calls (allocation-free in
+        // steady state — pinned by `batch_scratch_is_reused…`); only the
+        // per-lane result logs below are fresh, because they are moved
+        // into each lane's `RtlResult`.
+        let s = &mut self.batch_scratch;
+        while s.encoders.len() < b_n {
+            s.encoders.push(RtlPoissonEncoder::new(n_inputs));
+        }
+        for arr in &mut s.arrays {
+            arr.reset(b_n);
+        }
+        for acts in &mut s.layer_act {
+            acts.clear();
+            acts.resize(b_n, ActivityCounters::default());
+        }
+        for (l, f) in s.step_fired.iter_mut().enumerate() {
+            f.clear();
+            f.resize(self.cfg.layer_output(l) * lw, 0);
+        }
+        s.masks.clear();
+        s.masks.resize(n_inputs * lw, 0);
+        s.gate.clear();
+        s.gate.resize(lw, 0);
+        s.apply.clear();
+        s.apply.resize(lw, 0);
+        s.fired.clear();
+        s.fired.resize(max_width, false);
+        s.active.clear();
+        s.active.extend(0..b_n);
+
+        // Per-lane state: pooled encoder (re-seeded by the load pulse,
+        // exactly like the sequential core's) + per-image logs. The load
         // pulse is recorded separately — the sequential engines snapshot
         // their window *after* `load_image`, so seeding-network events
         // belong to the cumulative totals, not the per-image window.
-        let lanes: Vec<BatchLane> = images
-            .iter()
-            .zip(seeds)
-            .map(|(img, &seed)| {
-                let mut lane = BatchLane {
-                    enc: RtlPoissonEncoder::new(n_inputs),
-                    load_act: ActivityCounters::default(),
-                    enc_act: ActivityCounters::default(),
-                    layer_act: vec![ActivityCounters::default(); n_layers],
-                    membrane_log: Vec::new(),
-                    spike_log: Vec::new(),
-                    step_membranes: Vec::new(),
-                    step_spikes: Vec::new(),
-                };
-                lane.enc.load(&img.pixels, seed, &mut lane.load_act);
-                lane
-            })
-            .collect();
+        let mut lanes: Vec<BatchLane> = (0..b_n).map(|_| BatchLane::default()).collect();
+        for (b, (img, &seed)) in images.iter().zip(seeds).enumerate() {
+            s.encoders[b].load(&img.pixels, seed, &mut lanes[b].load_act);
+        }
 
         let mut run = BatchRun {
             cfg: &self.cfg,
@@ -809,16 +860,9 @@ impl RtlCore {
             sparse,
             k: self.controller.pixels_per_cycle(),
             row_len,
-            prune: (0..n_layers).map(|l| self.cfg.layer_prune(l)).collect(),
-            arrays: (0..n_layers)
-                .map(|l| LifBatchArray::new(&self.cfg.layer_config(l), b_n))
-                .collect(),
+            lw,
             lanes,
-            step_fired: (0..n_layers).map(|l| vec![0u64; self.cfg.layer_output(l)]).collect(),
-            masks: vec![0u64; n_inputs],
-            idx_scratch: Vec::with_capacity(n_inputs),
-            fired_scratch: vec![false; max_width],
-            active: (0..b_n).collect(),
+            s,
         };
 
         for t in 0..self.cfg.timesteps {
@@ -835,8 +879,8 @@ impl RtlCore {
                             (0, Some(r)) => ((n_in - 1) / r + 1) as u64,
                             _ => 1,
                         };
-                        for &b in &run.active {
-                            run.lanes[b].layer_act[l].cycles += integrate_clocks + leak_clocks;
+                        for &b in &run.s.active {
+                            run.s.layer_act[l][b].cycles += integrate_clocks + leak_clocks;
                         }
                     }
                     FireMode::Immediate => run.integrate_immediate(l),
@@ -851,15 +895,17 @@ impl RtlCore {
                     run.retire_confident(margin);
                 }
             }
-            if run.active.is_empty() {
+            if run.s.active.is_empty() {
                 break;
             }
         }
 
-        let BatchRun { lanes, arrays, .. } = run;
+        let BatchRun { lanes, s, .. } = run;
         for (b, lane) in lanes.into_iter().enumerate() {
             let mut window = lane.enc_act;
-            for la in &lane.layer_act {
+            let activity_by_layer: Vec<ActivityCounters> =
+                (0..n_layers).map(|l| s.layer_act[l][b]).collect();
+            for la in &activity_by_layer {
                 window.add(la);
             }
             // Fold the lane into the core's cumulative totals so backend
@@ -868,16 +914,15 @@ impl RtlCore {
             // load-pulse toggle caveat.
             self.enc_act.add(&lane.load_act);
             self.enc_act.add(&lane.enc_act);
-            for (l, la) in lane.layer_act.iter().enumerate() {
+            for (l, la) in activity_by_layer.iter().enumerate() {
                 self.layer_act[l].add(la);
             }
             self.cycle_no += window.cycles;
 
-            let activity_by_layer = lane.layer_act;
             let energy = self.energy_model.evaluate(&window);
             let energy_by_layer = self.energy_model.evaluate_layers(&activity_by_layer);
             let spike_counts_by_layer: Vec<Vec<u32>> =
-                arrays.iter().map(|a| a.spike_counts(b).to_vec()).collect();
+                s.arrays.iter().map(|a| a.spike_counts(b)).collect();
             let spike_counts =
                 spike_counts_by_layer.last().cloned().expect("core has at least one layer");
             out.push(RtlResult {
@@ -1036,28 +1081,105 @@ impl RtlCore {
     pub fn layer_activity(&self) -> &[ActivityCounters] {
         &self.layer_act
     }
+
+    /// Test-only fingerprint of the batched-sweep scratch arena: the
+    /// `(pointer, capacity)` pair of every pooled buffer. Two equal
+    /// fingerprints across `run_fast_batch` calls prove the hot loop
+    /// re-used its scratch in place instead of re-allocating (the alloc-
+    /// free pin mirroring the PR 4 `top2` fix).
+    #[cfg(test)]
+    pub(crate) fn batch_scratch_fingerprint(&self) -> Vec<(usize, usize)> {
+        fn fp<T>(v: &Vec<T>) -> (usize, usize) {
+            (v.as_ptr() as usize, v.capacity())
+        }
+        let s = &self.batch_scratch;
+        let mut out = vec![
+            fp(&s.encoders),
+            fp(&s.masks),
+            fp(&s.gate),
+            fp(&s.apply),
+            fp(&s.idx),
+            fp(&s.fired),
+            fp(&s.active),
+            fp(&s.counts),
+        ];
+        out.extend(s.step_fired.iter().map(fp));
+        out.extend(s.layer_act.iter().map(fp));
+        out.extend(s.arrays.iter().flat_map(|a| a.plane_fingerprint()));
+        out
+    }
 }
 
-/// Per-image state of one batched sweep lane: its private encoder,
-/// activity buckets and per-step logs.
+/// Per-image state of one batched sweep lane: its activity buckets and
+/// per-step logs. The lane's encoder lives in the pooled
+/// [`BatchScratch`]; the logs stay here because they are moved into the
+/// lane's [`RtlResult`].
+#[derive(Default)]
 struct BatchLane {
-    enc: RtlPoissonEncoder,
     /// Load-pulse events (seeding network): folded into the core's
     /// cumulative totals, excluded from the per-image window — the
     /// sequential engines snapshot their window *after* `load_image`.
     load_act: ActivityCounters,
     enc_act: ActivityCounters,
-    layer_act: Vec<ActivityCounters>,
     membrane_log: Vec<Vec<i32>>,
     spike_log: Vec<Vec<bool>>,
     step_membranes: Vec<i32>,
     step_spikes: Vec<bool>,
 }
 
+/// Reusable batched-sweep scratch, hoisted onto the pooled core so mask
+/// words, accumulator planes, counter planes and encoders are armed in
+/// place across chunks *and* across `run_fast_batch` calls instead of
+/// reallocated per chunk (the PR 4 `top2` fix, applied to the whole
+/// batch engine). Per-lane result logs are the one exception — they are
+/// moved into each `RtlResult`, so `BatchLane` keeps them.
+///
+/// Every lane mask in here is multi-word: `lw = lanes.div_ceil(64)`
+/// words per neuron/pixel, lane `b` at word `b / 64`, bit `b % 64` —
+/// the same word-walk idiom as `LifBatchArray`'s per-neuron enable mask.
+struct BatchScratch {
+    /// Pooled per-lane encoders, grown on demand and fully re-seeded by
+    /// each chunk's load pulse (only the load-pulse *toggle counts*
+    /// depend on prior contents; those are excluded from result windows).
+    encoders: Vec<RtlPoissonEncoder>,
+    /// Per-layer neuron-major accumulator/spike planes, re-armed via
+    /// `reset(lanes)`.
+    arrays: Vec<LifBatchArray>,
+    /// Per-layer, per-lane activity buckets: `layer_act[l][b]`. Lives
+    /// here (not in `BatchLane`) so a wide sweep can borrow one layer's
+    /// whole counter plane alongside the lane masks.
+    layer_act: Vec<Vec<ActivityCounters>>,
+    /// Per-layer transposed fire masks for the current timestep:
+    /// `step_fired[l][j * lw + b / 64]` bit `b % 64` = lane `b`'s neuron
+    /// `j` fired this step — the inter-layer hand-off register,
+    /// batch-wide. Cleared at the end of each timestep like the
+    /// controller's accumulator.
+    step_fired: Vec<Vec<u64>>,
+    /// Layer-0 transposed input masks, `masks[p * lw + wb]` (rebuilt per
+    /// segment/group from the per-lane encoder draws).
+    masks: Vec<u64>,
+    /// BRAM gate over lanes (`lw` words), hoisted per walk/group.
+    gate: Vec<u64>,
+    /// Per-row apply mask (`lw` words): `src & gate`.
+    apply: Vec<u64>,
+    /// Per-lane encoder spike-index scratch.
+    idx: Vec<u32>,
+    /// Per-lane fire-pattern scratch (sized to the widest layer).
+    fired: Vec<bool>,
+    /// Lanes still running, in submission order. Early exit compacts this
+    /// list; retired lanes drop out of every subsequent sweep.
+    active: Vec<usize>,
+    /// Final-layer spike-count gather scratch for the retire predicate.
+    counts: Vec<u32>,
+    /// Per-layer resolved pruning policy (mirrors the controller's).
+    prune: Vec<PruneMode>,
+}
+
 /// One in-flight batched sweep: the transposed-mask schedule walker
 /// behind [`RtlCore::run_fast_batch`]. Field-disjoint from the core's
 /// single-image state — a batch run never disturbs `RtlCore::neurons` or
-/// the controller registers.
+/// the controller registers. All planes/masks live in the borrowed
+/// [`BatchScratch`] arena.
 struct BatchRun<'a> {
     cfg: &'a SnnConfig,
     weights: &'a WeightStack,
@@ -1066,40 +1188,26 @@ struct BatchRun<'a> {
     sparse: Option<&'a SparseWeightStack>,
     k: usize,
     row_len: Option<usize>,
-    /// Per-layer resolved pruning policy (mirrors the controller's).
-    prune: Vec<PruneMode>,
-    arrays: Vec<LifBatchArray>,
+    /// Lane-mask words for this chunk: `chunk_lanes.div_ceil(64)`.
+    lw: usize,
     lanes: Vec<BatchLane>,
-    /// Per-layer transposed fire masks for the current timestep:
-    /// `step_fired[l][j]` bit `b` = lane `b`'s neuron `j` fired this step
-    /// — the inter-layer hand-off register, batch-wide. Cleared at the
-    /// end of each timestep like the controller's accumulator.
-    step_fired: Vec<Vec<u64>>,
-    /// Layer-0 transposed input masks (rebuilt per segment/group from the
-    /// per-lane encoder draws).
-    masks: Vec<u64>,
-    /// Per-lane encoder spike-index scratch.
-    idx_scratch: Vec<u32>,
-    /// Per-lane fire-pattern scratch (sized to the widest layer).
-    fired_scratch: Vec<bool>,
-    /// Lanes still running, in submission order. Early exit compacts this
-    /// list; retired lanes drop out of every subsequent sweep.
-    active: Vec<usize>,
+    s: &'a mut BatchScratch,
 }
 
 impl BatchRun<'_> {
-    /// Per-lane BRAM gate as a bitmask over lanes. Under `EndOfStep`
-    /// firing enables cannot change mid-walk, so the caller hoists this
-    /// out of the walk exactly like the sequential engine; `Immediate`
-    /// recomputes it per integrate group.
-    fn bram_gate(&self, l: usize) -> u64 {
-        let mut gate = 0u64;
-        for &b in &self.active {
-            if self.arrays[l].any_enabled(b) {
-                gate |= 1 << b;
+    /// Per-lane BRAM gate as a multi-word bitmask over lanes, written
+    /// into the scratch `gate` words. Under `EndOfStep` firing enables
+    /// cannot change mid-walk, so the caller hoists this out of the walk
+    /// exactly like the sequential engine; `Immediate` recomputes it per
+    /// integrate group.
+    fn bram_gate(&mut self, l: usize) {
+        self.s.gate.fill(0);
+        for i in 0..self.s.active.len() {
+            let b = self.s.active[i];
+            if self.s.arrays[l].any_enabled(b) {
+                self.s.gate[b / 64] |= 1 << (b % 64);
             }
         }
-        gate
     }
 
     /// Draw every active lane's Poisson comparators for input range
@@ -1107,61 +1215,71 @@ impl BatchRun<'_> {
     /// advances exactly as its sequential window would — retired lanes
     /// draw nothing.
     fn draw_layer0(&mut self, start: usize, end: usize) {
-        self.masks[start..end].fill(0);
-        for &b in &self.active {
+        let lw = self.lw;
+        self.s.masks[start * lw..end * lw].fill(0);
+        for i in 0..self.s.active.len() {
+            let b = self.s.active[i];
             let lane = &mut self.lanes[b];
-            self.idx_scratch.clear();
-            lane.enc.tick_range_into(start, end, &mut self.idx_scratch, &mut lane.enc_act);
-            for &p in &self.idx_scratch {
-                self.masks[p as usize] |= 1 << b;
+            self.s.idx.clear();
+            self.s.encoders[b].tick_range_into(start, end, &mut self.s.idx, &mut lane.enc_act);
+            for &p in &self.s.idx {
+                self.s.masks[p as usize * lw + b / 64] |= 1 << (b % 64);
             }
         }
     }
 
     /// The row-reuse inner loop: for each input of `start..end`, fetch
     /// its weight row **once** and integrate it into every gated lane
-    /// whose input fired. Ascending `p` preserves each lane's sequential
-    /// row order; per-lane BRAM reads and adder activity land in that
-    /// lane's own counters.
-    fn apply_rows(&mut self, l: usize, start: usize, end: usize, gate: u64) {
-        if let Some(sp) = self.sparse {
-            // CSR arm: a fully pruned row skips its fetch for the whole
-            // batch; retained entries run the same per-add arithmetic.
-            let layer = sp.layer(l);
-            for p in start..end {
-                let src = if l == 0 { self.masks[p] } else { self.step_fired[l - 1][p] };
-                let mut m = src & gate;
-                if m == 0 {
-                    continue;
-                }
-                let (cols, vals) = layer.row(p);
+    /// whose input fired via one neuron-major wide sweep
+    /// (`add_row_lanes` / `add_sparse_lanes`). Ascending `p` preserves
+    /// each lane's sequential row order; per-lane BRAM reads and adder
+    /// activity land in that lane's own counters.
+    fn apply_rows(&mut self, l: usize, start: usize, end: usize) {
+        let lw = self.lw;
+        for p in start..end {
+            let src = if l == 0 {
+                &self.s.masks[p * lw..(p + 1) * lw]
+            } else {
+                &self.s.step_fired[l - 1][p * lw..(p + 1) * lw]
+            };
+            let mut any = 0u64;
+            for wb in 0..lw {
+                let m = src[wb] & self.s.gate[wb];
+                self.s.apply[wb] = m;
+                any |= m;
+            }
+            if any == 0 {
+                continue;
+            }
+            if let Some(sp) = self.sparse {
+                // CSR arm: a fully pruned row skips its fetch for the
+                // whole batch; retained entries run the same per-add
+                // arithmetic across all applied lanes.
+                let (cols, vals) = sp.layer(l).row(p);
                 if cols.is_empty() {
                     continue;
                 }
-                while m != 0 {
-                    let b = m.trailing_zeros() as usize;
-                    m &= m - 1;
-                    let act = &mut self.lanes[b].layer_act[l];
-                    act.bram_reads += 1;
-                    self.arrays[l].add_row_sparse(b, cols, vals, act);
+                for wb in 0..lw {
+                    let mut m = self.s.apply[wb];
+                    while m != 0 {
+                        let b = wb * 64 + m.trailing_zeros() as usize;
+                        m &= m - 1;
+                        self.s.layer_act[l][b].bram_reads += 1;
+                    }
                 }
-            }
-            return;
-        }
-        let weights = self.weights.layer(l);
-        for p in start..end {
-            let src = if l == 0 { self.masks[p] } else { self.step_fired[l - 1][p] };
-            let mut m = src & gate;
-            if m == 0 {
-                continue;
-            }
-            let row = weights.row(p);
-            while m != 0 {
-                let b = m.trailing_zeros() as usize;
-                m &= m - 1;
-                let act = &mut self.lanes[b].layer_act[l];
-                act.bram_reads += 1;
-                self.arrays[l].add_row(b, row, act);
+                let acts = &mut self.s.layer_act[l];
+                self.s.arrays[l].add_sparse_lanes(&self.s.apply, cols, vals, acts);
+            } else {
+                let row = self.weights.layer(l).row(p);
+                for wb in 0..lw {
+                    let mut m = self.s.apply[wb];
+                    while m != 0 {
+                        let b = wb * 64 + m.trailing_zeros() as usize;
+                        m &= m - 1;
+                        self.s.layer_act[l][b].bram_reads += 1;
+                    }
+                }
+                self.s.arrays[l].add_row_lanes(&self.s.apply, row, &mut self.s.layer_act[l]);
             }
         }
     }
@@ -1173,16 +1291,18 @@ impl BatchRun<'_> {
     fn integrate_end_of_step(&mut self, l: usize) {
         let n_in = self.cfg.layer_input(l);
         let seg = if l == 0 { self.row_len.unwrap_or(n_in) } else { n_in };
-        let gate = self.bram_gate(l);
+        self.bram_gate(l);
         let mut start = 0usize;
         while start < n_in {
             let end = (start + seg).min(n_in);
             if l == 0 {
                 self.draw_layer0(start, end);
             }
-            self.apply_rows(l, start, end, gate);
-            for &b in &self.active {
-                self.arrays[l].leak_enabled(b, &mut self.lanes[b].layer_act[l]);
+            self.apply_rows(l, start, end);
+            for i in 0..self.s.active.len() {
+                let b = self.s.active[i];
+                let (arrays, acts) = (&mut self.s.arrays, &mut self.s.layer_act);
+                arrays[l].leak_enabled(b, &mut acts[l][b]);
             }
             start = end;
         }
@@ -1195,36 +1315,39 @@ impl BatchRun<'_> {
     /// row boundaries (layer 0) and at the end of the walk.
     fn integrate_immediate(&mut self, l: usize) {
         let n_in = self.cfg.layer_input(l);
-        let width = self.arrays[l].width();
+        let width = self.s.arrays[l].width();
+        let lw = self.lw;
         let mut pixel = 0usize;
         while pixel < n_in {
             let end = (pixel + self.k).min(n_in);
-            let gate = self.bram_gate(l);
+            self.bram_gate(l);
             if l == 0 {
                 self.draw_layer0(pixel, end);
             }
-            self.apply_rows(l, pixel, end, gate);
-            for &b in &self.active {
-                self.lanes[b].layer_act[l].cycles += 1; // the Integrate clock
-                let fired = &mut self.fired_scratch[..width];
+            self.apply_rows(l, pixel, end);
+            for i in 0..self.s.active.len() {
+                let b = self.s.active[i];
+                self.s.layer_act[l][b].cycles += 1; // the Integrate clock
+                let fired = &mut self.s.fired[..width];
                 fired.fill(false);
-                let any =
-                    self.arrays[l].immediate_fire(b, fired, &mut self.lanes[b].layer_act[l]);
+                let any = self.s.arrays[l].immediate_fire(b, fired, &mut self.s.layer_act[l][b]);
                 if any {
                     for (j, &f) in fired.iter().enumerate() {
                         if f {
-                            self.step_fired[l][j] |= 1 << b;
+                            self.s.step_fired[l][j * lw + b / 64] |= 1 << (b % 64);
                         }
                     }
-                    self.arrays[l].latch_prune(b, self.prune[l]);
+                    self.s.arrays[l].latch_prune(b, self.s.prune[l]);
                 }
             }
             pixel = end;
             let row_boundary = l == 0 && self.row_len.is_some_and(|r| pixel % r == 0);
             if pixel == n_in || row_boundary {
-                for &b in &self.active {
-                    let act = &mut self.lanes[b].layer_act[l];
-                    self.arrays[l].leak_enabled(b, act);
+                for i in 0..self.s.active.len() {
+                    let b = self.s.active[i];
+                    let (arrays, acts) = (&mut self.s.arrays, &mut self.s.layer_act);
+                    let act = &mut acts[l][b];
+                    arrays[l].leak_enabled(b, act);
                     act.cycles += 1; // the Leak clock
                 }
             }
@@ -1235,47 +1358,59 @@ impl BatchRun<'_> {
     /// (`EndOfStep` only), fire-mask latch into the inter-layer hand-off,
     /// pruning-mask update, per-step snapshots and the clock itself.
     fn fire_clock(&mut self, l: usize) {
-        let width = self.arrays[l].width();
+        let width = self.s.arrays[l].width();
+        let lw = self.lw;
         let end_of_step = self.cfg.fire_mode == FireMode::EndOfStep;
-        for &b in &self.active {
-            let fired = &mut self.fired_scratch[..width];
+        for i in 0..self.s.active.len() {
+            let b = self.s.active[i];
+            let fired = &mut self.s.fired[..width];
             fired.fill(false);
             if end_of_step {
-                self.arrays[l].fire_check(b, fired, &mut self.lanes[b].layer_act[l]);
+                self.s.arrays[l].fire_check(b, fired, &mut self.s.layer_act[l][b]);
             }
             for (j, &f) in fired.iter().enumerate() {
                 if f {
-                    self.step_fired[l][j] |= 1 << b;
+                    self.s.step_fired[l][j * lw + b / 64] |= 1 << (b % 64);
                 }
             }
-            self.arrays[l].latch_prune(b, self.prune[l]);
+            self.s.arrays[l].latch_prune(b, self.s.prune[l]);
             let lane = &mut self.lanes[b];
-            lane.step_membranes.extend_from_slice(self.arrays[l].accs(b));
-            lane.step_spikes.extend_from_slice(fired);
-            lane.layer_act[l].cycles += 1;
+            self.s.arrays[l].extend_accs(b, &mut lane.step_membranes);
+            lane.step_spikes.extend_from_slice(&self.s.fired[..width]);
+            self.s.layer_act[l][b].cycles += 1;
         }
     }
 
     /// End-of-timestep edge: push every active lane's per-step snapshot
     /// and clear the batch-wide fire accumulators.
     fn close_timestep(&mut self) {
-        for &b in &self.active {
+        for &b in &self.s.active {
             let lane = &mut self.lanes[b];
             lane.membrane_log.push(std::mem::take(&mut lane.step_membranes));
             lane.spike_log.push(std::mem::take(&mut lane.step_spikes));
         }
-        for f in &mut self.step_fired {
+        for f in &mut self.s.step_fired {
             f.fill(0);
         }
     }
 
     /// Batch compaction: retire every lane whose final-layer margin is
     /// reached from the active list (submission order preserved for the
-    /// survivors).
+    /// survivors; the spike counts are gathered from the strided plane
+    /// into the `counts` scratch).
     fn retire_confident(&mut self, margin: u32) {
-        let arrays = &self.arrays;
-        let last = arrays.len() - 1;
-        self.active.retain(|&b| !margin_reached(arrays[last].spike_counts(b), margin));
+        let last = self.s.arrays.len() - 1;
+        let mut kept = 0usize;
+        for i in 0..self.s.active.len() {
+            let b = self.s.active[i];
+            self.s.counts.clear();
+            self.s.arrays[last].extend_spike_counts(b, &mut self.s.counts);
+            if !margin_reached(&self.s.counts, margin) {
+                self.s.active[kept] = b;
+                kept += 1;
+            }
+        }
+        self.s.active.truncate(kept);
     }
 }
 
@@ -1853,6 +1988,13 @@ mod tests {
 
     #[test]
     fn batch_chunks_past_64_lanes_and_rejects_seed_mismatch() {
+        // 70 lanes crossed the old single-word 64-lane ceiling; at the
+        // widened default it must run as ONE multi-word chunk, not two.
+        assert_eq!(BATCH_LANES, 256);
+        assert_eq!(batch_chunks(0), 0);
+        assert_eq!(batch_chunks(70), 1);
+        assert_eq!(batch_chunks(256), 1);
+        assert_eq!(batch_chunks(257), 2);
         let cfg = SnnConfig::paper().with_timesteps(1);
         let w = test_weights(3);
         let gen = DigitGen::new(5);
@@ -1869,6 +2011,139 @@ mod tests {
             assert_eq!(r, &seq.run_fast(&images[i], seeds[i]).unwrap(), "lane {i}");
         }
         assert_eq!(core.run_fast_batch(&[], &[], EarlyExit::Off).unwrap().len(), 0);
+    }
+
+    /// Single-chunk widths 65/128/256 — one word past the boundary, two
+    /// full words, and the full default — bit-exact lane-for-lane with
+    /// the sequential engine across depths 1–3, both fire modes and
+    /// early exit (multi-word step-fired hand-off + lane compaction),
+    /// dense and CSR sweeps.
+    #[test]
+    fn wide_chunk_widths_match_sequential() {
+        let topologies: [&[usize]; 3] = [&[784, 10], &[784, 17, 10], &[784, 14, 12, 10]];
+        for (wi, &width) in [65usize, 128, 256].iter().enumerate() {
+            assert_eq!(batch_chunks(width), 1, "width {width} must be one chunk");
+            let topology = topologies[wi];
+            let mut cfg = SnnConfig::paper()
+                .with_topology(topology.to_vec())
+                .with_timesteps(2)
+                .with_v_th(120);
+            if wi == 1 {
+                cfg = cfg.with_fire_mode(FireMode::Immediate);
+            }
+            let early = if wi == 2 {
+                EarlyExit::Margin { margin: 2, min_steps: 1 }
+            } else {
+                EarlyExit::Off
+            };
+            let w = test_stack(topology, 11 + wi as u32);
+            let gen = DigitGen::new(6 + wi as u64);
+            let images: Vec<crate::data::Image> =
+                (0..width).map(|i| gen.sample((i % 10) as u8, i as u64)).collect();
+            let refs: Vec<&crate::data::Image> = images.iter().collect();
+            let seeds: Vec<u32> = (0..width).map(|i| 100 + i as u32).collect();
+
+            let mut core = RtlCore::new(cfg.clone(), w.clone()).unwrap();
+            let got = core.run_fast_batch(&refs, &seeds, early).unwrap();
+            assert_eq!(got.len(), width);
+            let mut seq = RtlCore::new(cfg.clone(), w.clone()).unwrap();
+            for (i, r) in got.iter().enumerate() {
+                let want = seq.run_fast_early(&images[i], seeds[i], early).unwrap();
+                assert_eq!(r, &want, "width {width} lane {i} diverges");
+            }
+            assert_eq!(
+                core.total_activity().cycles,
+                seq.total_activity().cycles,
+                "width {width}: cumulative cycles diverge"
+            );
+
+            if wi <= 1 {
+                // The CSR sweep through the same wide chunk.
+                let mut sc = RtlCore::new(cfg.clone(), w.clone()).unwrap();
+                sc.attach_sparse(15);
+                let sparse = sc.run_fast_batch_sparse(&refs, &seeds, early).unwrap();
+                let mut ss = RtlCore::new(cfg, w).unwrap();
+                ss.attach_sparse(15);
+                for (i, r) in sparse.iter().enumerate() {
+                    let want = ss.run_fast_sparse_early(&images[i], seeds[i], early).unwrap();
+                    assert_eq!(r, &want, "width {width} sparse lane {i} diverges");
+                }
+            }
+        }
+    }
+
+    /// Early-exit compaction when the retiring lanes straddle a mask-word
+    /// boundary (lanes 63, 64, 65 of a 67-lane chunk): the confident
+    /// lanes must retire without perturbing any word-neighbour.
+    #[test]
+    fn early_exit_compaction_across_lane_word_boundary() {
+        let cfg = SnnConfig::paper().with_timesteps(12).with_prune(PruneMode::Off);
+        let mut w = vec![0i32; 7840];
+        for i in 0..784 {
+            if i / 79 == 4 {
+                w[i * 10 + 4] = 40;
+            }
+        }
+        let w = WeightMatrix::from_rows(784, 10, 9, w).unwrap();
+        let mut px = vec![0u8; 784];
+        for (i, p) in px.iter_mut().enumerate() {
+            if i / 79 == 4 {
+                *p = 250;
+            }
+        }
+        let img_a = crate::data::Image { label: 4, pixels: px };
+        let img_b = crate::data::Image { label: 0, pixels: vec![0; 784] };
+        let early = EarlyExit::Margin { margin: 2, min_steps: 2 };
+
+        // 67 lanes: the hot image (early-confident) sits exactly on the
+        // word boundary — last bit of word 0, first two bits of word 1.
+        let lanes = 67usize;
+        let hot = [63usize, 64, 65];
+        let images: Vec<&crate::data::Image> =
+            (0..lanes).map(|b| if hot.contains(&b) { &img_a } else { &img_b }).collect();
+        let seeds: Vec<u32> = (0..lanes).map(|b| 7 + b as u32).collect();
+
+        let mut core = RtlCore::new(cfg.clone(), w.clone()).unwrap();
+        let batch = core.run_fast_batch(&images, &seeds, early).unwrap();
+        for &b in &hot {
+            let steps = batch[b].membrane_by_step.len();
+            assert!((2..12).contains(&steps), "hot lane {b} must exit early, ran {steps}");
+        }
+        assert_eq!(batch[62].membrane_by_step.len(), 12, "lane 62 must run the full window");
+        assert_eq!(batch[66].membrane_by_step.len(), 12, "lane 66 must run the full window");
+        let mut seq = RtlCore::new(cfg, w).unwrap();
+        for b in 0..lanes {
+            let want = seq.run_fast_early(images[b], seeds[b], early).unwrap();
+            assert_eq!(batch[b], want, "lane {b} perturbed by boundary retirement");
+        }
+    }
+
+    /// The batched sweep's scratch arena (masks, gates, counter planes,
+    /// state planes, encoders) must be re-used in place across chunks and
+    /// across calls — the alloc-free hot-loop pin mirroring the PR 4
+    /// `top2` fix.
+    #[test]
+    fn batch_scratch_is_reused_across_chunks_and_calls() {
+        let cfg = SnnConfig::paper().with_timesteps(2);
+        let w = test_weights(5);
+        let gen = DigitGen::new(9);
+        let images: Vec<crate::data::Image> =
+            (0..20).map(|i| gen.sample((i % 10) as u8, i)).collect();
+        let refs: Vec<&crate::data::Image> = images.iter().collect();
+        let seeds: Vec<u32> = (0..20).map(|i| 60 + i as u32).collect();
+        let early = EarlyExit::Margin { margin: 30, min_steps: 1 };
+
+        let mut core = RtlCore::new(cfg, w).unwrap();
+        // Warm-up arms every pooled buffer (including the early-exit
+        // gather scratch); after it the arena must be pointer-stable.
+        let first = core.run_fast_batch(&refs, &seeds, early).unwrap();
+        let fp = core.batch_scratch_fingerprint();
+        let second = core.run_fast_batch(&refs, &seeds, early).unwrap();
+        assert_eq!(fp, core.batch_scratch_fingerprint(), "scratch re-allocated on 2nd call");
+        let third = core.run_fast_batch(&refs, &seeds, early).unwrap();
+        assert_eq!(fp, core.batch_scratch_fingerprint(), "scratch re-allocated on 3rd call");
+        assert_eq!(first, second, "pooled scratch leaked state across calls");
+        assert_eq!(first, third);
     }
 
     #[test]

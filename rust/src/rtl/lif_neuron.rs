@@ -18,19 +18,18 @@
 //!   one array per layer of the topology: the per-cycle inner loops walk
 //!   contiguous memory and skip disabled neurons by bit iteration instead
 //!   of dispatching through an object array.
-//! * [`LifBatchArray`] — one layer × a whole sub-batch: per-image
-//!   accumulator/spike-count planes plus one enable bitmask per batch
-//!   lane, addressed `plane[b * width + j]`. This is the state behind
-//!   [`crate::rtl::RtlCore::run_fast_batch`], where one weight-row fetch
-//!   is applied to every batch image whose input fired.
+//! * [`LifBatchArray`] — one layer × a whole sub-batch: **neuron-major**
+//!   accumulator/spike-count planes addressed `plane[j * lanes + b]` plus
+//!   a transposed per-neuron lane-enable bitmask, so one weight fetch is
+//!   applied to every gated batch lane as a contiguous sweep. This is the
+//!   state behind [`crate::rtl::RtlCore::run_fast_batch`].
 //!
-//! The single-image array and the batch array run the *same* lane-level
-//! datapath primitives (`lane_add_row` / `lane_leak` / `lane_fire_check` /
-//! `lane_immediate_fire` below) — the wrappers differ only in plane
-//! addressing, so the arithmetic (per-add saturation, Hamming-distance
-//! toggle accounting, enable gating) cannot drift between the sequential
-//! and the batched engines. All three representations are proven state-
-//! and activity-equivalent by the property tests below.
+//! The single-image array and the batch array share one saturating-add
+//! kernel ([`sat_add`]) and one toggle-accounting write, so the
+//! arithmetic (per-add saturation, Hamming-distance toggle accounting,
+//! enable gating) cannot drift between the sequential and the batched
+//! engines regardless of plane layout. All three representations are
+//! proven state- and activity-equivalent by the property tests below.
 
 use crate::config::{PruneMode, SnnConfig};
 use crate::fixed::leak;
@@ -199,6 +198,18 @@ fn write_acc_at(acc: &mut [i32], j: usize, next: i32, act: &mut ActivityCounters
     acc[j] = next;
 }
 
+/// The saturating adder: `acc + w` clamped to `±acc_max`. Returns the
+/// clamped value and whether the clamp engaged. Every integrate path —
+/// sequential lane primitives and the batched neuron-major sweeps —
+/// funnels through this one kernel so the arithmetic cannot drift
+/// between plane layouts.
+#[inline(always)]
+fn sat_add(acc: i32, w: i32, acc_max: i32) -> (i32, bool) {
+    let sum = i64::from(acc) + i64::from(w);
+    let clamped = sum.clamp(-i64::from(acc_max), i64::from(acc_max)) as i32;
+    (clamped, i64::from(clamped) != sum)
+}
+
 /// One BRAM row pulse over one lane: integrate `row[j]` into every
 /// *enabled* neuron with per-add saturation (ascending `j`, like the
 /// adder-tree fanout).
@@ -216,9 +227,8 @@ fn lane_add_row(
         while m != 0 {
             let j = wi * 64 + m.trailing_zeros() as usize;
             m &= m - 1;
-            let sum = i64::from(acc[j]) + i64::from(row[j]);
-            let clamped = sum.clamp(-i64::from(p.acc_max), i64::from(p.acc_max)) as i32;
-            if i64::from(clamped) != sum {
+            let (clamped, saturated) = sat_add(acc[j], row[j], p.acc_max);
+            if saturated {
                 act.saturations += 1;
             }
             act.adds += 1;
@@ -251,9 +261,8 @@ fn lane_add_sparse(
         if (enabled[j / 64] >> (j % 64)) & 1 == 0 {
             continue;
         }
-        let sum = i64::from(acc[j]) + i64::from(w);
-        let clamped = sum.clamp(-i64::from(p.acc_max), i64::from(p.acc_max)) as i32;
-        if i64::from(clamped) != sum {
+        let (clamped, saturated) = sat_add(acc[j], w, p.acc_max);
+        if saturated {
             act.saturations += 1;
         }
         act.adds += 1;
@@ -503,30 +512,40 @@ impl LifNeuronArray {
 
 // ---------------------------------------------------------------------------
 
-/// One layer × a whole sub-batch: per-image accumulator, spike-count and
-/// enable planes over one shared calibration, addressed
-/// `plane[b * width + j]` (lane-major, so each image's neuron state stays
-/// contiguous for the row-apply inner loop).
+/// One layer × a whole sub-batch, **neuron-major**: accumulator and
+/// spike-count planes addressed `plane[j * lanes + b]`, so all lanes'
+/// copies of neuron `j` sit contiguously. Enables are transposed the
+/// same way: per neuron `j`, a multi-word *lane* mask
+/// (`enabled[j * lane_words + b/64]`, bit `b % 64` = lane `b` enabled),
+/// built with the same word-walk idiom the per-neuron enable mask uses
+/// for >64-neuron layers.
 ///
 /// This is the state behind [`crate::rtl::RtlCore::run_fast_batch`]: the
-/// batched engine walks each weight row **once** per timestep and calls
-/// [`LifBatchArray::add_row`] for every lane whose input fired, so the
-/// row fetch is amortized over the batch while each lane's arithmetic —
-/// the shared lane primitives above — stays bit-identical to a private
+/// batched engine walks each weight row **once** per timestep and hands
+/// the row plus a fired-lane mask to [`LifBatchArray::add_row_lanes`] /
+/// [`LifBatchArray::add_sparse_lanes`], which apply each visited weight
+/// to every gated lane as one contiguous sweep over `plane[j*lanes ..]`.
+/// Per lane the visit order (ascending `j`, ascending CSR column) and
+/// the arithmetic (the shared [`sat_add`] kernel plus Hamming-distance
+/// toggle accounting) are exactly the sequential lane primitives', so
+/// each lane stays bit- and activity-identical to a private
 /// [`LifNeuronArray`] (pinned by `batch_array_matches_single_arrays`).
 ///
 /// Pruning lives here too ([`LifBatchArray::latch_prune`]): a lane's
-/// enable plane is driven from its own spike counts exactly like the
+/// enable bits are driven from its own spike counts exactly like the
 /// controller's mask update, so per-image gating never couples lanes.
 #[derive(Debug, Clone)]
 pub struct LifBatchArray {
     /// Neurons per lane (the layer width).
     n: usize,
-    /// Enable mask words per lane.
-    words: usize,
+    /// Lane-mask words per neuron (`lanes.div_ceil(64)`, min 1).
+    lane_words: usize,
     lanes: usize,
+    /// Neuron-major membrane plane: `acc[j * lanes + b]`.
     acc: Vec<i32>,
+    /// Neuron-major spike-count plane: `spike_count[j * lanes + b]`.
     spike_count: Vec<u32>,
+    /// Transposed enables: `enabled[j * lane_words + b/64]` bit `b % 64`.
     enabled: Vec<u64>,
     params: LaneParams,
 }
@@ -537,21 +556,36 @@ impl LifBatchArray {
     /// [`crate::SnnConfig::layer_config`]). Every lane starts reset:
     /// `v_rest` accumulators, zero counts, fully enabled.
     pub fn new(cfg: &SnnConfig, lanes: usize) -> Self {
-        let n = cfg.n_outputs();
-        let words = n.div_ceil(64).max(1);
-        let lane_mask = full_mask_words(n);
-        let mut enabled = Vec::with_capacity(words * lanes);
-        for _ in 0..lanes {
-            enabled.extend_from_slice(&lane_mask);
-        }
-        LifBatchArray {
-            n,
-            words,
-            lanes,
-            acc: vec![cfg.v_rest; n * lanes],
-            spike_count: vec![0; n * lanes],
-            enabled,
+        let mut arr = LifBatchArray {
+            n: cfg.n_outputs(),
+            lane_words: 1,
+            lanes: 0,
+            acc: Vec::new(),
+            spike_count: Vec::new(),
+            enabled: Vec::new(),
             params: LaneParams::from_cfg(cfg),
+        };
+        arr.reset(lanes);
+        arr
+    }
+
+    /// Re-arm the array for a fresh chunk of `lanes` images: `v_rest`
+    /// accumulators, zero counts, fully enabled. Reuses the existing
+    /// plane allocations (the batch scratch arena calls this once per
+    /// chunk instead of constructing fresh arrays), so steady-state
+    /// chunks of the same or smaller width allocate nothing.
+    pub fn reset(&mut self, lanes: usize) {
+        self.lanes = lanes;
+        self.lane_words = lanes.div_ceil(64).max(1);
+        self.acc.clear();
+        self.acc.resize(self.n * lanes, self.params.v_rest);
+        self.spike_count.clear();
+        self.spike_count.resize(self.n * lanes, 0);
+        let lane_mask = full_mask_words(lanes);
+        self.enabled.clear();
+        self.enabled.reserve(self.n * self.lane_words);
+        for _ in 0..self.n {
+            self.enabled.extend_from_slice(&lane_mask);
         }
     }
 
@@ -565,36 +599,157 @@ impl LifBatchArray {
         self.n
     }
 
-    /// Lane `b`'s membrane potentials.
-    pub fn accs(&self, b: usize) -> &[i32] {
-        &self.acc[b * self.n..(b + 1) * self.n]
+    /// Lane-mask words per neuron.
+    pub fn lane_words(&self) -> usize {
+        self.lane_words
     }
 
-    /// Lane `b`'s spike-count registers.
-    pub fn spike_counts(&self, b: usize) -> &[u32] {
-        &self.spike_count[b * self.n..(b + 1) * self.n]
+    /// Membrane potential of neuron `j` on lane `b`.
+    pub fn acc_at(&self, b: usize, j: usize) -> i32 {
+        self.acc[j * self.lanes + b]
+    }
+
+    /// Spike count of neuron `j` on lane `b`.
+    pub fn spike_count_at(&self, b: usize, j: usize) -> u32 {
+        self.spike_count[j * self.lanes + b]
+    }
+
+    /// Enable latch of neuron `j` on lane `b`.
+    pub fn enabled_at(&self, b: usize, j: usize) -> bool {
+        (self.enabled[j * self.lane_words + b / 64] >> (b % 64)) & 1 == 1
+    }
+
+    /// Lane `b`'s membrane potentials, gathered from the strided plane.
+    pub fn membranes(&self, b: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.n);
+        self.extend_accs(b, &mut out);
+        out
+    }
+
+    /// Lane `b`'s spike-count registers, gathered from the strided plane.
+    pub fn spike_counts(&self, b: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.n);
+        self.extend_spike_counts(b, &mut out);
+        out
+    }
+
+    /// Gather lane `b`'s membranes onto the end of `out` (no allocation
+    /// when `out` has capacity).
+    pub fn extend_accs(&self, b: usize, out: &mut Vec<i32>) {
+        out.extend((0..self.n).map(|j| self.acc[j * self.lanes + b]));
+    }
+
+    /// Gather lane `b`'s spike counts onto the end of `out`.
+    pub fn extend_spike_counts(&self, b: usize, out: &mut Vec<u32>) {
+        out.extend((0..self.n).map(|j| self.spike_count[j * self.lanes + b]));
     }
 
     /// True while at least one neuron of lane `b` is still enabled — the
     /// per-image BRAM gate.
     pub fn any_enabled(&self, b: usize) -> bool {
-        self.enabled[b * self.words..(b + 1) * self.words].iter().any(|&w| w != 0)
+        let (wb, bit) = (b / 64, b % 64);
+        (0..self.n).any(|j| (self.enabled[j * self.lane_words + wb] >> bit) & 1 == 1)
     }
 
-    /// One BRAM row pulse into lane `b` (per-add saturation, ascending `j`).
+    /// One BRAM row pulse applied to **every lane set in `lane_mask`** in
+    /// one sweep: for each neuron `j` (ascending, like the adder-tree
+    /// fanout) the gated lanes' accumulators — contiguous at
+    /// `acc[j*lanes ..]` — take `row[j]` through the shared [`sat_add`]
+    /// kernel. Per lane this is exactly [`lane_add_row`]'s event order
+    /// (lanes are independent, so interleaving across lanes commutes);
+    /// each lane's adds/saturations/toggles land in its own
+    /// `acts[b]`. `lane_mask` must be `lane_words()` long.
+    #[inline]
+    pub fn add_row_lanes(
+        &mut self,
+        lane_mask: &[u64],
+        row: &[i32],
+        acts: &mut [ActivityCounters],
+    ) {
+        debug_assert_eq!(row.len(), self.n);
+        debug_assert_eq!(lane_mask.len(), self.lane_words);
+        let (lanes, lw, acc_max) = (self.lanes, self.lane_words, self.params.acc_max);
+        for (j, &w) in row.iter().enumerate() {
+            let accs = &mut self.acc[j * lanes..(j + 1) * lanes];
+            let en = &self.enabled[j * lw..(j + 1) * lw];
+            for wb in 0..lw {
+                let mut m = lane_mask[wb] & en[wb];
+                while m != 0 {
+                    let b = wb * 64 + m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let act = &mut acts[b];
+                    let (next, saturated) = sat_add(accs[b], w, acc_max);
+                    if saturated {
+                        act.saturations += 1;
+                    }
+                    act.adds += 1;
+                    write_acc_at(accs, b, next, act);
+                }
+            }
+        }
+    }
+
+    /// One CSR row pulse applied to every lane set in `lane_mask` in one
+    /// sweep — the event-driven twin of [`add_row_lanes`]: per retained
+    /// `(column, weight)` entry (ascending column), all gated lanes whose
+    /// neuron is enabled take the weight through [`sat_add`]. Per lane
+    /// this is exactly [`lane_add_sparse`]'s visit order and accounting.
+    #[inline]
+    pub fn add_sparse_lanes(
+        &mut self,
+        lane_mask: &[u64],
+        cols: &[u32],
+        vals: &[i32],
+        acts: &mut [ActivityCounters],
+    ) {
+        debug_assert_eq!(cols.len(), vals.len());
+        debug_assert_eq!(lane_mask.len(), self.lane_words);
+        let (lanes, lw, acc_max) = (self.lanes, self.lane_words, self.params.acc_max);
+        for (&j, &w) in cols.iter().zip(vals) {
+            let j = j as usize;
+            let accs = &mut self.acc[j * lanes..(j + 1) * lanes];
+            let en = &self.enabled[j * lw..(j + 1) * lw];
+            for wb in 0..lw {
+                let mut m = lane_mask[wb] & en[wb];
+                while m != 0 {
+                    let b = wb * 64 + m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let act = &mut acts[b];
+                    let (next, saturated) = sat_add(accs[b], w, acc_max);
+                    if saturated {
+                        act.saturations += 1;
+                    }
+                    act.adds += 1;
+                    write_acc_at(accs, b, next, act);
+                }
+            }
+        }
+    }
+
+    /// One BRAM row pulse into lane `b` alone (per-add saturation,
+    /// ascending `j`) — the single-lane form used by the per-lane
+    /// property tests; the batched sweep goes through
+    /// [`add_row_lanes`].
     #[inline]
     pub fn add_row(&mut self, b: usize, row: &[i32], act: &mut ActivityCounters) {
-        lane_add_row(
-            &mut self.acc[b * self.n..(b + 1) * self.n],
-            &self.enabled[b * self.words..(b + 1) * self.words],
-            row,
-            &self.params,
-            act,
-        );
+        debug_assert_eq!(row.len(), self.n);
+        let (wb, bit) = (b / 64, b % 64);
+        for (j, &w) in row.iter().enumerate() {
+            if (self.enabled[j * self.lane_words + wb] >> bit) & 1 == 0 {
+                continue;
+            }
+            let idx = j * self.lanes + b;
+            let (next, saturated) = sat_add(self.acc[idx], w, self.params.acc_max);
+            if saturated {
+                act.saturations += 1;
+            }
+            act.adds += 1;
+            write_acc_at(&mut self.acc, idx, next, act);
+        }
     }
 
-    /// One CSR row pulse into lane `b` (per-add saturation, ascending
-    /// column; see [`lane_add_sparse`]).
+    /// One CSR row pulse into lane `b` alone (per-add saturation,
+    /// ascending column; see [`lane_add_sparse`]).
     #[inline]
     pub fn add_row_sparse(
         &mut self,
@@ -603,72 +758,115 @@ impl LifBatchArray {
         vals: &[i32],
         act: &mut ActivityCounters,
     ) {
-        lane_add_sparse(
-            &mut self.acc[b * self.n..(b + 1) * self.n],
-            &self.enabled[b * self.words..(b + 1) * self.words],
-            cols,
-            vals,
-            &self.params,
-            act,
-        );
+        debug_assert_eq!(cols.len(), vals.len());
+        let (wb, bit) = (b / 64, b % 64);
+        for (&j, &w) in cols.iter().zip(vals) {
+            let j = j as usize;
+            if (self.enabled[j * self.lane_words + wb] >> bit) & 1 == 0 {
+                continue;
+            }
+            let idx = j * self.lanes + b;
+            let (next, saturated) = sat_add(self.acc[idx], w, self.params.acc_max);
+            if saturated {
+                act.saturations += 1;
+            }
+            act.adds += 1;
+            write_acc_at(&mut self.acc, idx, next, act);
+        }
     }
 
-    /// One `Leak` clock on lane `b`.
+    /// One `Leak` clock on lane `b`: shift-subtract decay on every
+    /// enabled neuron, ascending `j` like [`lane_leak`].
     #[inline]
     pub fn leak_enabled(&mut self, b: usize, act: &mut ActivityCounters) {
-        lane_leak(
-            &mut self.acc[b * self.n..(b + 1) * self.n],
-            &self.enabled[b * self.words..(b + 1) * self.words],
-            &self.params,
-            act,
-        );
+        let (wb, bit) = (b / 64, b % 64);
+        for j in 0..self.n {
+            if (self.enabled[j * self.lane_words + wb] >> bit) & 1 == 0 {
+                continue;
+            }
+            let idx = j * self.lanes + b;
+            let next = leak(self.acc[idx], self.params.decay_shift);
+            act.shifts += 1;
+            act.adds += 1; // the subtract half of shift-subtract
+            write_acc_at(&mut self.acc, idx, next, act);
+        }
     }
 
     /// One `Fire` clock on lane `b` (`FireMode::EndOfStep`); `fired` must
-    /// be pre-cleared and `width()` long.
+    /// be pre-cleared and `width()` long. Event order matches
+    /// [`lane_fire_check`].
     pub fn fire_check(&mut self, b: usize, fired: &mut [bool], act: &mut ActivityCounters) {
-        lane_fire_check(
-            &mut self.acc[b * self.n..(b + 1) * self.n],
-            &mut self.spike_count[b * self.n..(b + 1) * self.n],
-            &self.enabled[b * self.words..(b + 1) * self.words],
-            fired,
-            &self.params,
-            act,
-        );
+        debug_assert_eq!(fired.len(), self.n);
+        let (wb, bit) = (b / 64, b % 64);
+        for j in 0..self.n {
+            if (self.enabled[j * self.lane_words + wb] >> bit) & 1 == 0 {
+                continue;
+            }
+            act.compares += 1;
+            let idx = j * self.lanes + b;
+            if self.acc[idx] >= self.params.v_th {
+                fired[j] = true;
+                self.spike_count[idx] += 1;
+                act.reg_toggles += 1; // spike-count increment (approx.)
+                write_acc_at(&mut self.acc, idx, self.params.v_rest, act);
+            }
+        }
     }
 
     /// Mid-integration combinational fire on lane `b`
-    /// (`FireMode::Immediate`); `fired` must be pre-cleared.
+    /// (`FireMode::Immediate`); `fired` must be pre-cleared. Event order
+    /// matches [`lane_immediate_fire`].
     pub fn immediate_fire(
         &mut self,
         b: usize,
         fired: &mut [bool],
         act: &mut ActivityCounters,
     ) -> bool {
-        lane_immediate_fire(
-            &mut self.acc[b * self.n..(b + 1) * self.n],
-            &mut self.spike_count[b * self.n..(b + 1) * self.n],
-            &self.enabled[b * self.words..(b + 1) * self.words],
-            fired,
-            &self.params,
-            act,
-        )
+        debug_assert_eq!(fired.len(), self.n);
+        let (wb, bit) = (b / 64, b % 64);
+        let mut any = false;
+        for j in 0..self.n {
+            if (self.enabled[j * self.lane_words + wb] >> bit) & 1 == 0 {
+                continue;
+            }
+            let idx = j * self.lanes + b;
+            if self.acc[idx] >= self.params.v_th {
+                act.compares += 1;
+                fired[j] = true;
+                any = true;
+                self.spike_count[idx] += 1;
+                act.reg_toggles += 1;
+                write_acc_at(&mut self.acc, idx, self.params.v_rest, act);
+            }
+        }
+        any
     }
 
-    /// Drive lane `b`'s enable plane from its own spike counts — the
+    /// Drive lane `b`'s enable bits from its own spike counts — the
     /// controller's pruning-mask update, applied at the same latch points
     /// the sequential engine applies it (fire clocks, and mid-walk
     /// Immediate fires). Clearing is idempotent, exactly like the
     /// controller's `enabled_count` guard.
     pub fn latch_prune(&mut self, b: usize, mode: PruneMode) {
         let PruneMode::AfterFires { after_spikes } = mode else { return };
-        let counts = &self.spike_count[b * self.n..(b + 1) * self.n];
-        let mask = &mut self.enabled[b * self.words..(b + 1) * self.words];
-        for (j, &count) in counts.iter().enumerate() {
-            if count >= after_spikes {
-                mask[j / 64] &= !(1u64 << (j % 64));
+        let (wb, bit) = (b / 64, b % 64);
+        for j in 0..self.n {
+            if self.spike_count[j * self.lanes + b] >= after_spikes {
+                self.enabled[j * self.lane_words + wb] &= !(1u64 << bit);
             }
         }
+    }
+
+    /// Test-only `(pointer, capacity)` fingerprint of the three state
+    /// planes — equal fingerprints across `reset` calls prove the planes
+    /// were re-armed in place, not re-allocated.
+    #[cfg(test)]
+    pub(crate) fn plane_fingerprint(&self) -> [(usize, usize); 3] {
+        [
+            (self.acc.as_ptr() as usize, self.acc.capacity()),
+            (self.spike_count.as_ptr() as usize, self.spike_count.capacity()),
+            (self.enabled.as_ptr() as usize, self.enabled.capacity()),
+        ]
     }
 }
 
@@ -932,9 +1130,17 @@ mod tests {
         use crate::testutil::PropRunner;
 
         PropRunner::new("lif_batch_equiv", 40).run(|g| {
-            let lanes = g.rng.range_i32(1, 7) as usize;
-            // Mostly narrow layers, sometimes wider than one mask word.
-            let n = if g.rng.below(4) == 0 {
+            // Mostly narrow batches, sometimes wider than one lane-mask
+            // word so the multi-word (transposed) lane masks and the
+            // wide sweeps' second mask word are exercised.
+            let lanes = if g.rng.below(4) == 0 {
+                g.rng.range_i32(65, 80) as usize
+            } else {
+                g.rng.range_i32(1, 7) as usize
+            };
+            // Mostly narrow layers, sometimes wider than one mask word
+            // (kept narrow when the batch is wide to bound the cost).
+            let n = if lanes <= 64 && g.rng.below(4) == 0 {
                 g.rng.range_i32(65, 100) as usize
             } else {
                 g.rng.range_i32(1, 14) as usize
@@ -961,15 +1167,59 @@ mod tests {
             let mut fired_b = vec![false; n];
             let mut fired_s = vec![false; n];
 
+            let lane_words = lanes.div_ceil(64).max(1);
+            let mut lane_mask = vec![0u64; lane_words];
+
             for _ in 0..100 {
                 // One random command on one random lane per round: the
-                // interleaving across lanes is itself randomized.
+                // interleaving across lanes is itself randomized. Two
+                // extra commands drive the *wide* sweeps across a random
+                // lane subset, mirrored lane-by-lane on the singles.
                 let b = g.rng.below(lanes as u32) as usize;
-                match g.rng.below(5) {
+                match g.rng.below(7) {
                     0 => {
                         let row = g.vec_i32(n, -120, 120);
                         batch.add_row(b, &row, &mut act_b[b]);
                         singles[b].add_row(&row, &mut act_s[b]);
+                    }
+                    5 => {
+                        // Wide dense sweep over a random lane subset.
+                        let row = g.vec_i32(n, -120, 120);
+                        lane_mask.iter_mut().for_each(|w| *w = 0);
+                        for lane in 0..lanes {
+                            if g.rng.next_u32() & 1 == 1 {
+                                lane_mask[lane / 64] |= 1u64 << (lane % 64);
+                            }
+                        }
+                        batch.add_row_lanes(&lane_mask, &row, &mut act_b);
+                        for (lane, single) in singles.iter_mut().enumerate() {
+                            if (lane_mask[lane / 64] >> (lane % 64)) & 1 == 1 {
+                                single.add_row(&row, &mut act_s[lane]);
+                            }
+                        }
+                    }
+                    6 => {
+                        // Wide CSR sweep over a random lane subset.
+                        let mut cols = Vec::new();
+                        let mut vals = Vec::new();
+                        for j in 0..n {
+                            if g.rng.next_u32() & 1 == 1 {
+                                cols.push(j as u32);
+                                vals.push(g.rng.range_i32(-120, 120));
+                            }
+                        }
+                        lane_mask.iter_mut().for_each(|w| *w = 0);
+                        for lane in 0..lanes {
+                            if g.rng.next_u32() & 1 == 1 {
+                                lane_mask[lane / 64] |= 1u64 << (lane % 64);
+                            }
+                        }
+                        batch.add_sparse_lanes(&lane_mask, &cols, &vals, &mut act_b);
+                        for lane in 0..lanes {
+                            if (lane_mask[lane / 64] >> (lane % 64)) & 1 == 1 {
+                                singles[lane].add_row_sparse(&cols, &vals, &mut act_s[lane]);
+                            }
+                        }
                     }
                     1 => {
                         batch.leak_enabled(b, &mut act_b[b]);
@@ -1006,15 +1256,24 @@ mod tests {
                     }
                 }
                 for (lane, single) in singles.iter().enumerate() {
-                    assert_eq!(batch.accs(lane), single.accs(), "membranes, lane {lane}");
+                    assert_eq!(batch.membranes(lane), single.accs(), "membranes, lane {lane}");
                     assert_eq!(
                         batch.spike_counts(lane),
                         single.spike_counts(),
                         "counts, lane {lane}"
                     );
                     for j in 0..n {
-                        let bit = batch.enabled[lane * batch.words + j / 64] >> (j % 64) & 1;
-                        assert_eq!(bit == 1, single.enabled(j), "enable {j}, lane {lane}");
+                        assert_eq!(
+                            batch.enabled_at(lane, j),
+                            single.enabled(j),
+                            "enable {j}, lane {lane}"
+                        );
+                        assert_eq!(batch.acc_at(lane, j), single.acc(j), "acc_at {j}/{lane}");
+                        assert_eq!(
+                            batch.spike_count_at(lane, j),
+                            single.spike_counts()[j],
+                            "count_at {j}/{lane}"
+                        );
                     }
                     assert_eq!(batch.any_enabled(lane), single.any_enabled());
                     assert_eq!(act_b[lane], act_s[lane], "activity, lane {lane}");

@@ -75,7 +75,7 @@ pub mod power;
 mod vcd;
 
 pub use controller::{CtrlState, LayerController};
-pub use self::core::{RtlCore, RtlResult, BATCH_LANES};
+pub use self::core::{batch_chunks, RtlCore, RtlResult, BATCH_LANES};
 pub use encoder::RtlPoissonEncoder;
 pub use lif_neuron::{LifBatchArray, LifNeuronArray, LifNeuronCore, NeuronCtrl};
 pub use power::{ActivityCounters, EnergyModel, EnergyReport};

@@ -309,7 +309,8 @@ impl LifLayer {
 // ---------------------------------------------------------------------------
 
 /// One layer × a whole sub-batch of the behavioral model: per-image
-/// accumulator/count/enable planes (`plane[b * n_out + j]`, lane-major)
+/// accumulator/count/enable planes (`plane[j * lanes + b]`, neuron-major
+/// so the row-reuse current add is one contiguous sweep across lanes)
 /// over the layer's shared `Arc`'d weights.
 #[derive(Debug, Clone)]
 struct LifBatchLayer {
@@ -338,13 +339,23 @@ struct LifBatchLayer {
 /// accounting) — lanes share nothing but the weights, so batching only
 /// reorders work across images. Pinned against the sequential path by
 /// `batched_inference_equals_sequential`.
+///
+/// Masks are multi-word: `lane_words = lanes.div_ceil(64)` words per
+/// input/neuron, lane `b` at word `b / 64`, bit `b % 64` — mirroring the
+/// RTL batch engine's layout so both engine families stay structurally
+/// parallel.
 #[derive(Debug, Clone)]
 pub struct LifBatchStack {
     layers: Vec<LifBatchLayer>,
     lanes: usize,
-    /// Layer-0 transposed input-mask scratch.
+    /// Words per transposed mask row for the current batch width.
+    lane_words: usize,
+    /// Widest layer input (sizes the layer-0 mask scratch).
+    max_in: usize,
+    /// Layer-0 transposed input-mask scratch, `masks[i * lane_words + wb]`.
     masks: Vec<u64>,
-    /// Per-layer transposed fire masks for the current step (the relay).
+    /// Per-layer transposed fire masks for the current step (the relay),
+    /// `fired_masks[l][j * lane_words + wb]`.
     fired_masks: Vec<Vec<u64>>,
     /// Per-layer, per-lane fire counts this step (the next layer's
     /// event-list lengths, for adds accounting).
@@ -352,9 +363,10 @@ pub struct LifBatchStack {
 }
 
 impl LifBatchStack {
-    /// Batch lanes one stack multiplexes (the transposed masks are single
-    /// `u64` words); larger sub-batches are chunked by the caller.
-    pub const MAX_LANES: usize = 64;
+    /// Batch lanes one stack multiplexes; larger sub-batches are chunked
+    /// by the caller. Matches the RTL engine's `BATCH_LANES` so both
+    /// batch families chunk identically.
+    pub const MAX_LANES: usize = 256;
 
     /// Build from a stack's layers, sharing their weight `Arc`s (state
     /// planes start empty; [`LifBatchStack::reset`] sizes them per batch).
@@ -374,8 +386,10 @@ impl LifBatchStack {
                 })
                 .collect(),
             lanes: 0,
-            masks: vec![0; max_in],
-            fired_masks: layers.iter().map(|l| vec![0u64; l.cfg.n_outputs()]).collect(),
+            lane_words: 1,
+            max_in,
+            masks: Vec::new(),
+            fired_masks: layers.iter().map(|_| Vec::new()).collect(),
             fired_len: layers.iter().map(|_| Vec::new()).collect(),
         }
     }
@@ -396,6 +410,7 @@ impl LifBatchStack {
     pub fn reset(&mut self, lanes: usize) {
         assert!(lanes <= Self::MAX_LANES, "batch chunk exceeds {} lanes", Self::MAX_LANES);
         self.lanes = lanes;
+        self.lane_words = lanes.div_ceil(64).max(1);
         for layer in &mut self.layers {
             let n = layer.cfg.n_outputs();
             layer.acc.clear();
@@ -413,8 +428,11 @@ impl LifBatchStack {
             fl.clear();
             fl.resize(lanes, 0);
         }
-        for fm in &mut self.fired_masks {
-            fm.fill(0);
+        self.masks.clear();
+        self.masks.resize(self.max_in * self.lane_words, 0);
+        for (fm, layer) in self.fired_masks.iter_mut().zip(&self.layers) {
+            fm.clear();
+            fm.resize(layer.cfg.n_outputs() * self.lane_words, 0);
         }
     }
 
@@ -427,21 +445,21 @@ impl LifBatchStack {
             fm.fill(0);
         }
         let n_layers = self.layers.len();
+        let (lanes, lw) = (self.lanes, self.lane_words);
         for l in 0..n_layers {
             let n_in = self.layers[l].cfg.n_inputs();
             let n_out = self.layers[l].cfg.n_outputs();
 
-            // Clear the live lanes' current planes and account this
-            // step's integrate adds (events × enabled neurons, counted at
-            // step entry exactly like `step_events_into`).
+            // Clear the current planes (retired lanes' entries are never
+            // read) and account this step's integrate adds (events ×
+            // enabled neurons, counted at step entry exactly like
+            // `step_events_into`).
             {
                 let layer = &mut self.layers[l];
+                layer.current.fill(0);
                 for &b in live {
-                    layer.current[b * n_out..(b + 1) * n_out].fill(0);
-                    let n_enabled = layer.enabled[b * n_out..(b + 1) * n_out]
-                        .iter()
-                        .filter(|&&e| e)
-                        .count() as u64;
+                    let n_enabled =
+                        (0..n_out).filter(|&j| layer.enabled[j * lanes + b]).count() as u64;
                     let events = if l == 0 {
                         active[b].len() as u64
                     } else {
@@ -455,13 +473,16 @@ impl LifBatchStack {
             // event lists; deeper layers read the previous layer's fire
             // masks directly) and run the row-reuse sweep: each weight
             // row is fetched once and added into every firing lane's
-            // current plane, ascending `i` so per-lane sums keep the
-            // sequential order.
+            // current — neuron-major, so the add is a contiguous sweep
+            // across lanes (all-set words take the full-word fast path).
+            // Ascending `i` keeps per-lane sums in the sequential order;
+            // the plain integer add commutes across lanes.
             if l == 0 {
-                self.masks[..n_in].fill(0);
+                self.masks[..n_in * lw].fill(0);
                 for &b in live {
+                    let (wb, bit) = (b / 64, b % 64);
                     for &i in &active[b] {
-                        self.masks[i as usize] |= 1u64 << b;
+                        self.masks[i as usize * lw + wb] |= 1u64 << bit;
                     }
                 }
             }
@@ -469,19 +490,29 @@ impl LifBatchStack {
                 let layer = &mut self.layers[l];
                 let (w_rows, current) = (&layer.w_rows, &mut layer.current);
                 let src: &[u64] =
-                    if l == 0 { &self.masks[..n_in] } else { &self.fired_masks[l - 1] };
-                for (i, &src_mask) in src.iter().enumerate() {
-                    let mut m = src_mask;
-                    if m == 0 {
+                    if l == 0 { &self.masks[..n_in * lw] } else { &self.fired_masks[l - 1] };
+                for i in 0..n_in {
+                    let mw = &src[i * lw..(i + 1) * lw];
+                    if mw.iter().all(|&m| m == 0) {
                         continue;
                     }
                     let row = &w_rows[i * n_out..(i + 1) * n_out];
-                    while m != 0 {
-                        let b = m.trailing_zeros() as usize;
-                        m &= m - 1;
-                        let cur = &mut current[b * n_out..(b + 1) * n_out];
-                        for (c, &w) in cur.iter_mut().zip(row) {
-                            *c += w;
+                    for (j, &w) in row.iter().enumerate() {
+                        let cur = &mut current[j * lanes..(j + 1) * lanes];
+                        for (wb, &m) in mw.iter().enumerate() {
+                            if m == u64::MAX {
+                                // All 64 lanes of this word take the add.
+                                for c in &mut cur[wb * 64..wb * 64 + 64] {
+                                    *c += w;
+                                }
+                            } else {
+                                let mut m = m;
+                                while m != 0 {
+                                    let b = wb * 64 + m.trailing_zeros() as usize;
+                                    m &= m - 1;
+                                    cur[b] += w;
+                                }
+                            }
                         }
                     }
                 }
@@ -493,29 +524,30 @@ impl LifBatchStack {
             let fired_masks_l = &mut self.fired_masks[l];
             let fired_len_l = &mut self.fired_len[l];
             for &b in live {
-                let base = b * n_out;
+                let (wb, bit) = (b / 64, b % 64);
                 let mut fires = 0u32;
                 for j in 0..n_out {
-                    if !layer.enabled[base + j] {
+                    let idx = j * lanes + b;
+                    if !layer.enabled[idx] {
                         continue;
                     }
                     let integrated = sat_clamp(
-                        i64::from(layer.acc[base + j]) + i64::from(layer.current[base + j]),
+                        i64::from(layer.acc[idx]) + i64::from(layer.current[idx]),
                         layer.cfg.acc_bits,
                     );
                     let leaked = leak(integrated, layer.cfg.decay_shift);
                     if leaked >= layer.cfg.v_th {
-                        fired_masks_l[j] |= 1u64 << b;
+                        fired_masks_l[j * lw + wb] |= 1u64 << bit;
                         fires += 1;
-                        layer.spike_counts[base + j] += 1;
-                        layer.acc[base + j] = layer.cfg.v_rest;
+                        layer.spike_counts[idx] += 1;
+                        layer.acc[idx] = layer.cfg.v_rest;
                         if let PruneMode::AfterFires { after_spikes } = layer.cfg.prune {
-                            if layer.spike_counts[base + j] >= after_spikes {
-                                layer.enabled[base + j] = false;
+                            if layer.spike_counts[idx] >= after_spikes {
+                                layer.enabled[idx] = false;
                             }
                         }
                     } else {
-                        layer.acc[base + j] = leaked;
+                        layer.acc[idx] = leaked;
                     }
                 }
                 fired_len_l[b] = fires;
@@ -523,16 +555,26 @@ impl LifBatchStack {
         }
     }
 
-    /// Lane `b`'s final-layer spike counts.
-    pub fn spike_counts(&self, b: usize) -> &[u32] {
+    /// Lane `b`'s final-layer spike counts, gathered from the
+    /// neuron-major plane.
+    pub fn spike_counts(&self, b: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.extend_spike_counts(b, &mut out);
+        out
+    }
+
+    /// Append lane `b`'s final-layer spike counts to `out` (the
+    /// allocation-free gather for hot loops).
+    pub fn extend_spike_counts(&self, b: usize, out: &mut Vec<u32>) {
         let layer = self.layers.last().expect("stack has at least one layer");
         let n = layer.cfg.n_outputs();
-        &layer.spike_counts[b * n..(b + 1) * n]
+        out.extend((0..n).map(|j| layer.spike_counts[j * self.lanes + b]));
     }
 
     /// Did lane `b`'s output neuron `j` fire on the last step?
     pub fn output_fired(&self, b: usize, j: usize) -> bool {
-        self.fired_masks.last().expect("stack has at least one layer")[j] >> b & 1 == 1
+        let fm = self.fired_masks.last().expect("stack has at least one layer");
+        fm[j * self.lane_words + b / 64] >> (b % 64) & 1 == 1
     }
 
     /// Lane `b`'s integrate-adds, summed over every layer.

@@ -465,6 +465,8 @@ fn run_batch_inference(
     let n_out = cfg.n_outputs();
     let mut first_spike: Vec<Vec<Option<u32>>> = vec![vec![None; n_out]; b_n];
     let mut steps_run = vec![0u32; b_n];
+    // Allocation-free margin gather from the neuron-major count plane.
+    let mut counts = Vec::with_capacity(n_out);
 
     for t in 0..timesteps {
         // Each live image draws its own independent Poisson events…
@@ -483,7 +485,11 @@ fn run_batch_inference(
         }
         if let EarlyExit::Margin { margin, min_steps } = early {
             if t + 1 >= min_steps {
-                live.retain(|&b| !margin_reached(batch.spike_counts(b), margin));
+                live.retain(|&b| {
+                    counts.clear();
+                    batch.extend_spike_counts(b, &mut counts);
+                    !margin_reached(&counts, margin)
+                });
             }
         }
         if live.is_empty() {
@@ -492,7 +498,7 @@ fn run_batch_inference(
     }
 
     for b in 0..b_n {
-        let spike_counts = batch.spike_counts(b).to_vec();
+        let spike_counts = batch.spike_counts(b);
         let class = Classification::decide(cfg.decision, &spike_counts, &first_spike[b]);
         out.push(Classification {
             class,
@@ -835,7 +841,9 @@ mod tests {
         for (cfg, stack) in configs {
             let net = BehavioralNet::new(cfg, stack).unwrap();
             let mut batch_state = net.batch_prototype();
-            for batch in [1usize, 2, 5, 9] {
+            // 67 lanes crosses the mask-word boundary: one multi-word
+            // chunk at the widened `MAX_LANES`, lanes 64+ in word 1.
+            for batch in [1usize, 2, 5, 9, 67] {
                 for early in
                     [EarlyExit::Off, EarlyExit::Margin { margin: 2, min_steps: 2 }]
                 {

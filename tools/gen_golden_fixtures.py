@@ -9,11 +9,15 @@ existing pinned fixtures bit-for-bit -- all 9 single-layer cases, all 9
 two-layer cases and all 6 heterogeneous 3-layer cases -- before any newly
 generated constants are trusted. Run with no arguments; it validates the
 sequential schedule, then cross-checks the BATCHED schedule
-(`run_core_batch`, mirroring `RtlCore::run_fast_batch`: one weight-row
-walk per timestep serves every image of the batch) against the same 24
-fixture constants, then the SPARSE schedule (a CSR walk mirroring
-`RtlCore::run_fast_sparse`, at keep-thresholds 0 and 1) against the same
-constants, and finally prints the heterogeneous fixture table.
+(`run_core_batch`, mirroring `RtlCore::run_fast_batch` after the
+wide-lane layout change: multi-word transposed lane masks over
+NEURON-MAJOR state planes, one weight-row walk per timestep serving
+every image of the batch) against the same 24 fixture constants -- first
+at the natural 3-image width, then through >64-lane chunks whose lanes
+straddle the mask-word boundary -- then the SPARSE schedule (a CSR walk
+mirroring `RtlCore::run_fast_sparse`, at keep-thresholds 0 and 1)
+against the same constants, and finally prints the heterogeneous fixture
+table.
 """
 
 M32 = 0xFFFFFFFF
@@ -318,19 +322,105 @@ def validate():
 
 # --- batched-schedule cross-check ------------------------------------------
 
+def full_mask_words(lanes):
+    """Multi-word all-lanes mask: lane b at word b // 64, bit b % 64."""
+    lw = max((lanes + 63) // 64, 1)
+    return [((1 << min(64, lanes - wb * 64)) - 1 if lanes > wb * 64 else 0)
+            for wb in range(lw)]
+
+class BatchLayer:
+    """One layer x all batch lanes, mirroring the Rust LifBatchArray:
+    NEURON-MAJOR state planes (plane[j * lanes + b], so the wide row
+    apply is a contiguous sweep across lanes) and multi-word per-neuron
+    lane-enable masks (enabled[j * lw + wb] bit b % 64). Per-lane
+    dynamics are identical to the sequential Layer -- lanes share
+    nothing, so cross-lane reordering commutes."""
+
+    def __init__(self, n, v_th, decay, prune_after, acc_bits, lanes):
+        self.n = n
+        self.v_th = v_th
+        self.decay = decay
+        self.prune_after = prune_after
+        self.acc_bits = acc_bits
+        self.lanes = lanes
+        self.lw = max((lanes + 63) // 64, 1)
+        self.acc = [0] * (n * lanes)
+        self.count = [0] * (n * lanes)
+        self.enabled = full_mask_words(lanes) * n
+        # Multi-word transposed fire masks, OR-accumulated per timestep:
+        # step_fired[j * lw + wb] bit b % 64.
+        self.step_fired = [0] * (n * self.lw)
+
+    def enabled_at(self, b, j):
+        return (self.enabled[j * self.lw + b // 64] >> (b % 64)) & 1
+
+    def add_row_lanes(self, lane_mask, row):
+        """ONE row fetch applied to every masked-and-enabled lane: the
+        neuron-major wide sweep (Rust add_row_lanes)."""
+        for j in range(self.n):
+            base = j * self.lanes
+            w = row[j]
+            for wb in range(self.lw):
+                m = lane_mask[wb] & self.enabled[j * self.lw + wb]
+                while m:
+                    b = wb * 64 + ((m & -m).bit_length() - 1)
+                    m &= m - 1
+                    self.acc[base + b] = sat(self.acc[base + b] + w,
+                                             self.acc_bits)
+
+    def leak_enabled(self, b):
+        for j in range(self.n):
+            if self.enabled_at(b, j):
+                idx = j * self.lanes + b
+                self.acc[idx] = leak(self.acc[idx], self.decay)
+
+    def latch_prune(self, b):
+        if self.prune_after:
+            wb, bit = b // 64, b % 64
+            for j in range(self.n):
+                if self.count[j * self.lanes + b] >= self.prune_after:
+                    self.enabled[j * self.lw + wb] &= ~(1 << bit)
+
+    def fire_check(self, b):
+        wb, bit = b // 64, b % 64
+        for j in range(self.n):
+            idx = j * self.lanes + b
+            if self.enabled_at(b, j) and self.acc[idx] >= self.v_th:
+                self.step_fired[j * self.lw + wb] |= 1 << bit
+                self.count[idx] += 1
+                self.acc[idx] = 0
+        self.latch_prune(b)
+
+    def immediate_fire(self, b):
+        wb, bit = b // 64, b % 64
+        any_f = False
+        for j in range(self.n):
+            idx = j * self.lanes + b
+            if self.enabled_at(b, j) and self.acc[idx] >= self.v_th:
+                self.count[idx] += 1
+                self.acc[idx] = 0
+                self.step_fired[j * self.lw + wb] |= 1 << bit
+                any_f = True
+        if any_f:
+            self.latch_prune(b)
+
 def run_core_batch(stack, images, seeds, timesteps, fire_mode, leak_row_len,
                    layer_params, acc_bits=24):
-    """The batched sweep, mirroring RtlCore::run_fast_batch: per timestep,
-    per layer, per integrate group, draw EVERY image's lanes first, then
-    walk each weight row once and apply it to every image whose input
-    fired. Per-image state (PRNG streams, layers, cycle counters) is
-    disjoint, so batching only reorders work across images -- the
-    commutation argument behind the Rust batch engine's bit-exactness."""
+    """The batched sweep, mirroring RtlCore::run_fast_batch after the
+    wide-lane layout change: per timestep, per layer, per input, build the
+    MULTI-WORD transposed lane mask (any batch width, not just 64), then
+    walk the weight row once and apply it across all firing lanes of the
+    NEURON-MAJOR planes in one sweep. Per-lane state (PRNG streams,
+    accumulator/count/enable plane slices, cycle counters) is disjoint,
+    so the lane-order swap inside add_row_lanes only reorders independent
+    work -- the commutation argument behind the Rust engine's
+    bit-exactness."""
     n_layers = len(stack)
     widths = [len(stack[l][0]) for l in range(n_layers)]
     B = len(images)
-    layers = [[Layer(widths[l], *layer_params[l], acc_bits)
-               for l in range(n_layers)] for _ in range(B)]
+    lw = max((B + 63) // 64, 1)
+    layers = [BatchLayer(widths[l], *layer_params[l], acc_bits, B)
+              for l in range(n_layers)]
     states = [[pixel_seed(seeds[b], i) for i in range(IMG_PIXELS)]
               for b in range(B)]
     cycles = [0] * B
@@ -338,43 +428,41 @@ def run_core_batch(stack, images, seeds, timesteps, fire_mode, leak_row_len,
     for _t in range(timesteps):
         for l in range(n_layers):
             n_in = IMG_PIXELS if l == 0 else widths[l - 1]
+            prev = layers[l - 1] if l > 0 else None
             for p in range(n_in):
-                # transposed active mask for input p over the batch
-                fired_by = []
-                for b in batch:
-                    if l == 0:
+                # transposed multi-word active mask for input p
+                mask = [0] * lw
+                if l == 0:
+                    for b in batch:
                         states[b][p] = xorshift32_step(states[b][p])
-                        spike = images[b][p] > (states[b][p] & 0xFF)
-                    else:
-                        spike = layers[b][l - 1].step_fired[p]
-                    if spike:
-                        fired_by.append(b)
-                # ONE row walk serves every firing image of the batch
-                row = stack[l][p]
-                for b in fired_by:
-                    layers[b][l].add_row(row)
+                        if images[b][p] > (states[b][p] & 0xFF):
+                            mask[b // 64] |= 1 << (b % 64)
+                else:
+                    mask = prev.step_fired[p * lw:(p + 1) * lw]
+                # ONE row walk serves every firing lane of the batch
+                layers[l].add_row_lanes(mask, stack[l][p])
                 for b in batch:
                     cycles[b] += 1
                     if fire_mode == "imm":
-                        layers[b][l].immediate_fire()
+                        layers[l].immediate_fire(b)
                 row_boundary = (l == 0 and leak_row_len is not None
                                 and (p + 1) % leak_row_len == 0)
                 if p + 1 == n_in or row_boundary:
                     for b in batch:
-                        layers[b][l].leak_enabled()
+                        layers[l].leak_enabled(b)
                         cycles[b] += 1
             for b in batch:
                 if fire_mode == "end":
-                    layers[b][l].fire_check()
+                    layers[l].fire_check(b)
                 else:
-                    layers[b][l].latch_prune()
+                    layers[l].latch_prune(b)
                 cycles[b] += 1
-        for b in batch:
-            for l in range(n_layers):
-                layers[b][l].step_fired = [False] * widths[l]
+        for l in range(n_layers):
+            layers[l].step_fired = [0] * (widths[l] * lw)
     out = []
     for b in range(B):
-        counts = [layers[b][l].count for l in range(n_layers)]
+        counts = [[layers[l].count[j * B + b] for j in range(widths[l])]
+                  for l in range(n_layers)]
         winner = max(range(widths[-1]), key=lambda j: (counts[-1][j], -j))
         out.append((counts, winner, cycles[b]))
     return out
@@ -413,6 +501,58 @@ def validate_batch():
                 ("batched", cfg, img, gc)
             assert gw == winner and gcy == cycles, ("batched", cfg, img, gw, gcy)
     print("validated: batched sweep reproduces all 24 fixtures image-for-image")
+
+WIDE_LANES = 66  # crosses the 64-lane mask-word boundary: words 0 and 1
+
+def validate_batch_wide():
+    """Anchor the wide-lane layout: every one of the 24 pinned fixture
+    rows reproduced through a single >64-lane chunk (66 lanes = the
+    family's three images replicated 22x, so lanes 63/64/65 straddle the
+    mask-word boundary). Each lane must still match its pinned
+    constants bit-for-bit."""
+    def check(cases, got, expect_of):
+        reps = WIDE_LANES // len(cases)
+        assert len(got) == len(cases) * reps
+        for lane, (gc, gw, gcy) in enumerate(got):
+            case = cases[lane % len(cases)]
+            counts, winner, cycles = expect_of(case)
+            for l, want in enumerate(counts):
+                if want is not None:
+                    assert gc[l] == want, ("wide", case[0], case[1], lane, l,
+                                           gc[l], want)
+            assert gw == winner and gcy == cycles, \
+                ("wide", case[0], case[1], lane, gw, gcy)
+
+    def widen(cases):
+        reps = WIDE_LANES // len(cases)
+        images = [fixture_image(c[1]) for c in cases] * reps
+        seeds = [c[2] for c in cases] * reps
+        return images, seeds
+
+    stack = fixture_weights_single()
+    for cfg_name in ["fire", "leak", "prune"]:
+        cases = [c for c in SINGLE_CASES if c[0] == cfg_name]
+        params, mode, row = single_cfg(cfg_name)
+        images, seeds = widen(cases)
+        got = run_core_batch(stack, images, seeds, 8, mode, row, [params])
+        check(cases, got, lambda c: ([c[3]], c[4], c[5]))
+    dstack = deep_fixture_stack()
+    for cfg_name in ["deep", "deep_prune", "deep_fire"]:
+        cases = [c for c in DEEP_CASES if c[0] == cfg_name]
+        params, mode = deep_cfg(cfg_name)
+        images, seeds = widen(cases)
+        got = run_core_batch(dstack, images, seeds, 8, mode, None,
+                             [params, params])
+        check(cases, got, lambda c: ([c[3], c[4]], c[5], c[6]))
+    hstack = hetero_fixture_stack()
+    for cfg_name in ["hetero", "hetero_fire"]:
+        cases = [c for c in HETERO_CASES if c[0] == cfg_name]
+        images, seeds = widen(cases)
+        got = run_core_batch(hstack, images, seeds, 8, hetero_mode(cfg_name),
+                             None, HETERO_PARAMS)
+        check(cases, got, lambda c: ([c[3], c[4], c[5]], c[6], c[7]))
+    print(f"validated: all 24 fixtures reproduced through {WIDE_LANES}-lane "
+          "multi-word chunks (lanes straddle the 64-bit mask-word boundary)")
 
 # --- sparse (CSR) sweep cross-check ----------------------------------------
 
@@ -477,5 +617,6 @@ def hetero():
 if __name__ == "__main__":
     validate()
     validate_batch()
+    validate_batch_wide()
     validate_sparse()
     hetero()

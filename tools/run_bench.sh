@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Perf-trajectory bench runner: builds the release binary and emits
-# BENCH_7.json (images/sec for the RTL cycle path vs fast path, batched
-# vs per-image engine throughput at batch 1/8/32/64, sparse-vs-dense
-# engine throughput and adds-performed at 100/50/10% weight density for
-# [784,10] and [784,128,10], 1/2/3-layer depth rows with the shared- vs
+# BENCH_8.json (images/sec for the RTL cycle path vs fast path, batched
+# vs per-image engine throughput at batch 1/8/32/64/128/256 — the wide
+# rows run one multi-word chunk — sparse-vs-dense engine throughput and
+# adds-performed at 100/50/10% weight density for [784,10] and
+# [784,128,10] plus the 128-lane sparse_batched_wide row,
+# 1/2/3-layer depth rows with the shared- vs
 # per-layer-v_th calibration accuracy, coordinator qps + p50/p99 at
 # 1/2/4/8 workers over the batched backends, large-batch latency with
 # intra-batch fan-out off vs on, the calibrated fan-out crossover, an
@@ -15,4 +17,4 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 cargo run --release --bin bench-report -- "$@"
-echo "wrote $(pwd)/BENCH_7.json"
+echo "wrote $(pwd)/BENCH_8.json"
