@@ -55,7 +55,7 @@
 //!   asserting the CSR speedup survives the neuron-major wide sweep
 //!   (≥ 2× dense at b128),
 //!
-//! and writes the results to `BENCH_8.json` (plus stdout; the emitted
+//! and writes the results to `BENCH_9.json` (plus stdout; the emitted
 //! name is the single `BENCH_NAME` constant). BENCH_1 recorded qps only;
 //! BENCH_2 added the percentile columns; BENCH_3 added the depth rows of
 //! the N-layer refactor; BENCH_4 the per-layer threshold/pruning rows;
@@ -64,7 +64,9 @@
 //! BENCH_7 the sparse-vs-dense rows (EXPERIMENTS.md §Sparse); BENCH_8
 //! supersedes them with the wide-lane rows — `batched_engine` extended to
 //! b128/b256 and the `sparse_batched_wide` row of the neuron-major
-//! multi-word engine. Note the guarded batch path (`catch_unwind` +
+//! multi-word engine; BENCH_9 adds the `pallas_lint` row (full-tree
+//! static-analysis runtime, asserting zero findings from the bench binary
+//! too). Note the guarded batch path (`catch_unwind` +
 //! typed replies) is in *every* row since BENCH_6 — its cost shows up as
 //! the BENCH_5 → BENCH_6 delta of the unchanged rows, not as a
 //! within-report column.
@@ -90,7 +92,7 @@ use snn_rtl::snn::EarlyExit;
 use snn_rtl::SnnConfig;
 
 /// The emitted report name — bump this (one place) when a PR adds rows.
-const BENCH_NAME: &str = "BENCH_8";
+const BENCH_NAME: &str = "BENCH_9";
 
 fn weights(seed: u32) -> WeightMatrix {
     let mut rng = Xorshift32::new(seed);
@@ -834,6 +836,24 @@ fn main() {
          the injection path is on the hot path"
     );
 
+    // The static-analysis pass, timed in-process. CI gates on the
+    // dedicated binary; the bench records how long the full-tree walk
+    // takes (it must stay cheap enough to run on every push) and asserts
+    // a clean tree from this binary too.
+    let lint_started = Instant::now();
+    let lint_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let lint_analysis = snn_rtl::lint::analyze_tree(lint_root).expect("pallas-lint tree walk");
+    let lint_runtime_ms = lint_started.elapsed().as_secs_f64() * 1e3;
+    assert!(
+        lint_analysis.findings.is_empty(),
+        "pallas-lint reported {} finding(s) during the bench run",
+        lint_analysis.findings.len()
+    );
+    println!(
+        "pallas_lint: {} files, {} lines, 0 findings in {lint_runtime_ms:.1} ms",
+        lint_analysis.files, lint_analysis.lines
+    );
+
     // Hand-rolled JSON (no serde in the offline crate set).
     let mut json = String::from("{\n");
     json.push_str(&format!("  \"bench\": \"{BENCH_NAME}\",\n"));
@@ -944,7 +964,13 @@ fn main() {
             r.per_mille, r.qps, r.p99_us, r.completed, r.failed, r.retries, r.restarts, r.panics
         ));
     }
-    json.push_str("  }\n}\n");
+    json.push_str("  },\n");
+    json.push_str(&format!(
+        "  \"pallas_lint\": {{ \"files\": {}, \"lines\": {}, \
+         \"lint_runtime_ms\": {lint_runtime_ms:.2} }}\n",
+        lint_analysis.files, lint_analysis.lines
+    ));
+    json.push_str("}\n");
     let out = format!("{BENCH_NAME}.json");
     std::fs::write(&out, &json).unwrap_or_else(|e| panic!("write {out}: {e}"));
     println!("-> {out}");

@@ -1,0 +1,58 @@
+//! pallas-lint CLI — run the repo-invariant static analysis over
+//! `rust/src` and `rust/tests` and exit non-zero on any finding.
+//!
+//! Usage:
+//!   pallas_lint [ROOT] [--fix-list]
+//!
+//! `ROOT` defaults to the current directory (the repo root in CI). The
+//! default output prints one human-readable line per finding
+//! (`file:line: [Lx] message — excerpt`); `--fix-list` prints the
+//! machine-readable `file:line<TAB>rule` triples only, for piping into
+//! editors or scripts.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use snn_rtl::lint;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut fix_list = false;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--fix-list" => fix_list = true,
+            "--help" | "-h" => {
+                println!("usage: pallas_lint [ROOT] [--fix-list]");
+                return ExitCode::SUCCESS;
+            }
+            other => root = PathBuf::from(other),
+        }
+    }
+    let analysis = match lint::analyze_tree(&root) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("pallas-lint: failed to walk {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if fix_list {
+        for f in &analysis.findings {
+            println!("{}:{}\t{}", f.file, f.line, f.rule.id());
+        }
+    } else {
+        for f in &analysis.findings {
+            println!("{f}");
+        }
+        eprintln!(
+            "pallas-lint: {} finding(s) across {} files ({} lines)",
+            analysis.findings.len(),
+            analysis.files,
+            analysis.lines
+        );
+    }
+    if analysis.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -39,9 +39,9 @@ use crate::fixed::{WeightMatrix, WeightStack};
 use crate::rtl::{ActivityCounters, RtlCore};
 use crate::runtime::XlaSnn;
 use crate::snn::{BehavioralNet, EarlyExit, LifBatchStack};
-use crate::util::{margin_reached, priority_argmax};
+use crate::util::{lock_recover, margin_reached, priority_argmax};
 
-use super::pool::{default_pool_slots, lock_recover, InstancePool};
+use super::pool::{default_pool_slots, InstancePool};
 
 /// Per-image inference output, backend-agnostic.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -256,8 +256,13 @@ impl RtlBackend {
         .with_evict_hook(move |core: &mut RtlCore| {
             // Poison-recovering: the harvested totals are plain counters
             // and must survive a panicking thread, or cycle accounting
-            // silently loses the dying core's activity.
+            // silently loses the dying core's activity. The pool may run
+            // this hook while one of its slot guards is held (quarantine
+            // paths), so this acquisition is a declared leaf of the lock
+            // graph: it must never take a pool or shard lock itself.
+            // pallas-lint: lock(backend.evict_sink)
             lock_recover(&sink).add(&core.total_activity());
+            // pallas-lint: end-lock(backend.evict_sink)
         });
         Ok(RtlBackend { cores, cfg, evicted, sparse_density, serve_sparse })
     }
@@ -277,7 +282,9 @@ impl RtlBackend {
     /// harvested from dropped cores by the eviction hook. Exact once all
     /// in-flight batches have returned their engines.
     pub fn total_activity(&self) -> ActivityCounters {
+        // pallas-lint: lock(backend.evict_sink)
         let mut total = *lock_recover(&self.evicted);
+        // pallas-lint: end-lock(backend.evict_sink)
         self.cores.for_each(|core| total.add(&core.total_activity()));
         total
     }
@@ -414,6 +421,7 @@ impl Backend for XlaBackend {
         // executables and buffers that a Rust unwind cannot tear (no
         // internal invariants are mutated mid-call from this side), so
         // recovering the guard is sound.
+        // pallas-lint: lock(backend.xla_snn)
         let snn = lock_recover(&self.snn);
         // Behavioral/RTL engines clamp internally; the chunked XLA loop
         // applies the same clamp here so an unreachable margin cannot
@@ -435,6 +443,7 @@ impl Backend for XlaBackend {
                     .collect())
             }
         }
+        // pallas-lint: end-lock(backend.xla_snn)
     }
 
     fn config(&self) -> &SnnConfig {

@@ -37,7 +37,7 @@ use crate::prng::{splitmix32, GOLDEN_GAMMA};
 use crate::snn::EarlyExit;
 
 use super::backend::{Backend, BackendOutput};
-use super::pool::lock_recover;
+use crate::util::lock_recover;
 
 /// What the schedule has in store for one request seed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -186,12 +186,14 @@ impl FaultInjectingBackend {
     /// it fired. One victim per call: the coordinator's retry then meets
     /// an already-fired victim and passes.
     fn take_transient(&self, seeds: &[u32], kind: FaultKind) -> Option<u32> {
+        // pallas-lint: lock(fault.fired)
         let mut fired = lock_recover(&self.fired);
         let victim =
             seeds.iter().copied().find(|&s| self.plan.classify(s) == kind && !fired.contains(&s));
         if let Some(s) = victim {
             fired.insert(s);
         }
+        // pallas-lint: end-lock(fault.fired)
         victim
     }
 }

@@ -118,6 +118,7 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     pub failed: u64,
     pub batches: u64,
+    pub batched_items: u64,
     pub steals: u64,
     pub fanout_batches: u64,
     pub subbatches: u64,
@@ -138,8 +139,6 @@ pub struct MetricsSnapshot {
 
 impl ServerMetrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let batches = self.batches.load(Ordering::Relaxed);
-        let items = self.batched_items.load(Ordering::Relaxed);
         // Conservation law: `submitted >= completed + failed + shed` must
         // hold in *every* snapshot, not just at quiescence. Each request's
         // lifecycle bumps `submitted` (at admission) strictly before its
@@ -151,32 +150,60 @@ impl ServerMetrics {
         // by the time `submitted` is read. Reading in the other order let
         // a racing completion land between the two loads and transiently
         // break the invariant (see `snapshot_conservation_under_load`).
+        //
+        // Every other load is Acquire too — pallas-lint rule L4 enforces
+        // it. For the non-conservation counters Acquire buys the same
+        // monotone-pairing guarantee (e.g. `subbatches` never lags behind
+        // the `fanout_batches` read that preceded it) at zero cost on
+        // x86, and it keeps the rule simple enough to machine-check: no
+        // per-field exemption list to rot.
         let shed = self.shed.load(Ordering::Acquire);
         let completed = self.completed.load(Ordering::Acquire);
         let failed = self.failed.load(Ordering::Acquire);
-        MetricsSnapshot {
-            submitted: self.submitted.load(Ordering::Relaxed),
-            rejected: self.rejected.load(Ordering::Relaxed),
+        let batches = self.batches.load(Ordering::Acquire);
+        let batched_items = self.batched_items.load(Ordering::Acquire);
+        let snap = MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Acquire),
+            rejected: self.rejected.load(Ordering::Acquire),
             completed,
             failed,
             batches,
-            steals: self.steals.load(Ordering::Relaxed),
-            fanout_batches: self.fanout_batches.load(Ordering::Relaxed),
-            subbatches: self.subbatches.load(Ordering::Relaxed),
-            mean_batch_size: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
+            batched_items,
+            steals: self.steals.load(Ordering::Acquire),
+            fanout_batches: self.fanout_batches.load(Ordering::Acquire),
+            subbatches: self.subbatches.load(Ordering::Acquire),
+            mean_batch_size: if batches == 0 {
+                0.0
+            } else {
+                batched_items as f64 / batches as f64
+            },
             latency_p50_us: self.latency.quantile_us(0.50),
             latency_p95_us: self.latency.quantile_us(0.95),
             latency_p99_us: self.latency.quantile_us(0.99),
             latency_mean_us: self.latency.mean_us(),
             latency_max_us: self.latency.max_us(),
-            steps_executed: self.steps_executed.load(Ordering::Relaxed),
+            steps_executed: self.steps_executed.load(Ordering::Acquire),
             shed,
-            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
-            panics_recovered: self.panics_recovered.load(Ordering::Relaxed),
-            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
-            subbatch_retries: self.subbatch_retries.load(Ordering::Relaxed),
-            quarantined_engines: self.quarantined_engines.load(Ordering::Relaxed),
-        }
+            deadline_expired: self.deadline_expired.load(Ordering::Acquire),
+            panics_recovered: self.panics_recovered.load(Ordering::Acquire),
+            worker_restarts: self.worker_restarts.load(Ordering::Acquire),
+            subbatch_retries: self.subbatch_retries.load(Ordering::Acquire),
+            quarantined_engines: self.quarantined_engines.load(Ordering::Acquire),
+        };
+        // Dynamic twin of the static L4 check: test builds verify the
+        // conservation law on every snapshot ever taken. `>=` (not `==`)
+        // because requests legitimately sit in flight between admission
+        // and their terminal counter; equality holds only at quiescence
+        // and is asserted there by `snapshot_conservation_under_load`.
+        debug_assert!(
+            snap.submitted >= snap.completed + snap.failed + snap.shed,
+            "metrics conservation torn: {} submitted < {} + {} + {} resolved",
+            snap.submitted,
+            snap.completed,
+            snap.failed,
+            snap.shed
+        );
+        snap
     }
 }
 
@@ -215,6 +242,7 @@ mod tests {
         m.batched_items.store(10, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.submitted, 10);
+        assert_eq!(s.batched_items, 10);
         assert!((s.mean_batch_size - 2.5).abs() < 1e-9);
     }
 
@@ -237,6 +265,11 @@ mod tests {
     /// `submitted >= completed + failed + shed` each time, then exact
     /// equality at quiescence. Deterministic: fixed iteration counts,
     /// join()-synchronized, no sleeps.
+    ///
+    /// This test is also the dynamic side of pallas-lint rule L4's
+    /// cross-file check: every `AtomicU64` counter declared on
+    /// `ServerMetrics` must be bumped and asserted here by name, so a
+    /// counter added without extending this test fails the lint gate.
     #[test]
     fn snapshot_conservation_under_load() {
         use std::sync::atomic::AtomicBool;
@@ -260,6 +293,21 @@ mod tests {
                             1 => m.failed.fetch_add(1, Ordering::Release),
                             _ => m.shed.fetch_add(1, Ordering::Release),
                         };
+                        // Every remaining counter churns concurrently too,
+                        // so the hammer exercises whole-struct snapshots
+                        // and the quiescent totals below pin each one.
+                        m.rejected.fetch_add(1, Ordering::Relaxed);
+                        m.batches.fetch_add(1, Ordering::Relaxed);
+                        m.batched_items.fetch_add(2, Ordering::Relaxed);
+                        m.steals.fetch_add(1, Ordering::Relaxed);
+                        m.fanout_batches.fetch_add(1, Ordering::Relaxed);
+                        m.subbatches.fetch_add(1, Ordering::Relaxed);
+                        m.steps_executed.fetch_add(1, Ordering::Relaxed);
+                        m.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                        m.panics_recovered.fetch_add(1, Ordering::Relaxed);
+                        m.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                        m.subbatch_retries.fetch_add(1, Ordering::Relaxed);
+                        m.quarantined_engines.fetch_add(1, Ordering::Relaxed);
                     }
                 })
             })
@@ -294,6 +342,20 @@ mod tests {
         let total = WRITERS as u64 * PER_WRITER;
         assert_eq!(s.submitted, total);
         assert_eq!(s.completed + s.failed + s.shed, total, "quiescent equality");
+        // Whole-struct quiescent totals: one assert per counter.
+        assert_eq!(s.rejected, total);
+        assert_eq!(s.batches, total);
+        assert_eq!(s.batched_items, 2 * total);
+        assert!((s.mean_batch_size - 2.0).abs() < 1e-9);
+        assert_eq!(s.steals, total);
+        assert_eq!(s.fanout_batches, total);
+        assert_eq!(s.subbatches, total);
+        assert_eq!(s.steps_executed, total);
+        assert_eq!(s.deadline_expired, total);
+        assert_eq!(s.panics_recovered, total);
+        assert_eq!(s.worker_restarts, total);
+        assert_eq!(s.subbatch_retries, total);
+        assert_eq!(s.quarantined_engines, total);
     }
 
     #[test]

@@ -37,18 +37,10 @@
 //! counter. Capacity never shrinks: a discarded slot refills lazily on the
 //! next checkout exactly like a never-used slot.
 
+use crate::util::lock_recover;
 use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard, TryLockError};
-
-/// Poison-recovering lock for state that stays sound across a panic
-/// (counter sinks, recycled-instance stashes, fault bookkeeping). A
-/// `PoisonError` only means *some* thread panicked while holding the
-/// guard; for these uses the data is still meaningful, and propagating
-/// the panic would cascade one fault through every subsequent request.
-pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
-}
 
 /// A pool of reusable engine instances. See the module docs.
 pub struct InstancePool<T> {
@@ -119,7 +111,10 @@ impl<T> InstancePool<T> {
 
     /// Recycled overflow instances currently stashed (observability).
     pub fn stashed(&self) -> usize {
-        lock_recover(&self.extra).len()
+        // pallas-lint: lock(pool.extra)
+        let n = lock_recover(&self.extra).len();
+        // pallas-lint: end-lock(pool.extra)
+        n
     }
 
     /// Check out an instance without ever blocking: the first free slot in
@@ -139,10 +134,14 @@ impl<T> InstancePool<T> {
                 // forever) and refill below.
                 Err(TryLockError::Poisoned(p)) => {
                     slot.clear_poison();
+                    // pallas-lint: lock(pool.slot)
                     let mut g = p.into_inner();
                     if let Some(dead) = g.take() {
-                        self.quarantine_instance(dead);
+                        // The eviction hook runs while the slot guard is
+                        // held and may take the owner's harvest sink.
+                        self.quarantine_instance(dead); // pallas-lint: calls-lock(backend.evict_sink)
                     }
+                    // pallas-lint: end-lock(pool.slot)
                     g
                 }
                 Err(TryLockError::WouldBlock) => continue,
@@ -152,7 +151,9 @@ impl<T> InstancePool<T> {
             }
             return PoolGuard { pool: self, inner: GuardInner::Slot(guard) };
         }
+        // pallas-lint: lock(pool.extra)
         let recycled = lock_recover(&self.extra).pop();
+        // pallas-lint: end-lock(pool.extra)
         let instance = recycled.unwrap_or_else(|| (self.factory)());
         PoolGuard { pool: self, inner: GuardInner::Overflow(Some(instance)) }
     }
@@ -161,10 +162,12 @@ impl<T> InstancePool<T> {
     fn restash(&self, instance: T) {
         let mut instance = Some(instance);
         {
+            // pallas-lint: lock(pool.extra)
             let mut e = lock_recover(&self.extra);
             if e.len() < self.overflow_cap {
                 e.push(instance.take().expect("instance present"));
             }
+            // pallas-lint: end-lock(pool.extra)
         }
         // A full stash drops the instance — the slot ring alone already
         // guarantees the configured capacity — but the eviction hook gets
@@ -181,6 +184,7 @@ impl<T> InstancePool<T> {
     /// currently checked out (or dropped past the stash cap) are missed.
     pub fn for_each(&self, mut f: impl FnMut(&T)) {
         for slot in self.slots.iter() {
+            // pallas-lint: lock(pool.slot)
             let guard = match slot.lock() {
                 Ok(g) => g,
                 Err(p) => p.into_inner(),
@@ -188,11 +192,14 @@ impl<T> InstancePool<T> {
             if let Some(v) = guard.as_ref() {
                 f(v);
             }
+            // pallas-lint: end-lock(pool.slot)
         }
+        // pallas-lint: lock(pool.extra)
         let extra = lock_recover(&self.extra);
         for v in extra.iter() {
             f(v);
         }
+        // pallas-lint: end-lock(pool.extra)
     }
 }
 
@@ -221,13 +228,17 @@ impl<T> PoolGuard<'_, T> {
     /// torn, and a rebuilt instance is cheap insurance against serving
     /// wrong answers from it.
     pub fn discard(mut self) {
+        // A slot guard may live inside `self.inner` for the whole body, so
+        // the eviction hook below runs while that slot is held.
+        // pallas-lint: lock(pool.slot)
         let dead = match &mut self.inner {
             GuardInner::Slot(g) => g.take(),
             GuardInner::Overflow(v) => v.take(),
         };
         if let Some(instance) = dead {
-            self.pool.quarantine_instance(instance);
+            self.pool.quarantine_instance(instance); // pallas-lint: calls-lock(backend.evict_sink)
         }
+        // pallas-lint: end-lock(pool.slot)
         // Drop now releases an empty slot (or an empty overflow option).
     }
 }

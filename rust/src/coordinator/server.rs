@@ -484,6 +484,7 @@ fn reject_leftovers(ctx: &WorkerCtx) {
     }
 }
 
+// pallas-lint: hot
 fn worker_loop(
     id: usize,
     queue: Arc<ShardedQueue<InFlight>>,
@@ -544,6 +545,7 @@ fn worker_loop(
         }
     }
 }
+// pallas-lint: end-hot
 
 /// Earliest deadline among a forming batch's requests, if any carries
 /// one.

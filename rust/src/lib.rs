@@ -35,6 +35,13 @@
 //! Pallas path is proven equivalent through golden traces generated at
 //! artifact-build time and through live PJRT execution ([`runtime`]).
 
+// The crate is unsafe-free except for the PJRT backend's documented
+// `unsafe impl Send for XlaSnn` (runtime/xla_backend.rs), which only
+// compiles under the off-by-default `xla` feature — so the default build
+// (CI tier-1, the lint gate, every test) proves the absence of unsafe
+// code outright.
+#![cfg_attr(not(feature = "xla"), forbid(unsafe_code))]
+
 pub mod ann;
 pub mod bench;
 pub mod cli;
@@ -44,6 +51,7 @@ pub mod data;
 pub mod error;
 pub mod experiments;
 pub mod fixed;
+pub mod lint;
 pub mod prng;
 pub mod rtl;
 pub mod runtime;

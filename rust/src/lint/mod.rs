@@ -1,0 +1,982 @@
+//! pallas-lint — the repo-invariant static-analysis pass.
+//!
+//! A hand-rolled, dependency-free analyzer that walks `rust/src` and
+//! `rust/tests` and enforces the concurrency and hot-path invariants the
+//! serving tier depends on but the compiler cannot see:
+//!
+//! * **L1 — poison discipline.** No `.lock().unwrap()` / `.lock().expect(`
+//!   anywhere: a panic while holding a guard poisons the mutex, and an
+//!   unwrap on the next acquire turns one crashed request into a dead
+//!   server. Every acquisition goes through [`crate::util::lock_recover`],
+//!   whose `unwrap_or_else(PoisonError::into_inner)` shape is invisible to
+//!   this rule on purpose.
+//! * **L2 — hot-path allocation discipline.** Inside a
+//!   `// pallas-lint: hot` … `// pallas-lint: end-hot` fence, no
+//!   allocating construct (`Vec::new(`, `vec![`, `.to_vec()`, `.clone()`,
+//!   `.collect()`, `String::from(`, `String::new(`, `Box::new(`,
+//!   `.to_string()`, `.to_owned()`, `format!`) may appear, except on lines
+//!   (or the statement following a standalone comment) carrying
+//!   `// pallas-lint: allow(alloc) reason=…` with a non-empty reason.
+//! * **L3 — saturation funnel.** In datapath files (paths containing
+//!   `src/rtl/`, `src/snn/`, `src/fixed/`), accumulator-plane arithmetic
+//!   must flow through the saturating funnels (`sat_add`, `sat_clamp`,
+//!   `write_acc`, `write_acc_at`, `leak`): a statement that touches an
+//!   `acc` token with a bare `+`/`+=`, or uses `.saturating_add(` /
+//!   `.wrapping_add(` directly, is flagged. Index arithmetic inside
+//!   `acc[…]` brackets is masked out first, funnel *bodies* and statements
+//!   that *mention* a funnel are exempt, and assertions are exempt
+//!   (they compare, they don't write).
+//! * **L4 — metrics snapshot coherence.** In the file declaring
+//!   `pub struct ServerMetrics`: every atomic load inside `fn snapshot`
+//!   must use `Ordering::Acquire` (the snapshot's conservation law reads
+//!   sinks first and relies on acquire/release pairing), and every
+//!   `pub … : AtomicU64` counter must appear both in `MetricsSnapshot`
+//!   and in the `snapshot_conservation_under_load` test body — a counter
+//!   missing from either is invisible to the conservation cross-check.
+//! * **L5 — lock-order acyclicity.** `// pallas-lint: lock(NAME)` /
+//!   `// pallas-lint: end-lock(NAME)` annotations declare lexical
+//!   lock-acquisition regions (LIFO-matched), and
+//!   `// pallas-lint: calls-lock(NAME)` declares a cross-file call-chain
+//!   edge from every open region without opening one. The union graph of
+//!   declared edges must be acyclic; each edge participating in a cycle
+//!   is its own finding.
+//!
+//! The lexer is a real (if small) state machine: string/raw-string/char
+//! literals are blanked before any pattern matching, block comments nest,
+//! and line comments are captured separately so the directive parser only
+//! ever sees comment text. Directives must *start* the comment text.
+//!
+//! Known-bad fixtures live in `fixtures/*.fixture` (a non-`.rs` extension
+//! so the tree walk never lints them) and carry `EXPECT:Lx` markers on
+//! the lines each rule must flag; `rust/tests/lint_self.rs` pins both
+//! directions — every fixture fires exactly at its markers, and the real
+//! tree is clean.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Rule identifiers. `Directive` ("D0") covers malformed or unknown
+/// `pallas-lint:` annotations themselves, so a typo'd directive can never
+/// silently disable a rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Rule {
+    L1,
+    L2,
+    L3,
+    L4,
+    L5,
+    Directive,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::L1 => "L1",
+            Rule::L2 => "L2",
+            Rule::L3 => "L3",
+            Rule::L4 => "L4",
+            Rule::L5 => "L5",
+            Rule::Directive => "D0",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Option<Rule> {
+        match id {
+            "L1" => Some(Rule::L1),
+            "L2" => Some(Rule::L2),
+            "L3" => Some(Rule::L3),
+            "L4" => Some(Rule::L4),
+            "L5" => Some(Rule::L5),
+            "D0" => Some(Rule::Directive),
+            _ => None,
+        }
+    }
+}
+
+/// One machine-readable finding: file, 1-indexed line, rule and a trimmed
+/// excerpt of the offending code.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+    pub excerpt: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {} — {}",
+            self.file,
+            self.line,
+            self.rule.id(),
+            self.message,
+            self.excerpt
+        )
+    }
+}
+
+/// A declared lock-order edge: while region `from` is open, lock `to` is
+/// (or may be, via `calls-lock`) acquired.
+#[derive(Clone, Debug)]
+pub struct LockEdge {
+    pub from: String,
+    pub to: String,
+    pub file: String,
+    pub line: usize,
+}
+
+/// Result of analyzing a set of files.
+pub struct Analysis {
+    pub findings: Vec<Finding>,
+    pub files: usize,
+    pub lines: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Lexer: per-line {code, comment} views with literals blanked.
+// ---------------------------------------------------------------------------
+
+struct StrippedLine {
+    /// Source code with string/char-literal contents and comments replaced
+    /// by spaces (quotes kept), so pattern matching never fires inside a
+    /// literal.
+    code: String,
+    /// Text of the line comment on this line (after `//`, `///` or `//!`),
+    /// empty if none. Block-comment text is discarded: directives are
+    /// line-comment only.
+    comment: String,
+}
+
+enum LexState {
+    Code,
+    Str,
+    RawStr(usize),
+    Block(usize),
+}
+
+fn strip_source(src: &str) -> Vec<StrippedLine> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = LexState::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(StrippedLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        match state {
+            LexState::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    // Line comment: capture its text (minus the marker)
+                    // up to end of line, then resume at the newline.
+                    let mut j = i + 2;
+                    if chars.get(j) == Some(&'/') || chars.get(j) == Some(&'!') {
+                        j += 1;
+                    }
+                    while j < chars.len() && chars[j] != '\n' {
+                        comment.push(chars[j]);
+                        j += 1;
+                    }
+                    i = j;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = LexState::Block(1);
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = LexState::Str;
+                    i += 1;
+                } else if c == 'r'
+                    && !prev_is_ident(&code)
+                    && raw_str_hashes(&chars, i + 1).is_some()
+                {
+                    let n = raw_str_hashes(&chars, i + 1).unwrap();
+                    code.push('r');
+                    for _ in 0..n {
+                        code.push('#');
+                    }
+                    code.push('"');
+                    state = LexState::RawStr(n);
+                    i += 2 + n;
+                } else if c == '\'' {
+                    // Char literal vs lifetime. A char literal is `'x'` or
+                    // `'\…'`; anything else (`'a`, `'static`) is a
+                    // lifetime and only the quote is consumed.
+                    if chars.get(i + 1) == Some(&'\\') {
+                        code.push('\'');
+                        i += 2; // skip the backslash
+                        while i < chars.len() && chars[i] != '\'' {
+                            code.push(' ');
+                            i += 1;
+                        }
+                        code.push('\'');
+                        i += 1;
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        code.push('\'');
+                        code.push(' ');
+                        code.push('\'');
+                        i += 3;
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            LexState::Str => {
+                if c == '\\' {
+                    code.push(' ');
+                    if chars.get(i + 1).is_some_and(|&n| n != '\n') {
+                        code.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    state = LexState::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            LexState::RawStr(n) => {
+                if c == '"' && (0..n).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+                    code.push('"');
+                    for _ in 0..n {
+                        code.push('#');
+                    }
+                    state = LexState::Code;
+                    i += 1 + n;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            LexState::Block(d) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = LexState::Block(d + 1);
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    state = if d == 1 { LexState::Code } else { LexState::Block(d - 1) };
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(StrippedLine { code, comment });
+    }
+    lines
+}
+
+fn prev_is_ident(code: &str) -> bool {
+    code.chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// If `chars[at..]` starts a raw-string opener tail (`#*"`), the number of
+/// hashes; `None` otherwise.
+fn raw_str_hashes(chars: &[char], at: usize) -> Option<usize> {
+    let mut n = 0;
+    while chars.get(at + n) == Some(&'#') {
+        n += 1;
+    }
+    (chars.get(at + n) == Some(&'"')).then_some(n)
+}
+
+// ---------------------------------------------------------------------------
+// Directives.
+// ---------------------------------------------------------------------------
+
+enum Directive {
+    Hot,
+    EndHot,
+    /// `allow(alloc)`; true iff a non-empty `reason=` was given.
+    AllowAlloc(bool),
+    Lock(String),
+    EndLock(String),
+    CallsLock(String),
+    Malformed(String),
+}
+
+const DIRECTIVE_PREFIX: &str = "pallas-lint:";
+
+fn parse_directive(comment: &str) -> Option<Directive> {
+    let t = comment.trim();
+    let rest = t.strip_prefix(DIRECTIVE_PREFIX)?.trim_start();
+    if rest == "hot" || rest.starts_with("hot ") {
+        return Some(Directive::Hot);
+    }
+    if rest == "end-hot" || rest.starts_with("end-hot ") {
+        return Some(Directive::EndHot);
+    }
+    if let Some(tail) = rest.strip_prefix("allow(alloc)") {
+        let reason_ok = tail
+            .trim_start()
+            .strip_prefix("reason=")
+            .is_some_and(|r| !r.trim().is_empty());
+        return Some(Directive::AllowAlloc(reason_ok));
+    }
+    for (prefix, make) in [
+        ("calls-lock(", Directive::CallsLock as fn(String) -> Directive),
+        ("end-lock(", Directive::EndLock as fn(String) -> Directive),
+        ("lock(", Directive::Lock as fn(String) -> Directive),
+    ] {
+        if let Some(tail) = rest.strip_prefix(prefix) {
+            return Some(match tail.split_once(')') {
+                Some((name, _)) if !name.trim().is_empty() => make(name.trim().to_string()),
+                _ => Directive::Malformed(t.to_string()),
+            });
+        }
+    }
+    Some(Directive::Malformed(t.to_string()))
+}
+
+// ---------------------------------------------------------------------------
+// Statement fragments (for L1/L3): code joined across lines, split on
+// `;`, `{`, `}`, each fragment remembering its starting line and closing
+// delimiter.
+// ---------------------------------------------------------------------------
+
+struct Fragment {
+    text: String,
+    start_line: usize,
+    delim: char,
+}
+
+fn fragments(lines: &[StrippedLine]) -> Vec<Fragment> {
+    let mut out = Vec::new();
+    let mut text = String::new();
+    let mut start_line = 0usize;
+    for (idx, line) in lines.iter().enumerate() {
+        for c in line.code.chars() {
+            if text.trim().is_empty() && !c.is_whitespace() {
+                start_line = idx + 1;
+                text.clear();
+            }
+            if c == ';' || c == '{' || c == '}' {
+                out.push(Fragment { text: std::mem::take(&mut text), start_line, delim: c });
+            } else {
+                text.push(c);
+            }
+        }
+        text.push(' ');
+    }
+    if !text.trim().is_empty() {
+        out.push(Fragment { text, start_line, delim: ' ' });
+    }
+    out
+}
+
+fn excerpt_of(s: &str) -> String {
+    let t = s.split_whitespace().collect::<Vec<_>>().join(" ");
+    if t.len() <= 80 {
+        return t;
+    }
+    let mut cut = 77;
+    while !t.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    format!("{}…", &t[..cut])
+}
+
+/// True iff `needle` occurs in `hay` with non-word characters (or the
+/// boundary) on both sides.
+fn word_present(hay: &str, needle: &str) -> bool {
+    let hb = hay.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(needle) {
+        let s = from + pos;
+        let e = s + needle.len();
+        let left_ok = s == 0 || !is_word(hb[s - 1]);
+        let right_ok = e >= hb.len() || !is_word(hb[e]);
+        if left_ok && right_ok {
+            return true;
+        }
+        from = s + 1;
+        while from < hay.len() && !hay.is_char_boundary(from) {
+            from += 1;
+        }
+    }
+    false
+}
+
+fn is_word(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+// ---------------------------------------------------------------------------
+// Rules.
+// ---------------------------------------------------------------------------
+
+const L1_PATTERNS: [&str; 2] = [".lock().unwrap()", ".lock().expect("];
+
+const L2_PATTERNS: [&str; 11] = [
+    "Vec::new(",
+    "vec![",
+    ".to_vec()",
+    ".clone()",
+    ".collect()",
+    "String::from(",
+    "String::new(",
+    "Box::new(",
+    ".to_string()",
+    ".to_owned()",
+    "format!",
+];
+
+/// Datapath path markers for L3.
+const L3_PATH_MARKERS: [&str; 3] = ["src/rtl/", "src/snn/", "src/fixed/"];
+
+/// Statements mentioning any of these (word-bounded) are sanctioned
+/// saturation funnels or funnel call sites.
+const L3_FUNNEL_MENTIONS: [&str; 5] =
+    ["sat_add", "sat_clamp", "write_acc", "write_acc_at", "leak"];
+
+/// Function bodies exempt from L3 (they *implement* the funnels).
+const L3_FUNNEL_FNS: [&str; 5] =
+    ["fn sat_add(", "fn sat_clamp(", "fn write_acc(", "fn write_acc_at(", "fn leak("];
+
+/// Blank the interior of every word-bounded `acc[…]` index expression so
+/// index arithmetic (`acc[j * lanes + b]`) never reads as accumulator
+/// arithmetic.
+fn mask_acc_indices(frag: &str) -> String {
+    let b: Vec<char> = frag.chars().collect();
+    let mut out: Vec<char> = b.clone();
+    let mut i = 0;
+    while i + 3 < b.len() {
+        let bounded = b[i] == 'a'
+            && b.get(i + 1) == Some(&'c')
+            && b.get(i + 2) == Some(&'c')
+            && (i == 0 || !(b[i - 1].is_alphanumeric() || b[i - 1] == '_'))
+            && b.get(i + 3) == Some(&'[');
+        if bounded {
+            let mut depth = 1usize;
+            let mut j = i + 4;
+            while j < b.len() && depth > 0 {
+                match b[j] {
+                    '[' => depth += 1,
+                    ']' => depth -= 1,
+                    _ => {}
+                }
+                if depth > 0 {
+                    out[j] = '#';
+                }
+                j += 1;
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out.into_iter().collect()
+}
+
+// ---------------------------------------------------------------------------
+// Per-file analysis.
+// ---------------------------------------------------------------------------
+
+/// Analyze one file's source. Pushes findings and declared lock edges;
+/// L5 cycle detection runs later over the union of all files' edges
+/// (see [`check_lock_graph`]).
+pub fn analyze_source(
+    path: &str,
+    src: &str,
+    findings: &mut Vec<Finding>,
+    edges: &mut Vec<LockEdge>,
+) -> usize {
+    let lines = strip_source(src);
+    let f = |rule: Rule, line: usize, message: String, excerpt: String| Finding {
+        file: path.to_string(),
+        line,
+        rule,
+        message,
+        excerpt,
+    };
+
+    // --- Pass A: line-oriented (directives, hot fences, L2). -------------
+    let mut hot_open: Option<usize> = None;
+    let mut pending_allow = false;
+    let mut open_locks: Vec<(String, usize)> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let mut line_allowed = false;
+        match parse_directive(&line.comment) {
+            Some(Directive::Hot) => {
+                if hot_open.is_some() {
+                    findings.push(f(
+                        Rule::L2,
+                        lineno,
+                        "nested hot fence".into(),
+                        excerpt_of(line.comment.trim()),
+                    ));
+                }
+                hot_open = Some(lineno);
+            }
+            Some(Directive::EndHot) => {
+                if hot_open.is_none() {
+                    findings.push(f(
+                        Rule::L2,
+                        lineno,
+                        "end-hot without an open hot fence".into(),
+                        excerpt_of(line.comment.trim()),
+                    ));
+                }
+                hot_open = None;
+            }
+            Some(Directive::AllowAlloc(reason_ok)) => {
+                if !reason_ok {
+                    findings.push(f(
+                        Rule::L2,
+                        lineno,
+                        "allow(alloc) requires a non-empty reason=".into(),
+                        excerpt_of(line.comment.trim()),
+                    ));
+                } else if line.code.trim().is_empty() {
+                    // Standalone: waives the whole following statement.
+                    pending_allow = true;
+                } else {
+                    line_allowed = true;
+                }
+            }
+            Some(Directive::Lock(name)) => {
+                for (open, _) in &open_locks {
+                    edges.push(LockEdge {
+                        from: open.clone(),
+                        to: name.clone(),
+                        file: path.to_string(),
+                        line: lineno,
+                    });
+                }
+                open_locks.push((name, lineno));
+            }
+            Some(Directive::EndLock(name)) => match open_locks.pop() {
+                Some((top, _)) if top == name => {}
+                Some((top, opened)) => {
+                    findings.push(f(
+                        Rule::L5,
+                        lineno,
+                        format!("end-lock({name}) closes lock({top}) opened at line {opened}"),
+                        excerpt_of(line.comment.trim()),
+                    ));
+                }
+                None => {
+                    findings.push(f(
+                        Rule::L5,
+                        lineno,
+                        format!("end-lock({name}) without an open lock region"),
+                        excerpt_of(line.comment.trim()),
+                    ));
+                }
+            },
+            Some(Directive::CallsLock(name)) => {
+                for (open, _) in &open_locks {
+                    edges.push(LockEdge {
+                        from: open.clone(),
+                        to: name.clone(),
+                        file: path.to_string(),
+                        line: lineno,
+                    });
+                }
+            }
+            Some(Directive::Malformed(text)) => {
+                findings.push(f(
+                    Rule::Directive,
+                    lineno,
+                    "unknown or malformed pallas-lint directive".into(),
+                    excerpt_of(&text),
+                ));
+            }
+            None => {}
+        }
+
+        let code = line.code.trim();
+        if !code.is_empty() {
+            if pending_allow {
+                line_allowed = true;
+                if code.ends_with(';') || code.ends_with('{') || code.ends_with('}') {
+                    pending_allow = false;
+                }
+            }
+            if hot_open.is_some() && !line_allowed {
+                let hits: Vec<&str> = L2_PATTERNS
+                    .iter()
+                    .copied()
+                    .filter(|p| line.code.contains(*p))
+                    .collect();
+                if !hits.is_empty() {
+                    findings.push(f(
+                        Rule::L2,
+                        lineno,
+                        format!("allocation in hot fence: {}", hits.join(", ")),
+                        excerpt_of(code),
+                    ));
+                }
+            }
+        }
+    }
+    if let Some(opened) = hot_open {
+        findings.push(f(Rule::L2, opened, "hot fence never closed".into(), String::new()));
+    }
+    for (name, opened) in open_locks {
+        findings.push(f(
+            Rule::L5,
+            opened,
+            format!("lock({name}) region never closed"),
+            String::new(),
+        ));
+    }
+
+    // --- Pass B: statement fragments (L1, L3). ---------------------------
+    let datapath = L3_PATH_MARKERS.iter().any(|m| path.contains(m));
+    let mut depth = 0usize;
+    let mut funnel_body: Option<usize> = None;
+    for frag in fragments(&lines) {
+        let squashed: String = frag.text.chars().filter(|c| !c.is_whitespace()).collect();
+        for p in L1_PATTERNS {
+            if squashed.contains(p) {
+                findings.push(f(
+                    Rule::L1,
+                    frag.start_line,
+                    format!("direct mutex unwrap ({p}); use util::lock_recover"),
+                    excerpt_of(&frag.text),
+                ));
+            }
+        }
+        if datapath && funnel_body.is_none() {
+            l3_check(path, &frag, &squashed, findings);
+        }
+        match frag.delim {
+            '{' => {
+                let funnel_sig = L3_FUNNEL_FNS.iter().any(|s| {
+                    let sq: String = s.chars().filter(|c| !c.is_whitespace()).collect();
+                    squashed.contains(&sq)
+                });
+                if funnel_body.is_none() && funnel_sig {
+                    funnel_body = Some(depth);
+                }
+                depth += 1;
+            }
+            '}' => {
+                depth = depth.saturating_sub(1);
+                if funnel_body == Some(depth) {
+                    funnel_body = None;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // --- Pass C: L4, only in the file declaring ServerMetrics. -----------
+    if lines.iter().any(|l| l.code.contains("pub struct ServerMetrics")) {
+        l4_check(path, &lines, findings);
+    }
+    lines.len()
+}
+
+fn l3_check(path: &str, frag: &Fragment, squashed: &str, findings: &mut Vec<Finding>) {
+    let f = |line: usize, message: String, excerpt: String| Finding {
+        file: path.to_string(),
+        line,
+        rule: Rule::L3,
+        message,
+        excerpt,
+    };
+    // Assertions compare accumulator state, they don't write it.
+    if frag.text.contains("assert") {
+        return;
+    }
+    for p in [".saturating_add(", ".wrapping_add("] {
+        if squashed.contains(p) {
+            findings.push(f(
+                frag.start_line,
+                format!("direct {p}…) in datapath; use the sat_add/write_acc funnels"),
+                excerpt_of(&frag.text),
+            ));
+            return;
+        }
+    }
+    if L3_FUNNEL_MENTIONS.iter().any(|m| word_present(&frag.text, m)) {
+        return;
+    }
+    let masked = mask_acc_indices(&frag.text);
+    if word_present(&masked, "acc") && masked.contains('+') {
+        findings.push(f(
+            frag.start_line,
+            "bare + on an accumulator outside the saturation funnels".into(),
+            excerpt_of(&frag.text),
+        ));
+    }
+}
+
+/// Brace-matched body of the item whose opening `{` is at or after
+/// `lines[start]`: returns (first_line_idx, last_line_idx) inclusive, in
+/// 0-indexed line indices.
+fn body_range(lines: &[StrippedLine], start: usize) -> Option<(usize, usize)> {
+    let mut depth = 0usize;
+    let mut opened = false;
+    for (idx, line) in lines.iter().enumerate().skip(start) {
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if opened && depth == 0 {
+                        return Some((start, idx));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+fn find_line(lines: &[StrippedLine], pat: &str) -> Option<usize> {
+    lines.iter().position(|l| l.code.contains(pat))
+}
+
+fn body_text(lines: &[StrippedLine], range: (usize, usize)) -> String {
+    let mut s = String::new();
+    for l in &lines[range.0..=range.1] {
+        s.push_str(&l.code);
+        s.push('\n');
+    }
+    s
+}
+
+fn l4_check(path: &str, lines: &[StrippedLine], findings: &mut Vec<Finding>) {
+    let f = |line: usize, message: String, excerpt: String| Finding {
+        file: path.to_string(),
+        line,
+        rule: Rule::L4,
+        message,
+        excerpt,
+    };
+
+    // Counter inventory from the ServerMetrics body.
+    let metrics_at = find_line(lines, "pub struct ServerMetrics").unwrap_or(0);
+    let metrics_body = body_range(lines, metrics_at);
+    let mut counters: Vec<(String, usize)> = Vec::new();
+    if let Some(range) = metrics_body {
+        for idx in range.0..=range.1 {
+            let code = lines[idx].code.trim();
+            if let Some(rest) = code.strip_prefix("pub ") {
+                if let Some((name, ty)) = rest.split_once(':') {
+                    if ty.contains("AtomicU64") {
+                        counters.push((name.trim().to_string(), idx + 1));
+                    }
+                }
+            }
+        }
+    }
+
+    // L4a: every atomic load in `fn snapshot` must be Acquire.
+    if let Some(snap_at) = find_line(lines, "fn snapshot(") {
+        if let Some(range) = body_range(lines, snap_at) {
+            for idx in range.0..=range.1 {
+                let code = &lines[idx].code;
+                if code.contains(".load(") && !code.contains("Acquire") {
+                    findings.push(f(
+                        idx + 1,
+                        "non-Acquire atomic load in snapshot path".into(),
+                        excerpt_of(code.trim()),
+                    ));
+                }
+            }
+        }
+    }
+
+    // L4b: every counter must surface in MetricsSnapshot and be exercised
+    // by the conservation test.
+    let snap_struct = find_line(lines, "struct MetricsSnapshot")
+        .and_then(|at| body_range(lines, at))
+        .map(|r| body_text(lines, r));
+    let cons_test = find_line(lines, "fn snapshot_conservation_under_load")
+        .and_then(|at| body_range(lines, at))
+        .map(|r| body_text(lines, r));
+    if snap_struct.is_none() {
+        findings.push(f(
+            metrics_at + 1,
+            "ServerMetrics declared but MetricsSnapshot struct not found in this file".into(),
+            String::new(),
+        ));
+    }
+    if cons_test.is_none() {
+        findings.push(f(
+            metrics_at + 1,
+            "ServerMetrics declared but snapshot_conservation_under_load test not found".into(),
+            String::new(),
+        ));
+    }
+    for (name, lineno) in &counters {
+        if let Some(body) = &snap_struct {
+            if !word_present(body, name) {
+                findings.push(f(
+                    *lineno,
+                    format!("counter {name} missing from MetricsSnapshot"),
+                    String::new(),
+                ));
+            }
+        }
+        if let Some(body) = &cons_test {
+            if !word_present(body, name) {
+                findings.push(f(
+                    *lineno,
+                    format!("counter {name} not exercised by snapshot_conservation_under_load"),
+                    String::new(),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// L5: cycle detection over the union lock graph.
+// ---------------------------------------------------------------------------
+
+/// Flag every declared edge that participates in a cycle of the union
+/// graph (one finding per edge, pinned at the edge's declaration site).
+pub fn check_lock_graph(edges: &[LockEdge], findings: &mut Vec<Finding>) {
+    let reaches = |from: &str, to: &str| -> bool {
+        let mut stack = vec![from];
+        let mut seen: Vec<&str> = Vec::new();
+        while let Some(n) = stack.pop() {
+            if n == to {
+                return true;
+            }
+            if seen.contains(&n) {
+                continue;
+            }
+            seen.push(n);
+            for e in edges {
+                if e.from == n {
+                    stack.push(&e.to);
+                }
+            }
+        }
+        false
+    };
+    for e in edges {
+        if reaches(&e.to, &e.from) {
+            findings.push(Finding {
+                file: e.file.clone(),
+                line: e.line,
+                rule: Rule::L5,
+                message: format!("lock edge {} -> {} participates in a cycle", e.from, e.to),
+                excerpt: String::new(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-tree entry points.
+// ---------------------------------------------------------------------------
+
+/// Analyze an explicit set of `(path_label, source)` pairs, running the
+/// cross-file lock-graph check at the end. This is the pure core used by
+/// both the tree walk and the fixture self-tests.
+pub fn analyze_files<'a>(files: impl IntoIterator<Item = (&'a str, &'a str)>) -> Analysis {
+    let mut findings = Vec::new();
+    let mut edges = Vec::new();
+    let mut n_files = 0usize;
+    let mut n_lines = 0usize;
+    for (path, src) in files {
+        n_files += 1;
+        n_lines += analyze_source(path, src, &mut findings, &mut edges);
+    }
+    check_lock_graph(&edges, &mut findings);
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Analysis { findings, files: n_files, lines: n_lines }
+}
+
+/// Walk `rust/src` and `rust/tests` under `root` (the repo root) and
+/// analyze every `.rs` file. Fixtures use the `.fixture` extension so the
+/// walk never sees them; the walk is sorted for deterministic output.
+pub fn analyze_tree(root: &Path) -> std::io::Result<Analysis> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for sub in ["rust/src", "rust/tests"] {
+        collect_rs(&root.join(sub), &mut paths)?;
+    }
+    paths.sort();
+    let mut sources = Vec::new();
+    for p in &paths {
+        let label = p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/");
+        sources.push((label, fs::read_to_string(p)?));
+    }
+    Ok(analyze_files(sources.iter().map(|(l, s)| (l.as_str(), s.as_str()))))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Embedded known-bad fixtures.
+// ---------------------------------------------------------------------------
+
+/// The known-bad fixtures, as `(virtual_path, source)` pairs. Virtual
+/// paths place each fixture in the directory whose rules it exercises
+/// (L3 needs a datapath path, L4 a coordinator one). `EXPECT:Lx` markers
+/// inside pin the exact line each rule must flag.
+pub fn fixtures() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("rust/src/coordinator/fixture_l1.rs", include_str!("fixtures/l1_lock_unwrap.fixture")),
+        ("rust/src/rtl/fixture_l2.rs", include_str!("fixtures/l2_hot_alloc.fixture")),
+        ("rust/src/rtl/fixture_l3.rs", include_str!("fixtures/l3_sat_funnel.fixture")),
+        ("rust/src/coordinator/fixture_l4.rs", include_str!("fixtures/l4_metrics.fixture")),
+        ("rust/src/coordinator/fixture_l5.rs", include_str!("fixtures/l5_lock_cycle.fixture")),
+    ]
+}
+
+/// Parse the `EXPECT:Lx` markers of a fixture into the expected
+/// `(line, rule)` set.
+pub fn expected_findings(src: &str) -> Vec<(usize, Rule)> {
+    let mut out = Vec::new();
+    for (idx, line) in src.lines().enumerate() {
+        let mut rest = line;
+        while let Some(pos) = rest.find("EXPECT:") {
+            let id = &rest[pos + 7..];
+            let id: String = id.chars().take_while(|c| c.is_ascii_alphanumeric()).collect();
+            if let Some(rule) = Rule::from_id(&id) {
+                out.push((idx + 1, rule));
+            }
+            rest = &rest[pos + 7..];
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}

@@ -780,6 +780,7 @@ impl RtlCore {
         result.map(|()| out)
     }
 
+    // pallas-lint: hot
     /// One ≤[`BATCH_LANES`]-image chunk of [`RtlCore::run_fast_batch`]
     /// (dense when `sparse` is `None`, CSR row application otherwise).
     fn run_batch_chunk(
@@ -793,6 +794,7 @@ impl RtlCore {
         let n_inputs = self.cfg.n_inputs();
         for img in images {
             if img.pixels.len() != n_inputs {
+                // pallas-lint: allow(alloc) reason=cold shape-validation error path
                 return Err(Error::ShapeMismatch(format!(
                     "image {} pixels vs core {}",
                     img.pixels.len(),
@@ -849,6 +851,7 @@ impl RtlCore {
         // pulse is recorded separately — the sequential engines snapshot
         // their window *after* `load_image`, so seeding-network events
         // belong to the cumulative totals, not the per-image window.
+        // pallas-lint: allow(alloc) reason=per-lane result logs are moved into each RtlResult
         let mut lanes: Vec<BatchLane> = (0..b_n).map(|_| BatchLane::default()).collect();
         for (b, (img, &seed)) in images.iter().zip(seeds).enumerate() {
             s.encoders[b].load(&img.pixels, seed, &mut lanes[b].load_act);
@@ -903,6 +906,7 @@ impl RtlCore {
         let BatchRun { lanes, s, .. } = run;
         for (b, lane) in lanes.into_iter().enumerate() {
             let mut window = lane.enc_act;
+            // pallas-lint: allow(alloc) reason=owned by the returned RtlResult
             let activity_by_layer: Vec<ActivityCounters> =
                 (0..n_layers).map(|l| s.layer_act[l][b]).collect();
             for la in &activity_by_layer {
@@ -921,6 +925,7 @@ impl RtlCore {
 
             let energy = self.energy_model.evaluate(&window);
             let energy_by_layer = self.energy_model.evaluate_layers(&activity_by_layer);
+            // pallas-lint: allow(alloc) reason=owned by the returned RtlResult
             let spike_counts_by_layer: Vec<Vec<u32>> =
                 s.arrays.iter().map(|a| a.spike_counts(b)).collect();
             let spike_counts =
@@ -940,6 +945,7 @@ impl RtlCore {
         }
         Ok(())
     }
+    // pallas-lint: end-hot
 
     /// One layer's integrate + leak phases, `FireMode::EndOfStep`.
     ///
@@ -1195,6 +1201,7 @@ struct BatchRun<'a> {
 }
 
 impl BatchRun<'_> {
+    // pallas-lint: hot
     /// Per-lane BRAM gate as a multi-word bitmask over lanes, written
     /// into the scratch `gate` words. Under `EndOfStep` firing enables
     /// cannot change mid-walk, so the caller hoists this out of the walk
@@ -1412,6 +1419,7 @@ impl BatchRun<'_> {
         }
         self.s.active.truncate(kept);
     }
+    // pallas-lint: end-hot
 }
 
 #[cfg(test)]

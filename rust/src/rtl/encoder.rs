@@ -71,6 +71,7 @@ impl RtlPoissonEncoder {
     /// byte-identical to the scalar walk; the pinned lane draws and
     /// chi-squared law in `rust/tests/encoder_stats.rs` plus the golden
     /// `run_fast` fixtures fail loudly on any bit drift.
+    // pallas-lint: hot
     pub fn tick_range_into(
         &mut self,
         start: usize,
@@ -126,6 +127,7 @@ impl RtlPoissonEncoder {
         act.prng_steps += (end - start) as u64;
         act.compares += (end - start) as u64;
     }
+    // pallas-lint: end-hot
 
     /// Current PRNG register values (observability for tests/waveforms).
     pub fn states(&self) -> &[u32] {

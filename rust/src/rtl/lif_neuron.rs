@@ -31,6 +31,12 @@
 //! engines regardless of plane layout. All three representations are
 //! proven state- and activity-equivalent by the property tests below.
 
+// The accumulator datapath is the paper's bit-exactness surface, so new
+// arithmetic here must be consciously annotated: each `allow` below cites
+// the bound that makes its operations safe (i64 widening before adds,
+// indices bounded by plane sizes, u64 event counters).
+#![deny(clippy::arithmetic_side_effects)]
+
 use crate::config::{PruneMode, SnnConfig};
 use crate::fixed::leak;
 
@@ -70,6 +76,10 @@ pub struct LifNeuronCore {
     cfg_v_rest: i32,
 }
 
+// Bounds: accumulators widen to i64 before any add (`sat_add`), spike
+// counts and activity counters are u32/u64 event tallies, and
+// `1 << (acc_bits - 1)` is validated ≤ 31 bits by `SnnConfig`.
+#[allow(clippy::arithmetic_side_effects)]
 impl LifNeuronCore {
     pub fn new(cfg: &SnnConfig) -> Self {
         LifNeuronCore {
@@ -119,10 +129,14 @@ impl LifNeuronCore {
         match ctrl {
             NeuronCtrl::Idle => {}
             NeuronCtrl::Add { weight } => {
-                let max = (1i32 << (self.cfg_acc_bits - 1)) - 1;
-                let sum = i64::from(self.acc) + i64::from(weight);
-                let clamped = sum.clamp(-(max as i64), max as i64) as i32;
-                if clamped as i64 != sum {
+                // Same clamp bound as `SnnConfig::acc_max()`; the integrate
+                // itself goes through the shared saturating-adder kernel,
+                // so the scalar reference model cannot drift from the
+                // array and batch sweeps (pallas-lint rule L3 rejects any
+                // accumulator `+` outside the funnel).
+                let acc_max = (1i32 << (self.cfg_acc_bits - 1)) - 1;
+                let (clamped, saturated) = sat_add(self.acc, weight, acc_max);
+                if saturated {
                     act.saturations += 1;
                 }
                 act.adds += 1;
@@ -190,8 +204,17 @@ impl LaneParams {
     }
 }
 
+// The sequential lane primitives below are the single-image engines' inner
+// loops: no allocation is tolerated here (pallas-lint rule L2), and all
+// accumulator arithmetic funnels through `sat_add`/`write_acc_at` (rule
+// L3).
+// pallas-lint: hot
+
 /// Register write with Hamming-distance toggle accounting — the one
 /// `write_acc` every lane-level primitive goes through.
+// Bounds: `j` is a bit index derived from the enable mask, < acc.len();
+// toggle tallies are u64.
+#[allow(clippy::arithmetic_side_effects)]
 #[inline(always)]
 fn write_acc_at(acc: &mut [i32], j: usize, next: i32, act: &mut ActivityCounters) {
     act.reg_toggles += u64::from(((acc[j] as u32) ^ (next as u32)).count_ones());
@@ -203,6 +226,9 @@ fn write_acc_at(acc: &mut [i32], j: usize, next: i32, act: &mut ActivityCounters
 /// sequential lane primitives and the batched neuron-major sweeps —
 /// funnels through this one kernel so the arithmetic cannot drift
 /// between plane layouts.
+// Bounds: both operands widen to i64 before the add; the result is
+// clamped back into i32 range by construction.
+#[allow(clippy::arithmetic_side_effects)]
 #[inline(always)]
 fn sat_add(acc: i32, w: i32, acc_max: i32) -> (i32, bool) {
     let sum = i64::from(acc) + i64::from(w);
@@ -213,6 +239,9 @@ fn sat_add(acc: i32, w: i32, acc_max: i32) -> (i32, bool) {
 /// One BRAM row pulse over one lane: integrate `row[j]` into every
 /// *enabled* neuron with per-add saturation (ascending `j`, like the
 /// adder-tree fanout).
+// Bounds: `wi * 64 + tz` < 64 * enabled.len() = plane size; `m - 1` is
+// guarded by `m != 0`; event tallies are u64.
+#[allow(clippy::arithmetic_side_effects)]
 #[inline]
 fn lane_add_row(
     acc: &mut [i32],
@@ -246,6 +275,9 @@ fn lane_add_row(
 /// magnitude threshold 0 the CSR holds every entry, so the visited set,
 /// order and arithmetic are identical to the dense walk — bit- and
 /// activity-exact.
+// Bounds: CSR columns are validated < the layer width at construction;
+// event tallies are u64.
+#[allow(clippy::arithmetic_side_effects)]
 #[inline]
 fn lane_add_sparse(
     acc: &mut [i32],
@@ -272,6 +304,8 @@ fn lane_add_sparse(
 
 /// One `Leak` clock over one lane: shift-subtract decay on every enabled
 /// neuron.
+// Bounds: same mask-walk indices as `lane_add_row`; tallies are u64.
+#[allow(clippy::arithmetic_side_effects)]
 #[inline]
 fn lane_leak(acc: &mut [i32], enabled: &[u64], p: &LaneParams, act: &mut ActivityCounters) {
     for wi in 0..enabled.len() {
@@ -290,6 +324,9 @@ fn lane_leak(acc: &mut [i32], enabled: &[u64], p: &LaneParams, act: &mut Activit
 /// One `Fire` clock over one lane (`FireMode::EndOfStep`): evaluate the
 /// threshold comparator of every enabled neuron, setting `fired[j]` and
 /// hard-resetting on a crossing. `fired` must be pre-cleared.
+// Bounds: same mask-walk indices as `lane_add_row`; spike counts are u32
+// tallies bounded by the timestep window.
+#[allow(clippy::arithmetic_side_effects)]
 fn lane_fire_check(
     acc: &mut [i32],
     spike_count: &mut [u32],
@@ -320,6 +357,8 @@ fn lane_fire_check(
 /// threshold commit a `FireCheck` (and its comparator activity), exactly
 /// like the cycle path's `above_threshold()` pre-gate. Returns true when
 /// any neuron fired. `fired` must be pre-cleared.
+// Bounds: same mask-walk indices and tallies as `lane_fire_check`.
+#[allow(clippy::arithmetic_side_effects)]
 fn lane_immediate_fire(
     acc: &mut [i32],
     spike_count: &mut [u32],
@@ -347,8 +386,11 @@ fn lane_immediate_fire(
     }
     any
 }
+// pallas-lint: end-hot
 
 /// Full enable mask for `n` neurons over `words` mask words.
+// Bounds: `words >= 1` by the `.max(1)`, and `rem < 64`.
+#[allow(clippy::arithmetic_side_effects)]
 fn full_mask_words(n: usize) -> Vec<u64> {
     let words = n.div_ceil(64).max(1);
     let mut mask = vec![u64::MAX; words];
@@ -385,6 +427,10 @@ pub struct LifNeuronArray {
     params: LaneParams,
 }
 
+// Bounds: all indices derive from mask-bit positions or `0..n` walks over
+// planes sized `n`; arithmetic on accumulators funnels through the lane
+// primitives above.
+#[allow(clippy::arithmetic_side_effects)]
 impl LifNeuronArray {
     /// Build an array sized to the config's *output* width — callers
     /// construct one per layer via [`crate::SnnConfig::layer_config`].
@@ -550,6 +596,10 @@ pub struct LifBatchArray {
     params: LaneParams,
 }
 
+// Bounds: plane indices are `j * lanes + b` with `j < n`, `b < lanes` and
+// planes sized `n * lanes`; lane-mask words mirror the enable-mask idiom;
+// accumulator arithmetic funnels through `sat_add`/`write_acc_at`.
+#[allow(clippy::arithmetic_side_effects)]
 impl LifBatchArray {
     /// Build `lanes` fresh lanes sized to the config's *output* width
     /// (callers construct one per layer via
@@ -650,6 +700,11 @@ impl LifBatchArray {
         let (wb, bit) = (b / 64, b % 64);
         (0..self.n).any(|j| (self.enabled[j * self.lane_words + wb] >> bit) & 1 == 1)
     }
+
+    // The batched sweeps and single-lane clocks below are the wide-lane
+    // engine's inner loops: alloc-free (pallas-lint rule L2), funneled
+    // arithmetic (rule L3).
+    // pallas-lint: hot
 
     /// One BRAM row pulse applied to **every lane set in `lane_mask`** in
     /// one sweep: for each neuron `j` (ascending, like the adder-tree
@@ -841,6 +896,7 @@ impl LifBatchArray {
         }
         any
     }
+    // pallas-lint: end-hot
 
     /// Drive lane `b`'s enable bits from its own spike counts — the
     /// controller's pruning-mask update, applied at the same latch points
@@ -870,6 +926,8 @@ impl LifBatchArray {
     }
 }
 
+// Test arithmetic (sizes, indices) is bounded by the tiny generated cases.
+#[allow(clippy::arithmetic_side_effects)]
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -174,6 +174,7 @@ impl LifLayer {
         }
     }
 
+    // pallas-lint: hot
     /// Event-list step over a CSR weight layer (the behavioral mirror of
     /// the RTL sparse sweep): integration touches only the retained
     /// synapses of each active input's row, and `adds_performed` credits
@@ -232,6 +233,7 @@ impl LifLayer {
             }
         }
     }
+    // pallas-lint: end-hot
 
     /// Advance one timestep, returning full observability.
     pub fn step_traced(&mut self, spikes_in: &[bool]) -> StepTrace {
@@ -436,6 +438,7 @@ impl LifBatchStack {
         }
     }
 
+    // pallas-lint: hot
     /// Advance one timestep for every lane in `live`, chaining each
     /// layer's fired masks into the next layer's event set. `active[b]`
     /// is lane `b`'s layer-0 event list (spiking input indices); entries
@@ -554,6 +557,7 @@ impl LifBatchStack {
             }
         }
     }
+    // pallas-lint: end-hot
 
     /// Lane `b`'s final-layer spike counts, gathered from the
     /// neuron-major plane.

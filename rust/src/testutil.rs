@@ -69,8 +69,12 @@ impl PropRunner {
     /// Run the property across all cases. Panics (with replay info) on the
     /// first failing case.
     pub fn run<F: FnMut(&mut Gen)>(self, mut property: F) {
+        // Under Miri every instruction is interpreted (~2–3 orders of
+        // magnitude slower), so shrink the default case count and keep the
+        // run a smoke test; SNN_PROP_CASES still overrides explicitly.
         let cases = match std::env::var("SNN_PROP_CASES") {
             Ok(s) => s.parse().expect("SNN_PROP_CASES must be a u32"),
+            Err(_) if cfg!(miri) => (self.cases / 25).max(2),
             Err(_) => self.cases,
         };
         for case in 0..cases {

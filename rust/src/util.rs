@@ -1,5 +1,22 @@
 //! Small helpers shared across layers.
 
+use std::sync::{Mutex, MutexGuard};
+
+/// Poison-recovering lock for state that stays sound across a panic
+/// (counter sinks, recycled-instance stashes, fault bookkeeping). A
+/// `PoisonError` only means *some* thread panicked while holding the
+/// guard; for these uses the data is still meaningful, and propagating
+/// the panic would cascade one fault through every subsequent request.
+///
+/// This is the **only** place in the repo allowed to call
+/// `Mutex::lock` without routing the poison case somewhere deliberate —
+/// `pallas-lint` rule L1 rejects `.lock().unwrap()` / `.lock().expect(`
+/// everywhere else, so every mutex acquisition either goes through here
+/// or handles `PoisonError` explicitly at the call site.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Priority-encoded argmax: the index of the maximum value, ties broken
 /// toward the **lowest** index — the behaviour of a hardware priority
 /// encoder scanning the spike-count registers from 0 upward.
@@ -110,5 +127,20 @@ mod tests {
     #[test]
     fn empty_defaults_to_zero() {
         assert_eq!(priority_argmax(&[]), 0);
+    }
+
+    #[test]
+    fn lock_recover_heals_poison() {
+        use std::sync::Arc;
+        let m = Arc::new(Mutex::new(41u32));
+        let m2 = Arc::clone(&m);
+        let t = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            panic!("poison the mutex");
+        });
+        assert!(t.join().is_err());
+        // The data survives the panic and stays usable.
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 42);
     }
 }

@@ -34,6 +34,7 @@ use snn_rtl::error::Error;
 use snn_rtl::fixed::WeightMatrix;
 use snn_rtl::prng::splitmix32;
 use snn_rtl::snn::EarlyExit;
+use snn_rtl::util::lock_recover;
 use snn_rtl::SnnConfig;
 
 /// Run `body` on a helper thread and fail loudly if it does not finish
@@ -470,7 +471,7 @@ impl Backend for RecordingStub {
         seeds: &[u32],
         _early: EarlyExit,
     ) -> snn_rtl::Result<Vec<BackendOutput>> {
-        self.calls.lock().unwrap().push((seeds.to_vec(), Instant::now()));
+        lock_recover(&self.calls).push((seeds.to_vec(), Instant::now()));
         Ok(images
             .iter()
             .zip(seeds)
@@ -533,7 +534,7 @@ fn latency_spike_delays_only_the_victims_subbatch() {
         // The siblings' inner call must predate the sleep; the victims'
         // must trail it. (Half-spike tolerance: the only work before the
         // first call is vector bookkeeping.)
-        let calls = stub.calls.lock().unwrap().clone();
+        let calls = lock_recover(&stub.calls).clone();
         assert_eq!(calls.len(), 2, "exactly one sibling call + one victim call");
         let (rest_seeds, rest_t) = &calls[0];
         let (vic_seeds, vic_t) = &calls[1];
@@ -559,7 +560,7 @@ fn latency_spike_delays_only_the_victims_subbatch() {
             .unwrap();
         assert!(t1.elapsed() < spike / 2, "victim-free batch was delayed");
         assert_eq!(out.len(), 4);
-        assert_eq!(stub.calls.lock().unwrap().len(), 3);
+        assert_eq!(lock_recover(&stub.calls).len(), 3);
         assert_eq!(wrapper.injections().latency_spikes, 1, "no spike may fire");
     });
 }

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Perf-trajectory bench runner: builds the release binary and emits
-# BENCH_8.json (images/sec for the RTL cycle path vs fast path, batched
+# BENCH_9.json (images/sec for the RTL cycle path vs fast path, batched
 # vs per-image engine throughput at batch 1/8/32/64/128/256 — the wide
 # rows run one multi-word chunk — sparse-vs-dense engine throughput and
 # adds-performed at 100/50/10% weight density for [784,10] and
@@ -11,10 +11,11 @@
 # intra-batch fan-out off vs on, the calibrated fan-out crossover, an
 # open-loop paced-arrival tail-latency row free of coordinated omission,
 # and a fault-injection row measuring goodput and recovery counters
-# under a deterministic mixed fault plan). Pass --quick for a short run.
+# under a deterministic mixed fault plan, and the pallas_lint row timing
+# the full-tree static-analysis pass). Pass --quick for a short run.
 #
 #   tools/run_bench.sh [--quick]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 cargo run --release --bin bench-report -- "$@"
-echo "wrote $(pwd)/BENCH_8.json"
+echo "wrote $(pwd)/BENCH_9.json"
