@@ -55,7 +55,17 @@
 //!   asserting the CSR speedup survives the neuron-major wide sweep
 //!   (≥ 2× dense at b128),
 //!
-//! and writes the results to `BENCH_9.json` (plus stdout; the emitted
+//! * the **thread-parallel batch kernel**: images/s of the dense wide
+//!   sweep at threads 1 / 2 / 4 × hidden 128 / 512 × fixed lane widths
+//!   64 / 128 / 256, plus the 10%-density CSR sweep at threads 1 / 4 —
+//!   the neuron-range-sharding acceptance numbers (threads = 4 must beat
+//!   threads = 1 on the [784, 512, 10] dense batch-128 row), and the
+//!   cache-aware autotuned `ChunkPlan` vs the fixed 256-lane plan at
+//!   batch 256 (the narrower autotuned chunk must hold ≥ 0.9× of
+//!   fixed-256 — it trades lane amortization for plane residency, so it
+//!   must never *lose* throughput to the tune),
+//!
+//! and writes the results to `BENCH_10.json` (plus stdout; the emitted
 //! name is the single `BENCH_NAME` constant). BENCH_1 recorded qps only;
 //! BENCH_2 added the percentile columns; BENCH_3 added the depth rows of
 //! the N-layer refactor; BENCH_4 the per-layer threshold/pruning rows;
@@ -66,10 +76,11 @@
 //! b128/b256 and the `sparse_batched_wide` row of the neuron-major
 //! multi-word engine; BENCH_9 adds the `pallas_lint` row (full-tree
 //! static-analysis runtime, asserting zero findings from the bench binary
-//! too). Note the guarded batch path (`catch_unwind` +
-//! typed replies) is in *every* row since BENCH_6 — its cost shows up as
-//! the BENCH_5 → BENCH_6 delta of the unchanged rows, not as a
-//! within-report column.
+//! too); BENCH_10 adds the `parallel_kernel` rows above
+//! (EXPERIMENTS.md §Kernel Tuning). Note the guarded batch path
+//! (`catch_unwind` + typed replies) is in *every* row since BENCH_6 — its
+//! cost shows up as the BENCH_5 → BENCH_6 delta of the unchanged rows,
+//! not as a within-report column.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -86,13 +97,14 @@ use snn_rtl::experiments::{
     calibration_demo_image, calibration_demo_prune, calibration_demo_stack,
 };
 use snn_rtl::fixed::{WeightMatrix, WeightStack};
+use snn_rtl::plan::ChunkPlan;
 use snn_rtl::prng::Xorshift32;
 use snn_rtl::rtl::RtlCore;
 use snn_rtl::snn::EarlyExit;
 use snn_rtl::SnnConfig;
 
 /// The emitted report name — bump this (one place) when a PR adds rows.
-const BENCH_NAME: &str = "BENCH_9";
+const BENCH_NAME: &str = "BENCH_10";
 
 fn weights(seed: u32) -> WeightMatrix {
     let mut rng = Xorshift32::new(seed);
@@ -612,6 +624,150 @@ fn main() {
          ({wide_sparse_ips:.1} vs {wide_dense_ips:.1} images/s at b128)"
     );
 
+    // Thread-parallel batch kernel: neuron-range sharding across worker
+    // threads, swept over hidden width and fixed lane width. Results are
+    // bit-identical at any thread count (the kernel's invariant, pinned
+    // by the engine tests); these rows record what the sharding *buys* —
+    // each worker walks a disjoint output-neuron range of the same
+    // neuron-major planes, so the win should grow with hidden width
+    // (more rows to split) and shrink when the per-range walk is too
+    // short to cover the scope-spawn cost. `--quick` trims the grid to
+    // the corners the asserts need.
+    let par_gen = DigitGen::new(13);
+    let par_images: Vec<Image> =
+        (0..128).map(|i| par_gen.sample((i % 10) as u8, i)).collect();
+    let par_refs: Vec<&Image> = par_images.iter().collect();
+    let par_seeds: Vec<u32> = (1..=par_refs.len() as u32).collect();
+    let thread_counts: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4] };
+    let lane_widths: &[usize] = if quick { &[128] } else { &[64, 128, 256] };
+    struct ParallelRow {
+        hidden: usize,
+        threads: usize,
+        lanes: usize,
+        ips: f64,
+    }
+    let mut parallel_dense: Vec<ParallelRow> = Vec::new();
+    for hidden in [128usize, 512] {
+        let topology = vec![784usize, hidden, 10];
+        let row_cfg =
+            SnnConfig::paper().with_topology(topology.clone()).with_timesteps(10);
+        for &threads in thread_counts {
+            for &lanes in lane_widths {
+                let mut core = RtlCore::new(row_cfg.clone(), stack(&topology, 7))
+                    .unwrap()
+                    .with_batch_threads(threads)
+                    .with_chunk_plan(ChunkPlan::fixed(lanes));
+                let run = bench.run(
+                    &format!("rtl_parallel_784_{hidden}_10_t{threads}_l{lanes}_b128"),
+                    || {
+                        black_box(
+                            core.run_fast_batch(&par_refs, &par_seeds, EarlyExit::Off)
+                                .unwrap(),
+                        );
+                    },
+                );
+                let ips = run.throughput(par_refs.len() as f64);
+                println!(
+                    "parallel_dense_784_{hidden}_10_t{threads}_l{lanes}: {ips:.1} images/s"
+                );
+                parallel_dense.push(ParallelRow { hidden, threads, lanes, ips });
+            }
+        }
+    }
+    let parallel_ips_at = |hidden: usize, threads: usize, lanes: usize| {
+        parallel_dense
+            .iter()
+            .find(|r| r.hidden == hidden && r.threads == threads && r.lanes == lanes)
+            .map(|r| r.ips)
+            .unwrap()
+    };
+    assert!(
+        parallel_ips_at(512, 4, 128) > parallel_ips_at(512, 1, 128),
+        "acceptance: neuron-range sharding — 4 worker threads ({:.1} images/s) must \
+         beat 1 ({:.1}) on the [784, 512, 10] dense b128 sweep; a flat line means \
+         the shards serialized or the per-layer barrier dominates the walk",
+        parallel_ips_at(512, 4, 128),
+        parallel_ips_at(512, 1, 128)
+    );
+
+    // The sharded sweep through the CSR engine: the same worker split
+    // drives `run_fast_batch_sparse`, so silence skipping and sharding
+    // compose (each worker skips the silent rows of its own range).
+    let mut parallel_sparse: Vec<ParallelRow> = Vec::new();
+    for hidden in [128usize, 512] {
+        let topology = vec![784usize, hidden, 10];
+        let row_cfg =
+            SnnConfig::paper().with_topology(topology.clone()).with_timesteps(10);
+        let pruned = stack_at_density(&topology, 7, 10);
+        for threads in [1usize, 4] {
+            let mut core = RtlCore::new(row_cfg.clone(), pruned.clone())
+                .unwrap()
+                .with_batch_threads(threads)
+                .with_chunk_plan(ChunkPlan::fixed(128));
+            core.attach_sparse(1);
+            let run = bench.run(
+                &format!("rtl_parallel_sparse_784_{hidden}_10_d10_t{threads}_b128"),
+                || {
+                    black_box(
+                        core.run_fast_batch_sparse(&par_refs, &par_seeds, EarlyExit::Off)
+                            .unwrap(),
+                    );
+                },
+            );
+            let ips = run.throughput(par_refs.len() as f64);
+            println!(
+                "parallel_sparse_784_{hidden}_10_d10_t{threads}: {ips:.1} images/s"
+            );
+            parallel_sparse.push(ParallelRow { hidden, threads, lanes: 128, ips });
+        }
+    }
+
+    // Cache-aware lane autotuning: the default (autotuned) plan vs the
+    // widest fixed plan at batch 256 on the wide stack. At batch 128 the
+    // two plans execute identically ([784, 512, 10] autotunes to 128
+    // lanes = one chunk either way), so the comparison needs a batch the
+    // plans actually split differently: 256 images is two 128-lane
+    // chunks autotuned vs one 256-lane chunk fixed. The narrower chunk
+    // walks each weight row twice but keeps the plane working set inside
+    // the L2 budget; the acceptance bar is "never loses more than noise"
+    // (>= 0.9x), with the upside left on the record, not asserted.
+    let tune_images: Vec<Image> =
+        (0..256).map(|i| par_gen.sample((i % 10) as u8, 2000 + i)).collect();
+    let tune_refs: Vec<&Image> = tune_images.iter().collect();
+    let tune_seeds: Vec<u32> = (1..=tune_refs.len() as u32).collect();
+    let tune_topology = vec![784usize, 512, 10];
+    let tune_cfg =
+        SnnConfig::paper().with_topology(tune_topology.clone()).with_timesteps(10);
+    let mut tuned_core = RtlCore::new(tune_cfg.clone(), stack(&tune_topology, 7)).unwrap();
+    let tuned_lanes = tuned_core.chunk_plan().lanes();
+    let tuned = bench.run("rtl_autotuned_784_512_10_b256", || {
+        black_box(
+            tuned_core.run_fast_batch(&tune_refs, &tune_seeds, EarlyExit::Off).unwrap(),
+        );
+    });
+    let mut fixed_core = RtlCore::new(tune_cfg, stack(&tune_topology, 7))
+        .unwrap()
+        .with_chunk_plan(ChunkPlan::fixed(256));
+    let fixed256 = bench.run("rtl_fixed256_784_512_10_b256", || {
+        black_box(
+            fixed_core.run_fast_batch(&tune_refs, &tune_seeds, EarlyExit::Off).unwrap(),
+        );
+    });
+    let tuned_ips = tuned.throughput(tune_refs.len() as f64);
+    let fixed256_ips = fixed256.throughput(tune_refs.len() as f64);
+    println!(
+        "lane_autotune_784_512_10_b256: autotuned(l{tuned_lanes}) {tuned_ips:.1} images/s  |  \
+         fixed-256 {fixed256_ips:.1} images/s  ({:.3}x)",
+        tuned_ips / fixed256_ips
+    );
+    assert!(
+        tuned_ips >= fixed256_ips * 0.9,
+        "acceptance: the L2-budget autotuned plan ({tuned_lanes} lanes, \
+         {tuned_ips:.1} images/s) must hold >= 0.9x of the fixed 256-lane plan \
+         ({fixed256_ips:.1} images/s) at b256 — a bigger loss means the narrower \
+         chunk's extra row walks are not being paid back by plane residency"
+    );
+
     // Adaptive fan-out crossover, measured against the (batched) RTL
     // backend: the policy the fixed 32/4 defaults would be replaced by.
     let probe_backend = RtlBackend::new(cfg.clone(), weights(7)).unwrap();
@@ -917,6 +1073,36 @@ fn main() {
          \"sparse_images_per_s\": {wide_sparse_ips:.2}, \"speedup\": {:.3} }},\n",
         wide_sparse_ips / wide_dense_ips
     ));
+    json.push_str("  \"parallel_kernel\": {\n");
+    json.push_str("    \"dense_b128\": {\n");
+    for (i, r) in parallel_dense.iter().enumerate() {
+        let comma = if i + 1 == parallel_dense.len() { "" } else { "," };
+        json.push_str(&format!(
+            "      \"784_{}_10_t{}_l{}\": {{ \"images_per_s\": {:.2} }}{comma}\n",
+            r.hidden, r.threads, r.lanes, r.ips
+        ));
+    }
+    json.push_str("    },\n");
+    json.push_str("    \"sparse_d10_b128\": {\n");
+    for (i, r) in parallel_sparse.iter().enumerate() {
+        let comma = if i + 1 == parallel_sparse.len() { "" } else { "," };
+        json.push_str(&format!(
+            "      \"784_{}_10_t{}\": {{ \"images_per_s\": {:.2} }}{comma}\n",
+            r.hidden, r.threads, r.ips
+        ));
+    }
+    json.push_str("    },\n");
+    json.push_str(&format!(
+        "    \"thread_scaling_784_512_10_l128\": {:.3},\n",
+        parallel_ips_at(512, 4, 128) / parallel_ips_at(512, 1, 128)
+    ));
+    json.push_str(&format!(
+        "    \"autotune_b256\": {{ \"auto_lanes\": {tuned_lanes}, \
+         \"auto_images_per_s\": {tuned_ips:.2}, \"fixed256_images_per_s\": \
+         {fixed256_ips:.2}, \"ratio\": {:.4} }}\n",
+        tuned_ips / fixed256_ips
+    ));
+    json.push_str("  },\n");
     json.push_str(&format!(
         "  \"calibrated_fanout\": {{ \"min_batch\": {}, \"max_parts\": {} }},\n",
         calibrated.min_batch, calibrated.max_parts

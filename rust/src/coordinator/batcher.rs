@@ -2,6 +2,11 @@
 //! most `max_delay` from the *first* request of the forming batch — the
 //! standard size-or-timeout policy of serving systems (vLLM-router-like),
 //! factored out as a pure, testable state machine.
+//!
+//! Lock-freedom note (pallas-lint L5): this module holds no `Mutex` and
+//! acquires none — each worker owns its `Batcher` exclusively, so the
+//! module contributes no nodes to the declared lock graph by design.
+//! Keep it that way: batch forming sits on the request path.
 
 use std::time::{Duration, Instant};
 

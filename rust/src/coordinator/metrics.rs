@@ -152,11 +152,13 @@ impl ServerMetrics {
         // break the invariant (see `snapshot_conservation_under_load`).
         //
         // Every other load is Acquire too — pallas-lint rule L4 enforces
-        // it. For the non-conservation counters Acquire buys the same
-        // monotone-pairing guarantee (e.g. `subbatches` never lags behind
-        // the `fanout_batches` read that preceded it) at zero cost on
-        // x86, and it keeps the rule simple enough to machine-check: no
-        // per-field exemption list to rot.
+        // it, and its publication half enforces the matching discipline
+        // tree-wide: every counter `fetch_add` must spell
+        // `Ordering::Release`. For the non-conservation counters the
+        // pairing buys the same monotone guarantee (e.g. `subbatches`
+        // never lags behind the `fanout_batches` read that preceded it)
+        // at zero cost on x86, and it keeps both halves simple enough to
+        // machine-check: no per-field exemption list to rot.
         let shed = self.shed.load(Ordering::Acquire);
         let completed = self.completed.load(Ordering::Acquire);
         let failed = self.failed.load(Ordering::Acquire);
@@ -260,7 +262,8 @@ mod tests {
 
     /// The conservation law must hold in *every* concurrent snapshot:
     /// writer threads drive full submit→terminal lifecycles (with the
-    /// production orderings: Relaxed admission, Release terminal) while a
+    /// production ordering — every counter bump publishes with Release,
+    /// as pallas-lint L4 enforces tree-wide) while a
     /// hammer thread snapshots nonstop and asserts
     /// `submitted >= completed + failed + shed` each time, then exact
     /// equality at quiescence. Deterministic: fixed iteration counts,
@@ -285,9 +288,10 @@ mod tests {
                 let m = Arc::clone(&m);
                 std::thread::spawn(move || {
                     for i in 0..PER_WRITER {
-                        m.submitted.fetch_add(1, Ordering::Relaxed);
-                        // Production terminal bumps are Release (they pair
-                        // with the snapshot's Acquire loads).
+                        // Every bump publishes with Release, exactly like
+                        // the production sites (pallas-lint L4 holds this
+                        // test to the same spelling it holds them to).
+                        m.submitted.fetch_add(1, Ordering::Release);
                         match (i + w as u64) % 3 {
                             0 => m.completed.fetch_add(1, Ordering::Release),
                             1 => m.failed.fetch_add(1, Ordering::Release),
@@ -296,18 +300,18 @@ mod tests {
                         // Every remaining counter churns concurrently too,
                         // so the hammer exercises whole-struct snapshots
                         // and the quiescent totals below pin each one.
-                        m.rejected.fetch_add(1, Ordering::Relaxed);
-                        m.batches.fetch_add(1, Ordering::Relaxed);
-                        m.batched_items.fetch_add(2, Ordering::Relaxed);
-                        m.steals.fetch_add(1, Ordering::Relaxed);
-                        m.fanout_batches.fetch_add(1, Ordering::Relaxed);
-                        m.subbatches.fetch_add(1, Ordering::Relaxed);
-                        m.steps_executed.fetch_add(1, Ordering::Relaxed);
-                        m.deadline_expired.fetch_add(1, Ordering::Relaxed);
-                        m.panics_recovered.fetch_add(1, Ordering::Relaxed);
-                        m.worker_restarts.fetch_add(1, Ordering::Relaxed);
-                        m.subbatch_retries.fetch_add(1, Ordering::Relaxed);
-                        m.quarantined_engines.fetch_add(1, Ordering::Relaxed);
+                        m.rejected.fetch_add(1, Ordering::Release);
+                        m.batches.fetch_add(1, Ordering::Release);
+                        m.batched_items.fetch_add(2, Ordering::Release);
+                        m.steals.fetch_add(1, Ordering::Release);
+                        m.fanout_batches.fetch_add(1, Ordering::Release);
+                        m.subbatches.fetch_add(1, Ordering::Release);
+                        m.steps_executed.fetch_add(1, Ordering::Release);
+                        m.deadline_expired.fetch_add(1, Ordering::Release);
+                        m.panics_recovered.fetch_add(1, Ordering::Release);
+                        m.worker_restarts.fetch_add(1, Ordering::Release);
+                        m.subbatch_retries.fetch_add(1, Ordering::Release);
+                        m.quarantined_engines.fetch_add(1, Ordering::Release);
                     }
                 })
             })

@@ -263,8 +263,8 @@ impl SubmitHandle {
     /// already passed.
     pub fn submit(&self, request: Request) -> Result<Receiver<Result<Response>>> {
         if request.deadline.is_some_and(|d| d <= Instant::now()) {
-            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            self.metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            self.metrics.rejected.fetch_add(1, Ordering::Release);
+            self.metrics.deadline_expired.fetch_add(1, Ordering::Release);
             return Err(Error::Shed("deadline already expired at submit".into()));
         }
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
@@ -276,15 +276,15 @@ impl SubmitHandle {
             InFlight { request, seed, submitted: Instant::now(), deadline, reply: reply_tx };
         match self.queue.push(inflight) {
             Ok(_shard) => {
-                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                self.metrics.submitted.fetch_add(1, Ordering::Release);
                 Ok(reply_rx)
             }
             Err(PushError::Full(_)) => {
-                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.metrics.rejected.fetch_add(1, Ordering::Release);
                 Err(Error::Overloaded("every ingress shard is at capacity".into()))
             }
             Err(PushError::Closed(_)) => {
-                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.metrics.rejected.fetch_add(1, Ordering::Release);
                 Err(Error::ShuttingDown("coordinator is shut down".into()))
             }
         }
@@ -440,7 +440,7 @@ fn supervisor_loop(ctx: WorkerCtx, mut slots: Vec<WorkerSlot>) {
                 if died && !drained && slot.restarts < budget {
                     std::thread::sleep(ctx.cfg.supervision.backoff_for(slot.restarts));
                     slot.restarts += 1;
-                    ctx.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                    ctx.metrics.worker_restarts.fetch_add(1, Ordering::Release);
                     slot.handle = Some(spawn_worker(slot.id, &ctx));
                 }
             }
@@ -506,7 +506,7 @@ fn worker_loop(
                 match queue.pop_some(id, batcher.remaining(), &mut steal_cursor) {
                     Popped::Items { items, stolen } => {
                         if stolen > 0 {
-                            metrics.steals.fetch_add(stolen as u64, Ordering::Relaxed);
+                            metrics.steals.fetch_add(stolen as u64, Ordering::Release);
                         }
                         batcher.push_many(items, Instant::now());
                     }
@@ -588,7 +588,7 @@ fn run_batch(
     for inflight in batch {
         if inflight.deadline.is_some_and(|d| d <= now) {
             metrics.shed.fetch_add(1, Ordering::Release);
-            metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            metrics.deadline_expired.fetch_add(1, Ordering::Release);
             let err = Error::Shed("deadline expired before execution".into());
             let _ = inflight.reply.try_send(Err(err));
         } else {
@@ -598,8 +598,8 @@ fn run_batch(
     if live.is_empty() {
         return None;
     }
-    metrics.batches.fetch_add(1, Ordering::Relaxed);
-    metrics.batched_items.fetch_add(live.len() as u64, Ordering::Relaxed);
+    metrics.batches.fetch_add(1, Ordering::Release);
+    metrics.batched_items.fetch_add(live.len() as u64, Ordering::Release);
 
     let images: Vec<&Image> = live.iter().map(|f| &f.request.image).collect();
     let seeds: Vec<u32> = live.iter().map(|f| f.seed).collect();
@@ -617,7 +617,7 @@ fn run_batch(
         fan_out_batch(&**backend, metrics, cfg.early, &images, &seeds, parts)
     };
     metrics.batch_latency.record(start.elapsed());
-    metrics.quarantined_engines.store(backend.quarantined_engines(), Ordering::Relaxed);
+    metrics.quarantined_engines.store(backend.quarantined_engines(), Ordering::Release);
 
     debug_assert_eq!(results.len(), live.len());
     for (inflight, result) in live.into_iter().zip(results) {
@@ -661,7 +661,7 @@ fn call_guarded(
         }
         Ok(Err(e)) => (Err(e), None),
         Err(payload) => {
-            metrics.panics_recovered.fetch_add(1, Ordering::Relaxed);
+            metrics.panics_recovered.fetch_add(1, Ordering::Release);
             let msg = panic_message(payload.as_ref());
             (Err(Error::BackendPanicked(msg)), Some(payload))
         }
@@ -703,7 +703,7 @@ fn run_chunk_with_retry(
     let result = match first {
         Ok(out) => Ok(out),
         Err(_) => {
-            metrics.subbatch_retries.fetch_add(1, Ordering::Relaxed);
+            metrics.subbatch_retries.fetch_add(1, Ordering::Release);
             let (second, p2) = call_guarded(backend, metrics, early, images, seeds);
             if payload.is_none() {
                 payload = p2;
@@ -739,7 +739,7 @@ fn fan_out_batch(
     parts: usize,
 ) -> (Vec<Result<BackendOutput>>, Option<PanicPayload>) {
     let chunk = images.len().div_ceil(parts);
-    metrics.fanout_batches.fetch_add(1, Ordering::Relaxed);
+    metrics.fanout_batches.fetch_add(1, Ordering::Release);
     // Phase 1: all sub-batches run concurrently, each behind its own
     // catch_unwind (a panicking sub-batch thread would otherwise abort
     // the scope by poisoning the join).
@@ -748,7 +748,7 @@ fn fan_out_batch(
         for (imgs, sds) in images[chunk..].chunks(chunk).zip(seeds[chunk..].chunks(chunk)) {
             tails.push(scope.spawn(move || call_guarded(backend, metrics, early, imgs, sds)));
         }
-        metrics.subbatches.fetch_add(tails.len() as u64 + 1, Ordering::Relaxed);
+        metrics.subbatches.fetch_add(tails.len() as u64 + 1, Ordering::Release);
         // Run the first sub-batch on this worker thread; the spawned
         // tails overlap with it.
         let head = call_guarded(backend, metrics, early, &images[..chunk], &seeds[..chunk]);
@@ -766,7 +766,7 @@ fn fan_out_batch(
             payload = entry.1.take();
         }
         if entry.0.is_err() {
-            metrics.subbatch_retries.fetch_add(1, Ordering::Relaxed);
+            metrics.subbatch_retries.fetch_add(1, Ordering::Release);
             let lo = k * chunk;
             let hi = (lo + chunk).min(images.len());
             let (retry, p2) =
@@ -791,10 +791,10 @@ fn respond_ok(metrics: &ServerMetrics, inflight: InFlight, out: BackendOutput) {
     if inflight.deadline.is_some_and(|d| d <= Instant::now()) {
         // The work finished late: still delivered (the caller may yet be
         // listening), but the expiry goes on record.
-        metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        metrics.deadline_expired.fetch_add(1, Ordering::Release);
     }
     metrics.completed.fetch_add(1, Ordering::Release);
-    metrics.steps_executed.fetch_add(u64::from(out.steps_run), Ordering::Relaxed);
+    metrics.steps_executed.fetch_add(u64::from(out.steps_run), Ordering::Release);
     metrics.latency.record(inflight.submitted.elapsed());
     let _ = inflight.reply.try_send(Ok(Response {
         class: out.class,

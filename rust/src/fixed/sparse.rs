@@ -103,6 +103,20 @@ impl SparseWeightLayer {
         (&self.col_idx[a..b], &self.values[a..b])
     }
 
+    /// Input row `i`'s retained entries restricted to the output-column
+    /// range `[j0, j1)`: `(columns, weights)` sub-slices of [`Self::row`]
+    /// (columns stay global). Because columns ascend within a row, the
+    /// restriction is two binary searches — this is how the
+    /// thread-parallel batched sweep partitions one CSR row across
+    /// disjoint neuron-range shards without rebuilding the CSR.
+    #[inline]
+    pub fn row_span(&self, i: usize, j0: usize, j1: usize) -> (&[u32], &[i32]) {
+        let (cols, vals) = self.row(i);
+        let lo = cols.partition_point(|&c| (c as usize) < j0);
+        let hi = cols.partition_point(|&c| (c as usize) < j1);
+        (&cols[lo..hi], &vals[lo..hi])
+    }
+
     /// Reconstruct the dense matrix (pruned entries become 0).
     pub fn to_dense(&self) -> WeightMatrix {
         let mut data = vec![0i32; self.n_inputs * self.n_outputs];
@@ -276,6 +290,37 @@ mod tests {
                     let expect = if w.abs() >= th { w } else { 0 };
                     assert_eq!(back.get(i, j), expect, "entry ({i},{j})");
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn row_span_partitions_each_row_exactly() {
+        PropRunner::new("csr_row_span", 50).run(|g| {
+            let ni = g.rng.range_i32(1, 20) as usize;
+            let no = g.rng.range_i32(1, 24) as usize;
+            let m = random_matrix(g, ni, no);
+            let th = g.rng.range_i32(0, 30);
+            let sp = SparseWeightLayer::from_dense(&m, th);
+            let cut_a = g.rng.range_i32(0, no as i32) as usize;
+            let cut_b = g.rng.range_i32(cut_a as i32, no as i32) as usize;
+            for i in 0..ni {
+                let (cols, vals) = sp.row(i);
+                // Any contiguous tiling's spans concatenate back to the row.
+                let spans = [(0, cut_a), (cut_a, cut_b), (cut_b, no)];
+                let mut got_cols = Vec::new();
+                let mut got_vals = Vec::new();
+                for &(j0, j1) in &spans {
+                    let (c, v) = sp.row_span(i, j0, j1);
+                    assert!(
+                        c.iter().all(|&c| (c as usize) >= j0 && (c as usize) < j1),
+                        "span [{j0}, {j1}) leaked a foreign column"
+                    );
+                    got_cols.extend_from_slice(c);
+                    got_vals.extend_from_slice(v);
+                }
+                assert_eq!(got_cols, cols, "spans must tile row {i} losslessly");
+                assert_eq!(got_vals, vals);
             }
         });
     }

@@ -52,6 +52,7 @@ pub mod error;
 pub mod experiments;
 pub mod fixed;
 pub mod lint;
+pub mod plan;
 pub mod prng;
 pub mod rtl;
 pub mod runtime;

@@ -33,6 +33,12 @@
 //!   `pub … : AtomicU64` counter must appear both in `MetricsSnapshot`
 //!   and in the `snapshot_conservation_under_load` test body — a counter
 //!   missing from either is invisible to the conservation cross-check.
+//!   The companion publication rule sweeps the *whole* tree: every
+//!   `<counter>.fetch_add(` on an inventoried counter must spell
+//!   `Ordering::Release` on the same line — the Acquire snapshot only
+//!   orders against Release bumps, and one Relaxed publisher (even a
+//!   stronger-but-unconventional `AcqRel`/`SeqCst`) silently breaks the
+//!   pairing the conservation law leans on.
 //! * **L5 — lock-order acyclicity.** `// pallas-lint: lock(NAME)` /
 //!   `// pallas-lint: end-lock(NAME)` annotations declare lexical
 //!   lock-acquisition regions (LIFO-matched), and
@@ -765,20 +771,15 @@ fn body_text(lines: &[StrippedLine], range: (usize, usize)) -> String {
     s
 }
 
-fn l4_check(path: &str, lines: &[StrippedLine], findings: &mut Vec<Finding>) {
-    let f = |line: usize, message: String, excerpt: String| Finding {
-        file: path.to_string(),
-        line,
-        rule: Rule::L4,
-        message,
-        excerpt,
+/// Counter inventory of a stripped file: the `pub NAME: AtomicU64` fields
+/// of its `pub struct ServerMetrics` body, with declaration lines. Empty
+/// when the file declares no `ServerMetrics`.
+fn server_metrics_counters(lines: &[StrippedLine]) -> Vec<(String, usize)> {
+    let Some(metrics_at) = find_line(lines, "pub struct ServerMetrics") else {
+        return Vec::new();
     };
-
-    // Counter inventory from the ServerMetrics body.
-    let metrics_at = find_line(lines, "pub struct ServerMetrics").unwrap_or(0);
-    let metrics_body = body_range(lines, metrics_at);
     let mut counters: Vec<(String, usize)> = Vec::new();
-    if let Some(range) = metrics_body {
+    if let Some(range) = body_range(lines, metrics_at) {
         for idx in range.0..=range.1 {
             let code = lines[idx].code.trim();
             if let Some(rest) = code.strip_prefix("pub ") {
@@ -790,6 +791,21 @@ fn l4_check(path: &str, lines: &[StrippedLine], findings: &mut Vec<Finding>) {
             }
         }
     }
+    counters
+}
+
+fn l4_check(path: &str, lines: &[StrippedLine], findings: &mut Vec<Finding>) {
+    let f = |line: usize, message: String, excerpt: String| Finding {
+        file: path.to_string(),
+        line,
+        rule: Rule::L4,
+        message,
+        excerpt,
+    };
+
+    // Counter inventory from the ServerMetrics body.
+    let metrics_at = find_line(lines, "pub struct ServerMetrics").unwrap_or(0);
+    let counters = server_metrics_counters(lines);
 
     // L4a: every atomic load in `fn snapshot` must be Acquire.
     if let Some(snap_at) = find_line(lines, "fn snapshot(") {
@@ -851,6 +867,56 @@ fn l4_check(path: &str, lines: &[StrippedLine], findings: &mut Vec<Finding>) {
     }
 }
 
+/// L4's publication half, swept over every file (counter bumps live on
+/// the request path, not in the metrics module): a line bumping an
+/// inventoried counter via `<counter>.fetch_add(` must spell
+/// `Ordering::Release` on that line. Line-oriented like the snapshot
+/// check — every real site keeps the call on one line. The left word
+/// boundary keeps fields that merely *end* with a counter's name (e.g.
+/// `resubmitted`) out of scope.
+fn l4_release_check(
+    path: &str,
+    lines: &[StrippedLine],
+    counters: &[String],
+    findings: &mut Vec<Finding>,
+) {
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        if !code.contains(".fetch_add(") {
+            continue;
+        }
+        for name in counters {
+            let pat = format!("{name}.fetch_add(");
+            let mut from = 0;
+            let mut bounded = false;
+            while let Some(pos) = code[from..].find(&pat) {
+                let s = from + pos;
+                if s == 0 || !is_word(code.as_bytes()[s - 1]) {
+                    bounded = true;
+                    break;
+                }
+                from = s + 1;
+                while from < code.len() && !code.is_char_boundary(from) {
+                    from += 1;
+                }
+            }
+            if bounded && !code.contains("Release") {
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: idx + 1,
+                    rule: Rule::L4,
+                    message: format!(
+                        "counter {name} published without Ordering::Release; \
+                         the Acquire snapshot cannot order against it"
+                    ),
+                    excerpt: excerpt_of(code.trim()),
+                });
+                break;
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // L5: cycle detection over the union lock graph.
 // ---------------------------------------------------------------------------
@@ -895,20 +961,37 @@ pub fn check_lock_graph(edges: &[LockEdge], findings: &mut Vec<Finding>) {
 // ---------------------------------------------------------------------------
 
 /// Analyze an explicit set of `(path_label, source)` pairs, running the
-/// cross-file lock-graph check at the end. This is the pure core used by
-/// both the tree walk and the fixture self-tests.
+/// cross-file checks (the lock graph and the counter-publication sweep)
+/// at the end. This is the pure core used by both the tree walk and the
+/// fixture self-tests.
 pub fn analyze_files<'a>(files: impl IntoIterator<Item = (&'a str, &'a str)>) -> Analysis {
+    let files: Vec<(&str, &str)> = files.into_iter().collect();
     let mut findings = Vec::new();
     let mut edges = Vec::new();
-    let mut n_files = 0usize;
     let mut n_lines = 0usize;
-    for (path, src) in files {
-        n_files += 1;
+    for (path, src) in &files {
         n_lines += analyze_source(path, src, &mut findings, &mut edges);
     }
     check_lock_graph(&edges, &mut findings);
+    // L4 publication sweep: the inventory comes from whichever analyzed
+    // file declares `pub struct ServerMetrics`; the bumps live anywhere.
+    let stripped: Vec<(&str, Vec<StrippedLine>)> =
+        files.iter().map(|(p, s)| (*p, strip_source(s))).collect();
+    let mut counters: Vec<String> = Vec::new();
+    for (_, lines) in &stripped {
+        for (name, _) in server_metrics_counters(lines) {
+            if !counters.contains(&name) {
+                counters.push(name);
+            }
+        }
+    }
+    if !counters.is_empty() {
+        for (path, lines) in &stripped {
+            l4_release_check(path, lines, &counters, &mut findings);
+        }
+    }
     findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
-    Analysis { findings, files: n_files, lines: n_lines }
+    Analysis { findings, files: files.len(), lines: n_lines }
 }
 
 /// Walk `rust/src` and `rust/tests` under `root` (the repo root) and
@@ -957,6 +1040,7 @@ pub fn fixtures() -> Vec<(&'static str, &'static str)> {
         ("rust/src/rtl/fixture_l2.rs", include_str!("fixtures/l2_hot_alloc.fixture")),
         ("rust/src/rtl/fixture_l3.rs", include_str!("fixtures/l3_sat_funnel.fixture")),
         ("rust/src/coordinator/fixture_l4.rs", include_str!("fixtures/l4_metrics.fixture")),
+        ("rust/src/coordinator/fixture_l4r.rs", include_str!("fixtures/l4_release.fixture")),
         ("rust/src/coordinator/fixture_l5.rs", include_str!("fixtures/l5_lock_cycle.fixture")),
     ]
 }

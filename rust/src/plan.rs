@@ -1,0 +1,154 @@
+//! Cache-aware lane-chunk planning for the batched engines.
+//!
+//! The wide-lane sweeps ([`crate::rtl::RtlCore::run_fast_batch`] and the
+//! behavioral [`crate::snn::LifBatchStack`]) process a sub-batch in
+//! chunks of up to [`MAX_LANES`] images. With neuron-major state planes
+//! a chunk's hot working set per layer is `lanes × n_out` accumulator
+//! words plus the same-shape spike-count plane, so on wide hidden layers
+//! (784→512→10) a fixed 256-lane chunk blows past L2 and the row sweep
+//! thrashes. [`ChunkPlan`] picks the lane width per topology the same
+//! way `FanoutPolicy::calibrated` picks the fan-out crossover: a pure
+//! decision function ([`ChunkPlan::from_budget`]) over a measured
+//! constant ([`DEFAULT_L2_BUDGET`]), so the policy is deterministic and
+//! unit-testable while the constant stays an explicit calibration knob.
+//!
+//! This module is also the single source of truth for the lane-width
+//! ceiling: `rtl::BATCH_LANES` and `LifBatchStack::MAX_LANES` both
+//! re-export [`MAX_LANES`], so the RTL and behavioral batch engines
+//! cannot drift apart.
+
+/// Hard ceiling on lanes per chunk — the widest plan any engine runs.
+/// Both `rtl::BATCH_LANES` and `snn::LifBatchStack::MAX_LANES` alias
+/// this constant.
+pub const MAX_LANES: usize = 256;
+
+/// Candidate lane widths, narrowest to widest. All are multiples of the
+/// 64-bit mask word (the multi-word machinery handles any of them), and
+/// the widest equals [`MAX_LANES`].
+pub const LANE_CANDIDATES: [usize; 3] = [64, 128, 256];
+
+/// Measured per-core L2 working-set budget in bytes (512 KiB). Like the
+/// fan-out calibration's measured per-image cost, this is the one
+/// machine-dependent constant behind the pure decision function: common
+/// x86 server parts carry 512 KiB–1.25 MiB of private L2 per core, and
+/// 512 KiB is the floor of that range, so a plan that fits it stays
+/// L2-resident on every deployment target we bench on.
+pub const DEFAULT_L2_BUDGET: usize = 512 * 1024;
+
+/// Bytes of hot plane state per `(neuron, lane)` cell: the i32
+/// accumulator plus the u32 spike-count register (the enable bitmask is
+/// 1/64th of a plane and is ignored, like the fan-out model ignores
+/// sub-percent terms).
+pub const BYTES_PER_CELL: usize = 8;
+
+/// A per-topology lane-chunk plan for the batched engines: how many
+/// images one chunk serves. Built once per core/stack from the topology
+/// ([`ChunkPlan::for_topology`]); the batched entry points split
+/// sub-batches into `lanes()`-wide chunks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkPlan {
+    lanes: usize,
+}
+
+impl ChunkPlan {
+    /// A fixed-width plan (benchmark overrides and tests). Clamped to
+    /// `1..=MAX_LANES`.
+    pub fn fixed(lanes: usize) -> Self {
+        ChunkPlan { lanes: lanes.clamp(1, MAX_LANES) }
+    }
+
+    /// The pure decision function: the widest [`LANE_CANDIDATES`] entry
+    /// whose widest-layer plane working set — `lanes × max_width ×`
+    /// [`BYTES_PER_CELL`] — fits `budget_bytes`, falling back to the
+    /// narrowest candidate when none fits (one mask word per plan is the
+    /// floor; correctness never depends on the width). Deterministic:
+    /// same inputs, same plan, no measurement in the loop.
+    pub fn from_budget(max_width: usize, budget_bytes: usize) -> Self {
+        let mut lanes = LANE_CANDIDATES[0];
+        for &cand in &LANE_CANDIDATES {
+            let working_set = cand
+                .saturating_mul(max_width.max(1))
+                .saturating_mul(BYTES_PER_CELL);
+            if working_set <= budget_bytes {
+                lanes = cand.max(lanes);
+            }
+        }
+        ChunkPlan { lanes }
+    }
+
+    /// The calibrated plan for a topology (`[n_in, hidden…, n_out]`):
+    /// [`ChunkPlan::from_budget`] over the widest *output* layer (the
+    /// planes are sized to layer outputs; the input layer holds no
+    /// plane) under the measured [`DEFAULT_L2_BUDGET`].
+    pub fn for_topology(topology: &[usize]) -> Self {
+        let max_width = topology.iter().skip(1).copied().max().unwrap_or(1);
+        Self::from_budget(max_width, DEFAULT_L2_BUDGET)
+    }
+
+    /// Images per chunk under this plan.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Number of chunks an `n`-image sub-batch splits into.
+    pub fn chunks(&self, n: usize) -> usize {
+        n.div_ceil(self.lanes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_are_sane() {
+        assert_eq!(*LANE_CANDIDATES.last().unwrap(), MAX_LANES);
+        for w in LANE_CANDIDATES {
+            assert_eq!(w % 64, 0, "lane widths must be whole mask words");
+        }
+    }
+
+    #[test]
+    fn from_budget_picks_the_knee() {
+        // Paper output layer (10 wide): everything fits, take the ceiling.
+        assert_eq!(ChunkPlan::from_budget(10, DEFAULT_L2_BUDGET).lanes(), 256);
+        // MLP hidden layer (128 wide): 256×128×8 = 256 KiB fits 512 KiB.
+        assert_eq!(ChunkPlan::from_budget(128, DEFAULT_L2_BUDGET).lanes(), 256);
+        // Wide hidden layer (512): 256 lanes need 1 MiB — step down to
+        // 128 lanes (exactly 512 KiB).
+        assert_eq!(ChunkPlan::from_budget(512, DEFAULT_L2_BUDGET).lanes(), 128);
+        // 1024-wide: 128 lanes need 1 MiB too — step down to 64.
+        assert_eq!(ChunkPlan::from_budget(1024, DEFAULT_L2_BUDGET).lanes(), 64);
+        // Nothing fits: the narrowest candidate is the floor, never 0.
+        assert_eq!(ChunkPlan::from_budget(1 << 20, DEFAULT_L2_BUDGET).lanes(), 64);
+    }
+
+    #[test]
+    fn for_topology_uses_widest_plane_layer() {
+        // The 784 input column holds no plane and must not count.
+        assert_eq!(ChunkPlan::for_topology(&[784, 10]).lanes(), 256);
+        assert_eq!(ChunkPlan::for_topology(&[784, 128, 10]).lanes(), 256);
+        assert_eq!(ChunkPlan::for_topology(&[784, 512, 10]).lanes(), 128);
+        assert_eq!(ChunkPlan::for_topology(&[784, 17, 12, 10]).lanes(), 256);
+    }
+
+    #[test]
+    fn width_shrinks_monotonically_with_budget() {
+        let mut last = usize::MAX;
+        for budget in [4 << 20, 1 << 20, 512 * 1024, 128 * 1024, 0] {
+            let lanes = ChunkPlan::from_budget(512, budget).lanes();
+            assert!(lanes <= last, "narrower budget must never widen the plan");
+            last = lanes;
+        }
+    }
+
+    #[test]
+    fn chunk_arithmetic() {
+        let plan = ChunkPlan::fixed(128);
+        assert_eq!(plan.chunks(0), 0);
+        assert_eq!(plan.chunks(128), 1);
+        assert_eq!(plan.chunks(129), 2);
+        assert_eq!(ChunkPlan::fixed(0).lanes(), 1, "fixed clamps to ≥1");
+        assert_eq!(ChunkPlan::fixed(1 << 20).lanes(), MAX_LANES);
+    }
+}

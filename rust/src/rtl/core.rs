@@ -37,23 +37,27 @@ use crate::snn::EarlyExit;
 use crate::util::margin_reached;
 
 use super::controller::{CtrlState, LayerController};
+use crate::plan::ChunkPlan;
+
 use super::encoder::RtlPoissonEncoder;
 use super::lif_neuron::{LifBatchArray, LifNeuronArray};
 use super::power::{ActivityCounters, EnergyModel, EnergyReport};
 use super::vcd::VcdWriter;
 
-/// Default lane-chunk width for [`RtlCore::run_fast_batch`]: larger
-/// sub-batches are processed in chunks of this many images. The
-/// transposed active/step-fired masks are **multi-word** bitsets
-/// (`lanes.div_ceil(64)` words per input/neuron), so this is a tuning
-/// knob — 256 lanes keeps a chunk's neuron-major accumulator planes
-/// L2-resident for the paper's topologies — not an architectural
-/// ceiling like the old single-word 64.
-pub const BATCH_LANES: usize = 256;
+/// Ceiling lane-chunk width for [`RtlCore::run_fast_batch`] — an alias
+/// of [`crate::plan::MAX_LANES`], the single source of truth shared with
+/// the behavioral `LifBatchStack`. The transposed active/step-fired
+/// masks are **multi-word** bitsets (`lanes.div_ceil(64)` words per
+/// input/neuron), so any width up to this works; the width a core
+/// actually runs is picked per topology by its [`ChunkPlan`] so the
+/// neuron-major accumulator planes stay L2-resident on wide hidden
+/// layers (override via [`RtlCore::with_chunk_plan`]).
+pub const BATCH_LANES: usize = crate::plan::MAX_LANES;
 
-/// Number of lane chunks [`RtlCore::run_fast_batch`] splits an
-/// `n`-image sub-batch into (observability for sizing tests and the
-/// bench harness).
+/// Number of ceiling-width chunks an `n`-image sub-batch splits into
+/// (observability for sizing tests and the bench harness; a core's own
+/// chunking follows its [`ChunkPlan`], which never exceeds this width —
+/// see [`ChunkPlan::chunks`] for the plan-aware count).
 pub fn batch_chunks(n: usize) -> usize {
     n.div_ceil(BATCH_LANES)
 }
@@ -126,6 +130,12 @@ pub struct RtlCore {
     /// Pooled batched-sweep scratch (masks, planes, gates, encoders) —
     /// reused across chunks and across `run_fast_batch` calls.
     batch_scratch: BatchScratch,
+    /// Cache-aware lane-chunk plan for the batched sweeps (defaults to
+    /// the topology-calibrated [`ChunkPlan::for_topology`]).
+    plan: ChunkPlan,
+    /// Worker threads for the per-chunk neuron-range-sharded sweep
+    /// (1 = the serial sweep; see [`RtlCore::with_batch_threads`]).
+    batch_threads: usize,
     /// Optional waveform sink.
     vcd: Option<VcdWriter>,
 }
@@ -171,11 +181,49 @@ impl RtlCore {
                 active: Vec::new(),
                 counts: Vec::new(),
                 prune: (0..n_layers).map(|l| cfg.layer_prune(l)).collect(),
+                active_mask: Vec::new(),
+                ranges: Vec::new(),
+                range_act: Vec::new(),
+                worker_apply: Vec::new(),
             },
+            plan: ChunkPlan::for_topology(&cfg.topology),
+            batch_threads: 1,
             weights,
             cfg,
             vcd: None,
         })
+    }
+
+    /// Override the lane-chunk plan (bench comparisons against the
+    /// calibrated default, width-sensitivity tests).
+    pub fn with_chunk_plan(mut self, plan: ChunkPlan) -> Self {
+        self.plan = plan;
+        self
+    }
+
+    /// The lane-chunk plan the batched sweeps run under.
+    pub fn chunk_plan(&self) -> ChunkPlan {
+        self.plan
+    }
+
+    /// Run each batch chunk's per-layer sweep across `n` worker threads
+    /// (neuron-range sharding). Results are **bit-identical at any
+    /// thread count** — each layer's output neurons are partitioned into
+    /// disjoint contiguous ranges, and the neuron-major planes make each
+    /// range a private slice, so sharding only re-orders work across
+    /// lanes/neurons whose per-cell event sequences are unchanged
+    /// (pinned by `thread_count_invariance_*`). `n` ≤ 1 keeps the serial
+    /// sweep; `FireMode::Immediate` configs always run serial (mid-walk
+    /// fires re-gate the whole layer per integrate group, which is
+    /// inherently sequential across neurons).
+    pub fn with_batch_threads(mut self, n: usize) -> Self {
+        self.batch_threads = n.max(1);
+        self
+    }
+
+    /// Worker threads the sharded batch sweep uses.
+    pub fn batch_threads(&self) -> usize {
+        self.batch_threads
     }
 
     /// Override the energy model (ablations).
@@ -715,7 +763,11 @@ impl RtlCore {
     ///
     /// Falls back to per-image [`RtlCore::run_fast_early`] when a VCD
     /// sink is attached (waveforms need every clock of one engine).
-    /// Sub-batches larger than [`BATCH_LANES`] are processed in chunks.
+    /// Sub-batches larger than the core's [`ChunkPlan`] width are
+    /// processed in plan-width chunks (≤ [`BATCH_LANES`]); with
+    /// [`RtlCore::with_batch_threads`] each chunk's layer sweeps are
+    /// additionally sharded across worker threads by neuron range —
+    /// both knobs change throughput only, never results.
     pub fn run_fast_batch(
         &mut self,
         images: &[&Image],
@@ -737,7 +789,8 @@ impl RtlCore {
                 .collect();
         }
         let mut out = Vec::with_capacity(images.len());
-        for (imgs, sds) in images.chunks(BATCH_LANES).zip(seeds.chunks(BATCH_LANES)) {
+        let lanes = self.plan.lanes();
+        for (imgs, sds) in images.chunks(lanes).zip(seeds.chunks(lanes)) {
             self.run_batch_chunk(imgs, sds, early, None, &mut out)?;
         }
         Ok(out)
@@ -770,7 +823,8 @@ impl RtlCore {
         })?;
         let mut out = Vec::with_capacity(images.len());
         let mut result = Ok(());
-        for (imgs, sds) in images.chunks(BATCH_LANES).zip(seeds.chunks(BATCH_LANES)) {
+        let lanes = self.plan.lanes();
+        for (imgs, sds) in images.chunks(lanes).zip(seeds.chunks(lanes)) {
             result = self.run_batch_chunk(imgs, sds, early, Some(&sparse), &mut out);
             if result.is_err() {
                 break;
@@ -868,11 +922,20 @@ impl RtlCore {
             s,
         };
 
+        // Thread-parallel sharding applies to `EndOfStep` sweeps only:
+        // an `Immediate` walk's mid-group fires re-gate the whole layer
+        // per integrate clock, which is inherently sequential across the
+        // walk, so it keeps the serial sweep at any thread setting.
+        let threads = self.batch_threads;
         for t in 0..self.cfg.timesteps {
             for l in 0..n_layers {
                 match self.cfg.fire_mode {
                     FireMode::EndOfStep => {
-                        run.integrate_end_of_step(l);
+                        if threads > 1 {
+                            run.sweep_end_of_step_sharded(l, threads);
+                        } else {
+                            run.integrate_end_of_step(l);
+                        }
                         // Closed-form clock counts, as on the sequential
                         // fast path — identical for every active lane
                         // (the schedule depends only on the config).
@@ -885,10 +948,21 @@ impl RtlCore {
                         for &b in &run.s.active {
                             run.s.layer_act[l][b].cycles += integrate_clocks + leak_clocks;
                         }
+                        if threads > 1 {
+                            // The sharded sweep already committed the
+                            // fire checks and prune latches in-range;
+                            // only the per-lane snapshots and the Fire
+                            // clock remain.
+                            run.fire_gather(l);
+                        } else {
+                            run.fire_clock(l);
+                        }
                     }
-                    FireMode::Immediate => run.integrate_immediate(l),
+                    FireMode::Immediate => {
+                        run.integrate_immediate(l);
+                        run.fire_clock(l);
+                    }
                 }
-                run.fire_clock(l);
             }
             run.close_timestep();
             if let EarlyExit::Margin { margin, min_steps } = early {
@@ -1112,6 +1186,10 @@ impl RtlCore {
         out.extend(s.step_fired.iter().map(fp));
         out.extend(s.layer_act.iter().map(fp));
         out.extend(s.arrays.iter().flat_map(|a| a.plane_fingerprint()));
+        out.push(fp(&s.active_mask));
+        out.push(fp(&s.ranges));
+        out.extend(s.range_act.iter().map(fp));
+        out.extend(s.worker_apply.iter().map(fp));
         out
     }
 }
@@ -1179,6 +1257,22 @@ struct BatchScratch {
     counts: Vec<u32>,
     /// Per-layer resolved pruning policy (mirrors the controller's).
     prune: Vec<PruneMode>,
+    /// Active-lane bitmask (`lw` words) for the sharded sweep's
+    /// leak/fire gating — the mask twin of the `active` list.
+    active_mask: Vec<u64>,
+    /// Neuron-range partition of the current layer for the sharded
+    /// sweep: `[j0, j1)` per worker, re-tiled per layer.
+    ranges: Vec<(usize, usize)>,
+    /// Per-worker, per-lane activity buckets for the sharded sweep
+    /// (`range_act[w][b]`): workers tally privately with zero sharing,
+    /// then the serial merge sums them into `layer_act` — u64 sums, so
+    /// the merge is reorder-invariant. Grown on demand, re-armed per
+    /// layer sweep.
+    range_act: Vec<Vec<ActivityCounters>>,
+    /// Per-worker apply-mask words (`lw` each): every worker computes
+    /// the same `src & gate` row mask, but into its own words so the
+    /// sweep shares nothing mutable.
+    worker_apply: Vec<Vec<u64>>,
 }
 
 /// One in-flight batched sweep: the transposed-mask schedule walker
@@ -1315,6 +1409,180 @@ impl BatchRun<'_> {
         }
     }
 
+    /// One layer's integrate + leak + fire phases under
+    /// `FireMode::EndOfStep`, sharded across `threads` worker threads by
+    /// neuron range — the thread-parallel twin of
+    /// [`BatchRun::integrate_end_of_step`] plus the in-range half of
+    /// [`BatchRun::fire_clock`] (the serial remainder is
+    /// [`BatchRun::fire_gather`]).
+    ///
+    /// Soundness of the zero-barrier split: under `EndOfStep` the BRAM
+    /// gate and enable masks are fixed for the whole walk (pruning only
+    /// latches at the fire clock), layer 0's Poisson comparators are
+    /// per-pixel independent PRNG streams (so the whole walk's draws are
+    /// hoisted ahead of the scope — same masks and per-lane tallies as
+    /// the per-segment draws), and every mutable word — plane cells,
+    /// step-fired words, activity buckets, apply masks — is owned by
+    /// exactly one worker: neuron-major planes make a contiguous neuron
+    /// range a contiguous plane slice, carved with `split_at_mut`, so
+    /// the borrow checker proves disjointness with no locks and no
+    /// `unsafe`. Each (neuron, lane) cell therefore commits exactly the
+    /// sequential sweep's event sequence — rows ascending, leak per
+    /// segment, fire, prune — and per-lane counters are order-invariant
+    /// u64 sums, so results are bit-identical at any thread count
+    /// (pinned by `thread_count_invariance_*` and the sharded fixture
+    /// replay). The one whole-row tally, the per-lane BRAM read, is
+    /// owned by rank 0 alone. The scope's implicit join is the
+    /// per-layer barrier: `step_fired[l]` is complete before the serial
+    /// gather and the next layer's walk read it.
+    fn sweep_end_of_step_sharded(&mut self, l: usize, threads: usize) {
+        let n_in = self.cfg.layer_input(l);
+        let n_out = self.s.arrays[l].width();
+        let b_n = self.lanes.len();
+        let lw = self.lw;
+        let seg = if l == 0 { self.row_len.unwrap_or(n_in) } else { n_in };
+        let t_eff = threads.min(n_out).max(1);
+        self.bram_gate(l);
+        if l == 0 {
+            self.draw_layer0(0, n_in);
+        }
+        let layer = self.weights.layer(l);
+        let sparse_layer = self.sparse.map(|sp| sp.layer(l));
+        let s = &mut *self.s;
+
+        // Arm the pooled per-worker scratch — grow-on-demand once, then
+        // re-armed in place like the rest of the arena.
+        s.active_mask.clear();
+        s.active_mask.resize(lw, 0);
+        for i in 0..s.active.len() {
+            let b = s.active[i];
+            s.active_mask[b / 64] |= 1 << (b % 64);
+        }
+        s.ranges.clear();
+        let (base, rem) = (n_out / t_eff, n_out % t_eff);
+        let mut next_j = 0usize;
+        for w in 0..t_eff {
+            let j1 = next_j + base + usize::from(w < rem);
+            s.ranges.push((next_j, j1));
+            next_j = j1;
+        }
+        while s.range_act.len() < t_eff {
+            // pallas-lint: allow(alloc) reason=grow-on-demand pooled per-worker tallies
+            s.range_act.push(Vec::new());
+        }
+        while s.worker_apply.len() < t_eff {
+            // pallas-lint: allow(alloc) reason=grow-on-demand pooled per-worker masks
+            s.worker_apply.push(Vec::new());
+        }
+        for ra in s.range_act.iter_mut().take(t_eff) {
+            ra.clear();
+            ra.resize(b_n, ActivityCounters::default());
+        }
+        for ap in s.worker_apply.iter_mut().take(t_eff) {
+            ap.clear();
+            ap.resize(lw, 0);
+        }
+
+        let BatchScratch {
+            arrays,
+            step_fired,
+            masks,
+            gate,
+            active_mask,
+            ranges,
+            range_act,
+            worker_apply,
+            layer_act,
+            prune,
+            ..
+        } = s;
+        let prune_mode = prune[l];
+        let (prev_layers, cur) = step_fired.split_at_mut(l);
+        let src_plane: &[u64] = if l == 0 { masks } else { &prev_layers[l - 1] };
+        let mut cur: &mut [u64] = &mut cur[0][..];
+        let (gate, active_mask) = (&gate[..], &active_mask[..]);
+        // pallas-lint: allow(alloc) reason=per-sweep shard list, bounded by the thread count
+        let shards = arrays[l].shards(&ranges[..]);
+        std::thread::scope(|scope| {
+            let mut acts = range_act.iter_mut();
+            let mut applies = worker_apply.iter_mut();
+            for (w, mut shard) in shards.into_iter().enumerate() {
+                let (sf_part, rest) =
+                    std::mem::take(&mut cur).split_at_mut(shard.width() * lw);
+                cur = rest;
+                let ra = &mut acts.next().expect("armed above")[..];
+                let ap = &mut applies.next().expect("armed above")[..];
+                scope.spawn(move || {
+                    let (j0, j1) = (shard.start(), shard.start() + shard.width());
+                    let mut start = 0usize;
+                    while start < n_in {
+                        let end = (start + seg).min(n_in);
+                        for p in start..end {
+                            let src = &src_plane[p * lw..(p + 1) * lw];
+                            let mut any = 0u64;
+                            for wb in 0..lw {
+                                let m = src[wb] & gate[wb];
+                                ap[wb] = m;
+                                any |= m;
+                            }
+                            if any == 0 {
+                                continue;
+                            }
+                            if let Some(sp) = sparse_layer {
+                                let (all_cols, _) = sp.row(p);
+                                if all_cols.is_empty() {
+                                    continue;
+                                }
+                                if w == 0 {
+                                    // One BRAM read per fetched row per
+                                    // applied lane — a whole-row event,
+                                    // so rank 0 alone owns the tally.
+                                    for wb in 0..lw {
+                                        let mut m = ap[wb];
+                                        while m != 0 {
+                                            let b = wb * 64 + m.trailing_zeros() as usize;
+                                            m &= m - 1;
+                                            ra[b].bram_reads += 1;
+                                        }
+                                    }
+                                }
+                                let (cols, vals) = sp.row_span(p, j0, j1);
+                                shard.add_sparse_lanes(ap, cols, vals, ra);
+                            } else {
+                                if w == 0 {
+                                    for wb in 0..lw {
+                                        let mut m = ap[wb];
+                                        while m != 0 {
+                                            let b = wb * 64 + m.trailing_zeros() as usize;
+                                            m &= m - 1;
+                                            ra[b].bram_reads += 1;
+                                        }
+                                    }
+                                }
+                                let row = layer.row(p);
+                                shard.add_row_lanes(ap, &row[j0..j1], ra);
+                            }
+                        }
+                        shard.leak_lanes(active_mask, ra);
+                        start = end;
+                    }
+                    shard.fire_check_lanes(active_mask, sf_part, ra);
+                    shard.latch_prune_lanes(active_mask, prune_mode);
+                });
+            }
+        });
+        // Serial merge of the per-worker tallies into the per-lane layer
+        // buckets — u64 sums commute, so worker order cannot affect the
+        // totals. Merged buckets are cleared so a later sweep with fewer
+        // workers can never double-count a stale bucket.
+        for ra in range_act.iter_mut().take(t_eff) {
+            for (dst, src) in layer_act[l].iter_mut().zip(ra.iter()) {
+                dst.add(src);
+            }
+            ra.clear();
+        }
+    }
+
     /// One layer's integrate + leak phases, `FireMode::Immediate` — the
     /// batched mirror of `fast_integrate_immediate`: each integrate clock
     /// serves `k` input lanes, the combinational threshold check fires
@@ -1384,6 +1652,29 @@ impl BatchRun<'_> {
             let lane = &mut self.lanes[b];
             self.s.arrays[l].extend_accs(b, &mut lane.step_membranes);
             lane.step_spikes.extend_from_slice(&self.s.fired[..width]);
+            self.s.layer_act[l][b].cycles += 1;
+        }
+    }
+
+    /// The sharded sweep's serial fire epilogue (its [`BatchRun::fire_clock`]
+    /// twin): the threshold checks and prune latches already committed
+    /// inside each worker's range, so what remains is per-lane
+    /// bookkeeping — the membrane snapshot, the fire-pattern snapshot
+    /// reconstructed from the step-fired words (under `EndOfStep` each
+    /// bit is written at most once per step and cleared at the timestep
+    /// edge, so the words are a lossless record of this step's fires),
+    /// and the Fire clock itself.
+    fn fire_gather(&mut self, l: usize) {
+        let width = self.s.arrays[l].width();
+        let lw = self.lw;
+        for i in 0..self.s.active.len() {
+            let b = self.s.active[i];
+            let lane = &mut self.lanes[b];
+            self.s.arrays[l].extend_accs(b, &mut lane.step_membranes);
+            let (wb, bit) = (b / 64, b % 64);
+            for j in 0..width {
+                lane.step_spikes.push((self.s.step_fired[l][j * lw + wb] >> bit) & 1 == 1);
+            }
             self.s.layer_act[l][b].cycles += 1;
         }
     }
@@ -2123,6 +2414,225 @@ mod tests {
         for b in 0..lanes {
             let want = seq.run_fast_early(images[b], seeds[b], early).unwrap();
             assert_eq!(batch[b], want, "lane {b} perturbed by boundary retirement");
+        }
+    }
+
+    /// The thread-count-invariance theorem: the neuron-range-sharded
+    /// sweep is bit-identical to the serial sweep at any thread count —
+    /// full `RtlResult` equality (logs, counters, cycles) and exact
+    /// cumulative cycle accounting — across depths 1–3, heterogeneous
+    /// per-layer params, `PerRow` leak, Margin early exit, and the CSR
+    /// arm. Deterministic loops; threads 2/4/7 all reduce to the
+    /// threads=1 reference, and `Immediate` configs ignore the thread
+    /// knob entirely.
+    #[test]
+    fn thread_count_invariance_dense_and_sparse() {
+        use crate::config::LayerParams;
+        let mut rng = crate::prng::Xorshift32::new(0x7EAD_C0DE);
+        let topologies: [&[usize]; 3] = [&[784, 10], &[784, 17, 10], &[784, 14, 12, 10]];
+        for (ti, topology) in topologies.iter().enumerate() {
+            let stack = test_stack(topology, rng.next_u32());
+            let n_layers = topology.len() - 1;
+            let early = if ti % 2 == 0 {
+                EarlyExit::Margin { margin: 2, min_steps: 1 }
+            } else {
+                EarlyExit::Off
+            };
+            let leak = if ti == 1 {
+                LeakMode::PerRow { row_len: 28 }
+            } else {
+                LeakMode::PerTimestep
+            };
+            let layer_params: Vec<LayerParams> = if ti == 2 {
+                (0..n_layers)
+                    .map(|l| LayerParams {
+                        v_th: Some(90 + 40 * l as i32),
+                        decay_shift: Some(1 + (l as u32 % 3)),
+                        prune: Some(PruneMode::AfterFires { after_spikes: 2 }),
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            let cfg = SnnConfig::paper()
+                .with_topology(topology.to_vec())
+                .with_timesteps(3)
+                .with_v_th(110)
+                .with_leak_mode(leak)
+                .with_prune(PruneMode::Off)
+                .with_layer_params(layer_params);
+            let gen = DigitGen::new(rng.next_u32());
+            let batch = 6usize;
+            let images: Vec<crate::data::Image> =
+                (0..batch).map(|i| gen.sample((i % 10) as u8, i as u32)).collect();
+            let refs: Vec<&crate::data::Image> = images.iter().collect();
+            let seeds: Vec<u32> = (0..batch).map(|_| rng.next_u32()).collect();
+
+            let mut reference = RtlCore::new(cfg.clone(), stack.clone()).unwrap();
+            let want = reference.run_fast_batch(&refs, &seeds, early).unwrap();
+            let mut ref_sparse = RtlCore::new(cfg.clone(), stack.clone()).unwrap();
+            ref_sparse.attach_sparse(15);
+            let want_sparse = ref_sparse.run_fast_batch_sparse(&refs, &seeds, early).unwrap();
+
+            for threads in [2usize, 4, 7] {
+                let mut core = RtlCore::new(cfg.clone(), stack.clone())
+                    .unwrap()
+                    .with_batch_threads(threads);
+                let got = core.run_fast_batch(&refs, &seeds, early).unwrap();
+                assert_eq!(got, want, "threads={threads} topology={topology:?} diverges");
+                assert_eq!(
+                    core.total_activity().cycles,
+                    reference.total_activity().cycles,
+                    "threads={threads}: cumulative cycles diverge"
+                );
+
+                let mut sc = RtlCore::new(cfg.clone(), stack.clone())
+                    .unwrap()
+                    .with_batch_threads(threads);
+                sc.attach_sparse(15);
+                let got_sparse = sc.run_fast_batch_sparse(&refs, &seeds, early).unwrap();
+                assert_eq!(
+                    got_sparse, want_sparse,
+                    "threads={threads} topology={topology:?} sparse arm diverges"
+                );
+            }
+        }
+
+        // `Immediate` mode keeps the serial sweep at any thread setting
+        // (mid-walk fires are inherently sequential) — pinned here.
+        let topology = [784usize, 12, 10];
+        let stack = test_stack(&topology, rng.next_u32());
+        let cfg = SnnConfig::paper()
+            .with_topology(topology.to_vec())
+            .with_timesteps(2)
+            .with_fire_mode(FireMode::Immediate);
+        let gen = DigitGen::new(3);
+        let images: Vec<crate::data::Image> =
+            (0..4u32).map(|i| gen.sample(i as u8, i)).collect();
+        let refs: Vec<&crate::data::Image> = images.iter().collect();
+        let seeds = [5u32, 6, 7, 8];
+        let want = RtlCore::new(cfg.clone(), stack.clone())
+            .unwrap()
+            .run_fast_batch(&refs, &seeds, EarlyExit::Off)
+            .unwrap();
+        let got = RtlCore::new(cfg, stack)
+            .unwrap()
+            .with_batch_threads(4)
+            .run_fast_batch(&refs, &seeds, EarlyExit::Off)
+            .unwrap();
+        assert_eq!(got, want, "Immediate mode must be thread-setting-invariant");
+    }
+
+    /// Odd neuron-range boundaries: layer widths 10/17/512 split across
+    /// 3 workers leave uneven ranges (4+3+3, 6+6+5, 171+171+170); each
+    /// split must reproduce the serial sweep bit for bit — including at
+    /// 512, the width where the calibrated plan also narrows the chunk.
+    #[test]
+    fn odd_neuron_range_boundaries_across_three_threads() {
+        for &hidden in &[10usize, 17, 512] {
+            let topology = [784, hidden, 10];
+            let stack = test_stack(&topology, 0xB0 + hidden as u32);
+            let cfg = SnnConfig::paper()
+                .with_topology(topology.to_vec())
+                .with_timesteps(2)
+                .with_v_th(130);
+            let gen = DigitGen::new(hidden as u32);
+            let images: Vec<crate::data::Image> =
+                (0..3u32).map(|i| gen.sample((i % 10) as u8, i)).collect();
+            let refs: Vec<&crate::data::Image> = images.iter().collect();
+            let seeds: Vec<u32> = (0..3u32).map(|i| 11 + i).collect();
+            let want = RtlCore::new(cfg.clone(), stack.clone())
+                .unwrap()
+                .run_fast_batch(&refs, &seeds, EarlyExit::Off)
+                .unwrap();
+            let got = RtlCore::new(cfg, stack)
+                .unwrap()
+                .with_batch_threads(3)
+                .run_fast_batch(&refs, &seeds, EarlyExit::Off)
+                .unwrap();
+            assert_eq!(got, want, "hidden={hidden} sharded across 3 threads diverges");
+        }
+    }
+
+    /// Early-exit lane compaction under the parallel sweep: the 67-lane
+    /// word-boundary retirement scenario run with 3 workers. Retirement
+    /// happens in the serial portion between timesteps; the workers only
+    /// ever see the rebuilt active mask, so compaction must stay
+    /// invisible lane-for-lane.
+    #[test]
+    fn early_exit_compaction_under_parallel_sweep() {
+        let cfg = SnnConfig::paper().with_timesteps(12).with_prune(PruneMode::Off);
+        let mut w = vec![0i32; 7840];
+        for i in 0..784 {
+            if i / 79 == 4 {
+                w[i * 10 + 4] = 40;
+            }
+        }
+        let w = WeightMatrix::from_rows(784, 10, 9, w).unwrap();
+        let mut px = vec![0u8; 784];
+        for (i, p) in px.iter_mut().enumerate() {
+            if i / 79 == 4 {
+                *p = 250;
+            }
+        }
+        let img_a = crate::data::Image { label: 4, pixels: px };
+        let img_b = crate::data::Image { label: 0, pixels: vec![0; 784] };
+        let early = EarlyExit::Margin { margin: 2, min_steps: 2 };
+        let lanes = 67usize;
+        let hot = [63usize, 64, 65];
+        let images: Vec<&crate::data::Image> =
+            (0..lanes).map(|b| if hot.contains(&b) { &img_a } else { &img_b }).collect();
+        let seeds: Vec<u32> = (0..lanes).map(|b| 7 + b as u32).collect();
+
+        let mut core = RtlCore::new(cfg.clone(), w.clone()).unwrap().with_batch_threads(3);
+        let got = core.run_fast_batch(&images, &seeds, early).unwrap();
+        for &b in &hot {
+            let steps = got[b].membrane_by_step.len();
+            assert!((2..12).contains(&steps), "hot lane {b} must exit early, ran {steps}");
+        }
+        let mut serial = RtlCore::new(cfg, w).unwrap();
+        let want = serial.run_fast_batch(&images, &seeds, early).unwrap();
+        assert_eq!(got, want, "parallel compaction diverges from the serial sweep");
+    }
+
+    /// The calibrated chunk plan: wide hidden layers narrow the lane
+    /// width so the planes stay L2-resident, narrow topologies keep the
+    /// ceiling, and any plan width produces identical results — the
+    /// chunk width is a throughput knob only.
+    #[test]
+    fn chunk_plan_narrows_on_wide_layers_and_preserves_results() {
+        use crate::plan::ChunkPlan;
+        let core = RtlCore::new(
+            SnnConfig::paper().with_topology(vec![784, 512, 10]),
+            test_stack(&[784, 512, 10], 21),
+        )
+        .unwrap();
+        assert_eq!(core.chunk_plan().lanes(), 128, "512-wide hidden must narrow to 128");
+        drop(core);
+
+        let cfg = SnnConfig::paper().with_topology(vec![784, 17, 10]).with_timesteps(2);
+        let stack = test_stack(&[784, 17, 10], 22);
+        assert_eq!(
+            RtlCore::new(cfg.clone(), stack.clone()).unwrap().chunk_plan().lanes(),
+            256,
+            "narrow topologies keep the ceiling width"
+        );
+        let gen = DigitGen::new(31);
+        let n = 70usize;
+        let images: Vec<crate::data::Image> =
+            (0..n).map(|i| gen.sample((i % 10) as u8, i as u32)).collect();
+        let refs: Vec<&crate::data::Image> = images.iter().collect();
+        let seeds: Vec<u32> = (0..n as u32).map(|i| 900 + i).collect();
+        let mut reference = RtlCore::new(cfg.clone(), stack.clone()).unwrap();
+        let want = reference.run_fast_batch(&refs, &seeds, EarlyExit::Off).unwrap();
+        for lanes in [64usize, 128] {
+            // 70 images at width 64 cross a chunk boundary (64 + 6).
+            let mut core = RtlCore::new(cfg.clone(), stack.clone())
+                .unwrap()
+                .with_chunk_plan(ChunkPlan::fixed(lanes));
+            assert_eq!(core.chunk_plan().chunks(n), n.div_ceil(lanes));
+            let got = core.run_fast_batch(&refs, &seeds, EarlyExit::Off).unwrap();
+            assert_eq!(got, want, "plan width {lanes} changes results");
         }
     }
 

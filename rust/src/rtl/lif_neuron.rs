@@ -558,6 +558,191 @@ impl LifNeuronArray {
 
 // ---------------------------------------------------------------------------
 
+// The neuron-major plane funnels below are shared by the whole-array
+// sweeps (`LifBatchArray::add_row_lanes` & co.) and the thread-parallel
+// neuron-range shards (`LifBatchShard`): one body per event kind, so the
+// sharded sweep cannot drift from the serial one. Each funnel takes raw
+// plane slices plus the plane geometry and the per-lane activity slice.
+// The `m == u64::MAX` arm is the vectorized apply: when a whole mask
+// word of lanes is gated on, the bit scan is skipped and the 64 plane
+// cells are walked as one contiguous branch-free sweep (the form the
+// compiler can vectorize) — taken on every full word of a dense batch,
+// and by the batched CSR apply whenever no lane has pruned the entry's
+// neuron. Per lane the committed events are identical either way.
+// pallas-lint: hot
+
+/// One weight applied to every gated+enabled lane of one neuron's
+/// contiguous plane row — the innermost kernel of the batched dense and
+/// CSR sweeps, fast-path and bit-scan arms both funneling through
+/// [`sat_add`]/[`write_acc_at`].
+// Bounds: a full gate word implies all 64 of its lanes exist (enable
+// masks zero-pad the partial word), so `base + 64 <= accs.len()`; scan
+// indices mirror `lane_add_row`; tallies are u64.
+#[allow(clippy::arithmetic_side_effects)]
+#[inline(always)]
+fn plane_row_add(
+    accs: &mut [i32],
+    en: &[u64],
+    lane_mask: &[u64],
+    w: i32,
+    acc_max: i32,
+    acts: &mut [ActivityCounters],
+) {
+    for wb in 0..en.len() {
+        let gated = lane_mask[wb] & en[wb];
+        if gated == u64::MAX {
+            let base = wb * 64;
+            for b in base..base + 64 {
+                let act = &mut acts[b];
+                let (next, saturated) = sat_add(accs[b], w, acc_max);
+                if saturated {
+                    act.saturations += 1;
+                }
+                act.adds += 1;
+                write_acc_at(accs, b, next, act);
+            }
+        } else {
+            let mut m = gated;
+            while m != 0 {
+                let b = wb * 64 + m.trailing_zeros() as usize;
+                m &= m - 1;
+                let act = &mut acts[b];
+                let (next, saturated) = sat_add(accs[b], w, acc_max);
+                if saturated {
+                    act.saturations += 1;
+                }
+                act.adds += 1;
+                write_acc_at(accs, b, next, act);
+            }
+        }
+    }
+}
+
+/// One `Leak` clock over every gated+enabled lane of an `n`-neuron plane
+/// range, neuron-major (`j` outer, lanes inner). Per (neuron, lane) cell
+/// this commits exactly the events of `LifBatchArray::leak_enabled`;
+/// cells are private to their lane, so the transposed walk order
+/// commutes and the per-lane tallies are identical order-invariant sums.
+// Bounds: plane indices as in `LifBatchArray`; full-word arm bounded as
+// in `plane_row_add`; tallies are u64.
+#[allow(clippy::arithmetic_side_effects)]
+fn plane_leak_lanes(
+    acc: &mut [i32],
+    enabled: &[u64],
+    lanes: usize,
+    lw: usize,
+    lane_mask: &[u64],
+    decay_shift: u32,
+    acts: &mut [ActivityCounters],
+) {
+    let n = if lanes == 0 { 0 } else { acc.len() / lanes };
+    for j in 0..n {
+        let accs = &mut acc[j * lanes..(j + 1) * lanes];
+        let en = &enabled[j * lw..(j + 1) * lw];
+        for wb in 0..lw {
+            let gated = lane_mask[wb] & en[wb];
+            if gated == u64::MAX {
+                let base = wb * 64;
+                for b in base..base + 64 {
+                    let act = &mut acts[b];
+                    let next = leak(accs[b], decay_shift);
+                    act.shifts += 1;
+                    act.adds += 1; // the subtract half of shift-subtract
+                    write_acc_at(accs, b, next, act);
+                }
+            } else {
+                let mut m = gated;
+                while m != 0 {
+                    let b = wb * 64 + m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let act = &mut acts[b];
+                    let next = leak(accs[b], decay_shift);
+                    act.shifts += 1;
+                    act.adds += 1; // the subtract half of shift-subtract
+                    write_acc_at(accs, b, next, act);
+                }
+            }
+        }
+    }
+}
+
+/// One `Fire` clock (`FireMode::EndOfStep`) over every gated+enabled
+/// lane of a plane range, writing crossings straight into the
+/// neuron-major `step_fired` words (`step_fired[j*lw + b/64]`, bit
+/// `b % 64`) instead of a per-lane `fired` buffer. Per (neuron, lane)
+/// the comparator/reset/spike-count events match
+/// `LifBatchArray::fire_check` exactly; each bit is set at most once per
+/// step, so the transposed order commutes.
+// Bounds: plane and mask indices as above; spike counts are u32 tallies
+// bounded by the timestep window.
+#[allow(clippy::arithmetic_side_effects)]
+fn plane_fire_check_lanes(
+    acc: &mut [i32],
+    spike_count: &mut [u32],
+    enabled: &[u64],
+    lanes: usize,
+    lw: usize,
+    lane_mask: &[u64],
+    p: &LaneParams,
+    step_fired: &mut [u64],
+    acts: &mut [ActivityCounters],
+) {
+    let n = if lanes == 0 { 0 } else { acc.len() / lanes };
+    for j in 0..n {
+        let accs = &mut acc[j * lanes..(j + 1) * lanes];
+        let counts = &mut spike_count[j * lanes..(j + 1) * lanes];
+        let en = &enabled[j * lw..(j + 1) * lw];
+        for wb in 0..lw {
+            let mut m = lane_mask[wb] & en[wb];
+            while m != 0 {
+                let bit = m.trailing_zeros() as usize;
+                let b = wb * 64 + bit;
+                m &= m - 1;
+                let act = &mut acts[b];
+                act.compares += 1;
+                if accs[b] >= p.v_th {
+                    step_fired[j * lw + wb] |= 1u64 << bit;
+                    counts[b] += 1;
+                    act.reg_toggles += 1; // spike-count increment (approx.)
+                    write_acc_at(accs, b, p.v_rest, act);
+                }
+            }
+        }
+    }
+}
+
+/// The controller's pruning-mask latch over every gated lane of a plane
+/// range: a lane whose neuron has reached `after_spikes` spikes drops
+/// its enable bit. Clearing is idempotent and a lane only ever reads its
+/// own counts / writes its own bits, so per-lane order is immaterial —
+/// exactly `LifBatchArray::latch_prune` per lane.
+// Bounds: plane and mask indices as above.
+#[allow(clippy::arithmetic_side_effects)]
+fn plane_latch_prune_lanes(
+    spike_count: &[u32],
+    enabled: &mut [u64],
+    lanes: usize,
+    lw: usize,
+    lane_mask: &[u64],
+    mode: PruneMode,
+) {
+    let PruneMode::AfterFires { after_spikes } = mode else { return };
+    let n = if lanes == 0 { 0 } else { spike_count.len() / lanes };
+    for j in 0..n {
+        for wb in 0..lw {
+            let mut m = lane_mask[wb];
+            while m != 0 {
+                let bit = m.trailing_zeros() as usize;
+                m &= m - 1;
+                if spike_count[j * lanes + wb * 64 + bit] >= after_spikes {
+                    enabled[j * lw + wb] &= !(1u64 << bit);
+                }
+            }
+        }
+    }
+}
+// pallas-lint: end-hot
+
 /// One layer × a whole sub-batch, **neuron-major**: accumulator and
 /// spike-count planes addressed `plane[j * lanes + b]`, so all lanes'
 /// copies of neuron `j` sit contiguously. Enables are transposed the
@@ -713,7 +898,9 @@ impl LifBatchArray {
     /// kernel. Per lane this is exactly [`lane_add_row`]'s event order
     /// (lanes are independent, so interleaving across lanes commutes);
     /// each lane's adds/saturations/toggles land in its own
-    /// `acts[b]`. `lane_mask` must be `lane_words()` long.
+    /// `acts[b]`. `lane_mask` must be `lane_words()` long. Funnels
+    /// through [`plane_row_add`], whose full-word arm applies the weight
+    /// to 64 contiguous lanes without a bit scan.
     #[inline]
     pub fn add_row_lanes(
         &mut self,
@@ -727,20 +914,7 @@ impl LifBatchArray {
         for (j, &w) in row.iter().enumerate() {
             let accs = &mut self.acc[j * lanes..(j + 1) * lanes];
             let en = &self.enabled[j * lw..(j + 1) * lw];
-            for wb in 0..lw {
-                let mut m = lane_mask[wb] & en[wb];
-                while m != 0 {
-                    let b = wb * 64 + m.trailing_zeros() as usize;
-                    m &= m - 1;
-                    let act = &mut acts[b];
-                    let (next, saturated) = sat_add(accs[b], w, acc_max);
-                    if saturated {
-                        act.saturations += 1;
-                    }
-                    act.adds += 1;
-                    write_acc_at(accs, b, next, act);
-                }
-            }
+            plane_row_add(accs, en, lane_mask, w, acc_max, acts);
         }
     }
 
@@ -749,6 +923,10 @@ impl LifBatchArray {
     /// `(column, weight)` entry (ascending column), all gated lanes whose
     /// neuron is enabled take the weight through [`sat_add`]. Per lane
     /// this is exactly [`lane_add_sparse`]'s visit order and accounting.
+    /// Funnels through [`plane_row_add`] too, so a CSR entry whose
+    /// neuron no lane has pruned takes the same full-word contiguous
+    /// sweep as the dense row — the entry-wise add is no longer scalar
+    /// per active lane.
     #[inline]
     pub fn add_sparse_lanes(
         &mut self,
@@ -764,20 +942,7 @@ impl LifBatchArray {
             let j = j as usize;
             let accs = &mut self.acc[j * lanes..(j + 1) * lanes];
             let en = &self.enabled[j * lw..(j + 1) * lw];
-            for wb in 0..lw {
-                let mut m = lane_mask[wb] & en[wb];
-                while m != 0 {
-                    let b = wb * 64 + m.trailing_zeros() as usize;
-                    m &= m - 1;
-                    let act = &mut acts[b];
-                    let (next, saturated) = sat_add(accs[b], w, acc_max);
-                    if saturated {
-                        act.saturations += 1;
-                    }
-                    act.adds += 1;
-                    write_acc_at(accs, b, next, act);
-                }
-            }
+            plane_row_add(accs, en, lane_mask, w, acc_max, acts);
         }
     }
 
@@ -913,6 +1078,52 @@ impl LifBatchArray {
         }
     }
 
+    /// Split the array into disjoint contiguous neuron-range shards for
+    /// the thread-parallel sweep. `ranges` must tile `[0, width())` in
+    /// ascending order (`[j0, j1)` pairs, each starting where the last
+    /// ended); because every plane is neuron-major, each range owns a
+    /// contiguous `&mut` slice of each plane, carved with
+    /// `split_at_mut` so the borrow checker proves disjointness — no
+    /// `unsafe`, no locks. Allocates only the shard Vec (planes are
+    /// borrowed in place); called once per layer sweep, outside the
+    /// per-row hot loops.
+    // Bounds: range arithmetic is asserted to tile the plane; slice
+    // lengths are `len * lanes` / `len * lane_words` by construction.
+    #[allow(clippy::arithmetic_side_effects)]
+    pub fn shards(&mut self, ranges: &[(usize, usize)]) -> Vec<LifBatchShard<'_>> {
+        let (lanes, lw, params) = (self.lanes, self.lane_words, self.params);
+        let mut out = Vec::with_capacity(ranges.len());
+        let mut acc = &mut self.acc[..];
+        let mut spike_count = &mut self.spike_count[..];
+        let mut enabled = &mut self.enabled[..];
+        let mut consumed = 0usize;
+        for &(j0, j1) in ranges {
+            assert!(
+                j0 == consumed && j1 >= j0 && j1 <= self.n,
+                "shard ranges must tile [0, width()) in order: got [{j0}, {j1}) at {consumed}"
+            );
+            let len = j1 - j0;
+            let (a, rest) = std::mem::take(&mut acc).split_at_mut(len * lanes);
+            acc = rest;
+            let (s, rest) = std::mem::take(&mut spike_count).split_at_mut(len * lanes);
+            spike_count = rest;
+            let (e, rest) = std::mem::take(&mut enabled).split_at_mut(len * lw);
+            enabled = rest;
+            out.push(LifBatchShard {
+                j0,
+                n: len,
+                lanes,
+                lane_words: lw,
+                acc: a,
+                spike_count: s,
+                enabled: e,
+                params,
+            });
+            consumed = j1;
+        }
+        out
+    }
+
     /// Test-only `(pointer, capacity)` fingerprint of the three state
     /// planes — equal fingerprints across `reset` calls prove the planes
     /// were re-armed in place, not re-allocated.
@@ -924,6 +1135,145 @@ impl LifBatchArray {
             (self.enabled.as_ptr() as usize, self.enabled.capacity()),
         ]
     }
+}
+
+// ---------------------------------------------------------------------------
+
+/// A disjoint contiguous neuron-range view `[j0, j0+width)` of one
+/// [`LifBatchArray`] — the unit of the thread-parallel batched sweep.
+/// Neuron-major planes make the range a private plane slice, so
+/// [`LifBatchArray::shards`] hands each worker thread a `&mut` shard
+/// with zero shared mutable state. Every shard method funnels through
+/// the same plane kernels as the whole-array sweeps ([`plane_row_add`]
+/// and friends), so a sharded walk commits bit-identical
+/// per-(neuron, lane) event sequences — the thread-count-invariance
+/// property tests in `rtl::core` pin this end to end.
+#[derive(Debug)]
+pub struct LifBatchShard<'a> {
+    /// First global neuron index of the range (CSR columns are global).
+    j0: usize,
+    /// Neurons in the range.
+    n: usize,
+    lanes: usize,
+    lane_words: usize,
+    acc: &'a mut [i32],
+    spike_count: &'a mut [u32],
+    enabled: &'a mut [u64],
+    params: LaneParams,
+}
+
+// Bounds: local plane indices are `(j - j0) * lanes + b` with slices
+// sized by `shards`; arithmetic funnels through the shared plane
+// kernels.
+#[allow(clippy::arithmetic_side_effects)]
+impl LifBatchShard<'_> {
+    /// First global neuron index covered.
+    pub fn start(&self) -> usize {
+        self.j0
+    }
+
+    /// Neurons covered.
+    pub fn width(&self) -> usize {
+        self.n
+    }
+
+    // The shard sweeps are the parallel engine's inner loops: alloc-free
+    // (pallas-lint rule L2), funneled arithmetic (rule L3).
+    // pallas-lint: hot
+
+    /// One BRAM row pulse over the range: `row` is the weight row
+    /// already sliced to `[j0, j0+width)`. Same kernel as
+    /// [`LifBatchArray::add_row_lanes`], restricted to the range.
+    #[inline]
+    pub fn add_row_lanes(
+        &mut self,
+        lane_mask: &[u64],
+        row: &[i32],
+        acts: &mut [ActivityCounters],
+    ) {
+        debug_assert_eq!(row.len(), self.n);
+        let (lanes, lw, acc_max) = (self.lanes, self.lane_words, self.params.acc_max);
+        for (j, &w) in row.iter().enumerate() {
+            let accs = &mut self.acc[j * lanes..(j + 1) * lanes];
+            let en = &self.enabled[j * lw..(j + 1) * lw];
+            plane_row_add(accs, en, lane_mask, w, acc_max, acts);
+        }
+    }
+
+    /// One CSR row pulse over the range: `cols`/`vals` are the row's
+    /// entries already partitioned to global columns in
+    /// `[j0, j0+width)` (see `SparseLayer::row_span`). Same kernel as
+    /// [`LifBatchArray::add_sparse_lanes`], with columns rebased.
+    #[inline]
+    pub fn add_sparse_lanes(
+        &mut self,
+        lane_mask: &[u64],
+        cols: &[u32],
+        vals: &[i32],
+        acts: &mut [ActivityCounters],
+    ) {
+        debug_assert_eq!(cols.len(), vals.len());
+        let (lanes, lw, acc_max) = (self.lanes, self.lane_words, self.params.acc_max);
+        for (&j, &w) in cols.iter().zip(vals) {
+            let j = j as usize - self.j0;
+            let accs = &mut self.acc[j * lanes..(j + 1) * lanes];
+            let en = &self.enabled[j * lw..(j + 1) * lw];
+            plane_row_add(accs, en, lane_mask, w, acc_max, acts);
+        }
+    }
+
+    /// One `Leak` clock over every gated lane of the range.
+    #[inline]
+    pub fn leak_lanes(&mut self, lane_mask: &[u64], acts: &mut [ActivityCounters]) {
+        plane_leak_lanes(
+            self.acc,
+            self.enabled,
+            self.lanes,
+            self.lane_words,
+            lane_mask,
+            self.params.decay_shift,
+            acts,
+        );
+    }
+
+    /// One `Fire` clock (`FireMode::EndOfStep`) over every gated lane of
+    /// the range, setting crossings in `step_fired` — the *range's*
+    /// slice of the layer's neuron-major step-fired words, indexed by
+    /// local neuron (`(j - j0) * lane_words + b/64`).
+    #[inline]
+    pub fn fire_check_lanes(
+        &mut self,
+        lane_mask: &[u64],
+        step_fired: &mut [u64],
+        acts: &mut [ActivityCounters],
+    ) {
+        debug_assert_eq!(step_fired.len(), self.n * self.lane_words);
+        plane_fire_check_lanes(
+            self.acc,
+            self.spike_count,
+            self.enabled,
+            self.lanes,
+            self.lane_words,
+            lane_mask,
+            &self.params,
+            step_fired,
+            acts,
+        );
+    }
+
+    /// The pruning-mask latch over every gated lane of the range.
+    #[inline]
+    pub fn latch_prune_lanes(&mut self, lane_mask: &[u64], mode: PruneMode) {
+        plane_latch_prune_lanes(
+            self.spike_count,
+            self.enabled,
+            self.lanes,
+            self.lane_words,
+            lane_mask,
+            mode,
+        );
+    }
+    // pallas-lint: end-hot
 }
 
 // Test arithmetic (sizes, indices) is bounded by the tiny generated cases.

@@ -7,6 +7,11 @@
 //! results. Callers already treat "XLA unavailable" as a skippable
 //! condition (benches print a notice, tests gate on the artifacts dir,
 //! `snn-rtl --backend xla` reports the error).
+//!
+//! Lock-freedom note (pallas-lint L5): unlike the real backend — which
+//! serializes PJRT calls behind the `backend.xla_snn` mutex — this stub
+//! holds no `Mutex` and acquires none, so the offline build contributes
+//! no `xla` nodes to the declared lock graph.
 
 use std::path::Path;
 

@@ -366,9 +366,12 @@ pub struct LifBatchStack {
 
 impl LifBatchStack {
     /// Batch lanes one stack multiplexes; larger sub-batches are chunked
-    /// by the caller. Matches the RTL engine's `BATCH_LANES` so both
-    /// batch families chunk identically.
-    pub const MAX_LANES: usize = 256;
+    /// by the caller. Aliases [`crate::plan::MAX_LANES`] — the single
+    /// source of the lane-width ceiling — so this engine and the RTL
+    /// engine's `BATCH_LANES` cannot drift apart. Callers typically
+    /// chunk by a calibrated [`crate::plan::ChunkPlan`] width (≤ this
+    /// ceiling) rather than the ceiling itself.
+    pub const MAX_LANES: usize = crate::plan::MAX_LANES;
 
     /// Build from a stack's layers, sharing their weight `Arc`s (state
     /// planes start empty; [`LifBatchStack::reset`] sizes them per batch).

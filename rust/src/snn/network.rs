@@ -333,8 +333,10 @@ impl BehavioralNet {
     /// exactly — the per-`(image, seed)` PRNG streams and per-image state
     /// planes commute with batching (pinned by test), and early exit
     /// retires images from the sweep on the same timestep the sequential
-    /// loop would stop. Sub-batches beyond
-    /// [`LifBatchStack::MAX_LANES`] images are processed in chunks.
+    /// loop would stop. Sub-batches are processed in chunks sized by the
+    /// topology's calibrated [`crate::plan::ChunkPlan`] (≤
+    /// [`LifBatchStack::MAX_LANES`]) so the state planes stay
+    /// L2-resident on wide hidden layers.
     pub fn classify_batch_with(
         &self,
         batch: &mut LifBatchStack,
@@ -351,10 +353,8 @@ impl BehavioralNet {
             )));
         }
         let mut out = Vec::with_capacity(images.len());
-        for (imgs, sds) in images
-            .chunks(LifBatchStack::MAX_LANES)
-            .zip(seeds.chunks(LifBatchStack::MAX_LANES))
-        {
+        let lanes = crate::plan::ChunkPlan::for_topology(&self.cfg.topology).lanes();
+        for (imgs, sds) in images.chunks(lanes).zip(seeds.chunks(lanes)) {
             run_batch_inference(&self.cfg, batch, imgs, sds, timesteps, early, &mut out);
         }
         Ok(out)

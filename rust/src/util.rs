@@ -135,12 +135,16 @@ mod tests {
         let m = Arc::new(Mutex::new(41u32));
         let m2 = Arc::clone(&m);
         let t = std::thread::spawn(move || {
+            // pallas-lint: lock(util.poison_probe)
             let _g = m2.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             panic!("poison the mutex");
+            // pallas-lint: end-lock(util.poison_probe)
         });
         assert!(t.join().is_err());
         // The data survives the panic and stays usable.
+        // pallas-lint: lock(util.poison_probe)
         *lock_recover(&m) += 1;
         assert_eq!(*lock_recover(&m), 42);
+        // pallas-lint: end-lock(util.poison_probe)
     }
 }

@@ -471,7 +471,9 @@ impl Backend for RecordingStub {
         seeds: &[u32],
         _early: EarlyExit,
     ) -> snn_rtl::Result<Vec<BackendOutput>> {
+        // pallas-lint: lock(chaos.recording_calls)
         lock_recover(&self.calls).push((seeds.to_vec(), Instant::now()));
+        // pallas-lint: end-lock(chaos.recording_calls)
         Ok(images
             .iter()
             .zip(seeds)
@@ -534,7 +536,9 @@ fn latency_spike_delays_only_the_victims_subbatch() {
         // The siblings' inner call must predate the sleep; the victims'
         // must trail it. (Half-spike tolerance: the only work before the
         // first call is vector bookkeeping.)
+        // pallas-lint: lock(chaos.recording_calls)
         let calls = lock_recover(&stub.calls).clone();
+        // pallas-lint: end-lock(chaos.recording_calls)
         assert_eq!(calls.len(), 2, "exactly one sibling call + one victim call");
         let (rest_seeds, rest_t) = &calls[0];
         let (vic_seeds, vic_t) = &calls[1];
@@ -560,7 +564,9 @@ fn latency_spike_delays_only_the_victims_subbatch() {
             .unwrap();
         assert!(t1.elapsed() < spike / 2, "victim-free batch was delayed");
         assert_eq!(out.len(), 4);
+        // pallas-lint: lock(chaos.recording_calls)
         assert_eq!(lock_recover(&stub.calls).len(), 3);
+        // pallas-lint: end-lock(chaos.recording_calls)
         assert_eq!(wrapper.injections().latency_spikes, 1, "no spike may fire");
     });
 }

@@ -354,10 +354,12 @@ class BatchLayer:
     def enabled_at(self, b, j):
         return (self.enabled[j * self.lw + b // 64] >> (b % 64)) & 1
 
-    def add_row_lanes(self, lane_mask, row):
+    def add_row_lanes(self, lane_mask, row, j0=0, j1=None):
         """ONE row fetch applied to every masked-and-enabled lane: the
-        neuron-major wide sweep (Rust add_row_lanes)."""
-        for j in range(self.n):
+        neuron-major wide sweep (Rust add_row_lanes). The optional
+        [j0, j1) bound restricts the sweep to one neuron range -- a
+        shard's private plane slice in the thread-parallel kernel."""
+        for j in range(j0, self.n if j1 is None else j1):
             base = j * self.lanes
             w = row[j]
             for wb in range(self.lw):
@@ -368,28 +370,28 @@ class BatchLayer:
                     self.acc[base + b] = sat(self.acc[base + b] + w,
                                              self.acc_bits)
 
-    def leak_enabled(self, b):
-        for j in range(self.n):
+    def leak_enabled(self, b, j0=0, j1=None):
+        for j in range(j0, self.n if j1 is None else j1):
             if self.enabled_at(b, j):
                 idx = j * self.lanes + b
                 self.acc[idx] = leak(self.acc[idx], self.decay)
 
-    def latch_prune(self, b):
+    def latch_prune(self, b, j0=0, j1=None):
         if self.prune_after:
             wb, bit = b // 64, b % 64
-            for j in range(self.n):
+            for j in range(j0, self.n if j1 is None else j1):
                 if self.count[j * self.lanes + b] >= self.prune_after:
                     self.enabled[j * self.lw + wb] &= ~(1 << bit)
 
-    def fire_check(self, b):
+    def fire_check(self, b, j0=0, j1=None):
         wb, bit = b // 64, b % 64
-        for j in range(self.n):
+        for j in range(j0, self.n if j1 is None else j1):
             idx = j * self.lanes + b
             if self.enabled_at(b, j) and self.acc[idx] >= self.v_th:
                 self.step_fired[j * self.lw + wb] |= 1 << bit
                 self.count[idx] += 1
                 self.acc[idx] = 0
-        self.latch_prune(b)
+        self.latch_prune(b, j0, j1)
 
     def immediate_fire(self, b):
         wb, bit = b // 64, b % 64
@@ -404,8 +406,21 @@ class BatchLayer:
         if any_f:
             self.latch_prune(b)
 
+def split_ranges(n, parts):
+    """Contiguous near-even partition of [0, n) into min(parts, n)
+    nonempty ranges -- mirroring the Rust kernel's neuron-range tiling
+    (base + remainder spread over the leading ranges)."""
+    parts = max(min(parts, n), 1)
+    base, rem = divmod(n, parts)
+    ranges, j0 = [], 0
+    for w in range(parts):
+        j1 = j0 + base + (1 if w < rem else 0)
+        ranges.append((j0, j1))
+        j0 = j1
+    return ranges
+
 def run_core_batch(stack, images, seeds, timesteps, fire_mode, leak_row_len,
-                   layer_params, acc_bits=24):
+                   layer_params, acc_bits=24, shards=None):
     """The batched sweep, mirroring RtlCore::run_fast_batch after the
     wide-lane layout change: per timestep, per layer, per input, build the
     MULTI-WORD transposed lane mask (any batch width, not just 64), then
@@ -414,7 +429,19 @@ def run_core_batch(stack, images, seeds, timesteps, fire_mode, leak_row_len,
     accumulator/count/enable plane slices, cycle counters) is disjoint,
     so the lane-order swap inside add_row_lanes only reorders independent
     work -- the commutation argument behind the Rust engine's
-    bit-exactness."""
+    bit-exactness.
+
+    With `shards` set, end-of-step layer sweeps run the THREAD-PARALLEL
+    schedule instead (RtlCore::with_batch_threads): the layer's neuron
+    range splits into `shards` contiguous ranges, the input masks are
+    fixed up front (layer-0 draws happen once; under end-of-step firing
+    the relay masks and enables cannot change mid-sweep), and each range
+    performs its own complete integrate/leak/fire walk over its private
+    plane slice. Ranges are processed in REVERSED order to prove the
+    commutation claim: per-(neuron, lane) cell the event sequence is
+    untouched, so any range order -- including true concurrency -- is
+    bit-identical. Immediate-fire layers keep the serial sweep, exactly
+    like the Rust kernel (mid-walk fires re-gate the layer)."""
     n_layers = len(stack)
     widths = [len(stack[l][0]) for l in range(n_layers)]
     B = len(images)
@@ -429,25 +456,56 @@ def run_core_batch(stack, images, seeds, timesteps, fire_mode, leak_row_len,
         for l in range(n_layers):
             n_in = IMG_PIXELS if l == 0 else widths[l - 1]
             prev = layers[l - 1] if l > 0 else None
-            for p in range(n_in):
+
+            def mask_for(p):
                 # transposed multi-word active mask for input p
+                if l != 0:
+                    return prev.step_fired[p * lw:(p + 1) * lw]
                 mask = [0] * lw
-                if l == 0:
+                for b in batch:
+                    states[b][p] = xorshift32_step(states[b][p])
+                    if images[b][p] > (states[b][p] & 0xFF):
+                        mask[b // 64] |= 1 << (b % 64)
+                return mask
+
+            def boundary(p):
+                row_boundary = (l == 0 and leak_row_len is not None
+                                and (p + 1) % leak_row_len == 0)
+                return p + 1 == n_in or row_boundary
+
+            if shards and fire_mode == "end":
+                # Sharded schedule: masks fixed up front, then each
+                # neuron range walks the whole layer independently.
+                masks = [mask_for(p) for p in range(n_in)]
+                for j0, j1 in reversed(split_ranges(widths[l], shards)):
+                    for p in range(n_in):
+                        layers[l].add_row_lanes(masks[p], stack[l][p], j0, j1)
+                        if boundary(p):
+                            for b in batch:
+                                layers[l].leak_enabled(b, j0, j1)
                     for b in batch:
-                        states[b][p] = xorshift32_step(states[b][p])
-                        if images[b][p] > (states[b][p] & 0xFF):
-                            mask[b // 64] |= 1 << (b % 64)
-                else:
-                    mask = prev.step_fired[p * lw:(p + 1) * lw]
+                        layers[l].fire_check(b, j0, j1)
+                # Cycle tally is whole-row work, counted once per layer
+                # (the Rust kernel's rank-0 rule), not once per range.
+                for p in range(n_in):
+                    for b in batch:
+                        cycles[b] += 1
+                    if boundary(p):
+                        for b in batch:
+                            cycles[b] += 1
+                for b in batch:
+                    cycles[b] += 1
+                continue
+
+            for p in range(n_in):
+                mask = mask_for(p)
                 # ONE row walk serves every firing lane of the batch
                 layers[l].add_row_lanes(mask, stack[l][p])
                 for b in batch:
                     cycles[b] += 1
                     if fire_mode == "imm":
                         layers[l].immediate_fire(b)
-                row_boundary = (l == 0 and leak_row_len is not None
-                                and (p + 1) % leak_row_len == 0)
-                if p + 1 == n_in or row_boundary:
+                if boundary(p):
                     for b in batch:
                         layers[l].leak_enabled(b)
                         cycles[b] += 1
@@ -501,6 +559,47 @@ def validate_batch():
                 ("batched", cfg, img, gc)
             assert gw == winner and gcy == cycles, ("batched", cfg, img, gw, gcy)
     print("validated: batched sweep reproduces all 24 fixtures image-for-image")
+
+def validate_batch_sharded():
+    """Anchor the thread-parallel schedule: all 24 pinned fixture rows
+    reproduced through a 3-range neuron split whose ranges run in
+    REVERSED order (split_ranges leaves odd remainders on the leading
+    ranges, so 10 -> 4+3+3, 12 -> 4+4+4, 14 -> 5+5+4 all get exercised).
+    End-of-step configs take the sharded sweep; immediate-fire configs
+    keep the serial sweep, mirroring the Rust kernel's dispatch."""
+    shards = 3
+    stack = fixture_weights_single()
+    for cfg_name in ["fire", "leak", "prune"]:
+        cases = [c for c in SINGLE_CASES if c[0] == cfg_name]
+        params, mode, row = single_cfg(cfg_name)
+        got = run_core_batch(stack, [fixture_image(c[1]) for c in cases],
+                             [c[2] for c in cases], 8, mode, row, [params],
+                             shards=shards)
+        for (cfg, img, _s, counts, winner, cycles), (gc, gw, gcy) in zip(cases, got):
+            assert gc[-1] == counts and gw == winner and gcy == cycles, \
+                ("sharded", cfg, img, gc[-1], gw, gcy)
+    dstack = deep_fixture_stack()
+    for cfg_name in ["deep", "deep_prune", "deep_fire"]:
+        cases = [c for c in DEEP_CASES if c[0] == cfg_name]
+        params, mode = deep_cfg(cfg_name)
+        got = run_core_batch(dstack, [fixture_image(c[1]) for c in cases],
+                             [c[2] for c in cases], 8, mode, None,
+                             [params, params], shards=shards)
+        for (cfg, img, _s, hidden, counts, winner, cycles), (gc, gw, gcy) in zip(cases, got):
+            assert gc[0] == hidden and gc[1] == counts, ("sharded", cfg, img, gc)
+            assert gw == winner and gcy == cycles, ("sharded", cfg, img, gw, gcy)
+    hstack = hetero_fixture_stack()
+    for cfg_name in ["hetero", "hetero_fire"]:
+        cases = [c for c in HETERO_CASES if c[0] == cfg_name]
+        got = run_core_batch(hstack, [fixture_image(c[1]) for c in cases],
+                             [c[2] for c in cases], 8, hetero_mode(cfg_name),
+                             None, HETERO_PARAMS, shards=shards)
+        for (cfg, img, _s, l0, l1, counts, winner, cycles), (gc, gw, gcy) in zip(cases, got):
+            assert gc[0] == l0 and gc[1] == l1 and gc[2] == counts, \
+                ("sharded", cfg, img, gc)
+            assert gw == winner and gcy == cycles, ("sharded", cfg, img, gw, gcy)
+    print("validated: 3-range sharded sweep (reversed range order) "
+          "reproduces all 24 fixtures bit-for-bit")
 
 WIDE_LANES = 66  # crosses the 64-lane mask-word boundary: words 0 and 1
 
@@ -617,6 +716,7 @@ def hetero():
 if __name__ == "__main__":
     validate()
     validate_batch()
+    validate_batch_sharded()
     validate_batch_wide()
     validate_sparse()
     hetero()

@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
 # Perf-trajectory bench runner: builds the release binary and emits
-# BENCH_9.json (images/sec for the RTL cycle path vs fast path, batched
+# BENCH_10.json (images/sec for the RTL cycle path vs fast path, batched
 # vs per-image engine throughput at batch 1/8/32/64/128/256 — the wide
 # rows run one multi-word chunk — sparse-vs-dense engine throughput and
 # adds-performed at 100/50/10% weight density for [784,10] and
-# [784,128,10] plus the 128-lane sparse_batched_wide row,
+# [784,128,10] plus the 128-lane sparse_batched_wide row, the
+# parallel_kernel rows (dense images/s at threads 1/2/4 x hidden
+# 128/512 x lanes 64/128/256, the sharded 10%-density CSR sweep, and
+# the autotuned-vs-fixed-256 lane plan at batch 256),
 # 1/2/3-layer depth rows with the shared- vs
 # per-layer-v_th calibration accuracy, coordinator qps + p50/p99 at
 # 1/2/4/8 workers over the batched backends, large-batch latency with
@@ -18,4 +21,4 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 cargo run --release --bin bench-report -- "$@"
-echo "wrote $(pwd)/BENCH_9.json"
+echo "wrote $(pwd)/BENCH_10.json"
